@@ -1,0 +1,82 @@
+#![allow(dead_code)] // each bench binary uses a subset of these helpers
+
+//! Shared fixtures for the figure/table benches: the §5 workload at bench
+//! scale, plus CSV output plumbing (`bench_out/*.csv` holds the series the
+//! paper's figures plot).
+
+use proxlead::algorithm::solve_reference;
+use proxlead::graph::{mixing_matrix, Graph, MixingRule};
+use proxlead::linalg::Mat;
+use proxlead::problem::data::BlobSpec;
+use proxlead::problem::{LogReg, Problem};
+
+/// The §5 analog: 8-node ring, 1/3 mixing, label-sorted 10-class blobs,
+/// 15 minibatches per node (see DESIGN.md §4 for the MNIST substitution).
+pub struct Fixture {
+    pub problem: LogReg,
+    pub w: Mat,
+    pub x0: Mat,
+    pub eta: f64,
+}
+
+impl Fixture {
+    pub fn section5(lambda2: f64) -> Fixture {
+        let spec = BlobSpec {
+            nodes: 8,
+            samples_per_node: 120,
+            dim: 32,
+            classes: 10,
+            separation: 1.0,
+            ..Default::default()
+        };
+        let problem = LogReg::from_blobs(&spec, lambda2, 15);
+        let g = Graph::ring(8);
+        let w = mixing_matrix(&g, MixingRule::UniformMaxDegree);
+        let x0 = Mat::zeros(8, problem.dim());
+        let eta = 0.5 / problem.smoothness();
+        Fixture { problem, w, x0, eta }
+    }
+
+    /// Smaller suite for the Table 3 cross-algorithm comparison (the
+    /// DualGD rows pay an inner solve per round).
+    pub fn table3() -> Fixture {
+        let spec = BlobSpec {
+            nodes: 8,
+            samples_per_node: 60,
+            dim: 16,
+            classes: 5,
+            separation: 1.0,
+            ..Default::default()
+        };
+        let problem = LogReg::from_blobs(&spec, 0.05, 15);
+        let g = Graph::ring(8);
+        let w = mixing_matrix(&g, MixingRule::UniformMaxDegree);
+        let x0 = Mat::zeros(8, problem.dim());
+        let eta = 0.5 / problem.smoothness();
+        Fixture { problem, w, x0, eta }
+    }
+
+    pub fn reference(&self, lambda1: f64) -> Vec<f64> {
+        solve_reference(&self.problem, lambda1, 80_000, 1e-12)
+    }
+
+    /// Batch-gradient evaluations per epoch (n·m) — Fig 1's x-axis unit.
+    pub fn evals_per_epoch(&self) -> u64 {
+        (self.problem.num_nodes() * self.problem.num_batches()) as u64
+    }
+}
+
+pub fn out_dir() -> std::path::PathBuf {
+    let d = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("bench_out");
+    std::fs::create_dir_all(&d).expect("create bench_out");
+    d
+}
+
+/// Thin every series to ≤ `max_pts` points so the CSVs stay plottable.
+pub fn thin(pts: Vec<(f64, f64)>, max_pts: usize) -> Vec<(f64, f64)> {
+    if pts.len() <= max_pts {
+        return pts;
+    }
+    let step = pts.len().div_ceil(max_pts);
+    pts.into_iter().step_by(step).collect()
+}

@@ -1,0 +1,156 @@
+//! Figure 1 — smooth logistic regression (λ1 = 0).
+//!
+//! (a) full gradient: suboptimality vs epochs — DGD and Choco stall at
+//!     their bias balls; NIDS / LEAD(32bit) / LEAD(2bit) / LessBit-B
+//!     converge linearly, LEAD(2bit) ≈ LEAD(32bit) per iteration.
+//! (b) same runs vs communicated bits — the 2-bit curves win by ~15×.
+//! (c) stochastic: LEAD-{SGD, LSVRG, SAGA} ×{32, 2}bit + Choco-SGD +
+//!     LessBit-{SGD, LSVRG} vs #gradient evaluations.
+//! (d) same vs bits.
+//!
+//! Emits bench_out/fig1{a,b,c,d}.csv; prints the who-wins summary rows.
+
+mod common;
+
+use common::{out_dir, thin, Fixture};
+use proxlead::algorithm::{Algorithm, Choco, Dgd, Hyper, Nids, Pdgm, ProxLead};
+use proxlead::compress::{Identity, InfNormQuantizer};
+use proxlead::engine::{run, RunConfig, XAxis};
+use proxlead::oracle::OracleKind;
+use proxlead::prox::Zero;
+use proxlead::util::bench::{CsvSeries, Table};
+
+fn q2() -> Box<InfNormQuantizer> {
+    Box::new(InfNormQuantizer::new(2, 256))
+}
+
+fn main() {
+    let fx = Fixture::section5(0.05);
+    let x_star = fx.reference(0.0);
+    let (p, w, x0, eta) = (&fx.problem, &fx.w, &fx.x0, fx.eta);
+    let epoch = fx.evals_per_epoch();
+
+    // ---------------- (a)/(b): full gradient ----------------------------
+    let rounds = 12_000;
+    let cfg = RunConfig::fixed(rounds).every(50);
+    let mut algs: Vec<Box<dyn Algorithm>> = vec![
+        Box::new(Dgd::new(
+            p,
+            w,
+            x0,
+            eta,
+            OracleKind::Full,
+            Box::new(Identity::f32()),
+            Box::new(Zero),
+            7,
+        )),
+        Box::new(Choco::new(p, w, x0, eta, 0.2, OracleKind::Full, q2(), Box::new(Zero), 7)),
+        Box::new(Nids::new(p, w, x0, eta, OracleKind::Full, Box::new(Zero), 7)),
+        Box::new(Pdgm::lessbit_b(p, w, x0, eta, 0.05, q2(), 0.2, 7)),
+        Box::new(ProxLead::new(
+            p,
+            w,
+            x0,
+            Hyper::paper_default(eta),
+            OracleKind::Full,
+            Box::new(Identity::f32()),
+            Box::new(Zero),
+            7,
+        )),
+        Box::new(ProxLead::new(
+            p,
+            w,
+            x0,
+            Hyper::paper_default(eta),
+            OracleKind::Full,
+            q2(),
+            Box::new(Zero),
+            7,
+        )),
+    ];
+    let mut csv_a = CsvSeries::new("epochs");
+    let mut csv_b = CsvSeries::new("bits");
+    let mut table = Table::new(
+        "Fig 1a/1b — smooth, full gradient (12000 rounds)",
+        &["algorithm", "final subopt", "Mbit", "linear?"],
+    );
+    for alg in algs.iter_mut() {
+        let res = run(alg.as_mut(), p, &x_star, &cfg);
+        csv_a.add(&res.name, thin(res.series(XAxis::Epochs(epoch)), 250));
+        csv_b.add(&res.name, thin(res.series(XAxis::Bits), 250));
+        let last = res.history.last().unwrap();
+        // log-linear slope over the tail classifies linear vs stalled
+        let n_hist = res.history.len();
+        let tail: Vec<f64> = res
+            .history
+            .iter()
+            .skip(n_hist.saturating_sub(60))
+            .map(|m| m.suboptimality.max(1e-30))
+            .collect();
+        let slope = proxlead::util::stats::loglinear_slope(&tail);
+        table.row(vec![
+            res.name.clone(),
+            format!("{:.3e}", last.suboptimality),
+            format!("{:.1}", last.bits as f64 / 1e6),
+            if last.suboptimality < 1e-12 || slope < -1e-3 {
+                "linear".into()
+            } else {
+                "stalls".into()
+            },
+        ]);
+    }
+    table.print();
+    csv_a.write(out_dir().join("fig1a.csv").to_str().unwrap()).unwrap();
+    csv_b.write(out_dir().join("fig1b.csv").to_str().unwrap()).unwrap();
+
+    // ---------------- (c)/(d): stochastic gradients ---------------------
+    let rounds = 15_000;
+    let cfg = RunConfig::fixed(rounds).every(60);
+    let eta_s = 1.0 / (6.0 * proxlead::problem::Problem::smoothness(p));
+    let lsvrg = OracleKind::Lsvrg { p: 1.0 / 15.0 };
+    let mk_lead = |kind: OracleKind, comp: Box<dyn proxlead::compress::Compressor>| {
+        Box::new(ProxLead::new(
+            p,
+            w,
+            x0,
+            Hyper::paper_default(eta_s),
+            kind,
+            comp,
+            Box::new(Zero),
+            9,
+        ))
+    };
+    let mut algs: Vec<Box<dyn Algorithm>> = vec![
+        mk_lead(OracleKind::Sgd, Box::new(Identity::f32())),
+        mk_lead(OracleKind::Sgd, q2()),
+        mk_lead(lsvrg, Box::new(Identity::f32())),
+        mk_lead(lsvrg, q2()),
+        mk_lead(OracleKind::Saga, Box::new(Identity::f32())),
+        mk_lead(OracleKind::Saga, q2()),
+        Box::new(Choco::new(p, w, x0, eta_s, 0.2, OracleKind::Sgd, q2(), Box::new(Zero), 9)),
+        Box::new(Pdgm::new(p, w, x0, eta_s, 0.1 / (2.0 * eta_s), OracleKind::Sgd, q2(), 0.25, 9)),
+        Box::new(Pdgm::new(p, w, x0, eta_s, 0.1 / (2.0 * eta_s), lsvrg, q2(), 0.25, 9)),
+    ];
+    let mut csv_c = CsvSeries::new("grad_evals");
+    let mut csv_d = CsvSeries::new("bits");
+    let mut table = Table::new(
+        "Fig 1c/1d — smooth, stochastic (15000 rounds)",
+        &["algorithm", "final subopt", "grad evals", "Mbit"],
+    );
+    for alg in algs.iter_mut() {
+        let res = run(alg.as_mut(), p, &x_star, &cfg);
+        csv_c.add(&res.name, thin(res.series(XAxis::GradEvals), 250));
+        csv_d.add(&res.name, thin(res.series(XAxis::Bits), 250));
+        let last = res.history.last().unwrap();
+        table.row(vec![
+            res.name.clone(),
+            format!("{:.3e}", last.suboptimality),
+            format!("{}", last.grad_evals),
+            format!("{:.1}", last.bits as f64 / 1e6),
+        ]);
+    }
+    table.print();
+    csv_c.write(out_dir().join("fig1c.csv").to_str().unwrap()).unwrap();
+    csv_d.write(out_dir().join("fig1d.csv").to_str().unwrap()).unwrap();
+    println!("\nwrote bench_out/fig1{{a,b,c,d}}.csv");
+}

@@ -1,0 +1,116 @@
+//! Figure 2 — non-smooth logistic regression (λ1 = 5e-3, ℓ1 prox).
+//!
+//! (a) full gradient: Prox-LEAD(2bit) vs Prox-LEAD(32bit), P2D2, NIDS,
+//!     PG-EXTRA, Prox-DGD — linear convergence with the shared ℓ1 term,
+//!     2-bit matching 32-bit per iteration.
+//! (b) the same vs communicated bits.
+//! (c) stochastic: Prox-LEAD-{SGD, LSVRG, SAGA} × {32, 2}bit.
+//! (d) the same vs bits.
+//!
+//! Emits bench_out/fig2{a,b,c,d}.csv.
+
+mod common;
+
+use common::{out_dir, thin, Fixture};
+use proxlead::algorithm::{Algorithm, Dgd, Hyper, Nids, P2d2, PgExtra, ProxLead};
+use proxlead::compress::{Identity, InfNormQuantizer};
+use proxlead::engine::{run, RunConfig, XAxis};
+use proxlead::oracle::OracleKind;
+use proxlead::prox::L1;
+use proxlead::util::bench::{CsvSeries, Table};
+
+const LAMBDA1: f64 = 5e-3;
+
+fn q2() -> Box<InfNormQuantizer> {
+    Box::new(InfNormQuantizer::new(2, 256))
+}
+
+fn l1() -> Box<L1> {
+    Box::new(L1::new(LAMBDA1))
+}
+
+fn main() {
+    let fx = Fixture::section5(0.05);
+    let x_star = fx.reference(LAMBDA1);
+    let (p, w, x0, eta) = (&fx.problem, &fx.w, &fx.x0, fx.eta);
+    let epoch = fx.evals_per_epoch();
+
+    // ---------------- (a)/(b): full gradient ----------------------------
+    let cfg = RunConfig::fixed(6000).every(25);
+    let mut algs: Vec<Box<dyn Algorithm>> = vec![
+        Box::new(Dgd::new(p, w, x0, eta, OracleKind::Full, Box::new(Identity::f32()), l1(), 7)),
+        Box::new(Nids::new(p, w, x0, eta, OracleKind::Full, l1(), 7)),
+        Box::new(P2d2::new(p, w, x0, eta, OracleKind::Full, l1(), 7)),
+        Box::new(PgExtra::new(p, w, x0, eta, OracleKind::Full, l1(), 7)),
+        Box::new(ProxLead::new(
+            p,
+            w,
+            x0,
+            Hyper::paper_default(eta),
+            OracleKind::Full,
+            Box::new(Identity::f32()),
+            l1(),
+            7,
+        )),
+        Box::new(ProxLead::new(p, w, x0, Hyper::paper_default(eta), OracleKind::Full, q2(), l1(), 7)),
+    ];
+    let mut csv_a = CsvSeries::new("epochs");
+    let mut csv_b = CsvSeries::new("bits");
+    let mut table = Table::new(
+        "Fig 2a/2b — non-smooth (λ1 = 5e-3), full gradient",
+        &["algorithm", "final subopt", "Mbit", "linear?"],
+    );
+    for alg in algs.iter_mut() {
+        let res = run(alg.as_mut(), p, &x_star, &cfg);
+        csv_a.add(&res.name, thin(res.series(XAxis::Epochs(epoch)), 250));
+        csv_b.add(&res.name, thin(res.series(XAxis::Bits), 250));
+        let last = res.history.last().unwrap();
+        table.row(vec![
+            res.name.clone(),
+            format!("{:.3e}", last.suboptimality),
+            format!("{:.1}", last.bits as f64 / 1e6),
+            if last.suboptimality < 1e-12 { "yes".into() } else { "stalls".into() },
+        ]);
+    }
+    table.print();
+    csv_a.write(out_dir().join("fig2a.csv").to_str().unwrap()).unwrap();
+    csv_b.write(out_dir().join("fig2b.csv").to_str().unwrap()).unwrap();
+
+    // ---------------- (c)/(d): stochastic --------------------------------
+    let cfg = RunConfig::fixed(15_000).every(60);
+    let eta_s = 1.0 / (6.0 * proxlead::problem::Problem::smoothness(p));
+    let lsvrg = OracleKind::Lsvrg { p: 1.0 / 15.0 };
+    let mk = |kind: OracleKind, comp: Box<dyn proxlead::compress::Compressor>| {
+        Box::new(ProxLead::new(p, w, x0, Hyper::paper_default(eta_s), kind, comp, l1(), 9))
+    };
+    let mut algs: Vec<Box<dyn Algorithm>> = vec![
+        mk(OracleKind::Sgd, Box::new(Identity::f32())),
+        mk(OracleKind::Sgd, q2()),
+        mk(lsvrg, Box::new(Identity::f32())),
+        mk(lsvrg, q2()),
+        mk(OracleKind::Saga, Box::new(Identity::f32())),
+        mk(OracleKind::Saga, q2()),
+    ];
+    let mut csv_c = CsvSeries::new("grad_evals");
+    let mut csv_d = CsvSeries::new("bits");
+    let mut table = Table::new(
+        "Fig 2c/2d — non-smooth, stochastic",
+        &["algorithm", "final subopt", "grad evals", "Mbit"],
+    );
+    for alg in algs.iter_mut() {
+        let res = run(alg.as_mut(), p, &x_star, &cfg);
+        csv_c.add(&res.name, thin(res.series(XAxis::GradEvals), 250));
+        csv_d.add(&res.name, thin(res.series(XAxis::Bits), 250));
+        let last = res.history.last().unwrap();
+        table.row(vec![
+            res.name.clone(),
+            format!("{:.3e}", last.suboptimality),
+            format!("{}", last.grad_evals),
+            format!("{:.1}", last.bits as f64 / 1e6),
+        ]);
+    }
+    table.print();
+    csv_c.write(out_dir().join("fig2c.csv").to_str().unwrap()).unwrap();
+    csv_d.write(out_dir().join("fig2d.csv").to_str().unwrap()).unwrap();
+    println!("\nwrote bench_out/fig2{{a,b,c,d}}.csv");
+}

@@ -1,0 +1,155 @@
+//! Hot-path microbenchmarks — the §Perf harness (EXPERIMENTS.md).
+//!
+//! Layer by layer:
+//! - L3 primitives: blocked matmul (the engine's W·X mixing), the ∞-norm
+//!   quantizer encode/decode, the wire codec, one COMM round;
+//! - L3 end-to-end: one Prox-LEAD matrix step; one coordinator round
+//!   (8 threads, serialized frames);
+//! - L2/L1: one PJRT gradient execution vs the native rust gradient at
+//!   the shipped artifact shape (240×64×10).
+//!
+//! Run before/after every optimization and record deltas in
+//! EXPERIMENTS.md §Perf.
+
+mod common;
+
+use common::Fixture;
+use proxlead::algorithm::{Algorithm, CommState, Hyper, ProxLead};
+use proxlead::compress::bits::{decode_inf_quantized, encode_inf_quantized};
+use proxlead::compress::{Compressor, InfNormQuantizer};
+use proxlead::coordinator::{self, CoordConfig, WireCodec};
+use proxlead::linalg::Mat;
+use proxlead::oracle::OracleKind;
+use proxlead::problem::data::{blobs, BlobSpec};
+use proxlead::problem::{LogReg, Problem};
+use proxlead::prox::{Zero, L1};
+use proxlead::util::bench::BenchSet;
+use proxlead::util::rng::Rng;
+use std::sync::Arc;
+
+fn main() {
+    let mut rng = Rng::new(7);
+
+    // ---------- L3 primitive: blocked matmul ----------------------------
+    let mut set = BenchSet::new("matmul (engine mixing W·X and gradients)").with_reps(3, 15);
+    set.header();
+    for (n, k, m) in [(8, 8, 640), (64, 64, 640), (256, 256, 256), (240, 64, 10)] {
+        let mut a = Mat::zeros(n, k);
+        let mut b = Mat::zeros(k, m);
+        rng.fill_normal(&mut a.data);
+        rng.fill_normal(&mut b.data);
+        let mut out = Mat::zeros(n, m);
+        let flops = 2.0 * (n * k * m) as f64;
+        set.run_throughput(&format!("matmul {n}x{k}x{m}"), flops, "flop", || {
+            a.matmul_into(&b, &mut out)
+        });
+    }
+
+    // ---------- L3 primitive: quantizer + wire codec --------------------
+    let mut set = BenchSet::new("compression (2-bit ∞-norm, block 256)").with_reps(3, 30);
+    set.header();
+    let x: Vec<f64> = (0..65_536).map(|_| rng.normal()).collect();
+    let q = InfNormQuantizer::new(2, 256);
+    set.run_throughput("quantize 64k doubles (analytic)", 65_536.0 * 8.0, "B", || {
+        q.compress(&x, &mut rng)
+    });
+    set.run_throughput("encode 64k doubles (wire)", 65_536.0 * 8.0, "B", || {
+        encode_inf_quantized(&x, 2, 256, &mut rng)
+    });
+    let (bytes, _, _) = encode_inf_quantized(&x, 2, 256, &mut Rng::new(1));
+    set.run_throughput("decode 64k entries (wire)", 65_536.0 * 8.0, "B", || {
+        decode_inf_quantized(&bytes, 65_536, 2, 256)
+    });
+
+    // ---------- L3: COMM round + Prox-LEAD step --------------------------
+    let fx = Fixture::section5(0.05);
+    let (p, w, x0) = (&fx.problem, &fx.w, &fx.x0);
+    let dim = p.dim();
+    let mut set = BenchSet::new(&format!("Prox-LEAD round (8 nodes, p = {dim})")).with_reps(5, 50);
+    set.header();
+    {
+        let mut comm = CommState::new(x0.clone(), w, 0.5);
+        let mut z = Mat::zeros(8, dim);
+        rng.fill_normal(&mut z.data);
+        let mut crng = Rng::new(3);
+        set.run("COMM round (compress+mix, 8 rows)", || comm.comm(&z, w, &q, &mut crng));
+    }
+    {
+        let mut alg = ProxLead::new(
+            p,
+            w,
+            x0,
+            Hyper::paper_default(fx.eta),
+            OracleKind::Full,
+            Box::new(InfNormQuantizer::new(2, 256)),
+            Box::new(L1::new(5e-3)),
+            5,
+        );
+        set.run("matrix step, full grad + 2bit + prox", || alg.step(p));
+        let mut alg = ProxLead::new(
+            p,
+            w,
+            x0,
+            Hyper::paper_default(fx.eta),
+            OracleKind::Saga,
+            Box::new(InfNormQuantizer::new(2, 256)),
+            Box::new(L1::new(5e-3)),
+            5,
+        );
+        set.run("matrix step, SAGA + 2bit + prox", || alg.step(p));
+    }
+
+    // ---------- L3: coordinator round (threads + serialization) ---------
+    let mut set = BenchSet::new("coordinator (8 node threads, wire frames)").with_reps(1, 5);
+    set.header();
+    let p_arc: Arc<dyn Problem> = Arc::new(LogReg::from_blobs(
+        &BlobSpec {
+            nodes: 8,
+            samples_per_node: 120,
+            dim: 32,
+            classes: 10,
+            separation: 1.0,
+            ..Default::default()
+        },
+        0.05,
+        15,
+    ));
+    set.run_throughput("100 rounds end-to-end (spawn+run+join)", 100.0, "round", || {
+        let mut cfg = CoordConfig::new(100, fx.eta, WireCodec::Quant(2, 256));
+        cfg.record_every = 100;
+        coordinator::run(Arc::clone(&p_arc), w, x0, Arc::new(Zero), &cfg)
+    });
+
+    // ---------- L2/L1: PJRT gradient vs native gradient ------------------
+    let dir = proxlead::runtime::default_artifact_dir();
+    if dir.join("manifest.json").exists() {
+        let rt = Arc::new(proxlead::runtime::PjrtRuntime::load(&dir).expect("artifacts"));
+        let spec = BlobSpec {
+            nodes: 1,
+            samples_per_node: 240,
+            dim: 64,
+            classes: 10,
+            separation: 1.5,
+            ..Default::default()
+        };
+        let native = LogReg::new(blobs(&spec), 10, 0.005, 15);
+        let xla = proxlead::runtime::XlaLogReg::new(native, rt).expect("shape artifact");
+        let mut set = BenchSet::new("gradient backends (240×64×10)").with_reps(5, 40);
+        set.header();
+        let xv: Vec<f64> = (0..xla.dim()).map(|_| 0.1 * rng.normal()).collect();
+        let mut out = vec![0.0; xla.dim()];
+        let flops = 2.0 * 2.0 * 240.0 * 64.0 * 10.0; // two matmuls
+        set.run_throughput("native rust full gradient", flops, "flop", || {
+            xla.native().grad(0, &xv, &mut out)
+        });
+        set.run_throughput("PJRT (jax/pallas AOT) full gradient", flops, "flop", || {
+            xla.grad(0, &xv, &mut out)
+        });
+        set.run_throughput("PJRT batch gradient (16 rows)", flops / 15.0, "flop", || {
+            xla.grad_batch(0, 3, &xv, &mut out)
+        });
+    } else {
+        println!("\n(skipping PJRT bench: run `make artifacts`)");
+    }
+    println!("\nperf_hotpath done");
+}

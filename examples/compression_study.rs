@@ -1,0 +1,110 @@
+//! Compression ablation: how the bit budget, the scaling norm, and the
+//! operator family affect Prox-LEAD (the paper's eq. 21 design choices).
+//!
+//! Sweeps b ∈ {2, 4, 8} for the ∞-norm quantizer (eq. 21), the QSGD-style
+//! 2-norm quantizer, rand-k sparsification, and the 32-bit dense baseline,
+//! reporting iterations and bits to reach 1e-10 suboptimality — the
+//! "compression is almost free" claim, measured.
+//!
+//! ```sh
+//! cargo run --release --example compression_study
+//! ```
+
+use proxlead::algorithm::{solve_reference, Hyper, ProxLead};
+use proxlead::compress::{Compressor, Identity, InfNormQuantizer, L2NormQuantizer, RandK};
+use proxlead::engine::{run, RunConfig};
+use proxlead::graph::{mixing_matrix, Graph, MixingRule};
+use proxlead::linalg::Mat;
+use proxlead::oracle::OracleKind;
+use proxlead::problem::data::BlobSpec;
+use proxlead::problem::{LogReg, Problem};
+use proxlead::prox::L1;
+
+fn main() {
+    let spec = BlobSpec {
+        nodes: 8,
+        samples_per_node: 120,
+        dim: 32,
+        classes: 10,
+        separation: 1.0,
+        ..Default::default()
+    };
+    let problem = LogReg::from_blobs(&spec, 0.05, 15);
+    let graph = Graph::ring(8);
+    let w = mixing_matrix(&graph, MixingRule::UniformMaxDegree);
+    let lambda1 = 5e-3;
+    let x_star = solve_reference(&problem, lambda1, 60_000, 1e-12);
+    let eta = 0.5 / problem.smoothness();
+    let x0 = Mat::zeros(8, problem.dim());
+    let target = 1e-10;
+
+    let compressors: Vec<(String, Box<dyn Compressor>)> = vec![
+        ("dense 32bit".into(), Box::new(Identity::f32())),
+        ("inf-norm 2bit".into(), Box::new(InfNormQuantizer::new(2, 256))),
+        ("inf-norm 4bit".into(), Box::new(InfNormQuantizer::new(4, 256))),
+        ("inf-norm 8bit".into(), Box::new(InfNormQuantizer::new(8, 256))),
+        ("qsgd-2norm 2bit".into(), Box::new(L2NormQuantizer::new(2, 256))),
+        ("qsgd-2norm 4bit".into(), Box::new(L2NormQuantizer::new(4, 256))),
+        ("rand-k (k=p/8)".into(), Box::new(RandK::new(problem.dim() / 8))),
+    ];
+
+    println!(
+        "compression study: Prox-LEAD, 8-node ring, λ1 = {lambda1}, target subopt {target:.0e}\n"
+    );
+    println!(
+        "{:<18} {:>6} {:>8} {:>12} {:>12} {:>10}",
+        "compressor", "C≈", "iters", "bits/round", "Mbit tot", "vs 32bit"
+    );
+    let mut dense_bits = None;
+    for (label, comp) in compressors {
+        // empirical noise-to-signal ratio C drives feasible (α, γ): the
+        // paper's α = 0.5, γ = 1 works for low-C operators (eq. 21); the
+        // high-variance comparators need Lemma 4's feasibility region
+        let c = {
+            let mut rng = proxlead::util::rng::Rng::new(99);
+            proxlead::compress::empirical_nsr(comp.as_ref(), problem.dim(), 10, &mut rng)
+        };
+        let alpha = (0.8 / (1.0 + c)).min(0.5);
+        let lmax_iw = 4.0 / 3.0; // ring, uniform 1/3 weights
+        let gamma = if c < 0.3 {
+            1.0
+        } else {
+            let delta = alpha - (1.0 + c) * alpha * alpha;
+            (delta / (c.sqrt() * lmax_iw)).min(1.0)
+        };
+        let mut alg = ProxLead::new(
+            &problem,
+            &w,
+            &x0,
+            Hyper { eta, alpha, gamma },
+            OracleKind::Full,
+            comp,
+            Box::new(L1::new(lambda1)),
+            11,
+        );
+        let res = run(&mut alg, &problem, &x_star, &RunConfig::fixed(60_000).every(60_000).until(target));
+        match res.rounds_to_target {
+            Some(iters) => {
+                let bits = res.history.last().unwrap().bits;
+                let per_round = bits / iters as u64;
+                if label == "dense 32bit" {
+                    dense_bits = Some(bits);
+                }
+                let ratio = dense_bits
+                    .map(|d| format!("{:>9.2}x", bits as f64 / d as f64))
+                    .unwrap_or_else(|| "     (ref)".into());
+                println!(
+                    "{label:<18} {c:>6.2} {iters:>8} {per_round:>12} {:>12.2} {ratio}",
+                    bits as f64 / 1e6
+                );
+            }
+            None => println!("{label:<18} {c:>6.2} {:>8} — did not reach target in budget", "-"),
+        }
+    }
+    println!(
+        "\nnote: iterations barely change across 2/4/8-bit ∞-norm quantization while the\n\
+         bit totals drop ~16x vs dense — 'compression almost for free' (paper §1, Fig 1b/2b).\n\
+         The 2-norm (QSGD) scaling needs more precision at the same b, matching Appendix C\n\
+         of the LEAD paper."
+    );
+}

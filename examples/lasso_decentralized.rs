@@ -1,0 +1,98 @@
+//! Decentralized lasso: sparse recovery over a network — the classic
+//! composite problem the paper's intro motivates (regularized empirical
+//! risk minimization with a non-smooth penalty shared by all nodes).
+//!
+//! Four nodes hold disjoint measurement sets of the same k-sparse signal;
+//! Prox-LEAD (2 bit) recovers the support while communicating a fraction
+//! of the bits the uncompressed proximal baselines need.
+//!
+//! ```sh
+//! cargo run --release --example lasso_decentralized
+//! ```
+
+use proxlead::algorithm::reference::solve_reference_prox;
+use proxlead::algorithm::{Algorithm, Hyper, Nids, P2d2, ProxLead};
+use proxlead::compress::InfNormQuantizer;
+use proxlead::engine::{run, RunConfig};
+use proxlead::graph::{mixing_matrix, Graph, MixingRule};
+use proxlead::linalg::Mat;
+use proxlead::oracle::OracleKind;
+use proxlead::problem::data::sparse_regression;
+use proxlead::problem::{LeastSquares, Problem};
+use proxlead::prox::{Prox, L1};
+
+fn support(x: &[f64], tol: f64) -> Vec<usize> {
+    x.iter().enumerate().filter(|(_, v)| v.abs() > tol).map(|(i, _)| i).collect()
+}
+
+fn main() {
+    // ground truth: 6-sparse signal in R^48, 4 nodes × 40 noisy measurements
+    let (shards, x_true) = sparse_regression(4, 40, 48, 6, 0.02, 7);
+    let problem = LeastSquares::new(shards, 1e-3, 8);
+    let lambda1 = 0.02;
+    let r = L1::new(lambda1);
+
+    let graph = Graph::ring(4);
+    let w = mixing_matrix(&graph, MixingRule::UniformMaxDegree);
+    let x_star = solve_reference_prox(&problem, &r, 80_000, 1e-12);
+
+    let eta = 0.5 / problem.smoothness();
+    let x0 = Mat::zeros(4, problem.dim());
+    let cfg = RunConfig::fixed(6000).every(6000);
+
+    let mut prox_lead = ProxLead::new(
+        &problem,
+        &w,
+        &x0,
+        Hyper::paper_default(eta),
+        OracleKind::Full,
+        Box::new(InfNormQuantizer::paper_default()),
+        Box::new(L1::new(lambda1)),
+        3,
+    );
+    let mut nids =
+        Nids::new(&problem, &w, &x0, eta, OracleKind::Full, Box::new(L1::new(lambda1)), 3);
+    let mut p2d2 =
+        P2d2::new(&problem, &w, &x0, eta, OracleKind::Full, Box::new(L1::new(lambda1)), 3);
+
+    println!("decentralized lasso: 4 nodes, p=48, 6-sparse truth, λ1={lambda1}\n");
+    println!("{:<28} {:>14} {:>10} {:>12}", "algorithm", "suboptimality", "Mbit", "support");
+    let mut rows = vec![];
+    for alg in [&mut prox_lead as &mut dyn Algorithm, &mut nids, &mut p2d2] {
+        let res = run(alg, &problem, &x_star, &cfg);
+        let xbar = res.final_x.row_mean();
+        let sup = support(&xbar, 1e-3);
+        let true_sup = support(&x_true, 1e-9);
+        let exact = sup == true_sup;
+        println!(
+            "{:<28} {:>14.3e} {:>10.2} {:>8}/{} {}",
+            res.name,
+            res.final_subopt(),
+            res.history.last().unwrap().bits as f64 / 1e6,
+            sup.len(),
+            true_sup.len(),
+            if exact { "exact" } else { "" }
+        );
+        rows.push((res.name.clone(), res.final_subopt(), res.history.last().unwrap().bits, exact));
+    }
+
+    // signal recovery quality of the averaged Prox-LEAD solution
+    let lead_bits = rows[0].2 as f64;
+    let nids_bits = rows[1].2 as f64;
+    println!(
+        "\nProx-LEAD matched the uncompressed proximal baselines with {:.0}x fewer bits",
+        nids_bits / lead_bits
+    );
+    assert!(rows.iter().all(|r| r.1 < 1e-10), "all three should solve the lasso: {rows:?}");
+    assert!(rows.iter().all(|r| r.3), "all three should recover the exact support");
+    assert!(lead_bits * 4.0 < nids_bits, "compression should save ≥4x bits");
+
+    // the lasso estimate is close to the ground-truth signal
+    let x_hat = &x_star;
+    let err: f64 = x_hat.iter().zip(&x_true).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+    let scale: f64 = x_true.iter().map(|v| v * v).sum::<f64>().sqrt();
+    println!("relative signal error ‖x̂ − x♯‖/‖x♯‖ = {:.3}", err / scale);
+    assert!(err / scale < 0.2);
+    println!("lasso_decentralized OK");
+    let _ = r.eval(&x_true);
+}

@@ -1,0 +1,86 @@
+//! Quickstart: decentralized composite optimization in ~40 lines.
+//!
+//! Eight nodes on a ring minimize a shared ℓ1-regularized logistic loss
+//! over heterogeneous (label-sorted) data, communicating 2-bit quantized
+//! messages. Compare Prox-LEAD against DGD to see why the paper exists.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use proxlead::algorithm::{solve_reference, Algorithm, Dgd, Hyper, ProxLead};
+use proxlead::compress::{Identity, InfNormQuantizer};
+use proxlead::engine::{run, RunConfig};
+use proxlead::graph::{mixing_matrix, Graph, MixingRule};
+use proxlead::linalg::Mat;
+use proxlead::oracle::OracleKind;
+use proxlead::problem::data::BlobSpec;
+use proxlead::problem::{LogReg, Problem};
+use proxlead::prox::{Zero, L1};
+
+fn main() {
+    // 1. data: 8 label-sorted shards of an "MNIST-like" blob problem
+    let spec = BlobSpec {
+        nodes: 8,
+        samples_per_node: 120,
+        dim: 32,
+        classes: 10,
+        separation: 1.0,
+        ..Default::default()
+    };
+    let problem = LogReg::from_blobs(&spec, 0.05, 15);
+
+    // 2. network: ring with the paper's uniform 1/3 mixing
+    let graph = Graph::ring(8);
+    let w = mixing_matrix(&graph, MixingRule::UniformMaxDegree);
+
+    // 3. ground truth for the suboptimality metric
+    let lambda1 = 5e-3;
+    let x_star = solve_reference(&problem, lambda1, 60_000, 1e-12);
+
+    // 4. algorithms: Prox-LEAD @ 2 bits vs DGD @ 32 bits
+    let eta = 0.5 / problem.smoothness();
+    let x0 = Mat::zeros(8, problem.dim());
+    let mut prox_lead = ProxLead::new(
+        &problem,
+        &w,
+        &x0,
+        Hyper::paper_default(eta),
+        OracleKind::Full,
+        Box::new(InfNormQuantizer::paper_default()),
+        Box::new(L1::new(lambda1)),
+        42,
+    );
+    let mut dgd = Dgd::new(
+        &problem,
+        &w,
+        &x0,
+        eta,
+        OracleKind::Full,
+        Box::new(Identity::f32()),
+        Box::new(Zero),
+        42,
+    );
+
+    let cfg = RunConfig::fixed(8000).every(800);
+    println!("running {} …", prox_lead.name());
+    let r1 = run(&mut prox_lead, &problem, &x_star, &cfg);
+    println!("running {} …", dgd.name());
+    let r2 = run(&mut dgd, &problem, &x_star, &cfg);
+
+    println!("\n round | {:>26} | {:>26}", r1.name, r2.name);
+    for (a, b) in r1.history.iter().zip(&r2.history) {
+        println!("{:>6} | {:>26.6e} | {:>26.6e}", a.round, a.suboptimality, b.suboptimality);
+    }
+    let (b1, b2) = (r1.history.last().unwrap().bits, r2.history.last().unwrap().bits);
+    println!(
+        "\nProx-LEAD used {:.1}x fewer communication bits ({:.2} vs {:.2} Mbit)\n\
+         and still converged to machine precision; DGD stalls at its bias ball.",
+        b2 as f64 / b1 as f64,
+        b1 as f64 / 1e6,
+        b2 as f64 / 1e6
+    );
+    assert!(r1.final_subopt() < 1e-12, "Prox-LEAD should reach high accuracy");
+    assert!(r2.final_subopt() > r1.final_subopt(), "DGD is biased");
+    println!("quickstart OK");
+}

@@ -1,0 +1,87 @@
+"""AOT lowering: jax/pallas (build time) -> HLO text -> rust PJRT (run time).
+
+Emits one artifact per (fn, m, d, C, lam2) configuration plus a
+manifest.json the rust artifact registry indexes. HLO *text* is the
+interchange format, NOT the serialized proto: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids that the image's xla_extension
+0.5.1 rejects; HloModuleProto::from_text_file reassigns ids (see
+/opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts \
+        [--spec m,d,c,lam2 ...]        # default: test + example shapes
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (m, d, C, lam2) configurations compiled by default: a small shape the
+# rust runtime tests use, and the end-to-end train_mnist_like example shape
+# (full-gradient path m=240 and its 16-row minibatch for stochastic runs).
+DEFAULT_SPECS = [
+    (24, 8, 4, 0.005),
+    (240, 64, 10, 0.005),
+    (16, 64, 10, 0.005),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fn(fn, m, d, c, lam2):
+    a = jax.ShapeDtypeStruct((m, d), jax.numpy.float32)
+    w = jax.ShapeDtypeStruct((d, c), jax.numpy.float32)
+    y = jax.ShapeDtypeStruct((m, c), jax.numpy.float32)
+    return jax.jit(lambda a_, w_, y_: fn(a_, w_, y_, lam2)).lower(a, w, y)
+
+
+def build(out_dir: str, specs) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "dtype": "f32", "artifacts": []}
+    for (m, d, c, lam2) in specs:
+        for fn_name, fn in [("logreg_grad", model.node_grad),
+                            ("logreg_loss", model.node_loss)]:
+            name = f"{fn_name}_{m}x{d}x{c}_l{lam2:g}"
+            path = f"{name}.hlo.txt"
+            text = to_hlo_text(lower_fn(fn, m, d, c, lam2))
+            with open(os.path.join(out_dir, path), "w") as f:
+                f.write(text)
+            manifest["artifacts"].append({
+                "name": name, "file": path, "fn": fn_name,
+                "m": m, "d": d, "c": c, "lam2": lam2,
+            })
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def parse_spec(s: str):
+    m, d, c, lam2 = s.split(",")
+    return (int(m), int(d), int(c), float(lam2))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--spec", action="append", type=parse_spec,
+                    help="m,d,c,lam2 (repeatable; default builds the test "
+                         "and example shapes)")
+    args = ap.parse_args()
+    manifest = build(args.out_dir, args.spec or DEFAULT_SPECS)
+    n = len(manifest["artifacts"])
+    print(f"wrote {n} artifacts + manifest.json to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: fused multinomial logistic-regression gradient.
+
+    grad(W) = A^T (softmax(A W) - Y) / m  +  2 lambda2 * W
+
+TPU mapping (DESIGN.md section Hardware-Adaptation): the grid walks
+row-blocks of A (the HBM->VMEM schedule a GPU version would express with
+threadblocks over rows). Each grid step keeps an (bm, d) tile of A, the
+full (d, C) weight panel and an (bm, C) label tile in VMEM, runs two MXU
+matmuls (A_b W and A_b^T delta) plus the VPU softmax, and accumulates into
+the (d, C) output block, which is pinned to block (0, 0) across the whole
+grid so the accumulator never leaves VMEM. The lambda2 term is fused into
+the first grid step.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO ops (see
+/opt/xla-example/README.md); real-TPU efficiency is estimated in
+EXPERIMENTS.md from the VMEM footprint of these block shapes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def row_block(m: int, target: int = 128) -> int:
+    """Largest divisor of m that is <= target (the VMEM row-tile height)."""
+    best = 1
+    for b in range(1, min(m, target) + 1):
+        if m % b == 0:
+            best = b
+    return best
+
+
+def _grad_kernel(a_ref, w_ref, y_ref, o_ref, *, inv_m: float, lam2: float):
+    i = pl.program_id(0)
+    a = a_ref[...]
+    logits = a @ w_ref[...]                       # MXU: (bm,d)x(d,C)
+    z = logits - jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(z)                                # VPU
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    delta = (p - y_ref[...]) * inv_m
+    contrib = a.T @ delta                         # MXU: (d,bm)x(bm,C)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = contrib + 2.0 * lam2 * w_ref[...]
+
+    @pl.when(i > 0)
+    def _acc():
+        o_ref[...] += contrib
+
+
+def logreg_grad(a, w, y_onehot, lam2: float, block_rows: int | None = None):
+    """Pallas-fused gradient; drop-in equal to kernels.ref.logreg_grad_ref.
+
+    a: (m, d), w: (d, C), y_onehot: (m, C); lam2 is a trace-time constant
+    (one AOT artifact per (shape, lam2) configuration).
+    """
+    m, d = a.shape
+    c = w.shape[1]
+    bm = block_rows or row_block(m)
+    assert m % bm == 0, f"block_rows {bm} must divide m {m}"
+    kernel = functools.partial(_grad_kernel, inv_m=1.0 / m, lam2=float(lam2))
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),   # A row tile
+            pl.BlockSpec((d, c), lambda i: (0, 0)),    # W panel (resident)
+            pl.BlockSpec((bm, c), lambda i: (i, 0)),   # Y row tile
+        ],
+        out_specs=pl.BlockSpec((d, c), lambda i: (0, 0)),  # accumulator
+        out_shape=jax.ShapeDtypeStruct((d, c), a.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(a, w, y_onehot)
+
+
+def vmem_footprint_bytes(m: int, d: int, c: int, block_rows: int | None = None,
+                         bytes_per_el: int = 4) -> int:
+    """Estimated VMEM residency of one grid step (EXPERIMENTS.md section
+    Perf uses this to check the tiles fit the ~16 MiB/core budget)."""
+    bm = block_rows or row_block(m)
+    tiles = bm * d + d * c + bm * c + d * c       # A tile, W, Y tile, out
+    intermediates = bm * c * 2                     # logits + probs
+    return (tiles + intermediates) * bytes_per_el

@@ -1,0 +1,39 @@
+"""Pure-jnp correctness oracle for the L1 Pallas kernel.
+
+The kernel computes the fused multinomial logistic-regression gradient
+
+    grad(W) = A^T (softmax(A W) - Y) / m  +  2 lambda2 * W
+
+which is the compute hot-spot of every round of Prox-LEAD on the paper's
+Section-5 workload (the rust coordinator's native implementation of the
+same expression lives in rust/src/problem/logreg.rs and is cross-checked
+against the PJRT-executed artifact in rust/src/runtime/).
+"""
+
+import jax.numpy as jnp
+
+
+def softmax_rows(logits):
+    """Numerically stable row-wise softmax."""
+    z = logits - jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(z)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def logreg_grad_ref(a, w, y_onehot, lam2):
+    """Reference gradient: A^T(softmax(AW) - Y)/m + 2*lam2*W.
+
+    a: (m, d) features, w: (d, C) weights, y_onehot: (m, C) labels.
+    """
+    m = a.shape[0]
+    delta = softmax_rows(a @ w) - y_onehot
+    return a.T @ delta / m + 2.0 * lam2 * w
+
+
+def logreg_loss_ref(a, w, y_onehot, lam2):
+    """Reference loss: mean cross-entropy + lam2*||W||^2."""
+    logits = a @ w
+    mx = jnp.max(logits, axis=-1)
+    lse = jnp.log(jnp.sum(jnp.exp(logits - mx[:, None]), axis=-1)) + mx
+    picked = jnp.sum(logits * y_onehot, axis=-1)
+    return jnp.mean(lse - picked) + lam2 * jnp.sum(w * w)

@@ -1,0 +1,31 @@
+"""L2: the per-node compute graph of the paper's Section-5 workload,
+written in JAX and calling the L1 Pallas kernel.
+
+Two jittable entry points per (m, d, C, lam2) configuration:
+
+- node_grad: the round hot-spot grad f_i(W) (Pallas-fused);
+- node_loss: f_i(W) for metric logging (pure jnp; off the hot path).
+
+python/compile/aot.py lowers these once to HLO text; the rust runtime
+(rust/src/runtime/) loads and executes the artifacts via PJRT. Python is
+never on the request path.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.logreg_grad import logreg_grad
+
+
+def node_grad(a, w, y_onehot, lam2):
+    """grad f_i(W) = A^T(softmax(AW) - Y)/m + 2*lam2*W via the Pallas kernel.
+
+    Returned as a 1-tuple so the lowered HLO has the tuple root the rust
+    loader unwraps with to_tuple1() (see /opt/xla-example/load_hlo).
+    """
+    return (logreg_grad(a, w, y_onehot, lam2),)
+
+
+def node_loss(a, w, y_onehot, lam2):
+    """f_i(W) = mean CE + lam2*||W||^2, shaped (1,) for PJRT transport."""
+    return (jnp.reshape(ref.logreg_loss_ref(a, w, y_onehot, lam2), (1,)),)

@@ -1,0 +1,42 @@
+"""AOT pipeline tests: lowering emits parseable HLO text and a consistent
+manifest (the rust runtime's artifact registry contract)."""
+
+import json
+import os
+
+from compile import aot, model
+
+
+def test_lowered_hlo_is_text(tmp_path):
+    lowered = aot.lower_fn(model.node_grad, 8, 4, 3, 0.01)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    # tuple root so the rust side can to_tuple1()
+    assert "ROOT" in text
+
+
+def test_build_writes_manifest_and_artifacts(tmp_path):
+    out = str(tmp_path)
+    manifest = aot.build(out, [(8, 4, 3, 0.01)])
+    with open(os.path.join(out, "manifest.json")) as f:
+        on_disk = json.load(f)
+    assert on_disk == manifest
+    assert on_disk["format"] == "hlo-text"
+    assert len(on_disk["artifacts"]) == 2  # grad + loss
+    for art in on_disk["artifacts"]:
+        p = os.path.join(out, art["file"])
+        assert os.path.exists(p)
+        with open(p) as f:
+            assert f.read().startswith("HloModule")
+
+
+def test_loss_artifact_scalar_shape(tmp_path):
+    import jax.numpy as jnp
+    import numpy as np
+    a = jnp.zeros((8, 4), jnp.float32)
+    w = jnp.zeros((4, 3), jnp.float32)
+    y = jnp.asarray(np.eye(3, dtype=np.float32)[np.zeros(8, dtype=int)])
+    (loss,) = model.node_loss(a, w, y, 0.01)
+    assert loss.shape == (1,)
+    # loss of zero weights = log C
+    np.testing.assert_allclose(float(loss[0]), np.log(3.0), rtol=1e-6)

@@ -1,0 +1,181 @@
+//! Choco-SGD / Choco-Gossip (Koloskova, Stich, Jaggi 2019) — the paper's
+//! main compressed baseline.
+//!
+//! Each node keeps a public replica x̂ of its own iterate; only compressed
+//! *differences* against the replica are transmitted:
+//!
+//! ```text
+//! X½  = Xᵏ − η Gᵏ                        (gradient step; absent ⇒ gossip)
+//! Qᵏ  = Q(X½ − X̂ᵏ)
+//! X̂ᵏ⁺¹ = X̂ᵏ + Qᵏ                         (all neighbors update replicas)
+//! Xᵏ⁺¹ = X½ + γ_c (W − I) X̂ᵏ⁺¹
+//! ```
+//!
+//! Choco converges sublinearly (under bounded-gradient assumptions the
+//! paper's algorithms avoid) and inherits DGD's fixed-stepsize bias — both
+//! visible in Fig. 1a.
+
+use super::{Algorithm, RoundStats};
+use crate::compress::Compressor;
+use crate::linalg::Mat;
+use crate::oracle::{OracleKind, Sgo};
+use crate::problem::Problem;
+use crate::prox::{prox_rows_into, Prox};
+use crate::util::rng::Rng;
+
+pub struct Choco {
+    x: Mat,
+    x_hat: Mat,
+    w_minus_i: Mat,
+    pub eta: f64,
+    /// Consensus stepsize γ_c (tuned in {0.01 … 1.0} per §5).
+    pub gamma_c: f64,
+    oracle: Sgo,
+    comp: Box<dyn Compressor>,
+    prox: Box<dyn Prox>,
+    rng: Rng,
+    bits: u64,
+    g: Mat,
+}
+
+impl Choco {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        problem: &dyn Problem,
+        w: &Mat,
+        x0: &Mat,
+        eta: f64,
+        gamma_c: f64,
+        oracle_kind: OracleKind,
+        comp: Box<dyn Compressor>,
+        prox: Box<dyn Prox>,
+        seed: u64,
+    ) -> Choco {
+        let mut rng = Rng::new(seed);
+        let oracle = Sgo::new(oracle_kind, problem, x0, rng.next_u64());
+        let mut w_minus_i = w.clone();
+        for i in 0..w.rows {
+            w_minus_i[(i, i)] -= 1.0;
+        }
+        Choco {
+            x: x0.clone(),
+            x_hat: Mat::zeros(x0.rows, x0.cols),
+            w_minus_i,
+            eta,
+            gamma_c,
+            oracle,
+            comp,
+            prox,
+            rng,
+            bits: 0,
+            g: Mat::zeros(x0.rows, x0.cols),
+        }
+    }
+}
+
+impl Algorithm for Choco {
+    fn step(&mut self, problem: &dyn Problem) -> RoundStats {
+        self.oracle.sample_all(problem, &self.x, &mut self.g);
+
+        // gradient half-step
+        let mut x_half = self.x.clone();
+        x_half.axpy(-self.eta, &self.g);
+
+        // compressed replica update
+        let mut bits = 0u64;
+        let mut diff = vec![0.0; self.x.cols];
+        for i in 0..self.x.rows {
+            for ((d, &xi), &hi) in diff.iter_mut().zip(x_half.row(i)).zip(self.x_hat.row(i)) {
+                *d = xi - hi;
+            }
+            let c = self.comp.compress(&diff, &mut self.rng);
+            bits += c.bits;
+            for (h, &q) in self.x_hat.row_mut(i).iter_mut().zip(&c.decoded) {
+                *h += q;
+            }
+        }
+        self.bits += bits;
+
+        // consensus correction through the replicas
+        let corr = self.w_minus_i.matmul(&self.x_hat);
+        x_half.axpy(self.gamma_c, &corr);
+        prox_rows_into(self.prox.as_ref(), &mut x_half, self.eta);
+        self.x = x_half;
+        RoundStats { bits }
+    }
+
+    fn x(&self) -> &Mat {
+        &self.x
+    }
+
+    fn name(&self) -> String {
+        let base = if self.oracle.is_exact() { "Choco" } else { "Choco-SGD" };
+        format!("{base} ({}, {})", self.comp.name(), self.oracle.name())
+    }
+
+    fn grad_evals(&self) -> u64 {
+        self.oracle.grad_evals()
+    }
+
+    fn bits(&self) -> u64 {
+        self.bits
+    }
+
+    fn set_eta(&mut self, eta: f64) {
+        self.eta = eta;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithm::testkit::{ring_logreg, run_to};
+    use crate::algorithm::solve_reference;
+    use crate::compress::InfNormQuantizer;
+    use crate::problem::Problem;
+    use crate::prox::Zero;
+
+    #[test]
+    fn choco_reaches_neighborhood_with_2bit() {
+        let (p, w) = ring_logreg();
+        let x_star = solve_reference(&p, 0.0, 40_000, 1e-13);
+        let x0 = Mat::zeros(4, p.dim());
+        let mut alg = Choco::new(
+            &p,
+            &w,
+            &x0,
+            0.05,
+            0.2,
+            OracleKind::Full,
+            Box::new(InfNormQuantizer::new(2, 256)),
+            Box::new(Zero),
+            5,
+        );
+        let s = run_to(&mut alg, &p, 4000, &x_star);
+        assert!(s.is_finite() && s < 1e-1, "Choco should be stable and near: {s}");
+        assert!(s > 1e-13, "Choco has DGD's bias, must not be exact: {s}");
+    }
+
+    #[test]
+    fn replicas_track_iterates() {
+        let (p, w) = ring_logreg();
+        let x0 = Mat::zeros(4, p.dim());
+        let mut alg = Choco::new(
+            &p,
+            &w,
+            &x0,
+            0.05,
+            0.2,
+            OracleKind::Full,
+            Box::new(InfNormQuantizer::new(4, 256)),
+            Box::new(Zero),
+            5,
+        );
+        for _ in 0..1500 {
+            alg.step(&p);
+        }
+        // once near the fixed point the replica error is small relative scale
+        let rel = alg.x_hat.dist_sq(&alg.x) / alg.x.norm_sq().max(1e-300);
+        assert!(rel < 1e-2, "replica divergence: {rel}");
+    }
+}

@@ -1,0 +1,169 @@
+//! DGD — decentralized gradient descent (Nedic–Ozdaglar 2009), plus its
+//! stochastic (D-PSGD, Lian et al. 2017) and proximal variants.
+//!
+//! ```text
+//! Xᵏ⁺¹ = prox_ηr( W Xᵏ − η Gᵏ )
+//! ```
+//!
+//! With a fixed stepsize DGD converges only to a O(η)-neighborhood (the
+//! "convergence bias" the paper's Fig. 1a shows); the exact solution needs
+//! a diminishing stepsize. Compressing X directly (as DCD-SGD did) is
+//! unstable under aggressive compression — the [`super::prox_lead`]
+//! difference-compression COMM is the fix this paper inherits from LEAD.
+
+use super::{Algorithm, RoundStats};
+use crate::compress::Compressor;
+use crate::linalg::Mat;
+use crate::oracle::{OracleKind, Sgo};
+use crate::problem::Problem;
+use crate::prox::{prox_rows_into, Prox};
+use crate::util::rng::Rng;
+
+pub struct Dgd {
+    x: Mat,
+    w: Mat,
+    pub eta: f64,
+    oracle: Sgo,
+    comp: Box<dyn Compressor>,
+    prox: Box<dyn Prox>,
+    rng: Rng,
+    bits: u64,
+    g: Mat,
+}
+
+impl Dgd {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        problem: &dyn Problem,
+        w: &Mat,
+        x0: &Mat,
+        eta: f64,
+        oracle_kind: OracleKind,
+        comp: Box<dyn Compressor>,
+        prox: Box<dyn Prox>,
+        seed: u64,
+    ) -> Dgd {
+        let mut rng = Rng::new(seed);
+        let oracle = Sgo::new(oracle_kind, problem, x0, rng.next_u64());
+        Dgd {
+            x: x0.clone(),
+            w: w.clone(),
+            eta,
+            oracle,
+            comp,
+            prox,
+            rng,
+            bits: 0,
+            g: Mat::zeros(x0.rows, x0.cols),
+        }
+    }
+}
+
+impl Algorithm for Dgd {
+    fn step(&mut self, problem: &dyn Problem) -> RoundStats {
+        self.oracle.sample_all(problem, &self.x, &mut self.g);
+
+        // each node broadcasts its (possibly compressed) iterate
+        let mut x_hat = Mat::zeros(self.x.rows, self.x.cols);
+        let mut bits = 0u64;
+        for i in 0..self.x.rows {
+            let c = self.comp.compress(self.x.row(i), &mut self.rng);
+            bits += c.bits;
+            x_hat.row_mut(i).copy_from_slice(&c.decoded);
+        }
+        self.bits += bits;
+
+        let mut next = self.w.matmul(&x_hat);
+        next.axpy(-self.eta, &self.g);
+        prox_rows_into(self.prox.as_ref(), &mut next, self.eta);
+        self.x = next;
+        RoundStats { bits }
+    }
+
+    fn x(&self) -> &Mat {
+        &self.x
+    }
+
+    fn name(&self) -> String {
+        let base = if self.oracle.is_exact() { "DGD" } else { "D-PSGD" };
+        format!("{base} ({}, {})", self.comp.name(), self.oracle.name())
+    }
+
+    fn grad_evals(&self) -> u64 {
+        self.oracle.grad_evals()
+    }
+
+    fn bits(&self) -> u64 {
+        self.bits
+    }
+
+    fn set_eta(&mut self, eta: f64) {
+        self.eta = eta;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithm::testkit::{ring_logreg, run_to};
+    use crate::algorithm::{solve_reference, suboptimality};
+    use crate::compress::Identity;
+    use crate::problem::Problem;
+    use crate::prox::Zero;
+
+    #[test]
+    fn dgd_has_convergence_bias_with_fixed_stepsize() {
+        let (p, w) = ring_logreg();
+        let x_star = solve_reference(&p, 0.0, 40_000, 1e-13);
+        let x0 = Mat::zeros(4, p.dim());
+        let mut alg = Dgd::new(
+            &p,
+            &w,
+            &x0,
+            0.05,
+            OracleKind::Full,
+            Box::new(Identity::f32()),
+            Box::new(Zero),
+            3,
+        );
+        let s = run_to(&mut alg, &p, 4000, &x_star);
+        // converges to a neighborhood, NOT to zero (heterogeneous data)
+        assert!(s < 1e-1, "should reach the bias ball: {s}");
+        assert!(s > 1e-12, "fixed-stepsize DGD must not be exact: {s}");
+    }
+
+    #[test]
+    fn diminishing_stepsize_removes_bias() {
+        let (p, w) = ring_logreg();
+        let x_star = solve_reference(&p, 0.0, 40_000, 1e-13);
+        let x0 = Mat::zeros(4, p.dim());
+        let mut alg = Dgd::new(
+            &p,
+            &w,
+            &x0,
+            0.05,
+            OracleKind::Full,
+            Box::new(Identity::f32()),
+            Box::new(Zero),
+            3,
+        );
+        let mut biased = Dgd::new(
+            &p,
+            &w,
+            &x0,
+            0.05,
+            OracleKind::Full,
+            Box::new(Identity::f32()),
+            Box::new(Zero),
+            3,
+        );
+        for k in 0..6000u64 {
+            alg.set_eta(0.05 / (1.0 + k as f64 * 0.01));
+            alg.step(&p);
+            biased.step(&p);
+        }
+        let s_dim = suboptimality(alg.x(), &x_star);
+        let s_fix = suboptimality(biased.x(), &x_star);
+        assert!(s_dim < s_fix * 0.2, "diminishing should beat fixed: {s_dim} vs {s_fix}");
+    }
+}

@@ -1,0 +1,155 @@
+//! NIDS (Li, Shi, Yan 2019) — network-independent-stepsize decentralized
+//! proximal gradient. One of the paper's uncompressed baselines; per §4.3,
+//! LEAD's extra inexact-subproblem step is exactly what NIDS adds over
+//! PDGM, which is why LEAD matches NIDS's O(κ_f + κ_g) complexity.
+//!
+//! Composite form with W̃ = (I+W)/2:
+//!
+//! ```text
+//! Z¹    = X⁰ − η ∇F(X⁰),  X¹ = prox_ηR(Z¹)
+//! Zᵏ⁺¹  = Zᵏ − Xᵏ + W̃ ( 2Xᵏ − Xᵏ⁻¹ − η(∇F(Xᵏ) − ∇F(Xᵏ⁻¹)) )
+//! Xᵏ⁺¹  = prox_ηR(Zᵏ⁺¹)
+//! ```
+//!
+//! One broadcast per node per round (the matrix W̃ multiplies).
+
+use super::{Algorithm, RoundStats};
+use crate::linalg::Mat;
+use crate::oracle::{OracleKind, Sgo};
+use crate::problem::Problem;
+use crate::prox::{prox_rows_into, Prox};
+use crate::util::rng::Rng;
+
+pub struct Nids {
+    x: Mat,
+    x_prev: Mat,
+    z: Mat,
+    g_prev: Mat,
+    w_tilde: Mat,
+    pub eta: f64,
+    oracle: Sgo,
+    prox: Box<dyn Prox>,
+    bits: u64,
+    bits_per_entry: u64,
+    g: Mat,
+}
+
+impl Nids {
+    pub fn new(
+        problem: &dyn Problem,
+        w: &Mat,
+        x0: &Mat,
+        eta: f64,
+        oracle_kind: OracleKind,
+        prox: Box<dyn Prox>,
+        seed: u64,
+    ) -> Nids {
+        let mut rng = Rng::new(seed);
+        let mut oracle = Sgo::new(oracle_kind, problem, x0, rng.next_u64());
+        let n = x0.rows;
+        let mut w_tilde = w.clone();
+        w_tilde.scale(0.5);
+        for i in 0..n {
+            w_tilde[(i, i)] += 0.5;
+        }
+        // init: Z¹ = X⁰ − η∇F(X⁰); X¹ = prox(Z¹)
+        let mut g0 = Mat::zeros(n, x0.cols);
+        oracle.sample_all(problem, x0, &mut g0);
+        let mut z = x0.clone();
+        z.axpy(-eta, &g0);
+        let mut x1 = z.clone();
+        prox_rows_into(prox.as_ref(), &mut x1, eta);
+        Nids {
+            x: x1,
+            x_prev: x0.clone(),
+            z,
+            g_prev: g0,
+            w_tilde,
+            eta,
+            oracle,
+            prox,
+            bits: 0,
+            bits_per_entry: 32, // uncompressed f32 wire format (paper's label)
+            g: Mat::zeros(n, x0.cols),
+        }
+    }
+}
+
+impl Algorithm for Nids {
+    fn step(&mut self, problem: &dyn Problem) -> RoundStats {
+        self.oracle.sample_all(problem, &self.x, &mut self.g);
+
+        // inner = 2Xᵏ − Xᵏ⁻¹ − η(Gᵏ − Gᵏ⁻¹)
+        let mut inner = &self.x * 2.0;
+        inner -= &self.x_prev;
+        inner.axpy(-self.eta, &self.g);
+        inner.axpy(self.eta, &self.g_prev);
+
+        // Zᵏ⁺¹ = Zᵏ − Xᵏ + W̃ · inner  (the broadcast is `inner`)
+        let mixed = self.w_tilde.matmul(&inner);
+        self.z -= &self.x;
+        self.z += &mixed;
+
+        let bits = self.bits_per_entry * (self.x.rows * self.x.cols) as u64;
+        self.bits += bits;
+
+        self.x_prev = self.x.clone();
+        self.g_prev = self.g.clone();
+        let mut xn = self.z.clone();
+        prox_rows_into(self.prox.as_ref(), &mut xn, self.eta);
+        self.x = xn;
+        RoundStats { bits }
+    }
+
+    fn x(&self) -> &Mat {
+        &self.x
+    }
+
+    fn name(&self) -> String {
+        format!("NIDS (32bit, {})", self.oracle.name())
+    }
+
+    fn grad_evals(&self) -> u64 {
+        self.oracle.grad_evals()
+    }
+
+    fn bits(&self) -> u64 {
+        self.bits
+    }
+
+    fn set_eta(&mut self, eta: f64) {
+        self.eta = eta;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithm::testkit::{ring_logreg, run_to};
+    use crate::algorithm::solve_reference;
+    use crate::problem::Problem;
+    use crate::prox::{Zero, L1};
+
+    #[test]
+    fn nids_converges_linearly_smooth() {
+        let (p, w) = ring_logreg();
+        let x_star = solve_reference(&p, 0.0, 40_000, 1e-13);
+        let x0 = Mat::zeros(4, p.dim());
+        let eta = crate::algorithm::testkit::safe_eta(&p);
+        let mut alg = Nids::new(&p, &w, &x0, eta, OracleKind::Full, Box::new(Zero), 3);
+        let s = run_to(&mut alg, &p, 3500, &x_star);
+        assert!(s < 1e-18, "NIDS smooth suboptimality: {s}");
+    }
+
+    #[test]
+    fn nids_converges_composite() {
+        let (p, w) = ring_logreg();
+        let lam = 5e-3;
+        let x_star = solve_reference(&p, lam, 40_000, 1e-13);
+        let x0 = Mat::zeros(4, p.dim());
+        let eta = crate::algorithm::testkit::safe_eta(&p);
+        let mut alg = Nids::new(&p, &w, &x0, eta, OracleKind::Full, Box::new(L1::new(lam)), 3);
+        let s = run_to(&mut alg, &p, 4000, &x_star);
+        assert!(s < 1e-16, "NIDS composite suboptimality: {s}");
+    }
+}

@@ -1,0 +1,379 @@
+//! Prox-LEAD — Algorithm 1 of the paper, in stacked matrix form.
+//!
+//! One round (lines 5–10):
+//!
+//! ```text
+//! Gᵏ    = SGO(Xᵏ)                                (Table 1 oracle)
+//! Zᵏ⁺¹  = Xᵏ − ηGᵏ − ηDᵏ
+//! (Ẑ, Ẑ_w) = COMM(Zᵏ⁺¹, Hᵏ, H_wᵏ, α)            (compressed gossip)
+//! Dᵏ⁺¹  = Dᵏ + γ/(2η) (Ẑ − Ẑ_w)
+//! Vᵏ⁺¹  = Zᵏ⁺¹ − γ/2 (Ẑ − Ẑ_w)
+//! Xᵏ⁺¹  = prox_ηR(Vᵏ⁺¹)
+//! ```
+//!
+//! Specializations covered by this one struct:
+//! - **LEAD** (Algorithm 3): `prox = Zero` — line 10 becomes the identity
+//!   and the iteration reduces exactly to LEAD's X-update;
+//! - **PUDA / Corollary 6**: `comp = Identity` (C = 0);
+//! - **NIDS**: `comp = Identity`, `prox = Zero`, γ = 1 (see §4.3);
+//! - **SGD / LSVRG / SAGA variants**: choice of [`OracleKind`].
+
+use super::{Algorithm, CommState, Hyper, RoundStats};
+use crate::compress::Compressor;
+use crate::linalg::Mat;
+use crate::oracle::{OracleKind, Sgo};
+use crate::problem::Problem;
+use crate::prox::{prox_rows_into, Prox};
+use crate::util::rng::Rng;
+
+pub struct ProxLead {
+    x: Mat,
+    d: Mat,
+    comm: CommState,
+    w: Mat,
+    pub hyper: Hyper,
+    oracle: Sgo,
+    comp: Box<dyn Compressor>,
+    prox: Box<dyn Prox>,
+    rng: Rng,
+    bits: u64,
+    g: Mat, // gradient scratch
+    /// Optional label suffix in `name()` (e.g. "2bit").
+    pub tag: String,
+}
+
+impl ProxLead {
+    /// Build and run the initialization (Algorithm 1 lines 1–3): H¹ = X⁰,
+    /// Z¹ = X⁰ − η·SGO(X⁰), X¹ = prox_ηR(Z¹), D¹ = 0.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        problem: &dyn Problem,
+        w: &Mat,
+        x0: &Mat,
+        hyper: Hyper,
+        oracle_kind: OracleKind,
+        comp: Box<dyn Compressor>,
+        prox: Box<dyn Prox>,
+        seed: u64,
+    ) -> ProxLead {
+        let n = problem.num_nodes();
+        let p = problem.dim();
+        assert_eq!(x0.rows, n);
+        assert_eq!(x0.cols, p);
+        assert_eq!(w.rows, n);
+        let mut rng = Rng::new(seed);
+        let mut oracle = Sgo::new(oracle_kind, problem, x0, rng.next_u64());
+
+        // lines 1–3
+        let mut g = Mat::zeros(n, p);
+        oracle.sample_all(problem, x0, &mut g);
+        let mut z1 = x0.clone();
+        z1.axpy(-hyper.eta, &g);
+        let mut x1 = z1.clone();
+        prox_rows_into(prox.as_ref(), &mut x1, hyper.eta);
+        let comm = CommState::new(x0.clone(), w, hyper.alpha);
+
+        ProxLead {
+            x: x1,
+            d: Mat::zeros(n, p),
+            comm,
+            w: w.clone(),
+            hyper,
+            oracle,
+            comp,
+            prox,
+            rng,
+            bits: 0,
+            g,
+            tag: String::new(),
+        }
+    }
+
+    /// Attach a display tag, e.g. `"2bit"`.
+    pub fn with_tag(mut self, tag: &str) -> ProxLead {
+        self.tag = tag.to_string();
+        self
+    }
+
+    /// Update all three parameters (diminishing-stepsize schedules set
+    /// ηᵏ, αᵏ, γᵏ together — Theorem 7).
+    pub fn set_hyper(&mut self, h: Hyper) {
+        self.hyper = h;
+        self.comm.alpha = h.alpha;
+    }
+
+    /// The dual variable D (for tests of Lemma 3 quantities).
+    pub fn d(&self) -> &Mat {
+        &self.d
+    }
+
+    /// The compression state H (its convergence to Z* kills the error).
+    pub fn h(&self) -> &Mat {
+        &self.comm.h
+    }
+}
+
+impl Algorithm for ProxLead {
+    fn step(&mut self, problem: &dyn Problem) -> RoundStats {
+        let (eta, gamma) = (self.hyper.eta, self.hyper.gamma);
+
+        // line 5: G = SGO(X)
+        self.oracle.sample_all(problem, &self.x, &mut self.g);
+
+        // line 6: Z = X − ηG − ηD
+        let mut z = self.x.clone();
+        z.axpy(-eta, &self.g);
+        z.axpy(-eta, &self.d);
+
+        // line 7: compressed communication
+        let (z_hat, zw_hat, bits) = self.comm.comm(&z, &self.w, self.comp.as_ref(), &mut self.rng);
+        self.bits += bits;
+
+        // lines 8–9: the gossip residual Ẑ − Ẑ_w drives both updates
+        let resid = &z_hat - &zw_hat;
+        self.d.axpy(gamma / (2.0 * eta), &resid);
+        let mut v = z;
+        v.axpy(-gamma / 2.0, &resid);
+
+        // line 10: X = prox_ηR(V)
+        prox_rows_into(self.prox.as_ref(), &mut v, eta);
+        self.x = v;
+
+        RoundStats { bits }
+    }
+
+    fn x(&self) -> &Mat {
+        &self.x
+    }
+
+    fn name(&self) -> String {
+        let base = if self.prox.is_zero() { "LEAD" } else { "Prox-LEAD" };
+        let oracle = self.oracle.name();
+        let comp = self.comp.name();
+        let tag = if self.tag.is_empty() { String::new() } else { format!(" {}", self.tag) };
+        format!("{base} ({comp}, {oracle}){tag}")
+    }
+
+    fn grad_evals(&self) -> u64 {
+        self.oracle.grad_evals()
+    }
+
+    fn bits(&self) -> u64 {
+        self.bits
+    }
+
+    fn set_eta(&mut self, eta: f64) {
+        self.hyper.eta = eta;
+    }
+
+    fn apply_hyper(&mut self, h: Hyper) {
+        self.set_hyper(h);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithm::testkit::{ring_logreg, run_to};
+    use crate::algorithm::{solve_reference, suboptimality};
+    use crate::compress::{Identity, InfNormQuantizer};
+    use crate::prox::{Zero, L1};
+
+    fn reference(problem: &crate::problem::LogReg, l1: f64) -> Vec<f64> {
+        solve_reference(problem, l1, 40_000, 1e-13)
+    }
+
+    #[test]
+    fn converges_linearly_full_gradient_no_compression() {
+        let (p, w) = ring_logreg();
+        let x_star = reference(&p, 0.0);
+        use crate::problem::Problem;
+        let x0 = Mat::zeros(4, p.dim());
+        let mut alg = ProxLead::new(
+            &p,
+            &w,
+            &x0,
+            Hyper::paper_default(crate::algorithm::testkit::safe_eta(&p)),
+            OracleKind::Full,
+            Box::new(Identity::f64()),
+            Box::new(Zero),
+            7,
+        );
+        let mut subopts = vec![];
+        for _ in 0..6 {
+            subopts.push(run_to(&mut alg, &p, 200, &x_star));
+        }
+        // geometric decay to machine-precision territory
+        assert!(subopts[5] < 1e-18, "final subopt {:?}", subopts);
+        assert!(subopts[5] < subopts[0] * 1e-8, "no decay: {:?}", subopts);
+    }
+
+    #[test]
+    fn converges_with_2bit_compression() {
+        let (p, w) = ring_logreg();
+        let x_star = reference(&p, 0.0);
+        use crate::problem::Problem;
+        let x0 = Mat::zeros(4, p.dim());
+        let mut alg = ProxLead::new(
+            &p,
+            &w,
+            &x0,
+            Hyper::paper_default(crate::algorithm::testkit::safe_eta(&p)),
+            OracleKind::Full,
+            Box::new(InfNormQuantizer::new(2, 256)),
+            Box::new(Zero),
+            7,
+        );
+        let s = run_to(&mut alg, &p, 4000, &x_star);
+        assert!(s < 1e-16, "2bit LEAD should still converge linearly: {s}");
+        // compression state H must have converged too (error → 0)
+        let h_err = alg.h().dist_sq(alg.x()) / alg.x().norm_sq();
+        assert!(h_err < 1e-12, "H − X relative residual {h_err}");
+    }
+
+    #[test]
+    fn composite_l1_converges_to_prox_reference() {
+        let (p, w) = ring_logreg();
+        let lambda1 = 5e-3;
+        let x_star = reference(&p, lambda1);
+        use crate::problem::Problem;
+        let x0 = Mat::zeros(4, p.dim());
+        let mut alg = ProxLead::new(
+            &p,
+            &w,
+            &x0,
+            Hyper::paper_default(crate::algorithm::testkit::safe_eta(&p)),
+            OracleKind::Full,
+            Box::new(InfNormQuantizer::new(2, 256)),
+            Box::new(L1::new(lambda1)),
+            7,
+        );
+        let s = run_to(&mut alg, &p, 4500, &x_star);
+        assert!(s < 1e-14, "Prox-LEAD 2bit non-smooth suboptimality: {s}");
+        // the l1 solution must actually be sparse-ish vs the smooth one
+        let smooth_star = reference(&p, 0.0);
+        let nnz = |v: &[f64]| v.iter().filter(|&&x| x.abs() > 1e-8).count();
+        assert!(nnz(&x_star) <= nnz(&smooth_star));
+    }
+
+    #[test]
+    fn saga_variant_converges_linearly() {
+        let (p, w) = ring_logreg();
+        let x_star = reference(&p, 5e-3);
+        use crate::problem::Problem;
+        let x0 = Mat::zeros(4, p.dim());
+        let mut alg = ProxLead::new(
+            &p,
+            &w,
+            &x0,
+            Hyper::paper_default(1.0 / (6.0 * crate::problem::Problem::smoothness(&p))),
+            OracleKind::Saga,
+            Box::new(InfNormQuantizer::new(2, 256)),
+            Box::new(L1::new(5e-3)),
+            11,
+        );
+        let s = run_to(&mut alg, &p, 9000, &x_star);
+        assert!(s < 1e-12, "Prox-LEAD SAGA suboptimality: {s}");
+    }
+
+    #[test]
+    fn lsvrg_variant_converges_linearly() {
+        let (p, w) = ring_logreg();
+        let x_star = reference(&p, 5e-3);
+        use crate::problem::Problem;
+        let x0 = Mat::zeros(4, p.dim());
+        let mut alg = ProxLead::new(
+            &p,
+            &w,
+            &x0,
+            Hyper::paper_default(1.0 / (6.0 * crate::problem::Problem::smoothness(&p))),
+            OracleKind::Lsvrg { p: 1.0 / 4.0 },
+            Box::new(InfNormQuantizer::new(2, 256)),
+            Box::new(L1::new(5e-3)),
+            11,
+        );
+        let s = run_to(&mut alg, &p, 9000, &x_star);
+        assert!(s < 1e-12, "Prox-LEAD LSVRG suboptimality: {s}");
+    }
+
+    #[test]
+    fn sgd_variant_reaches_noise_ball_only() {
+        // Theorem 5: fixed stepsize + plain SGD ⇒ linear to a σ²-ball, NOT
+        // to zero; VR variants beat it by orders of magnitude.
+        let (p, w) = ring_logreg();
+        let x_star = reference(&p, 0.0);
+        use crate::problem::Problem;
+        let x0 = Mat::zeros(4, p.dim());
+        let mk = |kind| {
+            ProxLead::new(
+                &p,
+                &w,
+                &x0,
+                Hyper::paper_default(0.02),
+                kind,
+                Box::new(Identity::f64()),
+                Box::new(Zero),
+                13,
+            )
+        };
+        let mut sgd = mk(OracleKind::Sgd);
+        let mut saga = mk(OracleKind::Saga);
+        let s_sgd = run_to(&mut sgd, &p, 3000, &x_star);
+        let s_saga = run_to(&mut saga, &p, 3000, &x_star);
+        assert!(s_sgd > 1e-9, "plain SGD should stall at the noise ball: {s_sgd}");
+        assert!(s_saga < s_sgd * 1e-3, "VR must beat SGD: {s_saga} vs {s_sgd}");
+    }
+
+    #[test]
+    fn compression_saves_bits_at_same_accuracy() {
+        let (p, w) = ring_logreg();
+        let x_star = reference(&p, 0.0);
+        use crate::problem::Problem;
+        let x0 = Mat::zeros(4, p.dim());
+        let target = 1e-10;
+        let bits_to_target = |comp: Box<dyn Compressor>| {
+            let mut alg = ProxLead::new(
+                &p,
+                &w,
+                &x0,
+                Hyper::paper_default(crate::algorithm::testkit::safe_eta(&p)),
+                OracleKind::Full,
+                comp,
+                Box::new(Zero),
+                7,
+            );
+            for _ in 0..5000 {
+                alg.step(&p);
+                if suboptimality(alg.x(), &x_star) < target {
+                    return alg.bits();
+                }
+            }
+            u64::MAX
+        };
+        let b32 = bits_to_target(Box::new(Identity::f32()));
+        let b2 = bits_to_target(Box::new(InfNormQuantizer::new(2, 256)));
+        assert!(b2 < u64::MAX && b32 < u64::MAX);
+        assert!(
+            (b2 as f64) < 0.5 * b32 as f64,
+            "2bit should need far fewer bits: {b2} vs {b32}"
+        );
+    }
+
+    #[test]
+    fn name_reflects_configuration() {
+        let (p, w) = ring_logreg();
+        use crate::problem::Problem;
+        let x0 = Mat::zeros(4, p.dim());
+        let alg = ProxLead::new(
+            &p,
+            &w,
+            &x0,
+            Hyper::paper_default(0.1),
+            OracleKind::Saga,
+            Box::new(InfNormQuantizer::new(2, 256)),
+            Box::new(L1::new(0.005)),
+            1,
+        );
+        assert_eq!(alg.name(), "Prox-LEAD (2bit, saga)");
+    }
+}

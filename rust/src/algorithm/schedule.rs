@@ -1,0 +1,96 @@
+//! Stepsize schedules — notably Theorem 7's diminishing schedule that gives
+//! Prox-LEAD exact O(1/k) convergence under plain stochastic gradients.
+//!
+//! Theorem 7 sets, with B = 16(1+C)²·κ_g·κ_f,
+//!
+//! ```text
+//! ηᵏ = (B/2) / (k + B) · (1/L)
+//! αᵏ = ηᵏ μ / (1+C)
+//! γᵏ = ηᵏ μ / (2 (1+C)² λmax(I−W))
+//! ```
+
+use super::Hyper;
+
+/// A (possibly time-varying) hyperparameter schedule.
+#[derive(Clone, Debug)]
+pub enum Schedule {
+    /// Fixed parameters (Theorems 5, 8, 9).
+    Constant(Hyper),
+    /// Theorem 7's O(1/k) schedule.
+    Theorem7 {
+        /// Compression variance bound C (Assumption 2).
+        c: f64,
+        /// Smoothness L and strong convexity μ.
+        l: f64,
+        mu: f64,
+        /// Network condition number κ_g and λmax(I − W).
+        kappa_g: f64,
+        lmax_iw: f64,
+    },
+    /// Generic η₀/(1 + rate·k) decay with α, γ fixed (DGD-style ablation).
+    InverseK { eta0: f64, rate: f64, alpha: f64, gamma: f64 },
+}
+
+impl Schedule {
+    /// Parameters at iteration k (0-based).
+    pub fn hyper_at(&self, k: u64) -> Hyper {
+        match *self {
+            Schedule::Constant(h) => h,
+            Schedule::Theorem7 { c, l, mu, kappa_g, lmax_iw } => {
+                let kf = l / mu;
+                let b = 16.0 * (1.0 + c) * (1.0 + c) * kappa_g * kf;
+                let eta = (b / 2.0) / (k as f64 + b) / l;
+                let alpha = eta * mu / (1.0 + c);
+                let gamma = eta * mu / (2.0 * (1.0 + c) * (1.0 + c) * lmax_iw);
+                Hyper { eta, alpha, gamma }
+            }
+            Schedule::InverseK { eta0, rate, alpha, gamma } => Hyper {
+                eta: eta0 / (1.0 + rate * k as f64),
+                alpha,
+                gamma,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn theorem7_parameters_feasible_and_decaying() {
+        let s = Schedule::Theorem7 { c: 0.3, l: 10.0, mu: 0.1, kappa_g: 5.0, lmax_iw: 1.8 };
+        let h0 = s.hyper_at(0);
+        // η⁰ = 1/(2L) as in the theorem's k=0 value
+        assert!((h0.eta - 0.05).abs() < 1e-12);
+        // feasibility: α < min{ημ/√C, 1/(1+C)}
+        let c: f64 = 0.3;
+        assert!(h0.alpha < (h0.eta * 0.1 / c.sqrt()).min(1.0 / 1.3));
+        // monotone decay, η^k → 0 like 1/k
+        let h_big = s.hyper_at(10_000_000);
+        assert!(h_big.eta < h0.eta * 1e-2);
+        let (a, b) = (s.hyper_at(100).eta, s.hyper_at(200).eta);
+        assert!(b < a);
+        // the k·η^k product approaches the constant B/(2L)·1 ⇒ 1/k rate
+        let k = 1e8;
+        let eta_k = s.hyper_at(k as u64).eta;
+        let kf = 100.0;
+        let bb = 16.0 * 1.3 * 1.3 * 5.0 * kf;
+        assert!((eta_k * (k + bb) - bb / 2.0 / 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn constant_schedule_is_constant() {
+        let h = Hyper::paper_default(0.1);
+        let s = Schedule::Constant(h);
+        assert_eq!(s.hyper_at(0).eta, s.hyper_at(999).eta);
+    }
+
+    #[test]
+    fn inverse_k_decays() {
+        let s = Schedule::InverseK { eta0: 0.1, rate: 0.01, alpha: 0.5, gamma: 1.0 };
+        assert!((s.hyper_at(0).eta - 0.1).abs() < 1e-15);
+        assert!((s.hyper_at(100).eta - 0.05).abs() < 1e-15);
+        assert_eq!(s.hyper_at(100).alpha, 0.5);
+    }
+}

@@ -1,0 +1,146 @@
+//! Minimal argument parser for the launcher (clap is unavailable offline).
+//!
+//! Grammar: `proxlead <subcommand> [--config FILE] [--key value | --key=value]…`
+//! Every `--key` after `--config` handling is routed into
+//! [`crate::config::Config::set`], so the CLI surface automatically tracks
+//! the config schema.
+
+use crate::config::{Config, ConfigError};
+
+/// A parsed invocation.
+#[derive(Debug)]
+pub struct Invocation {
+    pub subcommand: String,
+    pub config: Config,
+    /// Raw flags not consumed by the config (subcommand-specific).
+    pub extra: Vec<(String, String)>,
+}
+
+pub const USAGE: &str = "\
+prox-lead: decentralized composite optimization with compression
+  (Li, Liu, Tang, Yan, Yuan 2021 — full-system reproduction)
+
+USAGE:
+  proxlead <SUBCOMMAND> [--config FILE] [--key value]...
+
+SUBCOMMANDS:
+  train       run distributed Prox-LEAD on node threads (the coordinator)
+  solve-ref   compute the high-precision reference solution x*
+  info        print problem/network condition numbers and artifacts
+  config      print the effective configuration (after overrides)
+  help        this message
+
+CONFIG KEYS (also usable as --key value):
+  nodes samples_per_node dim classes batches lambda1 lambda2 separation
+  shuffled topology(ring|chain|star|complete|grid|er) mixing(uniform|mh|lazy)
+  er_prob oracle(full|sgd|lsvrg|saga) lsvrg_p bits(2..16|32|64) block
+  eta(0=auto 1/2L) alpha gamma rounds record_every seed
+  backend(native|xla) out straggler_prob straggler_us
+
+EXAMPLES:
+  proxlead train --rounds 300 --bits 2 --oracle saga --out run.csv
+  proxlead train --config experiment.cfg --backend xla
+  proxlead info --nodes 16 --topology grid
+";
+
+/// Parse `args` (without argv[0]).
+pub fn parse(args: &[String]) -> Result<Invocation, ConfigError> {
+    let mut it = args.iter().peekable();
+    let subcommand = it
+        .next()
+        .cloned()
+        .unwrap_or_else(|| "help".to_string());
+    let mut config = Config::default();
+    let mut extra = Vec::new();
+    let mut overrides: Vec<(String, String)> = Vec::new();
+
+    while let Some(arg) = it.next() {
+        let Some(flag) = arg.strip_prefix("--") else {
+            return Err(ConfigError(format!("unexpected positional argument '{arg}'")));
+        };
+        let (key, val) = match flag.split_once('=') {
+            Some((k, v)) => (k.to_string(), v.to_string()),
+            None => {
+                let v = it
+                    .next()
+                    .ok_or_else(|| ConfigError(format!("--{flag} needs a value")))?;
+                (flag.to_string(), v.clone())
+            }
+        };
+        if key == "config" {
+            // file first, CLI overrides later (collected separately)
+            config = Config::from_file(&val)?;
+        } else {
+            overrides.push((key, val));
+        }
+    }
+    for (k, v) in overrides {
+        match config.set(&k, &v) {
+            Ok(()) => {}
+            Err(_) => extra.push((k, v)), // subcommand-specific flag
+        }
+    }
+    Ok(Invocation { subcommand, config, extra })
+}
+
+impl Invocation {
+    /// Look up a subcommand-specific flag.
+    pub fn flag(&self, key: &str) -> Option<&str> {
+        self.extra.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(args: &[&str]) -> Vec<String> {
+        args.iter().map(|a| a.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_overrides() {
+        let inv = parse(&s(&["train", "--rounds", "77", "--bits=8", "--oracle", "saga"])).unwrap();
+        assert_eq!(inv.subcommand, "train");
+        assert_eq!(inv.config.rounds, 77);
+        assert_eq!(inv.config.bits, 8);
+        assert_eq!(inv.config.oracle, "saga");
+    }
+
+    #[test]
+    fn config_file_then_cli_override() {
+        let dir = std::env::temp_dir().join("proxlead_cli_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.cfg");
+        std::fs::write(&path, "rounds = 5\nbits = 4\n").unwrap();
+        let inv = parse(&s(&[
+            "train",
+            "--config",
+            path.to_str().unwrap(),
+            "--bits",
+            "2",
+        ]))
+        .unwrap();
+        assert_eq!(inv.config.rounds, 5); // from file
+        assert_eq!(inv.config.bits, 2); // CLI wins
+    }
+
+    #[test]
+    fn unknown_keys_become_extra_flags() {
+        let inv = parse(&s(&["solve-ref", "--tol", "1e-9"])).unwrap();
+        assert_eq!(inv.flag("tol"), Some("1e-9"));
+        assert_eq!(inv.flag("nope"), None);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(parse(&s(&["train", "--rounds"])).is_err());
+        assert!(parse(&s(&["train", "stray"])).is_err());
+    }
+
+    #[test]
+    fn no_args_is_help() {
+        let inv = parse(&[]).unwrap();
+        assert_eq!(inv.subcommand, "help");
+    }
+}

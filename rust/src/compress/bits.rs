@@ -1,0 +1,251 @@
+//! Wire format for compressed messages: a real bit-packed codec.
+//!
+//! The matrix-form engine only needs the decoded vector + a bit count, but
+//! the message-passing coordinator serializes actual bytes, so the decoded
+//! values in Figures 1b/1d/2b/2d go through a real codec. Format for the
+//! ∞-norm quantizer (eq. 21, L = 2^{b−1} levels), per block:
+//!
+//!   [f32 norm] [entry codes: 1 sign bit + b magnitude bits each]
+//!
+//! Magnitude codes span [0, L] = [0, 2^{b−1}], which needs a b-bit field;
+//! the raw wire therefore spends b+1 bits per entry. The *accounted* bits
+//! (what the figures plot) follow the paper's/QSGD's convention of b bits
+//! per entry — the boundary code and the sign of zero are redundancies an
+//! entropy coder removes (QSGD uses Elias coding); we keep the fixed-width
+//! codec for simplicity and charge the entropy-coded size.
+//! An all-zero block is encoded as norm = 0 with no entry codes.
+
+use super::quantize::levels_for_bits;
+use crate::util::rng::Rng;
+
+/// MSB-first bit writer.
+pub struct BitWriter {
+    pub bytes: Vec<u8>,
+    nbits: usize,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        BitWriter {
+            bytes: Vec::new(),
+            nbits: 0,
+        }
+    }
+
+    pub fn write_bits(&mut self, value: u64, width: u32) {
+        debug_assert!(width <= 64);
+        debug_assert!(width == 64 || value < (1u64 << width), "value overflows field");
+        for i in (0..width).rev() {
+            let bit = (value >> i) & 1;
+            let byte_idx = self.nbits / 8;
+            if byte_idx == self.bytes.len() {
+                self.bytes.push(0);
+            }
+            if bit == 1 {
+                self.bytes[byte_idx] |= 1 << (7 - self.nbits % 8);
+            }
+            self.nbits += 1;
+        }
+    }
+
+    pub fn write_f32(&mut self, x: f32) {
+        self.write_bits(x.to_bits() as u64, 32);
+    }
+
+    pub fn bit_len(&self) -> usize {
+        self.nbits
+    }
+}
+
+impl Default for BitWriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// MSB-first bit reader.
+pub struct BitReader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(bytes: &'a [u8]) -> Self {
+        BitReader { bytes, pos: 0 }
+    }
+
+    pub fn read_bits(&mut self, width: u32) -> u64 {
+        let mut v = 0u64;
+        for _ in 0..width {
+            let byte_idx = self.pos / 8;
+            let bit = (self.bytes[byte_idx] >> (7 - self.pos % 8)) & 1;
+            v = (v << 1) | bit as u64;
+            self.pos += 1;
+        }
+        v
+    }
+
+    pub fn read_f32(&mut self) -> f32 {
+        f32::from_bits(self.read_bits(32) as u32)
+    }
+
+    pub fn bits_read(&self) -> usize {
+        self.pos
+    }
+}
+
+/// Encode `x` with the b-bit ∞-norm quantizer into wire bytes.
+/// Returns (bytes, decoded vector, exact payload bits). The decoded vector
+/// is bit-identical to what [`decode_inf_quantized`] recovers on the
+/// receiving side (both go through the f32 norm).
+pub fn encode_inf_quantized(
+    x: &[f64],
+    bits: u32,
+    block: usize,
+    rng: &mut Rng,
+) -> (Vec<u8>, Vec<f64>, u64) {
+    let levels = levels_for_bits(bits);
+    let mut w = BitWriter::new();
+    let mut decoded = Vec::with_capacity(x.len());
+    let mut accounted = 0u64;
+    for chunk in x.chunks(block) {
+        let norm = chunk.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+        w.write_f32(norm as f32);
+        if norm == 0.0 {
+            decoded.extend(std::iter::repeat(0.0).take(chunk.len()));
+            accounted += 32;
+            continue;
+        }
+        let norm32 = norm as f32 as f64; // receiver sees the f32 norm
+        let scale = norm32 / levels;
+        for &v in chunk {
+            // dither against the f64 norm (what the sender holds); the
+            // floor can reach `levels` only when |v| == norm exactly and
+            // u ≈ 1; clamp keeps the code in-field and the clamped case
+            // has probability → the dither tail, preserving unbiasedness
+            // up to O(ulp).
+            let mag = (levels * v.abs() / norm + rng.f64()).floor().min(levels);
+            let code = mag as u64;
+            let sign = if v < 0.0 { 1u64 } else { 0u64 };
+            w.write_bits((sign << bits) | code, bits + 1);
+            decoded.push((1.0 - 2.0 * sign as f64) * scale * mag);
+        }
+        accounted += 32 + bits as u64 * chunk.len() as u64;
+    }
+    (w.bytes, decoded, accounted)
+}
+
+/// Decode wire bytes produced by [`encode_inf_quantized`].
+pub fn decode_inf_quantized(bytes: &[u8], n: usize, bits: u32, block: usize) -> Vec<f64> {
+    let levels = levels_for_bits(bits);
+    let mag_mask = (1u64 << bits) - 1;
+    let mut r = BitReader::new(bytes);
+    let mut out = Vec::with_capacity(n);
+    let mut remaining = n;
+    while remaining > 0 {
+        let chunk = remaining.min(block);
+        let norm = r.read_f32() as f64;
+        if norm == 0.0 {
+            out.extend(std::iter::repeat(0.0).take(chunk));
+        } else {
+            let scale = norm / levels;
+            for _ in 0..chunk {
+                let code = r.read_bits(bits + 1);
+                let sign = (code >> bits) & 1;
+                let mag = (code & mag_mask) as f64;
+                out.push((1.0 - 2.0 * sign as f64) * scale * mag);
+            }
+        }
+        remaining -= chunk;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bit_writer_reader_roundtrip() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b101, 3);
+        w.write_bits(0xFFFF, 16);
+        w.write_f32(1.25);
+        w.write_bits(0, 1);
+        let mut r = BitReader::new(&w.bytes);
+        assert_eq!(r.read_bits(3), 0b101);
+        assert_eq!(r.read_bits(16), 0xFFFF);
+        assert_eq!(r.read_f32(), 1.25);
+        assert_eq!(r.read_bits(1), 0);
+        assert_eq!(r.bits_read(), w.bit_len());
+    }
+
+    #[test]
+    fn encode_decode_agree() {
+        let mut rng = Rng::new(31);
+        for bits in [2u32, 4, 8] {
+            for n in [1usize, 5, 256, 300] {
+                let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                let mut rng2 = Rng::new(99);
+                let (bytes, decoded, nbits) = encode_inf_quantized(&x, bits, 256, &mut rng2);
+                let recovered = decode_inf_quantized(&bytes, n, bits, 256);
+                assert_eq!(decoded.len(), n);
+                assert_eq!(recovered.len(), n);
+                for (i, (&d, &r)) in decoded.iter().zip(&recovered).enumerate() {
+                    assert_eq!(d, r, "bits={bits} n={n} idx={i}: sender {d} vs receiver {r}");
+                }
+                // raw wire spends (b+1)/b × the accounted (entropy-coded) bits
+                assert!(bytes.len() * 8 <= (nbits as usize) * 2 + 64);
+            }
+        }
+    }
+
+    #[test]
+    fn wire_bits_match_accounting() {
+        // one full block of 256 at b=2: 32 + 2*256 bits
+        let x = vec![1.0; 256];
+        let mut rng = Rng::new(32);
+        let (_, _, nbits) = encode_inf_quantized(&x, 2, 256, &mut rng);
+        assert_eq!(nbits, 32 + 2 * 256);
+    }
+
+    #[test]
+    fn zero_vector_cheap() {
+        let mut rng = Rng::new(33);
+        let (bytes, decoded, nbits) = encode_inf_quantized(&[0.0; 512], 2, 256, &mut rng);
+        assert_eq!(decoded, vec![0.0; 512]);
+        assert_eq!(nbits, 64); // two block norms only
+        assert_eq!(bytes.len(), 8);
+    }
+
+    #[test]
+    fn error_bounded_by_scale() {
+        // per-entry error ≤ scale = ‖x‖∞/L (+f32 norm rounding)
+        let mut rng = Rng::new(34);
+        let x: Vec<f64> = (0..256).map(|_| rng.normal()).collect();
+        let norm = x.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+        for bits in [2u32, 4, 8] {
+            let scale = norm / levels_for_bits(bits);
+            let (_, decoded, _) = encode_inf_quantized(&x, bits, 256, &mut rng);
+            for (a, b) in x.iter().zip(&decoded) {
+                assert!((a - b).abs() <= scale * (1.0 + 1e-6), "b={bits}");
+            }
+        }
+    }
+
+    #[test]
+    fn wire_codec_matches_analytic_compressor() {
+        // same rng seed ⇒ the wire codec and InfNormQuantizer draw the same
+        // dithers and produce the same decoded values up to f32 norm rounding
+        use crate::compress::{Compressor, InfNormQuantizer};
+        let mut rng = Rng::new(35);
+        let x: Vec<f64> = (0..300).map(|_| rng.normal()).collect();
+        let q = InfNormQuantizer::new(4, 256);
+        let a = q.compress(&x, &mut Rng::new(7));
+        let (_, b, nbits) = encode_inf_quantized(&x, 4, 256, &mut Rng::new(7));
+        assert_eq!(a.bits, nbits);
+        for (i, (&u, &v)) in a.decoded.iter().zip(&b).enumerate() {
+            assert!((u - v).abs() < 1e-6 * (1.0 + u.abs()), "idx {i}: {u} vs {v}");
+        }
+    }
+}

@@ -1,0 +1,186 @@
+//! Sparsification compressors.
+//!
+//! [`RandK`] keeps k random coordinates scaled by p/k — unbiased with
+//! C = p/k − 1, so it satisfies Assumption 2 and can be used with
+//! Prox-LEAD at *any* aggressiveness ("arbitrary compression precision").
+//! [`TopK`] keeps the k largest-magnitude coordinates — biased, violating
+//! Assumption 2; shipped only for the ablation benchmark that shows why
+//! the theory asks for unbiasedness.
+
+use super::{Compressed, Compressor};
+use crate::util::rng::Rng;
+
+/// Unbiased random-k sparsifier: Q(x)_i = (p/k)·x_i for k uniformly chosen
+/// coordinates, 0 elsewhere.
+#[derive(Clone, Copy, Debug)]
+pub struct RandK {
+    pub k: usize,
+}
+
+impl RandK {
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1);
+        RandK { k }
+    }
+}
+
+impl Compressor for RandK {
+    fn compress(&self, x: &[f64], rng: &mut Rng) -> Compressed {
+        let p = x.len();
+        let k = self.k.min(p);
+        let idx = rng.sample_indices(p, k);
+        let mut decoded = vec![0.0; p];
+        let scale = p as f64 / k as f64;
+        for &i in &idx {
+            decoded[i] = scale * x[i];
+        }
+        // wire: k × (index + f32 value). Index width = ceil(log2 p).
+        let idx_bits = (usize::BITS - (p.max(2) - 1).leading_zeros()) as u64;
+        Compressed {
+            decoded,
+            bits: k as u64 * (idx_bits + 32),
+        }
+    }
+
+    fn variance_bound(&self) -> f64 {
+        // E‖Q(x)−x‖² = (p/k − 1)‖x‖² exactly, for p entries
+        // (dimension-dependent; we report the bound for the dims we use —
+        // callers with fixed p should use `variance_bound_for_dim`).
+        f64::NAN // dimension-dependent; see variance_bound_for_dim
+    }
+
+    fn name(&self) -> String {
+        format!("rand{}", self.k)
+    }
+}
+
+impl RandK {
+    /// Exact C for vectors of dimension p: C = p/k − 1.
+    pub fn variance_bound_for_dim(&self, p: usize) -> f64 {
+        p as f64 / self.k.min(p) as f64 - 1.0
+    }
+}
+
+/// Biased top-k sparsifier (keeps the k largest |x_i| unscaled).
+#[derive(Clone, Copy, Debug)]
+pub struct TopK {
+    pub k: usize,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1);
+        TopK { k }
+    }
+}
+
+impl Compressor for TopK {
+    fn compress(&self, x: &[f64], _rng: &mut Rng) -> Compressed {
+        let p = x.len();
+        let k = self.k.min(p);
+        let mut order: Vec<usize> = (0..p).collect();
+        order.sort_by(|&a, &b| x[b].abs().partial_cmp(&x[a].abs()).unwrap());
+        let mut decoded = vec![0.0; p];
+        for &i in &order[..k] {
+            decoded[i] = x[i];
+        }
+        let idx_bits = (usize::BITS - (p.max(2) - 1).leading_zeros()) as u64;
+        Compressed {
+            decoded,
+            bits: k as u64 * (idx_bits + 32),
+        }
+    }
+
+    fn variance_bound(&self) -> f64 {
+        f64::NAN // biased: no Assumption-2 constant exists
+    }
+
+    fn is_unbiased(&self) -> bool {
+        false
+    }
+
+    fn name(&self) -> String {
+        format!("top{}", self.k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::empirical_bias;
+
+    #[test]
+    fn randk_unbiased() {
+        let q = RandK::new(4);
+        let mut rng = Rng::new(21);
+        let x: Vec<f64> = (0..16).map(|_| rng.normal()).collect();
+        let bias = empirical_bias(&q, &x, 60_000, &mut rng);
+        assert!(bias < 0.02, "bias {bias}");
+    }
+
+    #[test]
+    fn randk_variance_exact() {
+        // E‖Q(x)−x‖² = (p/k − 1)‖x‖² — verify by Monte Carlo
+        let q = RandK::new(2);
+        let mut rng = Rng::new(22);
+        let x: Vec<f64> = (0..8).map(|_| rng.normal()).collect();
+        let norm_sq: f64 = x.iter().map(|v| v * v).sum();
+        let mut err = 0.0;
+        let trials = 40_000;
+        for _ in 0..trials {
+            let c = q.compress(&x, &mut rng);
+            err += x
+                .iter()
+                .zip(&c.decoded)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>();
+        }
+        let measured_c = err / trials as f64 / norm_sq;
+        let exact_c = q.variance_bound_for_dim(8);
+        assert!(
+            (measured_c - exact_c).abs() < 0.1 * exact_c,
+            "measured {measured_c} vs exact {exact_c}"
+        );
+    }
+
+    #[test]
+    fn randk_keeps_k_entries() {
+        let q = RandK::new(3);
+        let mut rng = Rng::new(23);
+        let x = vec![1.0; 10];
+        let c = q.compress(&x, &mut rng);
+        let nonzero = c.decoded.iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(nonzero, 3);
+        for &v in &c.decoded {
+            assert!(v == 0.0 || (v - 10.0 / 3.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn topk_selects_largest() {
+        let q = TopK::new(2);
+        let mut rng = Rng::new(24);
+        let x = vec![0.1, -5.0, 0.3, 4.0, -0.2];
+        let c = q.compress(&x, &mut rng);
+        assert_eq!(c.decoded, vec![0.0, -5.0, 0.0, 4.0, 0.0]);
+        assert!(!q.is_unbiased());
+    }
+
+    #[test]
+    fn bit_accounting() {
+        let q = RandK::new(4);
+        let mut rng = Rng::new(25);
+        let c = q.compress(&vec![1.0; 256], &mut rng);
+        // 256 entries -> 8-bit indices, 4 × (8 + 32)
+        assert_eq!(c.bits, 4 * 40);
+    }
+
+    #[test]
+    fn k_larger_than_dim_is_identity() {
+        let q = RandK::new(100);
+        let mut rng = Rng::new(26);
+        let x = vec![1.0, 2.0, 3.0];
+        let c = q.compress(&x, &mut rng);
+        assert_eq!(c.decoded, x);
+    }
+}

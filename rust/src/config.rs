@@ -1,0 +1,354 @@
+//! Configuration system for the launcher: `key = value` files (INI-like,
+//! `#` comments) merged with `--key value` command-line overrides, so a
+//! training run is reproducible from one small text file.
+
+use crate::compress::{Compressor, Identity, InfNormQuantizer, L2NormQuantizer};
+use crate::coordinator::WireCodec;
+use crate::graph::{Graph, MixingRule, Topology};
+use crate::oracle::OracleKind;
+use crate::prox::{ElasticNet, Prox, Zero, L1};
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// All knobs of a training/experiment run, with §5-faithful defaults.
+#[derive(Clone, Debug)]
+pub struct Config {
+    // problem
+    pub nodes: usize,
+    pub samples_per_node: usize,
+    pub dim: usize,
+    pub classes: usize,
+    pub batches: usize,
+    pub lambda1: f64,
+    pub lambda2: f64,
+    pub separation: f64,
+    pub shuffled: bool,
+    // network
+    pub topology: String,
+    pub mixing: String,
+    pub er_prob: f64,
+    // algorithm
+    pub algorithm: String,
+    pub oracle: String,
+    pub lsvrg_p: f64,
+    pub bits: u32,
+    pub block: usize,
+    pub eta: f64,
+    pub alpha: f64,
+    pub gamma: f64,
+    // run
+    pub rounds: usize,
+    pub record_every: usize,
+    pub seed: u64,
+    pub backend: String,
+    pub out: String,
+    pub straggler_prob: f64,
+    pub straggler_us: u64,
+}
+
+impl Default for Config {
+    fn default() -> Config {
+        Config {
+            nodes: 8,
+            samples_per_node: 240,
+            dim: 64,
+            classes: 10,
+            batches: 15,
+            lambda1: 5e-3,
+            lambda2: 5e-3,
+            separation: 1.0,
+            shuffled: false,
+            topology: "ring".into(),
+            mixing: "uniform".into(),
+            er_prob: 0.4,
+            algorithm: "prox-lead".into(),
+            oracle: "full".into(),
+            lsvrg_p: 1.0 / 15.0,
+            bits: 2,
+            block: 256,
+            eta: 0.0, // 0 ⇒ auto: 1/(2L)
+            alpha: 0.5,
+            gamma: 1.0,
+            rounds: 500,
+            record_every: 10,
+            seed: 42,
+            backend: "native".into(),
+            out: String::new(),
+            straggler_prob: 0.0,
+            straggler_us: 0,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct ConfigError(pub String);
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl Config {
+    /// Parse `key = value` lines (`#`/`;` comments, blank lines ok).
+    pub fn parse(text: &str) -> Result<Config, ConfigError> {
+        let mut cfg = Config::default();
+        let mut map = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split(['#', ';']).next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| ConfigError(format!("line {}: expected key = value", lineno + 1)))?;
+            map.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        for (k, v) in map {
+            cfg.set(&k, &v)?;
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &str) -> Result<Config, ConfigError> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| ConfigError(format!("{path}: {e}")))?;
+        Config::parse(&text)
+    }
+
+    /// Apply one override (both file keys and CLI `--key value` route here).
+    pub fn set(&mut self, key: &str, val: &str) -> Result<(), ConfigError> {
+        fn p<T: std::str::FromStr>(key: &str, val: &str) -> Result<T, ConfigError> {
+            val.parse()
+                .map_err(|_| ConfigError(format!("bad value '{val}' for {key}")))
+        }
+        match key {
+            "nodes" => self.nodes = p(key, val)?,
+            "samples_per_node" | "samples" => self.samples_per_node = p(key, val)?,
+            "dim" => self.dim = p(key, val)?,
+            "classes" => self.classes = p(key, val)?,
+            "batches" => self.batches = p(key, val)?,
+            "lambda1" | "l1" => self.lambda1 = p(key, val)?,
+            "lambda2" | "l2" => self.lambda2 = p(key, val)?,
+            "separation" => self.separation = p(key, val)?,
+            "shuffled" => self.shuffled = p(key, val)?,
+            "topology" => self.topology = val.into(),
+            "mixing" => self.mixing = val.into(),
+            "er_prob" => self.er_prob = p(key, val)?,
+            "algorithm" => self.algorithm = val.into(),
+            "oracle" => self.oracle = val.into(),
+            "lsvrg_p" => self.lsvrg_p = p(key, val)?,
+            "bits" => self.bits = p(key, val)?,
+            "block" => self.block = p(key, val)?,
+            "eta" => self.eta = p(key, val)?,
+            "alpha" => self.alpha = p(key, val)?,
+            "gamma" => self.gamma = p(key, val)?,
+            "rounds" => self.rounds = p(key, val)?,
+            "record_every" => self.record_every = p(key, val)?,
+            "seed" => self.seed = p(key, val)?,
+            "backend" => self.backend = val.into(),
+            "out" => self.out = val.into(),
+            "straggler_prob" => self.straggler_prob = p(key, val)?,
+            "straggler_us" => self.straggler_us = p(key, val)?,
+            _ => return Err(ConfigError(format!("unknown key '{key}'"))),
+        }
+        Ok(())
+    }
+
+    // --- factories -------------------------------------------------------
+
+    pub fn topology(&self) -> Result<Graph, ConfigError> {
+        let mut rng = Rng::new(self.seed ^ 0x70_70);
+        let kind = match self.topology.as_str() {
+            "ring" => Topology::Ring,
+            "chain" => Topology::Chain,
+            "star" => Topology::Star,
+            "complete" => Topology::Complete,
+            "grid" => Topology::Grid,
+            "er" | "erdos-renyi" => {
+                // Graph::build uses a connectivity-safe default probability;
+                // honor an explicit er_prob via the direct constructor
+                let g = Graph::erdos_renyi(self.nodes, self.er_prob, &mut rng);
+                return Ok(g);
+            }
+            t => return Err(ConfigError(format!("unknown topology '{t}'"))),
+        };
+        Ok(Graph::build(kind, self.nodes, &mut rng))
+    }
+
+    pub fn mixing_rule(&self) -> Result<MixingRule, ConfigError> {
+        self.mixing.parse().map_err(ConfigError)
+    }
+
+    pub fn oracle_kind(&self) -> Result<OracleKind, ConfigError> {
+        Ok(match self.oracle.as_str() {
+            "full" => OracleKind::Full,
+            "sgd" => OracleKind::Sgd,
+            "lsvrg" => OracleKind::Lsvrg { p: self.lsvrg_p },
+            "saga" => OracleKind::Saga,
+            o => return Err(ConfigError(format!("unknown oracle '{o}'"))),
+        })
+    }
+
+    /// Compressor for the matrix engine. bits = 32/64 ⇒ dense identity.
+    pub fn compressor(&self) -> Result<Box<dyn Compressor>, ConfigError> {
+        Ok(match self.bits {
+            64 => Box::new(Identity::f64()),
+            32 => Box::new(Identity::f32()),
+            b if (2..=16).contains(&b) => Box::new(InfNormQuantizer::new(b, self.block)),
+            b => return Err(ConfigError(format!("bits must be 2..=16, 32 or 64 (got {b})"))),
+        })
+    }
+
+    /// QSGD-style comparator at the same bit budget (ablations).
+    pub fn l2_compressor(&self) -> Result<Box<dyn Compressor>, ConfigError> {
+        match self.bits {
+            b if (2..=16).contains(&b) => Ok(Box::new(L2NormQuantizer::new(b, self.block))),
+            b => Err(ConfigError(format!("qsgd bits must be 2..=16 (got {b})"))),
+        }
+    }
+
+    /// Wire codec for the message-passing coordinator.
+    pub fn codec(&self) -> Result<WireCodec, ConfigError> {
+        Ok(match self.bits {
+            64 => WireCodec::Dense64,
+            32 => WireCodec::Dense32,
+            b if (2..=16).contains(&b) => WireCodec::Quant(b, self.block),
+            b => return Err(ConfigError(format!("bits must be 2..=16, 32 or 64 (got {b})"))),
+        })
+    }
+
+    /// The shared non-smooth term r(x).
+    pub fn prox(&self) -> Box<dyn Prox> {
+        if self.lambda1 > 0.0 {
+            Box::new(L1::new(self.lambda1))
+        } else {
+            Box::new(Zero)
+        }
+    }
+
+    /// Elastic-net variant (λ₂ handled proximally instead of smoothly).
+    pub fn prox_elastic(&self) -> Box<dyn Prox> {
+        Box::new(ElasticNet::new(self.lambda1, self.lambda2))
+    }
+
+    pub fn blob_spec(&self) -> crate::problem::data::BlobSpec {
+        crate::problem::data::BlobSpec {
+            nodes: self.nodes,
+            samples_per_node: self.samples_per_node,
+            dim: self.dim,
+            classes: self.classes,
+            separation: self.separation,
+            noise: 1.0,
+            partition: if self.shuffled {
+                crate::problem::data::Partition::Shuffled
+            } else {
+                crate::problem::data::Partition::LabelSorted
+            },
+            seed: self.seed,
+        }
+    }
+
+    /// Render back to the file format (round-trips through `parse`).
+    pub fn to_text(&self) -> String {
+        format!(
+            "# prox-lead run configuration\n\
+             nodes = {}\nsamples_per_node = {}\ndim = {}\nclasses = {}\nbatches = {}\n\
+             lambda1 = {}\nlambda2 = {}\nseparation = {}\nshuffled = {}\n\
+             topology = {}\nmixing = {}\ner_prob = {}\n\
+             algorithm = {}\noracle = {}\nlsvrg_p = {}\n\
+             bits = {}\nblock = {}\neta = {}\nalpha = {}\ngamma = {}\n\
+             rounds = {}\nrecord_every = {}\nseed = {}\nbackend = {}\nout = {}\n\
+             straggler_prob = {}\nstraggler_us = {}\n",
+            self.nodes,
+            self.samples_per_node,
+            self.dim,
+            self.classes,
+            self.batches,
+            self.lambda1,
+            self.lambda2,
+            self.separation,
+            self.shuffled,
+            self.topology,
+            self.mixing,
+            self.er_prob,
+            self.algorithm,
+            self.oracle,
+            self.lsvrg_p,
+            self.bits,
+            self.block,
+            self.eta,
+            self.alpha,
+            self.gamma,
+            self.rounds,
+            self.record_every,
+            self.seed,
+            self.backend,
+            self.out,
+            self.straggler_prob,
+            self.straggler_us,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_section5() {
+        let c = Config::default();
+        assert_eq!(c.nodes, 8);
+        assert_eq!(c.batches, 15);
+        assert_eq!(c.bits, 2);
+        assert_eq!(c.block, 256);
+        assert_eq!(c.alpha, 0.5);
+        assert_eq!(c.gamma, 1.0);
+        assert_eq!(c.topology, "ring");
+    }
+
+    #[test]
+    fn parse_and_roundtrip() {
+        let text = "nodes = 4\n# comment\nbits=8\noracle = saga ; trailing\n";
+        let c = Config::parse(text).unwrap();
+        assert_eq!(c.nodes, 4);
+        assert_eq!(c.bits, 8);
+        assert_eq!(c.oracle, "saga");
+        let again = Config::parse(&c.to_text()).unwrap();
+        assert_eq!(again.nodes, c.nodes);
+        assert_eq!(again.bits, c.bits);
+        assert_eq!(again.oracle, c.oracle);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_values() {
+        assert!(Config::parse("warp_drive = on").is_err());
+        assert!(Config::parse("nodes = many").is_err());
+        assert!(Config::parse("just a line").is_err());
+    }
+
+    #[test]
+    fn factories_resolve() {
+        let mut c = Config::default();
+        c.nodes = 6;
+        let g = c.topology().unwrap();
+        assert_eq!(g.n, 6);
+        assert!(c.mixing_rule().is_ok());
+        assert!(matches!(c.oracle_kind().unwrap(), OracleKind::Full));
+        assert_eq!(c.compressor().unwrap().name(), "2bit");
+        assert_eq!(c.codec().unwrap().name(), "2bit");
+        c.bits = 32;
+        assert_eq!(c.codec().unwrap(), WireCodec::Dense32);
+        c.bits = 7;
+        assert!(c.codec().is_ok());
+        c.bits = 1;
+        assert!(c.codec().is_err());
+        // prox selection
+        assert_eq!(c.prox().name(), "l1(0.005)");
+        c.lambda1 = 0.0;
+        assert!(c.prox().is_zero());
+    }
+}

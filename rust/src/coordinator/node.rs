@@ -1,0 +1,156 @@
+//! Per-node Prox-LEAD state machine, run on its own thread.
+//!
+//! Vector form of Algorithm 1: the node holds (x, d, h, h_w), draws from
+//! its own single-node SGO, compresses z − h with the wire codec,
+//! broadcasts the frame to its neighbors, and combines their frames into
+//! the mixed estimate ẑ_w = h_w + Σⱼ w_ij q_j. The synchronous-round
+//! barrier: the node blocks until it holds one frame from every neighbor
+//! for the current round. A fast neighbor may already have sent its
+//! round-(k+1) frame while this node still collects round k (it only
+//! needed OUR round-k frame to advance, not our slow neighbor's), so
+//! ahead-of-round frames are buffered; behind-round frames indicate a
+//! protocol violation and panic.
+
+use super::wire::Frame;
+use super::{CoordConfig, NodeReport};
+use crate::linalg::matrix::vaxpy;
+use crate::linalg::Mat;
+use crate::oracle::Sgo;
+use crate::problem::Problem;
+use crate::prox::Prox;
+use crate::util::rng::Rng;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+
+pub struct NodeConfig {
+    pub id: usize,
+    pub self_weight: f64,
+    /// (neighbor id, w_ij, sender into the neighbor's inbox).
+    pub neighbors: Vec<(usize, f64, Sender<Vec<u8>>)>,
+    pub inbox: Receiver<Vec<u8>>,
+    pub reports: Sender<NodeReport>,
+    pub cfg: CoordConfig,
+}
+
+pub fn run_node(
+    problem: Arc<dyn Problem>,
+    prox: Arc<dyn Prox>,
+    x0_all: &Mat,
+    nc: NodeConfig,
+) {
+    let me = nc.id;
+    let p = problem.dim();
+    let cfg = &nc.cfg;
+    let (eta, alpha, gamma) = (cfg.eta, cfg.alpha, cfg.gamma);
+    // deterministic per-node streams: compression dither + straggler coin
+    let mut comp_rng = Rng::new(cfg.seed).fork(me as u64);
+    let mut fault_rng = Rng::new(cfg.seed ^ 0x5747_4C52).fork(me as u64);
+    let mut oracle = Sgo::for_node(cfg.oracle, problem.as_ref(), me, x0_all.row(me), cfg.seed.wrapping_add(me as u64));
+
+    // Algorithm 1 lines 1–3 (H¹ = X⁰; every node knows the common X⁰, so
+    // h_w = Σⱼ w_ij x⁰_j is computed locally without a startup exchange)
+    let mut x: Vec<f64> = x0_all.row(me).to_vec();
+    let mut h = x.clone();
+    let mut h_w = vec![0.0; p];
+    vaxpy(&mut h_w, nc.self_weight, x0_all.row(me));
+    for &(j, wij, _) in &nc.neighbors {
+        vaxpy(&mut h_w, wij, x0_all.row(j));
+    }
+    let mut g = vec![0.0; p];
+    oracle.sample(problem.as_ref(), me, &x.clone(), &mut g);
+    let mut z: Vec<f64> = x.iter().zip(&g).map(|(xi, gi)| xi - eta * gi).collect();
+    prox.prox(&mut z, eta);
+    x = z;
+    let mut d = vec![0.0; p];
+
+    let mut bytes_sent = 0u64;
+    let mut payload_bits = 0u64;
+    let mut diff = vec![0.0; p];
+    let mut z_buf = vec![0.0; p];
+    // frames from neighbors that are a round ahead of us
+    let mut future: std::collections::HashMap<u32, Vec<Frame>> = std::collections::HashMap::new();
+
+    for k in 0..cfg.rounds {
+        // line 5–6: z = x − η(g + d)
+        oracle.sample(problem.as_ref(), me, &x, &mut g);
+        for (((zb, &xi), &gi), &di) in z_buf.iter_mut().zip(&x).zip(&g).zip(&d) {
+            *zb = xi - eta * gi - eta * di;
+        }
+
+        // COMM: q = Q(z − h), broadcast the frame
+        for ((df, &zi), &hi) in diff.iter_mut().zip(&z_buf).zip(&h) {
+            *df = zi - hi;
+        }
+        let (payload, q_own, bits) = cfg.codec.encode(&diff, &mut comp_rng);
+        payload_bits += bits;
+        let frame = Frame { round: k as u32, from: me as u16, payload };
+        let buf = frame.to_bytes(&cfg.codec);
+        for &(_, _, ref tx) in &nc.neighbors {
+            if let Some(s) = cfg.straggler {
+                if fault_rng.bernoulli(s.prob) {
+                    std::thread::sleep(s.delay);
+                }
+            }
+            bytes_sent += buf.len() as u64;
+            tx.send(buf.clone()).expect("peer inbox closed");
+        }
+
+        // ẑ_w accumulation starts from own contribution
+        let mut wq = vec![0.0; p];
+        vaxpy(&mut wq, nc.self_weight, &q_own);
+        let mut got = 0usize;
+        let apply = |f: Frame, wq: &mut Vec<f64>| {
+            let q_j = cfg.codec.decode(&f.payload, p);
+            let wij = nc
+                .neighbors
+                .iter()
+                .find(|(j, _, _)| *j == f.from as usize)
+                .map(|(_, w, _)| *w)
+                .expect("frame from non-neighbor");
+            vaxpy(wq, wij, &q_j);
+        };
+        for f in future.remove(&(k as u32)).unwrap_or_default() {
+            apply(f, &mut wq);
+            got += 1;
+        }
+        while got < nc.neighbors.len() {
+            let raw = nc.inbox.recv().expect("inbox closed mid-round");
+            let (_, f) = Frame::from_bytes(&raw).expect("malformed frame");
+            if (f.round as usize) > k {
+                future.entry(f.round).or_default().push(f);
+            } else {
+                assert_eq!(f.round as usize, k, "stale frame from node {}", f.from);
+                apply(f, &mut wq);
+                got += 1;
+            }
+        }
+
+        // ẑ = h + q, ẑ_w = h_w + wq; update h, h_w; D/V/X updates
+        let coef = gamma / (2.0 * eta);
+        let mut v = vec![0.0; p];
+        for i in 0..p {
+            let z_hat = h[i] + q_own[i];
+            let zw_hat = h_w[i] + wq[i];
+            let resid = z_hat - zw_hat;
+            d[i] += coef * resid;
+            v[i] = z_buf[i] - 0.5 * gamma * resid;
+            h[i] += alpha * q_own[i];
+            h_w[i] += alpha * wq[i];
+        }
+        prox.prox(&mut v, eta);
+        x = v;
+
+        if (k + 1) % cfg.record_every == 0 || k + 1 == cfg.rounds {
+            nc.reports
+                .send(NodeReport {
+                    node: me,
+                    round: k + 1,
+                    x: x.clone(),
+                    bytes_sent,
+                    payload_bits,
+                    grad_evals: oracle.grad_evals(),
+                })
+                .expect("leader gone");
+        }
+    }
+}

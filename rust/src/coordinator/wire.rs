@@ -1,0 +1,180 @@
+//! Wire format for coordinator messages — real serialized bytes, so the
+//! communication-bit numbers come off an actual codec rather than a model.
+//!
+//! A round message carries one node's compressed COMM payload Qᵢ:
+//!
+//! ```text
+//! [u8 tag][u32 round][u16 from][u32 payload_len][payload…]
+//! ```
+//!
+//! Payload encodings:
+//! - tag 0 `DENSE64`: p×8 bytes little-endian f64 (identity compressor);
+//! - tag 1 `DENSE32`: p×4 bytes f32 (the "32bit" baselines);
+//! - tag 2 `QUANT`: the bit-packed ∞-norm quantizer stream of
+//!   [`crate::compress::bits::encode_inf_quantized`].
+//!
+//! Decoding is deterministic, so the sender-side decoded Qᵢ (needed for
+//! its own H update) and every receiver's decode agree bit-exactly — the
+//! property the COMM error compensation relies on.
+
+use crate::compress::bits::{decode_inf_quantized, encode_inf_quantized};
+use crate::util::rng::Rng;
+
+/// How a node's payload is put on the wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireCodec {
+    Dense64,
+    Dense32,
+    /// ∞-norm quantizer: (bits, block).
+    Quant(u32, usize),
+}
+
+impl WireCodec {
+    /// Encode `x`; returns (wire bytes, decoded values both sides agree
+    /// on, accounted payload bits).
+    pub fn encode(&self, x: &[f64], rng: &mut Rng) -> (Vec<u8>, Vec<f64>, u64) {
+        match *self {
+            WireCodec::Dense64 => {
+                let mut bytes = Vec::with_capacity(x.len() * 8);
+                for &v in x {
+                    bytes.extend_from_slice(&v.to_le_bytes());
+                }
+                (bytes, x.to_vec(), 64 * x.len() as u64)
+            }
+            WireCodec::Dense32 => {
+                let mut bytes = Vec::with_capacity(x.len() * 4);
+                let mut decoded = Vec::with_capacity(x.len());
+                for &v in x {
+                    let f = v as f32;
+                    bytes.extend_from_slice(&f.to_le_bytes());
+                    decoded.push(f as f64);
+                }
+                (bytes, decoded, 32 * x.len() as u64)
+            }
+            WireCodec::Quant(bits, block) => encode_inf_quantized(x, bits, block, rng),
+        }
+    }
+
+    pub fn decode(&self, bytes: &[u8], n: usize) -> Vec<f64> {
+        match *self {
+            WireCodec::Dense64 => bytes
+                .chunks_exact(8)
+                .take(n)
+                .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                .collect(),
+            WireCodec::Dense32 => bytes
+                .chunks_exact(4)
+                .take(n)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()) as f64)
+                .collect(),
+            WireCodec::Quant(bits, block) => decode_inf_quantized(bytes, n, bits, block),
+        }
+    }
+
+    fn tag(&self) -> u8 {
+        match self {
+            WireCodec::Dense64 => 0,
+            WireCodec::Dense32 => 1,
+            WireCodec::Quant(..) => 2,
+        }
+    }
+
+    /// Assumption-2 style noise bound (0 for the dense codecs).
+    pub fn is_lossy(&self) -> bool {
+        matches!(self, WireCodec::Quant(..))
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            WireCodec::Dense64 => "64bit".into(),
+            WireCodec::Dense32 => "32bit".into(),
+            WireCodec::Quant(b, _) => format!("{b}bit"),
+        }
+    }
+}
+
+/// One framed round message.
+#[derive(Clone, Debug)]
+pub struct Frame {
+    pub round: u32,
+    pub from: u16,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    /// Serialize header + payload into one buffer (what the socket of a
+    /// real deployment would carry).
+    pub fn to_bytes(&self, codec: &WireCodec) -> Vec<u8> {
+        let mut out = Vec::with_capacity(11 + self.payload.len());
+        out.push(codec.tag());
+        out.extend_from_slice(&self.round.to_le_bytes());
+        out.extend_from_slice(&self.from.to_le_bytes());
+        out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.payload);
+        out
+    }
+
+    pub fn from_bytes(buf: &[u8]) -> Option<(u8, Frame)> {
+        if buf.len() < 11 {
+            return None;
+        }
+        let tag = buf[0];
+        let round = u32::from_le_bytes(buf[1..5].try_into().ok()?);
+        let from = u16::from_le_bytes(buf[5..7].try_into().ok()?);
+        let len = u32::from_le_bytes(buf[7..11].try_into().ok()?) as usize;
+        if buf.len() < 11 + len {
+            return None;
+        }
+        Some((tag, Frame { round, from, payload: buf[11..11 + len].to_vec() }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_roundtrips_exact() {
+        let x = vec![1.5, -2.25, 1e-17, 3e8];
+        let mut rng = Rng::new(1);
+        let (bytes, decoded, bits) = WireCodec::Dense64.encode(&x, &mut rng);
+        assert_eq!(decoded, x);
+        assert_eq!(bits, 256);
+        assert_eq!(WireCodec::Dense64.decode(&bytes, 4), x);
+
+        let (bytes32, dec32, bits32) = WireCodec::Dense32.encode(&x, &mut rng);
+        assert_eq!(bits32, 128);
+        assert_eq!(WireCodec::Dense32.decode(&bytes32, 4), dec32);
+        assert!((dec32[1] - x[1]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn quant_sender_receiver_agree() {
+        let mut rng = Rng::new(2);
+        let x: Vec<f64> = (0..300).map(|_| rng.normal()).collect();
+        let codec = WireCodec::Quant(2, 256);
+        let (bytes, decoded, _) = codec.encode(&x, &mut rng);
+        let recv = codec.decode(&bytes, 300);
+        assert_eq!(decoded, recv, "sender/receiver decode divergence");
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        let codec = WireCodec::Quant(2, 256);
+        let f = Frame { round: 77, from: 3, payload: vec![1, 2, 3, 4, 5] };
+        let bytes = f.to_bytes(&codec);
+        let (tag, g) = Frame::from_bytes(&bytes).unwrap();
+        assert_eq!(tag, 2);
+        assert_eq!(g.round, 77);
+        assert_eq!(g.from, 3);
+        assert_eq!(g.payload, f.payload);
+    }
+
+    #[test]
+    fn frame_rejects_truncation() {
+        let f = Frame { round: 1, from: 0, payload: vec![9; 100] };
+        let bytes = f.to_bytes(&WireCodec::Dense64);
+        assert!(Frame::from_bytes(&bytes[..10]).is_none());
+        assert!(Frame::from_bytes(&bytes[..50]).is_none());
+    }
+}

@@ -1,0 +1,352 @@
+//! The synchronous matrix-form engine: drives any [`Algorithm`] for K
+//! rounds, applies stepsize schedules, and records the metric history
+//! behind every figure in §5 — suboptimality vs (rounds | epochs |
+//! gradient evaluations | communicated bits).
+//!
+//! The message-passing [`crate::coordinator`] is the "real" distributed
+//! runtime; this engine is the fast single-thread harness the benchmark
+//! suite sweeps with (identical arithmetic, verified by integration test).
+
+use crate::algorithm::{suboptimality, Algorithm, Schedule};
+use crate::linalg::Mat;
+use crate::problem::Problem;
+use std::time::Instant;
+
+/// One recorded metric sample.
+#[derive(Clone, Copy, Debug)]
+pub struct MetricPoint {
+    /// Round index (1-based after the step executes).
+    pub round: usize,
+    /// Cumulative batch-gradient evaluations across all nodes.
+    pub grad_evals: u64,
+    /// Cumulative communicated bits across all nodes.
+    pub bits: u64,
+    /// ‖Xᵏ − 1(x*)ᵀ‖²/n vs the reference solution.
+    pub suboptimality: f64,
+    /// Σᵢ ‖xᵢ − x̄‖² consensus error.
+    pub consensus: f64,
+    /// Wall-clock since run start.
+    pub wall_ns: u128,
+}
+
+/// Run controls.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub rounds: usize,
+    /// Sample the metrics every this many rounds (1 = every round).
+    pub record_every: usize,
+    /// Stop early once suboptimality falls below this.
+    pub target_subopt: Option<f64>,
+    /// Stepsize schedule applied before every round (Theorem 7 etc.).
+    pub schedule: Option<Schedule>,
+}
+
+impl RunConfig {
+    pub fn fixed(rounds: usize) -> RunConfig {
+        RunConfig { rounds, record_every: 1, target_subopt: None, schedule: None }
+    }
+
+    pub fn every(mut self, k: usize) -> RunConfig {
+        self.record_every = k.max(1);
+        self
+    }
+
+    pub fn until(mut self, subopt: f64) -> RunConfig {
+        self.target_subopt = Some(subopt);
+        self
+    }
+
+    pub fn with_schedule(mut self, s: Schedule) -> RunConfig {
+        self.schedule = Some(s);
+        self
+    }
+}
+
+/// The full trace of one algorithm run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub name: String,
+    pub history: Vec<MetricPoint>,
+    /// First round at which `target_subopt` was met (if requested and met).
+    pub rounds_to_target: Option<usize>,
+    pub final_x: Mat,
+}
+
+impl RunResult {
+    pub fn final_subopt(&self) -> f64 {
+        self.history.last().map(|m| m.suboptimality).or(None).unwrap_or(f64::NAN)
+    }
+
+    /// Series (x_metric, suboptimality) for the figure CSVs.
+    pub fn series(&self, x: XAxis) -> Vec<(f64, f64)> {
+        self.history
+            .iter()
+            .map(|m| {
+                let xv = match x {
+                    XAxis::Rounds => m.round as f64,
+                    XAxis::GradEvals => m.grad_evals as f64,
+                    XAxis::Bits => m.bits as f64,
+                    XAxis::Epochs(per_epoch) => m.grad_evals as f64 / per_epoch as f64,
+                };
+                (xv, m.suboptimality)
+            })
+            .collect()
+    }
+}
+
+/// Which x-axis a figure uses.
+#[derive(Clone, Copy, Debug)]
+pub enum XAxis {
+    Rounds,
+    GradEvals,
+    Bits,
+    /// Epochs = grad_evals / (n·m batch evals per epoch).
+    Epochs(u64),
+}
+
+/// Drive `alg` under `cfg`, measuring against `x_star`.
+pub fn run(
+    alg: &mut dyn Algorithm,
+    problem: &dyn Problem,
+    x_star: &[f64],
+    cfg: &RunConfig,
+) -> RunResult {
+    let start = Instant::now();
+    let mut history = Vec::with_capacity(cfg.rounds / cfg.record_every + 2);
+    let mut rounds_to_target = None;
+
+    // round-0 sample (post-initialization state)
+    history.push(MetricPoint {
+        round: 0,
+        grad_evals: alg.grad_evals(),
+        bits: alg.bits(),
+        suboptimality: suboptimality(alg.x(), x_star),
+        consensus: alg.x().consensus_error(),
+        wall_ns: 0,
+    });
+
+    for k in 0..cfg.rounds {
+        if let Some(s) = &cfg.schedule {
+            alg.apply_hyper(s.hyper_at(k as u64));
+        }
+        alg.step(problem);
+        let due = (k + 1) % cfg.record_every == 0 || k + 1 == cfg.rounds;
+        let mut subopt = f64::NAN;
+        if due || cfg.target_subopt.is_some() {
+            subopt = suboptimality(alg.x(), x_star);
+        }
+        if due {
+            history.push(MetricPoint {
+                round: k + 1,
+                grad_evals: alg.grad_evals(),
+                bits: alg.bits(),
+                suboptimality: subopt,
+                consensus: alg.x().consensus_error(),
+                wall_ns: start.elapsed().as_nanos(),
+            });
+        }
+        if let Some(t) = cfg.target_subopt {
+            if subopt < t {
+                rounds_to_target = Some(k + 1);
+                if !due {
+                    // make sure the stopping state is in the history
+                    history.push(MetricPoint {
+                        round: k + 1,
+                        grad_evals: alg.grad_evals(),
+                        bits: alg.bits(),
+                        suboptimality: subopt,
+                        consensus: alg.x().consensus_error(),
+                        wall_ns: start.elapsed().as_nanos(),
+                    });
+                }
+                break;
+            }
+        }
+        if !alg.x().is_finite() {
+            break; // diverged — history records how far it got
+        }
+    }
+
+    RunResult { name: alg.name(), history, rounds_to_target, final_x: alg.x().clone() }
+}
+
+/// Convenience: rounds needed to hit `target`, or None within the budget.
+pub fn rounds_to(
+    alg: &mut dyn Algorithm,
+    problem: &dyn Problem,
+    x_star: &[f64],
+    target: f64,
+    budget: usize,
+) -> Option<usize> {
+    let cfg = RunConfig::fixed(budget).every(budget.max(1)).until(target);
+    run(alg, problem, x_star, &cfg).rounds_to_target
+}
+
+#[cfg(test)]
+mod tests {
+    //! Theorem-level integration tests: the behaviors Theorems 5, 7, 8, 9
+    //! promise, observed end-to-end through the engine.
+    use super::*;
+    use crate::algorithm::testkit::{ring_logreg, safe_eta};
+    use crate::algorithm::{solve_reference, Hyper, ProxLead, Schedule};
+    use crate::compress::{Identity, InfNormQuantizer};
+    use crate::linalg::Spectrum;
+    use crate::oracle::OracleKind;
+    use crate::problem::Problem;
+    use crate::prox::{Zero, L1};
+    use crate::util::stats::loglinear_slope;
+
+    fn quantizer() -> Box<InfNormQuantizer> {
+        Box::new(InfNormQuantizer::new(2, 256))
+    }
+
+    #[test]
+    fn thm5_sgd_linear_to_noise_neighborhood() {
+        // fixed stepsize + SGD: fast early progress, then a plateau whose
+        // level scales with η² (Theorem 5's 2η²σ²/(1−ρ) ball)
+        let (p, w) = ring_logreg();
+        let x_star = solve_reference(&p, 0.0, 40_000, 1e-13);
+        let x0 = Mat::zeros(4, p.dim());
+        let plateau = |eta: f64| {
+            let mut alg = ProxLead::new(
+                &p,
+                &w,
+                &x0,
+                Hyper::paper_default(eta),
+                OracleKind::Sgd,
+                quantizer(),
+                Box::new(Zero),
+                5,
+            );
+            let res = run(&mut alg, &p, &x_star, &RunConfig::fixed(4000).every(50));
+            // average the tail — the noise ball level
+            let tail: Vec<f64> =
+                res.history.iter().rev().take(20).map(|m| m.suboptimality).collect();
+            crate::util::stats::mean(&tail)
+        };
+        let big = plateau(0.04);
+        let small = plateau(0.01);
+        assert!(big > small * 2.0, "noise ball should shrink with η: {big} vs {small}");
+        assert!(big.is_finite() && small > 0.0);
+    }
+
+    #[test]
+    fn thm7_diminishing_stepsize_beats_fixed_sgd() {
+        let (p, w) = ring_logreg();
+        let x_star = solve_reference(&p, 0.0, 40_000, 1e-13);
+        let x0 = Mat::zeros(4, p.dim());
+        let spec = Spectrum::of_mixing(&w);
+        let c = 0.2; // empirical 2-bit NSR on these dimensions
+        let mk = || {
+            ProxLead::new(
+                &p,
+                &w,
+                &x0,
+                Hyper::paper_default(safe_eta(&p)),
+                OracleKind::Sgd,
+                quantizer(),
+                Box::new(Zero),
+                5,
+            )
+        };
+        let schedule = Schedule::Theorem7 {
+            c,
+            l: p.smoothness(),
+            mu: p.strong_convexity(),
+            kappa_g: spec.kappa_g(),
+            lmax_iw: spec.lam_max,
+        };
+        let rounds = 20_000;
+        let mut fixed = mk();
+        let fixed_res = run(&mut fixed, &p, &x_star, &RunConfig::fixed(rounds).every(500));
+        let mut dim = mk();
+        let dim_res = run(
+            &mut dim,
+            &p,
+            &x_star,
+            &RunConfig::fixed(rounds).every(500).with_schedule(schedule),
+        );
+        let f_final = fixed_res.final_subopt();
+        let d_final = dim_res.final_subopt();
+        assert!(
+            d_final < f_final * 0.5,
+            "Theorem 7 schedule should beat the fixed-η noise ball: {d_final} vs {f_final}"
+        );
+    }
+
+    #[test]
+    fn thm8_9_variance_reduction_linear_rate() {
+        // LSVRG and SAGA traces must decay log-linearly (linear convergence)
+        let (p, w) = ring_logreg();
+        let x_star = solve_reference(&p, 5e-3, 40_000, 1e-13);
+        let x0 = Mat::zeros(4, p.dim());
+        for kind in [OracleKind::Lsvrg { p: 0.25 }, OracleKind::Saga] {
+            let mut alg = ProxLead::new(
+                &p,
+                &w,
+                &x0,
+                Hyper::paper_default(1.0 / (6.0 * p.smoothness())),
+                kind,
+                quantizer(),
+                Box::new(L1::new(5e-3)),
+                5,
+            );
+            let res = run(&mut alg, &p, &x_star, &RunConfig::fixed(8000).every(200));
+            let ys: Vec<f64> =
+                res.history.iter().map(|m| m.suboptimality).filter(|s| *s > 1e-20).collect();
+            let slope = loglinear_slope(&ys);
+            assert!(slope < -0.1, "{:?} trace should be log-linear, slope {slope}", kind);
+            assert!(res.final_subopt() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn early_stop_reports_rounds_to_target() {
+        let (p, w) = ring_logreg();
+        let x_star = solve_reference(&p, 0.0, 40_000, 1e-13);
+        let x0 = Mat::zeros(4, p.dim());
+        let mut alg = ProxLead::new(
+            &p,
+            &w,
+            &x0,
+            Hyper::paper_default(safe_eta(&p)),
+            OracleKind::Full,
+            Box::new(Identity::f64()),
+            Box::new(Zero),
+            5,
+        );
+        let res = run(&mut alg, &p, &x_star, &RunConfig::fixed(5000).until(1e-8));
+        let hit = res.rounds_to_target.expect("should reach 1e-8");
+        assert!(hit < 2000, "took {hit} rounds");
+        // monotone bookkeeping: bits and grad evals nondecreasing
+        for w in res.history.windows(2) {
+            assert!(w[1].bits >= w[0].bits);
+            assert!(w[1].grad_evals >= w[0].grad_evals);
+        }
+    }
+
+    #[test]
+    fn record_every_thins_history() {
+        let (p, w) = ring_logreg();
+        let x_star = vec![0.0; p.dim()];
+        let x0 = Mat::zeros(4, p.dim());
+        let mut alg = ProxLead::new(
+            &p,
+            &w,
+            &x0,
+            Hyper::paper_default(0.01),
+            OracleKind::Full,
+            Box::new(Identity::f64()),
+            Box::new(Zero),
+            5,
+        );
+        let res = run(&mut alg, &p, &x_star, &RunConfig::fixed(100).every(10));
+        assert_eq!(res.history.len(), 11); // round 0 + 10 samples
+        assert_eq!(res.history.last().unwrap().round, 100);
+        // series x-axis extraction
+        let pts = res.series(XAxis::Rounds);
+        assert_eq!(pts[1].0, 10.0);
+        let bits = res.series(XAxis::Bits);
+        assert!(bits.last().unwrap().0 > 0.0);
+    }
+}

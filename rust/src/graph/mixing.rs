@@ -1,0 +1,204 @@
+//! Mixing matrix construction (the W of Assumption 1).
+//!
+//! W must be symmetric, W1 = 1, supported on the graph's edges, and have
+//! eigenvalues in (−1, 1] with λ₁ = 1 simple. The paper's experiments use a
+//! ring with uniform weight 1/3 (self + two neighbors); we also provide
+//! Metropolis–Hastings (valid for any graph) and its "lazy" damped variant.
+
+use super::topology::Graph;
+use crate::linalg::{Mat, Spectrum};
+
+/// Weighting schemes for building W from a graph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MixingRule {
+    /// w_ij = 1/(deg_max + 1) for edges, diagonal absorbs the rest.
+    /// Equals the paper's ring-1/3 on a ring (deg_max = 2).
+    UniformMaxDegree,
+    /// Metropolis–Hastings: w_ij = 1/(1 + max(deg_i, deg_j)).
+    Metropolis,
+    /// (I + W_mh)/2 — guarantees eigenvalues in [0, 1] (positive
+    /// semidefinite), halving the spectral gap.
+    LazyMetropolis,
+}
+
+impl std::str::FromStr for MixingRule {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "uniform" | "max-degree" => Ok(MixingRule::UniformMaxDegree),
+            "metropolis" | "mh" => Ok(MixingRule::Metropolis),
+            "lazy" | "lazy-metropolis" => Ok(MixingRule::LazyMetropolis),
+            _ => Err(format!("unknown mixing rule '{s}'")),
+        }
+    }
+}
+
+/// Build the mixing matrix for `g` under `rule`.
+pub fn mixing_matrix(g: &Graph, rule: MixingRule) -> Mat {
+    let n = g.n;
+    let mut w = Mat::zeros(n, n);
+    match rule {
+        MixingRule::UniformMaxDegree => {
+            let weight = 1.0 / (g.max_degree() as f64 + 1.0);
+            for i in 0..n {
+                for &j in &g.adj[i] {
+                    w[(i, j)] = weight;
+                }
+                w[(i, i)] = 1.0 - weight * g.degree(i) as f64;
+            }
+        }
+        MixingRule::Metropolis | MixingRule::LazyMetropolis => {
+            for i in 0..n {
+                let mut row_sum = 0.0;
+                for &j in &g.adj[i] {
+                    let wij = 1.0 / (1.0 + g.degree(i).max(g.degree(j)) as f64);
+                    w[(i, j)] = wij;
+                    row_sum += wij;
+                }
+                w[(i, i)] = 1.0 - row_sum;
+            }
+            if rule == MixingRule::LazyMetropolis {
+                for i in 0..n {
+                    for j in 0..n {
+                        w[(i, j)] *= 0.5;
+                    }
+                    w[(i, i)] += 0.5;
+                }
+            }
+        }
+    }
+    w
+}
+
+/// Validate Assumption 1: symmetry, row-stochasticity, edge support,
+/// eigenvalues in (−1, 1] with λ₁ = 1 simple. Returns the spectrum on
+/// success so callers can reuse it.
+pub fn validate_mixing(w: &Mat, g: &Graph) -> Result<Spectrum, String> {
+    let n = g.n;
+    if w.rows != n || w.cols != n {
+        return Err(format!("W is {}x{}, graph has {n} nodes", w.rows, w.cols));
+    }
+    for i in 0..n {
+        for j in 0..n {
+            if (w[(i, j)] - w[(j, i)]).abs() > 1e-12 {
+                return Err(format!("W not symmetric at ({i},{j})"));
+            }
+            if i != j && w[(i, j)].abs() > 1e-12 && !g.has_edge(i, j) {
+                return Err(format!("W has weight on non-edge ({i},{j})"));
+            }
+        }
+        let row_sum: f64 = w.row(i).iter().sum();
+        if (row_sum - 1.0).abs() > 1e-10 {
+            return Err(format!("row {i} sums to {row_sum}, not 1"));
+        }
+    }
+    let spec = Spectrum::of_mixing(w);
+    if (spec.w_eigs[0] - 1.0).abs() > 1e-8 {
+        return Err(format!("largest eigenvalue {} != 1", spec.w_eigs[0]));
+    }
+    if n > 1 && spec.w_eigs[1] > 1.0 - 1e-10 {
+        return Err("λ₂(W) = 1: graph disconnected or λ₁ not simple".into());
+    }
+    if spec.w_eigs[n - 1] <= -1.0 + 1e-12 {
+        return Err(format!("smallest eigenvalue {} ≤ −1", spec.w_eigs[n - 1]));
+    }
+    Ok(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topology::Topology;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ring_uniform_is_one_third() {
+        // the paper's setting: 8-node ring, mixing weight 1/3
+        let g = Graph::ring(8);
+        let w = mixing_matrix(&g, MixingRule::UniformMaxDegree);
+        assert!((w[(0, 1)] - 1.0 / 3.0).abs() < 1e-15);
+        assert!((w[(0, 7)] - 1.0 / 3.0).abs() < 1e-15);
+        assert!((w[(0, 0)] - 1.0 / 3.0).abs() < 1e-15);
+        assert_eq!(w[(0, 2)], 0.0);
+        validate_mixing(&w, &g).expect("valid mixing");
+    }
+
+    #[test]
+    fn all_rules_valid_on_all_topologies() {
+        let mut rng = Rng::new(1);
+        for kind in [
+            Topology::Ring,
+            Topology::Chain,
+            Topology::Star,
+            Topology::Complete,
+            Topology::Grid,
+            Topology::ErdosRenyi,
+        ] {
+            let n = if kind == Topology::Grid { 9 } else { 8 };
+            let g = Graph::build(kind, n, &mut rng);
+            for rule in [
+                MixingRule::UniformMaxDegree,
+                MixingRule::Metropolis,
+                MixingRule::LazyMetropolis,
+            ] {
+                let w = mixing_matrix(&g, rule);
+                validate_mixing(&w, &g)
+                    .unwrap_or_else(|e| panic!("{kind:?}/{rule:?}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn lazy_metropolis_psd() {
+        let g = Graph::chain(6);
+        let w = mixing_matrix(&g, MixingRule::LazyMetropolis);
+        let spec = validate_mixing(&w, &g).unwrap();
+        assert!(
+            spec.w_eigs.iter().all(|&l| l >= -1e-12),
+            "lazy MH must be PSD, got {:?}",
+            spec.w_eigs
+        );
+    }
+
+    #[test]
+    fn kappa_g_ordering() {
+        // complete graph mixes fastest; chain slowest
+        let wc = mixing_matrix(&Graph::complete(8), MixingRule::Metropolis);
+        let wr = mixing_matrix(&Graph::ring(8), MixingRule::Metropolis);
+        let wh = mixing_matrix(&Graph::chain(8), MixingRule::Metropolis);
+        let kc = Spectrum::of_mixing(&wc).kappa_g();
+        let kr = Spectrum::of_mixing(&wr).kappa_g();
+        let kh = Spectrum::of_mixing(&wh).kappa_g();
+        assert!(kc < kr && kr < kh, "kappa_g: {kc} {kr} {kh}");
+    }
+
+    #[test]
+    fn validate_rejects_asymmetric() {
+        let g = Graph::ring(4);
+        let mut w = mixing_matrix(&g, MixingRule::UniformMaxDegree);
+        w[(0, 1)] += 0.01;
+        assert!(validate_mixing(&w, &g).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_nonedge_weight() {
+        let g = Graph::ring(6);
+        let mut w = mixing_matrix(&g, MixingRule::UniformMaxDegree);
+        // move weight onto a chord (0,3): symmetric + row sums preserved
+        w[(0, 3)] = 0.1;
+        w[(3, 0)] = 0.1;
+        w[(0, 0)] -= 0.1;
+        w[(3, 3)] -= 0.1;
+        assert!(validate_mixing(&w, &g).is_err());
+    }
+
+    #[test]
+    fn mixing_preserves_consensus() {
+        // W applied to a consensual matrix must be a fixed point
+        let g = Graph::ring(8);
+        let w = mixing_matrix(&g, MixingRule::UniformMaxDegree);
+        let x = Mat::broadcast_row(8, &[2.5, -1.0, 0.0]);
+        let wx = w.matmul(&x);
+        assert!(wx.dist_sq(&x) < 1e-24);
+    }
+}

@@ -1,0 +1,7 @@
+//! Network graphs and mixing matrices (Assumption 1 of the paper).
+
+pub mod mixing;
+pub mod topology;
+
+pub use mixing::{mixing_matrix, validate_mixing, MixingRule};
+pub use topology::{Graph, Topology};

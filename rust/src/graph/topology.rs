@@ -1,0 +1,262 @@
+//! Communication network topologies (the graph G of Assumption 1).
+//!
+//! A [`Graph`] is an undirected simple graph over nodes 0..n. The paper's
+//! experiments use an 8-node ring; we provide the standard families used in
+//! the decentralized-optimization literature so κ_g can be swept in the
+//! complexity benchmarks (Table 2 / Table 3).
+
+use crate::util::rng::Rng;
+use std::collections::BTreeSet;
+
+/// Undirected graph with adjacency sets.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub n: usize,
+    /// adj[i] = sorted neighbor ids of node i (no self-loops).
+    pub adj: Vec<Vec<usize>>,
+}
+
+/// Named topology families for configs / CLI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    Ring,
+    Chain,
+    Star,
+    Complete,
+    /// 2-D torus grid (n must be a perfect square).
+    Grid,
+    /// Erdős–Rényi G(n, prob), re-sampled until connected.
+    ErdosRenyi,
+}
+
+impl std::str::FromStr for Topology {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "ring" => Ok(Topology::Ring),
+            "chain" | "path" => Ok(Topology::Chain),
+            "star" => Ok(Topology::Star),
+            "complete" | "full" => Ok(Topology::Complete),
+            "grid" | "torus" => Ok(Topology::Grid),
+            "er" | "erdos-renyi" => Ok(Topology::ErdosRenyi),
+            _ => Err(format!("unknown topology '{s}'")),
+        }
+    }
+}
+
+impl Graph {
+    fn from_edges(n: usize, edges: impl IntoIterator<Item = (usize, usize)>) -> Graph {
+        let mut sets: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); n];
+        for (a, b) in edges {
+            assert!(a < n && b < n && a != b, "bad edge ({a},{b}) for n={n}");
+            sets[a].insert(b);
+            sets[b].insert(a);
+        }
+        Graph {
+            n,
+            adj: sets.into_iter().map(|s| s.into_iter().collect()).collect(),
+        }
+    }
+
+    /// Build a named topology. `rng` is only used by Erdős–Rényi.
+    pub fn build(kind: Topology, n: usize, rng: &mut Rng) -> Graph {
+        match kind {
+            Topology::Ring => Graph::ring(n),
+            Topology::Chain => Graph::chain(n),
+            Topology::Star => Graph::star(n),
+            Topology::Complete => Graph::complete(n),
+            Topology::Grid => Graph::grid(n),
+            Topology::ErdosRenyi => Graph::erdos_renyi(n, (2.0 * (n as f64).ln() / n as f64).min(0.8), rng),
+        }
+    }
+
+    pub fn ring(n: usize) -> Graph {
+        assert!(n >= 3, "ring needs n >= 3");
+        Graph::from_edges(n, (0..n).map(|i| (i, (i + 1) % n)))
+    }
+
+    pub fn chain(n: usize) -> Graph {
+        assert!(n >= 2);
+        Graph::from_edges(n, (0..n - 1).map(|i| (i, i + 1)))
+    }
+
+    pub fn star(n: usize) -> Graph {
+        assert!(n >= 2);
+        Graph::from_edges(n, (1..n).map(|i| (0, i)))
+    }
+
+    pub fn complete(n: usize) -> Graph {
+        assert!(n >= 2);
+        Graph::from_edges(n, (0..n).flat_map(|i| ((i + 1)..n).map(move |j| (i, j))))
+    }
+
+    /// 2-D torus: n must be a perfect square k×k; wraps both dimensions.
+    pub fn grid(n: usize) -> Graph {
+        let k = (n as f64).sqrt().round() as usize;
+        assert_eq!(k * k, n, "grid needs a perfect square n");
+        assert!(k >= 2);
+        let id = |r: usize, c: usize| r * k + c;
+        let mut edges = Vec::new();
+        for r in 0..k {
+            for c in 0..k {
+                edges.push((id(r, c), id(r, (c + 1) % k)));
+                edges.push((id(r, c), id((r + 1) % k, c)));
+            }
+        }
+        // k = 2 wraps create duplicate edges; from_edges dedups via sets
+        Graph::from_edges(n, edges.into_iter().filter(|(a, b)| a != b))
+    }
+
+    /// Erdős–Rényi, re-sampled until connected (expected O(1) tries above
+    /// the connectivity threshold).
+    pub fn erdos_renyi(n: usize, prob: f64, rng: &mut Rng) -> Graph {
+        assert!(n >= 2);
+        for _attempt in 0..1000 {
+            let mut edges = Vec::new();
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    if rng.bernoulli(prob) {
+                        edges.push((i, j));
+                    }
+                }
+            }
+            let g = Graph::from_edges(n, edges);
+            if g.is_connected() {
+                return g;
+            }
+        }
+        panic!("could not sample a connected G({n},{prob}) in 1000 tries");
+    }
+
+    pub fn degree(&self, i: usize) -> usize {
+        self.adj[i].len()
+    }
+
+    pub fn max_degree(&self) -> usize {
+        self.adj.iter().map(|a| a.len()).max().unwrap_or(0)
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.adj.iter().map(|a| a.len()).sum::<usize>() / 2
+    }
+
+    pub fn edges(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::with_capacity(self.num_edges());
+        for i in 0..self.n {
+            for &j in &self.adj[i] {
+                if j > i {
+                    out.push((i, j));
+                }
+            }
+        }
+        out
+    }
+
+    pub fn has_edge(&self, a: usize, b: usize) -> bool {
+        self.adj[a].binary_search(&b).is_ok()
+    }
+
+    /// BFS connectivity check (Assumption 1 requires a connected graph).
+    pub fn is_connected(&self) -> bool {
+        if self.n == 0 {
+            return true;
+        }
+        let mut seen = vec![false; self.n];
+        let mut queue = vec![0usize];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(u) = queue.pop() {
+            for &v in &self.adj[u] {
+                if !seen[v] {
+                    seen[v] = true;
+                    count += 1;
+                    queue.push(v);
+                }
+            }
+        }
+        count == self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_structure() {
+        let g = Graph::ring(8);
+        assert_eq!(g.n, 8);
+        assert_eq!(g.num_edges(), 8);
+        assert!(g.adj.iter().all(|a| a.len() == 2));
+        assert!(g.has_edge(0, 7));
+        assert!(g.has_edge(0, 1));
+        assert!(!g.has_edge(0, 2));
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn chain_and_star() {
+        let c = Graph::chain(5);
+        assert_eq!(c.num_edges(), 4);
+        assert!(c.is_connected());
+        let s = Graph::star(6);
+        assert_eq!(s.degree(0), 5);
+        assert!(s.adj[1..].iter().all(|a| a == &vec![0]));
+    }
+
+    #[test]
+    fn complete_graph() {
+        let g = Graph::complete(6);
+        assert_eq!(g.num_edges(), 15);
+        assert_eq!(g.max_degree(), 5);
+    }
+
+    #[test]
+    fn grid_torus() {
+        let g = Graph::grid(9);
+        assert!(g.is_connected());
+        assert!(g.adj.iter().all(|a| a.len() == 4), "3x3 torus is 4-regular");
+        let g2 = Graph::grid(4); // 2x2 torus: wraps dedup to 4 edges
+        assert!(g2.is_connected());
+    }
+
+    #[test]
+    #[should_panic(expected = "perfect square")]
+    fn grid_requires_square() {
+        let _ = Graph::grid(7);
+    }
+
+    #[test]
+    fn erdos_renyi_connected() {
+        let mut rng = Rng::new(3);
+        for _ in 0..5 {
+            let g = Graph::erdos_renyi(20, 0.25, &mut rng);
+            assert!(g.is_connected());
+            assert_eq!(g.n, 20);
+        }
+    }
+
+    #[test]
+    fn edges_listing_consistent() {
+        let g = Graph::ring(5);
+        let es = g.edges();
+        assert_eq!(es.len(), 5);
+        for (a, b) in es {
+            assert!(g.has_edge(a, b) && g.has_edge(b, a));
+            assert!(a < b);
+        }
+    }
+
+    #[test]
+    fn disconnected_detected() {
+        let g = Graph::from_edges(4, [(0, 1), (2, 3)]);
+        assert!(!g.is_connected());
+    }
+
+    #[test]
+    fn topology_parse() {
+        assert_eq!("ring".parse::<Topology>().unwrap(), Topology::Ring);
+        assert_eq!("full".parse::<Topology>().unwrap(), Topology::Complete);
+        assert!("moebius".parse::<Topology>().is_err());
+    }
+}

@@ -1,0 +1,243 @@
+//! Symmetric eigensolver (cyclic Jacobi) and derived spectral utilities.
+//!
+//! Needed for Assumption 1 checks and the theory-driven parameter choices:
+//! λ_max(I−W), λ_min⁺(I−W) (smallest *nonzero* eigenvalue), the network
+//! condition number κ_g, and (I−W)† norms used by the potential function
+//! Φᵏ in the convergence tests.
+
+use super::matrix::Mat;
+
+/// Full symmetric eigendecomposition via cyclic Jacobi rotations.
+/// Returns eigenvalues sorted descending and the matching eigenvectors as
+/// *columns* of the returned matrix. Suitable for the small (n ≤ a few
+/// hundred) mixing matrices we work with.
+pub fn sym_eigen(a: &Mat) -> (Vec<f64>, Mat) {
+    assert_eq!(a.rows, a.cols, "sym_eigen needs a square matrix");
+    let n = a.rows;
+    let mut m = a.clone();
+    let mut v = Mat::eye(n);
+    let max_sweeps = 100;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() < 1e-14 * (1.0 + m.norm()) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (1.0 + theta * theta).sqrt())
+                } else {
+                    -1.0 / (-theta + (1.0 + theta * theta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // rotate rows/cols p,q of m
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                // accumulate eigenvectors
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let mut eig: Vec<(f64, usize)> = (0..n).map(|i| (m[(i, i)], i)).collect();
+    eig.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let vals: Vec<f64> = eig.iter().map(|e| e.0).collect();
+    let mut vecs = Mat::zeros(n, n);
+    for (new_col, &(_, old_col)) in eig.iter().enumerate() {
+        for k in 0..n {
+            vecs[(k, new_col)] = v[(k, old_col)];
+        }
+    }
+    (vals, vecs)
+}
+
+/// Spectral data of a mixing matrix W needed by the algorithms' theory.
+#[derive(Clone, Debug)]
+pub struct Spectrum {
+    /// Eigenvalues of W, descending (λ₁ = 1 for a valid mixing matrix).
+    pub w_eigs: Vec<f64>,
+    /// λ_max(I − W) = 1 − λ_n(W).
+    pub lam_max: f64,
+    /// λ_min⁺(I − W): smallest nonzero eigenvalue = 1 − λ₂(W).
+    pub lam_min_pos: f64,
+}
+
+impl Spectrum {
+    pub fn of_mixing(w: &Mat) -> Spectrum {
+        let (eigs, _) = sym_eigen(w);
+        let n = eigs.len();
+        let lam_max = 1.0 - eigs[n - 1];
+        let lam_min_pos = 1.0 - eigs[1.min(n - 1)];
+        Spectrum {
+            w_eigs: eigs,
+            lam_max,
+            lam_min_pos,
+        }
+    }
+
+    /// Network condition number κ_g = λ_max(I−W) / λ_min⁺(I−W).
+    pub fn kappa_g(&self) -> f64 {
+        self.lam_max / self.lam_min_pos
+    }
+
+    /// Spectral gap 1 − |λ₂| used by gossip-style analyses (Choco).
+    pub fn spectral_gap(&self) -> f64 {
+        let n = self.w_eigs.len();
+        let rho = self.w_eigs[1.min(n - 1)]
+            .abs()
+            .max(self.w_eigs[n - 1].abs());
+        1.0 - rho
+    }
+}
+
+/// ‖M‖²_{(I−W)†} = ⟨M, (I−W)† M⟩: the weighted norm of the dual variable in
+/// the potential function Φᵏ. Computed via the eigendecomposition of W.
+pub struct PinvNorm {
+    vecs: Mat,          // eigenvectors of W (columns)
+    inv_vals: Vec<f64>, // 1/λᵢ(I−W) for nonzero λ, else 0
+}
+
+impl PinvNorm {
+    pub fn new(w: &Mat) -> PinvNorm {
+        let (vals, vecs) = sym_eigen(w);
+        let inv_vals: Vec<f64> = vals
+            .iter()
+            .map(|&lw| {
+                let l = 1.0 - lw;
+                if l.abs() < 1e-10 {
+                    0.0
+                } else {
+                    1.0 / l
+                }
+            })
+            .collect();
+        PinvNorm { vecs, inv_vals }
+    }
+
+    /// ⟨M, (I−W)† M⟩ for an n×p matrix M.
+    pub fn norm_sq(&self, m: &Mat) -> f64 {
+        // project each column of M onto the eigenbasis: Y = Vᵀ M
+        let y = self.vecs.t_matmul(m);
+        let mut total = 0.0;
+        for i in 0..y.rows {
+            let wgt = self.inv_vals[i];
+            if wgt == 0.0 {
+                continue;
+            }
+            let row = y.row(i);
+            total += wgt * row.iter().map(|x| x * x).sum::<f64>();
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_sym(rng: &mut Rng, n: usize) -> Mat {
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let v = rng.normal();
+                a[(i, j)] = v;
+                a[(j, i)] = v;
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn diagonal_matrix_eigs() {
+        let mut a = Mat::zeros(3, 3);
+        a[(0, 0)] = 3.0;
+        a[(1, 1)] = -1.0;
+        a[(2, 2)] = 2.0;
+        let (vals, _) = sym_eigen(&a);
+        assert!((vals[0] - 3.0).abs() < 1e-10);
+        assert!((vals[1] - 2.0).abs() < 1e-10);
+        assert!((vals[2] + 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn eigen_reconstruction() {
+        let mut rng = Rng::new(4);
+        for n in [2, 5, 10, 20] {
+            let a = random_sym(&mut rng, n);
+            let (vals, vecs) = sym_eigen(&a);
+            // A V = V Λ
+            let av = a.matmul(&vecs);
+            let mut vl = vecs.clone();
+            for i in 0..n {
+                for j in 0..n {
+                    vl[(i, j)] *= vals[j];
+                }
+            }
+            assert!(av.dist_sq(&vl) < 1e-16 * (1.0 + a.norm_sq()) * n as f64, "n={n}");
+            // V orthonormal
+            let vtv = vecs.t_matmul(&vecs);
+            assert!(vtv.dist_sq(&Mat::eye(n)) < 1e-18 * n as f64 * n as f64);
+        }
+    }
+
+    #[test]
+    fn eigenvalue_trace_invariant() {
+        let mut rng = Rng::new(5);
+        let a = random_sym(&mut rng, 8);
+        let (vals, _) = sym_eigen(&a);
+        let trace: f64 = (0..8).map(|i| a[(i, i)]).sum();
+        assert!((vals.iter().sum::<f64>() - trace).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pinv_norm_on_known_matrix() {
+        // W for a 2-node graph with weight 1/2: I−W = [[.5,-.5],[-.5,.5]],
+        // eigenvalues {0, 1}; pinv has eigenvalue 1 on span{(1,-1)/√2}.
+        let w = Mat::from_vec(2, 2, vec![0.5, 0.5, 0.5, 0.5]);
+        let pn = PinvNorm::new(&w);
+        // m = (1,-1)ᵀ lies in the nonzero eigenspace with λ(I−W)=1
+        let m = Mat::from_vec(2, 1, vec![1.0, -1.0]);
+        assert!((pn.norm_sq(&m) - 2.0).abs() < 1e-10);
+        // consensual component is annihilated
+        let ones = Mat::from_vec(2, 1, vec![1.0, 1.0]);
+        assert!(pn.norm_sq(&ones).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spectrum_of_two_node_mixing() {
+        let w = Mat::from_vec(2, 2, vec![0.5, 0.5, 0.5, 0.5]);
+        let s = Spectrum::of_mixing(&w);
+        assert!((s.w_eigs[0] - 1.0).abs() < 1e-12);
+        assert!((s.lam_max - 1.0).abs() < 1e-12);
+        assert!((s.lam_min_pos - 1.0).abs() < 1e-12);
+        assert!((s.kappa_g() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,482 @@
+//! Dense row-major matrix type and the vector/matrix operations used by the
+//! decentralized algorithms. Algorithm state is an n×p matrix `X` whose row
+//! i is node i's local iterate (the paper's compact notation).
+//!
+//! The hot operation is the blocked matmul in [`Mat::matmul`], tuned in the
+//! performance pass (see EXPERIMENTS.md §Perf): i-k-j loop order with a
+//! cache-blocked k dimension vectorizes well under LLVM's auto-vectorizer.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Mul, Sub, SubAssign};
+
+/// Dense row-major f64 matrix.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows.min(6) {
+            let row: Vec<String> = (0..self.cols.min(8))
+                .map(|j| format!("{:9.4}", self[(i, j)]))
+                .collect();
+            writeln!(f, "  {}{}", row.join(" "), if self.cols > 8 { " …" } else { "" })?;
+        }
+        if self.rows > 6 {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "data length mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Mat {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Matrix with every entry `v`.
+    pub fn full(rows: usize, cols: usize, v: f64) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![v; rows * cols],
+        }
+    }
+
+    /// n×p matrix whose every row is `row` (the consensual matrix 1 xᵀ).
+    pub fn broadcast_row(n: usize, row: &[f64]) -> Mat {
+        let mut m = Mat::zeros(n, row.len());
+        for i in 0..n {
+            m.row_mut(i).copy_from_slice(row);
+        }
+        m
+    }
+
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline(always)]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// C = A · B, cache-blocked ikj kernel. Hot path of the matrix engine.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        let mut out = Mat::zeros(self.rows, other.cols);
+        self.matmul_into(other, &mut out);
+        out
+    }
+
+    /// C = A · B writing into a preallocated output (hot loop avoids alloc).
+    pub fn matmul_into(&self, other: &Mat, out: &mut Mat) {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        assert_eq!(out.rows, self.rows);
+        assert_eq!(out.cols, other.cols);
+        out.data.iter_mut().for_each(|x| *x = 0.0);
+        let (n, k_dim, m) = (self.rows, self.cols, other.cols);
+        const KB: usize = 64; // k-blocking: keeps B panel rows in L1
+        for kb in (0..k_dim).step_by(KB) {
+            let kend = (kb + KB).min(k_dim);
+            for i in 0..n {
+                let a_row = &self.data[i * k_dim..(i + 1) * k_dim];
+                let out_row = &mut out.data[i * m..(i + 1) * m];
+                for k in kb..kend {
+                    let a = a_row[k];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let b_row = &other.data[k * m..(k + 1) * m];
+                    for (o, &b) in out_row.iter_mut().zip(b_row) {
+                        *o += a * b;
+                    }
+                }
+            }
+        }
+    }
+
+    /// C = Aᵀ · B without materializing Aᵀ (gradient hot path AᵀΔ).
+    pub fn t_matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
+        let (k_dim, n, m) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(n, m);
+        for k in 0..k_dim {
+            let a_row = &self.data[k * n..(k + 1) * n];
+            let b_row = &other.data[k * m..(k + 1) * m];
+            for i in 0..n {
+                let a = a_row[i];
+                if a == 0.0 {
+                    continue;
+                }
+                let out_row = &mut out.data[i * m..(i + 1) * m];
+                for (o, &b) in out_row.iter_mut().zip(b_row) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm squared ‖A‖²_F.
+    pub fn norm_sq(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum()
+    }
+
+    pub fn norm(&self) -> f64 {
+        self.norm_sq().sqrt()
+    }
+
+    /// ⟨A, B⟩ Frobenius inner product.
+    pub fn dot(&self, other: &Mat) -> f64 {
+        assert_eq!(self.data.len(), other.data.len());
+        self.data.iter().zip(&other.data).map(|(a, b)| a * b).sum()
+    }
+
+    /// ‖A − B‖²_F without allocating the difference.
+    pub fn dist_sq(&self, other: &Mat) -> f64 {
+        assert_eq!(self.rows, other.rows);
+        assert_eq!(self.cols, other.cols);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum()
+    }
+
+    /// self += alpha * other  (axpy).
+    pub fn axpy(&mut self, alpha: f64, other: &Mat) {
+        assert_eq!(self.data.len(), other.data.len());
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// self = alpha*self + beta*other.
+    pub fn scale_add(&mut self, alpha: f64, beta: f64, other: &Mat) {
+        assert_eq!(self.data.len(), other.data.len());
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a = alpha * *a + beta * b;
+        }
+    }
+
+    pub fn scale(&mut self, alpha: f64) {
+        self.data.iter_mut().for_each(|x| *x *= alpha);
+    }
+
+    pub fn map(&self, f: impl Fn(f64) -> f64) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// Mean of the rows (the network-average iterate x̄).
+    pub fn row_mean(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            for (o, &v) in out.iter_mut().zip(self.row(i)) {
+                *o += v;
+            }
+        }
+        let inv = 1.0 / self.rows as f64;
+        out.iter_mut().for_each(|x| *x *= inv);
+        out
+    }
+
+    /// Consensus error: Σᵢ ‖xᵢ − x̄‖².
+    pub fn consensus_error(&self) -> f64 {
+        let mean = self.row_mean();
+        let mut err = 0.0;
+        for i in 0..self.rows {
+            for (j, &v) in self.row(i).iter().enumerate() {
+                err += (v - mean[j]) * (v - mean[j]);
+            }
+        }
+        err
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline(always)]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline(always)]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl Add for &Mat {
+    type Output = Mat;
+    fn add(self, other: &Mat) -> Mat {
+        let mut out = self.clone();
+        out.axpy(1.0, other);
+        out
+    }
+}
+
+impl Sub for &Mat {
+    type Output = Mat;
+    fn sub(self, other: &Mat) -> Mat {
+        let mut out = self.clone();
+        out.axpy(-1.0, other);
+        out
+    }
+}
+
+impl AddAssign<&Mat> for Mat {
+    fn add_assign(&mut self, other: &Mat) {
+        self.axpy(1.0, other);
+    }
+}
+
+impl SubAssign<&Mat> for Mat {
+    fn sub_assign(&mut self, other: &Mat) {
+        self.axpy(-1.0, other);
+    }
+}
+
+impl Mul<f64> for &Mat {
+    type Output = Mat;
+    fn mul(self, s: f64) -> Mat {
+        let mut out = self.clone();
+        out.scale(s);
+        out
+    }
+}
+
+// --- vector helpers (free functions over &[f64]) ---------------------------
+
+pub fn vdot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+pub fn vnorm_sq(a: &[f64]) -> f64 {
+    a.iter().map(|x| x * x).sum()
+}
+
+pub fn vnorm(a: &[f64]) -> f64 {
+    vnorm_sq(a).sqrt()
+}
+
+pub fn vaxpy(y: &mut [f64], alpha: f64, x: &[f64]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+pub fn vsub(a: &[f64], b: &[f64]) -> Vec<f64> {
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+pub fn vdist_sq(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+pub fn vinf_norm(a: &[f64]) -> f64 {
+    a.iter().fold(0.0f64, |m, &x| m.max(x.abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::qc::{assert_prop, close_slices};
+    use crate::util::rng::Rng;
+
+    fn random_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        let mut m = Mat::zeros(r, c);
+        rng.fill_normal(&mut m.data);
+        m
+    }
+
+    /// Naive triple-loop reference matmul for checking the blocked kernel.
+    fn matmul_naive(a: &Mat, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for k in 0..a.cols {
+                    s += a[(i, k)] * b[(k, j)];
+                }
+                out[(i, j)] = s;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(1);
+        let a = random_mat(&mut rng, 5, 5);
+        let i = Mat::eye(5);
+        assert!(a.matmul(&i).dist_sq(&a) < 1e-24);
+        assert!(i.matmul(&a).dist_sq(&a) < 1e-24);
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        assert_prop("blocked-matmul == naive", 30, |g| {
+            let mut rng = Rng::new(g.rng.next_u64());
+            let (n, k, m) = (g.usize_in(1, 20), g.usize_in(1, 70), g.usize_in(1, 20));
+            let a = random_mat(&mut rng, n, k);
+            let b = random_mat(&mut rng, k, m);
+            close_slices(&a.matmul(&b).data, &matmul_naive(&a, &b).data, 1e-10)
+        });
+    }
+
+    #[test]
+    fn t_matmul_matches_transpose() {
+        assert_prop("t_matmul == transpose().matmul", 30, |g| {
+            let mut rng = Rng::new(g.rng.next_u64());
+            let (n, k, m) = (g.usize_in(1, 15), g.usize_in(1, 15), g.usize_in(1, 15));
+            let a = random_mat(&mut rng, k, n);
+            let b = random_mat(&mut rng, k, m);
+            close_slices(&a.t_matmul(&b).data, &a.transpose().matmul(&b).data, 1e-10)
+        });
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(2);
+        let a = random_mat(&mut rng, 7, 3);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn norms_and_dot() {
+        let a = Mat::from_vec(2, 2, vec![3.0, 0.0, 0.0, 4.0]);
+        assert!((a.norm() - 5.0).abs() < 1e-12);
+        let b = Mat::eye(2);
+        assert!((a.dot(&b) - 7.0).abs() < 1e-12);
+        assert!((a.dist_sq(&b) - (4.0 + 9.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn row_mean_and_consensus() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(a.row_mean(), vec![2.0, 3.0]);
+        // consensus error = sum of squared deviations from mean
+        assert!((a.consensus_error() - 4.0).abs() < 1e-12);
+        let consensual = Mat::broadcast_row(4, &[1.0, -1.0]);
+        assert!(consensual.consensus_error() < 1e-24);
+    }
+
+    #[test]
+    fn axpy_and_scale_add() {
+        let mut a = Mat::full(2, 2, 1.0);
+        let b = Mat::full(2, 2, 2.0);
+        a.axpy(0.5, &b);
+        assert_eq!(a, Mat::full(2, 2, 2.0));
+        a.scale_add(0.5, 1.0, &b);
+        assert_eq!(a, Mat::full(2, 2, 3.0));
+    }
+
+    #[test]
+    fn operators() {
+        let a = Mat::full(2, 3, 2.0);
+        let b = Mat::full(2, 3, 1.0);
+        assert_eq!(&a + &b, Mat::full(2, 3, 3.0));
+        assert_eq!(&a - &b, Mat::full(2, 3, 1.0));
+        assert_eq!(&a * 2.0, Mat::full(2, 3, 4.0));
+    }
+
+    #[test]
+    fn matmul_into_no_stale_data() {
+        let a = Mat::eye(3);
+        let b = Mat::full(3, 3, 2.0);
+        let mut out = Mat::full(3, 3, 99.0);
+        a.matmul_into(&b, &mut out);
+        assert_eq!(out, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul shape mismatch")]
+    fn matmul_shape_check() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(2, 3);
+        let _ = a.matmul(&b);
+    }
+
+    #[test]
+    fn vector_helpers() {
+        assert_eq!(vdot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        assert_eq!(vnorm(&[3.0, 4.0]), 5.0);
+        assert_eq!(vinf_norm(&[-7.0, 2.0]), 7.0);
+        assert_eq!(vdist_sq(&[1.0, 1.0], &[0.0, 0.0]), 2.0);
+        let mut y = vec![1.0, 1.0];
+        vaxpy(&mut y, 2.0, &[1.0, 2.0]);
+        assert_eq!(y, vec![3.0, 5.0]);
+    }
+
+    #[test]
+    fn broadcast_and_mean_roundtrip() {
+        let row = vec![1.0, -2.0, 0.5];
+        let m = Mat::broadcast_row(5, &row);
+        assert_eq!(m.row_mean(), row);
+    }
+}

@@ -1,0 +1,9 @@
+//! Dense linear algebra substrate: the `Mat` type every algorithm's state
+//! lives in, plus a symmetric eigensolver for spectral quantities of the
+//! mixing matrix.
+
+pub mod eigen;
+pub mod matrix;
+
+pub use eigen::{sym_eigen, PinvNorm, Spectrum};
+pub use matrix::{vaxpy, vdist_sq, vdot, vinf_norm, vnorm, vnorm_sq, vsub, Mat};

@@ -1,0 +1,205 @@
+//! `proxlead` — the launcher binary.
+//!
+//! Subcommands (see `proxlead help`):
+//! - `train`: distributed Prox-LEAD on node threads (the coordinator),
+//!   optionally with the PJRT/XLA gradient backend (`--backend xla`);
+//! - `solve-ref`: high-precision centralized reference x*;
+//! - `info`: condition numbers, spectra, artifact registry;
+//! - `config`: print the effective configuration.
+
+use proxlead::algorithm::{solve_reference, suboptimality};
+use proxlead::cli::{self, Invocation, USAGE};
+use proxlead::config::Config;
+use proxlead::coordinator::{self, CoordConfig, Straggler};
+use proxlead::linalg::{Mat, Spectrum};
+use proxlead::problem::{LogReg, Problem};
+use proxlead::prox::Prox;
+use proxlead::runtime::{default_artifact_dir, PjrtRuntime, XlaLogReg};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let inv = match cli::parse(&args) {
+        Ok(inv) => inv,
+        Err(e) => {
+            eprintln!("{e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let code = match inv.subcommand.as_str() {
+        "train" => cmd_train(&inv),
+        "solve-ref" => cmd_solve_ref(&inv),
+        "info" => cmd_info(&inv),
+        "config" => {
+            print!("{}", inv.config.to_text());
+            0
+        }
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            0
+        }
+        other => {
+            eprintln!("unknown subcommand '{other}'\n\n{USAGE}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn build_problem(cfg: &Config) -> Arc<dyn Problem> {
+    let native = LogReg::new(
+        proxlead::problem::data::blobs(&cfg.blob_spec()),
+        cfg.classes,
+        cfg.lambda2,
+        cfg.batches,
+    );
+    if cfg.backend == "xla" {
+        let rt = Arc::new(
+            PjrtRuntime::load(&default_artifact_dir())
+                .expect("XLA backend requested — run `make artifacts` first"),
+        );
+        let xla = XlaLogReg::new(native, rt).expect("artifact for this shape");
+        if !xla.batch_on_xla() && cfg.oracle != "full" {
+            eprintln!("note: no batch-shape artifact; stochastic draws use the native kernel");
+        }
+        Arc::new(xla)
+    } else {
+        Arc::new(native)
+    }
+}
+
+fn cmd_train(inv: &Invocation) -> i32 {
+    let cfg = &inv.config;
+    let problem = build_problem(cfg);
+    let graph = cfg.topology().expect("topology");
+    let w = proxlead::graph::mixing_matrix(&graph, cfg.mixing_rule().expect("mixing"));
+    let spec = Spectrum::of_mixing(&w);
+    let eta = if cfg.eta > 0.0 { cfg.eta } else { 0.5 / problem.smoothness() };
+
+    println!(
+        "prox-lead train: {} | {} nodes ({}, {}) | {} | η={eta:.4} α={} γ={}",
+        problem.name(),
+        cfg.nodes,
+        cfg.topology,
+        cfg.mixing,
+        cfg.codec().expect("codec").name(),
+        cfg.alpha,
+        cfg.gamma,
+    );
+    println!(
+        "κ_f = {:.1}, κ_g = {:.2}, data = label-{}",
+        problem.smoothness() / problem.strong_convexity(),
+        spec.kappa_g(),
+        if cfg.shuffled { "shuffled (iid)" } else { "sorted (non-iid)" }
+    );
+
+    // reference for the suboptimality metric
+    eprint!("solving reference x*… ");
+    let x_star = solve_reference(problem.as_ref(), cfg.lambda1, 60_000, 1e-12);
+    eprintln!("done");
+
+    let x0 = Mat::zeros(cfg.nodes, problem.dim());
+    let prox: Arc<dyn Prox> = Arc::from(cfg.prox());
+    let mut ccfg = CoordConfig::new(cfg.rounds, eta, cfg.codec().expect("codec"));
+    ccfg.record_every = cfg.record_every;
+    ccfg.alpha = cfg.alpha;
+    ccfg.gamma = cfg.gamma;
+    ccfg.oracle = cfg.oracle_kind().expect("oracle");
+    ccfg.seed = cfg.seed;
+    if cfg.straggler_prob > 0.0 {
+        ccfg.straggler = Some(Straggler {
+            prob: cfg.straggler_prob,
+            delay: Duration::from_micros(cfg.straggler_us),
+        });
+    }
+
+    let res = coordinator::run(Arc::clone(&problem), &w, &x0, prox, &ccfg);
+
+    println!("round      subopt        consensus     Mbits    grad-evals");
+    let mut csv = String::from("round,suboptimality,consensus,bits,grad_evals\n");
+    for (round, x, bits, evals) in &res.snapshots {
+        let s = suboptimality(x, &x_star);
+        let c = x.consensus_error();
+        println!("{round:>6} {s:>13.4e} {c:>13.4e} {:>8.2} {evals:>10}", *bits as f64 / 1e6);
+        csv.push_str(&format!("{round},{s:.6e},{c:.6e},{bits},{evals}\n"));
+    }
+    println!(
+        "elapsed {:.2?} | wire {} KiB | final suboptimality {:.3e}",
+        res.elapsed,
+        res.wire_bytes / 1024,
+        suboptimality(res.final_x(), &x_star)
+    );
+    if !cfg.out.is_empty() {
+        std::fs::write(&cfg.out, csv).expect("write csv");
+        println!("wrote {}", cfg.out);
+    }
+    0
+}
+
+fn cmd_solve_ref(inv: &Invocation) -> i32 {
+    let cfg = &inv.config;
+    let tol: f64 = inv.flag("tol").map(|t| t.parse().expect("tol")).unwrap_or(1e-12);
+    let problem = build_problem(cfg);
+    let x = solve_reference(problem.as_ref(), cfg.lambda1, 100_000, tol);
+    let loss = problem.global_loss(&x);
+    let nnz = x.iter().filter(|v| v.abs() > 1e-9).count();
+    println!(
+        "x*: dim {} | smooth loss {loss:.6} | nnz {nnz}/{} (λ1 = {})",
+        x.len(),
+        x.len(),
+        cfg.lambda1
+    );
+    if !cfg.out.is_empty() {
+        let text: String = x.iter().map(|v| format!("{v:.17e}\n")).collect();
+        std::fs::write(&cfg.out, text).expect("write x*");
+        println!("wrote {}", cfg.out);
+    }
+    0
+}
+
+fn cmd_info(inv: &Invocation) -> i32 {
+    let cfg = &inv.config;
+    let graph = cfg.topology().expect("topology");
+    let w = proxlead::graph::mixing_matrix(&graph, cfg.mixing_rule().expect("mixing"));
+    let spec = Spectrum::of_mixing(&w);
+    println!("prox-lead {}", proxlead::version());
+    println!(
+        "network: {} n={} edges={} | λ2(W)={:.4} λn(W)={:.4} κ_g={:.3} gap={:.4}",
+        cfg.topology,
+        cfg.nodes,
+        graph.num_edges(),
+        spec.w_eigs.get(1).copied().unwrap_or(f64::NAN),
+        spec.w_eigs.last().copied().unwrap_or(f64::NAN),
+        spec.kappa_g(),
+        spec.spectral_gap(),
+    );
+    let problem = LogReg::new(
+        proxlead::problem::data::blobs(&cfg.blob_spec()),
+        cfg.classes,
+        cfg.lambda2,
+        cfg.batches,
+    );
+    println!(
+        "problem: {} | L={:.3} μ={:.3} κ_f={:.1} | heterogeneity index {:.3}",
+        problem.name(),
+        problem.smoothness(),
+        problem.strong_convexity(),
+        problem.kappa_f(),
+        proxlead::problem::data::heterogeneity_index(problem.shards(), cfg.classes),
+    );
+    match PjrtRuntime::load(&default_artifact_dir()) {
+        Ok(rt) => {
+            let m = rt.manifest();
+            println!("artifacts: {} compiled ({})", rt.len(), m.format);
+            for a in &m.artifacts {
+                println!(
+                    "  {} ({}, m={}, d={}, C={}, λ2={})",
+                    a.name, a.fn_name, a.m, a.d, a.c, a.lam2
+                );
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    0
+}

@@ -1,0 +1,413 @@
+//! Stochastic gradient oracles — the paper's Table 1 (procedure SGO).
+//!
+//! Four estimators of ∇f_i(x):
+//!
+//! - [`OracleKind::Full`] — the deterministic gradient (σ² = 0);
+//! - [`OracleKind::Sgd`] — one uniformly sampled batch gradient ∇f_il(x)
+//!   (the general stochastic setting);
+//! - [`OracleKind::Lsvrg`] — Loopless SVRG: per-node reference point x̃_i
+//!   whose full gradient is cached; refreshed with Bernoulli(p) coin flips;
+//! - [`OracleKind::Saga`] — per-node table of m batch gradients at the m
+//!   reference points x̃_ij, with an incrementally maintained table mean.
+//!
+//! Every sample draw reports its cost in *batch-gradient evaluations* so
+//! the figures' "number of gradient evaluations" axes are exact: full = m,
+//! SGD = 1, LSVRG = 2 (+m on refresh), SAGA = 1 (+m·n once at init).
+
+use crate::linalg::Mat;
+use crate::problem::Problem;
+use crate::util::rng::Rng;
+
+/// Which estimator the SGO uses.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum OracleKind {
+    Full,
+    Sgd,
+    /// Loopless SVRG with reference-refresh probability p (paper suggests
+    /// p = 1/m to balance computation).
+    Lsvrg { p: f64 },
+    Saga,
+}
+
+impl OracleKind {
+    pub fn name(&self) -> String {
+        match self {
+            OracleKind::Full => "full".into(),
+            OracleKind::Sgd => "sgd".into(),
+            OracleKind::Lsvrg { p } => format!("lsvrg(p={p})"),
+            OracleKind::Saga => "saga".into(),
+        }
+    }
+}
+
+/// Per-node Loopless-SVRG state.
+struct LsvrgState {
+    ref_point: Vec<f64>,
+    ref_grad: Vec<f64>, // ∇f_i(x̃_i), cached
+}
+
+/// Per-node SAGA state: gradient table (m × dim) and its running mean.
+struct SagaState {
+    table: Mat,
+    mean: Vec<f64>,
+}
+
+enum NodeState {
+    Stateless,
+    Lsvrg(LsvrgState),
+    Saga(SagaState),
+}
+
+/// The stochastic gradient oracle over all n nodes. Owns per-node
+/// variance-reduction state and the sampling RNG; counts every
+/// batch-gradient evaluation it performs.
+pub struct Sgo {
+    pub kind: OracleKind,
+    states: Vec<NodeState>,
+    rngs: Vec<Rng>,
+    grad_evals: u64,
+    scratch: Vec<f64>,
+    /// When Some(i), this oracle serves only node i (a coordinator node
+    /// thread); state vectors have length 1 and are indexed at 0.
+    only: Option<usize>,
+}
+
+impl Sgo {
+    /// Build the oracle, initializing VR state at `x0` (row i = node i's
+    /// start point). LSVRG caches ∇f_i(x0); SAGA fills its table with the
+    /// m batch gradients at x0. Both initializations are counted.
+    pub fn new(kind: OracleKind, problem: &dyn Problem, x0: &Mat, seed: u64) -> Sgo {
+        assert_eq!(x0.rows, problem.num_nodes());
+        Sgo::build(kind, problem, x0, seed, None)
+    }
+
+    /// Single-node oracle for a coordinator node thread: VR state (and
+    /// gradient-eval accounting) cover only `node`; `x0` is that node's
+    /// start row.
+    pub fn for_node(
+        kind: OracleKind,
+        problem: &dyn Problem,
+        node: usize,
+        x0: &[f64],
+        seed: u64,
+    ) -> Sgo {
+        let x0m = Mat::from_rows(&[x0.to_vec()]);
+        Sgo::build(kind, problem, &x0m, seed, Some(node))
+    }
+
+    fn build(kind: OracleKind, problem: &dyn Problem, x0: &Mat, seed: u64, only: Option<usize>) -> Sgo {
+        let m = problem.num_batches();
+        let dim = problem.dim();
+        assert_eq!(x0.cols, dim);
+        if let OracleKind::Lsvrg { p } = kind {
+            assert!(p > 0.0 && p <= 1.0, "LSVRG refresh probability must be in (0,1]");
+        }
+        let node_ids: Vec<usize> = match only {
+            Some(i) => vec![i],
+            None => (0..problem.num_nodes()).collect(),
+        };
+        let mut root = Rng::new(seed);
+        let rngs: Vec<Rng> = node_ids.iter().map(|&i| root.fork(i as u64)).collect();
+        let mut grad_evals = 0u64;
+        let states: Vec<NodeState> = node_ids
+            .iter()
+            .enumerate()
+            .map(|(_slot, &i)| {
+                match kind {
+                OracleKind::Full | OracleKind::Sgd => NodeState::Stateless,
+                OracleKind::Lsvrg { .. } => {
+                    let x0_row = if only.is_some() { 0 } else { i };
+                    let ref_point = x0.row(x0_row).to_vec();
+                    let mut ref_grad = vec![0.0; dim];
+                    problem.grad(i, &ref_point, &mut ref_grad);
+                    grad_evals += m as u64;
+                    NodeState::Lsvrg(LsvrgState { ref_point, ref_grad })
+                }
+                OracleKind::Saga => {
+                    let x0_row = if only.is_some() { 0 } else { i };
+                    let mut table = Mat::zeros(m, dim);
+                    let xi = x0.row(x0_row).to_vec();
+                    for b in 0..m {
+                        problem.grad_batch(i, b, &xi, table.row_mut(b));
+                    }
+                    grad_evals += m as u64;
+                    let mean = table.row_mean();
+                    NodeState::Saga(SagaState { table, mean })
+                }
+            }})
+            .collect();
+        Sgo {
+            kind,
+            states,
+            rngs,
+            grad_evals,
+            scratch: vec![0.0; dim],
+            only,
+        }
+    }
+
+    /// Map a global node id to the local state slot.
+    #[inline]
+    fn slot(&self, node: usize) -> usize {
+        match self.only {
+            Some(i) => {
+                assert_eq!(node, i, "single-node oracle asked for node {node}, owns {i}");
+                0
+            }
+            None => node,
+        }
+    }
+
+    /// Draw g_i ≈ ∇f_i(x) for node `node` into `out` (Table 1).
+    pub fn sample(&mut self, problem: &dyn Problem, node: usize, x: &[f64], out: &mut [f64]) {
+        let m = problem.num_batches();
+        let slot = self.slot(node);
+        match self.kind {
+            OracleKind::Full => {
+                problem.grad(node, x, out);
+                self.grad_evals += m as u64;
+            }
+            OracleKind::Sgd => {
+                let l = self.rngs[slot].below(m);
+                problem.grad_batch(node, l, x, out);
+                self.grad_evals += 1;
+            }
+            OracleKind::Lsvrg { p } => {
+                let l = self.rngs[slot].below(m);
+                let refresh = self.rngs[slot].bernoulli(p);
+                let st = match &mut self.states[slot] {
+                    NodeState::Lsvrg(s) => s,
+                    _ => unreachable!(),
+                };
+                // g = ∇f_il(x) − ∇f_il(x̃) + ∇f_i(x̃)   (uniform: 1/(m·p_il) = 1)
+                problem.grad_batch(node, l, x, out);
+                problem.grad_batch(node, l, &st.ref_point, &mut self.scratch);
+                self.grad_evals += 2;
+                for ((o, &s), &r) in out.iter_mut().zip(&self.scratch).zip(&st.ref_grad) {
+                    *o = *o - s + r;
+                }
+                if refresh {
+                    st.ref_point.copy_from_slice(x);
+                    problem.grad(node, &st.ref_point, &mut st.ref_grad);
+                    self.grad_evals += m as u64;
+                }
+            }
+            OracleKind::Saga => {
+                let l = self.rngs[slot].below(m);
+                let st = match &mut self.states[slot] {
+                    NodeState::Saga(s) => s,
+                    _ => unreachable!(),
+                };
+                // g = ∇f_il(x) − table[l] + mean(table)
+                problem.grad_batch(node, l, x, &mut self.scratch);
+                self.grad_evals += 1;
+                let old = st.table.row(l);
+                for (((o, &gnew), &gold), &mean) in out
+                    .iter_mut()
+                    .zip(&self.scratch)
+                    .zip(old.iter())
+                    .zip(&st.mean)
+                {
+                    *o = gnew - gold + mean;
+                }
+                // table[l] ← ∇f_il(x); mean updated incrementally
+                let inv_m = 1.0 / m as f64;
+                let row = st.table.row_mut(l);
+                for ((mean, r), &gnew) in st.mean.iter_mut().zip(row.iter_mut()).zip(&self.scratch)
+                {
+                    *mean += (gnew - *r) * inv_m;
+                    *r = gnew;
+                }
+            }
+        }
+    }
+
+    /// Draw the whole stacked G (row i = g_i) into `out`.
+    pub fn sample_all(&mut self, problem: &dyn Problem, x: &Mat, out: &mut Mat) {
+        for i in 0..problem.num_nodes() {
+            let xi = x.row(i).to_vec();
+            self.sample(problem, i, &xi, out.row_mut(i));
+        }
+    }
+
+    /// Total batch-gradient evaluations so far (including VR init).
+    pub fn grad_evals(&self) -> u64 {
+        self.grad_evals
+    }
+
+    pub fn name(&self) -> String {
+        self.kind.name()
+    }
+
+    /// True when samples are the exact full gradient.
+    pub fn is_exact(&self) -> bool {
+        self.kind == OracleKind::Full
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problem::data::{blobs, BlobSpec};
+    use crate::problem::LogReg;
+
+    fn problem() -> LogReg {
+        let spec = BlobSpec {
+            nodes: 2,
+            samples_per_node: 20,
+            dim: 5,
+            classes: 3,
+            seed: 21,
+            ..Default::default()
+        };
+        LogReg::new(blobs(&spec), 3, 1e-2, 4)
+    }
+
+    fn mean_sample(
+        kind: OracleKind,
+        problem: &LogReg,
+        x: &Mat,
+        node: usize,
+        trials: usize,
+    ) -> Vec<f64> {
+        use crate::problem::Problem;
+        let dim = problem.dim();
+        let mut acc = vec![0.0; dim];
+        for t in 0..trials {
+            let mut o = Sgo::new(kind, problem, x, 1000 + t as u64);
+            let mut g = vec![0.0; dim];
+            let xi = x.row(node).to_vec();
+            o.sample(problem, node, &xi, &mut g);
+            for (a, &v) in acc.iter_mut().zip(&g) {
+                *a += v;
+            }
+        }
+        acc.iter_mut().for_each(|v| *v /= trials as f64);
+        acc
+    }
+
+    #[test]
+    fn all_oracles_unbiased() {
+        use crate::problem::Problem;
+        let p = problem();
+        let mut x = Mat::zeros(2, p.dim());
+        let mut rng = Rng::new(3);
+        rng.fill_normal(&mut x.data);
+        x.scale(0.3);
+        let mut full = vec![0.0; p.dim()];
+        let xi = x.row(0).to_vec();
+        p.grad(0, &xi, &mut full);
+        let fn_ = crate::linalg::matrix::vnorm(&full).max(1e-12);
+        for kind in [
+            OracleKind::Full,
+            OracleKind::Sgd,
+            OracleKind::Lsvrg { p: 0.25 },
+            OracleKind::Saga,
+        ] {
+            let mean = mean_sample(kind, &p, &x, 0, 600);
+            let err = crate::linalg::matrix::vdist_sq(&mean, &full).sqrt() / fn_;
+            assert!(err < 0.12, "{} bias too large: {err}", kind.name());
+        }
+    }
+
+    #[test]
+    fn full_oracle_is_exact_every_draw() {
+        use crate::problem::Problem;
+        let p = problem();
+        let x = Mat::zeros(2, p.dim());
+        let mut o = Sgo::new(OracleKind::Full, &p, &x, 1);
+        let mut g = vec![0.0; p.dim()];
+        let mut full = vec![0.0; p.dim()];
+        let xi = vec![0.0; p.dim()];
+        o.sample(&p, 1, &xi, &mut g);
+        p.grad(1, &xi, &mut full);
+        assert_eq!(g, full);
+        assert!(o.is_exact());
+    }
+
+    #[test]
+    fn variance_reduction_shrinks_at_reference() {
+        use crate::problem::Problem;
+        // at x = x̃ (the init point), LSVRG/SAGA variance is exactly zero:
+        // g = ∇f_il(x) − ∇f_il(x̃) + ∇f_i(x̃) = ∇f_i(x̃); SGD's is not.
+        let p = problem();
+        let mut x = Mat::zeros(2, p.dim());
+        let mut rng = Rng::new(9);
+        rng.fill_normal(&mut x.data);
+        let xi = x.row(0).to_vec();
+        let mut full = vec![0.0; p.dim()];
+        p.grad(0, &xi, &mut full);
+
+        let var_of = |kind: OracleKind| {
+            let mut acc = 0.0;
+            let trials = 100;
+            for t in 0..trials {
+                // p=0 refresh would be invalid; use tiny p and a fresh oracle
+                let mut o = Sgo::new(kind, &p, &x, 50 + t);
+                let mut g = vec![0.0; p.dim()];
+                o.sample(&p, 0, &xi, &mut g);
+                acc += crate::linalg::matrix::vdist_sq(&g, &full);
+            }
+            acc / trials as f64
+        };
+
+        assert!(var_of(OracleKind::Lsvrg { p: 0.01 }) < 1e-20);
+        assert!(var_of(OracleKind::Saga) < 1e-20);
+        assert!(var_of(OracleKind::Sgd) > 1e-6);
+    }
+
+    #[test]
+    fn grad_eval_accounting() {
+        use crate::problem::Problem;
+        let p = problem(); // m = 4 batches, n = 2 nodes
+        let x = Mat::zeros(2, p.dim());
+        let mut g = vec![0.0; p.dim()];
+        let xi = vec![0.0; p.dim()];
+
+        let mut full = Sgo::new(OracleKind::Full, &p, &x, 1);
+        full.sample(&p, 0, &xi, &mut g);
+        assert_eq!(full.grad_evals(), 4); // one full = m
+
+        let mut sgd = Sgo::new(OracleKind::Sgd, &p, &x, 1);
+        sgd.sample(&p, 0, &xi, &mut g);
+        assert_eq!(sgd.grad_evals(), 1);
+
+        let saga = Sgo::new(OracleKind::Saga, &p, &x, 1);
+        assert_eq!(saga.grad_evals(), 8); // init: m per node × 2 nodes
+
+        let mut saga = saga;
+        saga.sample(&p, 0, &xi, &mut g);
+        assert_eq!(saga.grad_evals(), 9); // +1 per draw
+
+        let lsvrg = Sgo::new(OracleKind::Lsvrg { p: 1e-12 }, &p, &x, 1);
+        assert_eq!(lsvrg.grad_evals(), 8); // init full grad per node
+        let mut lsvrg = lsvrg;
+        lsvrg.sample(&p, 0, &xi, &mut g);
+        assert_eq!(lsvrg.grad_evals(), 10); // +2 per draw (no refresh)
+    }
+
+    #[test]
+    fn saga_table_mean_stays_consistent() {
+        use crate::problem::Problem;
+        let p = problem();
+        let mut x = Mat::zeros(2, p.dim());
+        let mut rng = Rng::new(31);
+        rng.fill_normal(&mut x.data);
+        let mut o = Sgo::new(OracleKind::Saga, &p, &x, 77);
+        let mut g = vec![0.0; p.dim()];
+        for step in 0..30 {
+            let xi: Vec<f64> = x.row(0).iter().map(|&v| v * (1.0 - step as f64 * 0.01)).collect();
+            o.sample(&p, 0, &xi, &mut g);
+        }
+        // invariant: stored mean equals the recomputed row mean of the table
+        if let NodeState::Saga(st) = &o.states[0] {
+            let m = st.table.rows as f64;
+            for (j, &mean_j) in st.mean.iter().enumerate() {
+                let col: f64 = (0..st.table.rows).map(|b| st.table[(b, j)]).sum::<f64>() / m;
+                assert!((col - mean_j).abs() < 1e-10, "drift at {j}: {col} vs {mean_j}");
+            }
+        } else {
+            panic!("expected saga state");
+        }
+    }
+}

@@ -1,0 +1,263 @@
+//! Synthetic data generators — the MNIST substitution (DESIGN.md §4).
+//!
+//! The paper's experiment distributes MNIST across 8 nodes *sorted by
+//! label*, so each node sees an extremely skewed class distribution (the
+//! heterogeneous-data regime the theory is proud of handling without
+//! bounded-heterogeneity assumptions). What the algorithms are sensitive to
+//! is (a) strong convexity from λ₂, (b) smoothness L of the design, and
+//! (c) cross-node heterogeneity — all three are reproduced by Gaussian
+//! class blobs partitioned label-sorted.
+
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+/// One node's classification shard: feature matrix (samples × d) and labels.
+#[derive(Clone, Debug)]
+pub struct ClassShard {
+    pub features: Mat,
+    pub labels: Vec<usize>,
+}
+
+/// How samples are assigned to nodes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Partition {
+    /// Sort by label, then split contiguously — each node sees ~(C/n)
+    /// classes. The paper's "non-iid" setting.
+    LabelSorted,
+    /// Global shuffle — every node sees every class. The easy iid baseline
+    /// used in heterogeneity ablations.
+    Shuffled,
+}
+
+/// Configuration for the Gaussian-blob classification generator.
+#[derive(Clone, Debug)]
+pub struct BlobSpec {
+    pub nodes: usize,
+    pub samples_per_node: usize,
+    pub dim: usize,
+    pub classes: usize,
+    /// Distance scale between class means (bigger = more separable).
+    pub separation: f64,
+    /// Within-class noise std.
+    pub noise: f64,
+    pub partition: Partition,
+    pub seed: u64,
+}
+
+impl Default for BlobSpec {
+    fn default() -> Self {
+        // mirrors §5 at laptop scale: 8 nodes, 10 classes, label-sorted
+        BlobSpec {
+            nodes: 8,
+            samples_per_node: 120,
+            dim: 32,
+            classes: 10,
+            separation: 2.0,
+            noise: 1.0,
+            partition: Partition::LabelSorted,
+            seed: 42,
+        }
+    }
+}
+
+/// Generate "MNIST-like" Gaussian-blob classification data, partitioned
+/// across nodes. Total samples = nodes × samples_per_node.
+pub fn blobs(spec: &BlobSpec) -> Vec<ClassShard> {
+    assert!(spec.nodes > 0 && spec.classes > 0 && spec.dim > 0);
+    let mut rng = Rng::new(spec.seed);
+    let total = spec.nodes * spec.samples_per_node;
+
+    // class means on a scaled Gaussian cloud
+    let mut means = Mat::zeros(spec.classes, spec.dim);
+    rng.fill_normal(&mut means.data);
+    means.scale(spec.separation);
+
+    // draw (feature, label) pairs with balanced class counts
+    let mut samples: Vec<(Vec<f64>, usize)> = Vec::with_capacity(total);
+    for s in 0..total {
+        let c = s % spec.classes; // balanced
+        let mut x: Vec<f64> = means.row(c).to_vec();
+        for v in x.iter_mut() {
+            *v += spec.noise * rng.normal();
+        }
+        samples.push((x, c));
+    }
+
+    match spec.partition {
+        Partition::LabelSorted => samples.sort_by_key(|(_, c)| *c),
+        Partition::Shuffled => {
+            // Fisher–Yates
+            for i in (1..samples.len()).rev() {
+                let j = rng.below(i + 1);
+                samples.swap(i, j);
+            }
+        }
+    }
+
+    // contiguous split into node shards
+    (0..spec.nodes)
+        .map(|i| {
+            let start = i * spec.samples_per_node;
+            let chunk = &samples[start..start + spec.samples_per_node];
+            let rows: Vec<Vec<f64>> = chunk.iter().map(|(x, _)| x.clone()).collect();
+            ClassShard {
+                features: Mat::from_rows(&rows),
+                labels: chunk.iter().map(|(_, c)| *c).collect(),
+            }
+        })
+        .collect()
+}
+
+/// One node's regression shard: (A_i, b_i).
+#[derive(Clone, Debug)]
+pub struct RegShard {
+    pub features: Mat,
+    pub targets: Vec<f64>,
+}
+
+/// Sparse linear-regression data b = A x♯ + ε with a k-sparse ground truth,
+/// for the decentralized lasso example. Returns (shards, x♯).
+pub fn sparse_regression(
+    nodes: usize,
+    samples_per_node: usize,
+    dim: usize,
+    sparsity: usize,
+    noise: f64,
+    seed: u64,
+) -> (Vec<RegShard>, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    // k-sparse ground truth with ±1-ish entries
+    let mut x_true = vec![0.0; dim];
+    let mut idx: Vec<usize> = (0..dim).collect();
+    for i in (1..dim).rev() {
+        let j = rng.below(i + 1);
+        idx.swap(i, j);
+    }
+    for &j in idx.iter().take(sparsity.min(dim)) {
+        x_true[j] = if rng.bernoulli(0.5) { 1.0 } else { -1.0 } * rng.range(0.5, 1.5);
+    }
+
+    let shards = (0..nodes)
+        .map(|_| {
+            let mut a = Mat::zeros(samples_per_node, dim);
+            rng.fill_normal(&mut a.data);
+            let targets: Vec<f64> = (0..samples_per_node)
+                .map(|s| {
+                    crate::linalg::matrix::vdot(a.row(s), &x_true) + noise * rng.normal()
+                })
+                .collect();
+            RegShard { features: a, targets }
+        })
+        .collect();
+    (shards, x_true)
+}
+
+/// Heterogeneity index of a label partition: mean over nodes of the
+/// total-variation distance between the node's class histogram and the
+/// global histogram. 0 = perfectly iid, →1 as nodes become single-class.
+pub fn heterogeneity_index(shards: &[ClassShard], classes: usize) -> f64 {
+    let total: usize = shards.iter().map(|s| s.labels.len()).sum();
+    let mut global = vec![0.0; classes];
+    for s in shards {
+        for &c in &s.labels {
+            global[c] += 1.0;
+        }
+    }
+    global.iter_mut().for_each(|g| *g /= total as f64);
+    let mut acc = 0.0;
+    for s in shards {
+        let mut local = vec![0.0; classes];
+        for &c in &s.labels {
+            local[c] += 1.0;
+        }
+        local.iter_mut().for_each(|l| *l /= s.labels.len() as f64);
+        let tv: f64 = local
+            .iter()
+            .zip(&global)
+            .map(|(l, g)| (l - g).abs())
+            .sum::<f64>()
+            / 2.0;
+        acc += tv;
+    }
+    acc / shards.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blobs_shapes_and_balance() {
+        let spec = BlobSpec {
+            nodes: 4,
+            samples_per_node: 50,
+            dim: 8,
+            classes: 5,
+            ..Default::default()
+        };
+        let shards = blobs(&spec);
+        assert_eq!(shards.len(), 4);
+        for s in &shards {
+            assert_eq!(s.features.rows, 50);
+            assert_eq!(s.features.cols, 8);
+            assert_eq!(s.labels.len(), 50);
+            assert!(s.labels.iter().all(|&c| c < 5));
+        }
+        // balanced classes overall
+        let mut counts = vec![0usize; 5];
+        for s in &shards {
+            for &c in &s.labels {
+                counts[c] += 1;
+            }
+        }
+        assert!(counts.iter().all(|&c| c == 40));
+    }
+
+    #[test]
+    fn label_sorted_is_heterogeneous_shuffled_is_not() {
+        let base = BlobSpec {
+            nodes: 8,
+            samples_per_node: 100,
+            dim: 4,
+            classes: 8,
+            ..Default::default()
+        };
+        let sorted = blobs(&BlobSpec { partition: Partition::LabelSorted, ..base.clone() });
+        let shuffled = blobs(&BlobSpec { partition: Partition::Shuffled, ..base });
+        let h_sorted = heterogeneity_index(&sorted, 8);
+        let h_shuffled = heterogeneity_index(&shuffled, 8);
+        assert!(h_sorted > 0.8, "label-sorted should be extreme: {h_sorted}");
+        assert!(h_shuffled < 0.25, "shuffled should be near-iid: {h_shuffled}");
+    }
+
+    #[test]
+    fn blobs_deterministic_in_seed() {
+        let spec = BlobSpec::default();
+        let a = blobs(&spec);
+        let b = blobs(&spec);
+        assert_eq!(a[0].features.data, b[0].features.data);
+        assert_eq!(a[3].labels, b[3].labels);
+    }
+
+    #[test]
+    fn sparse_regression_ground_truth() {
+        let (shards, x_true) = sparse_regression(3, 40, 20, 5, 0.0, 9);
+        assert_eq!(x_true.iter().filter(|&&v| v != 0.0).count(), 5);
+        // zero noise ⇒ targets reproduce exactly
+        for s in &shards {
+            for (i, &b) in s.targets.iter().enumerate() {
+                let pred = crate::linalg::matrix::vdot(s.features.row(i), &x_true);
+                assert!((pred - b).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn separation_controls_class_distance() {
+        let tight = blobs(&BlobSpec { separation: 0.1, seed: 5, ..Default::default() });
+        let wide = blobs(&BlobSpec { separation: 10.0, seed: 5, ..Default::default() });
+        // feature energy grows with separation
+        let e = |s: &[ClassShard]| s.iter().map(|x| x.features.norm_sq()).sum::<f64>();
+        assert!(e(&wide) > 10.0 * e(&tight));
+    }
+}

@@ -1,0 +1,364 @@
+//! Multinomial (softmax) logistic regression with an ℓ₂² smooth regularizer
+//! — the paper's §5 experimental workload.
+//!
+//! Parameters are a d×C weight matrix flattened row-major into x ∈ ℝ^{dC}.
+//! Node i holds (A_i, y_i) and
+//!
+//! ```text
+//! f_i(x) = −(1/mᵢ) Σ_s log softmax(a_s W)[y_s] + λ₂‖x‖²,
+//! ∇f_i(x) = (1/mᵢ) A_iᵀ (softmax(A_i W) − Y_i) + 2λ₂ W.
+//! ```
+//!
+//! The non-smooth λ₁‖x‖₁ term of the paper's non-smooth experiments is NOT
+//! part of this struct — it is handled by the algorithms' prox operator
+//! ([`crate::prox::L1`]).
+//!
+//! The gradient hot-spot `A_iᵀ(softmax(A_i W) − Y_i)` is exactly the
+//! computation the L1 Pallas kernel implements; the PJRT-backed variant
+//! lives in `crate::runtime` and is tested against this native code.
+
+use super::data::ClassShard;
+use super::{spectral_norm_sq, Problem};
+use crate::linalg::Mat;
+
+/// Row-wise numerically-stable softmax, in place over an m×C matrix.
+pub fn softmax_rows(logits: &mut Mat) {
+    for i in 0..logits.rows {
+        let row = logits.row_mut(i);
+        let mx = row.iter().fold(f64::NEG_INFINITY, |m, &v| m.max(v));
+        let mut z = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            z += *v;
+        }
+        let inv = 1.0 / z;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// The multinomial logistic-regression problem over n nodes.
+pub struct LogReg {
+    shards: Vec<ClassShard>,
+    pub classes: usize,
+    pub features: usize,
+    /// Smooth ℓ₂² coefficient λ₂ (paper: 5e-3).
+    pub lambda2: f64,
+    batches: usize,
+    l_smooth: f64,
+}
+
+impl LogReg {
+    /// Build from per-node shards. `batches` is the paper's m (15 in §5);
+    /// sample counts must be divisible by `batches`.
+    pub fn new(shards: Vec<ClassShard>, classes: usize, lambda2: f64, batches: usize) -> LogReg {
+        assert!(!shards.is_empty());
+        let features = shards[0].features.cols;
+        for s in &shards {
+            assert_eq!(s.features.cols, features, "feature dim mismatch across nodes");
+            assert_eq!(
+                s.features.rows % batches,
+                0,
+                "samples per node must divide into batches"
+            );
+            assert!(s.labels.iter().all(|&c| c < classes));
+        }
+        // Smoothness of each *batch* loss (Assumption 4 finite-sum form):
+        // Hessian of softmax-CE w.r.t. W is ≼ (1/2)·(A_bᵀA_b/|b|) ⊗ I_C, so
+        // L_ij ≤ σ_max(A_b)²/(2|b|) + 2λ₂. Take the max over (i, j); it also
+        // bounds the full-gradient L since f_i is the batch average.
+        let mut l_data: f64 = 0.0;
+        for (i, s) in shards.iter().enumerate() {
+            let bs = s.features.rows / batches;
+            for b in 0..batches {
+                let rows: Vec<Vec<f64>> =
+                    (b * bs..(b + 1) * bs).map(|r| s.features.row(r).to_vec()).collect();
+                let ab = Mat::from_rows(&rows);
+                let sn = spectral_norm_sq(&ab, 60, 1000 + (i * batches + b) as u64);
+                l_data = l_data.max(sn / (2.0 * bs as f64));
+            }
+        }
+        LogReg {
+            shards,
+            classes,
+            features,
+            lambda2,
+            batches,
+            l_smooth: l_data + 2.0 * lambda2,
+        }
+    }
+
+    /// Convenience constructor from a [`super::data::BlobSpec`].
+    pub fn from_blobs(spec: &super::data::BlobSpec, lambda2: f64, batches: usize) -> LogReg {
+        LogReg::new(super::data::blobs(spec), spec.classes, lambda2, batches)
+    }
+
+    #[inline]
+    fn weights(&self, x: &[f64]) -> Mat {
+        debug_assert_eq!(x.len(), self.features * self.classes);
+        Mat::from_vec(self.features, self.classes, x.to_vec())
+    }
+
+    /// softmax(A_slice · W) − Y_slice and the mean CE loss over the slice.
+    fn residual(&self, node: usize, lo: usize, hi: usize, w: &Mat) -> (Mat, f64) {
+        let s = &self.shards[node];
+        let rows: Vec<Vec<f64>> = (lo..hi).map(|r| s.features.row(r).to_vec()).collect();
+        let a = Mat::from_rows(&rows);
+        let mut probs = a.matmul(w);
+        // loss needs log-softmax at the true label BEFORE overwriting
+        let mut loss = 0.0;
+        for (ri, r) in (lo..hi).enumerate() {
+            let row = probs.row(ri);
+            let mx = row.iter().fold(f64::NEG_INFINITY, |m, &v| m.max(v));
+            let lse = mx + row.iter().map(|&v| (v - mx).exp()).sum::<f64>().ln();
+            loss += lse - row[s.labels[r]];
+        }
+        loss /= (hi - lo) as f64;
+        softmax_rows(&mut probs);
+        for (ri, r) in (lo..hi).enumerate() {
+            probs[(ri, s.labels[r])] -= 1.0;
+        }
+        (a.t_matmul(&probs), loss) // (AᵀΔ: d×C, mean CE)
+    }
+
+    /// Fused gradient over the contiguous sample slice [lo, hi) — the hot
+    /// path. Operates directly on the stored row-major feature buffer (no
+    /// Mat construction, one logits scratch allocation), mirroring the L1
+    /// Pallas kernel's fused softmax-residual structure. See EXPERIMENTS.md
+    /// §Perf for the before/after.
+    fn grad_slice(&self, node: usize, lo: usize, hi: usize, x: &[f64], out: &mut [f64]) {
+        let s = &self.shards[node];
+        let d = self.features;
+        let c = self.classes;
+        let mb = hi - lo;
+        let a = &s.features.data[lo * d..hi * d];
+
+        // logits = A_b · W — ikj over the flattened weight rows (the
+        // zero-skip branch measured faster than branchless; kept)
+        let mut logits = vec![0.0f64; mb * c];
+        for r in 0..mb {
+            let arow = &a[r * d..(r + 1) * d];
+            let lrow = &mut logits[r * c..(r + 1) * c];
+            for (k, &av) in arow.iter().enumerate() {
+                if av != 0.0 {
+                    crate::linalg::matrix::vaxpy(lrow, av, &x[k * c..(k + 1) * c]);
+                }
+            }
+        }
+
+        // delta = softmax(logits) − onehot(y), in place
+        for (r, lbl) in s.labels[lo..hi].iter().enumerate() {
+            let row = &mut logits[r * c..(r + 1) * c];
+            let mx = row.iter().fold(f64::NEG_INFINITY, |m, &v| m.max(v));
+            let mut z = 0.0;
+            for v in row.iter_mut() {
+                *v = (*v - mx).exp();
+                z += *v;
+            }
+            let inv = 1.0 / z;
+            for v in row.iter_mut() {
+                *v *= inv;
+            }
+            row[*lbl] -= 1.0;
+        }
+
+        // out = Aᵀ·delta / mb + 2λ2·x
+        out.iter_mut().for_each(|o| *o = 0.0);
+        let inv_m = 1.0 / mb as f64;
+        for r in 0..mb {
+            let arow = &a[r * d..(r + 1) * d];
+            let drow = &logits[r * c..(r + 1) * c];
+            for (k, &av) in arow.iter().enumerate() {
+                if av != 0.0 {
+                    crate::linalg::matrix::vaxpy(&mut out[k * c..(k + 1) * c], av * inv_m, drow);
+                }
+            }
+        }
+        let reg = 2.0 * self.lambda2;
+        for (o, &xi) in out.iter_mut().zip(x) {
+            *o += reg * xi;
+        }
+    }
+
+    /// Classification accuracy of the flattened weights on a shard set.
+    pub fn accuracy(&self, x: &[f64], shards: &[ClassShard]) -> f64 {
+        let w = self.weights(x);
+        let (mut hit, mut tot) = (0usize, 0usize);
+        for s in shards {
+            let scores = s.features.matmul(&w);
+            for (r, &label) in s.labels.iter().enumerate() {
+                let row = scores.row(r);
+                let argmax = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                hit += (argmax == label) as usize;
+                tot += 1;
+            }
+        }
+        hit as f64 / tot as f64
+    }
+
+    pub fn shards(&self) -> &[ClassShard] {
+        &self.shards
+    }
+
+    /// Per-node sample count (uniform by construction).
+    pub fn samples_per_node(&self) -> usize {
+        self.shards[0].features.rows
+    }
+}
+
+impl Problem for LogReg {
+    fn dim(&self) -> usize {
+        self.features * self.classes
+    }
+    fn num_nodes(&self) -> usize {
+        self.shards.len()
+    }
+    fn num_batches(&self) -> usize {
+        self.batches
+    }
+
+    fn loss(&self, node: usize, x: &[f64]) -> f64 {
+        let w = self.weights(x);
+        let m = self.shards[node].features.rows;
+        let (_, ce) = self.residual(node, 0, m, &w);
+        ce + self.lambda2 * x.iter().map(|v| v * v).sum::<f64>()
+    }
+
+    fn grad(&self, node: usize, x: &[f64], out: &mut [f64]) {
+        let m = self.shards[node].features.rows;
+        self.grad_slice(node, 0, m, x, out);
+    }
+
+    fn grad_batch(&self, node: usize, batch: usize, x: &[f64], out: &mut [f64]) {
+        let m = self.shards[node].features.rows;
+        let bs = m / self.batches;
+        self.grad_slice(node, batch * bs, (batch + 1) * bs, x, out);
+    }
+
+    fn smoothness(&self) -> f64 {
+        self.l_smooth
+    }
+    fn strong_convexity(&self) -> f64 {
+        2.0 * self.lambda2
+    }
+    fn name(&self) -> String {
+        format!(
+            "logreg(n={},d={},C={},λ2={})",
+            self.shards.len(),
+            self.features,
+            self.classes,
+            self.lambda2
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problem::data::{blobs, BlobSpec};
+    use crate::problem::testutil::{check_batch_consistency, check_gradient};
+    use crate::util::rng::Rng;
+
+    fn small_problem() -> LogReg {
+        let spec = BlobSpec {
+            nodes: 3,
+            samples_per_node: 30,
+            dim: 6,
+            classes: 4,
+            seed: 11,
+            ..Default::default()
+        };
+        LogReg::new(blobs(&spec), 4, 5e-3, 5)
+    }
+
+    #[test]
+    fn softmax_rows_is_distribution() {
+        let mut m = Mat::from_rows(&[vec![1.0, 2.0, 3.0], vec![-100.0, 0.0, 100.0]]);
+        softmax_rows(&mut m);
+        for i in 0..2 {
+            let s: f64 = m.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-12);
+            assert!(m.row(i).iter().all(|&v| (0.0..=1.0).contains(&v)));
+        }
+        assert!(m[(1, 2)] > 0.999); // extreme logit dominates
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let p = small_problem();
+        let mut rng = Rng::new(1);
+        let x: Vec<f64> = (0..p.dim()).map(|_| 0.1 * rng.normal()).collect();
+        for node in 0..p.num_nodes() {
+            check_gradient(&p, node, &x, 1e-4);
+        }
+    }
+
+    #[test]
+    fn batch_gradients_average_to_full() {
+        let p = small_problem();
+        let mut rng = Rng::new(2);
+        let x: Vec<f64> = (0..p.dim()).map(|_| 0.2 * rng.normal()).collect();
+        for node in 0..p.num_nodes() {
+            check_batch_consistency(&p, node, &x, 1e-10);
+        }
+    }
+
+    #[test]
+    fn loss_decreases_along_negative_gradient() {
+        let p = small_problem();
+        let x = vec![0.0; p.dim()];
+        let mut g = vec![0.0; p.dim()];
+        p.grad(0, &x, &mut g);
+        let step: Vec<f64> = x.iter().zip(&g).map(|(xi, gi)| xi - 1e-3 * gi).collect();
+        assert!(p.loss(0, &step) < p.loss(0, &x));
+    }
+
+    #[test]
+    fn smoothness_bounds_gradient_lipschitz() {
+        // ‖∇f(x)−∇f(y)‖ ≤ L‖x−y‖ sampled at random pairs
+        let p = small_problem();
+        let l = p.smoothness();
+        let mut rng = Rng::new(3);
+        for _ in 0..10 {
+            let x: Vec<f64> = (0..p.dim()).map(|_| rng.normal()).collect();
+            let y: Vec<f64> = (0..p.dim()).map(|_| rng.normal()).collect();
+            let mut gx = vec![0.0; p.dim()];
+            let mut gy = vec![0.0; p.dim()];
+            p.grad(0, &x, &mut gx);
+            p.grad(0, &y, &mut gy);
+            let gd: f64 = gx.iter().zip(&gy).map(|(a, b)| (a - b) * (a - b)).sum();
+            let xd: f64 = x.iter().zip(&y).map(|(a, b)| (a - b) * (a - b)).sum();
+            assert!(gd.sqrt() <= l * xd.sqrt() * (1.0 + 1e-9), "{} > {}", gd.sqrt(), l * xd.sqrt());
+        }
+    }
+
+    #[test]
+    fn strong_convexity_from_regularizer() {
+        let p = small_problem();
+        assert_eq!(p.strong_convexity(), 0.01);
+        assert!(p.kappa_f() >= 1.0);
+    }
+
+    #[test]
+    fn accuracy_improves_with_training() {
+        // a few centralized GD steps must beat random guessing
+        let p = small_problem();
+        let mut x = vec![0.0; p.dim()];
+        let mut g = vec![0.0; p.dim()];
+        let eta = 1.0 / p.smoothness();
+        for _ in 0..200 {
+            p.global_grad(&x, &mut g);
+            for (xi, &gi) in x.iter_mut().zip(&g) {
+                *xi -= eta * gi;
+            }
+        }
+        let acc = p.accuracy(&x, p.shards());
+        assert!(acc > 0.5, "trained accuracy {acc} should beat 1/4 guessing");
+    }
+}

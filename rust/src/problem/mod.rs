@@ -1,0 +1,203 @@
+//! Decentralized problem instances: the smooth components {f_i} of (1).
+//!
+//! A [`Problem`] owns the data of all n nodes and exposes local losses,
+//! full local gradients, and per-batch gradients (the finite-sum setting,
+//! m batches per node). Concrete problems:
+//!
+//! - [`logreg::LogReg`] — multinomial logistic regression + λ₂‖x‖², the
+//!   paper's §5 workload;
+//! - [`quadratic::LeastSquares`] — ridge / lasso-ready least squares, used
+//!   by Table 3's quadratic suite and the lasso example.
+//!
+//! Synthetic data generators (the MNIST substitution — see DESIGN.md §4)
+//! live in [`data`].
+
+pub mod data;
+pub mod logreg;
+pub mod quadratic;
+
+pub use logreg::LogReg;
+pub use quadratic::LeastSquares;
+
+use crate::linalg::Mat;
+
+/// The smooth part of a decentralized composite problem: n nodes, each with
+/// a local f_i that is an average of m batch losses f_ij (finite-sum form).
+pub trait Problem: Send + Sync {
+    /// Flattened parameter dimension p (for multinomial logreg, p = d·C).
+    fn dim(&self) -> usize;
+
+    /// Number of nodes n.
+    fn num_nodes(&self) -> usize;
+
+    /// Number of finite-sum batches m per node.
+    fn num_batches(&self) -> usize;
+
+    /// Local loss f_i(x) (including any smooth regularizer folded into f).
+    fn loss(&self, node: usize, x: &[f64]) -> f64;
+
+    /// Full local gradient ∇f_i(x), written into `out`.
+    fn grad(&self, node: usize, x: &[f64], out: &mut [f64]);
+
+    /// Gradient of the j-th batch loss ∇f_ij(x), written into `out`.
+    fn grad_batch(&self, node: usize, batch: usize, x: &[f64], out: &mut [f64]);
+
+    /// Smoothness constant L (Assumption 4); an upper estimate is fine.
+    fn smoothness(&self) -> f64;
+
+    /// Strong-convexity constant μ > 0 (Assumption 4).
+    fn strong_convexity(&self) -> f64;
+
+    /// Short tag for logs/tables.
+    fn name(&self) -> String;
+
+    /// Global objective F(X)/n = (1/n) Σᵢ f_i(xᵢ) evaluated at a consensual x.
+    fn global_loss(&self, x: &[f64]) -> f64 {
+        (0..self.num_nodes()).map(|i| self.loss(i, x)).sum::<f64>() / self.num_nodes() as f64
+    }
+
+    /// Average gradient (1/n) Σᵢ ∇f_i(x) at a consensual x, into `out`.
+    fn global_grad(&self, x: &[f64], out: &mut [f64]) {
+        let n = self.num_nodes();
+        let mut tmp = vec![0.0; self.dim()];
+        out.iter_mut().for_each(|v| *v = 0.0);
+        for i in 0..n {
+            self.grad(i, x, &mut tmp);
+            for (o, &t) in out.iter_mut().zip(&tmp) {
+                *o += t;
+            }
+        }
+        let inv = 1.0 / n as f64;
+        out.iter_mut().for_each(|v| *v *= inv);
+    }
+
+    /// Stacked gradient ∇F(X): row i is ∇f_i(xᵢ). `x` and `out` are n×p.
+    fn grad_all(&self, x: &Mat, out: &mut Mat) {
+        assert_eq!(x.rows, self.num_nodes());
+        assert_eq!(x.cols, self.dim());
+        for i in 0..self.num_nodes() {
+            // split borrow: rows of out are disjoint
+            let xi = x.row(i).to_vec();
+            self.grad(i, &xi, out.row_mut(i));
+        }
+    }
+
+    /// Condition number κ_f = L/μ.
+    fn kappa_f(&self) -> f64 {
+        self.smoothness() / self.strong_convexity()
+    }
+}
+
+/// Estimate the largest singular value squared σ_max(A)² via power iteration
+/// on AᵀA (forty iterations is plenty for the L estimates we need).
+pub fn spectral_norm_sq(a: &Mat, iters: usize, seed: u64) -> f64 {
+    use crate::linalg::matrix::{vnorm, vnorm_sq};
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(seed);
+    let p = a.cols;
+    if p == 0 || a.rows == 0 {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+    let nv = vnorm(&v).max(1e-300);
+    v.iter_mut().for_each(|x| *x /= nv);
+    let mut lam = 0.0;
+    for _ in 0..iters {
+        // w = Aᵀ(Av)
+        let mut av = vec![0.0; a.rows];
+        for (i, avi) in av.iter_mut().enumerate() {
+            *avi = crate::linalg::matrix::vdot(a.row(i), &v);
+        }
+        let mut w = vec![0.0; p];
+        for (i, &avi) in av.iter().enumerate() {
+            if avi != 0.0 {
+                crate::linalg::matrix::vaxpy(&mut w, avi, a.row(i));
+            }
+        }
+        lam = vnorm_sq(&w).sqrt(); // ‖AᵀAv‖ ≈ λ_max since ‖v‖=1
+        let nw = vnorm(&w).max(1e-300);
+        v = w;
+        v.iter_mut().for_each(|x| *x /= nw);
+    }
+    lam
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::Problem;
+    use crate::util::rng::Rng;
+
+    /// Central finite-difference check of ∇f_i against the loss.
+    pub fn check_gradient(p: &dyn Problem, node: usize, x: &[f64], tol: f64) {
+        let dim = p.dim();
+        let mut g = vec![0.0; dim];
+        p.grad(node, x, &mut g);
+        let mut rng = Rng::new(7 + node as u64);
+        // probe a handful of random coordinates (full FD is O(p²))
+        for _ in 0..dim.min(12) {
+            let j = rng.below(dim);
+            let h = 1e-6 * (1.0 + x[j].abs());
+            let mut xp = x.to_vec();
+            let mut xm = x.to_vec();
+            xp[j] += h;
+            xm[j] -= h;
+            let fd = (p.loss(node, &xp) - p.loss(node, &xm)) / (2.0 * h);
+            assert!(
+                (fd - g[j]).abs() <= tol * (1.0 + fd.abs()),
+                "grad mismatch at coord {j}: fd={fd} analytic={}",
+                g[j]
+            );
+        }
+    }
+
+    /// The batch average must reproduce the full local gradient:
+    /// f_i = (1/m) Σ_j f_ij  ⇒  ∇f_i = (1/m) Σ_j ∇f_ij.
+    pub fn check_batch_consistency(p: &dyn Problem, node: usize, x: &[f64], tol: f64) {
+        let dim = p.dim();
+        let m = p.num_batches();
+        let mut acc = vec![0.0; dim];
+        let mut tmp = vec![0.0; dim];
+        for b in 0..m {
+            p.grad_batch(node, b, x, &mut tmp);
+            for (a, &t) in acc.iter_mut().zip(&tmp) {
+                *a += t;
+            }
+        }
+        acc.iter_mut().for_each(|v| *v /= m as f64);
+        let mut full = vec![0.0; dim];
+        p.grad(node, x, &mut full);
+        for (j, (&a, &f)) in acc.iter().zip(&full).enumerate() {
+            assert!(
+                (a - f).abs() <= tol * (1.0 + f.abs()),
+                "batch-average grad mismatch at {j}: {a} vs {f}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn spectral_norm_of_diagonal() {
+        // A = diag(3, 1) (as 2x2): σ_max² = 9
+        let a = Mat::from_rows(&[vec![3.0, 0.0], vec![0.0, 1.0]]);
+        let s = spectral_norm_sq(&a, 60, 1);
+        assert!((s - 9.0).abs() < 1e-6, "{s}");
+    }
+
+    #[test]
+    fn spectral_norm_random_vs_eigen() {
+        let mut rng = Rng::new(3);
+        let mut a = Mat::zeros(12, 6);
+        rng.fill_normal(&mut a.data);
+        let s = spectral_norm_sq(&a, 200, 1);
+        // reference: largest eigenvalue of AᵀA via the Jacobi eigensolver
+        let ata = a.t_matmul(&a);
+        let (evals, _) = crate::linalg::eigen::sym_eigen(&ata);
+        let lmax = evals.iter().cloned().fold(f64::MIN, f64::max);
+        assert!((s - lmax).abs() < 1e-6 * lmax.max(1.0), "{s} vs {lmax}");
+    }
+}

@@ -1,0 +1,216 @@
+//! Least-squares / ridge problems — the quadratic suite used by the
+//! Table 3 cross-algorithm comparison and the decentralized-lasso example.
+//!
+//! ```text
+//! f_i(x) = ‖A_i x − b_i‖² / (2 mᵢ) + λ₂‖x‖²
+//! ∇f_i(x) = A_iᵀ(A_i x − b_i) / mᵢ + 2λ₂ x
+//! ```
+//!
+//! With λ₂ = 0 and an L1 prox this is the decentralized lasso; with λ₂ > 0
+//! it is ridge regression with closed-form optimum (handy for exactness
+//! tests). Quadratics have *known* L and μ from the spectrum of the
+//! empirical covariance, so theory-driven stepsizes are exact here.
+
+use super::data::RegShard;
+use super::{spectral_norm_sq, Problem};
+use crate::linalg::matrix::{vaxpy, vdot};
+use crate::linalg::Mat;
+
+/// Decentralized least squares (ridge for λ₂ > 0).
+pub struct LeastSquares {
+    shards: Vec<RegShard>,
+    pub lambda2: f64,
+    batches: usize,
+    dim: usize,
+    l_smooth: f64,
+    mu: f64,
+}
+
+impl LeastSquares {
+    pub fn new(shards: Vec<RegShard>, lambda2: f64, batches: usize) -> LeastSquares {
+        assert!(!shards.is_empty());
+        let dim = shards[0].features.cols;
+        for s in &shards {
+            assert_eq!(s.features.cols, dim);
+            assert_eq!(s.features.rows, s.targets.len());
+            assert_eq!(s.features.rows % batches, 0);
+        }
+        // batchwise smoothness: L_ij = σ_max(A_b)²/|b| + 2λ₂
+        let mut l_data: f64 = 0.0;
+        for (i, s) in shards.iter().enumerate() {
+            let bs = s.features.rows / batches;
+            for b in 0..batches {
+                let rows: Vec<Vec<f64>> =
+                    (b * bs..(b + 1) * bs).map(|r| s.features.row(r).to_vec()).collect();
+                let ab = Mat::from_rows(&rows);
+                l_data = l_data.max(spectral_norm_sq(&ab, 60, 77 + (i * batches + b) as u64) / bs as f64);
+            }
+        }
+        // μ: strong convexity from the regularizer alone (a valid lower
+        // bound whether or not the designs are full-rank).
+        LeastSquares {
+            shards,
+            lambda2,
+            batches,
+            dim,
+            l_smooth: l_data + 2.0 * lambda2,
+            mu: 2.0 * lambda2,
+        }
+    }
+
+    /// Override μ when the aggregate design is known full-rank (tightens
+    /// theory-driven stepsizes).
+    pub fn with_mu(mut self, mu: f64) -> LeastSquares {
+        assert!(mu > 0.0);
+        self.mu = mu;
+        self
+    }
+
+    /// μ from the smallest eigenvalue of the *global* averaged Hessian
+    /// (1/n)Σᵢ A_iᵀA_i/mᵢ + 2λ₂I — exact strong convexity of the average
+    /// objective. O(p³) via the Jacobi eigensolver; fine at setup time.
+    pub fn exact_global_mu(&self) -> f64 {
+        let n = self.shards.len();
+        let mut h = Mat::zeros(self.dim, self.dim);
+        for s in &self.shards {
+            let ata = s.features.t_matmul(&s.features);
+            h.axpy(1.0 / (n as f64 * s.targets.len() as f64), &ata);
+        }
+        let (evals, _) = crate::linalg::eigen::sym_eigen(&h);
+        let lmin = evals.iter().cloned().fold(f64::MAX, f64::min).max(0.0);
+        lmin + 2.0 * self.lambda2
+    }
+
+    fn grad_slice(&self, node: usize, lo: usize, hi: usize, x: &[f64], out: &mut [f64]) {
+        let s = &self.shards[node];
+        out.iter_mut().for_each(|v| *v = 0.0);
+        let inv_m = 1.0 / (hi - lo) as f64;
+        for r in lo..hi {
+            let resid = vdot(s.features.row(r), x) - s.targets[r];
+            vaxpy(out, resid * inv_m, s.features.row(r));
+        }
+        let reg = 2.0 * self.lambda2;
+        for (o, &xi) in out.iter_mut().zip(x) {
+            *o += reg * xi;
+        }
+    }
+
+    pub fn shards(&self) -> &[RegShard] {
+        &self.shards
+    }
+}
+
+impl Problem for LeastSquares {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+    fn num_nodes(&self) -> usize {
+        self.shards.len()
+    }
+    fn num_batches(&self) -> usize {
+        self.batches
+    }
+
+    fn loss(&self, node: usize, x: &[f64]) -> f64 {
+        let s = &self.shards[node];
+        let m = s.targets.len();
+        let mut acc = 0.0;
+        for r in 0..m {
+            let resid = vdot(s.features.row(r), x) - s.targets[r];
+            acc += resid * resid;
+        }
+        acc / (2.0 * m as f64) + self.lambda2 * x.iter().map(|v| v * v).sum::<f64>()
+    }
+
+    fn grad(&self, node: usize, x: &[f64], out: &mut [f64]) {
+        self.grad_slice(node, 0, self.shards[node].targets.len(), x, out);
+    }
+
+    fn grad_batch(&self, node: usize, batch: usize, x: &[f64], out: &mut [f64]) {
+        let m = self.shards[node].targets.len();
+        let bs = m / self.batches;
+        self.grad_slice(node, batch * bs, (batch + 1) * bs, x, out);
+    }
+
+    fn smoothness(&self) -> f64 {
+        self.l_smooth
+    }
+    fn strong_convexity(&self) -> f64 {
+        self.mu
+    }
+    fn name(&self) -> String {
+        format!("lsq(n={},p={},λ2={})", self.shards.len(), self.dim, self.lambda2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problem::data::sparse_regression;
+    use crate::problem::testutil::{check_batch_consistency, check_gradient};
+    use crate::util::rng::Rng;
+
+    fn small() -> LeastSquares {
+        let (shards, _) = sparse_regression(3, 24, 10, 4, 0.05, 13);
+        LeastSquares::new(shards, 1e-2, 4)
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let p = small();
+        let mut rng = Rng::new(5);
+        let x: Vec<f64> = (0..p.dim()).map(|_| rng.normal()).collect();
+        for node in 0..p.num_nodes() {
+            check_gradient(&p, node, &x, 1e-5);
+        }
+    }
+
+    #[test]
+    fn batch_average_is_full_gradient() {
+        let p = small();
+        let mut rng = Rng::new(6);
+        let x: Vec<f64> = (0..p.dim()).map(|_| rng.normal()).collect();
+        for node in 0..p.num_nodes() {
+            check_batch_consistency(&p, node, &x, 1e-10);
+        }
+    }
+
+    #[test]
+    fn ridge_closed_form_is_stationary() {
+        // global optimum solves (H + 2λ₂I)x = c; the averaged gradient there is 0
+        let p = small();
+        let n = p.num_nodes();
+        let dim = p.dim();
+        let mut h = Mat::zeros(dim, dim);
+        let mut c = vec![0.0; dim];
+        for s in p.shards() {
+            let m = s.targets.len() as f64;
+            h.axpy(1.0 / (n as f64 * m), &s.features.t_matmul(&s.features));
+            for (r, &t) in s.targets.iter().enumerate() {
+                vaxpy(&mut c, t / (n as f64 * m), s.features.row(r));
+            }
+        }
+        for i in 0..dim {
+            h[(i, i)] += 2.0 * p.lambda2;
+        }
+        // solve via eigen decomposition (symmetric PD)
+        let (evals, vecs) = crate::linalg::eigen::sym_eigen(&h);
+        let mut x = vec![0.0; dim];
+        for (j, &lam) in evals.iter().enumerate() {
+            let vj = vecs.col(j);
+            let coef = vdot(&vj, &c) / lam;
+            vaxpy(&mut x, coef, &vj);
+        }
+        let mut g = vec![0.0; dim];
+        p.global_grad(&x, &mut g);
+        assert!(crate::linalg::matrix::vnorm(&g) < 1e-8);
+    }
+
+    #[test]
+    fn exact_mu_at_least_regularizer() {
+        let p = small();
+        let mu = p.exact_global_mu();
+        assert!(mu >= 2.0 * p.lambda2 - 1e-12);
+        assert!(mu <= p.smoothness());
+    }
+}

@@ -1,0 +1,164 @@
+//! Proximal operators for the composite (non-smooth) term r(x).
+//!
+//! The paper requires r to be proper, convex, and *shared across nodes*
+//! (Section 2.2: consensus of X̄ implies consensus of X only when every node
+//! applies the same prox). The operator with parameter η > 0 is
+//!
+//! ```text
+//! prox_{ηr}(v) = argmin_z  r(z) + ‖z − v‖² / (2η)
+//! ```
+//!
+//! Algorithm 1 line 10 applies it to each row of the stacked matrix V; see
+//! [`prox_rows`] / [`prox_rows_into`].
+
+pub mod ops;
+
+pub use ops::{BoxConstraint, ElasticNet, GroupLasso, NonNegative, SquaredL2, Zero, L1};
+
+use crate::linalg::Mat;
+
+/// A proximable convex function r : ℝ^p → ℝ ∪ {+∞}.
+pub trait Prox: Send + Sync {
+    /// In-place evaluation of prox_{ηr} on one vector.
+    fn prox(&self, v: &mut [f64], eta: f64);
+
+    /// The value r(x) (used for objective tracking; +∞ is encoded as
+    /// `f64::INFINITY` for constraint indicators evaluated off-set).
+    fn eval(&self, x: &[f64]) -> f64;
+
+    /// Human-readable tag for tables/configs, e.g. `"l1(0.005)"`.
+    fn name(&self) -> String;
+
+    /// True when r ≡ 0 — lets algorithms skip the prox entirely (LEAD is
+    /// Prox-LEAD with this flag true).
+    fn is_zero(&self) -> bool {
+        false
+    }
+}
+
+/// Apply prox_{ηr} to each row of V (Algorithm 1 line 10), out of place.
+pub fn prox_rows(r: &dyn Prox, v: &Mat, eta: f64) -> Mat {
+    let mut out = v.clone();
+    prox_rows_into(r, &mut out, eta);
+    out
+}
+
+/// Apply prox_{ηr} to each row of V in place (hot loop avoids the clone).
+pub fn prox_rows_into(r: &dyn Prox, v: &mut Mat, eta: f64) {
+    if r.is_zero() {
+        return;
+    }
+    for i in 0..v.rows {
+        r.prox(v.row_mut(i), eta);
+    }
+}
+
+/// Σᵢ r(vᵢ) over the rows of V — the stacked R(X) of problem (2).
+pub fn eval_rows(r: &dyn Prox, v: &Mat) -> f64 {
+    (0..v.rows).map(|i| r.eval(v.row(i))).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::qc::assert_prop;
+    use crate::util::rng::Rng;
+
+    /// prox of the zero function is the identity.
+    #[test]
+    fn zero_prox_is_identity() {
+        let z = Zero;
+        let mut v = vec![1.0, -2.0, 3.5];
+        let orig = v.clone();
+        z.prox(&mut v, 0.7);
+        assert_eq!(v, orig);
+        assert!(z.is_zero());
+        assert_eq!(z.eval(&v), 0.0);
+    }
+
+    /// Non-expansiveness ‖prox(u) − prox(v)‖ ≤ ‖u − v‖ for every operator —
+    /// the property the proof of Lemma 3(iii) rests on.
+    #[test]
+    fn prox_nonexpansive() {
+        let ops: Vec<Box<dyn Prox>> = vec![
+            Box::new(L1::new(0.3)),
+            Box::new(SquaredL2::new(0.5)),
+            Box::new(ElasticNet::new(0.2, 0.4)),
+            Box::new(NonNegative),
+            Box::new(BoxConstraint::new(-1.0, 2.0)),
+            Box::new(GroupLasso::new(0.3, 4)),
+        ];
+        for op in &ops {
+            assert_prop(&format!("nonexpansive {}", op.name()), 40, |g| {
+                let p = g.usize_in(1, 24);
+                let eta = g.f64_in(0.01, 5.0);
+                let mut rng = Rng::new(g.rng.next_u64());
+                let u: Vec<f64> = (0..p).map(|_| rng.normal() * 3.0).collect();
+                let v: Vec<f64> = (0..p).map(|_| rng.normal() * 3.0).collect();
+                let d0: f64 = u.iter().zip(&v).map(|(a, b)| (a - b) * (a - b)).sum();
+                let (mut pu, mut pv) = (u.clone(), v.clone());
+                op.prox(&mut pu, eta);
+                op.prox(&mut pv, eta);
+                let d1: f64 = pu.iter().zip(&pv).map(|(a, b)| (a - b) * (a - b)).sum();
+                if d1 <= d0 + 1e-12 {
+                    Ok(())
+                } else {
+                    Err(format!("expanded: {d1} > {d0}"))
+                }
+            });
+        }
+    }
+
+    /// prox minimizes r(z) + ‖z−v‖²/(2η): check first-order optimality by
+    /// comparing the prox objective at the prox point vs random perturbations.
+    #[test]
+    fn prox_is_minimizer() {
+        let ops: Vec<Box<dyn Prox>> = vec![
+            Box::new(L1::new(0.3)),
+            Box::new(SquaredL2::new(0.5)),
+            Box::new(ElasticNet::new(0.2, 0.4)),
+            Box::new(GroupLasso::new(0.5, 3)),
+        ];
+        for op in &ops {
+            assert_prop(&format!("minimizer {}", op.name()), 25, |g| {
+                let p = g.usize_in(1, 12);
+                let eta = g.f64_in(0.05, 2.0);
+                let mut rng = Rng::new(g.rng.next_u64());
+                let v: Vec<f64> = (0..p).map(|_| rng.normal() * 2.0).collect();
+                let mut z = v.clone();
+                op.prox(&mut z, eta);
+                let obj = |x: &[f64]| {
+                    op.eval(x)
+                        + x.iter()
+                            .zip(&v)
+                            .map(|(a, b)| (a - b) * (a - b))
+                            .sum::<f64>()
+                            / (2.0 * eta)
+                };
+                let base = obj(&z);
+                for _ in 0..20 {
+                    let pert: Vec<f64> =
+                        z.iter().map(|&x| x + 0.1 * rng.normal()).collect();
+                    if obj(&pert) < base - 1e-9 {
+                        return Err(format!("perturbation beats prox: {} < {base}", obj(&pert)));
+                    }
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn prox_rows_matches_per_row() {
+        let r = L1::new(0.25);
+        let v = Mat::from_rows(&[vec![1.0, -0.1], vec![-2.0, 0.05]]);
+        let out = prox_rows(&r, &v, 1.0);
+        let mut r0 = v.row(0).to_vec();
+        let mut r1 = v.row(1).to_vec();
+        r.prox(&mut r0, 1.0);
+        r.prox(&mut r1, 1.0);
+        assert_eq!(out.row(0), &r0[..]);
+        assert_eq!(out.row(1), &r1[..]);
+        assert!((eval_rows(&r, &out) - (r.eval(&r0) + r.eval(&r1))).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,301 @@
+//! Concrete proximal operators.
+//!
+//! Each has a closed form; the experiments use [`L1`] (the paper's λ₁‖X‖₁
+//! regularizer, prox = soft-thresholding) and [`Zero`] (the smooth case).
+
+use super::Prox;
+use crate::linalg::matrix::vnorm;
+
+/// r ≡ 0 — the smooth case. Prox-LEAD with `Zero` *is* LEAD (Algorithm 3).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Zero;
+
+impl Prox for Zero {
+    fn prox(&self, _v: &mut [f64], _eta: f64) {}
+    fn eval(&self, _x: &[f64]) -> f64 {
+        0.0
+    }
+    fn name(&self) -> String {
+        "none".into()
+    }
+    fn is_zero(&self) -> bool {
+        true
+    }
+}
+
+/// r(x) = λ‖x‖₁; prox is elementwise soft-thresholding
+/// `S_{ηλ}(v) = sign(v)·max(|v| − ηλ, 0)`.
+#[derive(Clone, Copy, Debug)]
+pub struct L1 {
+    pub lambda: f64,
+}
+
+impl L1 {
+    pub fn new(lambda: f64) -> L1 {
+        assert!(lambda >= 0.0);
+        L1 { lambda }
+    }
+}
+
+/// Elementwise soft-threshold helper shared by [`L1`] and [`ElasticNet`].
+#[inline(always)]
+pub fn soft_threshold(v: f64, t: f64) -> f64 {
+    if v > t {
+        v - t
+    } else if v < -t {
+        v + t
+    } else {
+        0.0
+    }
+}
+
+impl Prox for L1 {
+    fn prox(&self, v: &mut [f64], eta: f64) {
+        let t = eta * self.lambda;
+        for x in v.iter_mut() {
+            *x = soft_threshold(*x, t);
+        }
+    }
+    fn eval(&self, x: &[f64]) -> f64 {
+        self.lambda * x.iter().map(|v| v.abs()).sum::<f64>()
+    }
+    fn name(&self) -> String {
+        format!("l1({})", self.lambda)
+    }
+}
+
+/// r(x) = λ‖x‖²; prox is the shrinkage `v / (1 + 2ηλ)`.
+///
+/// (The paper folds its λ₂‖X‖₂² term into the *smooth* part f; this operator
+/// exists so the same term can instead be handled proximally — an ablation.)
+#[derive(Clone, Copy, Debug)]
+pub struct SquaredL2 {
+    pub lambda: f64,
+}
+
+impl SquaredL2 {
+    pub fn new(lambda: f64) -> SquaredL2 {
+        assert!(lambda >= 0.0);
+        SquaredL2 { lambda }
+    }
+}
+
+impl Prox for SquaredL2 {
+    fn prox(&self, v: &mut [f64], eta: f64) {
+        let s = 1.0 / (1.0 + 2.0 * eta * self.lambda);
+        for x in v.iter_mut() {
+            *x *= s;
+        }
+    }
+    fn eval(&self, x: &[f64]) -> f64 {
+        self.lambda * x.iter().map(|v| v * v).sum::<f64>()
+    }
+    fn name(&self) -> String {
+        format!("l2sq({})", self.lambda)
+    }
+}
+
+/// r(x) = λ₁‖x‖₁ + λ₂‖x‖² — the elastic net. Prox composes shrinkage after
+/// soft-thresholding: `prox(v) = S_{ηλ₁}(v) / (1 + 2ηλ₂)`.
+#[derive(Clone, Copy, Debug)]
+pub struct ElasticNet {
+    pub l1: f64,
+    pub l2: f64,
+}
+
+impl ElasticNet {
+    pub fn new(l1: f64, l2: f64) -> ElasticNet {
+        assert!(l1 >= 0.0 && l2 >= 0.0);
+        ElasticNet { l1, l2 }
+    }
+}
+
+impl Prox for ElasticNet {
+    fn prox(&self, v: &mut [f64], eta: f64) {
+        let t = eta * self.l1;
+        let s = 1.0 / (1.0 + 2.0 * eta * self.l2);
+        for x in v.iter_mut() {
+            *x = soft_threshold(*x, t) * s;
+        }
+    }
+    fn eval(&self, x: &[f64]) -> f64 {
+        self.l1 * x.iter().map(|v| v.abs()).sum::<f64>()
+            + self.l2 * x.iter().map(|v| v * v).sum::<f64>()
+    }
+    fn name(&self) -> String {
+        format!("elastic({},{})", self.l1, self.l2)
+    }
+}
+
+/// Indicator of the non-negative orthant; prox is projection max(v, 0).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NonNegative;
+
+impl Prox for NonNegative {
+    fn prox(&self, v: &mut [f64], _eta: f64) {
+        for x in v.iter_mut() {
+            if *x < 0.0 {
+                *x = 0.0;
+            }
+        }
+    }
+    fn eval(&self, x: &[f64]) -> f64 {
+        if x.iter().all(|&v| v >= -1e-12) {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    }
+    fn name(&self) -> String {
+        "nonneg".into()
+    }
+}
+
+/// Indicator of the box [lo, hi]^p; prox is the clamp projection.
+#[derive(Clone, Copy, Debug)]
+pub struct BoxConstraint {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl BoxConstraint {
+    pub fn new(lo: f64, hi: f64) -> BoxConstraint {
+        assert!(lo <= hi);
+        BoxConstraint { lo, hi }
+    }
+}
+
+impl Prox for BoxConstraint {
+    fn prox(&self, v: &mut [f64], _eta: f64) {
+        for x in v.iter_mut() {
+            *x = x.clamp(self.lo, self.hi);
+        }
+    }
+    fn eval(&self, x: &[f64]) -> f64 {
+        let tol = 1e-12;
+        if x.iter().all(|&v| v >= self.lo - tol && v <= self.hi + tol) {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    }
+    fn name(&self) -> String {
+        format!("box[{},{}]", self.lo, self.hi)
+    }
+}
+
+/// r(x) = λ Σ_g ‖x_g‖₂ over contiguous groups of size `group`; prox is
+/// blockwise soft-thresholding of the group norm (the last group may be
+/// short when p is not a multiple of `group`).
+#[derive(Clone, Copy, Debug)]
+pub struct GroupLasso {
+    pub lambda: f64,
+    pub group: usize,
+}
+
+impl GroupLasso {
+    pub fn new(lambda: f64, group: usize) -> GroupLasso {
+        assert!(lambda >= 0.0 && group > 0);
+        GroupLasso { lambda, group }
+    }
+}
+
+impl Prox for GroupLasso {
+    fn prox(&self, v: &mut [f64], eta: f64) {
+        let t = eta * self.lambda;
+        for chunk in v.chunks_mut(self.group) {
+            let n = vnorm(chunk);
+            let scale = if n <= t { 0.0 } else { 1.0 - t / n };
+            for x in chunk.iter_mut() {
+                *x *= scale;
+            }
+        }
+    }
+    fn eval(&self, x: &[f64]) -> f64 {
+        self.lambda * x.chunks(self.group).map(vnorm).sum::<f64>()
+    }
+    fn name(&self) -> String {
+        format!("group_lasso({},{})", self.lambda, self.group)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn soft_threshold_known_values() {
+        assert_eq!(soft_threshold(3.0, 1.0), 2.0);
+        assert_eq!(soft_threshold(-3.0, 1.0), -2.0);
+        assert_eq!(soft_threshold(0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(-0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(1.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn l1_prox_and_eval() {
+        let r = L1::new(0.5);
+        let mut v = vec![2.0, -0.3, 0.0, -2.0];
+        r.prox(&mut v, 1.0); // threshold 0.5
+        assert_eq!(v, vec![1.5, 0.0, 0.0, -1.5]);
+        assert!((r.eval(&v) - 0.5 * 3.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn l2sq_prox_shrinks() {
+        let r = SquaredL2::new(0.5);
+        let mut v = vec![2.0, -4.0];
+        r.prox(&mut v, 1.0); // divide by (1 + 2*1*0.5) = 2
+        assert_eq!(v, vec![1.0, -2.0]);
+        assert_eq!(r.eval(&[1.0, -2.0]), 0.5 * 5.0);
+    }
+
+    #[test]
+    fn elastic_net_composes() {
+        let r = ElasticNet::new(0.5, 0.5);
+        let l1 = L1::new(0.5);
+        let l2 = SquaredL2::new(0.5);
+        let mut a = vec![2.0, -0.3, 1.0];
+        let mut b = a.clone();
+        r.prox(&mut a, 1.0);
+        l1.prox(&mut b, 1.0);
+        l2.prox(&mut b, 1.0);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn projections() {
+        let nn = NonNegative;
+        let mut v = vec![-1.0, 2.0];
+        nn.prox(&mut v, 10.0);
+        assert_eq!(v, vec![0.0, 2.0]);
+        assert_eq!(nn.eval(&v), 0.0);
+        assert_eq!(nn.eval(&[-1.0]), f64::INFINITY);
+
+        let bx = BoxConstraint::new(-1.0, 1.0);
+        let mut v = vec![-3.0, 0.5, 7.0];
+        bx.prox(&mut v, 1.0);
+        assert_eq!(v, vec![-1.0, 0.5, 1.0]);
+        assert_eq!(bx.eval(&v), 0.0);
+        assert_eq!(bx.eval(&[2.0]), f64::INFINITY);
+    }
+
+    #[test]
+    fn group_lasso_zeroes_small_groups() {
+        let r = GroupLasso::new(1.0, 2);
+        // group 1: norm 5 > 1 → scaled by (1 - 1/5); group 2: norm 0.5 ≤ 1 → 0
+        let mut v = vec![3.0, 4.0, 0.3, 0.4];
+        r.prox(&mut v, 1.0);
+        assert!((v[0] - 3.0 * 0.8).abs() < 1e-12);
+        assert!((v[1] - 4.0 * 0.8).abs() < 1e-12);
+        assert_eq!(&v[2..], &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn group_lasso_ragged_tail() {
+        let r = GroupLasso::new(0.1, 4);
+        let mut v = vec![1.0; 6]; // groups: 4 + 2
+        r.prox(&mut v, 1.0);
+        assert!(v.iter().all(|&x| x > 0.0 && x < 1.0));
+    }
+}

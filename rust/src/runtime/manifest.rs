@@ -1,0 +1,110 @@
+//! Artifact manifest — the contract between `python/compile/aot.py` and
+//! the rust registry. One entry per lowered (fn, m, d, C, λ₂) artifact.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    /// Which L2 function: `"logreg_grad"` or `"logreg_loss"`.
+    pub fn_name: String,
+    pub m: usize,
+    pub d: usize,
+    pub c: usize,
+    pub lam2: f64,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Manifest {
+    pub format: String,
+    pub dtype: String,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = Json::parse(text).map_err(|e| anyhow!("manifest json: {e:?}"))?;
+        let format = root
+            .get("format")
+            .and_then(|j| j.as_str())
+            .ok_or_else(|| anyhow!("manifest missing 'format'"))?
+            .to_string();
+        if format != "hlo-text" {
+            return Err(anyhow!("unsupported artifact format '{format}'"));
+        }
+        let dtype = root
+            .get("dtype")
+            .and_then(|j| j.as_str())
+            .unwrap_or("f32")
+            .to_string();
+        let arts = root
+            .get("artifacts")
+            .and_then(|j| j.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let str_field = |k: &str| -> Result<String> {
+                a.get(k)
+                    .and_then(|j| j.as_str())
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow!("artifact missing '{k}'"))
+            };
+            let num_field = |k: &str| -> Result<usize> {
+                a.get(k).and_then(|j| j.as_usize()).ok_or_else(|| anyhow!("artifact missing '{k}'"))
+            };
+            artifacts.push(ArtifactMeta {
+                name: str_field("name")?,
+                file: str_field("file")?,
+                fn_name: str_field("fn")?,
+                m: num_field("m")?,
+                d: num_field("d")?,
+                c: num_field("c")?,
+                lam2: a.get("lam2").and_then(|j| j.as_f64()).unwrap_or(0.0),
+            });
+        }
+        Ok(Manifest { format, dtype, artifacts })
+    }
+
+    pub fn read(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)?;
+        Manifest::parse(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text", "dtype": "f32",
+      "artifacts": [
+        {"name": "logreg_grad_8x4x3_l0.01", "file": "g.hlo.txt",
+         "fn": "logreg_grad", "m": 8, "d": 4, "c": 3, "lam2": 0.01}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = &m.artifacts[0];
+        assert_eq!(a.fn_name, "logreg_grad");
+        assert_eq!((a.m, a.d, a.c), (8, 4, 3));
+        assert_eq!(a.lam2, 0.01);
+    }
+
+    #[test]
+    fn rejects_unknown_format() {
+        let bad = SAMPLE.replace("hlo-text", "proto");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"format":"hlo-text","artifacts":[{}]}"#).is_err());
+    }
+}

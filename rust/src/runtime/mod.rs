@@ -1,0 +1,238 @@
+//! PJRT runtime — loads the AOT artifacts `python/compile/aot.py` emitted
+//! (HLO text + manifest.json) and executes them on the request path.
+//!
+//! Python runs once at build time (`make artifacts`); after that the rust
+//! binary is self-contained: `HloModuleProto::from_text_file` →
+//! `XlaComputation` → `PjRtClient::compile` → `execute`. HLO *text* is the
+//! interchange format because jax ≥ 0.5 serializes protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects (see
+//! /opt/xla-example/README.md).
+//!
+//! Thread safety: the `xla` crate's handles hold `Rc` refcounts and raw
+//! PJRT pointers, so they are `!Send`. [`PjrtRuntime`] owns them inside a
+//! `Mutex` and never lets a handle escape — every PJRT call (including the
+//! `Rc` clones `execute` performs internally) happens under the lock, so
+//! promoting the wrapper to `Send + Sync` is sound. The PJRT CPU client
+//! itself is thread-safe; the lock is about the wrapper's `Rc`s.
+
+pub mod manifest;
+pub mod xla_problem;
+
+pub use manifest::{ArtifactMeta, Manifest};
+pub use xla_problem::XlaLogReg;
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+struct Inner {
+    /// Kept alive for the lifetime of the executables (PJRT requires the
+    /// client to outlive everything it compiled).
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+    dir: PathBuf,
+    manifest: Manifest,
+}
+
+// SAFETY: `Inner` is only ever touched through `PjrtRuntime`'s Mutex, so
+// no two threads manipulate the Rc refcounts or PJRT handles concurrently,
+// and no handle is exposed outside the lock. See module docs.
+unsafe impl Send for Inner {}
+
+/// A compiled-artifact registry + executor over the PJRT CPU client.
+pub struct PjrtRuntime {
+    inner: Mutex<Inner>,
+}
+
+impl PjrtRuntime {
+    /// Open `dir` (normally `artifacts/`), parse `manifest.json`, and
+    /// compile every artifact eagerly. Fails with a pointer at
+    /// `make artifacts` when the directory is missing.
+    pub fn load(dir: &Path) -> Result<PjrtRuntime> {
+        let manifest = Manifest::read(&dir.join("manifest.json")).with_context(|| {
+            format!(
+                "cannot read {}/manifest.json — run `make artifacts` first",
+                dir.display()
+            )
+        })?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        let mut execs = HashMap::new();
+        for art in &manifest.artifacts {
+            let path = dir.join(&art.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e}", art.name))?;
+            execs.insert(art.name.clone(), exe);
+        }
+        Ok(PjrtRuntime {
+            inner: Mutex::new(Inner { client, execs, dir: dir.to_path_buf(), manifest }),
+        })
+    }
+
+    /// Artifact metadata (immutable snapshot of the manifest).
+    pub fn manifest(&self) -> Manifest {
+        self.inner.lock().unwrap().manifest.clone()
+    }
+
+    /// Find the gradient artifact for a given shape, if compiled.
+    pub fn find(&self, fn_name: &str, m: usize, d: usize, c: usize) -> Option<ArtifactMeta> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| a.fn_name == fn_name && a.m == m && a.d == d && a.c == c)
+            .cloned()
+    }
+
+    /// Execute artifact `name` with f32 row-major inputs `(data, dims)…`,
+    /// returning the flattened f32 output of the 1-tuple root.
+    pub fn exec(&self, name: &str, args: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+        let inner = self.inner.lock().unwrap();
+        let exe = inner
+            .execs
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact '{name}' in {}", inner.dir.display()))?;
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|(data, dims)| {
+                let expected: i64 = dims.iter().product();
+                assert_eq!(data.len() as i64, expected, "input size/dims mismatch");
+                xla::Literal::vec1(data)
+                    .reshape(dims)
+                    .map_err(|e| anyhow!("reshape {dims:?}: {e}"))
+            })
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e}"))?;
+        // aot.py lowers with return_tuple=True ⇒ unwrap the 1-tuple
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple {name}: {e}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec {name}: {e}"))
+    }
+
+    /// Number of compiled executables.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().execs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Default artifact directory: `$CARGO_MANIFEST_DIR/artifacts` when built
+/// from the workspace, else `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    let ws = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if ws.exists() {
+        ws
+    } else {
+        PathBuf::from("artifacts")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Skip (with a loud note) when `make artifacts` hasn't run — the
+    /// Makefile test target always builds artifacts first.
+    fn runtime_or_skip() -> Option<PjrtRuntime> {
+        let dir = default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("SKIP runtime tests: {} missing (run `make artifacts`)", dir.display());
+            return None;
+        }
+        Some(PjrtRuntime::load(&dir).expect("artifacts present but failed to load"))
+    }
+
+    #[test]
+    fn loads_all_manifest_artifacts() {
+        let Some(rt) = runtime_or_skip() else { return };
+        let manifest = rt.manifest();
+        assert_eq!(rt.len(), manifest.artifacts.len());
+        assert!(rt.find("logreg_grad", 24, 8, 4).is_some());
+        assert!(rt.find("logreg_grad", 1, 1, 1).is_none());
+    }
+
+    #[test]
+    fn grad_artifact_matches_native_gradient() {
+        use crate::problem::data::{blobs, BlobSpec};
+        use crate::problem::{LogReg, Problem};
+        let Some(rt) = runtime_or_skip() else { return };
+        // shape (24, 8, 4), λ2 = 0.005 — the shipped test artifact
+        let spec = BlobSpec {
+            nodes: 1,
+            samples_per_node: 24,
+            dim: 8,
+            classes: 4,
+            seed: 3,
+            ..Default::default()
+        };
+        let p = LogReg::new(blobs(&spec), 4, 0.005, 4);
+        let art = rt.find("logreg_grad", 24, 8, 4).expect("test artifact");
+
+        let mut rng = crate::util::rng::Rng::new(5);
+        let w: Vec<f64> = (0..p.dim()).map(|_| 0.3 * rng.normal()).collect();
+        let mut native = vec![0.0; p.dim()];
+        p.grad(0, &w, &mut native);
+
+        // assemble f32 inputs: A (m,d), W (d,C), Y one-hot (m,C)
+        let shard = &p.shards()[0];
+        let a32: Vec<f32> = shard.features.data.iter().map(|&v| v as f32).collect();
+        let w32: Vec<f32> = w.iter().map(|&v| v as f32).collect();
+        let mut y32 = vec![0.0f32; 24 * 4];
+        for (r, &lbl) in shard.labels.iter().enumerate() {
+            y32[r * 4 + lbl] = 1.0;
+        }
+        let out = rt
+            .exec(
+                &art.name,
+                &[(&a32, &[24, 8]), (&w32, &[8, 4]), (&y32, &[24, 4])],
+            )
+            .expect("execute");
+        assert_eq!(out.len(), p.dim());
+        for (i, (&x, &n)) in out.iter().zip(&native).enumerate() {
+            assert!(
+                (x as f64 - n).abs() < 1e-5 * (1.0 + n.abs()),
+                "grad[{i}]: xla {x} vs native {n}"
+            );
+        }
+    }
+
+    #[test]
+    fn loss_artifact_evaluates() {
+        let Some(rt) = runtime_or_skip() else { return };
+        let art = rt.find("logreg_loss", 24, 8, 4).expect("loss artifact");
+        let a = vec![0.0f32; 24 * 8];
+        let w = vec![0.0f32; 8 * 4];
+        let mut y = vec![0.0f32; 24 * 4];
+        for r in 0..24 {
+            y[r * 4] = 1.0;
+        }
+        let out = rt.exec(&art.name, &[(&a, &[24, 8]), (&w, &[8, 4]), (&y, &[24, 4])]).unwrap();
+        // zero weights ⇒ CE = ln(C)
+        assert_eq!(out.len(), 1);
+        assert!((out[0] as f64 - (4.0f64).ln()).abs() < 1e-5, "{}", out[0]);
+    }
+
+    #[test]
+    fn exec_unknown_artifact_errors() {
+        let Some(rt) = runtime_or_skip() else { return };
+        assert!(rt.exec("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn runtime_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<PjrtRuntime>();
+    }
+}

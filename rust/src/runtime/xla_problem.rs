@@ -1,0 +1,229 @@
+//! [`XlaLogReg`] — the logistic-regression problem with its gradient
+//! hot-spot executed by the PJRT runtime (the JAX/Pallas AOT artifact)
+//! instead of the native rust kernel.
+//!
+//! This is the L3→L2/L1 seam: any [`crate::algorithm::Algorithm`] runs
+//! unchanged over either backend, and `grad_backends_agree` in the
+//! integration suite pins the two to ≤ f32 tolerance of each other.
+//! Loss evaluation stays native (f64, off the hot path, used only for
+//! metric logging).
+
+use super::PjrtRuntime;
+use crate::problem::{LogReg, Problem};
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+
+/// Per-node f32 input caches (A and one-hot Y), sliced per batch.
+struct NodeCache {
+    a32: Vec<f32>,
+    y32: Vec<f32>,
+}
+
+pub struct XlaLogReg {
+    native: LogReg,
+    rt: Arc<PjrtRuntime>,
+    grad_full: String,
+    grad_batch: Option<String>,
+    caches: Vec<NodeCache>,
+    batch_rows: usize,
+}
+
+impl XlaLogReg {
+    /// Wrap `native`, resolving the full-gradient artifact (required) and
+    /// the batch-gradient artifact (optional — without it, batch draws
+    /// fall back to the native kernel and a warning is worth logging).
+    pub fn new(native: LogReg, rt: Arc<PjrtRuntime>) -> Result<XlaLogReg> {
+        let m = native.samples_per_node();
+        let d = native.features;
+        let c = native.classes;
+        let grad_full = rt
+            .find("logreg_grad", m, d, c)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no logreg_grad artifact for shape ({m},{d},{c}) — \
+                     add a --spec to `make artifacts`"
+                )
+            })?
+            .name;
+        let batch_rows = m / native.num_batches();
+        let grad_batch = rt.find("logreg_grad", batch_rows, d, c).map(|a| a.name);
+
+        let caches = native
+            .shards()
+            .iter()
+            .map(|s| {
+                let a32: Vec<f32> = s.features.data.iter().map(|&v| v as f32).collect();
+                let mut y32 = vec![0.0f32; s.labels.len() * c];
+                for (r, &lbl) in s.labels.iter().enumerate() {
+                    y32[r * c + lbl] = 1.0;
+                }
+                NodeCache { a32, y32 }
+            })
+            .collect();
+
+        Ok(XlaLogReg { native, rt, grad_full, grad_batch, caches, batch_rows })
+    }
+
+    /// True when stochastic draws also run on PJRT (batch artifact found).
+    pub fn batch_on_xla(&self) -> bool {
+        self.grad_batch.is_some()
+    }
+
+    pub fn native(&self) -> &LogReg {
+        &self.native
+    }
+
+    fn exec_grad(&self, name: &str, a: &[f32], y: &[f32], rows: usize, x: &[f64], out: &mut [f64]) {
+        let d = self.native.features as i64;
+        let c = self.native.classes as i64;
+        let w32: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let res = self
+            .rt
+            .exec(
+                name,
+                &[(a, &[rows as i64, d]), (&w32, &[d, c]), (y, &[rows as i64, c])],
+            )
+            .expect("PJRT gradient execution failed");
+        for (o, &v) in out.iter_mut().zip(&res) {
+            *o = v as f64;
+        }
+    }
+}
+
+impl Problem for XlaLogReg {
+    fn dim(&self) -> usize {
+        self.native.dim()
+    }
+    fn num_nodes(&self) -> usize {
+        self.native.num_nodes()
+    }
+    fn num_batches(&self) -> usize {
+        self.native.num_batches()
+    }
+
+    fn loss(&self, node: usize, x: &[f64]) -> f64 {
+        self.native.loss(node, x)
+    }
+
+    fn grad(&self, node: usize, x: &[f64], out: &mut [f64]) {
+        let cache = &self.caches[node];
+        let rows = self.native.samples_per_node();
+        let name = self.grad_full.clone();
+        self.exec_grad(&name, &cache.a32, &cache.y32, rows, x, out);
+    }
+
+    fn grad_batch(&self, node: usize, batch: usize, x: &[f64], out: &mut [f64]) {
+        match &self.grad_batch {
+            Some(name) => {
+                let cache = &self.caches[node];
+                let d = self.native.features;
+                let c = self.native.classes;
+                let (lo, hi) = (batch * self.batch_rows, (batch + 1) * self.batch_rows);
+                let a = &cache.a32[lo * d..hi * d];
+                let y = &cache.y32[lo * c..hi * c];
+                let name = name.clone();
+                self.exec_grad(&name, a, y, self.batch_rows, x, out);
+            }
+            None => self.native.grad_batch(node, batch, x, out),
+        }
+    }
+
+    fn smoothness(&self) -> f64 {
+        self.native.smoothness()
+    }
+    fn strong_convexity(&self) -> f64 {
+        self.native.strong_convexity()
+    }
+    fn name(&self) -> String {
+        format!("xla[{}]", self.native.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problem::data::{blobs, BlobSpec};
+    use crate::runtime::default_artifact_dir;
+    use crate::util::rng::Rng;
+
+    fn setup() -> Option<XlaLogReg> {
+        let dir = default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("SKIP xla_problem tests: run `make artifacts`");
+            return None;
+        }
+        let rt = Arc::new(PjrtRuntime::load(&dir).unwrap());
+        let spec = BlobSpec {
+            nodes: 3,
+            samples_per_node: 24,
+            dim: 8,
+            classes: 4,
+            seed: 3,
+            ..Default::default()
+        };
+        let native = LogReg::new(blobs(&spec), 4, 0.005, 4);
+        Some(XlaLogReg::new(native, rt).unwrap())
+    }
+
+    #[test]
+    fn grad_backends_agree() {
+        let Some(p) = setup() else { return };
+        let mut rng = Rng::new(9);
+        let x: Vec<f64> = (0..p.dim()).map(|_| 0.3 * rng.normal()).collect();
+        let mut xg = vec![0.0; p.dim()];
+        let mut ng = vec![0.0; p.dim()];
+        for node in 0..p.num_nodes() {
+            p.grad(node, &x, &mut xg);
+            p.native().grad(node, &x, &mut ng);
+            for (i, (&a, &b)) in xg.iter().zip(&ng).enumerate() {
+                assert!((a - b).abs() < 1e-5 * (1.0 + b.abs()), "node {node} grad[{i}]: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_grad_falls_back_when_no_artifact() {
+        // shape (24,8,4) with 4 batches ⇒ batch rows 6: no shipped artifact,
+        // so the native fallback must kick in and still be correct
+        let Some(p) = setup() else { return };
+        assert!(!p.batch_on_xla());
+        let x = vec![0.1; p.dim()];
+        let mut got = vec![0.0; p.dim()];
+        let mut want = vec![0.0; p.dim()];
+        p.grad_batch(0, 2, &x, &mut got);
+        p.native().grad_batch(0, 2, &x, &mut want);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn prox_lead_runs_on_xla_backend() {
+        use crate::algorithm::{Algorithm, Hyper, ProxLead};
+        use crate::compress::InfNormQuantizer;
+        use crate::graph::{mixing_matrix, Graph, MixingRule};
+        use crate::linalg::Mat;
+        use crate::oracle::OracleKind;
+        use crate::prox::L1;
+        let Some(p) = setup() else { return };
+        let g = Graph::ring(3);
+        let w = mixing_matrix(&g, MixingRule::Metropolis);
+        let x0 = Mat::zeros(3, p.dim());
+        let mut alg = ProxLead::new(
+            &p,
+            &w,
+            &x0,
+            Hyper::paper_default(0.5 / p.smoothness()),
+            OracleKind::Full,
+            Box::new(InfNormQuantizer::new(2, 256)),
+            Box::new(L1::new(5e-3)),
+            1,
+        );
+        for _ in 0..50 {
+            alg.step(&p);
+        }
+        let zeros = vec![0.0; p.dim()];
+        let loss_now: f64 = (0..3).map(|i| p.loss(i, alg.x().row(0))).sum();
+        let loss_0: f64 = (0..3).map(|i| p.loss(i, &zeros)).sum();
+        assert!(loss_now < loss_0, "training on XLA backend must reduce loss");
+        assert!(alg.x().is_finite());
+    }
+}

@@ -1,0 +1,293 @@
+//! Tiny benchmark harness (criterion is unavailable offline).
+//!
+//! Each `cargo bench` target is a `harness = false` binary that uses
+//! [`BenchSet`] for timed micro-sections and [`Table`]/CSV emission for the
+//! paper-figure harnesses. Timing methodology: warmup runs, then `reps`
+//! timed runs; report mean ± std and p50.
+
+use super::stats;
+use std::fmt::Write as _;
+use std::time::Instant;
+
+/// One timed measurement series.
+pub struct BenchResult {
+    pub name: String,
+    pub samples_ns: Vec<f64>,
+    /// Optional work-unit count per run (e.g. flops, bytes) for throughput.
+    pub work_per_run: Option<f64>,
+    pub work_unit: &'static str,
+}
+
+impl BenchResult {
+    pub fn mean_ns(&self) -> f64 {
+        stats::mean(&self.samples_ns)
+    }
+    pub fn p50_ns(&self) -> f64 {
+        stats::percentile(&self.samples_ns, 50.0)
+    }
+    pub fn std_ns(&self) -> f64 {
+        stats::stddev(&self.samples_ns)
+    }
+    /// Work units per second at the median run time.
+    pub fn throughput(&self) -> Option<f64> {
+        self.work_per_run.map(|w| w / (self.p50_ns() * 1e-9))
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+fn fmt_rate(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2} G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2} M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2} K", x / 1e3)
+    } else {
+        format!("{x:.2} ")
+    }
+}
+
+/// A named collection of benchmarks that prints a summary on drop.
+pub struct BenchSet {
+    title: String,
+    results: Vec<BenchResult>,
+    warmup: usize,
+    reps: usize,
+}
+
+impl BenchSet {
+    pub fn new(title: &str) -> Self {
+        BenchSet {
+            title: title.to_string(),
+            results: Vec::new(),
+            warmup: 3,
+            reps: 10,
+        }
+    }
+
+    pub fn with_reps(mut self, warmup: usize, reps: usize) -> Self {
+        self.warmup = warmup;
+        self.reps = reps;
+        self
+    }
+
+    /// Time `f` (called once per rep). Use a closure returning a value to
+    /// defeat dead-code elimination; we black-box via `std::hint`.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) {
+        self.run_with_work(name, None, "", &mut f)
+    }
+
+    /// Time `f` with a throughput annotation (`work` units per run).
+    pub fn run_throughput<T>(
+        &mut self,
+        name: &str,
+        work: f64,
+        unit: &'static str,
+        mut f: impl FnMut() -> T,
+    ) {
+        self.run_with_work(name, Some(work), unit, &mut f)
+    }
+
+    fn run_with_work<T>(
+        &mut self,
+        name: &str,
+        work: Option<f64>,
+        unit: &'static str,
+        f: &mut dyn FnMut() -> T,
+    ) {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.reps);
+        for _ in 0..self.reps {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        let r = BenchResult {
+            name: name.to_string(),
+            samples_ns: samples,
+            work_per_run: work,
+            work_unit: unit,
+        };
+        println!(
+            "  {:<44} {:>12} ± {:>10}  p50 {:>12}{}",
+            r.name,
+            fmt_ns(r.mean_ns()),
+            fmt_ns(r.std_ns()),
+            fmt_ns(r.p50_ns()),
+            r.throughput()
+                .map(|t| format!("   {}{}/s", fmt_rate(t), r.work_unit))
+                .unwrap_or_default()
+        );
+        self.results.push(r);
+    }
+
+    pub fn header(&self) {
+        println!("\n== {} ==", self.title);
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// An aligned text table for paper-style outputs.
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "\n### {}", self.title);
+        let hdr: Vec<String> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+            .collect();
+        let _ = writeln!(out, "| {} |", hdr.join(" | "));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        let _ = writeln!(out, "|-{}-|", sep.join("-|-"));
+        for row in &self.rows {
+            let cells: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect();
+            let _ = writeln!(out, "| {} |", cells.join(" | "));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Write series as CSV: first column is the x value, then one column per
+/// named series (missing points are blank). Used to dump figure data.
+pub struct CsvSeries {
+    pub xlabel: String,
+    pub names: Vec<String>,
+    /// Per-series (x, y) points.
+    pub series: Vec<Vec<(f64, f64)>>,
+}
+
+impl CsvSeries {
+    pub fn new(xlabel: &str) -> Self {
+        CsvSeries {
+            xlabel: xlabel.to_string(),
+            names: Vec::new(),
+            series: Vec::new(),
+        }
+    }
+
+    pub fn add(&mut self, name: &str, pts: Vec<(f64, f64)>) {
+        self.names.push(name.to_string());
+        self.series.push(pts);
+    }
+
+    pub fn to_csv(&self) -> String {
+        // union of x values, sorted
+        let mut xs: Vec<f64> = self.series.iter().flatten().map(|p| p.0).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.dedup();
+        let mut out = String::new();
+        let _ = writeln!(out, "{},{}", self.xlabel, self.names.join(","));
+        for &x in &xs {
+            let mut line = format!("{x}");
+            for s in &self.series {
+                match s.iter().find(|p| p.0 == x) {
+                    Some(&(_, y)) => {
+                        let _ = write!(line, ",{y:e}");
+                    }
+                    None => line.push(','),
+                }
+            }
+            let _ = writeln!(out, "{line}");
+        }
+        out
+    }
+
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_records() {
+        let mut b = BenchSet::new("t").with_reps(1, 3);
+        b.run("noop", || 1 + 1);
+        assert_eq!(b.results().len(), 1);
+        assert_eq!(b.results()[0].samples_ns.len(), 3);
+    }
+
+    #[test]
+    fn table_render_aligned() {
+        let mut t = Table::new("demo", &["alg", "iters"]);
+        t.row(vec!["prox-lead".into(), "120".into()]);
+        let s = t.render();
+        assert!(s.contains("prox-lead"));
+        assert!(s.contains("| alg"));
+    }
+
+    #[test]
+    fn csv_union_of_x() {
+        let mut c = CsvSeries::new("epoch");
+        c.add("a", vec![(0.0, 1.0), (1.0, 0.5)]);
+        c.add("b", vec![(1.0, 0.4), (2.0, 0.2)]);
+        let csv = c.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 4); // header + 3 x values
+        assert!(lines[0].starts_with("epoch,a,b"));
+        assert!(lines[1].starts_with("0,1e0,"));
+    }
+
+    #[test]
+    fn throughput_annotation() {
+        let mut b = BenchSet::new("t").with_reps(0, 2);
+        b.run_throughput("copy", 1e6, "B", || vec![0u8; 16]);
+        assert!(b.results()[0].throughput().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! Infrastructure substrates built in-repo (the offline environment has no
+//! rand / serde_json / criterion / proptest): PRNG, JSON, stats, bench
+//! harness, and a mini property-testing framework.
+
+pub mod bench;
+pub mod json;
+pub mod qc;
+pub mod rng;
+pub mod stats;

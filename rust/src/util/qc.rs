@@ -1,0 +1,166 @@
+//! Mini property-testing framework (proptest is unavailable offline).
+//!
+//! A property is a closure over a [`Gen`] draw; [`check`] runs it for many
+//! seeded cases and, on failure, retries with progressively "smaller" draws
+//! (smaller sizes, magnitudes) to report a simple shrunken counterexample.
+
+use super::rng::Rng;
+
+/// Draw source handed to properties. Wraps the PRNG and a "size" budget that
+/// shrinks on failure so counterexamples are reported at small sizes.
+pub struct Gen {
+    pub rng: Rng,
+    pub size: usize,
+}
+
+impl Gen {
+    /// usize in [lo, hi], scaled down by the current shrink size.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        let hi_eff = lo + ((hi - lo) * self.size) / 100;
+        lo + self.rng.below(hi_eff - lo + 1)
+    }
+
+    /// f64 in [lo, hi].
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range(lo, hi)
+    }
+
+    /// A vector of f64s with entries in [-mag, mag], magnitude shrinking.
+    pub fn vec_f64(&mut self, len: usize, mag: f64) -> Vec<f64> {
+        let m = mag * self.size as f64 / 100.0;
+        (0..len).map(|_| self.rng.range(-m, m)).collect()
+    }
+
+    /// A vector of standard normals.
+    pub fn vec_normal(&mut self, len: usize) -> Vec<f64> {
+        (0..len).map(|_| self.rng.normal()).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bernoulli(0.5)
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub enum QcResult {
+    Pass { cases: usize },
+    Fail { seed: u64, size: usize, msg: String },
+}
+
+/// Run `prop` on `cases` seeded draws. `prop` returns Err(msg) to fail.
+/// On failure, re-run the failing seed at smaller sizes to shrink.
+pub fn check(
+    name: &str,
+    cases: usize,
+    mut prop: impl FnMut(&mut Gen) -> Result<(), String>,
+) -> QcResult {
+    for case in 0..cases {
+        let seed = 0xDEC0DE + case as u64;
+        let mut g = Gen {
+            rng: Rng::new(seed),
+            size: 100,
+        };
+        if let Err(first_msg) = prop(&mut g) {
+            // shrink: try the same seed at smaller size budgets
+            let mut best = (100usize, first_msg);
+            for size in [50, 25, 10, 5, 2, 1] {
+                let mut g = Gen {
+                    rng: Rng::new(seed),
+                    size,
+                };
+                if let Err(msg) = prop(&mut g) {
+                    best = (size, msg);
+                }
+            }
+            return QcResult::Fail {
+                seed,
+                size: best.0,
+                msg: format!("property '{name}' failed (seed {seed}, size {}): {}", best.0, best.1),
+            };
+        }
+    }
+    QcResult::Pass { cases }
+}
+
+/// Panic-on-fail wrapper for use inside #[test] functions.
+pub fn assert_prop(name: &str, cases: usize, prop: impl FnMut(&mut Gen) -> Result<(), String>) {
+    if let QcResult::Fail { msg, .. } = check(name, cases, prop) {
+        panic!("{msg}");
+    }
+}
+
+/// Helper: assert two f64 slices are elementwise close.
+pub fn close_slices(a: &[f64], b: &[f64], tol: f64) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let scale = 1.0f64.max(x.abs()).max(y.abs());
+        if (x - y).abs() > tol * scale {
+            return Err(format!("index {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        let r = check("add-commutes", 50, |g| {
+            let a = g.f64_in(-10.0, 10.0);
+            let b = g.f64_in(-10.0, 10.0);
+            if (a + b - (b + a)).abs() < 1e-15 {
+                Ok(())
+            } else {
+                Err("not commutative".into())
+            }
+        });
+        assert!(matches!(r, QcResult::Pass { cases: 50 }));
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let r = check("always-small", 50, |g| {
+            let v = g.vec_f64(4, 100.0);
+            if v.iter().all(|x| x.abs() < 0.5) {
+                Ok(())
+            } else {
+                Err(format!("big value {v:?}"))
+            }
+        });
+        match r {
+            QcResult::Fail { size, .. } => assert!(size <= 100),
+            _ => panic!("expected failure"),
+        }
+    }
+
+    #[test]
+    fn close_slices_detects_mismatch() {
+        assert!(close_slices(&[1.0, 2.0], &[1.0, 2.0 + 1e-12], 1e-9).is_ok());
+        assert!(close_slices(&[1.0], &[1.1], 1e-3).is_err());
+        assert!(close_slices(&[1.0], &[1.0, 2.0], 1e-3).is_err());
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        // the same property must see the same draws across runs
+        let collect = |_: ()| {
+            let mut seen = Vec::new();
+            let _ = check("collect", 3, |g| {
+                seen.push(g.f64_in(0.0, 1.0));
+                Ok(())
+            });
+            seen
+        };
+        assert_eq!(collect(()), collect(()));
+    }
+}
