@@ -8,88 +8,84 @@
 //!     LessBit-{SGD, LSVRG} vs #gradient evaluations.
 //! (d) same vs bits.
 //!
+//! The grids are declared as [`SweepSpec`]s and executed by the parallel
+//! sweep runtime — panel (a/b) is six explicit variants, panel (c/d) is a
+//! LEAD oracle×codec cartesian product plus three comparator variants.
+//!
 //! Emits bench_out/fig1{a,b,c,d}.csv; prints the who-wins summary rows.
 
 mod common;
 
-use common::{out_dir, thin, Fixture};
-use proxlead::algorithm::{Algorithm, Choco, Dgd, Hyper, Nids, Pdgm, ProxLead};
-use proxlead::compress::{Identity, InfNormQuantizer};
-use proxlead::engine::{run, RunConfig, XAxis};
-use proxlead::oracle::OracleKind;
-use proxlead::prox::Zero;
+use common::{out_dir, thin};
+use proxlead::config::Config;
+use proxlead::engine::XAxis;
+use proxlead::problem::Problem;
+use proxlead::sweep::{
+    build_problem, run_sweep_verbose, run_sweep_verbose_with_cache, CellOutcome, RefCache,
+    SweepSpec,
+};
 use proxlead::util::bench::{CsvSeries, Table};
+use proxlead::util::stats::loglinear_slope;
 
-fn q2() -> Box<InfNormQuantizer> {
-    Box::new(InfNormQuantizer::new(2, 256))
+/// The §5 analog at bench scale (see DESIGN.md §4): 8-node ring, uniform
+/// mixing, label-sorted 10-class blobs, 15 minibatches per node. 8 nodes ×
+/// 15 batches = 120 batch-gradient evals per epoch (Fig 1's x-axis unit).
+const EVALS_PER_EPOCH: u64 = 8 * 15;
+
+fn base_cfg(rounds: usize, every: usize, eta: f64) -> Config {
+    Config::parse(&format!(
+        "nodes = 8\nsamples_per_node = 120\ndim = 32\nclasses = 10\nbatches = 15\n\
+         separation = 1.0\nlambda1 = 0\nlambda2 = 0.05\n\
+         rounds = {rounds}\nrecord_every = {every}\neta = {eta}\n"
+    ))
+    .expect("fig1 base config")
 }
 
 fn main() {
-    let fx = Fixture::section5(0.05);
-    let x_star = fx.reference(0.0);
-    let (p, w, x0, eta) = (&fx.problem, &fx.w, &fx.x0, fx.eta);
-    let epoch = fx.evals_per_epoch();
-
     // ---------------- (a)/(b): full gradient ----------------------------
-    let rounds = 12_000;
-    let cfg = RunConfig::fixed(rounds).every(50);
-    let mut algs: Vec<Box<dyn Algorithm>> = vec![
-        Box::new(Dgd::new(
-            p,
-            w,
-            x0,
-            eta,
-            OracleKind::Full,
-            Box::new(Identity::f32()),
-            Box::new(Zero),
-            7,
-        )),
-        Box::new(Choco::new(p, w, x0, eta, 0.2, OracleKind::Full, q2(), Box::new(Zero), 7)),
-        Box::new(Nids::new(p, w, x0, eta, OracleKind::Full, Box::new(Zero), 7)),
-        Box::new(Pdgm::lessbit_b(p, w, x0, eta, 0.05, q2(), 0.2, 7)),
-        Box::new(ProxLead::new(
-            p,
-            w,
-            x0,
-            Hyper::paper_default(eta),
-            OracleKind::Full,
-            Box::new(Identity::f32()),
-            Box::new(Zero),
-            7,
-        )),
-        Box::new(ProxLead::new(
-            p,
-            w,
-            x0,
-            Hyper::paper_default(eta),
-            OracleKind::Full,
-            q2(),
-            Box::new(Zero),
-            7,
-        )),
-    ];
+    // eta = 0 ⇒ auto 1/(2L); each variant pairs an algorithm with its own
+    // codec and family-specific constants, exactly as §5 configures them
+    let spec = SweepSpec::new(base_cfg(12_000, 50, 0.0))
+        .variant(&[("algorithm", "dgd"), ("bits", "32")])
+        .variant(&[("algorithm", "choco"), ("bits", "2"), ("gamma", "0.2")])
+        .variant(&[("algorithm", "nids"), ("bits", "32")])
+        .variant(&[
+            ("algorithm", "lessbit-b"),
+            ("bits", "2"),
+            ("gamma", "0.05"),
+            ("alpha", "0.2"),
+        ])
+        .variant(&[("algorithm", "lead"), ("bits", "32")])
+        .variant(&[("algorithm", "lead"), ("bits", "2")]);
+    println!(
+        "fig1 a/b: {} cells (full gradient, 12000 rounds) on {} threads",
+        spec.num_cells(),
+        spec.threads
+    );
+    let res = run_sweep_verbose(&spec).expect("fig1 a/b sweep");
+
     let mut csv_a = CsvSeries::new("epochs");
     let mut csv_b = CsvSeries::new("bits");
     let mut table = Table::new(
         "Fig 1a/1b — smooth, full gradient (12000 rounds)",
         &["algorithm", "final subopt", "Mbit", "linear?"],
     );
-    for alg in algs.iter_mut() {
-        let res = run(alg.as_mut(), p, &x_star, &cfg);
-        csv_a.add(&res.name, thin(res.series(XAxis::Epochs(epoch)), 250));
-        csv_b.add(&res.name, thin(res.series(XAxis::Bits), 250));
-        let last = res.history.last().unwrap();
+    for cell in &res.cells {
+        let r = &cell.result;
+        csv_a.add(&r.name, thin(r.series(XAxis::Epochs(EVALS_PER_EPOCH)), 250));
+        csv_b.add(&r.name, thin(r.series(XAxis::Bits), 250));
+        let last = r.history.last().unwrap();
         // log-linear slope over the tail classifies linear vs stalled
-        let n_hist = res.history.len();
-        let tail: Vec<f64> = res
+        let n_hist = r.history.len();
+        let tail: Vec<f64> = r
             .history
             .iter()
             .skip(n_hist.saturating_sub(60))
             .map(|m| m.suboptimality.max(1e-30))
             .collect();
-        let slope = proxlead::util::stats::loglinear_slope(&tail);
+        let slope = loglinear_slope(&tail);
         table.row(vec![
-            res.name.clone(),
+            r.name.clone(),
             format!("{:.3e}", last.suboptimality),
             format!("{:.1}", last.bits as f64 / 1e6),
             if last.suboptimality < 1e-12 || slope < -1e-3 {
@@ -104,46 +100,60 @@ fn main() {
     csv_b.write(out_dir().join("fig1b.csv").to_str().unwrap()).unwrap();
 
     // ---------------- (c)/(d): stochastic gradients ---------------------
-    let rounds = 15_000;
-    let cfg = RunConfig::fixed(rounds).every(60);
-    let eta_s = 1.0 / (6.0 * proxlead::problem::Problem::smoothness(p));
-    let lsvrg = OracleKind::Lsvrg { p: 1.0 / 15.0 };
-    let mk_lead = |kind: OracleKind, comp: Box<dyn proxlead::compress::Compressor>| {
-        Box::new(ProxLead::new(
-            p,
-            w,
-            x0,
-            Hyper::paper_default(eta_s),
-            kind,
-            comp,
-            Box::new(Zero),
-            9,
-        ))
-    };
-    let mut algs: Vec<Box<dyn Algorithm>> = vec![
-        mk_lead(OracleKind::Sgd, Box::new(Identity::f32())),
-        mk_lead(OracleKind::Sgd, q2()),
-        mk_lead(lsvrg, Box::new(Identity::f32())),
-        mk_lead(lsvrg, q2()),
-        mk_lead(OracleKind::Saga, Box::new(Identity::f32())),
-        mk_lead(OracleKind::Saga, q2()),
-        Box::new(Choco::new(p, w, x0, eta_s, 0.2, OracleKind::Sgd, q2(), Box::new(Zero), 9)),
-        Box::new(Pdgm::new(p, w, x0, eta_s, 0.1 / (2.0 * eta_s), OracleKind::Sgd, q2(), 0.25, 9)),
-        Box::new(Pdgm::new(p, w, x0, eta_s, 0.1 / (2.0 * eta_s), lsvrg, q2(), 0.25, 9)),
-    ];
+    // LEAD × {sgd, lsvrg, saga} × {32, 2}bit as a cartesian grid, plus the
+    // Choco-SGD / LessBit comparators as explicit variants (their own
+    // stepsize constants), all at η = 1/(6L)
+    let eta_s = 1.0 / (6.0 * build_problem(&base_cfg(1, 1, 0.0)).smoothness());
+    let base_s = base_cfg(15_000, 60, eta_s);
+    let lead_spec = SweepSpec::new(base_s.clone())
+        .variant(&[("algorithm", "lead")])
+        .axis("oracle", &["sgd", "lsvrg", "saga"])
+        .axis("bits", &["32", "2"]);
+    let comparator_spec = SweepSpec::new(base_s)
+        .variant(&[("algorithm", "choco"), ("bits", "2"), ("gamma", "0.2"), ("oracle", "sgd")])
+        .variant(&[
+            ("algorithm", "pdgm"),
+            ("bits", "2"),
+            ("gamma", "0.1"),
+            ("alpha", "0.25"),
+            ("oracle", "sgd"),
+        ])
+        .variant(&[
+            ("algorithm", "pdgm"),
+            ("bits", "2"),
+            ("gamma", "0.1"),
+            ("alpha", "0.25"),
+            ("oracle", "lsvrg"),
+        ]);
+    println!(
+        "\nfig1 c/d: {} + {} cells (stochastic, 15000 rounds) on {} threads",
+        lead_spec.num_cells(),
+        comparator_spec.num_cells(),
+        lead_spec.threads
+    );
+    // both panels share one problem ⇒ share one reference solve
+    let cache = RefCache::default();
+    let mut cells: Vec<CellOutcome> =
+        run_sweep_verbose_with_cache(&lead_spec, &cache).expect("fig1 c/d LEAD sweep").cells;
+    cells.extend(
+        run_sweep_verbose_with_cache(&comparator_spec, &cache)
+            .expect("fig1 c/d comparator sweep")
+            .cells,
+    );
+
     let mut csv_c = CsvSeries::new("grad_evals");
     let mut csv_d = CsvSeries::new("bits");
     let mut table = Table::new(
         "Fig 1c/1d — smooth, stochastic (15000 rounds)",
         &["algorithm", "final subopt", "grad evals", "Mbit"],
     );
-    for alg in algs.iter_mut() {
-        let res = run(alg.as_mut(), p, &x_star, &cfg);
-        csv_c.add(&res.name, thin(res.series(XAxis::GradEvals), 250));
-        csv_d.add(&res.name, thin(res.series(XAxis::Bits), 250));
-        let last = res.history.last().unwrap();
+    for cell in &cells {
+        let r = &cell.result;
+        csv_c.add(&r.name, thin(r.series(XAxis::GradEvals), 250));
+        csv_d.add(&r.name, thin(r.series(XAxis::Bits), 250));
+        let last = r.history.last().unwrap();
         table.row(vec![
-            res.name.clone(),
+            r.name.clone(),
             format!("{:.3e}", last.suboptimality),
             format!("{}", last.grad_evals),
             format!("{:.1}", last.bits as f64 / 1e6),

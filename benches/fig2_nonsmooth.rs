@@ -7,66 +7,63 @@
 //! (c) stochastic: Prox-LEAD-{SGD, LSVRG, SAGA} × {32, 2}bit.
 //! (d) the same vs bits.
 //!
+//! Both grids are [`SweepSpec`]s on the parallel sweep runtime: panel
+//! (a/b) is six explicit variants, panel (c/d) is a pure oracle × codec
+//! cartesian product. λ1 > 0 in the base config routes every algorithm
+//! through its proximal step automatically.
+//!
 //! Emits bench_out/fig2{a,b,c,d}.csv.
 
 mod common;
 
-use common::{out_dir, thin, Fixture};
-use proxlead::algorithm::{Algorithm, Dgd, Hyper, Nids, P2d2, PgExtra, ProxLead};
-use proxlead::compress::{Identity, InfNormQuantizer};
-use proxlead::engine::{run, RunConfig, XAxis};
-use proxlead::oracle::OracleKind;
-use proxlead::prox::L1;
+use common::{out_dir, thin};
+use proxlead::config::Config;
+use proxlead::engine::XAxis;
+use proxlead::problem::Problem;
+use proxlead::sweep::{build_problem, run_sweep_verbose, SweepSpec};
 use proxlead::util::bench::{CsvSeries, Table};
 
 const LAMBDA1: f64 = 5e-3;
+const EVALS_PER_EPOCH: u64 = 8 * 15;
 
-fn q2() -> Box<InfNormQuantizer> {
-    Box::new(InfNormQuantizer::new(2, 256))
-}
-
-fn l1() -> Box<L1> {
-    Box::new(L1::new(LAMBDA1))
+fn base_cfg(rounds: usize, every: usize, eta: f64) -> Config {
+    Config::parse(&format!(
+        "nodes = 8\nsamples_per_node = 120\ndim = 32\nclasses = 10\nbatches = 15\n\
+         separation = 1.0\nlambda1 = {LAMBDA1}\nlambda2 = 0.05\n\
+         rounds = {rounds}\nrecord_every = {every}\neta = {eta}\n"
+    ))
+    .expect("fig2 base config")
 }
 
 fn main() {
-    let fx = Fixture::section5(0.05);
-    let x_star = fx.reference(LAMBDA1);
-    let (p, w, x0, eta) = (&fx.problem, &fx.w, &fx.x0, fx.eta);
-    let epoch = fx.evals_per_epoch();
-
     // ---------------- (a)/(b): full gradient ----------------------------
-    let cfg = RunConfig::fixed(6000).every(25);
-    let mut algs: Vec<Box<dyn Algorithm>> = vec![
-        Box::new(Dgd::new(p, w, x0, eta, OracleKind::Full, Box::new(Identity::f32()), l1(), 7)),
-        Box::new(Nids::new(p, w, x0, eta, OracleKind::Full, l1(), 7)),
-        Box::new(P2d2::new(p, w, x0, eta, OracleKind::Full, l1(), 7)),
-        Box::new(PgExtra::new(p, w, x0, eta, OracleKind::Full, l1(), 7)),
-        Box::new(ProxLead::new(
-            p,
-            w,
-            x0,
-            Hyper::paper_default(eta),
-            OracleKind::Full,
-            Box::new(Identity::f32()),
-            l1(),
-            7,
-        )),
-        Box::new(ProxLead::new(p, w, x0, Hyper::paper_default(eta), OracleKind::Full, q2(), l1(), 7)),
-    ];
+    let spec = SweepSpec::new(base_cfg(6000, 25, 0.0))
+        .variant(&[("algorithm", "prox-dgd"), ("bits", "32")])
+        .variant(&[("algorithm", "nids"), ("bits", "32")])
+        .variant(&[("algorithm", "p2d2"), ("bits", "32")])
+        .variant(&[("algorithm", "pg-extra"), ("bits", "32")])
+        .variant(&[("algorithm", "prox-lead"), ("bits", "32")])
+        .variant(&[("algorithm", "prox-lead"), ("bits", "2")]);
+    println!(
+        "fig2 a/b: {} cells (composite, full gradient, 6000 rounds) on {} threads",
+        spec.num_cells(),
+        spec.threads
+    );
+    let res = run_sweep_verbose(&spec).expect("fig2 a/b sweep");
+
     let mut csv_a = CsvSeries::new("epochs");
     let mut csv_b = CsvSeries::new("bits");
     let mut table = Table::new(
         "Fig 2a/2b — non-smooth (λ1 = 5e-3), full gradient",
         &["algorithm", "final subopt", "Mbit", "linear?"],
     );
-    for alg in algs.iter_mut() {
-        let res = run(alg.as_mut(), p, &x_star, &cfg);
-        csv_a.add(&res.name, thin(res.series(XAxis::Epochs(epoch)), 250));
-        csv_b.add(&res.name, thin(res.series(XAxis::Bits), 250));
-        let last = res.history.last().unwrap();
+    for cell in &res.cells {
+        let r = &cell.result;
+        csv_a.add(&r.name, thin(r.series(XAxis::Epochs(EVALS_PER_EPOCH)), 250));
+        csv_b.add(&r.name, thin(r.series(XAxis::Bits), 250));
+        let last = r.history.last().unwrap();
         table.row(vec![
-            res.name.clone(),
+            r.name.clone(),
             format!("{:.3e}", last.suboptimality),
             format!("{:.1}", last.bits as f64 / 1e6),
             if last.suboptimality < 1e-12 { "yes".into() } else { "stalls".into() },
@@ -77,33 +74,31 @@ fn main() {
     csv_b.write(out_dir().join("fig2b.csv").to_str().unwrap()).unwrap();
 
     // ---------------- (c)/(d): stochastic --------------------------------
-    let cfg = RunConfig::fixed(15_000).every(60);
-    let eta_s = 1.0 / (6.0 * proxlead::problem::Problem::smoothness(p));
-    let lsvrg = OracleKind::Lsvrg { p: 1.0 / 15.0 };
-    let mk = |kind: OracleKind, comp: Box<dyn proxlead::compress::Compressor>| {
-        Box::new(ProxLead::new(p, w, x0, Hyper::paper_default(eta_s), kind, comp, l1(), 9))
-    };
-    let mut algs: Vec<Box<dyn Algorithm>> = vec![
-        mk(OracleKind::Sgd, Box::new(Identity::f32())),
-        mk(OracleKind::Sgd, q2()),
-        mk(lsvrg, Box::new(Identity::f32())),
-        mk(lsvrg, q2()),
-        mk(OracleKind::Saga, Box::new(Identity::f32())),
-        mk(OracleKind::Saga, q2()),
-    ];
+    let eta_s = 1.0 / (6.0 * build_problem(&base_cfg(1, 1, 0.0)).smoothness());
+    let spec = SweepSpec::new(base_cfg(15_000, 60, eta_s))
+        .variant(&[("algorithm", "prox-lead")])
+        .axis("oracle", &["sgd", "lsvrg", "saga"])
+        .axis("bits", &["32", "2"]);
+    println!(
+        "\nfig2 c/d: {} cells (composite, stochastic, 15000 rounds) on {} threads",
+        spec.num_cells(),
+        spec.threads
+    );
+    let res = run_sweep_verbose(&spec).expect("fig2 c/d sweep");
+
     let mut csv_c = CsvSeries::new("grad_evals");
     let mut csv_d = CsvSeries::new("bits");
     let mut table = Table::new(
         "Fig 2c/2d — non-smooth, stochastic",
         &["algorithm", "final subopt", "grad evals", "Mbit"],
     );
-    for alg in algs.iter_mut() {
-        let res = run(alg.as_mut(), p, &x_star, &cfg);
-        csv_c.add(&res.name, thin(res.series(XAxis::GradEvals), 250));
-        csv_d.add(&res.name, thin(res.series(XAxis::Bits), 250));
-        let last = res.history.last().unwrap();
+    for cell in &res.cells {
+        let r = &cell.result;
+        csv_c.add(&r.name, thin(r.series(XAxis::GradEvals), 250));
+        csv_d.add(&r.name, thin(r.series(XAxis::Bits), 250));
+        let last = r.history.last().unwrap();
         table.row(vec![
-            res.name.clone(),
+            r.name.clone(),
             format!("{:.3e}", last.suboptimality),
             format!("{}", last.grad_evals),
             format!("{:.1}", last.bits as f64 / 1e6),

@@ -4,16 +4,19 @@
 //! - L3 primitives: blocked matmul (the engine's W·X mixing), the ∞-norm
 //!   quantizer encode/decode, the wire codec, one COMM round;
 //! - L3 end-to-end: one Prox-LEAD matrix step; one coordinator round
-//!   (8 threads, serialized frames);
+//!   (8 threads, serialized frames); a multi-cell sweep through the
+//!   parallel sweep runtime;
 //! - L2/L1: one PJRT gradient execution vs the native rust gradient at
-//!   the shipped artifact shape (240×64×10).
+//!   the shipped artifact shape (240×64×10) — requires `--features xla`.
 //!
 //! Run before/after every optimization and record deltas in
-//! EXPERIMENTS.md §Perf.
+//! EXPERIMENTS.md §Perf. Every set is aggregated into
+//! `bench_out/perf_hotpath.json` (the CI bench-trajectory artifact);
+//! `PERF_SMOKE=1` shrinks reps/workloads to CI scale.
 
 mod common;
 
-use common::Fixture;
+use common::{out_dir, Fixture};
 use proxlead::algorithm::{Algorithm, CommState, Hyper, ProxLead};
 use proxlead::compress::bits::{decode_inf_quantized, encode_inf_quantized};
 use proxlead::compress::{Compressor, InfNormQuantizer};
@@ -23,15 +26,23 @@ use proxlead::oracle::OracleKind;
 use proxlead::problem::data::{blobs, BlobSpec};
 use proxlead::problem::{LogReg, Problem};
 use proxlead::prox::{Zero, L1};
-use proxlead::util::bench::BenchSet;
+use proxlead::sweep::{run_sweep, SweepSpec};
+use proxlead::util::bench::{smoke_mode, BenchReport, BenchSet};
 use proxlead::util::rng::Rng;
 use std::sync::Arc;
 
 fn main() {
+    let smoke = smoke_mode();
+    if smoke {
+        println!("PERF_SMOKE=1: minimal reps/workloads (CI trajectory mode)");
+    }
+    let reps = |warmup: usize, n: usize| if smoke { (0, 2) } else { (warmup, n) };
+    let mut report = BenchReport::new("perf_hotpath");
     let mut rng = Rng::new(7);
 
     // ---------- L3 primitive: blocked matmul ----------------------------
-    let mut set = BenchSet::new("matmul (engine mixing W·X and gradients)").with_reps(3, 15);
+    let (w0, n0) = reps(3, 15);
+    let mut set = BenchSet::new("matmul (engine mixing W·X and gradients)").with_reps(w0, n0);
     set.header();
     for (n, k, m) in [(8, 8, 640), (64, 64, 640), (256, 256, 256), (240, 64, 10)] {
         let mut a = Mat::zeros(n, k);
@@ -44,9 +55,11 @@ fn main() {
             a.matmul_into(&b, &mut out)
         });
     }
+    report.add(&set);
 
     // ---------- L3 primitive: quantizer + wire codec --------------------
-    let mut set = BenchSet::new("compression (2-bit ∞-norm, block 256)").with_reps(3, 30);
+    let (w0, n0) = reps(3, 30);
+    let mut set = BenchSet::new("compression (2-bit ∞-norm, block 256)").with_reps(w0, n0);
     set.header();
     let x: Vec<f64> = (0..65_536).map(|_| rng.normal()).collect();
     let q = InfNormQuantizer::new(2, 256);
@@ -60,12 +73,15 @@ fn main() {
     set.run_throughput("decode 64k entries (wire)", 65_536.0 * 8.0, "B", || {
         decode_inf_quantized(&bytes, 65_536, 2, 256)
     });
+    report.add(&set);
 
     // ---------- L3: COMM round + Prox-LEAD step --------------------------
     let fx = Fixture::section5(0.05);
     let (p, w, x0) = (&fx.problem, &fx.w, &fx.x0);
     let dim = p.dim();
-    let mut set = BenchSet::new(&format!("Prox-LEAD round (8 nodes, p = {dim})")).with_reps(5, 50);
+    let (w0, n0) = reps(5, 50);
+    let mut set =
+        BenchSet::new(&format!("Prox-LEAD round (8 nodes, p = {dim})")).with_reps(w0, n0);
     set.header();
     {
         let mut comm = CommState::new(x0.clone(), w, 0.5);
@@ -98,9 +114,11 @@ fn main() {
         );
         set.run("matrix step, SAGA + 2bit + prox", || alg.step(p));
     }
+    report.add(&set);
 
     // ---------- L3: coordinator round (threads + serialization) ---------
-    let mut set = BenchSet::new("coordinator (8 node threads, wire frames)").with_reps(1, 5);
+    let (w0, n0) = reps(1, 5);
+    let mut set = BenchSet::new("coordinator (8 node threads, wire frames)").with_reps(w0, n0);
     set.header();
     let p_arc: Arc<dyn Problem> = Arc::new(LogReg::from_blobs(
         &BlobSpec {
@@ -114,15 +132,44 @@ fn main() {
         0.05,
         15,
     ));
-    set.run_throughput("100 rounds end-to-end (spawn+run+join)", 100.0, "round", || {
-        let mut cfg = CoordConfig::new(100, fx.eta, WireCodec::Quant(2, 256));
-        cfg.record_every = 100;
-        coordinator::run(Arc::clone(&p_arc), w, x0, Arc::new(Zero), &cfg)
+    let coord_rounds = if smoke { 10 } else { 100 };
+    set.run_throughput(
+        &format!("{coord_rounds} rounds end-to-end (spawn+run+join)"),
+        coord_rounds as f64,
+        "round",
+        || {
+            let mut cfg = CoordConfig::new(coord_rounds, fx.eta, WireCodec::Quant(2, 256));
+            cfg.record_every = coord_rounds;
+            coordinator::run(Arc::clone(&p_arc), w, x0, Arc::new(Zero), &cfg)
+        },
+    );
+    report.add(&set);
+
+    // ---------- L3: the parallel sweep runtime ---------------------------
+    // 4 cells (2 algorithms × 2 codecs) at smoke scale: measures the
+    // fan-out overhead + reference-cache sharing, not convergence
+    let (w0, n0) = reps(1, 3);
+    let mut set = BenchSet::new("sweep runtime (4 cells, 8 workers)").with_reps(w0, n0);
+    set.header();
+    let sweep_rounds = if smoke { 20 } else { 200 };
+    let base = proxlead::config::Config::parse(&format!(
+        "nodes = 4\nsamples_per_node = 24\ndim = 5\nclasses = 3\nbatches = 4\n\
+         lambda1 = 0\nlambda2 = 0.1\nrounds = {sweep_rounds}\nrecord_every = {sweep_rounds}\n"
+    ))
+    .expect("sweep base config");
+    let spec = SweepSpec::new(base)
+        .variant(&[("algorithm", "prox-lead"), ("bits", "2")])
+        .variant(&[("algorithm", "dgd"), ("bits", "32")])
+        .axis("seed", &["1", "2"])
+        .threads(8);
+    set.run_throughput("4-cell grid end-to-end", 4.0, "cell", || {
+        run_sweep(&spec, |_| {}).expect("sweep")
     });
+    report.add(&set);
 
     // ---------- L2/L1: PJRT gradient vs native gradient ------------------
     let dir = proxlead::runtime::default_artifact_dir();
-    if dir.join("manifest.json").exists() {
+    if dir.join("manifest.json").exists() && cfg!(feature = "xla") {
         let rt = Arc::new(proxlead::runtime::PjrtRuntime::load(&dir).expect("artifacts"));
         let spec = BlobSpec {
             nodes: 1,
@@ -134,7 +181,8 @@ fn main() {
         };
         let native = LogReg::new(blobs(&spec), 10, 0.005, 15);
         let xla = proxlead::runtime::XlaLogReg::new(native, rt).expect("shape artifact");
-        let mut set = BenchSet::new("gradient backends (240×64×10)").with_reps(5, 40);
+        let (w0, n0) = reps(5, 40);
+        let mut set = BenchSet::new("gradient backends (240×64×10)").with_reps(w0, n0);
         set.header();
         let xv: Vec<f64> = (0..xla.dim()).map(|_| 0.1 * rng.normal()).collect();
         let mut out = vec![0.0; xla.dim()];
@@ -148,8 +196,13 @@ fn main() {
         set.run_throughput("PJRT batch gradient (16 rows)", flops / 15.0, "flop", || {
             xla.grad_batch(0, 3, &xv, &mut out)
         });
+        report.add(&set);
     } else {
-        println!("\n(skipping PJRT bench: run `make artifacts`)");
+        println!("\n(skipping PJRT bench: needs `make artifacts` and --features xla)");
     }
-    println!("\nperf_hotpath done");
+
+    let json_path = out_dir().join("perf_hotpath.json");
+    report.write(json_path.to_str().unwrap()).expect("write perf json");
+    println!("\nwrote {}", json_path.display());
+    println!("perf_hotpath done");
 }

@@ -6,75 +6,80 @@
 //! iterations to 1e-9 suboptimality:
 //!
 //!   (i)   C: compression bits b ∈ {2, 3, 4, 8, 32};
-//!   (ii)  κ_g: topology ∈ {complete, grid, ring, chain} at n = 8;
+//!   (ii)  κ_g: topology ∈ {complete, ring, chain} with chains up to n=32;
 //!   (iii) κ_f: λ2 ∈ {0.2, 0.1, 0.05, 0.02};
 //!   (iv)  oracle ∈ {full, LSVRG, SAGA} (the three fixed-stepsize rows).
+//!
+//! Each factor sweep is one [`SweepSpec`] axis on the parallel sweep
+//! runtime with an early-stop target — the measured quantity *is*
+//! `rounds_to_target`.
 //!
 //! Emits bench_out/table2.csv with one row per sweep point.
 
 mod common;
 
-use common::{out_dir, Fixture};
-use proxlead::algorithm::{Hyper, ProxLead};
-use proxlead::compress::{Compressor, Identity, InfNormQuantizer};
-use proxlead::engine::rounds_to;
-use proxlead::graph::{mixing_matrix, Graph, MixingRule, Topology};
-use proxlead::linalg::{Mat, Spectrum};
-use proxlead::oracle::OracleKind;
-use proxlead::problem::data::BlobSpec;
-use proxlead::problem::{LogReg, Problem};
-use proxlead::prox::L1;
+use common::out_dir;
+use proxlead::config::Config;
+use proxlead::linalg::Spectrum;
+use proxlead::problem::Problem;
+use proxlead::sweep::{build_problem, run_sweep_verbose, SweepResult, SweepSpec};
 use proxlead::util::bench::Table;
-use proxlead::util::rng::Rng;
 
 const LAMBDA1: f64 = 5e-3;
 const TARGET: f64 = 1e-9;
 const BUDGET: usize = 60_000;
 
-fn comp_for_bits(bits: u32) -> Box<dyn Compressor> {
-    if bits == 32 {
-        Box::new(Identity::f32())
-    } else {
-        Box::new(InfNormQuantizer::new(bits, 256))
-    }
+/// The §5-analog base: 8-node ring, Prox-LEAD, ℓ1 + the given λ2, with
+/// the engine's budget/target configured for iterations-to-ε measurement.
+fn base_cfg(lambda2: f64, eta: f64) -> Config {
+    Config::parse(&format!(
+        "nodes = 8\nsamples_per_node = 120\ndim = 32\nclasses = 10\nbatches = 15\n\
+         separation = 1.0\nlambda1 = {LAMBDA1}\nlambda2 = {lambda2}\n\
+         algorithm = prox-lead\nbits = 2\nrounds = {BUDGET}\nrecord_every = {BUDGET}\n\
+         eta = {eta}\n"
+    ))
+    .expect("table2 base config")
+}
+
+fn iters(res: &SweepResult, i: usize) -> usize {
+    res.cells[i].result.rounds_to_target.unwrap_or(BUDGET)
+}
+
+/// κ_g of a cell's network (recomputed from its config for the report).
+fn kappa_g_of(cfg: &Config) -> f64 {
+    let w = proxlead::graph::mixing_matrix(
+        &cfg.topology().expect("topology"),
+        cfg.mixing_rule().expect("mixing"),
+    );
+    Spectrum::of_mixing(&w).kappa_g()
 }
 
 fn main() {
     let mut csv = String::from("sweep,setting,kappa_f,kappa_g,oracle,bits,iters\n");
 
     // ------- (i) compression precision sweep ----------------------------
-    let fx = Fixture::section5(0.05);
-    let x_star = fx.reference(LAMBDA1);
+    let spec = SweepSpec::new(base_cfg(0.05, 0.0))
+        .axis("bits", &["32", "8", "4", "3", "2"])
+        .until(TARGET);
+    println!("table2 (i): {} cells on {} threads", spec.num_cells(), spec.threads);
+    let res = run_sweep_verbose(&spec).expect("table2(i) sweep");
+    let kf = build_problem(&res.spec.base).kappa_f();
+    let kg = kappa_g_of(&res.spec.base);
     let mut t = Table::new(
         "Table 2(i) — iterations to 1e-9 vs compression bits (Thm 5 row)",
         &["bits", "iters", "vs 32bit"],
     );
-    let mut base = 0usize;
-    for bits in [32u32, 8, 4, 3, 2] {
-        let mut alg = ProxLead::new(
-            &fx.problem,
-            &fx.w,
-            &fx.x0,
-            Hyper::paper_default(fx.eta),
-            OracleKind::Full,
-            comp_for_bits(bits),
-            Box::new(L1::new(LAMBDA1)),
-            5,
-        );
-        let iters = rounds_to(&mut alg, &fx.problem, &x_star, TARGET, BUDGET).unwrap_or(BUDGET);
-        if bits == 32 {
-            base = iters;
-        }
+    let base_iters = iters(&res, 0); // cell 0 is the 32-bit row
+    for (i, cell) in res.cells.iter().enumerate() {
+        let bits = cell.overrides.iter().find(|(k, _)| k == "bits").map(|(_, v)| v.clone());
+        let bits = bits.unwrap_or_default();
+        let it = iters(&res, i);
         t.row(vec![
-            format!("{bits}"),
-            format!("{iters}"),
-            format!("{:.2}x", iters as f64 / base as f64),
+            bits.clone(),
+            format!("{it}"),
+            format!("{:.2}x", it as f64 / base_iters as f64),
         ]);
-        csv.push_str(&format!(
-            "bits,{bits},{:.1},{:.2},full,{bits},{iters}\n",
-            fx.problem.kappa_f(),
-            Spectrum::of_mixing(&fx.w).kappa_g()
-        ));
+        csv.push_str(&format!("bits,{bits},{kf:.1},{kg:.2},full,{bits},{it}\n"));
     }
     t.print();
 
@@ -82,113 +87,80 @@ fn main() {
     // κ_g only binds once the network term 1 − γλmin(I−W)/2 is slower than
     // the objective term 1 − ημ, so this sweep uses a *well-conditioned*
     // objective (λ2 = 0.2) and stretches chains until κ_g dominates.
+    let mut net_base = base_cfg(0.2, 0.0);
+    net_base.set("samples_per_node", "60").unwrap();
+    net_base.set("dim", "16").unwrap();
+    net_base.set("classes", "5").unwrap();
+    net_base.set("mixing", "mh").unwrap();
+    let spec = SweepSpec::new(net_base)
+        .variant(&[("topology", "complete"), ("nodes", "8")])
+        .variant(&[("topology", "ring"), ("nodes", "8")])
+        .variant(&[("topology", "chain"), ("nodes", "8")])
+        .variant(&[("topology", "chain"), ("nodes", "16")])
+        .variant(&[("topology", "chain"), ("nodes", "32")])
+        .until(TARGET);
+    println!("\ntable2 (ii): {} cells on {} threads", spec.num_cells(), spec.threads);
+    let res = run_sweep_verbose(&spec).expect("table2(ii) sweep");
     let mut t = Table::new(
         "Table 2(ii) — iterations to 1e-9 vs κ_g (chain length, 2bit, small κ_f)",
         &["network", "kappa_g", "iters"],
     );
-    for (name, n, topo) in [
-        ("complete n=8", 8usize, Topology::Complete),
-        ("ring n=8", 8, Topology::Ring),
-        ("chain n=8", 8, Topology::Chain),
-        ("chain n=16", 16, Topology::Chain),
-        ("chain n=32", 32, Topology::Chain),
-    ] {
-        let spec = BlobSpec {
-            nodes: n,
-            samples_per_node: 60,
-            dim: 16,
-            classes: 5,
-            separation: 1.0,
-            ..Default::default()
-        };
-        let p = LogReg::from_blobs(&spec, 0.2, 15);
-        let x_star = proxlead::algorithm::solve_reference(&p, LAMBDA1, 80_000, 1e-12);
-        let g = Graph::build(topo, n, &mut Rng::new(1));
-        let w = mixing_matrix(&g, MixingRule::Metropolis);
-        let kg = Spectrum::of_mixing(&w).kappa_g();
-        let x0 = Mat::zeros(n, p.dim());
-        let mut alg = ProxLead::new(
-            &p,
-            &w,
-            &x0,
-            Hyper::paper_default(0.5 / p.smoothness()),
-            OracleKind::Full,
-            comp_for_bits(2),
-            Box::new(L1::new(LAMBDA1)),
-            5,
-        );
-        let iters = rounds_to(&mut alg, &p, &x_star, TARGET, BUDGET).unwrap_or(BUDGET);
-        t.row(vec![name.into(), format!("{kg:.2}"), format!("{iters}")]);
-        csv.push_str(&format!("kappa_g,{name},{:.1},{kg:.2},full,2,{iters}\n", p.kappa_f()));
+    for (i, cell) in res.cells.iter().enumerate() {
+        let cfg = res.spec.cell_config(cell.index).expect("cell config");
+        let kg = kappa_g_of(&cfg);
+        let kf = build_problem(&cfg).kappa_f();
+        let name = format!("{} n={}", cfg.topology, cfg.nodes);
+        let it = iters(&res, i);
+        t.row(vec![name.clone(), format!("{kg:.2}"), format!("{it}")]);
+        csv.push_str(&format!("kappa_g,{name},{kf:.1},{kg:.2},full,2,{it}\n"));
     }
     t.print();
 
     // ------- (iii) objective condition number sweep ---------------------
+    let spec = SweepSpec::new(base_cfg(0.05, 0.0))
+        .axis("lambda2", &["0.2", "0.1", "0.05", "0.02"])
+        .until(TARGET);
+    println!("\ntable2 (iii): {} cells on {} threads", spec.num_cells(), spec.threads);
+    let res = run_sweep_verbose(&spec).expect("table2(iii) sweep");
+    let kg = kappa_g_of(&res.spec.base);
     let mut t = Table::new(
         "Table 2(iii) — iterations to 1e-9 vs κ_f (λ2, 2bit)",
         &["lambda2", "kappa_f", "iters"],
     );
-    for lam2 in [0.2, 0.1, 0.05, 0.02] {
-        let spec = BlobSpec {
-            nodes: 8,
-            samples_per_node: 120,
-            dim: 32,
-            classes: 10,
-            separation: 1.0,
-            ..Default::default()
-        };
-        let p = LogReg::from_blobs(&spec, lam2, 15);
-        let x_star = proxlead::algorithm::solve_reference(&p, LAMBDA1, 80_000, 1e-12);
-        let x0 = Mat::zeros(8, p.dim());
-        let mut alg = ProxLead::new(
-            &p,
-            &fx.w,
-            &x0,
-            Hyper::paper_default(0.5 / p.smoothness()),
-            OracleKind::Full,
-            comp_for_bits(2),
-            Box::new(L1::new(LAMBDA1)),
-            5,
-        );
-        let iters = rounds_to(&mut alg, &p, &x_star, TARGET, BUDGET).unwrap_or(BUDGET);
-        t.row(vec![format!("{lam2}"), format!("{:.1}", p.kappa_f()), format!("{iters}")]);
-        csv.push_str(&format!(
-            "kappa_f,{lam2},{:.1},{:.2},full,2,{iters}\n",
-            p.kappa_f(),
-            Spectrum::of_mixing(&fx.w).kappa_g()
-        ));
+    for (i, cell) in res.cells.iter().enumerate() {
+        let cfg = res.spec.cell_config(cell.index).expect("cell config");
+        let kf = build_problem(&cfg).kappa_f();
+        let it = iters(&res, i);
+        t.row(vec![format!("{}", cfg.lambda2), format!("{kf:.1}"), format!("{it}")]);
+        csv.push_str(&format!("kappa_f,{},{kf:.1},{kg:.2},full,2,{it}\n", cfg.lambda2));
     }
     t.print();
 
     // ------- (iv) oracle rows (Thm 5 vs Thm 8 vs Thm 9) ------------------
+    let eta_s = 1.0 / (6.0 * build_problem(&base_cfg(0.05, 0.0)).smoothness());
+    let spec = SweepSpec::new(base_cfg(0.05, eta_s))
+        .axis("oracle", &["full", "lsvrg", "saga"])
+        .until(TARGET);
+    println!("\ntable2 (iv): {} cells on {} threads", spec.num_cells(), spec.threads);
+    let res = run_sweep_verbose(&spec).expect("table2(iv) sweep");
+    let kf = build_problem(&res.spec.base).kappa_f();
+    let kg = kappa_g_of(&res.spec.base);
     let mut t = Table::new(
         "Table 2(iv) — fixed-stepsize oracles at 2bit (iterations + evals to 1e-9)",
         &["oracle", "iters", "grad evals"],
     );
-    let eta_s = 1.0 / (6.0 * fx.problem.smoothness());
-    for (name, kind) in [
-        ("full (Thm 5)", OracleKind::Full),
-        ("lsvrg (Thm 8)", OracleKind::Lsvrg { p: 1.0 / 15.0 }),
-        ("saga (Thm 9)", OracleKind::Saga),
-    ] {
-        let mut alg = ProxLead::new(
-            &fx.problem,
-            &fx.w,
-            &fx.x0,
-            Hyper::paper_default(eta_s),
-            kind,
-            comp_for_bits(2),
-            Box::new(L1::new(LAMBDA1)),
-            5,
-        );
-        let iters = rounds_to(&mut alg, &fx.problem, &x_star, TARGET, BUDGET).unwrap_or(BUDGET);
-        use proxlead::algorithm::Algorithm;
-        t.row(vec![name.into(), format!("{iters}"), format!("{}", alg.grad_evals())]);
-        csv.push_str(&format!(
-            "oracle,{name},{:.1},{:.2},{name},2,{iters}\n",
-            fx.problem.kappa_f(),
-            Spectrum::of_mixing(&fx.w).kappa_g()
-        ));
+    for (i, cell) in res.cells.iter().enumerate() {
+        let oracle = cell
+            .overrides
+            .iter()
+            .find(|(k, _)| k == "oracle")
+            .map(|(_, v)| v.clone())
+            .unwrap_or_default();
+        let it = iters(&res, i);
+        let evals =
+            cell.result.history.last().map(|m| m.grad_evals).unwrap_or_default();
+        t.row(vec![oracle.clone(), format!("{it}"), format!("{evals}")]);
+        csv.push_str(&format!("oracle,{oracle},{kf:.1},{kg:.2},{oracle},2,{it}\n"));
     }
     t.print();
 

@@ -9,128 +9,112 @@
 //!
 //! Measured as iterations (and, for DualGD, inner gradient steps) to hit
 //! 1e-9 suboptimality on the common §5-analog problem — smooth panel for
-//! the R = 0 rows, composite panel for the prox-capable rows. The *shape*
-//! of the comparison (who wins, roughly by what factor) is the
-//! reproduction target; constants differ from the authors' testbed.
+//! the R = 0 rows, composite panel for the prox-capable rows. Each panel
+//! is one [`SweepSpec`] of explicit variants on the parallel sweep
+//! runtime with an early-stop target. The *shape* of the comparison (who
+//! wins, roughly by what factor) is the reproduction target; constants
+//! differ from the authors' testbed.
 //!
 //! Emits bench_out/table3.csv.
 
 mod common;
 
-use common::{out_dir, Fixture};
-use proxlead::algorithm::{Algorithm, DualGd, Hyper, Nids, Pdgm, ProxLead};
-use proxlead::compress::{Compressor, Identity, InfNormQuantizer};
-use proxlead::engine::rounds_to;
-use proxlead::oracle::OracleKind;
-use proxlead::prox::{Zero, L1};
+use common::out_dir;
+use proxlead::config::Config;
+use proxlead::sweep::{run_sweep_verbose, SweepResult, SweepSpec};
 use proxlead::util::bench::Table;
 
 const TARGET: f64 = 1e-9;
 const BUDGET: usize = 60_000;
 
-fn q2() -> Box<dyn Compressor> {
-    Box::new(InfNormQuantizer::new(2, 256))
+/// Smaller than the figure workload: the DualGD family needs an inner
+/// solve per round, so Table 3's common suite uses 8×60 samples, d=16.
+fn base_cfg(lambda1: f64) -> Config {
+    Config::parse(&format!(
+        "nodes = 8\nsamples_per_node = 60\ndim = 16\nclasses = 5\nbatches = 15\n\
+         separation = 1.0\nlambda1 = {lambda1}\nlambda2 = 0.05\n\
+         rounds = {BUDGET}\nrecord_every = {BUDGET}\n"
+    ))
+    .expect("table3 base config")
+}
+
+/// Emit one panel: run the spec, then table + csv rows in variant order.
+fn panel(
+    title: &str,
+    panel_tag: &str,
+    labels: &[&str],
+    spec: &SweepSpec,
+    csv: &mut String,
+) -> SweepResult {
+    println!("table3 {panel_tag} panel: {} cells on {} threads", spec.num_cells(), spec.threads);
+    let res = run_sweep_verbose(spec).expect("table3 sweep");
+    let mut table = Table::new(title, &["algorithm", "compressed", "iters", "grad evals", "Mbit"]);
+    for (label, cell) in labels.iter().zip(&res.cells) {
+        let bits_override = cell
+            .overrides
+            .iter()
+            .find(|(k, _)| k == "bits")
+            .map(|(_, v)| v.as_str())
+            .unwrap_or("2");
+        let compressed = bits_override != "32" && bits_override != "64";
+        let it_s = cell
+            .result
+            .rounds_to_target
+            .map(|i| i.to_string())
+            .unwrap_or_else(|| format!(">{BUDGET}"));
+        let last = cell.result.history.last().expect("history");
+        table.row(vec![
+            (*label).into(),
+            if compressed { "2bit".into() } else { "—".into() },
+            it_s.clone(),
+            format!("{}", last.grad_evals),
+            format!("{:.1}", last.bits as f64 / 1e6),
+        ]);
+        csv.push_str(&format!(
+            "{panel_tag},{label},{compressed},{it_s},{},{}\n",
+            last.grad_evals, last.bits
+        ));
+    }
+    table.print();
+    res
 }
 
 fn main() {
-    // smaller than the figure workload: the DualGD family needs an inner
-    // solve per round, so Table 3's common suite uses 8×60 samples, d=16
-    let fx = Fixture::table3();
-    let (p, w, x0, eta) = (&fx.problem, &fx.w, &fx.x0, fx.eta);
-    use proxlead::problem::Problem;
-    let mu = p.strong_convexity();
+    let mut csv = String::from("panel,algorithm,compressed,iters,grad_evals,bits\n");
 
     // ---------------- smooth panel (R = 0, Table 3 upper rows) ----------
-    let x_star = fx.reference(0.0);
-    let mut table = Table::new(
+    // eta = 0 ⇒ 1/(2L) for the primal methods; the dual family derives its
+    // dual stepsize (μ/2, or μ/4 when compressed) from the same config
+    let spec = SweepSpec::new(base_cfg(0.0))
+        .variant(&[("algorithm", "dualgd"), ("bits", "32"), ("alpha", "0.5")])
+        .variant(&[("algorithm", "lessbit-a"), ("bits", "2"), ("alpha", "0.25")])
+        .variant(&[("algorithm", "pdgm"), ("bits", "32"), ("gamma", "1.0")])
+        .variant(&[("algorithm", "lessbit-b"), ("bits", "2"), ("gamma", "0.1"), ("alpha", "0.25")])
+        .variant(&[("algorithm", "nids"), ("bits", "32")])
+        .variant(&[("algorithm", "lead"), ("bits", "2")])
+        .until(TARGET);
+    panel(
         "Table 3 — smooth panel: iterations (grad evals) to 1e-9",
-        &["algorithm", "compressed", "iters", "grad evals", "Mbit"],
+        "smooth",
+        &["DualGD", "LessBit-A", "PDGM", "LessBit-B", "NIDS", "LEAD"],
+        &spec,
+        &mut csv,
     );
-    let mut csv = String::from("panel,algorithm,compressed,iters,grad_evals,bits\n");
-    let mut row = |name: &str,
-                   compressed: bool,
-                   alg: &mut dyn Algorithm,
-                   p: &dyn proxlead::problem::Problem,
-                   x_star: &[f64],
-                   table: &mut Table,
-                   csv: &mut String,
-                   panel: &str| {
-        let iters = rounds_to(alg, p, x_star, TARGET, BUDGET);
-        let it_s = iters.map(|i| i.to_string()).unwrap_or_else(|| format!(">{BUDGET}"));
-        table.row(vec![
-            name.into(),
-            if compressed { "2bit".into() } else { "—".into() },
-            it_s.clone(),
-            format!("{}", alg.grad_evals()),
-            format!("{:.1}", alg.bits() as f64 / 1e6),
-        ]);
-        csv.push_str(&format!(
-            "{panel},{name},{compressed},{it_s},{},{}\n",
-            alg.grad_evals(),
-            alg.bits()
-        ));
-    };
-
-    {
-        let mut a = DualGd::new(p, w, x0, mu / 2.0, 40, Box::new(Identity::f32()), 0.5, 5);
-        row("DualGD", false, &mut a, p, &x_star, &mut table, &mut csv, "smooth");
-        let mut a = DualGd::new(p, w, x0, mu / 4.0, 40, q2(), 0.25, 5);
-        row("LessBit-A", true, &mut a, p, &x_star, &mut table, &mut csv, "smooth");
-        let mut a = Pdgm::plain(p, w, x0, eta, 1.0, 5);
-        row("PDGM", false, &mut a, p, &x_star, &mut table, &mut csv, "smooth");
-        let mut a = Pdgm::lessbit_b(p, w, x0, eta, 0.1, q2(), 0.25, 5);
-        row("LessBit-B", true, &mut a, p, &x_star, &mut table, &mut csv, "smooth");
-        let mut a = Nids::new(p, w, x0, eta, OracleKind::Full, Box::new(Zero), 5);
-        row("NIDS", false, &mut a, p, &x_star, &mut table, &mut csv, "smooth");
-        let mut a = ProxLead::new(
-            p,
-            w,
-            x0,
-            Hyper::paper_default(eta),
-            OracleKind::Full,
-            q2(),
-            Box::new(Zero),
-            5,
-        );
-        row("LEAD", true, &mut a, p, &x_star, &mut table, &mut csv, "smooth");
-    }
-    table.print();
 
     // ---------------- composite panel (R = λ1‖·‖1, lower rows) ----------
-    let lam = 5e-3;
-    let x_star = fx.reference(lam);
-    let mut table = Table::new(
+    // PUDA = Prox-LEAD with C = 0 (Corollary 6) ⇒ the dense-64bit variant
+    let spec = SweepSpec::new(base_cfg(5e-3))
+        .variant(&[("algorithm", "prox-lead"), ("bits", "64")])
+        .variant(&[("algorithm", "nids"), ("bits", "32")])
+        .variant(&[("algorithm", "prox-lead"), ("bits", "2")])
+        .until(TARGET);
+    panel(
         "Table 3 — composite panel (λ1 = 5e-3): iterations to 1e-9",
-        &["algorithm", "compressed", "iters", "grad evals", "Mbit"],
+        "composite",
+        &["PUDA (C=0)", "NIDS (prox)", "Prox-LEAD"],
+        &spec,
+        &mut csv,
     );
-    {
-        // PUDA = Prox-LEAD with C = 0 (Corollary 6)
-        let mut a = ProxLead::new(
-            p,
-            w,
-            x0,
-            Hyper::paper_default(eta),
-            OracleKind::Full,
-            Box::new(Identity::f64()),
-            Box::new(L1::new(lam)),
-            5,
-        );
-        row("PUDA (C=0)", false, &mut a, p, &x_star, &mut table, &mut csv, "composite");
-        let mut a = Nids::new(p, w, x0, eta, OracleKind::Full, Box::new(L1::new(lam)), 5);
-        row("NIDS (prox)", false, &mut a, p, &x_star, &mut table, &mut csv, "composite");
-        let mut a = ProxLead::new(
-            p,
-            w,
-            x0,
-            Hyper::paper_default(eta),
-            OracleKind::Full,
-            q2(),
-            Box::new(L1::new(lam)),
-            5,
-        );
-        row("Prox-LEAD", true, &mut a, p, &x_star, &mut table, &mut csv, "composite");
-    }
-    table.print();
 
     std::fs::write(out_dir().join("table3.csv"), csv).unwrap();
     println!("\nwrote bench_out/table3.csv");

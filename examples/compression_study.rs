@@ -6,64 +6,62 @@
 //! reporting iterations and bits to reach 1e-10 suboptimality — the
 //! "compression is almost free" claim, measured.
 //!
+//! The grid is a [`SweepSpec`] of one variant per operator on the
+//! parallel sweep runtime; each variant's (α, γ) comes from its measured
+//! noise-to-signal ratio C (Lemma 4's feasibility region for the
+//! high-variance comparators, the paper's α = 0.5, γ = 1 otherwise).
+//!
 //! ```sh
 //! cargo run --release --example compression_study
 //! ```
 
-use proxlead::algorithm::{solve_reference, Hyper, ProxLead};
-use proxlead::compress::{Compressor, Identity, InfNormQuantizer, L2NormQuantizer, RandK};
-use proxlead::engine::{run, RunConfig};
-use proxlead::graph::{mixing_matrix, Graph, MixingRule};
-use proxlead::linalg::Mat;
-use proxlead::oracle::OracleKind;
-use proxlead::problem::data::BlobSpec;
-use proxlead::problem::{LogReg, Problem};
-use proxlead::prox::L1;
+use proxlead::config::Config;
+use proxlead::sweep::{run_sweep_verbose, SweepSpec};
+use proxlead::util::rng::Rng;
+
+const LAMBDA1: f64 = 5e-3;
+const TARGET: f64 = 1e-10;
+const BUDGET: usize = 60_000;
+
+fn base_cfg() -> Config {
+    Config::parse(&format!(
+        "nodes = 8\nsamples_per_node = 120\ndim = 32\nclasses = 10\nbatches = 15\n\
+         separation = 1.0\nlambda1 = {LAMBDA1}\nlambda2 = 0.05\n\
+         algorithm = prox-lead\nrounds = {BUDGET}\nrecord_every = {BUDGET}\n"
+    ))
+    .expect("compression_study base config")
+}
+
+/// The operator grid: (label, family, bits) — bits 32 ⇒ dense baseline.
+const OPERATORS: &[(&str, &str, u32)] = &[
+    ("dense 32bit", "inf", 32),
+    ("inf-norm 2bit", "inf", 2),
+    ("inf-norm 4bit", "inf", 4),
+    ("inf-norm 8bit", "inf", 8),
+    ("qsgd-2norm 2bit", "l2", 2),
+    ("qsgd-2norm 4bit", "l2", 4),
+    ("rand-k (k=p/8)", "randk", 2),
+];
 
 fn main() {
-    let spec = BlobSpec {
-        nodes: 8,
-        samples_per_node: 120,
-        dim: 32,
-        classes: 10,
-        separation: 1.0,
-        ..Default::default()
-    };
-    let problem = LogReg::from_blobs(&spec, 0.05, 15);
-    let graph = Graph::ring(8);
-    let w = mixing_matrix(&graph, MixingRule::UniformMaxDegree);
-    let lambda1 = 5e-3;
-    let x_star = solve_reference(&problem, lambda1, 60_000, 1e-12);
-    let eta = 0.5 / problem.smoothness();
-    let x0 = Mat::zeros(8, problem.dim());
-    let target = 1e-10;
+    let base = base_cfg();
+    let dim = base.dim * base.classes; // flattened parameter dimension p
 
-    let compressors: Vec<(String, Box<dyn Compressor>)> = vec![
-        ("dense 32bit".into(), Box::new(Identity::f32())),
-        ("inf-norm 2bit".into(), Box::new(InfNormQuantizer::new(2, 256))),
-        ("inf-norm 4bit".into(), Box::new(InfNormQuantizer::new(4, 256))),
-        ("inf-norm 8bit".into(), Box::new(InfNormQuantizer::new(8, 256))),
-        ("qsgd-2norm 2bit".into(), Box::new(L2NormQuantizer::new(2, 256))),
-        ("qsgd-2norm 4bit".into(), Box::new(L2NormQuantizer::new(4, 256))),
-        ("rand-k (k=p/8)".into(), Box::new(RandK::new(problem.dim() / 8))),
-    ];
-
-    println!(
-        "compression study: Prox-LEAD, 8-node ring, λ1 = {lambda1}, target subopt {target:.0e}\n"
-    );
-    println!(
-        "{:<18} {:>6} {:>8} {:>12} {:>12} {:>10}",
-        "compressor", "C≈", "iters", "bits/round", "Mbit tot", "vs 32bit"
-    );
-    let mut dense_bits = None;
-    for (label, comp) in compressors {
-        // empirical noise-to-signal ratio C drives feasible (α, γ): the
-        // paper's α = 0.5, γ = 1 works for low-C operators (eq. 21); the
-        // high-variance comparators need Lemma 4's feasibility region
+    // per-operator (α, γ) from the measured noise-to-signal ratio: the
+    // paper's α = 0.5, γ = 1 works for low-C operators (eq. 21); the
+    // high-variance comparators need Lemma 4's feasibility region
+    let mut spec = SweepSpec::new(base.clone()).until(TARGET);
+    let mut nsrs = Vec::new();
+    for &(_, family, bits) in OPERATORS {
+        let mut probe = base.clone();
+        probe.compressor = family.into();
+        probe.bits = bits;
+        let comp = probe.compressor().expect("operator");
         let c = {
-            let mut rng = proxlead::util::rng::Rng::new(99);
-            proxlead::compress::empirical_nsr(comp.as_ref(), problem.dim(), 10, &mut rng)
+            let mut rng = Rng::new(99);
+            proxlead::compress::empirical_nsr(comp.as_ref(), dim, 10, &mut rng)
         };
+        nsrs.push(c);
         let alpha = (0.8 / (1.0 + c)).min(0.5);
         let lmax_iw = 4.0 / 3.0; // ring, uniform 1/3 weights
         let gamma = if c < 0.3 {
@@ -72,20 +70,32 @@ fn main() {
             let delta = alpha - (1.0 + c) * alpha * alpha;
             (delta / (c.sqrt() * lmax_iw)).min(1.0)
         };
-        let mut alg = ProxLead::new(
-            &problem,
-            &w,
-            &x0,
-            Hyper { eta, alpha, gamma },
-            OracleKind::Full,
-            comp,
-            Box::new(L1::new(lambda1)),
-            11,
-        );
-        let res = run(&mut alg, &problem, &x_star, &RunConfig::fixed(60_000).every(60_000).until(target));
-        match res.rounds_to_target {
+        let (bits, alpha, gamma) = (format!("{bits}"), format!("{alpha}"), format!("{gamma}"));
+        spec = spec.variant(&[
+            ("compressor", family),
+            ("bits", bits.as_str()),
+            ("alpha", alpha.as_str()),
+            ("gamma", gamma.as_str()),
+        ]);
+    }
+
+    println!(
+        "compression study: Prox-LEAD, 8-node ring, λ1 = {LAMBDA1}, target subopt {TARGET:.0e}\n\
+         {} operators on {} threads\n",
+        spec.num_cells(),
+        spec.threads
+    );
+    let res = run_sweep_verbose(&spec).expect("compression sweep");
+
+    println!(
+        "\n{:<18} {:>6} {:>8} {:>12} {:>12} {:>10}",
+        "compressor", "C≈", "iters", "bits/round", "Mbit tot", "vs 32bit"
+    );
+    let mut dense_bits = None;
+    for ((&(label, _, _), cell), &c) in OPERATORS.iter().zip(&res.cells).zip(&nsrs) {
+        match cell.result.rounds_to_target {
             Some(iters) => {
-                let bits = res.history.last().unwrap().bits;
+                let bits = cell.result.history.last().unwrap().bits;
                 let per_round = bits / iters as u64;
                 if label == "dense 32bit" {
                     dense_bits = Some(bits);

@@ -25,6 +25,7 @@ USAGE:
 
 SUBCOMMANDS:
   train       run distributed Prox-LEAD on node threads (the coordinator)
+  sweep       run a parallel experiment grid through the matrix engine
   solve-ref   compute the high-precision reference solution x*
   info        print problem/network condition numbers and artifacts
   config      print the effective configuration (after overrides)
@@ -33,13 +34,24 @@ SUBCOMMANDS:
 CONFIG KEYS (also usable as --key value):
   nodes samples_per_node dim classes batches lambda1 lambda2 separation
   shuffled topology(ring|chain|star|complete|grid|er) mixing(uniform|mh|lazy)
-  er_prob oracle(full|sgd|lsvrg|saga) lsvrg_p bits(2..16|32|64) block
-  eta(0=auto 1/2L) alpha gamma rounds record_every seed
-  backend(native|xla) out straggler_prob straggler_us
+  er_prob algorithm(prox-lead|lead|dgd|choco|nids|p2d2|pg-extra|pdgm|dualgd)
+  oracle(full|sgd|lsvrg|saga) lsvrg_p compressor(inf|l2|randk|topk)
+  bits(2..16|32|64) block sparsify_k eta(0=auto 1/2L) alpha gamma
+  rounds record_every seed backend(native|xla) out
+  straggler_prob straggler_us
+
+SWEEP FLAGS (sweep subcommand only):
+  --grid \"key=v1,v2;key2=v1,v2\"   cartesian axes over any config key
+  --threads N                     worker threads (default: all cores);
+                                  never changes results, only wall-clock
+  --target 1e-9                   per-cell early-stop suboptimality
+  --out sweep.json                deterministic JSON trajectory aggregate
 
 EXAMPLES:
   proxlead train --rounds 300 --bits 2 --oracle saga --out run.csv
   proxlead train --config experiment.cfg --backend xla
+  proxlead sweep --grid \"algorithm=prox-lead,dgd;bits=2,32;seed=1,2\" \\
+                 --rounds 2000 --threads 8 --out sweep.json
   proxlead info --nodes 16 --topology grid
 ";
 

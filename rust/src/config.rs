@@ -2,7 +2,7 @@
 //! `#` comments) merged with `--key value` command-line overrides, so a
 //! training run is reproducible from one small text file.
 
-use crate::compress::{Compressor, Identity, InfNormQuantizer, L2NormQuantizer};
+use crate::compress::{Compressor, Identity, InfNormQuantizer, L2NormQuantizer, RandK, TopK};
 use crate::coordinator::WireCodec;
 use crate::graph::{Graph, MixingRule, Topology};
 use crate::oracle::OracleKind;
@@ -32,8 +32,14 @@ pub struct Config {
     pub algorithm: String,
     pub oracle: String,
     pub lsvrg_p: f64,
+    /// Compression operator family: `inf` (eq. 21 ∞-norm quantizer),
+    /// `l2` (QSGD-style 2-norm), `randk` / `topk` (sparsifiers keeping
+    /// `sparsify_k` entries; `topk` is the biased ablation operator).
+    pub compressor: String,
     pub bits: u32,
     pub block: usize,
+    /// Entries kept by the `randk` / `topk` sparsifiers (0 ⇒ dim/8).
+    pub sparsify_k: usize,
     pub eta: f64,
     pub alpha: f64,
     pub gamma: f64,
@@ -65,8 +71,10 @@ impl Default for Config {
             algorithm: "prox-lead".into(),
             oracle: "full".into(),
             lsvrg_p: 1.0 / 15.0,
+            compressor: "inf".into(),
             bits: 2,
             block: 256,
+            sparsify_k: 0,
             eta: 0.0, // 0 ⇒ auto: 1/(2L)
             alpha: 0.5,
             gamma: 1.0,
@@ -141,8 +149,10 @@ impl Config {
             "algorithm" => self.algorithm = val.into(),
             "oracle" => self.oracle = val.into(),
             "lsvrg_p" => self.lsvrg_p = p(key, val)?,
+            "compressor" => self.compressor = val.into(),
             "bits" => self.bits = p(key, val)?,
             "block" => self.block = p(key, val)?,
+            "sparsify_k" => self.sparsify_k = p(key, val)?,
             "eta" => self.eta = p(key, val)?,
             "alpha" => self.alpha = p(key, val)?,
             "gamma" => self.gamma = p(key, val)?,
@@ -193,13 +203,29 @@ impl Config {
         })
     }
 
-    /// Compressor for the matrix engine. bits = 32/64 ⇒ dense identity.
+    /// Compressor for the matrix engine. bits = 32/64 ⇒ dense identity
+    /// (whatever the family); otherwise `compressor` picks the operator
+    /// family at the given bit budget.
     pub fn compressor(&self) -> Result<Box<dyn Compressor>, ConfigError> {
-        Ok(match self.bits {
-            64 => Box::new(Identity::f64()),
-            32 => Box::new(Identity::f32()),
-            b if (2..=16).contains(&b) => Box::new(InfNormQuantizer::new(b, self.block)),
+        match self.bits {
+            64 => return Ok(Box::new(Identity::f64())),
+            32 => return Ok(Box::new(Identity::f32())),
+            b if (2..=16).contains(&b) => {}
             b => return Err(ConfigError(format!("bits must be 2..=16, 32 or 64 (got {b})"))),
+        }
+        // default sparsifier budget: an eighth of the flattened parameter
+        // dimension (p = dim·classes for multinomial logreg)
+        let k = if self.sparsify_k > 0 {
+            self.sparsify_k
+        } else {
+            (self.dim * self.classes.max(1) / 8).max(1)
+        };
+        Ok(match self.compressor.as_str() {
+            "inf" => Box::new(InfNormQuantizer::new(self.bits, self.block)),
+            "l2" | "qsgd" => Box::new(L2NormQuantizer::new(self.bits, self.block)),
+            "randk" | "rand-k" => Box::new(RandK::new(k)),
+            "topk" | "top-k" => Box::new(TopK::new(k)),
+            c => return Err(ConfigError(format!("unknown compressor family '{c}'"))),
         })
     }
 
@@ -260,7 +286,8 @@ impl Config {
              lambda1 = {}\nlambda2 = {}\nseparation = {}\nshuffled = {}\n\
              topology = {}\nmixing = {}\ner_prob = {}\n\
              algorithm = {}\noracle = {}\nlsvrg_p = {}\n\
-             bits = {}\nblock = {}\neta = {}\nalpha = {}\ngamma = {}\n\
+             compressor = {}\nbits = {}\nblock = {}\nsparsify_k = {}\n\
+             eta = {}\nalpha = {}\ngamma = {}\n\
              rounds = {}\nrecord_every = {}\nseed = {}\nbackend = {}\nout = {}\n\
              straggler_prob = {}\nstraggler_us = {}\n",
             self.nodes,
@@ -278,8 +305,10 @@ impl Config {
             self.algorithm,
             self.oracle,
             self.lsvrg_p,
+            self.compressor,
             self.bits,
             self.block,
+            self.sparsify_k,
             self.eta,
             self.alpha,
             self.gamma,
@@ -350,5 +379,27 @@ mod tests {
         assert_eq!(c.prox().name(), "l1(0.005)");
         c.lambda1 = 0.0;
         assert!(c.prox().is_zero());
+    }
+
+    #[test]
+    fn compressor_families_resolve() {
+        let mut c = Config::default();
+        c.bits = 4;
+        c.compressor = "l2".into();
+        assert!(c.compressor().unwrap().name().contains("4bit"));
+        c.compressor = "randk".into();
+        c.sparsify_k = 6;
+        assert_eq!(c.compressor().unwrap().name(), "rand6");
+        c.compressor = "topk".into();
+        assert_eq!(c.compressor().unwrap().name(), "top6");
+        // default sparsifier budget: p/8 = dim·classes/8
+        c.sparsify_k = 0;
+        assert_eq!(c.compressor().unwrap().name(), format!("top{}", 64 * 10 / 8));
+        // dense bit-widths ignore the family; unknown families error
+        c.bits = 32;
+        assert_eq!(c.compressor().unwrap().name(), "32bit");
+        c.bits = 2;
+        c.compressor = "zip".into();
+        assert!(c.compressor().is_err());
     }
 }

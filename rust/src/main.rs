@@ -3,6 +3,8 @@
 //! Subcommands (see `proxlead help`):
 //! - `train`: distributed Prox-LEAD on node threads (the coordinator),
 //!   optionally with the PJRT/XLA gradient backend (`--backend xla`);
+//! - `sweep`: a parallel experiment grid through the matrix engine (the
+//!   sweep runtime — deterministic regardless of `--threads`);
 //! - `solve-ref`: high-precision centralized reference x*;
 //! - `info`: condition numbers, spectra, artifact registry;
 //! - `config`: print the effective configuration.
@@ -29,6 +31,7 @@ fn main() {
     };
     let code = match inv.subcommand.as_str() {
         "train" => cmd_train(&inv),
+        "sweep" => cmd_sweep(&inv),
         "solve-ref" => cmd_solve_ref(&inv),
         "info" => cmd_info(&inv),
         "config" => {
@@ -133,6 +136,73 @@ fn cmd_train(inv: &Invocation) -> i32 {
     if !cfg.out.is_empty() {
         std::fs::write(&cfg.out, csv).expect("write csv");
         println!("wrote {}", cfg.out);
+    }
+    0
+}
+
+fn cmd_sweep(inv: &Invocation) -> i32 {
+    use proxlead::sweep::{run_sweep_verbose, SweepSpec};
+    // `extra` holds both sweep-specific flags and config overrides whose
+    // values failed to parse — reject anything we don't recognize instead
+    // of silently sweeping a default configuration
+    for (key, val) in &inv.extra {
+        if !matches!(key.as_str(), "grid" | "threads" | "target") {
+            eprintln!("unrecognized or invalid flag --{key} {val}\n\n{USAGE}");
+            return 2;
+        }
+    }
+    let mut spec = SweepSpec::new(inv.config.clone());
+    if let Some(grid) = inv.flag("grid") {
+        spec = match spec.with_grid(grid) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+    }
+    if let Some(t) = inv.flag("threads") {
+        match t.parse::<usize>() {
+            Ok(n) if n > 0 => spec = spec.threads(n),
+            _ => {
+                eprintln!("--threads needs a positive integer (got '{t}')");
+                return 2;
+            }
+        }
+    }
+    if let Some(t) = inv.flag("target") {
+        match t.parse::<f64>() {
+            Ok(x) if x > 0.0 => spec = spec.until(x),
+            _ => {
+                eprintln!("--target needs a positive float (got '{t}')");
+                return 2;
+            }
+        }
+    }
+    println!(
+        "prox-lead sweep: {} cells ({} variants × axes {:?}) on {} threads",
+        spec.num_cells(),
+        spec.variants.len().max(1),
+        spec.axes.iter().map(|a| format!("{}×{}", a.key, a.values.len())).collect::<Vec<_>>(),
+        spec.threads,
+    );
+    let res = match run_sweep_verbose(&spec) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    res.summary_table("sweep summary").print();
+    println!("total wire payload across cells: {:.2} Mbit", res.total_bits() as f64 / 1e6);
+    if !inv.config.out.is_empty() {
+        match res.write_json(&inv.config.out) {
+            Ok(()) => println!("wrote {}", inv.config.out),
+            Err(e) => {
+                eprintln!("write {}: {e}", inv.config.out);
+                return 1;
+            }
+        }
     }
     0
 }

@@ -1,8 +1,8 @@
 //! Artifact manifest — the contract between `python/compile/aot.py` and
 //! the rust registry. One entry per lowered (fn, m, d, C, λ₂) artifact.
 
+use super::{Result, RtError};
 use crate::util::json::Json;
-use anyhow::{anyhow, Result};
 use std::path::Path;
 
 #[derive(Clone, Debug, PartialEq)]
@@ -26,14 +26,14 @@ pub struct Manifest {
 
 impl Manifest {
     pub fn parse(text: &str) -> Result<Manifest> {
-        let root = Json::parse(text).map_err(|e| anyhow!("manifest json: {e:?}"))?;
+        let root = Json::parse(text).map_err(|e| RtError(format!("manifest json: {e}")))?;
         let format = root
             .get("format")
             .and_then(|j| j.as_str())
-            .ok_or_else(|| anyhow!("manifest missing 'format'"))?
+            .ok_or_else(|| RtError("manifest missing 'format'".to_string()))?
             .to_string();
         if format != "hlo-text" {
-            return Err(anyhow!("unsupported artifact format '{format}'"));
+            return Err(RtError(format!("unsupported artifact format '{format}'")));
         }
         let dtype = root
             .get("dtype")
@@ -43,17 +43,19 @@ impl Manifest {
         let arts = root
             .get("artifacts")
             .and_then(|j| j.as_arr())
-            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+            .ok_or_else(|| RtError("manifest missing 'artifacts'".to_string()))?;
         let mut artifacts = Vec::with_capacity(arts.len());
         for a in arts {
             let str_field = |k: &str| -> Result<String> {
                 a.get(k)
                     .and_then(|j| j.as_str())
                     .map(str::to_string)
-                    .ok_or_else(|| anyhow!("artifact missing '{k}'"))
+                    .ok_or_else(|| RtError(format!("artifact missing '{k}'")))
             };
             let num_field = |k: &str| -> Result<usize> {
-                a.get(k).and_then(|j| j.as_usize()).ok_or_else(|| anyhow!("artifact missing '{k}'"))
+                a.get(k)
+                    .and_then(|j| j.as_usize())
+                    .ok_or_else(|| RtError(format!("artifact missing '{k}'")))
             };
             artifacts.push(ArtifactMeta {
                 name: str_field("name")?,

@@ -8,12 +8,20 @@
 //! instruction ids that xla_extension 0.5.1 rejects (see
 //! /opt/xla-example/README.md).
 //!
-//! Thread safety: the `xla` crate's handles hold `Rc` refcounts and raw
-//! PJRT pointers, so they are `!Send`. [`PjrtRuntime`] owns them inside a
-//! `Mutex` and never lets a handle escape — every PJRT call (including the
-//! `Rc` clones `execute` performs internally) happens under the lock, so
-//! promoting the wrapper to `Send + Sync` is sound. The PJRT CPU client
-//! itself is thread-safe; the lock is about the wrapper's `Rc`s.
+//! **Feature gating:** the `xla` crate (PJRT bindings) is not available in
+//! the offline build image, so the real executor only compiles under
+//! `--features xla` (after vendoring that crate). With the feature off —
+//! the default — [`PjrtRuntime`] is a stub whose `load` always errors;
+//! everything that can fall back to the native kernels does, and callers
+//! that *require* PJRT fail with a pointer at the feature flag.
+//!
+//! Thread safety (real impl): the `xla` crate's handles hold `Rc`
+//! refcounts and raw PJRT pointers, so they are `!Send`. `PjrtRuntime`
+//! owns them inside a `Mutex` and never lets a handle escape — every PJRT
+//! call (including the `Rc` clones `execute` performs internally) happens
+//! under the lock, so promoting the wrapper to `Send + Sync` is sound.
+//! The PJRT CPU client itself is thread-safe; the lock is about the
+//! wrapper's `Rc`s.
 
 pub mod manifest;
 pub mod xla_problem;
@@ -21,110 +29,191 @@ pub mod xla_problem;
 pub use manifest::{ArtifactMeta, Manifest};
 pub use xla_problem::XlaLogReg;
 
-use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::fmt;
+use std::path::PathBuf;
 
-struct Inner {
-    /// Kept alive for the lifetime of the executables (PJRT requires the
-    /// client to outlive everything it compiled).
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-    execs: HashMap<String, xla::PjRtLoadedExecutable>,
-    dir: PathBuf,
-    manifest: Manifest,
+/// Minimal runtime error (`anyhow` is unavailable offline).
+#[derive(Debug)]
+pub struct RtError(pub String);
+
+impl fmt::Display for RtError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "runtime error: {}", self.0)
+    }
 }
 
-// SAFETY: `Inner` is only ever touched through `PjrtRuntime`'s Mutex, so
-// no two threads manipulate the Rc refcounts or PJRT handles concurrently,
-// and no handle is exposed outside the lock. See module docs.
-unsafe impl Send for Inner {}
+impl std::error::Error for RtError {}
 
-/// A compiled-artifact registry + executor over the PJRT CPU client.
-pub struct PjrtRuntime {
-    inner: Mutex<Inner>,
+impl From<std::io::Error> for RtError {
+    fn from(e: std::io::Error) -> RtError {
+        RtError(e.to_string())
+    }
 }
 
-impl PjrtRuntime {
-    /// Open `dir` (normally `artifacts/`), parse `manifest.json`, and
-    /// compile every artifact eagerly. Fails with a pointer at
-    /// `make artifacts` when the directory is missing.
-    pub fn load(dir: &Path) -> Result<PjrtRuntime> {
-        let manifest = Manifest::read(&dir.join("manifest.json")).with_context(|| {
-            format!(
-                "cannot read {}/manifest.json — run `make artifacts` first",
-                dir.display()
-            )
-        })?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
-        let mut execs = HashMap::new();
-        for art in &manifest.artifacts {
-            let path = dir.join(&art.file);
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compile {}: {e}", art.name))?;
-            execs.insert(art.name.clone(), exe);
-        }
-        Ok(PjrtRuntime {
-            inner: Mutex::new(Inner { client, execs, dir: dir.to_path_buf(), manifest }),
-        })
+pub type Result<T> = std::result::Result<T, RtError>;
+
+pub use pjrt::PjrtRuntime;
+
+#[cfg(feature = "xla")]
+mod pjrt {
+    //! The real PJRT executor — requires the vendored `xla` crate.
+    use super::{ArtifactMeta, Manifest, Result, RtError};
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::sync::Mutex;
+
+    struct Inner {
+        /// Kept alive for the lifetime of the executables (PJRT requires
+        /// the client to outlive everything it compiled).
+        #[allow(dead_code)]
+        client: xla::PjRtClient,
+        execs: HashMap<String, xla::PjRtLoadedExecutable>,
+        dir: PathBuf,
+        manifest: Manifest,
     }
 
-    /// Artifact metadata (immutable snapshot of the manifest).
-    pub fn manifest(&self) -> Manifest {
-        self.inner.lock().unwrap().manifest.clone()
+    // SAFETY: `Inner` is only ever touched through `PjrtRuntime`'s Mutex,
+    // so no two threads manipulate the Rc refcounts or PJRT handles
+    // concurrently, and no handle is exposed outside the lock. See module
+    // docs.
+    unsafe impl Send for Inner {}
+
+    /// A compiled-artifact registry + executor over the PJRT CPU client.
+    pub struct PjrtRuntime {
+        inner: Mutex<Inner>,
     }
 
-    /// Find the gradient artifact for a given shape, if compiled.
-    pub fn find(&self, fn_name: &str, m: usize, d: usize, c: usize) -> Option<ArtifactMeta> {
-        let inner = self.inner.lock().unwrap();
-        inner
-            .manifest
-            .artifacts
-            .iter()
-            .find(|a| a.fn_name == fn_name && a.m == m && a.d == d && a.c == c)
-            .cloned()
-    }
-
-    /// Execute artifact `name` with f32 row-major inputs `(data, dims)…`,
-    /// returning the flattened f32 output of the 1-tuple root.
-    pub fn exec(&self, name: &str, args: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
-        let inner = self.inner.lock().unwrap();
-        let exe = inner
-            .execs
-            .get(name)
-            .ok_or_else(|| anyhow!("no artifact '{name}' in {}", inner.dir.display()))?;
-        let literals: Vec<xla::Literal> = args
-            .iter()
-            .map(|(data, dims)| {
-                let expected: i64 = dims.iter().product();
-                assert_eq!(data.len() as i64, expected, "input size/dims mismatch");
-                xla::Literal::vec1(data)
-                    .reshape(dims)
-                    .map_err(|e| anyhow!("reshape {dims:?}: {e}"))
+    impl PjrtRuntime {
+        /// Open `dir` (normally `artifacts/`), parse `manifest.json`, and
+        /// compile every artifact eagerly. Fails with a pointer at
+        /// `make artifacts` when the directory is missing.
+        pub fn load(dir: &Path) -> Result<PjrtRuntime> {
+            let manifest = Manifest::read(&dir.join("manifest.json")).map_err(|e| {
+                RtError(format!(
+                    "cannot read {}/manifest.json — run `make artifacts` first: {e}",
+                    dir.display()
+                ))
+            })?;
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| RtError(format!("PJRT cpu client: {e}")))?;
+            let mut execs = HashMap::new();
+            for art in &manifest.artifacts {
+                let path = dir.join(&art.file);
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .map_err(|e| RtError(format!("parse {}: {e}", path.display())))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .map_err(|e| RtError(format!("compile {}: {e}", art.name)))?;
+                execs.insert(art.name.clone(), exe);
+            }
+            Ok(PjrtRuntime {
+                inner: Mutex::new(Inner { client, execs, dir: dir.to_path_buf(), manifest }),
             })
-            .collect::<Result<_>>()?;
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute {name}: {e}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch {name}: {e}"))?;
-        // aot.py lowers with return_tuple=True ⇒ unwrap the 1-tuple
-        let out = result.to_tuple1().map_err(|e| anyhow!("untuple {name}: {e}"))?;
-        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec {name}: {e}"))
+        }
+
+        /// Artifact metadata (immutable snapshot of the manifest).
+        pub fn manifest(&self) -> Manifest {
+            self.inner.lock().unwrap().manifest.clone()
+        }
+
+        /// Find the gradient artifact for a given shape, if compiled.
+        pub fn find(&self, fn_name: &str, m: usize, d: usize, c: usize) -> Option<ArtifactMeta> {
+            let inner = self.inner.lock().unwrap();
+            inner
+                .manifest
+                .artifacts
+                .iter()
+                .find(|a| a.fn_name == fn_name && a.m == m && a.d == d && a.c == c)
+                .cloned()
+        }
+
+        /// Execute artifact `name` with f32 row-major inputs
+        /// `(data, dims)…`, returning the flattened f32 output of the
+        /// 1-tuple root.
+        pub fn exec(&self, name: &str, args: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+            let inner = self.inner.lock().unwrap();
+            let exe = inner
+                .execs
+                .get(name)
+                .ok_or_else(|| RtError(format!("no artifact '{name}' in {}", inner.dir.display())))?;
+            let literals: Vec<xla::Literal> = args
+                .iter()
+                .map(|(data, dims)| {
+                    let expected: i64 = dims.iter().product();
+                    assert_eq!(data.len() as i64, expected, "input size/dims mismatch");
+                    xla::Literal::vec1(data)
+                        .reshape(dims)
+                        .map_err(|e| RtError(format!("reshape {dims:?}: {e}")))
+                })
+                .collect::<Result<_>>()?;
+            let result = exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| RtError(format!("execute {name}: {e}")))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| RtError(format!("fetch {name}: {e}")))?;
+            // aot.py lowers with return_tuple=True ⇒ unwrap the 1-tuple
+            let out = result.to_tuple1().map_err(|e| RtError(format!("untuple {name}: {e}")))?;
+            out.to_vec::<f32>().map_err(|e| RtError(format!("to_vec {name}: {e}")))
+        }
+
+        /// Number of compiled executables.
+        pub fn len(&self) -> usize {
+            self.inner.lock().unwrap().execs.len()
+        }
+
+        pub fn is_empty(&self) -> bool {
+            self.len() == 0
+        }
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+mod pjrt {
+    //! Stub executor used when the `xla` feature is off (the default in
+    //! the offline build): `load` validates the manifest, then reports
+    //! that PJRT execution is not compiled in. No instance can exist, so
+    //! the accessor methods are unreachable by construction.
+    use super::{ArtifactMeta, Manifest, Result, RtError};
+    use std::path::Path;
+
+    /// A compiled-artifact registry + executor over the PJRT CPU client
+    /// (stubbed out — build with `--features xla` for the real one).
+    pub struct PjrtRuntime {
+        manifest: Manifest,
     }
 
-    /// Number of compiled executables.
-    pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().execs.len()
-    }
+    impl PjrtRuntime {
+        pub fn load(dir: &Path) -> Result<PjrtRuntime> {
+            // Still parse the manifest so configuration errors surface
+            // even without the backend.
+            let _ = Manifest::read(&dir.join("manifest.json"))?;
+            Err(RtError(format!(
+                "PJRT/XLA execution is not compiled in (rebuild with `--features xla` after \
+                 vendoring the xla crate); artifacts in {} cannot be executed",
+                dir.display()
+            )))
+        }
 
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        pub fn manifest(&self) -> Manifest {
+            self.manifest.clone()
+        }
+
+        pub fn find(&self, _fn_name: &str, _m: usize, _d: usize, _c: usize) -> Option<ArtifactMeta> {
+            None
+        }
+
+        pub fn exec(&self, name: &str, _args: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+            Err(RtError(format!("xla feature disabled: cannot execute '{name}'")))
+        }
+
+        pub fn len(&self) -> usize {
+            0
+        }
+
+        pub fn is_empty(&self) -> bool {
+            true
+        }
     }
 }
 
@@ -143,12 +232,17 @@ pub fn default_artifact_dir() -> PathBuf {
 mod tests {
     use super::*;
 
-    /// Skip (with a loud note) when `make artifacts` hasn't run — the
-    /// Makefile test target always builds artifacts first.
+    /// Skip (with a loud note) when `make artifacts` hasn't run or the
+    /// PJRT backend isn't compiled in — the Makefile test target always
+    /// builds artifacts first.
     fn runtime_or_skip() -> Option<PjrtRuntime> {
         let dir = default_artifact_dir();
         if !dir.join("manifest.json").exists() {
             eprintln!("SKIP runtime tests: {} missing (run `make artifacts`)", dir.display());
+            return None;
+        }
+        if cfg!(not(feature = "xla")) {
+            eprintln!("SKIP runtime tests: built without the `xla` feature");
             return None;
         }
         Some(PjrtRuntime::load(&dir).expect("artifacts present but failed to load"))
@@ -194,10 +288,7 @@ mod tests {
             y32[r * 4 + lbl] = 1.0;
         }
         let out = rt
-            .exec(
-                &art.name,
-                &[(&a32, &[24, 8]), (&w32, &[8, 4]), (&y32, &[24, 4])],
-            )
+            .exec(&art.name, &[(&a32, &[24, 8]), (&w32, &[8, 4]), (&y32, &[24, 4])])
             .expect("execute");
         assert_eq!(out.len(), p.dim());
         for (i, (&x, &n)) in out.iter().zip(&native).enumerate() {
@@ -234,5 +325,12 @@ mod tests {
     fn runtime_is_send_sync() {
         fn assert_send_sync<T: Send + Sync>() {}
         assert_send_sync::<PjrtRuntime>();
+    }
+
+    #[test]
+    fn stub_load_reports_missing_manifest() {
+        // whatever the backend, loading a nonexistent dir must error
+        let dir = std::env::temp_dir().join("proxlead_no_such_artifacts");
+        assert!(PjrtRuntime::load(&dir).is_err());
     }
 }

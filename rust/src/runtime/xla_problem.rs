@@ -8,9 +8,8 @@
 //! Loss evaluation stays native (f64, off the hot path, used only for
 //! metric logging).
 
-use super::PjrtRuntime;
+use super::{PjrtRuntime, Result, RtError};
 use crate::problem::{LogReg, Problem};
-use anyhow::{anyhow, Result};
 use std::sync::Arc;
 
 /// Per-node f32 input caches (A and one-hot Y), sliced per batch.
@@ -39,10 +38,10 @@ impl XlaLogReg {
         let grad_full = rt
             .find("logreg_grad", m, d, c)
             .ok_or_else(|| {
-                anyhow!(
+                RtError(format!(
                     "no logreg_grad artifact for shape ({m},{d},{c}) — \
                      add a --spec to `make artifacts`"
-                )
+                ))
             })?
             .name;
         let batch_rows = m / native.num_batches();
@@ -150,6 +149,10 @@ mod tests {
         let dir = default_artifact_dir();
         if !dir.join("manifest.json").exists() {
             eprintln!("SKIP xla_problem tests: run `make artifacts`");
+            return None;
+        }
+        if cfg!(not(feature = "xla")) {
+            eprintln!("SKIP xla_problem tests: built without the `xla` feature");
             return None;
         }
         let rt = Arc::new(PjrtRuntime::load(&dir).unwrap());

@@ -1,0 +1,561 @@
+//! The parallel experiment-sweep runtime.
+//!
+//! Every figure and table in §5 is a grid over
+//! {algorithm × compressor × topology × oracle × stepsize × seed}. This
+//! module turns those grids into data: a declarative [`SweepSpec`]
+//! (see [`spec`]) expands into indexed cells, a zero-dependency
+//! `std::sync::mpsc` thread pool (see [`pool`]) fans the cells out to
+//! worker threads, each cell runs through the existing [`crate::engine`]
+//! harness, and the results aggregate into the deterministic JSON
+//! trajectory format built on [`crate::util::json`].
+//!
+//! **Determinism contract:** a cell is a pure function of its index — the
+//! data seed comes from the cell's `Config`, the algorithm seed from
+//! [`cell_seed`]`(config.seed, index)`, and the pool re-orders results by
+//! index — so the aggregated output (including [`SweepResult::to_json`],
+//! which deliberately excludes wall-clock and thread count) is
+//! **byte-identical regardless of thread count or scheduling**. The
+//! integration suite asserts this, and pins a sweep cell to a hand-rolled
+//! serial [`crate::engine::run`] of the same configuration.
+
+pub mod pool;
+pub mod spec;
+
+pub use pool::{parallel_map, parallel_map_progress};
+pub use spec::{Axis, Cell, SweepSpec};
+
+use crate::algorithm::{
+    solve_reference, Algorithm, Choco, Dgd, DualGd, Hyper, Nids, P2d2, Pdgm, PgExtra, ProxLead,
+};
+use crate::config::{Config, ConfigError};
+use crate::engine::{self, RunConfig, RunResult};
+use crate::graph::mixing_matrix;
+use crate::linalg::Mat;
+use crate::problem::{data::blobs, LogReg, Problem};
+use crate::prox::Zero;
+use crate::util::bench::Table;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Reference-solution budget shared by every cell — the figure benches'
+/// historical 80k-iteration FISTA budget, so the most ill-conditioned
+/// grid cells (long chains, tiny λ2) still converge their x* well below
+/// the 1e-9 measurement targets (FISTA early-stops at the tolerance, so
+/// well-conditioned problems pay far less). Public so tests can
+/// reproduce a cell's x* exactly.
+pub const REF_MAX_ITER: usize = 80_000;
+pub const REF_TOL: f64 = 1e-12;
+
+/// Inner dual-solve iterations for the DualGD/LessBit-A family (the
+/// warm-started inner loop the paper's §4.3 comparison assumes).
+const DUALGD_INNER_ITERS: usize = 40;
+
+/// The result of one sweep cell.
+#[derive(Clone, Debug)]
+pub struct CellOutcome {
+    pub index: usize,
+    /// The overrides that produced this cell (variant first, then axes).
+    pub overrides: Vec<(String, String)>,
+    /// The algorithm's display name, e.g. `"Prox-LEAD (2bit, saga)"`.
+    pub name: String,
+    /// The derived per-cell algorithm seed (see [`cell_seed`]).
+    pub seed: u64,
+    /// The resolved stepsize (auto = 1/(2L) when the config says 0).
+    pub eta: f64,
+    /// The engine trace.
+    pub result: RunResult,
+    /// Cell wall-clock including the (cached) reference solve. Excluded
+    /// from the JSON aggregate — it is scheduling-dependent.
+    pub wall_ns: u128,
+}
+
+/// An executed sweep: the spec plus every cell outcome, in cell order.
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    pub spec: SweepSpec,
+    pub cells: Vec<CellOutcome>,
+}
+
+/// Derive the algorithm RNG seed for one cell: a splitmix64-style
+/// finalizer over (base seed, cell index). Identical regardless of thread
+/// count or scheduling; decorrelated across neighboring cells.
+pub fn cell_seed(base_seed: u64, index: usize) -> u64 {
+    let mut z = base_seed ^ (index as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Build the (native) problem instance a cell's config describes. Sweeps
+/// always run the native kernels — the PJRT backend is per-run, not
+/// per-grid (use `proxlead train --backend xla` for that path).
+pub fn build_problem(cfg: &Config) -> LogReg {
+    LogReg::new(blobs(&cfg.blob_spec()), cfg.classes, cfg.lambda2, cfg.batches)
+}
+
+/// The resolved stepsize for a cell (config 0 ⇒ auto 1/(2L)).
+pub fn cell_eta(cfg: &Config, problem: &dyn Problem) -> f64 {
+    if cfg.eta > 0.0 {
+        cfg.eta
+    } else {
+        0.5 / problem.smoothness()
+    }
+}
+
+/// Check that a cell's config resolves to a runnable experiment — every
+/// factory the runner will call, plus the algorithm registry below.
+pub fn validate_cell(cfg: &Config) -> Result<(), ConfigError> {
+    cfg.topology()?;
+    cfg.mixing_rule()?;
+    cfg.oracle_kind()?;
+    cfg.compressor()?;
+    match cfg.algorithm.as_str() {
+        "prox-lead" | "proxlead" | "lead" | "dgd" | "prox-dgd" | "choco" | "nids" | "p2d2"
+        | "pg-extra" | "pgextra" | "pdgm" | "lessbit-b" | "dualgd" | "lessbit-a" => Ok(()),
+        a => Err(ConfigError(format!("unknown algorithm '{a}'"))),
+    }
+}
+
+/// Instantiate the algorithm a config names, over a prebuilt problem /
+/// mixing matrix / start iterate. The per-family parameter conventions:
+///
+/// - `prox-lead` / `lead`: (η, α, γ) from the config (`lead` forces r ≡ 0);
+/// - `dgd` / `prox-dgd`: η;
+/// - `choco`: η with `gamma` as the gossip stepsize γ_c;
+/// - `pdgm` / `lessbit-b`: θ = γ/(2η) (the PDHG view), `alpha` for COMM;
+/// - `dualgd` / `lessbit-a`: dual stepsize θ = η when set explicitly, else
+///   μ/2 (μ/4 when compressed), with a fixed warm-started inner solve.
+#[allow(clippy::too_many_arguments)]
+pub fn build_algorithm(
+    cfg: &Config,
+    problem: &dyn Problem,
+    w: &Mat,
+    x0: &Mat,
+    eta: f64,
+    seed: u64,
+) -> Result<Box<dyn Algorithm>, ConfigError> {
+    let oracle = cfg.oracle_kind()?;
+    let comp = cfg.compressor()?;
+    let prox = cfg.prox();
+    let hyper = Hyper { eta, alpha: cfg.alpha, gamma: cfg.gamma };
+    Ok(match cfg.algorithm.as_str() {
+        "prox-lead" | "proxlead" => {
+            Box::new(ProxLead::new(problem, w, x0, hyper, oracle, comp, prox, seed))
+        }
+        "lead" => {
+            Box::new(ProxLead::new(problem, w, x0, hyper, oracle, comp, Box::new(Zero), seed))
+        }
+        "dgd" | "prox-dgd" => Box::new(Dgd::new(problem, w, x0, eta, oracle, comp, prox, seed)),
+        "choco" => {
+            Box::new(Choco::new(problem, w, x0, eta, cfg.gamma, oracle, comp, prox, seed))
+        }
+        "nids" => Box::new(Nids::new(problem, w, x0, eta, oracle, prox, seed)),
+        "p2d2" => Box::new(P2d2::new(problem, w, x0, eta, oracle, prox, seed)),
+        "pg-extra" | "pgextra" => {
+            Box::new(PgExtra::new(problem, w, x0, eta, oracle, prox, seed))
+        }
+        "pdgm" | "lessbit-b" => {
+            let theta = cfg.gamma / (2.0 * eta);
+            Box::new(Pdgm::new(problem, w, x0, eta, theta, oracle, comp, cfg.alpha, seed))
+        }
+        "dualgd" | "lessbit-a" => {
+            let mu = problem.strong_convexity();
+            let theta = if cfg.eta > 0.0 {
+                cfg.eta
+            } else if comp.variance_bound() > 0.0 {
+                mu / 4.0
+            } else {
+                mu / 2.0
+            };
+            Box::new(DualGd::new(problem, w, x0, theta, DUALGD_INNER_ITERS, comp, cfg.alpha, seed))
+        }
+        a => return Err(ConfigError(format!("unknown algorithm '{a}'"))),
+    })
+}
+
+/// Shared reference-solution cache: cells whose configs describe the same
+/// problem (and λ1) reuse one x*. `solve_reference` is deterministic, so
+/// a racing duplicate solve returns the identical vector — the cache only
+/// saves time, never changes results.
+#[derive(Default)]
+pub struct RefCache {
+    inner: Mutex<BTreeMap<String, Arc<Vec<f64>>>>,
+}
+
+impl RefCache {
+    fn key(cfg: &Config) -> String {
+        format!(
+            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}",
+            cfg.nodes,
+            cfg.samples_per_node,
+            cfg.dim,
+            cfg.classes,
+            cfg.batches,
+            cfg.lambda1,
+            cfg.lambda2,
+            cfg.separation,
+            cfg.shuffled,
+            cfg.seed
+        )
+    }
+
+    pub fn get_or_solve(&self, cfg: &Config, problem: &dyn Problem) -> Arc<Vec<f64>> {
+        let key = RefCache::key(cfg);
+        if let Some(hit) = self.inner.lock().unwrap().get(&key).cloned() {
+            return hit;
+        }
+        // solve outside the lock so unrelated references proceed in
+        // parallel; a duplicate compute yields the same deterministic x*
+        let x = Arc::new(solve_reference(problem, cfg.lambda1, REF_MAX_ITER, REF_TOL));
+        self.inner.lock().unwrap().entry(key).or_insert(x).clone()
+    }
+}
+
+/// Run one cell serially, solving its own reference. This is the exact
+/// function the pool fans out (modulo the shared [`RefCache`]), exposed so
+/// tests can pin a sweep cell to the serial [`engine::run`] path.
+pub fn run_cell(cell: &Cell, target_subopt: Option<f64>) -> CellOutcome {
+    run_cell_cached(cell, target_subopt, &RefCache::default())
+}
+
+fn run_cell_cached(cell: &Cell, target_subopt: Option<f64>, cache: &RefCache) -> CellOutcome {
+    let t0 = Instant::now();
+    let cfg = &cell.config;
+    let problem = build_problem(cfg);
+    let graph = cfg.topology().expect("validated topology");
+    let w = mixing_matrix(&graph, cfg.mixing_rule().expect("validated mixing"));
+    let x_star = cache.get_or_solve(cfg, &problem);
+    let eta = cell_eta(cfg, &problem);
+    let seed = cell_seed(cfg.seed, cell.index);
+    let x0 = Mat::zeros(cfg.nodes, problem.dim());
+    let mut alg =
+        build_algorithm(cfg, &problem, &w, &x0, eta, seed).expect("validated algorithm");
+    let mut run_cfg = RunConfig::fixed(cfg.rounds).every(cfg.record_every);
+    if let Some(t) = target_subopt {
+        run_cfg = run_cfg.until(t);
+    }
+    let result = engine::run(alg.as_mut(), &problem, &x_star, &run_cfg);
+    CellOutcome {
+        index: cell.index,
+        overrides: cell.overrides.clone(),
+        name: result.name.clone(),
+        seed,
+        eta,
+        result,
+        wall_ns: t0.elapsed().as_nanos(),
+    }
+}
+
+/// Execute the whole grid on the spec's thread count. `progress` runs on
+/// the calling thread as cells complete (completion order); the returned
+/// cells are in index order.
+pub fn run_sweep(
+    spec: &SweepSpec,
+    progress: impl FnMut(&CellOutcome),
+) -> Result<SweepResult, ConfigError> {
+    run_sweep_with_cache(spec, &RefCache::default(), progress)
+}
+
+/// [`run_sweep`] against a caller-owned [`RefCache`] — lets several specs
+/// over the same problem (e.g. a figure's panels) share one reference
+/// solve. Results are unchanged; only wall-clock differs.
+pub fn run_sweep_with_cache(
+    spec: &SweepSpec,
+    cache: &RefCache,
+    mut progress: impl FnMut(&CellOutcome),
+) -> Result<SweepResult, ConfigError> {
+    let cells = spec.cells()?;
+    let outcomes = pool::parallel_map_progress(
+        cells.len(),
+        spec.threads,
+        |i| run_cell_cached(&cells[i], spec.target_subopt, cache),
+        |_, out| progress(out),
+    );
+    Ok(SweepResult { spec: spec.clone(), cells: outcomes })
+}
+
+/// [`run_sweep`] with a per-cell progress line (name, suboptimality,
+/// Mbits, wall-clock) on stdout — the default for benches and the CLI.
+pub fn run_sweep_verbose(spec: &SweepSpec) -> Result<SweepResult, ConfigError> {
+    run_sweep_verbose_with_cache(spec, &RefCache::default())
+}
+
+/// [`run_sweep_verbose`] sharing a caller-owned reference cache across
+/// several specs (see [`run_sweep_with_cache`]).
+pub fn run_sweep_verbose_with_cache(
+    spec: &SweepSpec,
+    cache: &RefCache,
+) -> Result<SweepResult, ConfigError> {
+    let total = spec.num_cells();
+    let mut done = 0usize;
+    run_sweep_with_cache(spec, cache, |out| {
+        done += 1;
+        let (subopt, mbits) = match out.result.history.last() {
+            Some(m) => (m.suboptimality, m.bits as f64 / 1e6),
+            None => (f64::NAN, 0.0),
+        };
+        println!(
+            "  [{done}/{total}] cell {:<3} {:<34} subopt {subopt:>10.3e}  {mbits:>8.2} Mbit  {:.2?}",
+            out.index,
+            out.name,
+            Duration::from_nanos(out.wall_ns as u64),
+        );
+    })
+}
+
+fn jnum(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Null
+    }
+}
+
+impl CellOutcome {
+    /// Final recorded suboptimality (NaN when the history is empty).
+    pub fn final_subopt(&self) -> f64 {
+        self.result.final_subopt()
+    }
+
+    fn to_json(&self) -> Json {
+        let overrides = Json::Obj(
+            self.overrides
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                .collect::<BTreeMap<String, Json>>(),
+        );
+        let history = Json::Arr(
+            self.result
+                .history
+                .iter()
+                .map(|m| {
+                    Json::Arr(vec![
+                        Json::Num(m.round as f64),
+                        Json::Num(m.grad_evals as f64),
+                        Json::Num(m.bits as f64),
+                        jnum(m.suboptimality),
+                        jnum(m.consensus),
+                    ])
+                })
+                .collect(),
+        );
+        let last = self.result.history.last();
+        Json::obj(vec![
+            ("index", self.index.into()),
+            ("name", self.name.as_str().into()),
+            ("overrides", overrides),
+            // the full 64-bit seed as a string (f64 would lose precision)
+            ("seed", Json::Str(format!("{}", self.seed))),
+            ("eta", jnum(self.eta)),
+            ("rounds", last.map(|m| Json::Num(m.round as f64)).unwrap_or(Json::Null)),
+            ("final_subopt", last.map(|m| jnum(m.suboptimality)).unwrap_or(Json::Null)),
+            (
+                "rounds_to_target",
+                self.result
+                    .rounds_to_target
+                    .map(|r| Json::Num(r as f64))
+                    .unwrap_or(Json::Null),
+            ),
+            ("grad_evals", last.map(|m| Json::Num(m.grad_evals as f64)).unwrap_or(Json::Null)),
+            ("bits", last.map(|m| Json::Num(m.bits as f64)).unwrap_or(Json::Null)),
+            ("history", history),
+        ])
+    }
+}
+
+impl SweepResult {
+    /// The deterministic JSON aggregate: the spec (minus thread count) and
+    /// every cell trajectory. Deliberately excludes anything
+    /// scheduling-dependent (wall-clock, threads), so the same grid at
+    /// `threads = 1` and `threads = 8` serializes to identical bytes.
+    pub fn to_json(&self) -> Json {
+        let variants = Json::Arr(
+            self.spec
+                .variants
+                .iter()
+                .map(|v| {
+                    Json::Obj(
+                        v.iter()
+                            .map(|(k, val)| (k.clone(), Json::Str(val.clone())))
+                            .collect::<BTreeMap<String, Json>>(),
+                    )
+                })
+                .collect(),
+        );
+        let axes = Json::Arr(
+            self.spec
+                .axes
+                .iter()
+                .map(|a| {
+                    Json::obj(vec![
+                        ("key", a.key.as_str().into()),
+                        (
+                            "values",
+                            Json::Arr(a.values.iter().map(|v| Json::Str(v.clone())).collect()),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("schema", "proxlead-sweep-v1".into()),
+            ("base", Json::Str(self.spec.base.to_text())),
+            (
+                "target_subopt",
+                self.spec.target_subopt.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            ("variants", variants),
+            ("axes", axes),
+            ("cells", Json::Arr(self.cells.iter().map(|c| c.to_json()).collect())),
+        ])
+    }
+
+    /// Serialize [`SweepResult::to_json`] to `path`.
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string())
+    }
+
+    /// Wall-clock / bits / convergence summary table for stdout.
+    pub fn summary_table(&self, title: &str) -> Table {
+        let mut t = Table::new(
+            title,
+            &["cell", "algorithm", "overrides", "subopt", "rounds", "grad evals", "Mbit", "wall"],
+        );
+        for c in &self.cells {
+            let last = c.result.history.last();
+            let ov: Vec<String> =
+                c.overrides.iter().map(|(k, v)| format!("{k}={v}")).collect();
+            t.row(vec![
+                format!("{}", c.index),
+                c.name.clone(),
+                ov.join(" "),
+                last.map(|m| format!("{:.3e}", m.suboptimality)).unwrap_or_default(),
+                c.result
+                    .rounds_to_target
+                    .map(|r| format!("{r}"))
+                    .or_else(|| last.map(|m| format!("{}", m.round)))
+                    .unwrap_or_default(),
+                last.map(|m| format!("{}", m.grad_evals)).unwrap_or_default(),
+                last.map(|m| format!("{:.2}", m.bits as f64 / 1e6)).unwrap_or_default(),
+                format!("{:.2?}", Duration::from_nanos(c.wall_ns as u64)),
+            ]);
+        }
+        t
+    }
+
+    /// Total communicated bits across all cells.
+    pub fn total_bits(&self) -> u64 {
+        self.cells
+            .iter()
+            .filter_map(|c| c.result.history.last().map(|m| m.bits))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_base() -> Config {
+        Config::parse(
+            "nodes = 4\nsamples_per_node = 24\ndim = 5\nclasses = 3\nbatches = 4\n\
+             lambda1 = 0\nlambda2 = 0.1\nrounds = 60\nrecord_every = 20\n",
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn cell_seed_is_stable_and_decorrelated() {
+        assert_eq!(cell_seed(42, 0), cell_seed(42, 0));
+        assert_ne!(cell_seed(42, 0), cell_seed(42, 1));
+        assert_ne!(cell_seed(42, 0), cell_seed(43, 0));
+        // neighboring cells should differ in many bits, not one
+        let a = cell_seed(7, 10);
+        let b = cell_seed(7, 11);
+        assert!((a ^ b).count_ones() > 8, "{a:x} vs {b:x}");
+    }
+
+    #[test]
+    fn validate_rejects_unknown_algorithm() {
+        let mut cfg = tiny_base();
+        cfg.algorithm = "gradient-descent-but-wrong".into();
+        assert!(validate_cell(&cfg).is_err());
+        cfg.algorithm = "nids".into();
+        assert!(validate_cell(&cfg).is_ok());
+    }
+
+    #[test]
+    fn every_registered_algorithm_constructs_and_steps() {
+        let cfg = tiny_base();
+        let problem = build_problem(&cfg);
+        let graph = cfg.topology().unwrap();
+        let w = mixing_matrix(&graph, cfg.mixing_rule().unwrap());
+        let x0 = Mat::zeros(cfg.nodes, problem.dim());
+        let eta = cell_eta(&cfg, &problem);
+        for name in [
+            "prox-lead",
+            "lead",
+            "dgd",
+            "choco",
+            "nids",
+            "p2d2",
+            "pg-extra",
+            "pdgm",
+            "dualgd",
+        ] {
+            let mut c = cfg.clone();
+            c.algorithm = name.into();
+            if name == "choco" {
+                c.gamma = 0.2; // gossip stepsize convention
+            }
+            let mut alg = build_algorithm(&c, &problem, &w, &x0, eta, 3).unwrap();
+            alg.step(&problem);
+            assert!(alg.x().is_finite(), "{name} produced non-finite iterates");
+        }
+    }
+
+    #[test]
+    fn small_sweep_runs_and_serializes() {
+        let spec = SweepSpec::new(tiny_base())
+            .variant(&[("algorithm", "prox-lead"), ("bits", "2")])
+            .variant(&[("algorithm", "dgd"), ("bits", "32")])
+            .axis("seed", &["1", "2"])
+            .threads(2);
+        assert_eq!(spec.num_cells(), 4);
+        let res = run_sweep(&spec, |_| {}).unwrap();
+        assert_eq!(res.cells.len(), 4);
+        for (i, c) in res.cells.iter().enumerate() {
+            assert_eq!(c.index, i);
+            assert!(c.final_subopt().is_finite());
+        }
+        // serialized form parses back and has the right shape
+        let text = res.to_json().to_string();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.get("schema").unwrap().as_str(), Some("proxlead-sweep-v1"));
+        assert_eq!(parsed.get("cells").unwrap().as_arr().unwrap().len(), 4);
+        // wall-clock and thread count must NOT leak into the aggregate
+        assert!(!text.contains("wall"));
+        assert!(!text.contains("threads"));
+    }
+
+    #[test]
+    fn reference_cache_shares_identical_problems() {
+        let cfg = tiny_base();
+        let problem = build_problem(&cfg);
+        let cache = RefCache::default();
+        let a = cache.get_or_solve(&cfg, &problem);
+        let b = cache.get_or_solve(&cfg, &problem);
+        assert!(Arc::ptr_eq(&a, &b));
+        let mut cfg2 = cfg.clone();
+        cfg2.lambda1 = 5e-3;
+        let c = cache.get_or_solve(&cfg2, &problem);
+        assert!(!Arc::ptr_eq(&a, &c));
+    }
+}

@@ -1,0 +1,126 @@
+//! Zero-dependency fixed thread pool for the sweep runtime.
+//!
+//! Deliberately *not* work-stealing: a single `std::sync::mpsc` job queue
+//! (preloaded with every cell index, then closed) is shared by all
+//! workers, each popping the next index under a mutex and sending
+//! `(index, result)` back over a results channel. The main thread drains
+//! results as they complete (for live progress) and re-orders them by
+//! index, so the output is a plain `Vec<T>` in job order **regardless of
+//! thread count or scheduling** — the determinism the sweep runtime's
+//! byte-identical-JSON guarantee rests on (each job must itself be a pure
+//! function of its index).
+
+use std::sync::mpsc;
+use std::sync::Mutex;
+use std::thread;
+
+/// Run `f(0..jobs)` on `threads` worker threads, returning results in job
+/// order. `f` must be a pure function of its index for deterministic
+/// output (the pool guarantees ordering, not purity).
+pub fn parallel_map<T, F>(jobs: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    parallel_map_progress(jobs, threads, f, |_, _| {})
+}
+
+/// [`parallel_map`] with a completion callback: `progress(index, &result)`
+/// runs on the calling thread, in *completion* order (the returned Vec is
+/// still in job order).
+pub fn parallel_map_progress<T, F, P>(jobs: usize, threads: usize, f: F, mut progress: P) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+    P: FnMut(usize, &T),
+{
+    let threads = threads.max(1).min(jobs.max(1));
+    // preload the queue with every job index, then close it: workers stop
+    // on the first empty pop, so no shutdown signalling is needed
+    let (job_tx, job_rx) = mpsc::channel::<usize>();
+    for i in 0..jobs {
+        job_tx.send(i).expect("queue job");
+    }
+    drop(job_tx);
+    let job_rx = Mutex::new(job_rx);
+    let (res_tx, res_rx) = mpsc::channel::<(usize, T)>();
+
+    let mut out: Vec<Option<T>> = Vec::with_capacity(jobs);
+    out.resize_with(jobs, || None);
+    thread::scope(|s| {
+        for _ in 0..threads {
+            let res_tx = res_tx.clone();
+            let job_rx = &job_rx;
+            let f = &f;
+            s.spawn(move || {
+                loop {
+                    // the queue is preloaded and closed, so an empty pop
+                    // (or a disconnect) means all work is handed out
+                    let job = job_rx.lock().unwrap().try_recv();
+                    match job {
+                        Ok(i) => {
+                            if res_tx.send((i, f(i))).is_err() {
+                                break;
+                            }
+                        }
+                        Err(_) => break,
+                    }
+                }
+            });
+        }
+        drop(res_tx);
+        // drain completions live; ends when every worker dropped its sender
+        for (i, r) in res_rx.iter() {
+            progress(i, &r);
+            out[i] = Some(r);
+        }
+    });
+    out.into_iter().map(|o| o.expect("every queued job completes")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn results_are_in_job_order() {
+        let out = parallel_map(64, 8, |i| i * i);
+        let want: Vec<usize> = (0..64).map(|i| i * i).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let f = |i: usize| (i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let serial = parallel_map(33, 1, f);
+        let wide = parallel_map(33, 8, f);
+        assert_eq!(serial, wide);
+    }
+
+    #[test]
+    fn more_threads_than_jobs_is_fine() {
+        assert_eq!(parallel_map(2, 16, |i| i + 1), vec![1, 2]);
+        assert_eq!(parallel_map(0, 4, |i| i), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn every_job_runs_exactly_once() {
+        let count = AtomicUsize::new(0);
+        let out = parallel_map(100, 7, |i| {
+            count.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(out.len(), 100);
+        assert_eq!(count.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn progress_sees_every_completion() {
+        let mut seen = Vec::new();
+        let out = parallel_map_progress(20, 4, |i| i * 3, |i, &r| seen.push((i, r)));
+        assert_eq!(out, (0..20).map(|i| i * 3).collect::<Vec<_>>());
+        seen.sort_unstable();
+        assert_eq!(seen, (0..20).map(|i| (i, i * 3)).collect::<Vec<_>>());
+    }
+}

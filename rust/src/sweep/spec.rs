@@ -1,0 +1,235 @@
+//! Declarative sweep grids over the [`Config`] schema.
+//!
+//! A [`SweepSpec`] is a base [`Config`] plus two kinds of structure:
+//!
+//! - **variants** — explicit override-sets, one per experimental arm
+//!   (e.g. the per-figure algorithm lists, where each algorithm pairs
+//!   with its own codec: `[("algorithm","dgd"), ("bits","32")]`);
+//! - **axes** — cartesian dimensions multiplied onto *every* variant
+//!   (e.g. `oracle ∈ {sgd, saga}` × `seed ∈ {1, 2, 3}`).
+//!
+//! Cells are indexed `0..num_cells()` in a fixed order (variant-major,
+//! then axes left-to-right with the first axis slowest), so a cell index
+//! alone identifies a full configuration — the sweep runtime derives each
+//! cell's RNG seed from it. Every override routes through
+//! [`Config::set`], so the sweep surface automatically tracks the config
+//! schema, exactly like the CLI.
+
+use crate::config::{Config, ConfigError};
+
+/// One cartesian sweep dimension: a config key and its values.
+#[derive(Clone, Debug)]
+pub struct Axis {
+    pub key: String,
+    pub values: Vec<String>,
+}
+
+/// A declarative experiment grid (see module docs for the cell order).
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    pub base: Config,
+    /// Explicit override-sets; empty means the single empty variant.
+    pub variants: Vec<Vec<(String, String)>>,
+    /// Cartesian axes applied on top of every variant.
+    pub axes: Vec<Axis>,
+    /// Worker threads (does not affect results, only wall-clock).
+    pub threads: usize,
+    /// Optional early-stop target passed to the engine.
+    pub target_subopt: Option<f64>,
+}
+
+/// One fully resolved grid cell.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub index: usize,
+    /// The overrides that produced this cell (variant first, then axes).
+    pub overrides: Vec<(String, String)>,
+    pub config: Config,
+}
+
+impl SweepSpec {
+    pub fn new(base: Config) -> SweepSpec {
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        SweepSpec { base, variants: Vec::new(), axes: Vec::new(), threads, target_subopt: None }
+    }
+
+    /// Add a cartesian axis from string literals.
+    pub fn axis(mut self, key: &str, values: &[&str]) -> SweepSpec {
+        self.axes.push(Axis {
+            key: key.to_string(),
+            values: values.iter().map(|v| v.to_string()).collect(),
+        });
+        self
+    }
+
+    /// Add a cartesian axis from owned values (e.g. formatted floats —
+    /// `format!("{v}")` round-trips f64 exactly).
+    pub fn axis_values(mut self, key: &str, values: Vec<String>) -> SweepSpec {
+        self.axes.push(Axis { key: key.to_string(), values });
+        self
+    }
+
+    /// Add one explicit variant (an override-set applied before the axes).
+    pub fn variant(mut self, overrides: &[(&str, &str)]) -> SweepSpec {
+        self.variants
+            .push(overrides.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect());
+        self
+    }
+
+    pub fn threads(mut self, threads: usize) -> SweepSpec {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Stop each cell early once suboptimality falls below `target`.
+    pub fn until(mut self, target: f64) -> SweepSpec {
+        self.target_subopt = Some(target);
+        self
+    }
+
+    /// Parse a CLI grid string: `"bits=2,32;seed=1,2,3"` (`;`-separated
+    /// axes, `,`-separated values).
+    pub fn with_grid(mut self, grid: &str) -> Result<SweepSpec, ConfigError> {
+        for part in grid.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, vals) = part
+                .split_once('=')
+                .ok_or_else(|| ConfigError(format!("grid axis '{part}': expected key=v1,v2,…")))?;
+            let values: Vec<String> =
+                vals.split(',').map(|v| v.trim().to_string()).filter(|v| !v.is_empty()).collect();
+            if values.is_empty() {
+                return Err(ConfigError(format!("grid axis '{key}' has no values")));
+            }
+            self.axes.push(Axis { key: key.trim().to_string(), values });
+        }
+        Ok(self)
+    }
+
+    /// Number of cells in the grid (product of variants × all axes).
+    pub fn num_cells(&self) -> usize {
+        let v = self.variants.len().max(1);
+        self.axes.iter().fold(v, |acc, a| acc * a.values.len().max(1))
+    }
+
+    /// The overrides for cell `index` (variant-major; first axis slowest).
+    pub fn cell_overrides(&self, index: usize) -> Vec<(String, String)> {
+        debug_assert!(index < self.num_cells());
+        let axes_cells: usize = self.axes.iter().map(|a| a.values.len().max(1)).product();
+        let (v_idx, mut a_idx) = (index / axes_cells.max(1), index % axes_cells.max(1));
+        let mut overrides: Vec<(String, String)> = match self.variants.get(v_idx) {
+            Some(v) => v.clone(),
+            None => Vec::new(),
+        };
+        // mixed-radix decode, first axis slowest
+        let mut radix = axes_cells.max(1);
+        for axis in &self.axes {
+            let len = axis.values.len().max(1);
+            radix /= len;
+            let i = a_idx / radix.max(1);
+            a_idx %= radix.max(1);
+            if let Some(val) = axis.values.get(i) {
+                overrides.push((axis.key.clone(), val.clone()));
+            }
+        }
+        overrides
+    }
+
+    /// Resolve cell `index` into a full [`Config`].
+    pub fn cell_config(&self, index: usize) -> Result<Config, ConfigError> {
+        let mut cfg = self.base.clone();
+        for (k, v) in self.cell_overrides(index) {
+            cfg.set(&k, &v)?;
+        }
+        Ok(cfg)
+    }
+
+    /// Resolve and validate every cell up front (serial, so configuration
+    /// errors surface deterministically before any work is fanned out).
+    pub fn cells(&self) -> Result<Vec<Cell>, ConfigError> {
+        (0..self.num_cells())
+            .map(|index| {
+                let config = self.cell_config(index)?;
+                super::validate_cell(&config)?;
+                Ok(Cell { index, overrides: self.cell_overrides(index), config })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cartesian_order_is_first_axis_slowest() {
+        let spec =
+            SweepSpec::new(Config::default()).axis("bits", &["2", "32"]).axis("seed", &["1", "2"]);
+        assert_eq!(spec.num_cells(), 4);
+        let flat: Vec<Vec<(String, String)>> =
+            (0..4).map(|i| spec.cell_overrides(i)).collect();
+        assert_eq!(flat[0], vec![("bits".into(), "2".into()), ("seed".into(), "1".into())]);
+        assert_eq!(flat[1], vec![("bits".into(), "2".into()), ("seed".into(), "2".into())]);
+        assert_eq!(flat[2], vec![("bits".into(), "32".into()), ("seed".into(), "1".into())]);
+        assert_eq!(flat[3], vec![("bits".into(), "32".into()), ("seed".into(), "2".into())]);
+    }
+
+    #[test]
+    fn variants_multiply_with_axes() {
+        let spec = SweepSpec::new(Config::default())
+            .variant(&[("algorithm", "dgd"), ("bits", "32")])
+            .variant(&[("algorithm", "prox-lead"), ("bits", "2")])
+            .axis("seed", &["1", "2", "3"]);
+        assert_eq!(spec.num_cells(), 6);
+        // cells 0..3 are the dgd variant, 3..6 prox-lead
+        let c0 = spec.cell_config(0).unwrap();
+        assert_eq!(c0.algorithm, "dgd");
+        assert_eq!(c0.bits, 32);
+        assert_eq!(c0.seed, 1);
+        let c5 = spec.cell_config(5).unwrap();
+        assert_eq!(c5.algorithm, "prox-lead");
+        assert_eq!(c5.bits, 2);
+        assert_eq!(c5.seed, 3);
+    }
+
+    #[test]
+    fn grid_string_parses() {
+        let spec =
+            SweepSpec::new(Config::default()).with_grid("bits=2, 32; oracle=sgd,saga").unwrap();
+        assert_eq!(spec.axes.len(), 2);
+        assert_eq!(spec.axes[0].key, "bits");
+        assert_eq!(spec.axes[0].values, vec!["2", "32"]);
+        assert_eq!(spec.axes[1].values, vec!["sgd", "saga"]);
+        assert_eq!(spec.num_cells(), 4);
+    }
+
+    #[test]
+    fn bad_grid_strings_error() {
+        assert!(SweepSpec::new(Config::default()).with_grid("bits").is_err());
+        assert!(SweepSpec::new(Config::default()).with_grid("bits=").is_err());
+        // unknown keys surface when cells are resolved
+        let spec = SweepSpec::new(Config::default()).with_grid("warp=1,2").unwrap();
+        assert!(spec.cells().is_err());
+    }
+
+    #[test]
+    fn empty_spec_is_one_base_cell() {
+        let spec = SweepSpec::new(Config::default());
+        assert_eq!(spec.num_cells(), 1);
+        assert!(spec.cell_overrides(0).is_empty());
+        let cfg = spec.cell_config(0).unwrap();
+        assert_eq!(cfg.nodes, Config::default().nodes);
+    }
+
+    #[test]
+    fn cell_config_applies_overrides_in_order() {
+        // an axis can override a variant key; last write wins
+        let spec = SweepSpec::new(Config::default())
+            .variant(&[("bits", "8")])
+            .axis("bits", &["2", "4"]);
+        assert_eq!(spec.cell_config(0).unwrap().bits, 2);
+        assert_eq!(spec.cell_config(1).unwrap().bits, 4);
+    }
+}

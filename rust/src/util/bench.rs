@@ -4,10 +4,23 @@
 //! [`BenchSet`] for timed micro-sections and [`Table`]/CSV emission for the
 //! paper-figure harnesses. Timing methodology: warmup runs, then `reps`
 //! timed runs; report mean ± std and p50.
+//!
+//! For CI trend tracking, [`BenchReport`] aggregates every set into one
+//! JSON document (`bench_out/perf_hotpath.json` in the perf harness) and
+//! [`smoke_mode`] (env `PERF_SMOKE=1`) shrinks rep counts/workloads so the
+//! whole harness finishes in seconds on a shared runner.
 
+use super::json::Json;
 use super::stats;
 use std::fmt::Write as _;
 use std::time::Instant;
+
+/// True when `PERF_SMOKE` is set (and not `0`): bench binaries should run
+/// minimal reps/workloads — CI wants the JSON shape and rough magnitudes,
+/// not publication-grade timings.
+pub fn smoke_mode() -> bool {
+    std::env::var("PERF_SMOKE").map(|v| v != "0" && !v.is_empty()).unwrap_or(false)
+}
 
 /// One timed measurement series.
 pub struct BenchResult {
@@ -140,6 +153,69 @@ impl BenchSet {
 
     pub fn results(&self) -> &[BenchResult] {
         &self.results
+    }
+
+    pub fn title(&self) -> &str {
+        &self.title
+    }
+
+    /// Serialize this set's measurements (ns statistics + throughput).
+    pub fn to_json(&self) -> Json {
+        let results = Json::Arr(
+            self.results
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("name", r.name.as_str().into()),
+                        ("mean_ns", Json::Num(r.mean_ns())),
+                        ("std_ns", Json::Num(r.std_ns())),
+                        ("p50_ns", Json::Num(r.p50_ns())),
+                        ("reps", r.samples_ns.len().into()),
+                        (
+                            "throughput_per_s",
+                            r.throughput().map(Json::Num).unwrap_or(Json::Null),
+                        ),
+                        ("work_unit", r.work_unit.into()),
+                    ])
+                })
+                .collect(),
+        );
+        Json::obj(vec![("title", self.title.as_str().into()), ("results", results)])
+    }
+}
+
+/// Aggregates [`BenchSet`]s into one JSON document for the CI bench
+/// trajectory (uploaded as an artifact by the perf job).
+pub struct BenchReport {
+    name: String,
+    sets: Vec<Json>,
+}
+
+impl BenchReport {
+    pub fn new(name: &str) -> BenchReport {
+        BenchReport { name: name.to_string(), sets: Vec::new() }
+    }
+
+    pub fn add(&mut self, set: &BenchSet) {
+        self.sets.push(set.to_json());
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", "proxlead-perf-v1".into()),
+            ("name", self.name.as_str().into()),
+            ("smoke", smoke_mode().into()),
+            ("sets", Json::Arr(self.sets.clone())),
+        ])
+    }
+
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string())
     }
 }
 
@@ -289,5 +365,24 @@ mod tests {
         let mut b = BenchSet::new("t").with_reps(0, 2);
         b.run_throughput("copy", 1e6, "B", || vec![0u8; 16]);
         assert!(b.results()[0].throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn bench_json_roundtrips() {
+        let mut b = BenchSet::new("json set").with_reps(0, 3);
+        b.run("noop", || 1 + 1);
+        b.run_throughput("copy", 64.0, "B", || vec![0u8; 8]);
+        let mut report = BenchReport::new("unit");
+        report.add(&b);
+        let text = report.to_json().to_string();
+        let v = Json::parse(&text).unwrap();
+        assert_eq!(v.get("schema").unwrap().as_str(), Some("proxlead-perf-v1"));
+        let sets = v.get("sets").unwrap().as_arr().unwrap();
+        assert_eq!(sets.len(), 1);
+        let results = sets[0].get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        assert!(results[0].get("mean_ns").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(results[0].get("throughput_per_s").unwrap(), &Json::Null);
+        assert!(results[1].get("throughput_per_s").unwrap().as_f64().unwrap() > 0.0);
     }
 }

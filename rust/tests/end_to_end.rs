@@ -92,6 +92,10 @@ fn coordinator_runs_on_pjrt_backend() {
         eprintln!("SKIP: artifacts missing (run `make artifacts`)");
         return;
     }
+    if cfg!(not(feature = "xla")) {
+        eprintln!("SKIP: built without the `xla` feature");
+        return;
+    }
     // the shipped (24, 8, 4) artifact shape
     let spec = proxlead::problem::data::BlobSpec {
         nodes: 4,

@@ -1,0 +1,135 @@
+//! The sweep runtime's determinism contract, end-to-end:
+//!
+//! 1. the same grid run with `threads = 1` and `threads = 8` aggregates
+//!    to **byte-identical** JSON (the acceptance criterion — wall-clock
+//!    and thread count are deliberately excluded from the aggregate);
+//! 2. one sweep cell's trajectory is **bit-identical** to a hand-rolled
+//!    serial `engine::run` of the same configuration (the sweep is the
+//!    serial path, fanned out — never a different code path).
+
+use proxlead::algorithm::solve_reference;
+use proxlead::config::Config;
+use proxlead::engine::{run, RunConfig};
+use proxlead::graph::mixing_matrix;
+use proxlead::linalg::Mat;
+use proxlead::problem::Problem;
+use proxlead::sweep::{
+    build_algorithm, build_problem, cell_eta, cell_seed, run_cell, run_sweep, SweepSpec,
+    REF_MAX_ITER, REF_TOL,
+};
+
+fn tiny_base(rounds: usize) -> Config {
+    Config::parse(&format!(
+        "nodes = 4\nsamples_per_node = 24\ndim = 5\nclasses = 3\nbatches = 4\n\
+         lambda1 = 0.005\nlambda2 = 0.1\nrounds = {rounds}\nrecord_every = 25\n"
+    ))
+    .expect("tiny base config")
+}
+
+/// The acceptance grid: ≥ 2 algorithms × ≥ 2 codecs × ≥ 2 seeds, run wide
+/// and serial — identical bytes out.
+#[test]
+fn threads_1_and_8_yield_byte_identical_json() {
+    let spec = SweepSpec::new(tiny_base(150))
+        .variant(&[("algorithm", "prox-lead")])
+        .variant(&[("algorithm", "dgd")])
+        .axis("bits", &["2", "32"])
+        .axis("seed", &["1", "2"]);
+    assert_eq!(spec.num_cells(), 8);
+    let serial = run_sweep(&spec.clone().threads(1), |_| {}).expect("serial sweep");
+    let wide = run_sweep(&spec.threads(8), |_| {}).expect("wide sweep");
+    let a = serial.to_json().to_string();
+    let b = wide.to_json().to_string();
+    assert_eq!(a, b, "sweep JSON must not depend on thread count");
+    // and the underlying traces are bitwise equal, cell by cell
+    assert_eq!(serial.cells.len(), 8);
+    for (s, w) in serial.cells.iter().zip(&wide.cells) {
+        assert_eq!(s.index, w.index);
+        assert_eq!(s.seed, w.seed);
+        assert_eq!(s.result.history.len(), w.result.history.len());
+        for (ms, mw) in s.result.history.iter().zip(&w.result.history) {
+            assert_eq!(ms.bits, mw.bits);
+            assert_eq!(ms.grad_evals, mw.grad_evals);
+            assert_eq!(ms.suboptimality.to_bits(), mw.suboptimality.to_bits());
+        }
+        assert_eq!(s.result.final_x.data, w.result.final_x.data);
+    }
+}
+
+/// Repeated runs of the same spec are reproducible (same process, fresh
+/// caches) — nothing leaks between sweeps.
+#[test]
+fn repeated_sweeps_are_reproducible() {
+    let spec = SweepSpec::new(tiny_base(80))
+        .variant(&[("algorithm", "nids")])
+        .variant(&[("algorithm", "prox-lead"), ("bits", "2")])
+        .threads(4);
+    let a = run_sweep(&spec, |_| {}).expect("first run").to_json().to_string();
+    let b = run_sweep(&spec, |_| {}).expect("second run").to_json().to_string();
+    assert_eq!(a, b);
+}
+
+/// One sweep cell pinned to the serial engine path: same problem, same
+/// derived seed, same reference ⇒ the identical MetricPoint sequence and
+/// final iterate, bit for bit.
+#[test]
+fn sweep_cell_matches_serial_engine_run() {
+    let spec = SweepSpec::new(tiny_base(200))
+        .variant(&[("algorithm", "prox-lead"), ("bits", "2")])
+        .axis("seed", &["7"]);
+    let cells = spec.cells().expect("cells");
+    assert_eq!(cells.len(), 1);
+    let outcome = run_cell(&cells[0], None);
+
+    // hand-rolled serial path through engine::run, from the same config
+    let cfg = &cells[0].config;
+    let problem = build_problem(cfg);
+    let w = mixing_matrix(&cfg.topology().unwrap(), cfg.mixing_rule().unwrap());
+    let x_star = solve_reference(&problem, cfg.lambda1, REF_MAX_ITER, REF_TOL);
+    let x0 = Mat::zeros(cfg.nodes, problem.dim());
+    let eta = cell_eta(cfg, &problem);
+    let seed = cell_seed(cfg.seed, cells[0].index);
+    let mut alg = build_algorithm(cfg, &problem, &w, &x0, eta, seed).expect("algorithm");
+    let res = run(
+        alg.as_mut(),
+        &problem,
+        &x_star,
+        &RunConfig::fixed(cfg.rounds).every(cfg.record_every),
+    );
+
+    assert_eq!(outcome.seed, seed);
+    assert_eq!(outcome.result.name, res.name);
+    assert_eq!(outcome.result.history.len(), res.history.len());
+    for (a, b) in outcome.result.history.iter().zip(&res.history) {
+        assert_eq!(a.round, b.round);
+        assert_eq!(a.bits, b.bits);
+        assert_eq!(a.grad_evals, b.grad_evals);
+        assert_eq!(a.suboptimality.to_bits(), b.suboptimality.to_bits());
+        assert_eq!(a.consensus.to_bits(), b.consensus.to_bits());
+    }
+    assert_eq!(outcome.result.final_x.data, res.final_x.data);
+    // and the cell actually made progress (this is a real run, not a stub)
+    assert!(outcome.final_subopt().is_finite());
+    assert!(outcome.final_subopt() < outcome.result.history[0].suboptimality);
+}
+
+/// Early-stop targets flow through to `rounds_to_target` and stay
+/// deterministic across thread counts.
+#[test]
+fn target_early_stop_is_deterministic() {
+    let spec = SweepSpec::new(tiny_base(6000))
+        .variant(&[("algorithm", "prox-lead"), ("bits", "2")])
+        .variant(&[("algorithm", "nids"), ("bits", "32")])
+        .until(1e-6);
+    let serial = run_sweep(&spec.clone().threads(1), |_| {}).expect("serial");
+    let wide = run_sweep(&spec.threads(8), |_| {}).expect("wide");
+    for (s, w) in serial.cells.iter().zip(&wide.cells) {
+        assert_eq!(s.result.rounds_to_target, w.result.rounds_to_target);
+        assert!(
+            s.result.rounds_to_target.is_some(),
+            "{} should hit 1e-6 within budget",
+            s.name
+        );
+    }
+    assert_eq!(serial.to_json().to_string(), wide.to_json().to_string());
+}
