@@ -5,7 +5,7 @@
 //! paper's figures plot).
 
 use proxlead::algorithm::solve_reference;
-use proxlead::graph::{mixing_matrix, Graph, MixingRule};
+use proxlead::graph::{Graph, MixingOp, MixingRule};
 use proxlead::linalg::Mat;
 use proxlead::problem::data::BlobSpec;
 use proxlead::problem::{LogReg, Problem};
@@ -14,7 +14,7 @@ use proxlead::problem::{LogReg, Problem};
 /// 15 minibatches per node (see DESIGN.md §4 for the MNIST substitution).
 pub struct Fixture {
     pub problem: LogReg,
-    pub w: Mat,
+    pub w: MixingOp,
     pub x0: Mat,
     pub eta: f64,
 }
@@ -31,7 +31,7 @@ impl Fixture {
         };
         let problem = LogReg::from_blobs(&spec, lambda2, 15);
         let g = Graph::ring(8);
-        let w = mixing_matrix(&g, MixingRule::UniformMaxDegree);
+        let w = MixingOp::build(&g, MixingRule::UniformMaxDegree);
         let x0 = Mat::zeros(8, problem.dim());
         let eta = 0.5 / problem.smoothness();
         Fixture { problem, w, x0, eta }
@@ -50,7 +50,7 @@ impl Fixture {
         };
         let problem = LogReg::from_blobs(&spec, 0.05, 15);
         let g = Graph::ring(8);
-        let w = mixing_matrix(&g, MixingRule::UniformMaxDegree);
+        let w = MixingOp::build(&g, MixingRule::UniformMaxDegree);
         let x0 = Mat::zeros(8, problem.dim());
         let eta = 0.5 / problem.smoothness();
         Fixture { problem, w, x0, eta }

@@ -1,0 +1,160 @@
+//! Gossip scaling in the network size n — the bench behind EXPERIMENTS.md
+//! §"Scaling in n".
+//!
+//! For ring / torus-grid / Erdős–Rényi topologies at n from 32 to 2048,
+//! times one gossip round W·X (p = 32 columns) through both mixing
+//! representations:
+//!
+//! - **dense**: the blocked `Mat::matmul_into` kernel, O(n²p) per round;
+//! - **sparse**: the CSR `MixingOp::apply_into` SpMM, O(nnz·p) per round —
+//!   ~linear in n on these O(n)-edge graphs.
+//!
+//! Also times the power-iteration spectral-gap estimator (O(nnz) per step)
+//! against the dense Jacobi eigensolve at small n, and one full sparse
+//! Prox-LEAD matrix round at n = 512 to show gossip has left the hot path.
+//!
+//! Every set lands in `bench_out/scaling_n.json` (schema proxlead-perf-v1);
+//! CI uploads it next to perf_hotpath's as the second trajectory artifact.
+//! `PERF_SMOKE=1` caps n at 128 with minimal reps.
+
+mod common;
+
+use common::out_dir;
+use proxlead::algorithm::{Algorithm, Hyper, ProxLead};
+use proxlead::compress::InfNormQuantizer;
+use proxlead::graph::{Graph, MixingOp, MixingRule, Topology};
+use proxlead::linalg::{Mat, Spectrum};
+use proxlead::oracle::OracleKind;
+use proxlead::problem::data::{blobs, BlobSpec};
+use proxlead::problem::{LogReg, Problem};
+use proxlead::prox::L1;
+use proxlead::util::bench::{smoke_mode, BenchReport, BenchSet};
+use proxlead::util::rng::Rng;
+
+/// Iterate width p for the gossip timings (a mid-size model row).
+const P_COLS: usize = 32;
+
+/// Build the benchmark graph for a topology family at ~n nodes. Grid needs
+/// a perfect square, so its sizes snap to the nearest square (reported in
+/// the bench label via `g.n`).
+fn build_graph(topo: Topology, n: usize, rng: &mut Rng) -> Graph {
+    match topo {
+        Topology::Grid => {
+            let k = (n as f64).sqrt().round() as usize;
+            Graph::grid(k * k)
+        }
+        Topology::ErdosRenyi => Graph::erdos_renyi(n, Graph::auto_er_prob(n), rng),
+        _ => Graph::build(topo, n, rng),
+    }
+}
+
+fn main() {
+    let smoke = smoke_mode();
+    if smoke {
+        println!("PERF_SMOKE=1: n capped at 128, minimal reps (CI trajectory mode)");
+    }
+    let sizes: &[usize] = if smoke { &[32, 128] } else { &[32, 128, 512, 1024, 2048] };
+    let mut report = BenchReport::new("scaling_n");
+    let mut rng = Rng::new(7);
+
+    // ---------- gossip round: dense vs sparse per topology ---------------
+    for (name, topo) in [
+        ("ring", Topology::Ring),
+        ("grid", Topology::Grid),
+        ("er", Topology::ErdosRenyi),
+    ] {
+        let (warm, reps) = if smoke { (0, 2) } else { (3, 10) };
+        let mut set =
+            BenchSet::new(&format!("gossip W·X — {name} (p = {P_COLS})")).with_reps(warm, reps);
+        set.header();
+        for &n in sizes {
+            let g = build_graph(topo, n, &mut rng);
+            let n = g.n;
+            let dense = MixingOp::dense_from(&g, MixingRule::Metropolis);
+            let sparse = MixingOp::sparse_from(&g, MixingRule::Metropolis);
+            let mut x = Mat::zeros(n, P_COLS);
+            rng.fill_normal(&mut x.data);
+            let mut out_d = Mat::zeros(n, P_COLS);
+            let mut out_s = Mat::zeros(n, P_COLS);
+            // dense pays 2·n²·p flops; sparse only 2·nnz·p
+            set.run_throughput(
+                &format!("dense  n={n:<5} (n²p)"),
+                2.0 * (n * n * P_COLS) as f64,
+                "flop",
+                || dense.apply_into(&x, &mut out_d),
+            );
+            set.run_throughput(
+                &format!("sparse n={n:<5} (nnz={})", sparse.nnz()),
+                2.0 * (sparse.nnz() * P_COLS) as f64,
+                "flop",
+                || sparse.apply_into(&x, &mut out_s),
+            );
+            // the two representations must agree bit for bit
+            assert_eq!(out_d.data, out_s.data, "{name} n={n}: sparse ≠ dense");
+        }
+        report.add(&set);
+    }
+
+    // ---------- spectral gap: power iteration vs dense Jacobi ------------
+    {
+        let (warm, reps) = if smoke { (0, 2) } else { (1, 5) };
+        let mut set = BenchSet::new("spectral gap λ₂/λ_n — ring").with_reps(warm, reps);
+        set.header();
+        for &n in sizes {
+            let g = Graph::ring(n);
+            let sparse = MixingOp::sparse_from(&g, MixingRule::Metropolis);
+            set.run(&format!("power iteration n={n} (O(nnz)/step)"), || sparse.gap_estimate());
+            // the O(n³) Jacobi solve is only tractable at small n
+            if n <= 128 {
+                let w = sparse.to_dense();
+                set.run(&format!("jacobi eigensolve n={n} (O(n³))"), || Spectrum::of_mixing(&w));
+            }
+        }
+        report.add(&set);
+    }
+
+    // ---------- end-to-end: one sparse Prox-LEAD round at n = 512 --------
+    {
+        let n = if smoke { 64 } else { 512 };
+        let (warm, reps) = if smoke { (0, 2) } else { (3, 10) };
+        let title = format!("Prox-LEAD round at n = {n} (ring, 2-bit)");
+        let mut set = BenchSet::new(&title).with_reps(warm, reps);
+        set.header();
+        let spec = BlobSpec {
+            nodes: n,
+            samples_per_node: 8,
+            dim: 8,
+            classes: 4,
+            separation: 1.0,
+            ..Default::default()
+        };
+        let problem = LogReg::new(blobs(&spec), 4, 0.05, 4);
+        let g = Graph::ring(n);
+        let x0 = Mat::zeros(n, problem.dim());
+        let hyper = Hyper::paper_default(0.5 / problem.smoothness());
+        for (label, w) in [
+            ("dense gossip", MixingOp::dense_from(&g, MixingRule::UniformMaxDegree)),
+            ("sparse gossip", MixingOp::sparse_from(&g, MixingRule::UniformMaxDegree)),
+        ] {
+            let mut alg = ProxLead::new(
+                &problem,
+                &w,
+                &x0,
+                hyper,
+                OracleKind::Full,
+                Box::new(InfNormQuantizer::new(2, 256)),
+                Box::new(L1::new(5e-3)),
+                5,
+            );
+            set.run_throughput(&format!("matrix step, {label}"), 1.0, "round", || {
+                alg.step(&problem)
+            });
+        }
+        report.add(&set);
+    }
+
+    let json_path = out_dir().join("scaling_n.json");
+    report.write(json_path.to_str().unwrap()).expect("write scaling json");
+    println!("\nwrote {}", json_path.display());
+    println!("scaling_n done");
+}

@@ -14,7 +14,7 @@ use proxlead::algorithm::reference::solve_reference_prox;
 use proxlead::algorithm::{Algorithm, Hyper, Nids, P2d2, ProxLead};
 use proxlead::compress::InfNormQuantizer;
 use proxlead::engine::{run, RunConfig};
-use proxlead::graph::{mixing_matrix, Graph, MixingRule};
+use proxlead::graph::{Graph, MixingOp, MixingRule};
 use proxlead::linalg::Mat;
 use proxlead::oracle::OracleKind;
 use proxlead::problem::data::sparse_regression;
@@ -33,7 +33,7 @@ fn main() {
     let r = L1::new(lambda1);
 
     let graph = Graph::ring(4);
-    let w = mixing_matrix(&graph, MixingRule::UniformMaxDegree);
+    let w = MixingOp::build(&graph, MixingRule::UniformMaxDegree);
     let x_star = solve_reference_prox(&problem, &r, 80_000, 1e-12);
 
     let eta = 0.5 / problem.smoothness();

@@ -11,7 +11,7 @@
 use proxlead::algorithm::{solve_reference, Algorithm, Dgd, Hyper, ProxLead};
 use proxlead::compress::{Identity, InfNormQuantizer};
 use proxlead::engine::{run, RunConfig};
-use proxlead::graph::{mixing_matrix, Graph, MixingRule};
+use proxlead::graph::{Graph, MixingOp, MixingRule};
 use proxlead::linalg::Mat;
 use proxlead::oracle::OracleKind;
 use proxlead::problem::data::BlobSpec;
@@ -32,7 +32,7 @@ fn main() {
 
     // 2. network: ring with the paper's uniform 1/3 mixing
     let graph = Graph::ring(8);
-    let w = mixing_matrix(&graph, MixingRule::UniformMaxDegree);
+    let w = MixingOp::build(&graph, MixingRule::UniformMaxDegree);
 
     // 3. ground truth for the suboptimality metric
     let lambda1 = 5e-3;

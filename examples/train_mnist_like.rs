@@ -17,7 +17,7 @@
 
 use proxlead::algorithm::{solve_reference, suboptimality};
 use proxlead::coordinator::{self, CoordConfig, WireCodec};
-use proxlead::graph::{mixing_matrix, Graph, MixingRule};
+use proxlead::graph::{Graph, MixingOp, MixingRule};
 use proxlead::linalg::Mat;
 use proxlead::oracle::OracleKind;
 use proxlead::problem::data::{blobs, heterogeneity_index, BlobSpec};
@@ -53,7 +53,7 @@ fn main() {
     assert!(problem.batch_on_xla(), "batch artifact (16,64,10) should be compiled");
 
     let graph = Graph::ring(8);
-    let w = mixing_matrix(&graph, MixingRule::UniformMaxDegree);
+    let w = MixingOp::build(&graph, MixingRule::UniformMaxDegree);
     let lambda1 = 5e-3;
     let eta = 0.1; // the paper tunes η in [0.01, 0.1]
 

@@ -17,6 +17,7 @@
 
 use super::{Algorithm, RoundStats};
 use crate::compress::Compressor;
+use crate::graph::MixingOp;
 use crate::linalg::Mat;
 use crate::oracle::{OracleKind, Sgo};
 use crate::problem::Problem;
@@ -26,7 +27,7 @@ use crate::util::rng::Rng;
 pub struct Choco {
     x: Mat,
     x_hat: Mat,
-    w_minus_i: Mat,
+    w_minus_i: MixingOp,
     pub eta: f64,
     /// Consensus stepsize γ_c (tuned in {0.01 … 1.0} per §5).
     pub gamma_c: f64,
@@ -36,13 +37,14 @@ pub struct Choco {
     rng: Rng,
     bits: u64,
     g: Mat,
+    corr: Mat, // scratch: (W − I) X̂
 }
 
 impl Choco {
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         problem: &dyn Problem,
-        w: &Mat,
+        w: &MixingOp,
         x0: &Mat,
         eta: f64,
         gamma_c: f64,
@@ -53,14 +55,10 @@ impl Choco {
     ) -> Choco {
         let mut rng = Rng::new(seed);
         let oracle = Sgo::new(oracle_kind, problem, x0, rng.next_u64());
-        let mut w_minus_i = w.clone();
-        for i in 0..w.rows {
-            w_minus_i[(i, i)] -= 1.0;
-        }
         Choco {
             x: x0.clone(),
             x_hat: Mat::zeros(x0.rows, x0.cols),
-            w_minus_i,
+            w_minus_i: w.minus_identity(),
             eta,
             gamma_c,
             oracle,
@@ -69,6 +67,7 @@ impl Choco {
             rng,
             bits: 0,
             g: Mat::zeros(x0.rows, x0.cols),
+            corr: Mat::zeros(x0.rows, x0.cols),
         }
     }
 }
@@ -97,8 +96,8 @@ impl Algorithm for Choco {
         self.bits += bits;
 
         // consensus correction through the replicas
-        let corr = self.w_minus_i.matmul(&self.x_hat);
-        x_half.axpy(self.gamma_c, &corr);
+        self.w_minus_i.apply_into(&self.x_hat, &mut self.corr);
+        x_half.axpy(self.gamma_c, &self.corr);
         prox_rows_into(self.prox.as_ref(), &mut x_half, self.eta);
         self.x = x_half;
         RoundStats { bits }

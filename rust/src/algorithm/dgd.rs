@@ -13,6 +13,7 @@
 
 use super::{Algorithm, RoundStats};
 use crate::compress::Compressor;
+use crate::graph::MixingOp;
 use crate::linalg::Mat;
 use crate::oracle::{OracleKind, Sgo};
 use crate::problem::Problem;
@@ -21,7 +22,7 @@ use crate::util::rng::Rng;
 
 pub struct Dgd {
     x: Mat,
-    w: Mat,
+    w: MixingOp,
     pub eta: f64,
     oracle: Sgo,
     comp: Box<dyn Compressor>,
@@ -29,13 +30,15 @@ pub struct Dgd {
     rng: Rng,
     bits: u64,
     g: Mat,
+    x_hat: Mat, // scratch: decoded broadcasts
+    wx: Mat,    // scratch: W · X̂ (becomes the next iterate via swap)
 }
 
 impl Dgd {
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         problem: &dyn Problem,
-        w: &Mat,
+        w: &MixingOp,
         x0: &Mat,
         eta: f64,
         oracle_kind: OracleKind,
@@ -55,6 +58,8 @@ impl Dgd {
             rng,
             bits: 0,
             g: Mat::zeros(x0.rows, x0.cols),
+            x_hat: Mat::zeros(x0.rows, x0.cols),
+            wx: Mat::zeros(x0.rows, x0.cols),
         }
     }
 }
@@ -64,19 +69,18 @@ impl Algorithm for Dgd {
         self.oracle.sample_all(problem, &self.x, &mut self.g);
 
         // each node broadcasts its (possibly compressed) iterate
-        let mut x_hat = Mat::zeros(self.x.rows, self.x.cols);
         let mut bits = 0u64;
         for i in 0..self.x.rows {
             let c = self.comp.compress(self.x.row(i), &mut self.rng);
             bits += c.bits;
-            x_hat.row_mut(i).copy_from_slice(&c.decoded);
+            self.x_hat.row_mut(i).copy_from_slice(&c.decoded);
         }
         self.bits += bits;
 
-        let mut next = self.w.matmul(&x_hat);
-        next.axpy(-self.eta, &self.g);
-        prox_rows_into(self.prox.as_ref(), &mut next, self.eta);
-        self.x = next;
+        self.w.apply_into(&self.x_hat, &mut self.wx);
+        self.wx.axpy(-self.eta, &self.g);
+        prox_rows_into(self.prox.as_ref(), &mut self.wx, self.eta);
+        std::mem::swap(&mut self.x, &mut self.wx);
         RoundStats { bits }
     }
 

@@ -17,6 +17,7 @@
 
 use super::{Algorithm, CommState, RoundStats};
 use crate::compress::{Compressor, Identity};
+use crate::graph::MixingOp;
 use crate::linalg::Mat;
 use crate::oracle::{OracleKind, Sgo};
 use crate::problem::Problem;
@@ -26,7 +27,7 @@ use crate::util::rng::Rng;
 pub struct DualGd {
     x: Mat,
     d: Mat,
-    w: Mat,
+    w: MixingOp,
     /// Dual stepsize θ.
     pub theta: f64,
     /// Inner GD stepsize (1/L) and iteration budget.
@@ -39,13 +40,16 @@ pub struct DualGd {
     bits: u64,
     inner_grad_evals: u64,
     label: String,
+    /// Scratch W·X for the uncompressed path only; empty when `comm` is
+    /// Some (compressed runs gossip through CommState's own buffers).
+    wx: Mat,
 }
 
 impl DualGd {
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         problem: &dyn Problem,
-        w: &Mat,
+        w: &MixingOp,
         x0: &Mat,
         theta: f64,
         inner_iters: usize,
@@ -70,6 +74,7 @@ impl DualGd {
             bits: 0,
             inner_grad_evals: 0,
             label,
+            wx: if compressed { Mat::zeros(0, 0) } else { Mat::zeros(x0.rows, x0.cols) },
         }
     }
 }
@@ -103,17 +108,27 @@ impl Algorithm for DualGd {
         }
 
         // communicate X (compressed ⇒ LessBit-A) and ascend the dual
-        let (x_hat, xw_hat, bits) = match &mut self.comm {
-            Some(c) => c.comm(&self.x, &self.w, self.comp.as_ref(), &mut self.rng),
+        let bits = match &mut self.comm {
+            Some(c) => {
+                let (x_hat, xw_hat, bits) =
+                    c.comm(&self.x, &self.w, self.comp.as_ref(), &mut self.rng);
+                let mut resid = x_hat;
+                resid -= &xw_hat; // (I−W)X̂
+                self.d.axpy(self.theta, &resid);
+                bits
+            }
             None => {
-                let bits = 32 * (n * p) as u64;
-                (self.x.clone(), self.w.matmul(&self.x), bits)
+                // D += θ(I−W)X, fused over the preallocated W·X scratch
+                self.w.apply_into(&self.x, &mut self.wx);
+                for ((d, &x), &wx) in
+                    self.d.data.iter_mut().zip(&self.x.data).zip(&self.wx.data)
+                {
+                    *d += self.theta * (x - wx);
+                }
+                32 * (n * p) as u64
             }
         };
         self.bits += bits;
-        let mut resid = x_hat;
-        resid -= &xw_hat; // (I−W)X̂
-        self.d.axpy(self.theta, &resid);
         RoundStats { bits }
     }
 
@@ -138,7 +153,7 @@ impl Algorithm for DualGd {
 pub struct Pdgm {
     x: Mat,
     d: Mat,
-    w: Mat,
+    w: MixingOp,
     pub eta: f64,
     pub theta: f64,
     comm: Option<CommState>,
@@ -148,13 +163,16 @@ pub struct Pdgm {
     bits: u64,
     g: Mat,
     label: String,
+    /// Scratch W·X for the uncompressed path only; empty when `comm` is
+    /// Some (compressed runs gossip through CommState's own buffers).
+    wx: Mat,
 }
 
 impl Pdgm {
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         problem: &dyn Problem,
-        w: &Mat,
+        w: &MixingOp,
         x0: &Mat,
         eta: f64,
         theta: f64,
@@ -187,13 +205,14 @@ impl Pdgm {
             bits: 0,
             g: Mat::zeros(x0.rows, x0.cols),
             label,
+            wx: if compressed { Mat::zeros(0, 0) } else { Mat::zeros(x0.rows, x0.cols) },
         }
     }
 
     /// Uncompressed PDGM with θ = γ/(2η) (matching LEAD's dual scale).
     pub fn plain(
         problem: &dyn Problem,
-        w: &Mat,
+        w: &MixingOp,
         x0: &Mat,
         eta: f64,
         gamma: f64,
@@ -218,7 +237,7 @@ impl Pdgm {
     #[allow(clippy::too_many_arguments)]
     pub fn lessbit_b(
         problem: &dyn Problem,
-        w: &Mat,
+        w: &MixingOp,
         x0: &Mat,
         eta: f64,
         gamma: f64,
@@ -239,17 +258,26 @@ impl Algorithm for Pdgm {
         self.x -= &d_scaled;
 
         // dual: D ← D + θ(I−W)X̂ (compressed ⇒ LessBit B/C/D)
-        let (x_hat, xw_hat, bits) = match &mut self.comm {
-            Some(c) => c.comm(&self.x, &self.w, self.comp.as_ref(), &mut self.rng),
+        let bits = match &mut self.comm {
+            Some(c) => {
+                let (x_hat, xw_hat, bits) =
+                    c.comm(&self.x, &self.w, self.comp.as_ref(), &mut self.rng);
+                let mut resid = x_hat;
+                resid -= &xw_hat;
+                self.d.axpy(self.theta, &resid);
+                bits
+            }
             None => {
-                let bits = 32 * (self.x.rows * self.x.cols) as u64;
-                (self.x.clone(), self.w.matmul(&self.x), bits)
+                self.w.apply_into(&self.x, &mut self.wx);
+                for ((d, &x), &wx) in
+                    self.d.data.iter_mut().zip(&self.x.data).zip(&self.wx.data)
+                {
+                    *d += self.theta * (x - wx);
+                }
+                32 * (self.x.rows * self.x.cols) as u64
             }
         };
         self.bits += bits;
-        let mut resid = x_hat;
-        resid -= &xw_hat;
-        self.d.axpy(self.theta, &resid);
         RoundStats { bits }
     }
 

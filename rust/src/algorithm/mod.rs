@@ -41,6 +41,7 @@ pub use reference::solve_reference;
 pub use schedule::Schedule;
 
 use crate::compress::Compressor;
+use crate::graph::MixingOp;
 use crate::linalg::Mat;
 use crate::util::rng::Rng;
 
@@ -104,7 +105,8 @@ impl Hyper {
         let gamma = if c == 0.0 {
             1.0
         } else {
-            (1.0 / lmax_iw) * ((2.0 * eta * mu - 2.0 * c.sqrt() * alpha) / (eta * mu)).min(delta / c.sqrt())
+            (1.0 / lmax_iw)
+                * ((2.0 * eta * mu - 2.0 * c.sqrt() * alpha) / (eta * mu)).min(delta / c.sqrt())
         };
         Hyper { eta, alpha, gamma }
     }
@@ -121,45 +123,62 @@ impl Hyper {
 /// H_w   ← (1−α) H_w + α Ẑ_w (= H_w + αWQᵏ)
 /// ```
 ///
-/// Returns (Ẑ, Ẑ_w) and the exact wire bits of the encoded Qᵏ rows.
+/// Returns (Ẑ, Ẑ_w) and the exact wire bits of the encoded Qᵏ rows. The
+/// W·Q product runs through [`MixingOp::apply_into`] over preallocated
+/// scratch — O(nnz·p) per round on sparse topologies, with no allocation
+/// in the product itself. (The returned Ẑ/Ẑ_w estimates are freshly built
+/// Mats each round; they are handed to the caller by value.)
 pub struct CommState {
     pub h: Mat,
     pub h_w: Mat,
     pub alpha: f64,
+    /// Scratch: the decoded compressed differences Qᵏ (every row is
+    /// overwritten each round).
+    q: Mat,
+    /// Scratch: W · Qᵏ.
+    wq: Mat,
+    /// Scratch: one row of Z − H handed to the compressor.
+    diff: Vec<f64>,
 }
 
 impl CommState {
     /// Initialize with H¹ and H_w¹ = W H¹ (Algorithm 1 line 1).
-    pub fn new(h1: Mat, w: &Mat, alpha: f64) -> CommState {
-        let h_w = w.matmul(&h1);
-        CommState { h: h1, h_w, alpha }
+    pub fn new(h1: Mat, w: &MixingOp, alpha: f64) -> CommState {
+        let h_w = w.apply(&h1);
+        let (n, p) = (h1.rows, h1.cols);
+        CommState {
+            h: h1,
+            h_w,
+            alpha,
+            q: Mat::zeros(n, p),
+            wq: Mat::zeros(n, p),
+            diff: vec![0.0; p],
+        }
     }
 
     /// One compressed communication round over the rows of `z`.
     pub fn comm(
         &mut self,
         z: &Mat,
-        w: &Mat,
+        w: &MixingOp,
         comp: &dyn Compressor,
         rng: &mut Rng,
     ) -> (Mat, Mat, u64) {
         let n = z.rows;
-        let mut q = Mat::zeros(n, z.cols);
         let mut bits = 0u64;
-        let mut diff = vec![0.0; z.cols];
         for i in 0..n {
-            for ((d, &zi), &hi) in diff.iter_mut().zip(z.row(i)).zip(self.h.row(i)) {
+            for ((d, &zi), &hi) in self.diff.iter_mut().zip(z.row(i)).zip(self.h.row(i)) {
                 *d = zi - hi;
             }
-            let c = comp.compress(&diff, rng);
+            let c = comp.compress(&self.diff, rng);
             bits += c.bits;
-            q.row_mut(i).copy_from_slice(&c.decoded);
+            self.q.row_mut(i).copy_from_slice(&c.decoded);
         }
-        let wq = w.matmul(&q);
-        let z_hat = &self.h + &q;
-        let zw_hat = &self.h_w + &wq;
-        self.h.axpy(self.alpha, &q);
-        self.h_w.axpy(self.alpha, &wq);
+        w.apply_into(&self.q, &mut self.wq);
+        let z_hat = &self.h + &self.q;
+        let zw_hat = &self.h_w + &self.wq;
+        self.h.axpy(self.alpha, &self.q);
+        self.h_w.axpy(self.alpha, &self.wq);
         (z_hat, zw_hat, bits)
     }
 }
@@ -177,15 +196,14 @@ pub fn suboptimality(x: &Mat, x_star: &[f64]) -> f64 {
 #[cfg(test)]
 pub(crate) mod testkit {
     //! Shared fixtures for per-algorithm convergence tests.
-    use crate::graph::{mixing_matrix, Graph, MixingRule};
-    use crate::linalg::Mat;
+    use crate::graph::{Graph, MixingOp, MixingRule};
     use crate::problem::data::{blobs, BlobSpec};
     use crate::problem::LogReg;
 
     /// Small, well-conditioned 4-node ring logreg problem + uniform mixing
-    /// matrix (κ_f ≈ 20 so convergence tests finish in a few thousand
+    /// operator (κ_f ≈ 20 so convergence tests finish in a few thousand
     /// rounds; the bench harness exercises the paper-scale conditioning).
-    pub fn ring_logreg() -> (LogReg, Mat) {
+    pub fn ring_logreg() -> (LogReg, MixingOp) {
         let spec = BlobSpec {
             nodes: 4,
             samples_per_node: 24,
@@ -197,7 +215,7 @@ pub(crate) mod testkit {
         };
         let p = LogReg::new(blobs(&spec), 3, 0.1, 4);
         let g = Graph::ring(4);
-        let w = mixing_matrix(&g, MixingRule::UniformMaxDegree);
+        let w = MixingOp::dense_from(&g, MixingRule::UniformMaxDegree);
         (p, w)
     }
 
@@ -225,13 +243,13 @@ pub(crate) mod testkit {
 mod tests {
     use super::*;
     use crate::compress::Identity;
-    use crate::graph::{mixing_matrix, Graph, MixingRule};
+    use crate::graph::{Graph, MixingRule};
 
     #[test]
     fn comm_identity_is_transparent() {
         // with identity compression, Ẑ = Z and Ẑ_w = WZ regardless of H
         let g = Graph::ring(4);
-        let w = mixing_matrix(&g, MixingRule::UniformMaxDegree);
+        let w = MixingOp::dense_from(&g, MixingRule::UniformMaxDegree);
         let mut rng = Rng::new(4);
         let mut z = Mat::zeros(4, 6);
         rng.fill_normal(&mut z.data);
@@ -241,7 +259,7 @@ mod tests {
         let id = Identity::f64();
         let (z_hat, zw_hat, bits) = comm.comm(&z, &w, &id, &mut rng);
         assert!(z_hat.dist_sq(&z) < 1e-24);
-        assert!(zw_hat.dist_sq(&w.matmul(&z)) < 1e-20);
+        assert!(zw_hat.dist_sq(&w.apply(&z)) < 1e-20);
         assert_eq!(bits, 4 * 6 * 64);
     }
 
@@ -250,7 +268,7 @@ mod tests {
         // repeatedly communicating the same Z must drive H → Z (the error-
         // vanishing property that makes compression "free" asymptotically)
         let g = Graph::ring(4);
-        let w = mixing_matrix(&g, MixingRule::UniformMaxDegree);
+        let w = MixingOp::dense_from(&g, MixingRule::UniformMaxDegree);
         let mut rng = Rng::new(5);
         let mut z = Mat::zeros(4, 64);
         rng.fill_normal(&mut z.data);
@@ -267,7 +285,33 @@ mod tests {
         }
         assert!(comm.h.dist_sq(&z) < 1e-6 * z.norm_sq());
         // h_w must track W·H exactly (both sides apply the same updates)
-        assert!(comm.h_w.dist_sq(&w.matmul(&comm.h)) < 1e-18);
+        assert!(comm.h_w.dist_sq(&w.apply(&comm.h)) < 1e-18);
+    }
+
+    #[test]
+    fn comm_identical_through_dense_and_sparse_mixing() {
+        // the same COMM round through both representations, bit for bit
+        let g = Graph::ring(16);
+        let dense = MixingOp::dense_from(&g, MixingRule::UniformMaxDegree);
+        let sparse = MixingOp::sparse_from(&g, MixingRule::UniformMaxDegree);
+        let comp = crate::compress::InfNormQuantizer::new(2, 64);
+        let mut z = Mat::zeros(16, 24);
+        Rng::new(8).fill_normal(&mut z.data);
+        let mut comm_d = CommState::new(Mat::zeros(16, 24), &dense, 0.5);
+        let mut comm_s = CommState::new(Mat::zeros(16, 24), &sparse, 0.5);
+        let (mut rng_d, mut rng_s) = (Rng::new(9), Rng::new(9));
+        for _ in 0..50 {
+            let (zd, zwd, bd) = comm_d.comm(&z, &dense, &comp, &mut rng_d);
+            let (zs, zws, bs) = comm_s.comm(&z, &sparse, &comp, &mut rng_s);
+            assert_eq!(bd, bs);
+            assert_eq!(zd.data, zs.data);
+            for (a, b) in zwd.data.iter().zip(&zws.data) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        for (a, b) in comm_d.h_w.data.iter().zip(&comm_s.h_w.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

@@ -14,6 +14,7 @@
 //! One broadcast per node per round (the matrix W̃ multiplies).
 
 use super::{Algorithm, RoundStats};
+use crate::graph::MixingOp;
 use crate::linalg::Mat;
 use crate::oracle::{OracleKind, Sgo};
 use crate::problem::Problem;
@@ -25,19 +26,20 @@ pub struct Nids {
     x_prev: Mat,
     z: Mat,
     g_prev: Mat,
-    w_tilde: Mat,
+    w_tilde: MixingOp,
     pub eta: f64,
     oracle: Sgo,
     prox: Box<dyn Prox>,
     bits: u64,
     bits_per_entry: u64,
     g: Mat,
+    mixed: Mat, // scratch: W̃ · inner
 }
 
 impl Nids {
     pub fn new(
         problem: &dyn Problem,
-        w: &Mat,
+        w: &MixingOp,
         x0: &Mat,
         eta: f64,
         oracle_kind: OracleKind,
@@ -47,11 +49,7 @@ impl Nids {
         let mut rng = Rng::new(seed);
         let mut oracle = Sgo::new(oracle_kind, problem, x0, rng.next_u64());
         let n = x0.rows;
-        let mut w_tilde = w.clone();
-        w_tilde.scale(0.5);
-        for i in 0..n {
-            w_tilde[(i, i)] += 0.5;
-        }
+        let w_tilde = w.half_lazy();
         // init: Z¹ = X⁰ − η∇F(X⁰); X¹ = prox(Z¹)
         let mut g0 = Mat::zeros(n, x0.cols);
         oracle.sample_all(problem, x0, &mut g0);
@@ -71,6 +69,7 @@ impl Nids {
             bits: 0,
             bits_per_entry: 32, // uncompressed f32 wire format (paper's label)
             g: Mat::zeros(n, x0.cols),
+            mixed: Mat::zeros(n, x0.cols),
         }
     }
 }
@@ -86,9 +85,9 @@ impl Algorithm for Nids {
         inner.axpy(self.eta, &self.g_prev);
 
         // Zᵏ⁺¹ = Zᵏ − Xᵏ + W̃ · inner  (the broadcast is `inner`)
-        let mixed = self.w_tilde.matmul(&inner);
+        self.w_tilde.apply_into(&inner, &mut self.mixed);
         self.z -= &self.x;
-        self.z += &mixed;
+        self.z += &self.mixed;
 
         let bits = self.bits_per_entry * (self.x.rows * self.x.cols) as u64;
         self.bits += bits;

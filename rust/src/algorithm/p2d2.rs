@@ -15,6 +15,7 @@
 //! subspace gives the linear rate. One broadcast per node per round.
 
 use super::{Algorithm, RoundStats};
+use crate::graph::MixingOp;
 use crate::linalg::Mat;
 use crate::oracle::{OracleKind, Sgo};
 use crate::problem::Problem;
@@ -26,7 +27,7 @@ pub struct P2d2 {
     x_prev: Mat,
     z: Mat,
     g_prev: Mat,
-    w_tilde: Mat,
+    w_tilde: MixingOp,
     pub eta: f64,
     oracle: Sgo,
     prox: Box<dyn Prox>,
@@ -37,7 +38,7 @@ pub struct P2d2 {
 impl P2d2 {
     pub fn new(
         problem: &dyn Problem,
-        w: &Mat,
+        w: &MixingOp,
         x0: &Mat,
         eta: f64,
         oracle_kind: OracleKind,
@@ -47,17 +48,13 @@ impl P2d2 {
         let mut rng = Rng::new(seed);
         let mut oracle = Sgo::new(oracle_kind, problem, x0, rng.next_u64());
         let n = x0.rows;
-        let mut w_tilde = w.clone();
-        w_tilde.scale(0.5);
-        for i in 0..n {
-            w_tilde[(i, i)] += 0.5;
-        }
+        let w_tilde = w.half_lazy();
         // init: Z¹ = W̃(X⁰ − η∇F(X⁰)), X¹ = prox(Z¹)
         let mut g0 = Mat::zeros(n, x0.cols);
         oracle.sample_all(problem, x0, &mut g0);
         let mut pre = x0.clone();
         pre.axpy(-eta, &g0);
-        let z = w_tilde.matmul(&pre);
+        let z = w_tilde.apply(&pre);
         let mut x1 = z.clone();
         prox_rows_into(prox.as_ref(), &mut x1, eta);
         P2d2 {
@@ -88,7 +85,8 @@ impl Algorithm for P2d2 {
 
         let bits = 32 * (self.x.rows * self.x.cols) as u64;
         self.bits += bits;
-        self.z = self.w_tilde.matmul(&inner);
+        // Z is overwritten in place: `inner` is a distinct buffer
+        self.w_tilde.apply_into(&inner, &mut self.z);
 
         self.x_prev = self.x.clone();
         self.g_prev = self.g.clone();

@@ -14,6 +14,7 @@
 //! (Setting R ≡ 0 recovers EXTRA.)
 
 use super::{Algorithm, RoundStats};
+use crate::graph::MixingOp;
 use crate::linalg::Mat;
 use crate::oracle::{OracleKind, Sgo};
 use crate::problem::Problem;
@@ -25,19 +26,21 @@ pub struct PgExtra {
     x_prev: Mat,
     z: Mat,
     g_prev: Mat,
-    w: Mat,
-    w_tilde: Mat,
+    w: MixingOp,
+    w_tilde: MixingOp,
     pub eta: f64,
     oracle: Sgo,
     prox: Box<dyn Prox>,
     bits: u64,
     g: Mat,
+    wx: Mat,       // scratch: W Xᵏ
+    wtx_prev: Mat, // scratch: W̃ Xᵏ⁻¹
 }
 
 impl PgExtra {
     pub fn new(
         problem: &dyn Problem,
-        w: &Mat,
+        w: &MixingOp,
         x0: &Mat,
         eta: f64,
         oracle_kind: OracleKind,
@@ -47,14 +50,10 @@ impl PgExtra {
         let mut rng = Rng::new(seed);
         let mut oracle = Sgo::new(oracle_kind, problem, x0, rng.next_u64());
         let n = x0.rows;
-        let mut w_tilde = w.clone();
-        w_tilde.scale(0.5);
-        for i in 0..n {
-            w_tilde[(i, i)] += 0.5;
-        }
+        let w_tilde = w.half_lazy();
         let mut g0 = Mat::zeros(n, x0.cols);
         oracle.sample_all(problem, x0, &mut g0);
-        let mut z = w.matmul(x0);
+        let mut z = w.apply(x0);
         z.axpy(-eta, &g0);
         let mut x1 = z.clone();
         prox_rows_into(prox.as_ref(), &mut x1, eta);
@@ -70,6 +69,8 @@ impl PgExtra {
             prox,
             bits: 0,
             g: Mat::zeros(n, x0.cols),
+            wx: Mat::zeros(n, x0.cols),
+            wtx_prev: Mat::zeros(n, x0.cols),
         }
     }
 }
@@ -79,10 +80,10 @@ impl Algorithm for PgExtra {
         self.oracle.sample_all(problem, &self.x, &mut self.g);
 
         // Zᵏ⁺¹ = Zᵏ + WXᵏ − W̃Xᵏ⁻¹ − η(Gᵏ − Gᵏ⁻¹)
-        let wx = self.w.matmul(&self.x);
-        let wtx_prev = self.w_tilde.matmul(&self.x_prev);
-        self.z += &wx;
-        self.z -= &wtx_prev;
+        self.w.apply_into(&self.x, &mut self.wx);
+        self.w_tilde.apply_into(&self.x_prev, &mut self.wtx_prev);
+        self.z += &self.wx;
+        self.z -= &self.wtx_prev;
         self.z.axpy(-self.eta, &self.g);
         self.z.axpy(self.eta, &self.g_prev);
 
@@ -145,8 +146,8 @@ mod tests {
         let lam = 5e-3;
         let x_star = solve_reference(&p, lam, 40_000, 1e-13);
         let x0 = Mat::zeros(4, p.dim());
-        let mut alg =
-            PgExtra::new(&p, &w, &x0, crate::algorithm::testkit::safe_eta(&p), OracleKind::Full, Box::new(L1::new(lam)), 3);
+        let eta = crate::algorithm::testkit::safe_eta(&p);
+        let mut alg = PgExtra::new(&p, &w, &x0, eta, OracleKind::Full, Box::new(L1::new(lam)), 3);
         let s = run_to(&mut alg, &p, 5000, &x_star);
         assert!(s < 1e-12, "PG-EXTRA composite suboptimality: {s}");
     }

@@ -20,6 +20,7 @@
 
 use super::{Algorithm, CommState, Hyper, RoundStats};
 use crate::compress::Compressor;
+use crate::graph::MixingOp;
 use crate::linalg::Mat;
 use crate::oracle::{OracleKind, Sgo};
 use crate::problem::Problem;
@@ -30,7 +31,7 @@ pub struct ProxLead {
     x: Mat,
     d: Mat,
     comm: CommState,
-    w: Mat,
+    w: MixingOp,
     pub hyper: Hyper,
     oracle: Sgo,
     comp: Box<dyn Compressor>,
@@ -48,7 +49,7 @@ impl ProxLead {
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         problem: &dyn Problem,
-        w: &Mat,
+        w: &MixingOp,
         x0: &Mat,
         hyper: Hyper,
         oracle_kind: OracleKind,
@@ -60,7 +61,7 @@ impl ProxLead {
         let p = problem.dim();
         assert_eq!(x0.rows, n);
         assert_eq!(x0.cols, p);
-        assert_eq!(w.rows, n);
+        assert_eq!(w.n(), n);
         let mut rng = Rng::new(seed);
         let mut oracle = Sgo::new(oracle_kind, problem, x0, rng.next_u64());
 

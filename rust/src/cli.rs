@@ -34,7 +34,8 @@ SUBCOMMANDS:
 CONFIG KEYS (also usable as --key value):
   nodes samples_per_node dim classes batches lambda1 lambda2 separation
   shuffled topology(ring|chain|star|complete|grid|er) mixing(uniform|mh|lazy)
-  er_prob algorithm(prox-lead|lead|dgd|choco|nids|p2d2|pg-extra|pdgm|dualgd)
+  connectivity|er_prob (ER edge prob; 0 = auto 2·ln(n)/n)
+  algorithm(prox-lead|lead|dgd|choco|nids|p2d2|pg-extra|pdgm|dualgd)
   oracle(full|sgd|lsvrg|saga) lsvrg_p compressor(inf|l2|randk|topk)
   bits(2..16|32|64) block sparsify_k eta(0=auto 1/2L) alpha gamma
   rounds record_every seed backend(native|xla) out

@@ -27,6 +27,9 @@ pub struct Config {
     // network
     pub topology: String,
     pub mixing: String,
+    /// Erdős–Rényi edge probability (config keys `connectivity` /
+    /// `er_prob`); 0 ⇒ auto 2·ln(n)/n, just above the connectivity
+    /// threshold, so a `nodes` axis can sweep ER graphs without retuning.
     pub er_prob: f64,
     // algorithm
     pub algorithm: String,
@@ -145,7 +148,7 @@ impl Config {
             "shuffled" => self.shuffled = p(key, val)?,
             "topology" => self.topology = val.into(),
             "mixing" => self.mixing = val.into(),
-            "er_prob" => self.er_prob = p(key, val)?,
+            "er_prob" | "connectivity" => self.er_prob = p(key, val)?,
             "algorithm" => self.algorithm = val.into(),
             "oracle" => self.oracle = val.into(),
             "lsvrg_p" => self.lsvrg_p = p(key, val)?,
@@ -172,21 +175,53 @@ impl Config {
 
     pub fn topology(&self) -> Result<Graph, ConfigError> {
         let mut rng = Rng::new(self.seed ^ 0x70_70);
-        let kind = match self.topology.as_str() {
-            "ring" => Topology::Ring,
-            "chain" => Topology::Chain,
-            "star" => Topology::Star,
-            "complete" => Topology::Complete,
-            "grid" => Topology::Grid,
-            "er" | "erdos-renyi" => {
-                // Graph::build uses a connectivity-safe default probability;
-                // honor an explicit er_prob via the direct constructor
-                let g = Graph::erdos_renyi(self.nodes, self.er_prob, &mut rng);
-                return Ok(g);
+        let kind: Topology = self.topology.parse().map_err(ConfigError)?;
+        let n = self.nodes;
+        match kind {
+            Topology::Ring if n < 3 => {
+                Err(ConfigError(format!("ring topology needs nodes >= 3 (got {n})")))
             }
-            t => return Err(ConfigError(format!("unknown topology '{t}'"))),
-        };
-        Ok(Graph::build(kind, self.nodes, &mut rng))
+            _ if n < 2 => Err(ConfigError(format!("topology needs nodes >= 2 (got {n})"))),
+            Topology::ErdosRenyi => {
+                // honor an explicit connectivity; 0 ⇒ the connectivity-safe
+                // default 2·ln(n)/n, capped at 0.8
+                if !(0.0..=1.0).contains(&self.er_prob) {
+                    return Err(ConfigError(format!(
+                        "connectivity must be in [0, 1] (0 = auto), got {}",
+                        self.er_prob
+                    )));
+                }
+                let prob =
+                    if self.er_prob > 0.0 { self.er_prob } else { Graph::auto_er_prob(n) };
+                // a clean error instead of the sampler's panic when every
+                // draw comes up disconnected (prob far below ln(n)/n)
+                Graph::try_erdos_renyi(n, prob, &mut rng, 1000).ok_or_else(|| {
+                    ConfigError(format!(
+                        "could not sample a connected er graph at connectivity {prob} \
+                         (n = {n}; the threshold is ln(n)/n ≈ {:.4} — raise connectivity \
+                         or use 0 for auto)",
+                        (n as f64).ln() / n as f64
+                    ))
+                })
+            }
+            Topology::Grid => {
+                // reject non-square n with a clear config error instead of
+                // the library-level panic (Graph::grid asserts)
+                let k = (n as f64).sqrt().floor() as usize;
+                if k * k != n || k < 2 {
+                    let hint = if k < 2 {
+                        "smallest valid is 4".to_string()
+                    } else {
+                        format!("nearest squares are {} and {}", k * k, (k + 1) * (k + 1))
+                    };
+                    return Err(ConfigError(format!(
+                        "grid topology needs a perfect square nodes >= 4 (got {n}; {hint})"
+                    )));
+                }
+                Ok(Graph::build(kind, n, &mut rng))
+            }
+            kind => Ok(Graph::build(kind, n, &mut rng)),
+        }
     }
 
     pub fn mixing_rule(&self) -> Result<MixingRule, ConfigError> {
@@ -379,6 +414,65 @@ mod tests {
         assert_eq!(c.prox().name(), "l1(0.005)");
         c.lambda1 = 0.0;
         assert!(c.prox().is_zero());
+    }
+
+    #[test]
+    fn topology_factory_covers_chain_er_and_aliases() {
+        let mut c = Config::default();
+        c.nodes = 10;
+        for (name, edges) in [("chain", 9), ("path", 9), ("ring", 10)] {
+            c.topology = name.into();
+            let g = c.topology().unwrap();
+            assert_eq!(g.num_edges(), edges, "{name}");
+            assert!(g.is_connected());
+        }
+        // er honors an explicit connectivity and resolves the `connectivity`
+        // config key as an alias of er_prob
+        c.set("connectivity", "0.5").unwrap();
+        assert_eq!(c.er_prob, 0.5);
+        for name in ["er", "erdos-renyi"] {
+            c.topology = name.into();
+            assert!(c.topology().unwrap().is_connected());
+        }
+        // connectivity = 0 ⇒ auto threshold 2·ln(n)/n
+        c.er_prob = 0.0;
+        assert!(c.topology().unwrap().is_connected());
+        // same seed ⇒ same sampled graph
+        assert_eq!(c.topology().unwrap().adj, c.topology().unwrap().adj);
+        // out-of-range and hopelessly low connectivity are config errors,
+        // not sampler panics
+        c.er_prob = -0.3;
+        assert!(c.topology().unwrap_err().0.contains("must be in [0, 1]"));
+        c.er_prob = 5.0;
+        assert!(c.topology().unwrap_err().0.contains("must be in [0, 1]"));
+        c.er_prob = 0.01; // far below ln(10)/10 ≈ 0.23: every draw disconnected
+        assert!(c.topology().unwrap_err().0.contains("could not sample"));
+        // slightly sub-threshold values that still sample fine keep working
+        c.er_prob = 0.2;
+        assert!(c.topology().unwrap().is_connected());
+    }
+
+    #[test]
+    fn grid_topology_requires_perfect_square() {
+        let mut c = Config::default();
+        c.topology = "grid".into();
+        c.nodes = 9;
+        assert!(c.topology().is_ok());
+        c.nodes = 8;
+        let err = c.topology().unwrap_err();
+        assert!(err.0.contains("perfect square"), "{}", err.0);
+        assert!(err.0.contains("4 and 9"), "should name nearest squares: {}", err.0);
+        c.nodes = 3; // k = 1: the hint must not be a bogus "4 and 4"
+        assert!(c.topology().unwrap_err().0.contains("smallest valid is 4"));
+        c.nodes = 2; // 2 < 4: too small for a torus even though not square
+        let err = c.topology().unwrap_err();
+        assert!(err.0.contains("smallest valid is 4"), "{}", err.0);
+        // tiny node counts error cleanly instead of panicking
+        c.topology = "ring".into();
+        assert!(c.topology().is_err());
+        c.nodes = 1;
+        c.topology = "chain".into();
+        assert!(c.topology().is_err());
     }
 
     #[test]

@@ -17,6 +17,7 @@ pub mod wire;
 pub use node::NodeConfig;
 pub use wire::{Frame, WireCodec};
 
+use crate::graph::MixingOp;
 use crate::linalg::Mat;
 use crate::oracle::OracleKind;
 use crate::problem::Problem;
@@ -103,15 +104,18 @@ impl CoordResult {
 /// Run distributed Prox-LEAD over node threads. `problem` supplies every
 /// node's data (as the per-machine shards would in a real deployment);
 /// `prox` is the shared non-smooth term; `x0` the common start iterate.
+/// Per-edge channels and neighbor weights are derived from the mixing
+/// operator's structure — one CSR row walk per node on sparse graphs, so
+/// setup is O(nnz), not O(n²).
 pub fn run(
     problem: Arc<dyn Problem>,
-    w: &Mat,
+    w: &MixingOp,
     x0: &Mat,
     prox: Arc<dyn Prox>,
     cfg: &CoordConfig,
 ) -> CoordResult {
     let n = problem.num_nodes();
-    assert_eq!(w.rows, n);
+    assert_eq!(w.n(), n);
     assert_eq!(x0.rows, n);
     let start = Instant::now();
 
@@ -127,14 +131,15 @@ pub fn run(
 
     let mut handles = Vec::with_capacity(n);
     for (i, rx) in rxs.into_iter().enumerate() {
-        // neighbor senders + mixing weights (w_ij ≠ 0, j ≠ i)
-        let neighbors: Vec<(usize, f64, mpsc::Sender<Vec<u8>>)> = (0..n)
-            .filter(|&j| j != i && w[(i, j)] != 0.0)
-            .map(|j| (j, w[(i, j)], txs[j].clone()))
+        // neighbor senders + mixing weights (w_ij ≠ 0, j ≠ i), ascending j
+        let neighbors: Vec<(usize, f64, mpsc::Sender<Vec<u8>>)> = w
+            .neighbors(i)
+            .into_iter()
+            .map(|(j, wij)| (j, wij, txs[j].clone()))
             .collect();
         let node_cfg = NodeConfig {
             id: i,
-            self_weight: w[(i, i)],
+            self_weight: w.self_weight(i),
             neighbors,
             inbox: rx,
             reports: report_tx.clone(),
@@ -230,6 +235,44 @@ mod tests {
     }
 
     #[test]
+    fn sparse_and_dense_channels_yield_identical_runs() {
+        // CSR-derived per-edge channels must reproduce the dense-derived
+        // run bit for bit (same neighbor order, same weights)
+        let (p, _) = ring_logreg();
+        use crate::problem::Problem;
+        let g = crate::graph::Graph::ring(4);
+        let rule = crate::graph::MixingRule::UniformMaxDegree;
+        let x0 = Mat::zeros(4, p.dim());
+        let eta = safe_eta(&p);
+        let p_arc: Arc<dyn crate::problem::Problem> = Arc::new(p);
+        let mut cfg = CoordConfig::new(200, eta, WireCodec::Quant(2, 256));
+        cfg.record_every = 50;
+        let dense = run(
+            Arc::clone(&p_arc),
+            &crate::graph::MixingOp::dense_from(&g, rule),
+            &x0,
+            Arc::new(Zero),
+            &cfg,
+        );
+        let sparse = run(
+            Arc::clone(&p_arc),
+            &crate::graph::MixingOp::sparse_from(&g, rule),
+            &x0,
+            Arc::new(Zero),
+            &cfg,
+        );
+        assert_eq!(dense.snapshots.len(), sparse.snapshots.len());
+        for ((rd, xd, bd, ed), (rs, xs, bs, es)) in
+            dense.snapshots.iter().zip(&sparse.snapshots)
+        {
+            assert_eq!((rd, bd, ed), (rs, bs, es));
+            for (a, b) in xd.data.iter().zip(&xs.data) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
     fn quantized_coordinator_converges_composite() {
         let (p, w) = ring_logreg();
         use crate::problem::Problem;
@@ -272,7 +315,8 @@ mod tests {
         let x_star = solve_reference(&p, 0.0, 40_000, 1e-13);
         let x0 = Mat::zeros(4, p.dim());
         let p_arc: Arc<dyn crate::problem::Problem> = Arc::new(p);
-        let mut cfg = CoordConfig::new(4000, 1.0 / (6.0 * p_arc.smoothness()), WireCodec::Quant(2, 256));
+        let mut cfg =
+            CoordConfig::new(4000, 1.0 / (6.0 * p_arc.smoothness()), WireCodec::Quant(2, 256));
         cfg.record_every = 1000;
         cfg.oracle = OracleKind::Saga;
         let res = run(p_arc, &w, &x0, Arc::new(Zero), &cfg);

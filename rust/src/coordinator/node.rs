@@ -45,7 +45,8 @@ pub fn run_node(
     // deterministic per-node streams: compression dither + straggler coin
     let mut comp_rng = Rng::new(cfg.seed).fork(me as u64);
     let mut fault_rng = Rng::new(cfg.seed ^ 0x5747_4C52).fork(me as u64);
-    let mut oracle = Sgo::for_node(cfg.oracle, problem.as_ref(), me, x0_all.row(me), cfg.seed.wrapping_add(me as u64));
+    let seed = cfg.seed.wrapping_add(me as u64);
+    let mut oracle = Sgo::for_node(cfg.oracle, problem.as_ref(), me, x0_all.row(me), seed);
 
     // Algorithm 1 lines 1–3 (H¹ = X⁰; every node knows the common X⁰, so
     // h_w = Σⱼ w_ij x⁰_j is computed locally without a startup exchange)

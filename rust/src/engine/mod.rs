@@ -235,7 +235,7 @@ mod tests {
         let (p, w) = ring_logreg();
         let x_star = solve_reference(&p, 0.0, 40_000, 1e-13);
         let x0 = Mat::zeros(4, p.dim());
-        let spec = Spectrum::of_mixing(&w);
+        let spec = Spectrum::of_mixing(&w.to_dense());
         let c = 0.2; // empirical 2-bit NSR on these dimensions
         let mk = || {
             ProxLead::new(

@@ -6,7 +6,7 @@
 //! Metropolis–Hastings (valid for any graph) and its "lazy" damped variant.
 
 use super::topology::Graph;
-use crate::linalg::{Mat, Spectrum};
+use crate::linalg::{power_gap_estimate, GapEstimate, Mat, SparseMat, Spectrum};
 
 /// Weighting schemes for building W from a graph.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -68,6 +68,246 @@ pub fn mixing_matrix(g: &Graph, rule: MixingRule) -> Mat {
         }
     }
     w
+}
+
+/// Build the mixing matrix for `g` under `rule` directly in CSR form —
+/// O(nnz) storage, never materializing the n×n dense matrix. The per-entry
+/// arithmetic mirrors [`mixing_matrix`] operation for operation, so the
+/// stored values are **bit-identical** to the dense construction (asserted
+/// by the `sparse_equals_dense_*` property test below).
+pub fn mixing_csr(g: &Graph, rule: MixingRule) -> SparseMat {
+    let n = g.n;
+    let mut rows: Vec<Vec<(usize, f64)>> = Vec::with_capacity(n);
+    match rule {
+        MixingRule::UniformMaxDegree => {
+            let weight = 1.0 / (g.max_degree() as f64 + 1.0);
+            for i in 0..n {
+                let diag = 1.0 - weight * g.degree(i) as f64;
+                rows.push(row_with_diag(&g.adj[i], i, diag, |_| weight));
+            }
+        }
+        MixingRule::Metropolis | MixingRule::LazyMetropolis => {
+            for i in 0..n {
+                // accumulate row_sum in adjacency order, as the dense path does
+                let mut row_sum = 0.0;
+                for &j in &g.adj[i] {
+                    row_sum += 1.0 / (1.0 + g.degree(i).max(g.degree(j)) as f64);
+                }
+                let diag = 1.0 - row_sum;
+                rows.push(row_with_diag(&g.adj[i], i, diag, |j| {
+                    1.0 / (1.0 + g.degree(i).max(g.degree(j)) as f64)
+                }));
+            }
+        }
+    }
+    let mut w = SparseMat::from_rows(n, n, &rows);
+    if rule == MixingRule::LazyMetropolis {
+        // (I + W_mh)/2, with the same f64 ops as the dense construction
+        w.scale(0.5);
+        w.add_to_diag(0.5);
+    }
+    w
+}
+
+/// One CSR row: the sorted neighbor entries with the diagonal spliced in.
+fn row_with_diag(
+    adj: &[usize],
+    i: usize,
+    diag: f64,
+    weight_of: impl Fn(usize) -> f64,
+) -> Vec<(usize, f64)> {
+    let mut row = Vec::with_capacity(adj.len() + 1);
+    let mut placed = false;
+    for &j in adj {
+        if !placed && j > i {
+            row.push((i, diag));
+            placed = true;
+        }
+        row.push((j, weight_of(j)));
+    }
+    if !placed {
+        row.push((i, diag));
+    }
+    row
+}
+
+/// Stored-entry density below which the CSR representation wins: W rows
+/// touch deg+1 entries out of n, so sparse gossip pays off as soon as the
+/// graph is meaningfully sparser than complete. The 25% threshold keeps the
+/// paper's 8-node ring (3/8 = 37.5% dense rows) on the historical dense
+/// path while every larger ring/grid/ER graph goes sparse.
+const SPARSE_DENSITY_THRESHOLD: f64 = 0.25;
+
+/// The mixing operator every algorithm gossips through: a dense matrix for
+/// small/dense graphs, CSR for sparse ones, auto-selected by stored-entry
+/// density. Both variants produce **bit-identical** products (see
+/// [`crate::linalg::sparse`]'s exactness contract), so the choice is purely
+/// a performance decision: dense gossip is O(n²p) per round, sparse is
+/// O(nnz·p).
+#[derive(Clone, Debug)]
+pub enum MixingOp {
+    Dense(Mat),
+    Sparse(SparseMat),
+}
+
+impl MixingOp {
+    /// Build from a graph + rule, auto-selecting the representation.
+    pub fn build(g: &Graph, rule: MixingRule) -> MixingOp {
+        let nnz = 2 * g.num_edges() + g.n; // off-diagonals + stored diagonal
+        let density = nnz as f64 / (g.n * g.n).max(1) as f64;
+        if density < SPARSE_DENSITY_THRESHOLD {
+            MixingOp::sparse_from(g, rule)
+        } else {
+            MixingOp::dense_from(g, rule)
+        }
+    }
+
+    /// Force the dense representation.
+    pub fn dense_from(g: &Graph, rule: MixingRule) -> MixingOp {
+        MixingOp::Dense(mixing_matrix(g, rule))
+    }
+
+    /// Force the CSR representation.
+    pub fn sparse_from(g: &Graph, rule: MixingRule) -> MixingOp {
+        MixingOp::Sparse(mixing_csr(g, rule))
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, MixingOp::Sparse(_))
+    }
+
+    /// Number of nodes (W is n×n).
+    pub fn n(&self) -> usize {
+        match self {
+            MixingOp::Dense(w) => w.rows,
+            MixingOp::Sparse(s) => s.rows,
+        }
+    }
+
+    /// Stored nonzeros (dense counts actual nonzero entries).
+    pub fn nnz(&self) -> usize {
+        match self {
+            MixingOp::Dense(w) => w.data.iter().filter(|v| **v != 0.0).count(),
+            MixingOp::Sparse(s) => s.nnz(),
+        }
+    }
+
+    /// Entry w_ij.
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        match self {
+            MixingOp::Dense(w) => w[(i, j)],
+            MixingOp::Sparse(s) => s.get(i, j),
+        }
+    }
+
+    /// w_ii — the node's own gossip weight.
+    pub fn self_weight(&self, i: usize) -> f64 {
+        self.get(i, i)
+    }
+
+    /// Node i's gossip neighbors as (j, w_ij), ascending j, excluding self
+    /// and zero weights — the coordinator derives its per-edge channels
+    /// from exactly this structure.
+    pub fn neighbors(&self, i: usize) -> Vec<(usize, f64)> {
+        match self {
+            MixingOp::Dense(w) => (0..w.cols)
+                .filter(|&j| j != i && w[(i, j)] != 0.0)
+                .map(|j| (j, w[(i, j)]))
+                .collect(),
+            MixingOp::Sparse(s) => {
+                s.row_iter(i).filter(|&(j, v)| j != i && v != 0.0).collect()
+            }
+        }
+    }
+
+    /// out = W · X into a preallocated buffer — the gossip hot path.
+    pub fn apply_into(&self, x: &Mat, out: &mut Mat) {
+        match self {
+            MixingOp::Dense(w) => w.matmul_into(x, out),
+            MixingOp::Sparse(s) => s.apply_into(x, out),
+        }
+    }
+
+    /// Allocating convenience wrapper (init paths only; rounds use
+    /// [`MixingOp::apply_into`] with scratch).
+    pub fn apply(&self, x: &Mat) -> Mat {
+        let mut out = Mat::zeros(self.n(), x.cols);
+        self.apply_into(x, &mut out);
+        out
+    }
+
+    /// y = W · x for a single vector (power iteration, per-node checks).
+    pub fn apply_vec(&self, x: &[f64], y: &mut [f64]) {
+        match self {
+            MixingOp::Dense(w) => {
+                for (i, yi) in y.iter_mut().enumerate() {
+                    *yi = crate::linalg::vdot(w.row(i), x);
+                }
+            }
+            MixingOp::Sparse(s) => s.apply_vec(x, y),
+        }
+    }
+
+    /// W̃ = (I + W)/2, in the same representation (the NIDS / PG-EXTRA /
+    /// P2D2 double-mixing operator). Same f64 ops as the historical dense
+    /// in-algorithm construction, so iterates are unchanged bit for bit.
+    pub fn half_lazy(&self) -> MixingOp {
+        match self {
+            MixingOp::Dense(w) => {
+                let mut t = w.clone();
+                t.scale(0.5);
+                for i in 0..t.rows {
+                    t[(i, i)] += 0.5;
+                }
+                MixingOp::Dense(t)
+            }
+            MixingOp::Sparse(s) => {
+                let mut t = s.clone();
+                t.scale(0.5);
+                t.add_to_diag(0.5);
+                MixingOp::Sparse(t)
+            }
+        }
+    }
+
+    /// W − I, in the same representation (Choco's consensus correction).
+    pub fn minus_identity(&self) -> MixingOp {
+        match self {
+            MixingOp::Dense(w) => {
+                let mut t = w.clone();
+                for i in 0..t.rows {
+                    t[(i, i)] -= 1.0;
+                }
+                MixingOp::Dense(t)
+            }
+            MixingOp::Sparse(s) => {
+                let mut t = s.clone();
+                t.add_to_diag(-1.0);
+                MixingOp::Sparse(t)
+            }
+        }
+    }
+
+    /// Materialize as dense (validation, eigensolves, tests).
+    pub fn to_dense(&self) -> Mat {
+        match self {
+            MixingOp::Dense(w) => w.clone(),
+            MixingOp::Sparse(s) => s.to_dense(),
+        }
+    }
+
+    /// Spectral-edge estimate by matrix-free power iteration — O(nnz) per
+    /// step, replacing the dense O(n³) eigendecomposition for λ₂/λ_n.
+    /// Deterministic (fixed internal seed).
+    pub fn gap_estimate(&self) -> GapEstimate {
+        power_gap_estimate(self.n(), |x, y| self.apply_vec(x, y), 100_000, 1e-14, 0x5EED)
+    }
+}
+
+impl From<Mat> for MixingOp {
+    fn from(w: Mat) -> MixingOp {
+        MixingOp::Dense(w)
+    }
 }
 
 /// Validate Assumption 1: symmetry, row-stochasticity, edge support,
@@ -190,6 +430,142 @@ mod tests {
         w[(0, 0)] -= 0.1;
         w[(3, 3)] -= 0.1;
         assert!(validate_mixing(&w, &g).is_err());
+    }
+
+    #[test]
+    fn sparse_equals_dense_across_topologies_and_rules() {
+        // The tentpole contract: the CSR construction stores bit-identical
+        // values, its products are bit-identical to the dense kernel, and
+        // both representations stay symmetric and row-stochastic.
+        use crate::util::qc::assert_prop;
+        let rules =
+            [MixingRule::UniformMaxDegree, MixingRule::Metropolis, MixingRule::LazyMetropolis];
+        let topos = [
+            Topology::Ring,
+            Topology::Chain,
+            Topology::Star,
+            Topology::Complete,
+            Topology::Grid,
+            Topology::ErdosRenyi,
+        ];
+        assert_prop("MixingOp sparse == dense (bitwise)", 40, |g| {
+            let kind = *g.choose(&topos);
+            let rule = *g.choose(&rules);
+            let n = match kind {
+                // grid needs a perfect square; others just need n ≥ 3
+                Topology::Grid => [4usize, 9, 16, 25][g.rng.below(4)],
+                _ => g.usize_in(3, 24),
+            };
+            let mut rng = Rng::new(g.rng.next_u64());
+            let graph = Graph::build(kind, n, &mut rng);
+            let dense = mixing_matrix(&graph, rule);
+            let csr = mixing_csr(&graph, rule);
+            // (1) stored values are bit-identical to the dense construction
+            let lifted = csr.to_dense();
+            for (i, (a, b)) in dense.data.iter().zip(&lifted.data).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("{kind:?}/{rule:?} n={n}: entry {i} {a:?} vs {b:?}"));
+                }
+            }
+            // (2) products are bit-identical (same summation order)
+            let p = g.usize_in(1, 8);
+            let mut x = Mat::zeros(n, p);
+            rng.fill_normal(&mut x.data);
+            let mut out_d = Mat::zeros(n, p);
+            let mut out_s = Mat::zeros(n, p);
+            MixingOp::Dense(dense.clone()).apply_into(&x, &mut out_d);
+            MixingOp::Sparse(csr.clone()).apply_into(&x, &mut out_s);
+            for (i, (a, b)) in out_d.data.iter().zip(&out_s.data).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!(
+                        "{kind:?}/{rule:?} n={n}: apply entry {i} {a:?} vs {b:?}"
+                    ));
+                }
+            }
+            // (3) symmetry and (4) row sums = 1 on the sparse operator
+            let op = MixingOp::Sparse(csr);
+            for i in 0..n {
+                let mut row_sum = op.self_weight(i);
+                for (j, wij) in op.neighbors(i) {
+                    if (wij - op.get(j, i)).abs() > 1e-15 {
+                        return Err(format!("asymmetry at ({i},{j}): {wij} vs {}", op.get(j, i)));
+                    }
+                    row_sum += wij;
+                }
+                if (row_sum - 1.0).abs() > 1e-12 {
+                    return Err(format!("row {i} sums to {row_sum}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mixing_op_auto_selects_by_density() {
+        // the paper's 8-ring stays dense; larger rings go sparse
+        let small = MixingOp::build(&Graph::ring(8), MixingRule::UniformMaxDegree);
+        assert!(!small.is_sparse());
+        let big = MixingOp::build(&Graph::ring(32), MixingRule::UniformMaxDegree);
+        assert!(big.is_sparse());
+        assert_eq!(big.nnz(), 3 * 32); // self + two neighbors per node
+        let complete = MixingOp::build(&Graph::complete(32), MixingRule::Metropolis);
+        assert!(!complete.is_sparse());
+    }
+
+    #[test]
+    fn mixing_op_neighbors_match_matrix_row() {
+        let g = Graph::grid(16);
+        for op in [
+            MixingOp::dense_from(&g, MixingRule::Metropolis),
+            MixingOp::sparse_from(&g, MixingRule::Metropolis),
+        ] {
+            let w = op.to_dense();
+            for i in 0..g.n {
+                let nbrs = op.neighbors(i);
+                assert_eq!(nbrs.len(), g.degree(i));
+                for (j, wij) in nbrs {
+                    assert!(g.has_edge(i, j));
+                    assert_eq!(wij, w[(i, j)]);
+                }
+                assert_eq!(op.self_weight(i), w[(i, i)]);
+            }
+        }
+    }
+
+    #[test]
+    fn half_lazy_and_minus_identity_match_dense_ops() {
+        let g = Graph::ring(12);
+        let dense = MixingOp::dense_from(&g, MixingRule::Metropolis);
+        let sparse = MixingOp::sparse_from(&g, MixingRule::Metropolis);
+        for (a, b) in [
+            (dense.half_lazy().to_dense(), sparse.half_lazy().to_dense()),
+            (dense.minus_identity().to_dense(), sparse.minus_identity().to_dense()),
+        ] {
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        // and half_lazy really is (I+W)/2
+        let w = dense.to_dense();
+        let ht = dense.half_lazy().to_dense();
+        for i in 0..12 {
+            for j in 0..12 {
+                let expect = 0.5 * w[(i, j)] + if i == j { 0.5 } else { 0.0 };
+                assert!((ht[(i, j)] - expect).abs() < 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn gap_estimate_matches_dense_spectrum() {
+        let g = Graph::ring(20);
+        let op = MixingOp::sparse_from(&g, MixingRule::UniformMaxDegree);
+        let est = op.gap_estimate();
+        let spec = Spectrum::of_mixing(&op.to_dense());
+        assert!((est.lam_min_pos() - spec.lam_min_pos).abs() < 1e-6);
+        assert!((est.lam_max() - spec.lam_max).abs() < 1e-6);
+        assert!((est.kappa_g() - spec.kappa_g()).abs() < 1e-4 * spec.kappa_g());
+        assert!((est.spectral_gap() - spec.spectral_gap()).abs() < 1e-6);
     }
 
     #[test]

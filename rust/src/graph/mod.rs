@@ -3,5 +3,5 @@
 pub mod mixing;
 pub mod topology;
 
-pub use mixing::{mixing_matrix, validate_mixing, MixingRule};
+pub use mixing::{mixing_csr, mixing_matrix, validate_mixing, MixingOp, MixingRule};
 pub use topology::{Graph, Topology};

@@ -66,7 +66,7 @@ impl Graph {
             Topology::Star => Graph::star(n),
             Topology::Complete => Graph::complete(n),
             Topology::Grid => Graph::grid(n),
-            Topology::ErdosRenyi => Graph::erdos_renyi(n, (2.0 * (n as f64).ln() / n as f64).min(0.8), rng),
+            Topology::ErdosRenyi => Graph::erdos_renyi(n, Graph::auto_er_prob(n), rng),
         }
     }
 
@@ -90,7 +90,12 @@ impl Graph {
         Graph::from_edges(n, (0..n).flat_map(|i| ((i + 1)..n).map(move |j| (i, j))))
     }
 
-    /// 2-D torus: n must be a perfect square k×k; wraps both dimensions.
+    /// 2-D torus: n must be a perfect square k×k (k ≥ 2); wraps both
+    /// dimensions. Non-square n **panics** here — there is no silent
+    /// rounding/fallback that would mis-shape the torus. Config-driven
+    /// paths never reach the panic: `Config::topology()` rejects
+    /// non-square node counts with a `ConfigError` naming the nearest
+    /// squares (see `config.rs`), which is also what sweeps surface.
     pub fn grid(n: usize) -> Graph {
         let k = (n as f64).sqrt().round() as usize;
         assert_eq!(k * k, n, "grid needs a perfect square n");
@@ -107,11 +112,29 @@ impl Graph {
         Graph::from_edges(n, edges.into_iter().filter(|(a, b)| a != b))
     }
 
+    /// The connectivity-safe default Erdős–Rényi edge probability,
+    /// (2·ln n / n) capped at 0.8 — twice the ln(n)/n connectivity
+    /// threshold, so resampling-until-connected takes O(1) tries. The one
+    /// definition shared by [`Graph::build`], `Config::topology()`, and
+    /// the scaling benches.
+    pub fn auto_er_prob(n: usize) -> f64 {
+        (2.0 * (n as f64).ln() / n as f64).min(0.8)
+    }
+
     /// Erdős–Rényi, re-sampled until connected (expected O(1) tries above
-    /// the connectivity threshold).
+    /// the connectivity threshold). Panics if 1000 draws all come up
+    /// disconnected; use [`Graph::try_erdos_renyi`] to handle that case.
     pub fn erdos_renyi(n: usize, prob: f64, rng: &mut Rng) -> Graph {
+        Graph::try_erdos_renyi(n, prob, rng, 1000)
+            .unwrap_or_else(|| panic!("could not sample a connected G({n},{prob}) in 1000 tries"))
+    }
+
+    /// [`Graph::erdos_renyi`] with a caller-chosen retry budget, returning
+    /// None instead of panicking when no draw comes up connected (config
+    /// paths turn that into a clean error).
+    pub fn try_erdos_renyi(n: usize, prob: f64, rng: &mut Rng, attempts: usize) -> Option<Graph> {
         assert!(n >= 2);
-        for _attempt in 0..1000 {
+        for _attempt in 0..attempts {
             let mut edges = Vec::new();
             for i in 0..n {
                 for j in (i + 1)..n {
@@ -122,10 +145,10 @@ impl Graph {
             }
             let g = Graph::from_edges(n, edges);
             if g.is_connected() {
-                return g;
+                return Some(g);
             }
         }
-        panic!("could not sample a connected G({n},{prob}) in 1000 tries");
+        None
     }
 
     pub fn degree(&self, i: usize) -> usize {

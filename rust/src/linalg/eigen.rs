@@ -117,6 +117,149 @@ impl Spectrum {
     }
 }
 
+/// Spectral-edge estimates of a mixing operator, from power iteration.
+///
+/// The Jacobi solve behind [`Spectrum`] is O(n³) on a dense matrix; for the
+/// sparse mixing operators of large-n sweeps we only ever need the two
+/// spectral edges — λ₂(W) (the largest eigenvalue on 1⊥, giving
+/// λ_min⁺(I−W)) and λ_n(W) (the smallest, giving λ_max(I−W)) — and both
+/// fall out of matrix-free power iteration at O(nnz) per step.
+#[derive(Clone, Copy, Debug)]
+pub struct GapEstimate {
+    /// λ₂(W): largest eigenvalue of W restricted to 1⊥.
+    pub lambda2: f64,
+    /// λ_n(W): smallest eigenvalue of W.
+    pub lambda_min: f64,
+    /// Power-iteration steps spent (both passes combined).
+    pub iters: usize,
+    /// Whether both passes hit their Rayleigh-quotient tolerance before
+    /// exhausting the iteration budget. On near-degenerate edges (e.g. a
+    /// ring's λ₂ − λ₃ ≈ 4π²/n² at large n) power iteration converges
+    /// slowly; when false, treat λ₂ (and the derived κ_g) as approximate
+    /// — callers that print these quantities should say so.
+    pub converged: bool,
+}
+
+impl GapEstimate {
+    /// λ_max(I − W) = 1 − λ_n(W).
+    pub fn lam_max(&self) -> f64 {
+        1.0 - self.lambda_min
+    }
+
+    /// λ_min⁺(I − W) = 1 − λ₂(W).
+    pub fn lam_min_pos(&self) -> f64 {
+        1.0 - self.lambda2
+    }
+
+    /// Network condition number κ_g = λ_max(I−W) / λ_min⁺(I−W).
+    pub fn kappa_g(&self) -> f64 {
+        self.lam_max() / self.lam_min_pos()
+    }
+
+    /// Spectral gap 1 − ρ with ρ = max(|λ₂|, |λ_n|).
+    pub fn spectral_gap(&self) -> f64 {
+        1.0 - self.lambda2.abs().max(self.lambda_min.abs())
+    }
+}
+
+/// Power iteration for the dominant eigenvalue of a symmetric operator
+/// `apply_b`, optionally deflating the all-ones direction each step.
+/// Returns (Rayleigh-quotient estimate, iterations used, converged).
+fn power_dominant(
+    n: usize,
+    mut apply_b: impl FnMut(&[f64], &mut [f64]),
+    deflate_ones: bool,
+    max_iters: usize,
+    tol: f64,
+    seed: u64,
+) -> (f64, usize, bool) {
+    use super::matrix::{vdot, vnorm};
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let mut v = vec![0.0; n];
+    rng.fill_normal(&mut v);
+    let project = |v: &mut [f64]| {
+        let mean = v.iter().sum::<f64>() / v.len() as f64;
+        v.iter_mut().for_each(|x| *x -= mean);
+    };
+    if deflate_ones {
+        project(&mut v);
+    }
+    let norm = vnorm(&v).max(1e-300);
+    v.iter_mut().for_each(|x| *x /= norm);
+    let mut bv = vec![0.0; n];
+    let mut lam = 0.0;
+    let mut prev = f64::INFINITY;
+    for it in 1..=max_iters {
+        apply_b(&v, &mut bv);
+        if deflate_ones {
+            project(&mut bv);
+        }
+        lam = vdot(&v, &bv); // Rayleigh quotient (‖v‖ = 1)
+        let norm = vnorm(&bv);
+        if norm < 1e-300 {
+            return (lam, it, true); // operator annihilated v: eigenvalue 0
+        }
+        for (vi, &b) in v.iter_mut().zip(&bv) {
+            *vi = b / norm;
+        }
+        if (lam - prev).abs() <= tol * (1.0 + lam.abs()) {
+            return (lam, it, true);
+        }
+        prev = lam;
+    }
+    (lam, max_iters, false)
+}
+
+/// Estimate both spectral edges of a symmetric mixing operator W (given as
+/// `apply`: y = W·x) without a dense eigendecomposition:
+///
+/// - λ₂ from power iteration on (I+W)/2 with the 1-direction deflated —
+///   all eigenvalues of (I+W)/2 lie in (0, 1], so the dominant remaining
+///   mode is (1+λ₂)/2;
+/// - λ_n from power iteration on (I−W)/2 — its spectrum is [0, 1) with the
+///   consensus mode at 0, so the dominant mode is (1−λ_n)/2.
+pub fn power_gap_estimate(
+    n: usize,
+    mut apply: impl FnMut(&[f64], &mut [f64]),
+    max_iters: usize,
+    tol: f64,
+    seed: u64,
+) -> GapEstimate {
+    assert!(n >= 2, "gap estimate needs n >= 2");
+    let (mu2, it2, conv2) = power_dominant(
+        n,
+        |x, y| {
+            apply(x, y);
+            for (yi, &xi) in y.iter_mut().zip(x) {
+                *yi = 0.5 * (xi + *yi);
+            }
+        },
+        true,
+        max_iters,
+        tol,
+        seed,
+    );
+    let (mu_n, it_n, conv_n) = power_dominant(
+        n,
+        |x, y| {
+            apply(x, y);
+            for (yi, &xi) in y.iter_mut().zip(x) {
+                *yi = 0.5 * (xi - *yi);
+            }
+        },
+        true,
+        max_iters,
+        tol,
+        seed ^ 0xA5A5_A5A5,
+    );
+    GapEstimate {
+        lambda2: 2.0 * mu2 - 1.0,
+        lambda_min: 1.0 - 2.0 * mu_n,
+        iters: it2 + it_n,
+        converged: conv2 && conv_n,
+    }
+}
+
 /// ‖M‖²_{(I−W)†} = ⟨M, (I−W)† M⟩: the weighted norm of the dual variable in
 /// the potential function Φᵏ. Computed via the eigendecomposition of W.
 pub struct PinvNorm {
@@ -229,6 +372,77 @@ mod tests {
         // consensual component is annihilated
         let ones = Mat::from_vec(2, 1, vec![1.0, 1.0]);
         assert!(pn.norm_sq(&ones).abs() < 1e-12);
+    }
+
+    #[test]
+    fn power_gap_matches_jacobi_on_mixing_matrices() {
+        use crate::graph::{mixing_matrix, Graph, MixingRule};
+        let mut rng = Rng::new(9);
+        let graphs = [
+            Graph::ring(8),
+            Graph::ring(9),
+            Graph::chain(7),
+            Graph::star(6),
+            Graph::complete(5),
+            Graph::grid(9),
+            Graph::erdos_renyi(12, 0.4, &mut rng),
+        ];
+        for g in &graphs {
+            for rule in
+                [MixingRule::UniformMaxDegree, MixingRule::Metropolis, MixingRule::LazyMetropolis]
+            {
+                let w = mixing_matrix(g, rule);
+                let spec = Spectrum::of_mixing(&w);
+                let est = power_gap_estimate(
+                    g.n,
+                    |x, y| {
+                        for (i, yi) in y.iter_mut().enumerate() {
+                            *yi = crate::linalg::matrix::vdot(w.row(i), x);
+                        }
+                    },
+                    50_000,
+                    1e-14,
+                    11,
+                );
+                let lam2 = spec.w_eigs[1];
+                let lam_n = *spec.w_eigs.last().unwrap();
+                assert!(
+                    (est.lambda2 - lam2).abs() < 1e-6,
+                    "λ₂ n={} {rule:?}: {} vs {lam2}",
+                    g.n,
+                    est.lambda2
+                );
+                assert!(
+                    (est.lambda_min - lam_n).abs() < 1e-6,
+                    "λ_n n={} {rule:?}: {} vs {lam_n}",
+                    g.n,
+                    est.lambda_min
+                );
+                assert!((est.kappa_g() - spec.kappa_g()).abs() < 1e-4 * spec.kappa_g());
+            }
+        }
+    }
+
+    #[test]
+    fn power_gap_on_ring_is_analytic() {
+        // ring-1/3: eigenvalues (1 + 2cos(2πk/n))/3
+        use crate::graph::{mixing_matrix, Graph, MixingRule};
+        let n = 16;
+        let w = mixing_matrix(&Graph::ring(n), MixingRule::UniformMaxDegree);
+        let est = power_gap_estimate(
+            n,
+            |x, y| {
+                for (i, yi) in y.iter_mut().enumerate() {
+                    *yi = crate::linalg::matrix::vdot(w.row(i), x);
+                }
+            },
+            50_000,
+            1e-14,
+            3,
+        );
+        let lam2 = (1.0 + 2.0 * (2.0 * std::f64::consts::PI / n as f64).cos()) / 3.0;
+        assert!((est.lambda2 - lam2).abs() < 1e-7, "{} vs {lam2}", est.lambda2);
+        assert!((est.lambda_min - (-1.0 / 3.0)).abs() < 1e-7, "{}", est.lambda_min);
     }
 
     #[test]

@@ -1,9 +1,12 @@
-//! Dense linear algebra substrate: the `Mat` type every algorithm's state
-//! lives in, plus a symmetric eigensolver for spectral quantities of the
-//! mixing matrix.
+//! Linear algebra substrate: the dense `Mat` type every algorithm's state
+//! lives in, the CSR `SparseMat` behind O(nnz) gossip, a symmetric
+//! eigensolver, and power-iteration spectral-edge estimation for mixing
+//! operators too large to eigendecompose densely.
 
 pub mod eigen;
 pub mod matrix;
+pub mod sparse;
 
-pub use eigen::{sym_eigen, PinvNorm, Spectrum};
+pub use eigen::{power_gap_estimate, sym_eigen, GapEstimate, PinvNorm, Spectrum};
 pub use matrix::{vaxpy, vdist_sq, vdot, vinf_norm, vnorm, vnorm_sq, vsub, Mat};
+pub use sparse::SparseMat;

@@ -1,0 +1,289 @@
+//! Compressed-sparse-row matrix for O(nnz) gossip.
+//!
+//! The mixing matrices of every topology the paper sweeps (ring-1/3,
+//! chains, grids, Metropolis-weighted Erdős–Rényi) have O(n) nonzeros, so
+//! storing W densely makes every gossip round O(n²p). [`SparseMat`] is the
+//! CSR substrate behind [`crate::graph::mixing::MixingOp`]: `apply_into`
+//! is a row-major SpMM over a preallocated output, O(nnz·p) per round.
+//!
+//! **Exactness contract:** with column indices sorted ascending (guaranteed
+//! by every constructor here), `apply_into` accumulates each output entry
+//! in the *same order* as [`Mat::matmul_into`]'s blocked ikj kernel — for a
+//! fixed output row the dense kernel also walks k ascending and skips
+//! zeros — so sparse and dense products are **bit-identical**, not merely
+//! close. The algorithms rely on this to keep sparse/dense iterate
+//! sequences interchangeable (see `rust/tests/sparse_dense_equiv.rs`).
+
+use super::matrix::Mat;
+
+/// Row-major CSR sparse f64 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseMat {
+    pub rows: usize,
+    pub cols: usize,
+    /// `row_ptr[i]..row_ptr[i+1]` indexes row i's entries (len rows + 1).
+    pub row_ptr: Vec<usize>,
+    /// Column index per entry, ascending within each row.
+    pub col_idx: Vec<usize>,
+    pub vals: Vec<f64>,
+}
+
+impl SparseMat {
+    /// Build from a dense matrix, keeping every nonzero entry plus the
+    /// diagonal (stored even when 0.0, so in-place diagonal shifts like
+    /// (I+W)/2 never need structural inserts).
+    pub fn from_dense(m: &Mat) -> SparseMat {
+        let mut row_ptr = Vec::with_capacity(m.rows + 1);
+        let mut col_idx = Vec::new();
+        let mut vals = Vec::new();
+        row_ptr.push(0);
+        for i in 0..m.rows {
+            for (j, &v) in m.row(i).iter().enumerate() {
+                if v != 0.0 || (j == i && i < m.cols) {
+                    col_idx.push(j);
+                    vals.push(v);
+                }
+            }
+            row_ptr.push(col_idx.len());
+        }
+        SparseMat { rows: m.rows, cols: m.cols, row_ptr, col_idx, vals }
+    }
+
+    /// Build from per-row (column, value) lists. Each row must be sorted by
+    /// column, in-range, and duplicate-free.
+    pub fn from_rows(rows: usize, cols: usize, entries: &[Vec<(usize, f64)>]) -> SparseMat {
+        assert_eq!(entries.len(), rows, "row count mismatch");
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut col_idx = Vec::new();
+        let mut vals = Vec::new();
+        row_ptr.push(0);
+        for row in entries {
+            let mut last: Option<usize> = None;
+            for &(j, v) in row {
+                assert!(j < cols, "column {j} out of range ({cols})");
+                if let Some(l) = last {
+                    assert!(l < j, "columns not strictly ascending");
+                }
+                last = Some(j);
+                col_idx.push(j);
+                vals.push(v);
+            }
+            row_ptr.push(col_idx.len());
+        }
+        SparseMat { rows, cols, row_ptr, col_idx, vals }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Fraction of entries stored: nnz / (rows·cols).
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.rows * self.cols).max(1) as f64
+    }
+
+    /// Entry (i, j), 0.0 when not stored. O(log nnz_row).
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        let (lo, hi) = (self.row_ptr[i], self.row_ptr[i + 1]);
+        match self.col_idx[lo..hi].binary_search(&j) {
+            Ok(k) => self.vals[lo + k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Iterate row i's stored (column, value) pairs, ascending column.
+    pub fn row_iter(&self, i: usize) -> impl Iterator<Item = (usize, f64)> + '_ {
+        let (lo, hi) = (self.row_ptr[i], self.row_ptr[i + 1]);
+        self.col_idx[lo..hi].iter().copied().zip(self.vals[lo..hi].iter().copied())
+    }
+
+    /// out = S · X, row-major SpMM with buffer reuse (no allocation).
+    /// Accumulation order per output entry matches [`Mat::matmul_into`]
+    /// exactly — see the module docs' exactness contract.
+    pub fn apply_into(&self, x: &Mat, out: &mut Mat) {
+        assert_eq!(self.cols, x.rows, "spmm shape mismatch");
+        assert_eq!(out.rows, self.rows);
+        assert_eq!(out.cols, x.cols);
+        let m = x.cols;
+        out.data.iter_mut().for_each(|v| *v = 0.0);
+        for i in 0..self.rows {
+            let out_row = &mut out.data[i * m..(i + 1) * m];
+            for idx in self.row_ptr[i]..self.row_ptr[i + 1] {
+                let a = self.vals[idx];
+                if a == 0.0 {
+                    continue; // mirror the dense kernel's zero skip
+                }
+                let k = self.col_idx[idx];
+                let x_row = &x.data[k * m..(k + 1) * m];
+                for (o, &b) in out_row.iter_mut().zip(x_row) {
+                    *o += a * b;
+                }
+            }
+        }
+    }
+
+    /// Allocating convenience wrapper over [`SparseMat::apply_into`].
+    pub fn apply(&self, x: &Mat) -> Mat {
+        let mut out = Mat::zeros(self.rows, x.cols);
+        self.apply_into(x, &mut out);
+        out
+    }
+
+    /// y = S · x for a single vector (the power-iteration hot loop).
+    pub fn apply_vec(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for (i, yi) in y.iter_mut().enumerate() {
+            let mut acc = 0.0;
+            for idx in self.row_ptr[i]..self.row_ptr[i + 1] {
+                let a = self.vals[idx];
+                if a == 0.0 {
+                    continue;
+                }
+                acc += a * x[self.col_idx[idx]];
+            }
+            *yi = acc;
+        }
+    }
+
+    /// Scale every stored value in place.
+    pub fn scale(&mut self, s: f64) {
+        self.vals.iter_mut().for_each(|v| *v *= s);
+    }
+
+    /// Add `c` to every diagonal entry. The diagonal must be stored (all
+    /// constructors in this crate guarantee it for square matrices).
+    pub fn add_to_diag(&mut self, c: f64) {
+        assert_eq!(self.rows, self.cols, "add_to_diag needs a square matrix");
+        for i in 0..self.rows {
+            let (lo, hi) = (self.row_ptr[i], self.row_ptr[i + 1]);
+            match self.col_idx[lo..hi].binary_search(&i) {
+                Ok(k) => self.vals[lo + k] += c,
+                Err(_) => panic!("diagonal entry ({i},{i}) not stored"),
+            }
+        }
+    }
+
+    /// Materialize back to dense (tests, validation, eigensolves).
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            for (j, v) in self.row_iter(i) {
+                m[(i, j)] = v;
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::qc::assert_prop;
+    use crate::util::rng::Rng;
+
+    /// Random sparse square matrix with ~`fill` density plus full diagonal.
+    fn random_sparse(rng: &mut Rng, n: usize, fill: f64) -> SparseMat {
+        let mut rows = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut row = Vec::new();
+            for j in 0..n {
+                if j == i || rng.bernoulli(fill) {
+                    row.push((j, rng.normal()));
+                }
+            }
+            rows.push(row);
+        }
+        SparseMat::from_rows(n, n, &rows)
+    }
+
+    #[test]
+    fn from_dense_roundtrips() {
+        let mut rng = Rng::new(1);
+        let mut d = Mat::zeros(6, 6);
+        for _ in 0..10 {
+            d[(rng.below(6), rng.below(6))] = rng.normal();
+        }
+        let s = SparseMat::from_dense(&d);
+        assert_eq!(s.to_dense(), d);
+        // diagonal is always stored, even when zero
+        assert!(s.nnz() >= 6);
+        for i in 0..6 {
+            assert!(s.col_idx[s.row_ptr[i]..s.row_ptr[i + 1]].contains(&i));
+        }
+    }
+
+    #[test]
+    fn apply_into_bitwise_matches_dense_matmul() {
+        assert_prop("spmm == blocked matmul (bitwise)", 30, |g| {
+            let mut rng = Rng::new(g.rng.next_u64());
+            let n = g.usize_in(1, 90); // spans the dense kernel's KB=64 block
+            let p = g.usize_in(1, 12);
+            let s = random_sparse(&mut rng, n, 0.15);
+            let d = s.to_dense();
+            let mut x = Mat::zeros(n, p);
+            rng.fill_normal(&mut x.data);
+            let mut dense_out = Mat::zeros(n, p);
+            d.matmul_into(&x, &mut dense_out);
+            let mut sparse_out = Mat::full(n, p, f64::NAN); // must be fully overwritten
+            s.apply_into(&x, &mut sparse_out);
+            for (i, (a, b)) in dense_out.data.iter().zip(&sparse_out.data).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("entry {i}: {a:?} vs {b:?} differ in bits"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn apply_vec_matches_apply() {
+        let mut rng = Rng::new(3);
+        let s = random_sparse(&mut rng, 20, 0.2);
+        let x: Vec<f64> = (0..20).map(|_| rng.normal()).collect();
+        let mut y = vec![0.0; 20];
+        s.apply_vec(&x, &mut y);
+        let xm = Mat::from_vec(20, 1, x);
+        let ym = s.apply(&xm);
+        assert_eq!(y, ym.data);
+    }
+
+    #[test]
+    fn get_and_row_iter_agree() {
+        let mut rng = Rng::new(5);
+        let s = random_sparse(&mut rng, 12, 0.3);
+        for i in 0..12 {
+            for (j, v) in s.row_iter(i) {
+                assert_eq!(s.get(i, j), v);
+            }
+            assert_eq!(s.get(i, (i + 1) % 12), s.to_dense()[(i, (i + 1) % 12)]);
+        }
+    }
+
+    #[test]
+    fn scale_and_diag_shift() {
+        let mut rng = Rng::new(7);
+        let mut s = random_sparse(&mut rng, 8, 0.2);
+        let mut d = s.to_dense();
+        s.scale(0.5);
+        s.add_to_diag(0.5);
+        d.scale(0.5);
+        for i in 0..8 {
+            d[(i, i)] += 0.5;
+        }
+        assert_eq!(s.to_dense(), d);
+    }
+
+    #[test]
+    #[should_panic(expected = "columns not strictly ascending")]
+    fn rejects_unsorted_rows() {
+        let _ = SparseMat::from_rows(1, 3, &[vec![(2, 1.0), (0, 1.0)]]);
+    }
+
+    #[test]
+    fn density_counts_stored_entries() {
+        let s = SparseMat::from_rows(2, 2, &[vec![(0, 1.0)], vec![(1, 1.0)]]);
+        assert_eq!(s.nnz(), 2);
+        assert!((s.density() - 0.5).abs() < 1e-15);
+    }
+}

@@ -13,7 +13,8 @@ use proxlead::algorithm::{solve_reference, suboptimality};
 use proxlead::cli::{self, Invocation, USAGE};
 use proxlead::config::Config;
 use proxlead::coordinator::{self, CoordConfig, Straggler};
-use proxlead::linalg::{Mat, Spectrum};
+use proxlead::graph::MixingOp;
+use proxlead::linalg::Mat;
 use proxlead::problem::{LogReg, Problem};
 use proxlead::prox::Prox;
 use proxlead::runtime::{default_artifact_dir, PjrtRuntime, XlaLogReg};
@@ -76,23 +77,28 @@ fn cmd_train(inv: &Invocation) -> i32 {
     let cfg = &inv.config;
     let problem = build_problem(cfg);
     let graph = cfg.topology().expect("topology");
-    let w = proxlead::graph::mixing_matrix(&graph, cfg.mixing_rule().expect("mixing"));
-    let spec = Spectrum::of_mixing(&w);
+    let w = MixingOp::build(&graph, cfg.mixing_rule().expect("mixing"));
+    // power iteration: O(nnz) per step, fine at any n (no dense eigensolve)
+    let spec = w.gap_estimate();
     let eta = if cfg.eta > 0.0 { cfg.eta } else { 0.5 / problem.smoothness() };
 
     println!(
-        "prox-lead train: {} | {} nodes ({}, {}) | {} | η={eta:.4} α={} γ={}",
+        "prox-lead train: {} | {} nodes ({}, {}, {}) | {} | η={eta:.4} α={} γ={}",
         problem.name(),
         cfg.nodes,
         cfg.topology,
         cfg.mixing,
+        if w.is_sparse() { "csr" } else { "dense" },
         cfg.codec().expect("codec").name(),
         cfg.alpha,
         cfg.gamma,
     );
     println!(
-        "κ_f = {:.1}, κ_g = {:.2}, data = label-{}",
+        "κ_f = {:.1}, κ_g {} {:.2}, data = label-{}",
         problem.smoothness() / problem.strong_convexity(),
+        // ≈ when power iteration exhausted its budget (near-degenerate
+        // spectral edge, e.g. very large rings) — estimate, not exact
+        if spec.converged { "=" } else { "≈" },
         spec.kappa_g(),
         if cfg.shuffled { "shuffled (iid)" } else { "sorted (non-iid)" }
     );
@@ -231,18 +237,23 @@ fn cmd_solve_ref(inv: &Invocation) -> i32 {
 fn cmd_info(inv: &Invocation) -> i32 {
     let cfg = &inv.config;
     let graph = cfg.topology().expect("topology");
-    let w = proxlead::graph::mixing_matrix(&graph, cfg.mixing_rule().expect("mixing"));
-    let spec = Spectrum::of_mixing(&w);
+    let w = MixingOp::build(&graph, cfg.mixing_rule().expect("mixing"));
+    let spec = w.gap_estimate();
     println!("prox-lead {}", proxlead::version());
     println!(
-        "network: {} n={} edges={} | λ2(W)={:.4} λn(W)={:.4} κ_g={:.3} gap={:.4}",
+        "network: {} n={} edges={} nnz={} ({}) | λ2(W){eq}{:.4} λn(W){eq}{:.4} \
+         κ_g{eq}{:.3} gap{eq}{:.4}",
         cfg.topology,
         cfg.nodes,
         graph.num_edges(),
-        spec.w_eigs.get(1).copied().unwrap_or(f64::NAN),
-        spec.w_eigs.last().copied().unwrap_or(f64::NAN),
+        w.nnz(),
+        if w.is_sparse() { "csr" } else { "dense" },
+        spec.lambda2,
+        spec.lambda_min,
         spec.kappa_g(),
         spec.spectral_gap(),
+        // ≈ when the power iteration exhausted its budget (see GapEstimate)
+        eq = if spec.converged { "=" } else { "≈" },
     );
     let problem = LogReg::new(
         proxlead::problem::data::blobs(&cfg.blob_spec()),

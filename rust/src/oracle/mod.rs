@@ -95,7 +95,13 @@ impl Sgo {
         Sgo::build(kind, problem, &x0m, seed, Some(node))
     }
 
-    fn build(kind: OracleKind, problem: &dyn Problem, x0: &Mat, seed: u64, only: Option<usize>) -> Sgo {
+    fn build(
+        kind: OracleKind,
+        problem: &dyn Problem,
+        x0: &Mat,
+        seed: u64,
+        only: Option<usize>,
+    ) -> Sgo {
         let m = problem.num_batches();
         let dim = problem.dim();
         assert_eq!(x0.cols, dim);

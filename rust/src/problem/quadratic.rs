@@ -43,7 +43,8 @@ impl LeastSquares {
                 let rows: Vec<Vec<f64>> =
                     (b * bs..(b + 1) * bs).map(|r| s.features.row(r).to_vec()).collect();
                 let ab = Mat::from_rows(&rows);
-                l_data = l_data.max(spectral_norm_sq(&ab, 60, 77 + (i * batches + b) as u64) / bs as f64);
+                let sn = spectral_norm_sq(&ab, 60, 77 + (i * batches + b) as u64);
+                l_data = l_data.max(sn / bs as f64);
             }
         }
         // μ: strong convexity from the regularizer alone (a valid lower

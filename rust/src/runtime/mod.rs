@@ -136,7 +136,9 @@ mod pjrt {
             let exe = inner
                 .execs
                 .get(name)
-                .ok_or_else(|| RtError(format!("no artifact '{name}' in {}", inner.dir.display())))?;
+                .ok_or_else(|| {
+                    RtError(format!("no artifact '{name}' in {}", inner.dir.display()))
+                })?;
             let literals: Vec<xla::Literal> = args
                 .iter()
                 .map(|(data, dims)| {
@@ -199,7 +201,13 @@ mod pjrt {
             self.manifest.clone()
         }
 
-        pub fn find(&self, _fn_name: &str, _m: usize, _d: usize, _c: usize) -> Option<ArtifactMeta> {
+        pub fn find(
+            &self,
+            _fn_name: &str,
+            _m: usize,
+            _d: usize,
+            _c: usize,
+        ) -> Option<ArtifactMeta> {
             None
         }
 

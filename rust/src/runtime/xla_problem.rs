@@ -179,7 +179,8 @@ mod tests {
             p.grad(node, &x, &mut xg);
             p.native().grad(node, &x, &mut ng);
             for (i, (&a, &b)) in xg.iter().zip(&ng).enumerate() {
-                assert!((a - b).abs() < 1e-5 * (1.0 + b.abs()), "node {node} grad[{i}]: {a} vs {b}");
+                let tol = 1e-5 * (1.0 + b.abs());
+                assert!((a - b).abs() < tol, "node {node} grad[{i}]: {a} vs {b}");
             }
         }
     }
@@ -202,13 +203,13 @@ mod tests {
     fn prox_lead_runs_on_xla_backend() {
         use crate::algorithm::{Algorithm, Hyper, ProxLead};
         use crate::compress::InfNormQuantizer;
-        use crate::graph::{mixing_matrix, Graph, MixingRule};
+        use crate::graph::{Graph, MixingOp, MixingRule};
         use crate::linalg::Mat;
         use crate::oracle::OracleKind;
         use crate::prox::L1;
         let Some(p) = setup() else { return };
         let g = Graph::ring(3);
-        let w = mixing_matrix(&g, MixingRule::Metropolis);
+        let w = MixingOp::build(&g, MixingRule::Metropolis);
         let x0 = Mat::zeros(3, p.dim());
         let mut alg = ProxLead::new(
             &p,

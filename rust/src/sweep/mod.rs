@@ -29,7 +29,7 @@ use crate::algorithm::{
 };
 use crate::config::{Config, ConfigError};
 use crate::engine::{self, RunConfig, RunResult};
-use crate::graph::mixing_matrix;
+use crate::graph::MixingOp;
 use crate::linalg::Mat;
 use crate::problem::{data::blobs, LogReg, Problem};
 use crate::prox::Zero;
@@ -131,7 +131,7 @@ pub fn validate_cell(cfg: &Config) -> Result<(), ConfigError> {
 pub fn build_algorithm(
     cfg: &Config,
     problem: &dyn Problem,
-    w: &Mat,
+    w: &MixingOp,
     x0: &Mat,
     eta: f64,
     seed: u64,
@@ -225,7 +225,8 @@ fn run_cell_cached(cell: &Cell, target_subopt: Option<f64>, cache: &RefCache) ->
     let cfg = &cell.config;
     let problem = build_problem(cfg);
     let graph = cfg.topology().expect("validated topology");
-    let w = mixing_matrix(&graph, cfg.mixing_rule().expect("validated mixing"));
+    // auto-selects CSR on sparse graphs, so a `nodes` axis scales O(nnz)
+    let w = MixingOp::build(&graph, cfg.mixing_rule().expect("validated mixing"));
     let x_star = cache.get_or_solve(cfg, &problem);
     let eta = cell_eta(cfg, &problem);
     let seed = cell_seed(cfg.seed, cell.index);
@@ -496,7 +497,7 @@ mod tests {
         let cfg = tiny_base();
         let problem = build_problem(&cfg);
         let graph = cfg.topology().unwrap();
-        let w = mixing_matrix(&graph, cfg.mixing_rule().unwrap());
+        let w = MixingOp::build(&graph, cfg.mixing_rule().unwrap());
         let x0 = Mat::zeros(cfg.nodes, problem.dim());
         let eta = cell_eta(&cfg, &problem);
         for name in [
@@ -543,6 +544,33 @@ mod tests {
         // wall-clock and thread count must NOT leak into the aggregate
         assert!(!text.contains("wall"));
         assert!(!text.contains("threads"));
+    }
+
+    #[test]
+    fn nodes_axis_sweeps_topology_scale() {
+        // the `nodes` axis resolves per cell: graph, problem, and x0 all
+        // track the cell's node count (ring 4 stays dense, ring 32 CSR)
+        let mut base = tiny_base();
+        base.rounds = 10;
+        base.record_every = 10;
+        let spec = SweepSpec::new(base).axis("nodes", &["4", "32"]).threads(2);
+        let res = run_sweep(&spec, |_| {}).unwrap();
+        assert_eq!(res.cells.len(), 2);
+        for (c, nodes) in res.cells.iter().zip([4usize, 32]) {
+            assert!(c.final_subopt().is_finite(), "nodes={nodes}");
+            assert_eq!(c.result.final_x.rows, nodes);
+        }
+    }
+
+    #[test]
+    fn grid_topology_rejects_non_square_nodes_as_config_error() {
+        let mut cfg = tiny_base();
+        cfg.topology = "grid".into();
+        cfg.nodes = 8;
+        let err = validate_cell(&cfg).unwrap_err();
+        assert!(err.0.contains("perfect square"), "{}", err.0);
+        cfg.nodes = 9;
+        assert!(validate_cell(&cfg).is_ok());
     }
 
     #[test]

@@ -14,7 +14,7 @@ use std::time::Duration;
 
 /// Build the (problem, W, x0) trio straight from a Config — the same path
 /// `proxlead train` takes.
-fn from_config(text: &str) -> (Config, LogReg, Mat, Mat) {
+fn from_config(text: &str) -> (Config, LogReg, proxlead::graph::MixingOp, Mat) {
     let cfg = Config::parse(text).expect("config");
     let p = LogReg::new(
         proxlead::problem::data::blobs(&cfg.blob_spec()),
@@ -23,7 +23,7 @@ fn from_config(text: &str) -> (Config, LogReg, Mat, Mat) {
         cfg.batches,
     );
     let g = cfg.topology().expect("topology");
-    let w = proxlead::graph::mixing_matrix(&g, cfg.mixing_rule().expect("mixing"));
+    let w = proxlead::graph::MixingOp::build(&g, cfg.mixing_rule().expect("mixing"));
     let x0 = Mat::zeros(cfg.nodes, p.dim());
     (cfg, p, w, x0)
 }
@@ -110,7 +110,7 @@ fn coordinator_runs_on_pjrt_backend() {
     let rt = Arc::new(PjrtRuntime::load(&dir).unwrap());
     let p = Arc::new(XlaLogReg::new(native, rt).unwrap());
     let g = proxlead::graph::Graph::ring(4);
-    let w = proxlead::graph::mixing_matrix(&g, proxlead::graph::MixingRule::UniformMaxDegree);
+    let w = proxlead::graph::MixingOp::build(&g, proxlead::graph::MixingRule::UniformMaxDegree);
     let x_star = solve_reference(p.as_ref(), 5e-3, 60_000, 1e-12);
     let x0 = Mat::zeros(4, p.dim());
     let mut cfg = CoordConfig::new(600, 0.5 / p.smoothness(), WireCodec::Quant(2, 256));
@@ -144,7 +144,7 @@ fn theorem7_schedule_through_engine() {
         "nodes = 4\nsamples_per_node = 24\ndim = 5\nclasses = 3\nbatches = 4\nlambda2 = 0.1\nseparation = 1.0\n",
     );
     let x_star = solve_reference(&p, 0.0, 40_000, 1e-13);
-    let spec = Spectrum::of_mixing(&w);
+    let spec = Spectrum::of_mixing(&w.to_dense());
     let schedule = Schedule::Theorem7 {
         c: 0.2,
         l: p.smoothness(),

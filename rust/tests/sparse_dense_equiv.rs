@@ -1,0 +1,161 @@
+//! The sparse mixing-operator pipeline's acceptance contract: gossiping
+//! through the CSR representation produces the **bit-identical** iterate
+//! sequence as the dense matrix path — same summation order in the SpMM
+//! kernel (see `linalg::sparse`), same compressed bits, same RNG draws —
+//! so switching representations is purely a performance decision.
+
+use proxlead::algorithm::{Algorithm, Hyper, ProxLead};
+use proxlead::compress::InfNormQuantizer;
+use proxlead::graph::{Graph, MixingOp, MixingRule, Topology};
+use proxlead::linalg::Mat;
+use proxlead::oracle::OracleKind;
+use proxlead::problem::data::{blobs, BlobSpec};
+use proxlead::problem::{LogReg, Problem};
+use proxlead::prox::L1;
+use proxlead::util::rng::Rng;
+
+fn ring32_logreg() -> LogReg {
+    let spec = BlobSpec {
+        nodes: 32,
+        samples_per_node: 12,
+        dim: 6,
+        classes: 3,
+        separation: 1.0,
+        seed: 41,
+        ..Default::default()
+    };
+    LogReg::new(blobs(&spec), 3, 0.1, 4)
+}
+
+fn prox_lead_2bit(p: &LogReg, w: &MixingOp, x0: &Mat) -> ProxLead {
+    ProxLead::new(
+        p,
+        w,
+        x0,
+        Hyper::paper_default(0.5 / p.smoothness()),
+        OracleKind::Full,
+        Box::new(InfNormQuantizer::new(2, 256)),
+        Box::new(L1::new(5e-3)),
+        7,
+    )
+}
+
+/// The acceptance criterion: ring n=32, Prox-LEAD 2-bit, 200 rounds —
+/// dense and sparse paths produce bit-identical iterate sequences.
+#[test]
+fn prox_lead_2bit_ring32_bit_identical_over_200_rounds() {
+    let p = ring32_logreg();
+    let g = Graph::ring(32);
+    let dense = MixingOp::dense_from(&g, MixingRule::UniformMaxDegree);
+    let sparse = MixingOp::sparse_from(&g, MixingRule::UniformMaxDegree);
+    assert!(!dense.is_sparse() && sparse.is_sparse());
+    // and the auto-selector picks CSR at this density (96/1024)
+    assert!(MixingOp::build(&g, MixingRule::UniformMaxDegree).is_sparse());
+
+    let x0 = Mat::zeros(32, p.dim());
+    let mut alg_d = prox_lead_2bit(&p, &dense, &x0);
+    let mut alg_s = prox_lead_2bit(&p, &sparse, &x0);
+    for round in 0..200 {
+        let sd = alg_d.step(&p);
+        let ss = alg_s.step(&p);
+        assert_eq!(sd.bits, ss.bits, "round {round}: wire bits diverged");
+        let (xd, xs) = (alg_d.x(), alg_s.x());
+        for (i, (a, b)) in xd.data.iter().zip(&xs.data).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "round {round}, entry {i}: {a:?} (dense) vs {b:?} (sparse)"
+            );
+        }
+        // the compression states must stay in lockstep too (H drives Q)
+        for (a, b) in alg_d.h().data.iter().zip(&alg_s.h().data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+    assert!(alg_d.bits() > 0);
+    // sanity: the run made optimization progress (not a frozen fixture)
+    assert!(alg_d.x().is_finite());
+    assert!(alg_d.x().norm_sq() > 0.0);
+}
+
+/// Same contract across every stepping algorithm the sweep registry knows,
+/// on a sparse-eligible ER graph (each algorithm mixes differently: W,
+/// W̃ = (I+W)/2, W − I — all three derived operators must agree).
+#[test]
+fn all_algorithms_bit_identical_on_er_graph() {
+    use proxlead::config::Config;
+    use proxlead::sweep::{build_algorithm, cell_eta};
+    let cfg = Config::parse(
+        "nodes = 24\nsamples_per_node = 12\ndim = 6\nclasses = 3\nbatches = 4\n\
+         lambda1 = 0.005\nlambda2 = 0.1\ntopology = er\nconnectivity = 0.3\nmixing = metropolis\n",
+    )
+    .expect("config");
+    let p = proxlead::sweep::build_problem(&cfg);
+    let g = cfg.topology().expect("er graph");
+    let dense = MixingOp::dense_from(&g, cfg.mixing_rule().unwrap());
+    let sparse = MixingOp::sparse_from(&g, cfg.mixing_rule().unwrap());
+    let x0 = Mat::zeros(cfg.nodes, p.dim());
+    let eta = cell_eta(&cfg, &p);
+    for name in ["prox-lead", "lead", "dgd", "choco", "nids", "p2d2", "pg-extra", "pdgm", "dualgd"]
+    {
+        let mut c = cfg.clone();
+        c.algorithm = name.into();
+        if name == "choco" {
+            c.gamma = 0.2;
+        }
+        let mut alg_d = build_algorithm(&c, &p, &dense, &x0, eta, 3).unwrap();
+        let mut alg_s = build_algorithm(&c, &p, &sparse, &x0, eta, 3).unwrap();
+        for round in 0..25 {
+            alg_d.step(&p);
+            alg_s.step(&p);
+            for (a, b) in alg_d.x().data.iter().zip(&alg_s.x().data) {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{name} diverged at round {round}"
+                );
+            }
+        }
+    }
+}
+
+/// Topology × rule sweep of the equivalence at engine granularity: a short
+/// quantized run per combination, final iterates compared bitwise.
+#[test]
+fn equivalence_holds_across_topologies_and_rules() {
+    let p = ring32_logreg();
+    let x0 = Mat::zeros(32, p.dim());
+    let mut rng = Rng::new(17);
+    for kind in [Topology::Ring, Topology::Chain, Topology::Grid, Topology::ErdosRenyi] {
+        let n = 32; // 32 is not a perfect square; grid gets 25 below
+        let g = match kind {
+            Topology::Grid => Graph::grid(25),
+            _ => Graph::build(kind, n, &mut rng),
+        };
+        let nodes = g.n;
+        let spec = BlobSpec {
+            nodes,
+            samples_per_node: 12,
+            dim: 6,
+            classes: 3,
+            separation: 1.0,
+            seed: 41,
+            ..Default::default()
+        };
+        let prob = LogReg::new(blobs(&spec), 3, 0.1, 4);
+        let x0k = if nodes == 32 { x0.clone() } else { Mat::zeros(nodes, prob.dim()) };
+        for rule in
+            [MixingRule::UniformMaxDegree, MixingRule::Metropolis, MixingRule::LazyMetropolis]
+        {
+            let mut alg_d = prox_lead_2bit(&prob, &MixingOp::dense_from(&g, rule), &x0k);
+            let mut alg_s = prox_lead_2bit(&prob, &MixingOp::sparse_from(&g, rule), &x0k);
+            for _ in 0..40 {
+                alg_d.step(&prob);
+                alg_s.step(&prob);
+            }
+            for (a, b) in alg_d.x().data.iter().zip(&alg_s.x().data) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{kind:?}/{rule:?} diverged");
+            }
+        }
+    }
+}

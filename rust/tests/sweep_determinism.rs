@@ -10,7 +10,7 @@
 use proxlead::algorithm::solve_reference;
 use proxlead::config::Config;
 use proxlead::engine::{run, RunConfig};
-use proxlead::graph::mixing_matrix;
+use proxlead::graph::MixingOp;
 use proxlead::linalg::Mat;
 use proxlead::problem::Problem;
 use proxlead::sweep::{
@@ -84,7 +84,7 @@ fn sweep_cell_matches_serial_engine_run() {
     // hand-rolled serial path through engine::run, from the same config
     let cfg = &cells[0].config;
     let problem = build_problem(cfg);
-    let w = mixing_matrix(&cfg.topology().unwrap(), cfg.mixing_rule().unwrap());
+    let w = MixingOp::build(&cfg.topology().unwrap(), cfg.mixing_rule().unwrap());
     let x_star = solve_reference(&problem, cfg.lambda1, REF_MAX_ITER, REF_TOL);
     let x0 = Mat::zeros(cfg.nodes, problem.dim());
     let eta = cell_eta(cfg, &problem);

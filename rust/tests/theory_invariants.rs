@@ -4,15 +4,15 @@
 
 use proxlead::algorithm::{solve_reference, suboptimality, Algorithm, Hyper, ProxLead};
 use proxlead::compress::InfNormQuantizer;
-use proxlead::graph::{mixing_matrix, Graph, MixingRule, Topology};
-use proxlead::linalg::{Mat, Spectrum};
+use proxlead::graph::{Graph, MixingOp, MixingRule, Topology};
+use proxlead::linalg::Mat;
 use proxlead::oracle::OracleKind;
 use proxlead::problem::data::{blobs, BlobSpec, Partition};
 use proxlead::problem::{LogReg, Problem};
 use proxlead::prox::{GroupLasso, Prox, Zero, L1};
 use proxlead::util::rng::Rng;
 
-fn fixture(nodes: usize, seed: u64) -> (LogReg, Mat) {
+fn fixture(nodes: usize, seed: u64) -> (LogReg, MixingOp) {
     let spec = BlobSpec {
         nodes,
         samples_per_node: 24,
@@ -24,7 +24,7 @@ fn fixture(nodes: usize, seed: u64) -> (LogReg, Mat) {
     };
     let p = LogReg::new(blobs(&spec), 3, 0.1, 4);
     let g = Graph::ring(nodes);
-    let w = mixing_matrix(&g, MixingRule::UniformMaxDegree);
+    let w = MixingOp::build(&g, MixingRule::UniformMaxDegree);
     (p, w)
 }
 
@@ -100,9 +100,8 @@ fn same_fixed_point_across_topologies() {
         [Topology::Ring, Topology::Chain, Topology::Star, Topology::Complete, Topology::ErdosRenyi]
     {
         let g = Graph::build(topo, 6, &mut Rng::new(5));
-        let w = mixing_matrix(&g, MixingRule::Metropolis);
-        let spec = Spectrum::of_mixing(&w);
-        assert!(spec.kappa_g().is_finite());
+        let w = MixingOp::build(&g, MixingRule::Metropolis);
+        assert!(w.gap_estimate().kappa_g().is_finite());
         let mut alg = ProxLead::new(
             &p,
             &w,
@@ -139,7 +138,7 @@ fn heterogeneity_does_not_break_convergence() {
         };
         let p = LogReg::new(blobs(&spec), 3, 0.1, 4);
         let g = Graph::ring(4);
-        let w = mixing_matrix(&g, MixingRule::UniformMaxDegree);
+        let w = MixingOp::build(&g, MixingRule::UniformMaxDegree);
         let x_star = solve_reference(&p, 0.0, 40_000, 1e-13);
         let x0 = Mat::zeros(4, p.dim());
         let mut alg = ProxLead::new(
