@@ -1,68 +1,62 @@
 #![allow(dead_code)] // each bench binary uses a subset of these helpers
 
 //! Shared fixtures for the figure/table benches: the §5 workload at bench
-//! scale, plus CSV output plumbing (`bench_out/*.csv` holds the series the
-//! paper's figures plot).
+//! scale resolved through the Experiment API, plus CSV output plumbing
+//! (`bench_out/*.csv` holds the series the paper's figures plot).
 
 use proxlead::algorithm::solve_reference;
-use proxlead::graph::{Graph, MixingOp, MixingRule};
-use proxlead::linalg::Mat;
-use proxlead::problem::data::BlobSpec;
-use proxlead::problem::{LogReg, Problem};
+use proxlead::exp::Experiment;
+use proxlead::problem::Problem;
 
-/// The §5 analog: 8-node ring, 1/3 mixing, label-sorted 10-class blobs,
-/// 15 minibatches per node (see DESIGN.md §4 for the MNIST substitution).
+/// The §5 analog resolved once: 8-node ring, 1/3 mixing, label-sorted
+/// 10-class blobs, 15 minibatches per node (see DESIGN.md §4 for the
+/// MNIST substitution). Access the problem / mixing / x0 / auto-η through
+/// `exp` — there is no second resolution path.
 pub struct Fixture {
-    pub problem: LogReg,
-    pub w: MixingOp,
-    pub x0: Mat,
-    pub eta: f64,
+    pub exp: Experiment,
 }
 
 impl Fixture {
     pub fn section5(lambda2: f64) -> Fixture {
-        let spec = BlobSpec {
-            nodes: 8,
-            samples_per_node: 120,
-            dim: 32,
-            classes: 10,
-            separation: 1.0,
-            ..Default::default()
-        };
-        let problem = LogReg::from_blobs(&spec, lambda2, 15);
-        let g = Graph::ring(8);
-        let w = MixingOp::build(&g, MixingRule::UniformMaxDegree);
-        let x0 = Mat::zeros(8, problem.dim());
-        let eta = 0.5 / problem.smoothness();
-        Fixture { problem, w, x0, eta }
+        let exp = Experiment::builder()
+            .nodes(8)
+            .set("samples_per_node", "120")
+            .set("dim", "32")
+            .set("classes", "10")
+            .set("batches", "15")
+            .set("separation", "1.0")
+            .set("lambda1", "5e-3")
+            .lambda2(lambda2)
+            .bits(2)
+            .build()
+            .expect("section5 fixture");
+        Fixture { exp }
     }
 
     /// Smaller suite for the Table 3 cross-algorithm comparison (the
     /// DualGD rows pay an inner solve per round).
     pub fn table3() -> Fixture {
-        let spec = BlobSpec {
-            nodes: 8,
-            samples_per_node: 60,
-            dim: 16,
-            classes: 5,
-            separation: 1.0,
-            ..Default::default()
-        };
-        let problem = LogReg::from_blobs(&spec, 0.05, 15);
-        let g = Graph::ring(8);
-        let w = MixingOp::build(&g, MixingRule::UniformMaxDegree);
-        let x0 = Mat::zeros(8, problem.dim());
-        let eta = 0.5 / problem.smoothness();
-        Fixture { problem, w, x0, eta }
+        let exp = Experiment::builder()
+            .nodes(8)
+            .set("samples_per_node", "60")
+            .set("dim", "16")
+            .set("classes", "5")
+            .set("batches", "15")
+            .set("separation", "1.0")
+            .lambda2(0.05)
+            .bits(2)
+            .build()
+            .expect("table3 fixture");
+        Fixture { exp }
     }
 
     pub fn reference(&self, lambda1: f64) -> Vec<f64> {
-        solve_reference(&self.problem, lambda1, 80_000, 1e-12)
+        solve_reference(self.exp.problem.as_ref(), lambda1, 80_000, 1e-12)
     }
 
     /// Batch-gradient evaluations per epoch (n·m) — Fig 1's x-axis unit.
     pub fn evals_per_epoch(&self) -> u64 {
-        (self.problem.num_nodes() * self.problem.num_batches()) as u64
+        (self.exp.problem.num_nodes() * self.exp.problem.num_batches()) as u64
     }
 }
 

@@ -21,8 +21,7 @@ use proxlead::config::Config;
 use proxlead::engine::XAxis;
 use proxlead::problem::Problem;
 use proxlead::sweep::{
-    build_problem, run_sweep_verbose, run_sweep_verbose_with_cache, CellOutcome, RefCache,
-    SweepSpec,
+    run_sweep_verbose, run_sweep_verbose_with_cache, CellOutcome, RefCache, SweepSpec,
 };
 use proxlead::util::bench::{CsvSeries, Table};
 use proxlead::util::stats::loglinear_slope;
@@ -103,7 +102,10 @@ fn main() {
     // LEAD × {sgd, lsvrg, saga} × {32, 2}bit as a cartesian grid, plus the
     // Choco-SGD / LessBit comparators as explicit variants (their own
     // stepsize constants), all at η = 1/(6L)
-    let eta_s = 1.0 / (6.0 * build_problem(&base_cfg(1, 1, 0.0)).smoothness());
+    let eta_s = {
+        let problem = proxlead::exp::build_problem(&base_cfg(1, 1, 0.0)).expect("fig1 problem");
+        1.0 / (6.0 * problem.smoothness())
+    };
     let base_s = base_cfg(15_000, 60, eta_s);
     let lead_spec = SweepSpec::new(base_s.clone())
         .variant(&[("algorithm", "lead")])

@@ -20,7 +20,7 @@ use common::{out_dir, thin};
 use proxlead::config::Config;
 use proxlead::engine::XAxis;
 use proxlead::problem::Problem;
-use proxlead::sweep::{build_problem, run_sweep_verbose, SweepSpec};
+use proxlead::sweep::{run_sweep_verbose, SweepSpec};
 use proxlead::util::bench::{CsvSeries, Table};
 
 const LAMBDA1: f64 = 5e-3;
@@ -74,7 +74,10 @@ fn main() {
     csv_b.write(out_dir().join("fig2b.csv").to_str().unwrap()).unwrap();
 
     // ---------------- (c)/(d): stochastic --------------------------------
-    let eta_s = 1.0 / (6.0 * build_problem(&base_cfg(1, 1, 0.0)).smoothness());
+    let eta_s = {
+        let problem = proxlead::exp::build_problem(&base_cfg(1, 1, 0.0)).expect("fig2 problem");
+        1.0 / (6.0 * problem.smoothness())
+    };
     let spec = SweepSpec::new(base_cfg(15_000, 60, eta_s))
         .variant(&[("algorithm", "prox-lead")])
         .axis("oracle", &["sgd", "lsvrg", "saga"])

@@ -17,7 +17,7 @@
 mod common;
 
 use common::{out_dir, Fixture};
-use proxlead::algorithm::{Algorithm, CommState, Hyper, ProxLead};
+use proxlead::algorithm::{Algorithm, CommState, ProxLead};
 use proxlead::compress::bits::{decode_inf_quantized, encode_inf_quantized};
 use proxlead::compress::{Compressor, InfNormQuantizer};
 use proxlead::coordinator::{self, CoordConfig, WireCodec};
@@ -25,7 +25,7 @@ use proxlead::linalg::Mat;
 use proxlead::oracle::OracleKind;
 use proxlead::problem::data::{blobs, BlobSpec};
 use proxlead::problem::{LogReg, Problem};
-use proxlead::prox::{Zero, L1};
+use proxlead::prox::Zero;
 use proxlead::sweep::{run_sweep, SweepSpec};
 use proxlead::util::bench::{smoke_mode, BenchReport, BenchSet};
 use proxlead::util::rng::Rng;
@@ -76,8 +76,10 @@ fn main() {
     report.add(&set);
 
     // ---------- L3: COMM round + Prox-LEAD step --------------------------
+    // the §5 fixture resolved once through the Experiment pipeline
     let fx = Fixture::section5(0.05);
-    let (p, w, x0) = (&fx.problem, &fx.w, &fx.x0);
+    let exp = &fx.exp;
+    let (p, w, x0) = (exp.problem.as_ref(), &exp.mixing, &exp.x0);
     let dim = p.dim();
     let (w0, n0) = reps(5, 50);
     let mut set =
@@ -91,27 +93,10 @@ fn main() {
         set.run("COMM round (compress+mix, 8 rows)", || comm.comm(&z, w, &q, &mut crng));
     }
     {
-        let mut alg = ProxLead::new(
-            p,
-            w,
-            x0,
-            Hyper::paper_default(fx.eta),
-            OracleKind::Full,
-            Box::new(InfNormQuantizer::new(2, 256)),
-            Box::new(L1::new(5e-3)),
-            5,
-        );
+        // compressor (2-bit, 256) and prox (ℓ1 5e-3) come from the config
+        let mut alg = ProxLead::builder(exp).seed(5).build();
         set.run("matrix step, full grad + 2bit + prox", || alg.step(p));
-        let mut alg = ProxLead::new(
-            p,
-            w,
-            x0,
-            Hyper::paper_default(fx.eta),
-            OracleKind::Saga,
-            Box::new(InfNormQuantizer::new(2, 256)),
-            Box::new(L1::new(5e-3)),
-            5,
-        );
+        let mut alg = ProxLead::builder(exp).oracle(OracleKind::Saga).seed(5).build();
         set.run("matrix step, SAGA + 2bit + prox", || alg.step(p));
     }
     report.add(&set);
@@ -120,27 +105,15 @@ fn main() {
     let (w0, n0) = reps(1, 5);
     let mut set = BenchSet::new("coordinator (8 node threads, wire frames)").with_reps(w0, n0);
     set.header();
-    let p_arc: Arc<dyn Problem> = Arc::new(LogReg::from_blobs(
-        &BlobSpec {
-            nodes: 8,
-            samples_per_node: 120,
-            dim: 32,
-            classes: 10,
-            separation: 1.0,
-            ..Default::default()
-        },
-        0.05,
-        15,
-    ));
     let coord_rounds = if smoke { 10 } else { 100 };
     set.run_throughput(
         &format!("{coord_rounds} rounds end-to-end (spawn+run+join)"),
         coord_rounds as f64,
         "round",
         || {
-            let mut cfg = CoordConfig::new(coord_rounds, fx.eta, WireCodec::Quant(2, 256));
+            let mut cfg = CoordConfig::new(coord_rounds, exp.hyper.eta, WireCodec::Quant(2, 256));
             cfg.record_every = coord_rounds;
-            coordinator::run(Arc::clone(&p_arc), w, x0, Arc::new(Zero), &cfg)
+            coordinator::run(Arc::clone(&exp.problem), w, x0, Arc::new(Zero), &cfg)
         },
     );
     report.add(&set);

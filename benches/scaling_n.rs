@@ -20,14 +20,10 @@
 mod common;
 
 use common::out_dir;
-use proxlead::algorithm::{Algorithm, Hyper, ProxLead};
-use proxlead::compress::InfNormQuantizer;
+use proxlead::algorithm::{Algorithm, ProxLead};
+use proxlead::exp::Experiment;
 use proxlead::graph::{Graph, MixingOp, MixingRule, Topology};
 use proxlead::linalg::{Mat, Spectrum};
-use proxlead::oracle::OracleKind;
-use proxlead::problem::data::{blobs, BlobSpec};
-use proxlead::problem::{LogReg, Problem};
-use proxlead::prox::L1;
 use proxlead::util::bench::{smoke_mode, BenchReport, BenchSet};
 use proxlead::util::rng::Rng;
 
@@ -120,34 +116,28 @@ fn main() {
         let title = format!("Prox-LEAD round at n = {n} (ring, 2-bit)");
         let mut set = BenchSet::new(&title).with_reps(warm, reps);
         set.header();
-        let spec = BlobSpec {
-            nodes: n,
-            samples_per_node: 8,
-            dim: 8,
-            classes: 4,
-            separation: 1.0,
-            ..Default::default()
-        };
-        let problem = LogReg::new(blobs(&spec), 4, 0.05, 4);
-        let g = Graph::ring(n);
-        let x0 = Mat::zeros(n, problem.dim());
-        let hyper = Hyper::paper_default(0.5 / problem.smoothness());
+        // resolved once through the Experiment pipeline (auto-η = 1/(2L),
+        // 2-bit ∞-norm compressor, ℓ1 prox from the config)
+        let base = Experiment::builder()
+            .nodes(n)
+            .set("samples_per_node", "8")
+            .set("dim", "8")
+            .set("classes", "4")
+            .set("batches", "4")
+            .set("separation", "1.0")
+            .set("lambda1", "5e-3")
+            .lambda2(0.05)
+            .bits(2)
+            .build()
+            .expect("scaling_n experiment");
         for (label, w) in [
-            ("dense gossip", MixingOp::dense_from(&g, MixingRule::UniformMaxDegree)),
-            ("sparse gossip", MixingOp::sparse_from(&g, MixingRule::UniformMaxDegree)),
+            ("dense gossip", MixingOp::dense_from(&base.graph, MixingRule::UniformMaxDegree)),
+            ("sparse gossip", MixingOp::sparse_from(&base.graph, MixingRule::UniformMaxDegree)),
         ] {
-            let mut alg = ProxLead::new(
-                &problem,
-                &w,
-                &x0,
-                hyper,
-                OracleKind::Full,
-                Box::new(InfNormQuantizer::new(2, 256)),
-                Box::new(L1::new(5e-3)),
-                5,
-            );
+            let exp = base.clone().with_mixing(w);
+            let mut alg = ProxLead::builder(&exp).seed(5).build();
             set.run_throughput(&format!("matrix step, {label}"), 1.0, "round", || {
-                alg.step(&problem)
+                alg.step(exp.problem.as_ref())
             });
         }
         report.add(&set);

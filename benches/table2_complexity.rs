@@ -22,7 +22,7 @@ use common::out_dir;
 use proxlead::config::Config;
 use proxlead::linalg::Spectrum;
 use proxlead::problem::Problem;
-use proxlead::sweep::{build_problem, run_sweep_verbose, SweepResult, SweepSpec};
+use proxlead::sweep::{run_sweep_verbose, SweepResult, SweepSpec};
 use proxlead::util::bench::Table;
 
 const LAMBDA1: f64 = 5e-3;
@@ -45,6 +45,11 @@ fn iters(res: &SweepResult, i: usize) -> usize {
     res.cells[i].result.rounds_to_target.unwrap_or(BUDGET)
 }
 
+/// κ_f of a cell's problem (rebuilt through the problem registry).
+fn kappa_f_of(cfg: &Config) -> f64 {
+    proxlead::exp::build_problem(cfg).expect("table2 problem").kappa_f()
+}
+
 /// κ_g of a cell's network (recomputed from its config for the report).
 fn kappa_g_of(cfg: &Config) -> f64 {
     let w = proxlead::graph::mixing_matrix(
@@ -63,7 +68,7 @@ fn main() {
         .until(TARGET);
     println!("table2 (i): {} cells on {} threads", spec.num_cells(), spec.threads);
     let res = run_sweep_verbose(&spec).expect("table2(i) sweep");
-    let kf = build_problem(&res.spec.base).kappa_f();
+    let kf = kappa_f_of(&res.spec.base);
     let kg = kappa_g_of(&res.spec.base);
     let mut t = Table::new(
         "Table 2(i) — iterations to 1e-9 vs compression bits (Thm 5 row)",
@@ -108,7 +113,7 @@ fn main() {
     for (i, cell) in res.cells.iter().enumerate() {
         let cfg = res.spec.cell_config(cell.index).expect("cell config");
         let kg = kappa_g_of(&cfg);
-        let kf = build_problem(&cfg).kappa_f();
+        let kf = kappa_f_of(&cfg);
         let name = format!("{} n={}", cfg.topology, cfg.nodes);
         let it = iters(&res, i);
         t.row(vec![name.clone(), format!("{kg:.2}"), format!("{it}")]);
@@ -129,7 +134,7 @@ fn main() {
     );
     for (i, cell) in res.cells.iter().enumerate() {
         let cfg = res.spec.cell_config(cell.index).expect("cell config");
-        let kf = build_problem(&cfg).kappa_f();
+        let kf = kappa_f_of(&cfg);
         let it = iters(&res, i);
         t.row(vec![format!("{}", cfg.lambda2), format!("{kf:.1}"), format!("{it}")]);
         csv.push_str(&format!("kappa_f,{},{kf:.1},{kg:.2},full,2,{it}\n", cfg.lambda2));
@@ -137,13 +142,16 @@ fn main() {
     t.print();
 
     // ------- (iv) oracle rows (Thm 5 vs Thm 8 vs Thm 9) ------------------
-    let eta_s = 1.0 / (6.0 * build_problem(&base_cfg(0.05, 0.0)).smoothness());
+    let eta_s = {
+        let problem = proxlead::exp::build_problem(&base_cfg(0.05, 0.0)).expect("table2 problem");
+        1.0 / (6.0 * problem.smoothness())
+    };
     let spec = SweepSpec::new(base_cfg(0.05, eta_s))
         .axis("oracle", &["full", "lsvrg", "saga"])
         .until(TARGET);
     println!("\ntable2 (iv): {} cells on {} threads", spec.num_cells(), spec.threads);
     let res = run_sweep_verbose(&spec).expect("table2(iv) sweep");
-    let kf = build_problem(&res.spec.base).kappa_f();
+    let kf = kappa_f_of(&res.spec.base);
     let kg = kappa_g_of(&res.spec.base);
     let mut t = Table::new(
         "Table 2(iv) — fixed-stepsize oracles at 2bit (iterations + evals to 1e-9)",

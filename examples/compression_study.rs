@@ -7,8 +7,9 @@
 //! "compression is almost free" claim, measured.
 //!
 //! The grid is a [`SweepSpec`] of one variant per operator on the
-//! parallel sweep runtime; each variant's (α, γ) comes from its measured
-//! noise-to-signal ratio C (Lemma 4's feasibility region for the
+//! parallel sweep runtime (every cell resolves through the one
+//! `Config → Experiment` pipeline); each variant's (α, γ) comes from its
+//! measured noise-to-signal ratio C (Lemma 4's feasibility region for the
 //! high-variance comparators, the paper's α = 0.5, γ = 1 otherwise).
 //!
 //! ```sh

@@ -4,22 +4,21 @@
 //!
 //! Four nodes hold disjoint measurement sets of the same k-sparse signal;
 //! Prox-LEAD (2 bit) recovers the support while communicating a fraction
-//! of the bits the uncompressed proximal baselines need.
+//! of the bits the uncompressed proximal baselines need. The custom data
+//! (a specific k-sparse ground truth) is injected into the Experiment
+//! pipeline via `with_problem`; network, prox, compressor, and auto-η all
+//! resolve through the one pipeline.
 //!
 //! ```sh
 //! cargo run --release --example lasso_decentralized
 //! ```
 
-use proxlead::algorithm::reference::solve_reference_prox;
-use proxlead::algorithm::{Algorithm, Hyper, Nids, P2d2, ProxLead};
-use proxlead::compress::InfNormQuantizer;
+use proxlead::algorithm::{Algorithm, Nids, P2d2, ProxLead};
 use proxlead::engine::{run, RunConfig};
-use proxlead::graph::{Graph, MixingOp, MixingRule};
-use proxlead::linalg::Mat;
-use proxlead::oracle::OracleKind;
+use proxlead::exp::Experiment;
 use proxlead::problem::data::sparse_regression;
 use proxlead::problem::{LeastSquares, Problem};
-use proxlead::prox::{Prox, L1};
+use std::sync::Arc;
 
 fn support(x: &[f64], tol: f64) -> Vec<usize> {
     x.iter().enumerate().filter(|(_, v)| v.abs() > tol).map(|(i, _)| i).collect()
@@ -28,38 +27,32 @@ fn support(x: &[f64], tol: f64) -> Vec<usize> {
 fn main() {
     // ground truth: 6-sparse signal in R^48, 4 nodes × 40 noisy measurements
     let (shards, x_true) = sparse_regression(4, 40, 48, 6, 0.02, 7);
-    let problem = LeastSquares::new(shards, 1e-3, 8);
+    let problem: Arc<dyn Problem> = Arc::new(LeastSquares::new(shards, 1e-3, 8));
     let lambda1 = 0.02;
-    let r = L1::new(lambda1);
 
-    let graph = Graph::ring(4);
-    let w = MixingOp::build(&graph, MixingRule::UniformMaxDegree);
-    let x_star = solve_reference_prox(&problem, &r, 80_000, 1e-12);
+    let exp = Experiment::builder()
+        .problem("lasso")
+        .nodes(4)
+        .lambda1(lambda1)
+        .lambda2(1e-3)
+        .bits(2)
+        .seed(3)
+        .with_problem(problem)
+        .build()
+        .expect("lasso experiment");
+    // reference x* for the ℓ1-composite objective, cached on the experiment
+    let x_star = exp.reference();
 
-    let eta = 0.5 / problem.smoothness();
-    let x0 = Mat::zeros(4, problem.dim());
     let cfg = RunConfig::fixed(6000).every(6000);
-
-    let mut prox_lead = ProxLead::new(
-        &problem,
-        &w,
-        &x0,
-        Hyper::paper_default(eta),
-        OracleKind::Full,
-        Box::new(InfNormQuantizer::paper_default()),
-        Box::new(L1::new(lambda1)),
-        3,
-    );
-    let mut nids =
-        Nids::new(&problem, &w, &x0, eta, OracleKind::Full, Box::new(L1::new(lambda1)), 3);
-    let mut p2d2 =
-        P2d2::new(&problem, &w, &x0, eta, OracleKind::Full, Box::new(L1::new(lambda1)), 3);
+    let mut prox_lead = ProxLead::builder(&exp).build();
+    let mut nids = Nids::builder(&exp).build();
+    let mut p2d2 = P2d2::builder(&exp).build();
 
     println!("decentralized lasso: 4 nodes, p=48, 6-sparse truth, λ1={lambda1}\n");
     println!("{:<28} {:>14} {:>10} {:>12}", "algorithm", "suboptimality", "Mbit", "support");
     let mut rows = vec![];
     for alg in [&mut prox_lead as &mut dyn Algorithm, &mut nids, &mut p2d2] {
-        let res = run(alg, &problem, &x_star, &cfg);
+        let res = run(alg, exp.problem.as_ref(), &x_star, &cfg);
         let xbar = res.final_x.row_mean();
         let sup = support(&xbar, 1e-3);
         let true_sup = support(&x_true, 1e-9);
@@ -94,5 +87,4 @@ fn main() {
     println!("relative signal error ‖x̂ − x♯‖/‖x♯‖ = {:.3}", err / scale);
     assert!(err / scale < 0.2);
     println!("lasso_decentralized OK");
-    let _ = r.eval(&x_true);
 }

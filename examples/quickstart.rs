@@ -4,69 +4,53 @@
 //! over heterogeneous (label-sorted) data, communicating 2-bit quantized
 //! messages. Compare Prox-LEAD against DGD to see why the paper exists.
 //!
+//! Everything resolves through the one `Experiment` pipeline: the config
+//! names the scenario, `ExperimentBuilder` builds it, and the typed
+//! algorithm builders override exactly the knobs each arm changes.
+//!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
-use proxlead::algorithm::{solve_reference, Algorithm, Dgd, Hyper, ProxLead};
-use proxlead::compress::{Identity, InfNormQuantizer};
+use proxlead::algorithm::{Algorithm, Dgd, ProxLead};
+use proxlead::compress::Identity;
 use proxlead::engine::{run, RunConfig};
-use proxlead::graph::{Graph, MixingOp, MixingRule};
-use proxlead::linalg::Mat;
-use proxlead::oracle::OracleKind;
-use proxlead::problem::data::BlobSpec;
-use proxlead::problem::{LogReg, Problem};
-use proxlead::prox::{Zero, L1};
+use proxlead::exp::Experiment;
+use proxlead::prox::Zero;
 
 fn main() {
-    // 1. data: 8 label-sorted shards of an "MNIST-like" blob problem
-    let spec = BlobSpec {
-        nodes: 8,
-        samples_per_node: 120,
-        dim: 32,
-        classes: 10,
-        separation: 1.0,
-        ..Default::default()
-    };
-    let problem = LogReg::from_blobs(&spec, 0.05, 15);
+    // 1. the scenario: 8 label-sorted blob shards on a ring, λ1 = 5e-3,
+    //    2-bit ∞-norm quantization, auto-η = 1/(2L) — resolved in ONE place
+    let exp = Experiment::builder()
+        .nodes(8)
+        .set("samples_per_node", "120")
+        .set("dim", "32")
+        .set("classes", "10")
+        .set("batches", "15")
+        .set("separation", "1.0")
+        .lambda1(5e-3)
+        .lambda2(0.05)
+        .bits(2)
+        .seed(42)
+        .build()
+        .expect("quickstart experiment");
 
-    // 2. network: ring with the paper's uniform 1/3 mixing
-    let graph = Graph::ring(8);
-    let w = MixingOp::build(&graph, MixingRule::UniformMaxDegree);
+    // 2. ground truth for the suboptimality metric (cached on the experiment)
+    let x_star = exp.reference();
 
-    // 3. ground truth for the suboptimality metric
-    let lambda1 = 5e-3;
-    let x_star = solve_reference(&problem, lambda1, 60_000, 1e-12);
-
-    // 4. algorithms: Prox-LEAD @ 2 bits vs DGD @ 32 bits
-    let eta = 0.5 / problem.smoothness();
-    let x0 = Mat::zeros(8, problem.dim());
-    let mut prox_lead = ProxLead::new(
-        &problem,
-        &w,
-        &x0,
-        Hyper::paper_default(eta),
-        OracleKind::Full,
-        Box::new(InfNormQuantizer::paper_default()),
-        Box::new(L1::new(lambda1)),
-        42,
-    );
-    let mut dgd = Dgd::new(
-        &problem,
-        &w,
-        &x0,
-        eta,
-        OracleKind::Full,
-        Box::new(Identity::f32()),
-        Box::new(Zero),
-        42,
-    );
+    // 3. algorithms: Prox-LEAD @ 2 bits (all defaults from the experiment)
+    //    vs DGD @ dense 32-bit with no prox (its classic biased form)
+    let mut prox_lead = ProxLead::builder(&exp).build();
+    let mut dgd = Dgd::builder(&exp)
+        .compressor(Box::new(Identity::f32()))
+        .prox(Box::new(Zero))
+        .build();
 
     let cfg = RunConfig::fixed(8000).every(800);
     println!("running {} …", prox_lead.name());
-    let r1 = run(&mut prox_lead, &problem, &x_star, &cfg);
+    let r1 = run(&mut prox_lead, exp.problem.as_ref(), &x_star, &cfg);
     println!("running {} …", dgd.name());
-    let r2 = run(&mut dgd, &problem, &x_star, &cfg);
+    let r2 = run(&mut dgd, exp.problem.as_ref(), &x_star, &cfg);
 
     println!("\n round | {:>26} | {:>26}", r1.name, r2.name);
     for (a, b) in r1.history.iter().zip(&r2.history) {

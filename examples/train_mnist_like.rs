@@ -8,21 +8,20 @@
 //!   over channels (the message-passing coordinator), non-smooth
 //!   λ1‖x‖1 handled by the proximal step.
 //!
-//! Logs the loss curve + training accuracy and checks the run against the
-//! centralized reference. Recorded in EXPERIMENTS.md §End-to-end.
+//! The PJRT-wrapped problem is injected into the Experiment pipeline via
+//! `with_problem`; the network, codec, oracle, prox, and coordinator
+//! wiring all resolve from the one config. Logs the loss curve + training
+//! accuracy and checks the run against the centralized reference.
+//! Recorded in EXPERIMENTS.md §End-to-end.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example train_mnist_like
 //! ```
 
-use proxlead::algorithm::{solve_reference, suboptimality};
-use proxlead::coordinator::{self, CoordConfig, WireCodec};
-use proxlead::graph::{Graph, MixingOp, MixingRule};
-use proxlead::linalg::Mat;
-use proxlead::oracle::OracleKind;
+use proxlead::algorithm::suboptimality;
+use proxlead::exp::Experiment;
 use proxlead::problem::data::{blobs, heterogeneity_index, BlobSpec};
 use proxlead::problem::{LogReg, Problem};
-use proxlead::prox::L1;
 use proxlead::runtime::{default_artifact_dir, PjrtRuntime, XlaLogReg};
 use std::sync::Arc;
 
@@ -49,38 +48,39 @@ fn main() {
             .expect("run `make artifacts` first — this example exercises the PJRT path"),
     );
     println!("runtime: {} PJRT executables loaded", rt.len());
-    let problem = XlaLogReg::new(native, rt).expect("artifact for (240,64,10)");
+    let problem = Arc::new(XlaLogReg::new(native, rt).expect("artifact for (240,64,10)"));
     assert!(problem.batch_on_xla(), "batch artifact (16,64,10) should be compiled");
 
-    let graph = Graph::ring(8);
-    let w = MixingOp::build(&graph, MixingRule::UniformMaxDegree);
-    let lambda1 = 5e-3;
-    let eta = 0.1; // the paper tunes η in [0.01, 0.1]
+    // the coordinator scenario: ring-8, 2-bit frames, Prox-LEAD-SAGA
+    // (1 PJRT batch-grad/round/node), η in the paper's tuned range
+    let exp = Experiment::builder()
+        .nodes(8)
+        .set("samples_per_node", "240")
+        .set("dim", "64")
+        .set("classes", "10")
+        .set("batches", "15")
+        .lambda1(5e-3)
+        .lambda2(5e-3)
+        .bits(2)
+        .oracle("saga")
+        .eta(0.1)
+        .rounds(400)
+        .set("record_every", "25")
+        .with_problem(Arc::clone(&problem) as Arc<dyn Problem>)
+        .build()
+        .expect("train_mnist_like experiment");
 
     println!("solving centralized reference x* (FISTA) …");
-    let x_star = solve_reference(&problem, lambda1, 60_000, 1e-11);
-
-    let x0 = Mat::zeros(8, problem.dim());
-    let mut cfg = CoordConfig::new(400, eta, WireCodec::Quant(2, 256));
-    cfg.record_every = 25;
-    cfg.oracle = OracleKind::Saga; // Prox-LEAD-SAGA: 1 PJRT batch-grad/round/node
-    cfg.alpha = 0.5;
-    cfg.gamma = 1.0;
+    let x_star = exp.reference();
 
     println!("training: Prox-LEAD-SAGA (2bit) on 8 node threads, PJRT gradients…");
-    let problem: Arc<XlaLogReg> = Arc::new(problem);
-    let res = coordinator::run(
-        Arc::clone(&problem) as Arc<dyn Problem>,
-        &w,
-        &x0,
-        Arc::new(L1::new(lambda1)),
-        &cfg,
-    );
+    let res = exp.coordinator();
 
     println!("\nround   loss        subopt       consensus    acc     Mbit");
     for (round, x, bits, _) in &res.snapshots {
         let xbar = x.row_mean();
-        let loss = problem.global_loss(&xbar) + lambda1 * xbar.iter().map(|v| v.abs()).sum::<f64>();
+        let loss = problem.global_loss(&xbar)
+            + exp.config.lambda1 * xbar.iter().map(|v| v.abs()).sum::<f64>();
         let acc = problem.native().accuracy(&xbar, problem.native().shards());
         println!(
             "{round:>5} {loss:>10.5} {:>12.4e} {:>12.4e} {acc:>6.3} {:>8.2}",

@@ -1,0 +1,355 @@
+//! Typed builders for every algorithm — the replacement for the
+//! positional-argument constructors.
+//!
+//! Each builder starts from an [`Experiment`]'s resolved defaults
+//! (problem, mixing operator, start iterate, auto-η hyperparameters,
+//! oracle, compressor, prox, seed) and lets call sites override exactly
+//! the knobs they care about:
+//!
+//! ```text
+//! let alg = ProxLead::builder(&experiment)
+//!     .oracle(OracleKind::Saga)
+//!     .seed(7)
+//!     .build();
+//! ```
+//!
+//! The old `X::new(...)` constructors remain as deprecated shims for the
+//! tests that pin iterate sequences bit-for-bit; everything else
+//! constructs through these builders (usually via
+//! [`Experiment::algorithm`], the name-dispatching registry).
+
+use super::{Choco, Dgd, DualGd, Hyper, Nids, P2d2, Pdgm, PgExtra, ProxLead};
+use crate::compress::Compressor;
+use crate::exp::Experiment;
+use crate::graph::MixingOp;
+use crate::linalg::Mat;
+use crate::oracle::OracleKind;
+use crate::problem::Problem;
+use crate::prox::Prox;
+
+/// Warm-started inner dual-solve iterations for the DualGD/LessBit-A
+/// family (the §4.3 comparison's convention).
+pub const DUALGD_INNER_ITERS: usize = 40;
+
+/// The construction surface every algorithm shares, pre-resolved from an
+/// [`Experiment`]. Builders embed one of these and expose chainable
+/// overrides on top.
+pub struct AlgorithmParts<'a> {
+    pub problem: &'a dyn Problem,
+    pub w: &'a MixingOp,
+    pub x0: &'a Mat,
+    pub hyper: Hyper,
+    pub oracle: OracleKind,
+    pub comp: Box<dyn Compressor>,
+    pub prox: Box<dyn Prox>,
+    pub seed: u64,
+}
+
+impl<'a> AlgorithmParts<'a> {
+    /// Defaults from a resolved experiment: its problem, mixing operator,
+    /// x0 = 0, auto-η hyperparameters, configured oracle / compressor /
+    /// prox, and the config seed.
+    pub fn from_experiment(exp: &'a Experiment) -> AlgorithmParts<'a> {
+        AlgorithmParts {
+            problem: exp.problem.as_ref(),
+            w: &exp.mixing,
+            x0: &exp.x0,
+            hyper: exp.hyper,
+            oracle: exp.oracle(),
+            comp: exp.compressor(),
+            prox: exp.prox(),
+            seed: exp.config.seed,
+        }
+    }
+}
+
+/// Chainable overrides shared by every algorithm builder.
+macro_rules! common_setters {
+    () => {
+        /// Override the primal stepsize η.
+        pub fn eta(mut self, eta: f64) -> Self {
+            self.parts.hyper.eta = eta;
+            self
+        }
+
+        /// Override the compression-state blending rate α.
+        pub fn alpha(mut self, alpha: f64) -> Self {
+            self.parts.hyper.alpha = alpha;
+            self
+        }
+
+        /// Override the dual stepsize scale γ (Choco reads it as the
+        /// gossip stepsize γ_c).
+        pub fn gamma(mut self, gamma: f64) -> Self {
+            self.parts.hyper.gamma = gamma;
+            self
+        }
+
+        /// Override all three hyperparameters at once.
+        pub fn hyper(mut self, h: Hyper) -> Self {
+            self.parts.hyper = h;
+            self
+        }
+
+        /// Override the stochastic gradient oracle.
+        pub fn oracle(mut self, kind: OracleKind) -> Self {
+            self.parts.oracle = kind;
+            self
+        }
+
+        /// Override the compression operator.
+        pub fn compressor(mut self, comp: Box<dyn Compressor>) -> Self {
+            self.parts.comp = comp;
+            self
+        }
+
+        /// Override the shared non-smooth term r(x).
+        pub fn prox(mut self, prox: Box<dyn Prox>) -> Self {
+            self.parts.prox = prox;
+            self
+        }
+
+        /// Override the algorithm RNG seed.
+        pub fn seed(mut self, seed: u64) -> Self {
+            self.parts.seed = seed;
+            self
+        }
+    };
+}
+
+/// Builder for [`ProxLead`] (Algorithm 1; LEAD when the prox is `Zero`).
+pub struct ProxLeadBuilder<'a> {
+    parts: AlgorithmParts<'a>,
+    tag: String,
+}
+
+impl<'a> ProxLeadBuilder<'a> {
+    common_setters!();
+
+    /// Attach a display tag, e.g. `"2bit"`.
+    pub fn tag(mut self, tag: &str) -> Self {
+        self.tag = tag.to_string();
+        self
+    }
+
+    #[allow(deprecated)]
+    pub fn build(self) -> ProxLead {
+        let p = self.parts;
+        let alg = ProxLead::new(p.problem, p.w, p.x0, p.hyper, p.oracle, p.comp, p.prox, p.seed);
+        if self.tag.is_empty() {
+            alg
+        } else {
+            alg.with_tag(&self.tag)
+        }
+    }
+}
+
+impl ProxLead {
+    /// Typed builder over an experiment's resolved defaults.
+    pub fn builder(exp: &Experiment) -> ProxLeadBuilder<'_> {
+        ProxLeadBuilder { parts: AlgorithmParts::from_experiment(exp), tag: String::new() }
+    }
+}
+
+/// Builder for [`Dgd`] (DGD / D-PSGD / Prox-DGD).
+pub struct DgdBuilder<'a> {
+    parts: AlgorithmParts<'a>,
+}
+
+impl<'a> DgdBuilder<'a> {
+    common_setters!();
+
+    #[allow(deprecated)]
+    pub fn build(self) -> Dgd {
+        let p = self.parts;
+        Dgd::new(p.problem, p.w, p.x0, p.hyper.eta, p.oracle, p.comp, p.prox, p.seed)
+    }
+}
+
+impl Dgd {
+    /// Typed builder over an experiment's resolved defaults.
+    pub fn builder(exp: &Experiment) -> DgdBuilder<'_> {
+        DgdBuilder { parts: AlgorithmParts::from_experiment(exp) }
+    }
+}
+
+/// Builder for [`Choco`]. The experiment's γ doubles as Choco's gossip
+/// stepsize γ_c (the sweep registry's convention).
+pub struct ChocoBuilder<'a> {
+    parts: AlgorithmParts<'a>,
+}
+
+impl<'a> ChocoBuilder<'a> {
+    common_setters!();
+
+    #[allow(deprecated)]
+    pub fn build(self) -> Choco {
+        let p = self.parts;
+        Choco::new(
+            p.problem,
+            p.w,
+            p.x0,
+            p.hyper.eta,
+            p.hyper.gamma,
+            p.oracle,
+            p.comp,
+            p.prox,
+            p.seed,
+        )
+    }
+}
+
+impl Choco {
+    /// Typed builder over an experiment's resolved defaults.
+    pub fn builder(exp: &Experiment) -> ChocoBuilder<'_> {
+        ChocoBuilder { parts: AlgorithmParts::from_experiment(exp) }
+    }
+}
+
+/// Builder for [`Nids`] (uncompressed; the compressor override is unused).
+pub struct NidsBuilder<'a> {
+    parts: AlgorithmParts<'a>,
+}
+
+impl<'a> NidsBuilder<'a> {
+    common_setters!();
+
+    #[allow(deprecated)]
+    pub fn build(self) -> Nids {
+        let p = self.parts;
+        Nids::new(p.problem, p.w, p.x0, p.hyper.eta, p.oracle, p.prox, p.seed)
+    }
+}
+
+impl Nids {
+    /// Typed builder over an experiment's resolved defaults.
+    pub fn builder(exp: &Experiment) -> NidsBuilder<'_> {
+        NidsBuilder { parts: AlgorithmParts::from_experiment(exp) }
+    }
+}
+
+/// Builder for [`P2d2`] (uncompressed; the compressor override is unused).
+pub struct P2d2Builder<'a> {
+    parts: AlgorithmParts<'a>,
+}
+
+impl<'a> P2d2Builder<'a> {
+    common_setters!();
+
+    #[allow(deprecated)]
+    pub fn build(self) -> P2d2 {
+        let p = self.parts;
+        P2d2::new(p.problem, p.w, p.x0, p.hyper.eta, p.oracle, p.prox, p.seed)
+    }
+}
+
+impl P2d2 {
+    /// Typed builder over an experiment's resolved defaults.
+    pub fn builder(exp: &Experiment) -> P2d2Builder<'_> {
+        P2d2Builder { parts: AlgorithmParts::from_experiment(exp) }
+    }
+}
+
+/// Builder for [`PgExtra`] (uncompressed; the compressor override is
+/// unused).
+pub struct PgExtraBuilder<'a> {
+    parts: AlgorithmParts<'a>,
+}
+
+impl<'a> PgExtraBuilder<'a> {
+    common_setters!();
+
+    #[allow(deprecated)]
+    pub fn build(self) -> PgExtra {
+        let p = self.parts;
+        PgExtra::new(p.problem, p.w, p.x0, p.hyper.eta, p.oracle, p.prox, p.seed)
+    }
+}
+
+impl PgExtra {
+    /// Typed builder over an experiment's resolved defaults.
+    pub fn builder(exp: &Experiment) -> PgExtraBuilder<'_> {
+        PgExtraBuilder { parts: AlgorithmParts::from_experiment(exp) }
+    }
+}
+
+/// Builder for [`Pdgm`] (PDGM / LessBit-B). The dual stepsize θ defaults
+/// to the PDHG view's γ/(2η).
+pub struct PdgmBuilder<'a> {
+    parts: AlgorithmParts<'a>,
+    theta: Option<f64>,
+}
+
+impl<'a> PdgmBuilder<'a> {
+    common_setters!();
+
+    /// Override the dual stepsize θ (default γ/(2η)).
+    pub fn theta(mut self, theta: f64) -> Self {
+        self.theta = Some(theta);
+        self
+    }
+
+    #[allow(deprecated)]
+    pub fn build(self) -> Pdgm {
+        let p = self.parts;
+        let theta = self.theta.unwrap_or(p.hyper.gamma / (2.0 * p.hyper.eta));
+        Pdgm::new(p.problem, p.w, p.x0, p.hyper.eta, theta, p.oracle, p.comp, p.hyper.alpha, p.seed)
+    }
+}
+
+impl Pdgm {
+    /// Typed builder over an experiment's resolved defaults.
+    pub fn builder(exp: &Experiment) -> PdgmBuilder<'_> {
+        PdgmBuilder { parts: AlgorithmParts::from_experiment(exp), theta: None }
+    }
+}
+
+/// Builder for [`DualGd`] (DualGD / LessBit-A). The dual stepsize θ
+/// defaults to the theory-driven μ/2 (μ/4 when the compressor is noisy),
+/// with [`DUALGD_INNER_ITERS`] warm-started inner iterations.
+pub struct DualGdBuilder<'a> {
+    parts: AlgorithmParts<'a>,
+    theta: Option<f64>,
+    inner_iters: usize,
+}
+
+impl<'a> DualGdBuilder<'a> {
+    common_setters!();
+
+    /// Override the dual stepsize θ (default μ/2, or μ/4 when compressed).
+    pub fn theta(mut self, theta: f64) -> Self {
+        self.theta = Some(theta);
+        self
+    }
+
+    /// Override the warm-started inner-solve iteration budget.
+    pub fn inner_iters(mut self, iters: usize) -> Self {
+        self.inner_iters = iters;
+        self
+    }
+
+    #[allow(deprecated)]
+    pub fn build(self) -> DualGd {
+        let p = self.parts;
+        let theta = self.theta.unwrap_or_else(|| {
+            let mu = p.problem.strong_convexity();
+            if p.comp.variance_bound() > 0.0 {
+                mu / 4.0
+            } else {
+                mu / 2.0
+            }
+        });
+        DualGd::new(p.problem, p.w, p.x0, theta, self.inner_iters, p.comp, p.hyper.alpha, p.seed)
+    }
+}
+
+impl DualGd {
+    /// Typed builder over an experiment's resolved defaults.
+    pub fn builder(exp: &Experiment) -> DualGdBuilder<'_> {
+        DualGdBuilder {
+            parts: AlgorithmParts::from_experiment(exp),
+            theta: None,
+            inner_iters: DUALGD_INNER_ITERS,
+        }
+    }
+}

@@ -42,6 +42,9 @@ pub struct Choco {
 
 impl Choco {
     #[allow(clippy::too_many_arguments)]
+    /// Deprecated shim kept for tests that pin iterate sequences; new
+    /// code constructs via [`Choco::builder`] / `Experiment::algorithm`.
+    #[deprecated(note = "construct via Choco::builder(&experiment) or Experiment::algorithm()")]
     pub fn new(
         problem: &dyn Problem,
         w: &MixingOp,
@@ -127,6 +130,8 @@ impl Algorithm for Choco {
 
 #[cfg(test)]
 mod tests {
+    // these tests pin the constructor-built iterate sequence directly
+    #![allow(deprecated)]
     use super::*;
     use crate::algorithm::testkit::{ring_logreg, run_to};
     use crate::algorithm::solve_reference;

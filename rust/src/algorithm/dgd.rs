@@ -36,6 +36,9 @@ pub struct Dgd {
 
 impl Dgd {
     #[allow(clippy::too_many_arguments)]
+    /// Deprecated shim kept for tests that pin iterate sequences; new
+    /// code constructs via [`Dgd::builder`] / `Experiment::algorithm`.
+    #[deprecated(note = "construct via Dgd::builder(&experiment) or Experiment::algorithm()")]
     pub fn new(
         problem: &dyn Problem,
         w: &MixingOp,
@@ -108,6 +111,8 @@ impl Algorithm for Dgd {
 
 #[cfg(test)]
 mod tests {
+    // these tests pin the constructor-built iterate sequence directly
+    #![allow(deprecated)]
     use super::*;
     use crate::algorithm::testkit::{ring_logreg, run_to};
     use crate::algorithm::{solve_reference, suboptimality};

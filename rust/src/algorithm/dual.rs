@@ -46,6 +46,9 @@ pub struct DualGd {
 }
 
 impl DualGd {
+    /// Deprecated shim kept for tests that pin iterate sequences; new
+    /// code constructs via [`DualGd::builder`] / `Experiment::algorithm`.
+    #[deprecated(note = "construct via DualGd::builder(&experiment) or Experiment::algorithm()")]
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         problem: &dyn Problem,
@@ -169,6 +172,9 @@ pub struct Pdgm {
 }
 
 impl Pdgm {
+    /// Deprecated shim kept for tests that pin iterate sequences; new
+    /// code constructs via [`Pdgm::builder`] / `Experiment::algorithm`.
+    #[deprecated(note = "construct via Pdgm::builder(&experiment) or Experiment::algorithm()")]
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         problem: &dyn Problem,
@@ -210,6 +216,8 @@ impl Pdgm {
     }
 
     /// Uncompressed PDGM with θ = γ/(2η) (matching LEAD's dual scale).
+    #[deprecated(note = "construct via Pdgm::builder(&experiment) or Experiment::algorithm()")]
+    #[allow(deprecated)]
     pub fn plain(
         problem: &dyn Problem,
         w: &MixingOp,
@@ -234,6 +242,8 @@ impl Pdgm {
 
 impl Pdgm {
     /// LessBit Option B: full gradient + compressed communication.
+    #[deprecated(note = "construct via Pdgm::builder(&experiment) or Experiment::algorithm()")]
+    #[allow(deprecated)]
     #[allow(clippy::too_many_arguments)]
     pub fn lessbit_b(
         problem: &dyn Problem,
@@ -304,6 +314,8 @@ impl Algorithm for Pdgm {
 
 #[cfg(test)]
 mod tests {
+    // these tests pin the constructor-built iterate sequence directly
+    #![allow(deprecated)]
     use super::*;
     use crate::algorithm::testkit::{ring_logreg, run_to};
     use crate::algorithm::solve_reference;

@@ -20,6 +20,7 @@
 //! | [`schedule`] | Theorem 7 diminishing-stepsize schedule |
 //! | [`reference`] | Centralized FISTA solver for the ground-truth x* |
 
+pub mod builder;
 pub mod choco;
 pub mod dgd;
 pub mod dual;
@@ -30,6 +31,10 @@ pub mod prox_lead;
 pub mod reference;
 pub mod schedule;
 
+pub use builder::{
+    AlgorithmParts, ChocoBuilder, DgdBuilder, DualGdBuilder, NidsBuilder, P2d2Builder,
+    PdgmBuilder, PgExtraBuilder, ProxLeadBuilder, DUALGD_INNER_ITERS,
+};
 pub use choco::Choco;
 pub use dgd::Dgd;
 pub use dual::{DualGd, Pdgm};
@@ -223,6 +228,19 @@ pub(crate) mod testkit {
     pub fn safe_eta(p: &LogReg) -> f64 {
         use crate::problem::Problem;
         0.5 / p.smoothness()
+    }
+
+    /// The [`ring_logreg`] fixture as a resolved [`crate::exp::Experiment`]
+    /// — identical problem, graph, mixing operator, and auto-η (the config
+    /// below renders the exact same BlobSpec and ring), so builders started
+    /// from it reproduce the fixture-built algorithms bit for bit.
+    pub fn ring_exp() -> crate::exp::Experiment {
+        let cfg = crate::config::Config::parse(
+            "nodes = 4\nsamples_per_node = 24\ndim = 5\nclasses = 3\nbatches = 4\n\
+             separation = 1.0\nseed = 33\nlambda1 = 0\nlambda2 = 0.1\nbits = 2\n",
+        )
+        .expect("ring_exp config");
+        crate::exp::Experiment::from_config(&cfg).expect("ring_exp experiment")
     }
 
     /// Run `alg` for `rounds` and return final suboptimality vs `x_star`.

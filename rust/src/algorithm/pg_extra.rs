@@ -38,6 +38,9 @@ pub struct PgExtra {
 }
 
 impl PgExtra {
+    /// Deprecated shim kept for tests that pin iterate sequences; new
+    /// code constructs via [`PgExtra::builder`] / `Experiment::algorithm`.
+    #[deprecated(note = "construct via PgExtra::builder(&experiment) or Experiment::algorithm()")]
     pub fn new(
         problem: &dyn Problem,
         w: &MixingOp,
@@ -123,6 +126,8 @@ impl Algorithm for PgExtra {
 
 #[cfg(test)]
 mod tests {
+    // these tests pin the constructor-built iterate sequence directly
+    #![allow(deprecated)]
     use super::*;
     use crate::algorithm::testkit::{ring_logreg, run_to};
     use crate::algorithm::solve_reference;

@@ -46,6 +46,10 @@ pub struct ProxLead {
 impl ProxLead {
     /// Build and run the initialization (Algorithm 1 lines 1–3): H¹ = X⁰,
     /// Z¹ = X⁰ − η·SGO(X⁰), X¹ = prox_ηR(Z¹), D¹ = 0.
+    ///
+    /// Deprecated shim kept for tests that pin iterate sequences; new code
+    /// constructs via [`ProxLead::builder`] / `Experiment::algorithm`.
+    #[deprecated(note = "construct via ProxLead::builder(&experiment) or Experiment::algorithm()")]
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         problem: &dyn Problem,
@@ -174,6 +178,8 @@ impl Algorithm for ProxLead {
 
 #[cfg(test)]
 mod tests {
+    // these tests pin the constructor-built iterate sequence directly
+    #![allow(deprecated)]
     use super::*;
     use crate::algorithm::testkit::{ring_logreg, run_to};
     use crate::algorithm::{solve_reference, suboptimality};

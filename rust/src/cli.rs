@@ -32,6 +32,7 @@ SUBCOMMANDS:
   help        this message
 
 CONFIG KEYS (also usable as --key value):
+  problem(logreg|least-squares|lasso)
   nodes samples_per_node dim classes batches lambda1 lambda2 separation
   shuffled topology(ring|chain|star|complete|grid|er) mixing(uniform|mh|lazy)
   connectivity|er_prob (ER edge prob; 0 = auto 2·ln(n)/n)
@@ -53,6 +54,7 @@ EXAMPLES:
   proxlead train --config experiment.cfg --backend xla
   proxlead sweep --grid \"algorithm=prox-lead,dgd;bits=2,32;seed=1,2\" \\
                  --rounds 2000 --threads 8 --out sweep.json
+  proxlead sweep --grid \"problem=logreg,least-squares;bits=2,32\" --rounds 500
   proxlead info --nodes 16 --topology grid
 ";
 

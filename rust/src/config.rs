@@ -12,9 +12,14 @@ use std::collections::BTreeMap;
 use std::fmt;
 
 /// All knobs of a training/experiment run, with §5-faithful defaults.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Config {
     // problem
+    /// Problem family (`problem` key): `logreg` (§5 workload),
+    /// `least-squares` (Table 3 quadratic suite), `lasso` (k-sparse
+    /// regression). Resolved by [`Config::problem_kind`]; the single
+    /// construction path is `exp::build_problem`.
+    pub problem: String,
     pub nodes: usize,
     pub samples_per_node: usize,
     pub dim: usize,
@@ -59,6 +64,7 @@ pub struct Config {
 impl Default for Config {
     fn default() -> Config {
         Config {
+            problem: "logreg".into(),
             nodes: 8,
             samples_per_node: 240,
             dim: 64,
@@ -137,6 +143,7 @@ impl Config {
                 .map_err(|_| ConfigError(format!("bad value '{val}' for {key}")))
         }
         match key {
+            "problem" => self.problem = val.into(),
             "nodes" => self.nodes = p(key, val)?,
             "samples_per_node" | "samples" => self.samples_per_node = p(key, val)?,
             "dim" => self.dim = p(key, val)?,
@@ -228,6 +235,11 @@ impl Config {
         self.mixing.parse().map_err(ConfigError)
     }
 
+    /// The problem family the `problem` key names.
+    pub fn problem_kind(&self) -> Result<crate::problem::ProblemKind, ConfigError> {
+        self.problem.parse().map_err(ConfigError)
+    }
+
     pub fn oracle_kind(&self) -> Result<OracleKind, ConfigError> {
         Ok(match self.oracle.as_str() {
             "full" => OracleKind::Full,
@@ -240,21 +252,27 @@ impl Config {
 
     /// Compressor for the matrix engine. bits = 32/64 ⇒ dense identity
     /// (whatever the family); otherwise `compressor` picks the operator
-    /// family at the given bit budget.
+    /// family at the given bit budget. The default sparsifier budget is
+    /// derived from the logreg parameter dimension p = dim·classes; when
+    /// the actual flattened dimension is known (an `exp::Experiment`
+    /// resolves it from the built problem), use
+    /// [`Config::compressor_for_dim`].
     pub fn compressor(&self) -> Result<Box<dyn Compressor>, ConfigError> {
+        self.compressor_for_dim(self.dim * self.classes.max(1))
+    }
+
+    /// [`Config::compressor`] with the flattened parameter dimension `p`
+    /// supplied by the caller (drives the `randk`/`topk` default budget
+    /// k = p/8 when `sparsify_k` = 0).
+    pub fn compressor_for_dim(&self, p: usize) -> Result<Box<dyn Compressor>, ConfigError> {
         match self.bits {
             64 => return Ok(Box::new(Identity::f64())),
             32 => return Ok(Box::new(Identity::f32())),
             b if (2..=16).contains(&b) => {}
             b => return Err(ConfigError(format!("bits must be 2..=16, 32 or 64 (got {b})"))),
         }
-        // default sparsifier budget: an eighth of the flattened parameter
-        // dimension (p = dim·classes for multinomial logreg)
-        let k = if self.sparsify_k > 0 {
-            self.sparsify_k
-        } else {
-            (self.dim * self.classes.max(1) / 8).max(1)
-        };
+        // default sparsifier budget: an eighth of the parameter dimension
+        let k = if self.sparsify_k > 0 { self.sparsify_k } else { (p / 8).max(1) };
         Ok(match self.compressor.as_str() {
             "inf" => Box::new(InfNormQuantizer::new(self.bits, self.block)),
             "l2" | "qsgd" => Box::new(L2NormQuantizer::new(self.bits, self.block)),
@@ -296,6 +314,20 @@ impl Config {
         Box::new(ElasticNet::new(self.lambda1, self.lambda2))
     }
 
+    /// Spec for the regression generator behind the `least-squares` /
+    /// `lasso` problem kinds. `sparsity` is the ground-truth support size
+    /// (0 ⇒ dense x♯); the noise scale is fixed at the suite's 0.05.
+    pub fn reg_spec(&self, sparsity: usize) -> crate::problem::data::RegSpec {
+        crate::problem::data::RegSpec {
+            nodes: self.nodes,
+            samples_per_node: self.samples_per_node,
+            dim: self.dim,
+            sparsity,
+            noise: 0.05,
+            seed: self.seed,
+        }
+    }
+
     pub fn blob_spec(&self) -> crate::problem::data::BlobSpec {
         crate::problem::data::BlobSpec {
             nodes: self.nodes,
@@ -317,6 +349,7 @@ impl Config {
     pub fn to_text(&self) -> String {
         format!(
             "# prox-lead run configuration\n\
+             problem = {}\n\
              nodes = {}\nsamples_per_node = {}\ndim = {}\nclasses = {}\nbatches = {}\n\
              lambda1 = {}\nlambda2 = {}\nseparation = {}\nshuffled = {}\n\
              topology = {}\nmixing = {}\ner_prob = {}\n\
@@ -325,6 +358,7 @@ impl Config {
              eta = {}\nalpha = {}\ngamma = {}\n\
              rounds = {}\nrecord_every = {}\nseed = {}\nbackend = {}\nout = {}\n\
              straggler_prob = {}\nstraggler_us = {}\n",
+            self.problem,
             self.nodes,
             self.samples_per_node,
             self.dim,
@@ -382,9 +416,49 @@ mod tests {
         assert_eq!(c.bits, 8);
         assert_eq!(c.oracle, "saga");
         let again = Config::parse(&c.to_text()).unwrap();
-        assert_eq!(again.nodes, c.nodes);
-        assert_eq!(again.bits, c.bits);
-        assert_eq!(again.oracle, c.oracle);
+        assert_eq!(again, c);
+
+        // every key non-default, so a key missing from to_text would show
+        // up as a full-struct diff after the round-trip
+        let mut all = Config::default();
+        for (k, v) in [
+            ("problem", "least-squares"),
+            ("nodes", "6"),
+            ("samples_per_node", "48"),
+            ("dim", "12"),
+            ("classes", "4"),
+            ("batches", "6"),
+            ("lambda1", "0.01"),
+            ("lambda2", "0.02"),
+            ("separation", "1.5"),
+            ("shuffled", "true"),
+            ("topology", "chain"),
+            ("mixing", "mh"),
+            ("connectivity", "0.6"),
+            ("algorithm", "nids"),
+            ("oracle", "saga"),
+            ("lsvrg_p", "0.25"),
+            ("compressor", "l2"),
+            ("bits", "4"),
+            ("block", "128"),
+            ("sparsify_k", "9"),
+            ("eta", "0.05"),
+            ("alpha", "0.4"),
+            ("gamma", "0.9"),
+            ("rounds", "123"),
+            ("record_every", "7"),
+            ("seed", "99"),
+            ("backend", "xla"),
+            ("out", "run.json"),
+            ("straggler_prob", "0.1"),
+            ("straggler_us", "500"),
+        ] {
+            all.set(k, v).unwrap();
+        }
+        let rendered = all.to_text();
+        let reparsed = Config::parse(&rendered).unwrap();
+        assert_eq!(reparsed, all, "Config::to_text must emit every key:\n{rendered}");
+        assert_eq!(reparsed.to_text(), rendered);
     }
 
     #[test]
@@ -392,6 +466,19 @@ mod tests {
         assert!(Config::parse("warp_drive = on").is_err());
         assert!(Config::parse("nodes = many").is_err());
         assert!(Config::parse("just a line").is_err());
+    }
+
+    #[test]
+    fn problem_key_resolves_and_rejects_unknown() {
+        use crate::problem::ProblemKind;
+        let mut c = Config::default();
+        assert_eq!(c.problem_kind().unwrap(), ProblemKind::LogReg);
+        c.set("problem", "least-squares").unwrap();
+        assert_eq!(c.problem_kind().unwrap(), ProblemKind::LeastSquares);
+        c.set("problem", "lasso").unwrap();
+        assert_eq!(c.problem_kind().unwrap(), ProblemKind::Lasso);
+        c.set("problem", "sudoku").unwrap();
+        assert!(c.problem_kind().is_err());
     }
 
     #[test]

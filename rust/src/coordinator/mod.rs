@@ -199,39 +199,62 @@ pub fn run(
 mod tests {
     use super::*;
     use crate::algorithm::testkit::{ring_logreg, safe_eta};
-    use crate::algorithm::{solve_reference, suboptimality, Algorithm, Hyper, ProxLead};
-    use crate::compress::{Identity, InfNormQuantizer};
+    use crate::algorithm::{solve_reference, suboptimality, Algorithm, ProxLead};
+    use crate::compress::Identity;
     use crate::prox::{Zero, L1};
 
     #[test]
     fn leader_matches_matrix_engine_exactly() {
         // identity codec + full gradient is deterministic: node-thread
-        // iterates must equal the matrix engine's bit for bit
-        let (p, w) = ring_logreg();
-        use crate::problem::Problem;
-        let x0 = Mat::zeros(4, p.dim());
-        let eta = safe_eta(&p);
+        // iterates must equal the Experiment-built matrix engine's bit
+        // for bit (the fixture's auto-η is the same 1/(2L))
+        let exp = crate::algorithm::testkit::ring_exp();
+        let cfg = CoordConfig::new(40, exp.hyper.eta, WireCodec::Dense64);
+        let res = run(Arc::clone(&exp.problem), &exp.mixing, &exp.x0, Arc::new(Zero), &cfg);
 
-        let p_arc: Arc<dyn crate::problem::Problem> = Arc::new(p);
-        let cfg = CoordConfig::new(40, eta, WireCodec::Dense64);
-        let res = run(Arc::clone(&p_arc), &w, &x0, Arc::new(Zero), &cfg);
-
-        let mut matrix = ProxLead::new(
-            p_arc.as_ref(),
-            &w,
-            &x0,
-            Hyper { eta, alpha: 0.5, gamma: 1.0 },
-            crate::oracle::OracleKind::Full,
-            Box::new(Identity::f64()),
-            Box::new(Zero),
-            1,
-        );
+        let mut matrix =
+            ProxLead::builder(&exp).compressor(Box::new(Identity::f64())).seed(1).build();
         for _ in 0..40 {
-            matrix.step(p_arc.as_ref());
+            matrix.step(exp.problem.as_ref());
         }
         let coord_x = res.final_x();
         let diff = coord_x.dist_sq(matrix.x());
         assert!(diff < 1e-22, "coordinator vs matrix engine drift: {diff}");
+    }
+
+    #[test]
+    fn experiment_coordinator_matches_explicit_wiring() {
+        // the Experiment-level coordinator entry point drives the same run
+        // the hand-wired CoordConfig produces, bit for bit
+        let mut cfg = crate::config::Config::parse(
+            "nodes = 4\nsamples_per_node = 24\ndim = 5\nclasses = 3\nbatches = 4\n\
+             separation = 1.0\nseed = 33\nlambda1 = 0.005\nlambda2 = 0.1\nbits = 2\n",
+        )
+        .unwrap();
+        cfg.rounds = 60;
+        cfg.record_every = 20;
+        let exp = crate::exp::Experiment::from_config(&cfg).unwrap();
+        let via_exp = exp.coordinator();
+
+        let mut ccfg = CoordConfig::new(60, exp.hyper.eta, WireCodec::Quant(2, 256));
+        ccfg.record_every = 20;
+        ccfg.seed = 33;
+        let explicit = run(
+            Arc::clone(&exp.problem),
+            &exp.mixing,
+            &exp.x0,
+            Arc::new(L1::new(5e-3)),
+            &ccfg,
+        );
+        assert_eq!(via_exp.snapshots.len(), explicit.snapshots.len());
+        for ((ra, xa, ba, ea), (rb, xb, bb, eb)) in
+            via_exp.snapshots.iter().zip(&explicit.snapshots)
+        {
+            assert_eq!((ra, ba, ea), (rb, bb, eb));
+            for (a, b) in xa.data.iter().zip(&xb.data) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
     }
 
     #[test]

@@ -74,7 +74,7 @@ pub struct RunResult {
 
 impl RunResult {
     pub fn final_subopt(&self) -> f64 {
-        self.history.last().map(|m| m.suboptimality).or(None).unwrap_or(f64::NAN)
+        self.history.last().map_or(f64::NAN, |m| m.suboptimality)
     }
 
     /// Series (x_metric, suboptimality) for the figure CSVs.
@@ -185,40 +185,28 @@ pub fn rounds_to(
 #[cfg(test)]
 mod tests {
     //! Theorem-level integration tests: the behaviors Theorems 5, 7, 8, 9
-    //! promise, observed end-to-end through the engine.
+    //! promise, observed end-to-end through the engine. All algorithms are
+    //! constructed through the Experiment builders (the ring_exp fixture
+    //! resolves the same problem/network as the historical ring_logreg).
     use super::*;
-    use crate::algorithm::testkit::{ring_logreg, safe_eta};
-    use crate::algorithm::{solve_reference, Hyper, ProxLead, Schedule};
-    use crate::compress::{Identity, InfNormQuantizer};
+    use crate::algorithm::testkit::ring_exp;
+    use crate::algorithm::{solve_reference, ProxLead, Schedule};
+    use crate::compress::Identity;
     use crate::linalg::Spectrum;
     use crate::oracle::OracleKind;
-    use crate::problem::Problem;
-    use crate::prox::{Zero, L1};
     use crate::util::stats::loglinear_slope;
-
-    fn quantizer() -> Box<InfNormQuantizer> {
-        Box::new(InfNormQuantizer::new(2, 256))
-    }
 
     #[test]
     fn thm5_sgd_linear_to_noise_neighborhood() {
         // fixed stepsize + SGD: fast early progress, then a plateau whose
         // level scales with η² (Theorem 5's 2η²σ²/(1−ρ) ball)
-        let (p, w) = ring_logreg();
-        let x_star = solve_reference(&p, 0.0, 40_000, 1e-13);
-        let x0 = Mat::zeros(4, p.dim());
+        let exp = ring_exp();
+        let p = exp.problem.as_ref();
+        let x_star = solve_reference(p, 0.0, 40_000, 1e-13);
         let plateau = |eta: f64| {
-            let mut alg = ProxLead::new(
-                &p,
-                &w,
-                &x0,
-                Hyper::paper_default(eta),
-                OracleKind::Sgd,
-                quantizer(),
-                Box::new(Zero),
-                5,
-            );
-            let res = run(&mut alg, &p, &x_star, &RunConfig::fixed(4000).every(50));
+            let mut alg =
+                ProxLead::builder(&exp).eta(eta).oracle(OracleKind::Sgd).seed(5).build();
+            let res = run(&mut alg, p, &x_star, &RunConfig::fixed(4000).every(50));
             // average the tail — the noise ball level
             let tail: Vec<f64> =
                 res.history.iter().rev().take(20).map(|m| m.suboptimality).collect();
@@ -232,23 +220,13 @@ mod tests {
 
     #[test]
     fn thm7_diminishing_stepsize_beats_fixed_sgd() {
-        let (p, w) = ring_logreg();
-        let x_star = solve_reference(&p, 0.0, 40_000, 1e-13);
-        let x0 = Mat::zeros(4, p.dim());
-        let spec = Spectrum::of_mixing(&w.to_dense());
+        let exp = ring_exp();
+        let p = exp.problem.as_ref();
+        let x_star = solve_reference(p, 0.0, 40_000, 1e-13);
+        let spec = Spectrum::of_mixing(&exp.mixing.to_dense());
         let c = 0.2; // empirical 2-bit NSR on these dimensions
-        let mk = || {
-            ProxLead::new(
-                &p,
-                &w,
-                &x0,
-                Hyper::paper_default(safe_eta(&p)),
-                OracleKind::Sgd,
-                quantizer(),
-                Box::new(Zero),
-                5,
-            )
-        };
+        // the fixture's auto-η is the Theorem 5 bound 1/(2L)
+        let mk = || ProxLead::builder(&exp).oracle(OracleKind::Sgd).seed(5).build();
         let schedule = Schedule::Theorem7 {
             c,
             l: p.smoothness(),
@@ -258,14 +236,10 @@ mod tests {
         };
         let rounds = 20_000;
         let mut fixed = mk();
-        let fixed_res = run(&mut fixed, &p, &x_star, &RunConfig::fixed(rounds).every(500));
+        let fixed_res = run(&mut fixed, p, &x_star, &RunConfig::fixed(rounds).every(500));
         let mut dim = mk();
-        let dim_res = run(
-            &mut dim,
-            &p,
-            &x_star,
-            &RunConfig::fixed(rounds).every(500).with_schedule(schedule),
-        );
+        let dim_res =
+            run(&mut dim, p, &x_star, &RunConfig::fixed(rounds).every(500).with_schedule(schedule));
         let f_final = fixed_res.final_subopt();
         let d_final = dim_res.final_subopt();
         assert!(
@@ -277,21 +251,17 @@ mod tests {
     #[test]
     fn thm8_9_variance_reduction_linear_rate() {
         // LSVRG and SAGA traces must decay log-linearly (linear convergence)
-        let (p, w) = ring_logreg();
-        let x_star = solve_reference(&p, 5e-3, 40_000, 1e-13);
-        let x0 = Mat::zeros(4, p.dim());
+        let exp = ring_exp();
+        let p = exp.problem.as_ref();
+        let x_star = solve_reference(p, 5e-3, 40_000, 1e-13);
         for kind in [OracleKind::Lsvrg { p: 0.25 }, OracleKind::Saga] {
-            let mut alg = ProxLead::new(
-                &p,
-                &w,
-                &x0,
-                Hyper::paper_default(1.0 / (6.0 * p.smoothness())),
-                kind,
-                quantizer(),
-                Box::new(L1::new(5e-3)),
-                5,
-            );
-            let res = run(&mut alg, &p, &x_star, &RunConfig::fixed(8000).every(200));
+            let mut alg = ProxLead::builder(&exp)
+                .eta(1.0 / (6.0 * p.smoothness()))
+                .oracle(kind)
+                .prox(Box::new(crate::prox::L1::new(5e-3)))
+                .seed(5)
+                .build();
+            let res = run(&mut alg, p, &x_star, &RunConfig::fixed(8000).every(200));
             let ys: Vec<f64> =
                 res.history.iter().map(|m| m.suboptimality).filter(|s| *s > 1e-20).collect();
             let slope = loglinear_slope(&ys);
@@ -302,20 +272,12 @@ mod tests {
 
     #[test]
     fn early_stop_reports_rounds_to_target() {
-        let (p, w) = ring_logreg();
-        let x_star = solve_reference(&p, 0.0, 40_000, 1e-13);
-        let x0 = Mat::zeros(4, p.dim());
-        let mut alg = ProxLead::new(
-            &p,
-            &w,
-            &x0,
-            Hyper::paper_default(safe_eta(&p)),
-            OracleKind::Full,
-            Box::new(Identity::f64()),
-            Box::new(Zero),
-            5,
-        );
-        let res = run(&mut alg, &p, &x_star, &RunConfig::fixed(5000).until(1e-8));
+        let exp = ring_exp();
+        let p = exp.problem.as_ref();
+        let x_star = solve_reference(p, 0.0, 40_000, 1e-13);
+        let mut alg =
+            ProxLead::builder(&exp).compressor(Box::new(Identity::f64())).seed(5).build();
+        let res = run(&mut alg, p, &x_star, &RunConfig::fixed(5000).until(1e-8));
         let hit = res.rounds_to_target.expect("should reach 1e-8");
         assert!(hit < 2000, "took {hit} rounds");
         // monotone bookkeeping: bits and grad evals nondecreasing
@@ -327,20 +289,15 @@ mod tests {
 
     #[test]
     fn record_every_thins_history() {
-        let (p, w) = ring_logreg();
+        let exp = ring_exp();
+        let p = exp.problem.as_ref();
         let x_star = vec![0.0; p.dim()];
-        let x0 = Mat::zeros(4, p.dim());
-        let mut alg = ProxLead::new(
-            &p,
-            &w,
-            &x0,
-            Hyper::paper_default(0.01),
-            OracleKind::Full,
-            Box::new(Identity::f64()),
-            Box::new(Zero),
-            5,
-        );
-        let res = run(&mut alg, &p, &x_star, &RunConfig::fixed(100).every(10));
+        let mut alg = ProxLead::builder(&exp)
+            .eta(0.01)
+            .compressor(Box::new(Identity::f64()))
+            .seed(5)
+            .build();
+        let res = run(&mut alg, p, &x_star, &RunConfig::fixed(100).every(10));
         assert_eq!(res.history.len(), 11); // round 0 + 10 samples
         assert_eq!(res.history.last().unwrap().round, 100);
         // series x-axis extraction
@@ -348,5 +305,16 @@ mod tests {
         assert_eq!(pts[1].0, 10.0);
         let bits = res.series(XAxis::Bits);
         assert!(bits.last().unwrap().0 > 0.0);
+    }
+
+    #[test]
+    fn final_subopt_is_nan_on_empty_history() {
+        let res = RunResult {
+            name: "empty".into(),
+            history: Vec::new(),
+            rounds_to_target: None,
+            final_x: Mat::zeros(1, 1),
+        };
+        assert!(res.final_subopt().is_nan());
     }
 }

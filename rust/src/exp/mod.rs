@@ -1,0 +1,509 @@
+//! The one-experiment API: `Config → Experiment` resolved in exactly one
+//! place.
+//!
+//! Every entry point — the CLI (`train` / `sweep` / `info` / `solve-ref`),
+//! the sweep runtime, the figure/table benches, and the examples — used to
+//! re-implement config resolution by hand (problem construction, graph +
+//! mixing operator, auto-η, compressor, prox, reference solve). This
+//! module is the single pipeline:
+//!
+//! ```text
+//! Config (key = value file / --key overrides)
+//!    │  Experiment::from_config            — the ONE resolution pipeline
+//!    ▼
+//! Experiment {
+//!    problem: Arc<dyn Problem>   ← problem registry (logreg |
+//!                                   least-squares | lasso)
+//!    graph → mixing: MixingOp    ← topology × rule, dense|CSR auto
+//!    hyper: Hyper                ← auto-η = 1/(2L) resolved HERE
+//!    x0, compressor, prox, oracle, cached reference x*
+//! }
+//!    │
+//!    ├── experiment.algorithm()   → Box<dyn Algorithm>   (registry +
+//!    │                              typed builders, see [`registry`])
+//!    ├── experiment.run(&RunConfig)      → engine::run   (matrix form)
+//!    └── experiment.coordinator()        → node threads + wire frames
+//! ```
+//!
+//! Adding a scenario (a new problem family, algorithm, topology, or
+//! compressor) means registering it once here — every sweep axis, bench,
+//! and CLI flag picks it up automatically.
+
+pub mod registry;
+
+pub use registry::{build_problem, ALGORITHM_NAMES};
+
+use crate::algorithm::{solve_reference, Algorithm, Hyper};
+use crate::compress::Compressor;
+use crate::config::{Config, ConfigError};
+use crate::coordinator::{self, CoordConfig, CoordResult, Straggler, WireCodec};
+use crate::engine::{self, RunConfig, RunResult};
+use crate::graph::{Graph, MixingOp};
+use crate::linalg::Mat;
+use crate::oracle::OracleKind;
+use crate::problem::{Problem, ProblemKind};
+use crate::prox::Prox;
+use std::sync::{Arc, OnceLock};
+use std::time::Duration;
+
+/// Reference-solution budget shared by every resolved experiment — the
+/// figure benches' historical 80k-iteration FISTA budget, so even the most
+/// ill-conditioned grid cells converge their x* well below the 1e-9
+/// measurement targets (FISTA early-stops at the tolerance, so
+/// well-conditioned problems pay far less).
+pub const REF_MAX_ITER: usize = 80_000;
+pub const REF_TOL: f64 = 1e-12;
+
+/// A fully resolved experiment: everything a backend needs, constructed
+/// from a [`Config`] by [`Experiment::from_config`] and nowhere else.
+///
+/// Fields are public so tests and benches can substitute single components
+/// (e.g. a dense vs CSR mixing operator via [`Experiment::with_mixing`])
+/// while keeping the rest of the resolution identical.
+#[derive(Clone)]
+pub struct Experiment {
+    /// The source configuration (validated: every factory below resolves).
+    pub config: Config,
+    /// The config-declared problem family (callers injecting a custom
+    /// problem via [`ExperimentBuilder::with_problem`] may ignore it).
+    pub kind: ProblemKind,
+    pub problem: Arc<dyn Problem>,
+    pub graph: Graph,
+    pub mixing: MixingOp,
+    /// Hyperparameters with η resolved (config 0 ⇒ auto 1/(2L)).
+    pub hyper: Hyper,
+    /// Common start iterate X⁰ = 0 (n × p).
+    pub x0: Mat,
+    /// Cached high-precision reference x* (λ₁-regularized FISTA).
+    x_star: OnceLock<Arc<Vec<f64>>>,
+}
+
+impl Experiment {
+    /// The single `Config → Experiment` resolution pipeline. Validates
+    /// every factory once, so the accessors below are infallible.
+    pub fn from_config(cfg: &Config) -> Result<Experiment, ConfigError> {
+        let kind = cfg.problem_kind()?;
+        let problem = registry::build_problem(cfg)?;
+        Experiment::assemble(cfg, kind, problem)
+    }
+
+    /// [`Experiment::from_config`] with a caller-built problem instead of
+    /// the registry's synthetic one (custom data, wrapped backends).
+    /// `config.nodes` must match the problem's node count.
+    pub fn from_config_with_problem(
+        cfg: &Config,
+        problem: Arc<dyn Problem>,
+    ) -> Result<Experiment, ConfigError> {
+        let kind = cfg.problem_kind()?;
+        Experiment::assemble(cfg, kind, problem)
+    }
+
+    /// Start a builder over the default configuration.
+    pub fn builder() -> ExperimentBuilder {
+        ExperimentBuilder::new()
+    }
+
+    fn assemble(
+        cfg: &Config,
+        kind: ProblemKind,
+        problem: Arc<dyn Problem>,
+    ) -> Result<Experiment, ConfigError> {
+        if problem.num_nodes() != cfg.nodes {
+            return Err(ConfigError(format!(
+                "problem has {} nodes but the config says nodes = {}",
+                problem.num_nodes(),
+                cfg.nodes
+            )));
+        }
+        // one shared factory checklist (also what validate_config runs),
+        // so the accessors below can unwrap safely
+        validate_runtime_factories(cfg)?;
+        cfg.compressor_for_dim(problem.dim())?;
+        let graph = cfg.topology()?;
+        // auto-selects CSR on sparse graphs, so a `nodes` axis scales O(nnz)
+        let mixing = MixingOp::build(&graph, cfg.mixing_rule()?);
+        let eta = if cfg.eta > 0.0 { cfg.eta } else { 0.5 / problem.smoothness() };
+        let hyper = Hyper { eta, alpha: cfg.alpha, gamma: cfg.gamma };
+        let x0 = Mat::zeros(cfg.nodes, problem.dim());
+        Ok(Experiment {
+            config: cfg.clone(),
+            kind,
+            problem,
+            graph,
+            mixing,
+            hyper,
+            x0,
+            x_star: OnceLock::new(),
+        })
+    }
+
+    /// Swap the mixing operator (e.g. to pin dense ≡ CSR equivalence)
+    /// while keeping every other resolved component identical.
+    pub fn with_mixing(mut self, w: MixingOp) -> Experiment {
+        assert_eq!(w.n(), self.config.nodes, "mixing operator size mismatch");
+        self.mixing = w;
+        self
+    }
+
+    // --- resolved component accessors (validated at construction) -------
+
+    /// The configured stochastic gradient oracle.
+    pub fn oracle(&self) -> OracleKind {
+        self.config.oracle_kind().expect("oracle validated at construction")
+    }
+
+    /// A fresh compression operator (the `randk`/`topk` default budget is
+    /// derived from the *resolved* parameter dimension).
+    pub fn compressor(&self) -> Box<dyn Compressor> {
+        self.config
+            .compressor_for_dim(self.problem.dim())
+            .expect("compressor validated at construction")
+    }
+
+    /// The shared non-smooth term r(x) (λ₁ > 0 ⇒ ℓ1, else zero).
+    pub fn prox(&self) -> Box<dyn Prox> {
+        self.config.prox()
+    }
+
+    /// Wire codec for the message-passing coordinator.
+    pub fn codec(&self) -> WireCodec {
+        self.config.codec().expect("codec validated at construction")
+    }
+
+    /// The resolved stepsize η (auto = 1/(2L) when the config says 0).
+    pub fn eta(&self) -> f64 {
+        self.hyper.eta
+    }
+
+    // --- reference solution ---------------------------------------------
+
+    /// The high-precision reference x*, solved once per experiment (FISTA,
+    /// [`REF_MAX_ITER`] / [`REF_TOL`]) and cached.
+    pub fn reference(&self) -> Arc<Vec<f64>> {
+        self.x_star
+            .get_or_init(|| {
+                Arc::new(solve_reference(
+                    self.problem.as_ref(),
+                    self.config.lambda1,
+                    REF_MAX_ITER,
+                    REF_TOL,
+                ))
+            })
+            .clone()
+    }
+
+    /// Inject an externally cached x* (the sweep runtime shares one across
+    /// cells with identical problems). No-op if already resolved.
+    pub fn set_reference(&self, x_star: Arc<Vec<f64>>) {
+        let _ = self.x_star.set(x_star);
+    }
+
+    // --- backends --------------------------------------------------------
+
+    /// Instantiate the configured algorithm over this experiment, seeded
+    /// with the config seed (see [`registry`] for the name table).
+    pub fn algorithm(&self) -> Box<dyn Algorithm> {
+        self.algorithm_with_seed(self.config.seed)
+    }
+
+    /// [`Experiment::algorithm`] with an explicit RNG seed (sweep cells
+    /// derive theirs from the cell index).
+    pub fn algorithm_with_seed(&self, seed: u64) -> Box<dyn Algorithm> {
+        registry::build_algorithm(self, seed).expect("algorithm validated at construction")
+    }
+
+    /// Run controls matching the config (`rounds`, `record_every`).
+    pub fn run_config(&self) -> RunConfig {
+        RunConfig::fixed(self.config.rounds).every(self.config.record_every)
+    }
+
+    /// Drive the configured algorithm through the synchronous matrix
+    /// engine, measuring against the cached reference.
+    pub fn run(&self, cfg: &RunConfig) -> RunResult {
+        let mut alg = self.algorithm();
+        let x_star = self.reference();
+        engine::run(alg.as_mut(), self.problem.as_ref(), &x_star, cfg)
+    }
+
+    /// Coordinator run controls matching the config (rounds, η, codec,
+    /// α/γ, oracle, seed, straggler model).
+    pub fn coord_config(&self) -> CoordConfig {
+        let cfg = &self.config;
+        let mut c = CoordConfig::new(cfg.rounds, self.hyper.eta, self.codec());
+        c.record_every = cfg.record_every;
+        c.alpha = cfg.alpha;
+        c.gamma = cfg.gamma;
+        c.oracle = self.oracle();
+        c.seed = cfg.seed;
+        if cfg.straggler_prob > 0.0 {
+            c.straggler = Some(Straggler {
+                prob: cfg.straggler_prob,
+                delay: Duration::from_micros(cfg.straggler_us),
+            });
+        }
+        c
+    }
+
+    /// Drive distributed Prox-LEAD on node threads (the message-passing
+    /// coordinator) under [`Experiment::coord_config`].
+    pub fn coordinator(&self) -> CoordResult {
+        coordinator::run(
+            Arc::clone(&self.problem),
+            &self.mixing,
+            &self.x0,
+            Arc::from(self.prox()),
+            &self.coord_config(),
+        )
+    }
+}
+
+/// The factory checks shared by [`validate_config`] and
+/// [`Experiment::from_config`]'s assembly — one checklist, so the two
+/// paths cannot drift (a factory validated here is safe to `expect()` in
+/// the accessors; a factory added to assembly must be added here).
+fn validate_runtime_factories(cfg: &Config) -> Result<(), ConfigError> {
+    cfg.mixing_rule()?;
+    cfg.oracle_kind()?;
+    cfg.codec()?;
+    registry::ensure_algorithm(&cfg.algorithm)
+}
+
+/// Cheap, problem-construction-free validation of a configuration — every
+/// factory the runtime will call, without generating data. The sweep
+/// runtime validates whole grids up front with this before fanning out.
+pub fn validate_config(cfg: &Config) -> Result<(), ConfigError> {
+    cfg.problem_kind()?;
+    registry::check_problem_shape(cfg)?;
+    cfg.topology()?;
+    cfg.compressor()?;
+    validate_runtime_factories(cfg)
+}
+
+/// Builds an [`Experiment`] from chained config overrides — the ergonomic
+/// front door for examples and library users:
+///
+/// ```text
+/// let exp = Experiment::builder()
+///     .problem("least-squares")
+///     .nodes(8)
+///     .set("bits", "2")
+///     .build()?;
+/// let trace = exp.run(&exp.run_config());
+/// ```
+pub struct ExperimentBuilder {
+    cfg: Config,
+    overrides: Vec<(String, String)>,
+    problem: Option<Arc<dyn Problem>>,
+}
+
+impl Default for ExperimentBuilder {
+    fn default() -> ExperimentBuilder {
+        ExperimentBuilder::new()
+    }
+}
+
+impl ExperimentBuilder {
+    pub fn new() -> ExperimentBuilder {
+        ExperimentBuilder::from_config(Config::default())
+    }
+
+    /// Start from an existing configuration (e.g. a parsed file).
+    pub fn from_config(cfg: Config) -> ExperimentBuilder {
+        ExperimentBuilder { cfg, overrides: Vec::new(), problem: None }
+    }
+
+    /// Queue one `key = value` override (any config key; applied in order
+    /// at [`ExperimentBuilder::build`], where bad keys/values error).
+    pub fn set(mut self, key: &str, val: &str) -> ExperimentBuilder {
+        self.overrides.push((key.to_string(), val.to_string()));
+        self
+    }
+
+    /// Inject a caller-built problem instead of the registry's synthetic
+    /// one. `nodes` must match the problem's node count.
+    pub fn with_problem(mut self, problem: Arc<dyn Problem>) -> ExperimentBuilder {
+        self.problem = Some(problem);
+        self
+    }
+
+    // typed conveniences over the most common keys --------------------------
+
+    pub fn problem(self, kind: &str) -> ExperimentBuilder {
+        self.set("problem", kind)
+    }
+
+    pub fn algorithm(self, name: &str) -> ExperimentBuilder {
+        self.set("algorithm", name)
+    }
+
+    pub fn topology(self, name: &str) -> ExperimentBuilder {
+        self.set("topology", name)
+    }
+
+    pub fn oracle(self, name: &str) -> ExperimentBuilder {
+        self.set("oracle", name)
+    }
+
+    pub fn nodes(self, n: usize) -> ExperimentBuilder {
+        self.set("nodes", &n.to_string())
+    }
+
+    pub fn bits(self, b: u32) -> ExperimentBuilder {
+        self.set("bits", &b.to_string())
+    }
+
+    pub fn rounds(self, r: usize) -> ExperimentBuilder {
+        self.set("rounds", &r.to_string())
+    }
+
+    pub fn seed(self, s: u64) -> ExperimentBuilder {
+        self.set("seed", &s.to_string())
+    }
+
+    pub fn eta(self, eta: f64) -> ExperimentBuilder {
+        self.set("eta", &eta.to_string())
+    }
+
+    pub fn lambda1(self, l1: f64) -> ExperimentBuilder {
+        self.set("lambda1", &l1.to_string())
+    }
+
+    pub fn lambda2(self, l2: f64) -> ExperimentBuilder {
+        self.set("lambda2", &l2.to_string())
+    }
+
+    /// Apply the overrides and resolve. All configuration errors (unknown
+    /// keys, bad values, unresolvable factories) surface here.
+    pub fn build(self) -> Result<Experiment, ConfigError> {
+        let mut cfg = self.cfg;
+        for (k, v) in &self.overrides {
+            cfg.set(k, v)?;
+        }
+        match self.problem {
+            Some(p) => Experiment::from_config_with_problem(&cfg, p),
+            None => Experiment::from_config(&cfg),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problem::ProblemKind;
+
+    fn tiny(problem: &str) -> Config {
+        Config::parse(&format!(
+            "problem = {problem}\nnodes = 4\nsamples_per_node = 24\ndim = 6\nclasses = 3\n\
+             batches = 4\nlambda1 = 0.005\nlambda2 = 0.1\nrounds = 40\nrecord_every = 10\n"
+        ))
+        .expect("tiny config")
+    }
+
+    #[test]
+    fn from_config_resolves_every_component() {
+        let exp = Experiment::from_config(&tiny("logreg")).unwrap();
+        assert_eq!(exp.kind, ProblemKind::LogReg);
+        assert_eq!(exp.problem.num_nodes(), 4);
+        assert_eq!(exp.problem.dim(), 6 * 3);
+        assert_eq!(exp.x0.rows, 4);
+        assert_eq!(exp.x0.cols, 18);
+        assert_eq!(exp.mixing.n(), 4);
+        // auto-η resolved here, once
+        assert!((exp.hyper.eta - 0.5 / exp.problem.smoothness()).abs() < 1e-15);
+        assert_eq!(exp.hyper.alpha, 0.5);
+        assert_eq!(exp.compressor().name(), "2bit");
+        assert_eq!(exp.prox().name(), "l1(0.005)");
+    }
+
+    #[test]
+    fn explicit_eta_wins_over_auto() {
+        let mut cfg = tiny("logreg");
+        cfg.eta = 0.07;
+        let exp = Experiment::from_config(&cfg).unwrap();
+        assert_eq!(exp.hyper.eta, 0.07);
+    }
+
+    #[test]
+    fn least_squares_and_lasso_resolve() {
+        for (name, kind) in
+            [("least-squares", ProblemKind::LeastSquares), ("lasso", ProblemKind::Lasso)]
+        {
+            let exp = Experiment::from_config(&tiny(name)).unwrap();
+            assert_eq!(exp.kind, kind);
+            // regression problems are p = dim (no class flattening)
+            assert_eq!(exp.problem.dim(), 6);
+            assert!(exp.problem.smoothness().is_finite());
+            assert!(exp.problem.strong_convexity() > 0.0);
+        }
+    }
+
+    #[test]
+    fn reference_is_cached_and_injectable() {
+        let exp = Experiment::from_config(&tiny("logreg")).unwrap();
+        let a = exp.reference();
+        let b = exp.reference();
+        assert!(Arc::ptr_eq(&a, &b));
+        // injection after the fact is a no-op
+        exp.set_reference(Arc::new(vec![0.0; exp.problem.dim()]));
+        assert!(Arc::ptr_eq(&exp.reference(), &a));
+        // injection before first use wins
+        let exp2 = Experiment::from_config(&tiny("logreg")).unwrap();
+        exp2.set_reference(Arc::clone(&a));
+        assert!(Arc::ptr_eq(&exp2.reference(), &a));
+    }
+
+    #[test]
+    fn run_drives_the_engine() {
+        let exp = Experiment::from_config(&tiny("logreg")).unwrap();
+        let res = exp.run(&exp.run_config());
+        assert_eq!(res.history.last().unwrap().round, 40);
+        assert!(res.final_subopt().is_finite());
+        assert!(res.name.starts_with("Prox-LEAD"));
+    }
+
+    #[test]
+    fn builder_routes_overrides_and_errors() {
+        let exp = Experiment::builder()
+            .problem("least-squares")
+            .nodes(4)
+            .set("samples_per_node", "24")
+            .set("dim", "6")
+            .set("batches", "4")
+            .build()
+            .unwrap();
+        assert_eq!(exp.kind, ProblemKind::LeastSquares);
+        assert!(Experiment::builder().set("warp_drive", "on").build().is_err());
+        assert!(Experiment::builder().set("problem", "sudoku").build().is_err());
+        assert!(Experiment::builder().algorithm("gradient-descent-but-wrong").build().is_err());
+    }
+
+    #[test]
+    fn validate_config_is_cheap_and_strict() {
+        assert!(validate_config(&tiny("logreg")).is_ok());
+        assert!(validate_config(&tiny("lasso")).is_ok());
+        let mut bad = tiny("logreg");
+        bad.algorithm = "nope".into();
+        assert!(validate_config(&bad).is_err());
+        let mut bad = tiny("logreg");
+        bad.samples_per_node = 25; // not divisible into 4 batches
+        assert!(validate_config(&bad).is_err());
+        let mut bad = tiny("logreg");
+        bad.backend = "tpu".into();
+        assert!(validate_config(&bad).is_err());
+    }
+
+    #[test]
+    fn custom_problem_injection_checks_node_count() {
+        let (shards, _) = crate::problem::data::sparse_regression(4, 24, 8, 3, 0.05, 5);
+        let p: Arc<dyn Problem> = Arc::new(crate::problem::LeastSquares::new(shards, 1e-2, 4));
+        let ok = ExperimentBuilder::new()
+            .nodes(4)
+            .set("samples_per_node", "24")
+            .with_problem(Arc::clone(&p))
+            .build();
+        assert!(ok.is_ok());
+        assert_eq!(ok.unwrap().problem.dim(), 8);
+        let bad = ExperimentBuilder::new().nodes(8).with_problem(p).build();
+        assert!(bad.unwrap_err().0.contains("nodes"));
+    }
+}

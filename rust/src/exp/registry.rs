@@ -1,0 +1,196 @@
+//! The problem and algorithm registries — name → construction, in one
+//! place each.
+//!
+//! **Problems** (`problem =` config key, [`ProblemKind`]): `logreg` builds
+//! the §5 blob-classification workload (optionally wrapped by the PJRT
+//! backend), `least-squares` / `lasso` build quadratic suites from the
+//! regression generator (dense vs k-sparse ground truth).
+//!
+//! **Algorithms** (`algorithm =` config key): every name the sweep grid,
+//! the CLI, and the benches accept, dispatching to the typed builders in
+//! [`crate::algorithm::builder`]. Per-family parameter conventions:
+//!
+//! - `prox-lead` / `lead`: (η, α, γ) from the experiment (`lead` forces
+//!   r ≡ 0);
+//! - `dgd` / `prox-dgd`: η;
+//! - `choco`: η with γ as the gossip stepsize γ_c;
+//! - `pdgm` / `lessbit-b`: θ = γ/(2η) (the PDHG view), α for COMM;
+//! - `dualgd` / `lessbit-a`: dual stepsize θ = η when set explicitly, else
+//!   μ/2 (μ/4 when compressed), with a fixed warm-started inner solve.
+
+use super::Experiment;
+use crate::algorithm::{Algorithm, Choco, Dgd, DualGd, Nids, P2d2, Pdgm, PgExtra, ProxLead};
+use crate::config::{Config, ConfigError};
+use crate::problem::data::{blobs, regression};
+use crate::problem::{LeastSquares, LogReg, Problem, ProblemKind};
+use crate::prox::Zero;
+use std::sync::Arc;
+
+/// Canonical algorithm names (aliases: `proxlead`, `prox-dgd`, `pgextra`,
+/// `lessbit-a`, `lessbit-b`). The exp-level matrix test iterates this.
+pub const ALGORITHM_NAMES: &[&str] =
+    &["prox-lead", "lead", "dgd", "choco", "nids", "p2d2", "pg-extra", "pdgm", "dualgd"];
+
+/// Err unless `name` is a registered algorithm (canonical or alias).
+pub fn ensure_algorithm(name: &str) -> Result<(), ConfigError> {
+    match name {
+        "prox-lead" | "proxlead" | "lead" | "dgd" | "prox-dgd" | "choco" | "nids" | "p2d2"
+        | "pg-extra" | "pgextra" | "pdgm" | "lessbit-b" | "dualgd" | "lessbit-a" => Ok(()),
+        a => Err(ConfigError(format!("unknown algorithm '{a}'"))),
+    }
+}
+
+/// Shape checks the generators would otherwise `assert!` on: positive
+/// node/batch counts and batch-divisible per-node sample counts.
+pub fn check_problem_shape(cfg: &Config) -> Result<(), ConfigError> {
+    if cfg.nodes == 0 {
+        return Err(ConfigError("nodes must be positive".into()));
+    }
+    if cfg.batches == 0 || cfg.samples_per_node % cfg.batches != 0 {
+        return Err(ConfigError(format!(
+            "samples_per_node ({}) must split into batches ({}) evenly",
+            cfg.samples_per_node, cfg.batches
+        )));
+    }
+    match cfg.backend.as_str() {
+        "native" | "xla" => Ok(()),
+        b => Err(ConfigError(format!("unknown backend '{b}' (native | xla)"))),
+    }
+}
+
+/// The problem registry: build the instance a config's `problem` key
+/// names. Sweeps and the CLI both construct through here (the PJRT/XLA
+/// wrapper is applied when `backend = xla`; logreg only).
+pub fn build_problem(cfg: &Config) -> Result<Arc<dyn Problem>, ConfigError> {
+    let kind = cfg.problem_kind()?;
+    check_problem_shape(cfg)?;
+    Ok(match kind {
+        ProblemKind::LogReg => {
+            let native =
+                LogReg::new(blobs(&cfg.blob_spec()), cfg.classes, cfg.lambda2, cfg.batches);
+            if cfg.backend == "xla" {
+                wrap_xla(cfg, native)?
+            } else {
+                Arc::new(native)
+            }
+        }
+        ProblemKind::LeastSquares | ProblemKind::Lasso => {
+            if cfg.backend == "xla" {
+                return Err(ConfigError(
+                    "backend = xla supports only problem = logreg (no regression artifacts)"
+                        .into(),
+                ));
+            }
+            // lasso: k-sparse ground truth at the canonical p/8 support;
+            // least-squares: dense ground truth (ridge suite)
+            let sparsity = if kind == ProblemKind::Lasso { (cfg.dim / 8).max(1) } else { 0 };
+            let (shards, _x_true) = regression(&cfg.reg_spec(sparsity));
+            Arc::new(LeastSquares::new(shards, cfg.lambda2, cfg.batches))
+        }
+    })
+}
+
+/// Wrap a native logreg in the PJRT-backed gradient executor.
+fn wrap_xla(cfg: &Config, native: LogReg) -> Result<Arc<dyn Problem>, ConfigError> {
+    use crate::runtime::{default_artifact_dir, PjrtRuntime, XlaLogReg};
+    let rt = PjrtRuntime::load(&default_artifact_dir()).map_err(|e| {
+        ConfigError(format!("backend = xla requested but artifacts unavailable: {e}"))
+    })?;
+    let xla = XlaLogReg::new(native, Arc::new(rt))
+        .map_err(|e| ConfigError(format!("backend = xla: {e}")))?;
+    if !xla.batch_on_xla() && cfg.oracle != "full" {
+        eprintln!("note: no batch-shape artifact; stochastic draws use the native kernel");
+    }
+    Ok(Arc::new(xla))
+}
+
+/// The algorithm registry: instantiate the algorithm an experiment's
+/// config names, over the experiment's resolved components, with an
+/// explicit RNG seed.
+pub fn build_algorithm(exp: &Experiment, seed: u64) -> Result<Box<dyn Algorithm>, ConfigError> {
+    let cfg = &exp.config;
+    Ok(match cfg.algorithm.as_str() {
+        "prox-lead" | "proxlead" => Box::new(ProxLead::builder(exp).seed(seed).build()),
+        "lead" => Box::new(ProxLead::builder(exp).prox(Box::new(Zero)).seed(seed).build()),
+        "dgd" | "prox-dgd" => Box::new(Dgd::builder(exp).seed(seed).build()),
+        "choco" => Box::new(Choco::builder(exp).seed(seed).build()),
+        "nids" => Box::new(Nids::builder(exp).seed(seed).build()),
+        "p2d2" => Box::new(P2d2::builder(exp).seed(seed).build()),
+        "pg-extra" | "pgextra" => Box::new(PgExtra::builder(exp).seed(seed).build()),
+        "pdgm" | "lessbit-b" => Box::new(Pdgm::builder(exp).seed(seed).build()),
+        "dualgd" | "lessbit-a" => {
+            // explicit η is read as the dual stepsize θ; otherwise the
+            // builder derives the theory default (μ/2, μ/4 compressed)
+            let mut b = DualGd::builder(exp).seed(seed);
+            if cfg.eta > 0.0 {
+                b = b.theta(cfg.eta);
+            }
+            Box::new(b.build())
+        }
+        a => return Err(ConfigError(format!("unknown algorithm '{a}'"))),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(problem: &str) -> Config {
+        Config::parse(&format!(
+            "problem = {problem}\nnodes = 4\nsamples_per_node = 24\ndim = 6\nclasses = 3\n\
+             batches = 4\nlambda2 = 0.1\n"
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn problem_registry_builds_every_kind() {
+        for (name, p_dim) in [("logreg", 18), ("least-squares", 6), ("lasso", 6)] {
+            let p = build_problem(&tiny(name)).unwrap();
+            assert_eq!(p.num_nodes(), 4, "{name}");
+            assert_eq!(p.dim(), p_dim, "{name}");
+            assert_eq!(p.num_batches(), 4, "{name}");
+        }
+    }
+
+    #[test]
+    fn lasso_truth_is_sparser_than_least_squares() {
+        // the two regression kinds draw different ground truths
+        let cfg = tiny("lasso");
+        let (_, x_lasso) = regression(&cfg.reg_spec((cfg.dim / 8).max(1)));
+        let (_, x_dense) = regression(&cfg.reg_spec(0));
+        let nnz = |v: &[f64]| v.iter().filter(|&&x| x != 0.0).count();
+        assert_eq!(nnz(&x_lasso), 1); // dim 6 ⇒ support max(6/8, 1) = 1
+        assert!(nnz(&x_dense) > 3);
+    }
+
+    #[test]
+    fn xla_backend_is_logreg_only() {
+        let mut cfg = tiny("least-squares");
+        cfg.backend = "xla".into();
+        assert!(build_problem(&cfg).unwrap_err().0.contains("logreg"));
+    }
+
+    #[test]
+    fn shape_checks_reject_bad_batching() {
+        let mut cfg = tiny("logreg");
+        cfg.batches = 5; // 24 % 5 != 0
+        assert!(check_problem_shape(&cfg).is_err());
+        cfg.batches = 0;
+        assert!(check_problem_shape(&cfg).is_err());
+        cfg.batches = 4;
+        cfg.backend = "quantum".into();
+        assert!(check_problem_shape(&cfg).is_err());
+    }
+
+    #[test]
+    fn every_name_in_the_registry_validates() {
+        for name in ALGORITHM_NAMES {
+            assert!(ensure_algorithm(name).is_ok(), "{name}");
+        }
+        for alias in ["proxlead", "prox-dgd", "pgextra", "lessbit-a", "lessbit-b"] {
+            assert!(ensure_algorithm(alias).is_ok(), "{alias}");
+        }
+        assert!(ensure_algorithm("adamw").is_err());
+    }
+}

@@ -21,6 +21,7 @@ pub mod compress;
 pub mod config;
 pub mod coordinator;
 pub mod engine;
+pub mod exp;
 pub mod graph;
 pub mod linalg;
 pub mod oracle;

@@ -8,18 +8,15 @@
 //! - `solve-ref`: high-precision centralized reference x*;
 //! - `info`: condition numbers, spectra, artifact registry;
 //! - `config`: print the effective configuration.
+//!
+//! Every subcommand resolves its configuration through the one
+//! [`Experiment`] pipeline — no per-command factory wiring.
 
 use proxlead::algorithm::{solve_reference, suboptimality};
 use proxlead::cli::{self, Invocation, USAGE};
-use proxlead::config::Config;
-use proxlead::coordinator::{self, CoordConfig, Straggler};
-use proxlead::graph::MixingOp;
-use proxlead::linalg::Mat;
-use proxlead::problem::{LogReg, Problem};
-use proxlead::prox::Prox;
-use proxlead::runtime::{default_artifact_dir, PjrtRuntime, XlaLogReg};
-use std::sync::Arc;
-use std::time::Duration;
+use proxlead::exp::Experiment;
+use proxlead::problem::Problem;
+use proxlead::runtime::{default_artifact_dir, PjrtRuntime};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -51,51 +48,37 @@ fn main() {
     std::process::exit(code);
 }
 
-fn build_problem(cfg: &Config) -> Arc<dyn Problem> {
-    let native = LogReg::new(
-        proxlead::problem::data::blobs(&cfg.blob_spec()),
-        cfg.classes,
-        cfg.lambda2,
-        cfg.batches,
-    );
-    if cfg.backend == "xla" {
-        let rt = Arc::new(
-            PjrtRuntime::load(&default_artifact_dir())
-                .expect("XLA backend requested — run `make artifacts` first"),
-        );
-        let xla = XlaLogReg::new(native, rt).expect("artifact for this shape");
-        if !xla.batch_on_xla() && cfg.oracle != "full" {
-            eprintln!("note: no batch-shape artifact; stochastic draws use the native kernel");
-        }
-        Arc::new(xla)
-    } else {
-        Arc::new(native)
-    }
+/// Resolve the invocation's config, or print the error and exit code 2.
+fn resolve(inv: &Invocation) -> Result<Experiment, i32> {
+    Experiment::from_config(&inv.config).map_err(|e| {
+        eprintln!("{e}");
+        2
+    })
 }
 
 fn cmd_train(inv: &Invocation) -> i32 {
     let cfg = &inv.config;
-    let problem = build_problem(cfg);
-    let graph = cfg.topology().expect("topology");
-    let w = MixingOp::build(&graph, cfg.mixing_rule().expect("mixing"));
+    let exp = match resolve(inv) {
+        Ok(e) => e,
+        Err(code) => return code,
+    };
     // power iteration: O(nnz) per step, fine at any n (no dense eigensolve)
-    let spec = w.gap_estimate();
-    let eta = if cfg.eta > 0.0 { cfg.eta } else { 0.5 / problem.smoothness() };
-
+    let spec = exp.mixing.gap_estimate();
     println!(
-        "prox-lead train: {} | {} nodes ({}, {}, {}) | {} | η={eta:.4} α={} γ={}",
-        problem.name(),
+        "prox-lead train: {} | {} nodes ({}, {}, {}) | {} | η={:.4} α={} γ={}",
+        exp.problem.name(),
         cfg.nodes,
         cfg.topology,
         cfg.mixing,
-        if w.is_sparse() { "csr" } else { "dense" },
-        cfg.codec().expect("codec").name(),
+        if exp.mixing.is_sparse() { "csr" } else { "dense" },
+        exp.codec().name(),
+        exp.hyper.eta,
         cfg.alpha,
         cfg.gamma,
     );
     println!(
         "κ_f = {:.1}, κ_g {} {:.2}, data = label-{}",
-        problem.smoothness() / problem.strong_convexity(),
+        exp.problem.kappa_f(),
         // ≈ when power iteration exhausted its budget (near-degenerate
         // spectral edge, e.g. very large rings) — estimate, not exact
         if spec.converged { "=" } else { "≈" },
@@ -103,27 +86,12 @@ fn cmd_train(inv: &Invocation) -> i32 {
         if cfg.shuffled { "shuffled (iid)" } else { "sorted (non-iid)" }
     );
 
-    // reference for the suboptimality metric
+    // reference for the suboptimality metric (cached on the experiment)
     eprint!("solving reference x*… ");
-    let x_star = solve_reference(problem.as_ref(), cfg.lambda1, 60_000, 1e-12);
+    let x_star = exp.reference();
     eprintln!("done");
 
-    let x0 = Mat::zeros(cfg.nodes, problem.dim());
-    let prox: Arc<dyn Prox> = Arc::from(cfg.prox());
-    let mut ccfg = CoordConfig::new(cfg.rounds, eta, cfg.codec().expect("codec"));
-    ccfg.record_every = cfg.record_every;
-    ccfg.alpha = cfg.alpha;
-    ccfg.gamma = cfg.gamma;
-    ccfg.oracle = cfg.oracle_kind().expect("oracle");
-    ccfg.seed = cfg.seed;
-    if cfg.straggler_prob > 0.0 {
-        ccfg.straggler = Some(Straggler {
-            prob: cfg.straggler_prob,
-            delay: Duration::from_micros(cfg.straggler_us),
-        });
-    }
-
-    let res = coordinator::run(Arc::clone(&problem), &w, &x0, prox, &ccfg);
+    let res = exp.coordinator();
 
     println!("round      subopt        consensus     Mbits    grad-evals");
     let mut csv = String::from("round,suboptimality,consensus,bits,grad_evals\n");
@@ -216,9 +184,12 @@ fn cmd_sweep(inv: &Invocation) -> i32 {
 fn cmd_solve_ref(inv: &Invocation) -> i32 {
     let cfg = &inv.config;
     let tol: f64 = inv.flag("tol").map(|t| t.parse().expect("tol")).unwrap_or(1e-12);
-    let problem = build_problem(cfg);
-    let x = solve_reference(problem.as_ref(), cfg.lambda1, 100_000, tol);
-    let loss = problem.global_loss(&x);
+    let exp = match resolve(inv) {
+        Ok(e) => e,
+        Err(code) => return code,
+    };
+    let x = solve_reference(exp.problem.as_ref(), cfg.lambda1, 100_000, tol);
+    let loss = exp.problem.global_loss(&x);
     let nnz = x.iter().filter(|v| v.abs() > 1e-9).count();
     println!(
         "x*: dim {} | smooth loss {loss:.6} | nnz {nnz}/{} (λ1 = {})",
@@ -236,18 +207,28 @@ fn cmd_solve_ref(inv: &Invocation) -> i32 {
 
 fn cmd_info(inv: &Invocation) -> i32 {
     let cfg = &inv.config;
-    let graph = cfg.topology().expect("topology");
-    let w = MixingOp::build(&graph, cfg.mixing_rule().expect("mixing"));
-    let spec = w.gap_estimate();
+    // info diagnoses the native problem/network; PJRT availability is
+    // reported separately below (no hard dependency on artifacts, and no
+    // double runtime load when they exist)
+    let mut native_cfg = inv.config.clone();
+    native_cfg.backend = "native".into();
+    let exp = match Experiment::from_config(&native_cfg) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let spec = exp.mixing.gap_estimate();
     println!("prox-lead {}", proxlead::version());
     println!(
         "network: {} n={} edges={} nnz={} ({}) | λ2(W){eq}{:.4} λn(W){eq}{:.4} \
          κ_g{eq}{:.3} gap{eq}{:.4}",
         cfg.topology,
         cfg.nodes,
-        graph.num_edges(),
-        w.nnz(),
-        if w.is_sparse() { "csr" } else { "dense" },
+        exp.graph.num_edges(),
+        exp.mixing.nnz(),
+        if exp.mixing.is_sparse() { "csr" } else { "dense" },
         spec.lambda2,
         spec.lambda_min,
         spec.kappa_g(),
@@ -255,20 +236,22 @@ fn cmd_info(inv: &Invocation) -> i32 {
         // ≈ when the power iteration exhausted its budget (see GapEstimate)
         eq = if spec.converged { "=" } else { "≈" },
     );
-    let problem = LogReg::new(
-        proxlead::problem::data::blobs(&cfg.blob_spec()),
-        cfg.classes,
-        cfg.lambda2,
-        cfg.batches,
+    print!(
+        "problem: {} | L={:.3} μ={:.3} κ_f={:.1}",
+        exp.problem.name(),
+        exp.problem.smoothness(),
+        exp.problem.strong_convexity(),
+        exp.problem.kappa_f(),
     );
-    println!(
-        "problem: {} | L={:.3} μ={:.3} κ_f={:.1} | heterogeneity index {:.3}",
-        problem.name(),
-        problem.smoothness(),
-        problem.strong_convexity(),
-        problem.kappa_f(),
-        proxlead::problem::data::heterogeneity_index(problem.shards(), cfg.classes),
-    );
+    // the built problem exposes its own shards — no second data generation
+    if let Some(lr) = exp.problem.as_logreg() {
+        println!(
+            " | heterogeneity index {:.3}",
+            proxlead::problem::data::heterogeneity_index(lr.shards(), cfg.classes),
+        );
+    } else {
+        println!();
+    }
     match PjrtRuntime::load(&default_artifact_dir()) {
         Ok(rt) => {
             let m = rt.manifest();

@@ -115,8 +115,66 @@ pub struct RegShard {
     pub targets: Vec<f64>,
 }
 
+/// Configuration for the synthetic regression generator behind the
+/// least-squares / lasso problem kinds: Gaussian designs A_i and targets
+/// b_i = A_i x♯ + ε distributed over `nodes` shards.
+#[derive(Clone, Debug)]
+pub struct RegSpec {
+    pub nodes: usize,
+    pub samples_per_node: usize,
+    pub dim: usize,
+    /// Non-zeros in the ground truth x♯: 0 ⇒ dense Gaussian x♯ (the ridge
+    /// suite), k > 0 ⇒ k-sparse ±[0.5, 1.5] entries (the lasso suite).
+    pub sparsity: usize,
+    /// Target noise std ε.
+    pub noise: f64,
+    pub seed: u64,
+}
+
+/// Generate regression data per [`RegSpec`]. Returns (shards, x♯).
+/// Deterministic in the seed; the sparse path draws the exact sequence
+/// [`sparse_regression`] historically drew, so existing fixtures are
+/// unchanged.
+pub fn regression(spec: &RegSpec) -> (Vec<RegShard>, Vec<f64>) {
+    assert!(spec.nodes > 0 && spec.dim > 0);
+    let mut rng = Rng::new(spec.seed);
+    let dim = spec.dim;
+    let mut x_true = vec![0.0; dim];
+    if spec.sparsity == 0 || spec.sparsity >= dim {
+        // dense ground truth (ridge / generic least squares)
+        for v in x_true.iter_mut() {
+            *v = rng.normal();
+        }
+    } else {
+        // k-sparse ground truth with ±1-ish entries
+        let mut idx: Vec<usize> = (0..dim).collect();
+        for i in (1..dim).rev() {
+            let j = rng.below(i + 1);
+            idx.swap(i, j);
+        }
+        for &j in idx.iter().take(spec.sparsity) {
+            x_true[j] = if rng.bernoulli(0.5) { 1.0 } else { -1.0 } * rng.range(0.5, 1.5);
+        }
+    }
+
+    let shards = (0..spec.nodes)
+        .map(|_| {
+            let mut a = Mat::zeros(spec.samples_per_node, dim);
+            rng.fill_normal(&mut a.data);
+            let targets: Vec<f64> = (0..spec.samples_per_node)
+                .map(|s| {
+                    crate::linalg::matrix::vdot(a.row(s), &x_true) + spec.noise * rng.normal()
+                })
+                .collect();
+            RegShard { features: a, targets }
+        })
+        .collect();
+    (shards, x_true)
+}
+
 /// Sparse linear-regression data b = A x♯ + ε with a k-sparse ground truth,
-/// for the decentralized lasso example. Returns (shards, x♯).
+/// for the decentralized lasso example. Returns (shards, x♯). Thin wrapper
+/// over [`regression`] (`sparsity >= dim` or 0 falls back to a dense x♯).
 pub fn sparse_regression(
     nodes: usize,
     samples_per_node: usize,
@@ -125,31 +183,7 @@ pub fn sparse_regression(
     noise: f64,
     seed: u64,
 ) -> (Vec<RegShard>, Vec<f64>) {
-    let mut rng = Rng::new(seed);
-    // k-sparse ground truth with ±1-ish entries
-    let mut x_true = vec![0.0; dim];
-    let mut idx: Vec<usize> = (0..dim).collect();
-    for i in (1..dim).rev() {
-        let j = rng.below(i + 1);
-        idx.swap(i, j);
-    }
-    for &j in idx.iter().take(sparsity.min(dim)) {
-        x_true[j] = if rng.bernoulli(0.5) { 1.0 } else { -1.0 } * rng.range(0.5, 1.5);
-    }
-
-    let shards = (0..nodes)
-        .map(|_| {
-            let mut a = Mat::zeros(samples_per_node, dim);
-            rng.fill_normal(&mut a.data);
-            let targets: Vec<f64> = (0..samples_per_node)
-                .map(|s| {
-                    crate::linalg::matrix::vdot(a.row(s), &x_true) + noise * rng.normal()
-                })
-                .collect();
-            RegShard { features: a, targets }
-        })
-        .collect();
-    (shards, x_true)
+    regression(&RegSpec { nodes, samples_per_node, dim, sparsity, noise, seed })
 }
 
 /// Heterogeneity index of a label partition: mean over nodes of the
@@ -250,6 +284,34 @@ mod tests {
                 assert!((pred - b).abs() < 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn dense_regression_ground_truth() {
+        let spec = RegSpec {
+            nodes: 3,
+            samples_per_node: 20,
+            dim: 10,
+            sparsity: 0,
+            noise: 0.0,
+            seed: 11,
+        };
+        let (shards, x_true) = regression(&spec);
+        assert_eq!(shards.len(), 3);
+        // dense truth: every coordinate drawn (almost surely non-zero)
+        assert!(x_true.iter().filter(|&&v| v != 0.0).count() > 7);
+        for s in &shards {
+            assert_eq!(s.features.rows, 20);
+            assert_eq!(s.features.cols, 10);
+            for (i, &b) in s.targets.iter().enumerate() {
+                let pred = crate::linalg::matrix::vdot(s.features.row(i), &x_true);
+                assert!((pred - b).abs() < 1e-12);
+            }
+        }
+        // deterministic in the seed
+        let (again, xt) = regression(&spec);
+        assert_eq!(again[0].features.data, shards[0].features.data);
+        assert_eq!(xt, x_true);
     }
 
     #[test]

@@ -216,6 +216,9 @@ impl Problem for LogReg {
     fn dim(&self) -> usize {
         self.features * self.classes
     }
+    fn as_logreg(&self) -> Option<&LogReg> {
+        Some(self)
+    }
     fn num_nodes(&self) -> usize {
         self.shards.len()
     }

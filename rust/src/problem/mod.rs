@@ -20,6 +20,59 @@ pub use logreg::LogReg;
 pub use quadratic::LeastSquares;
 
 use crate::linalg::Mat;
+use std::fmt;
+
+/// Which problem family a configuration names — the key of the problem
+/// registry (`problem = logreg | least-squares | lasso` in config files).
+/// Resolution from a [`crate::config::Config`] to a built [`Problem`]
+/// happens in exactly one place: [`crate::exp::build_problem`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProblemKind {
+    /// Multinomial logistic regression + λ₂‖x‖² on label-sorted Gaussian
+    /// blobs — the paper's §5 workload ([`LogReg`]).
+    LogReg,
+    /// Ridge-regularized least squares on dense-ground-truth regression
+    /// data — Table 3's quadratic suite ([`LeastSquares`]).
+    LeastSquares,
+    /// Least squares on k-sparse-ground-truth data with λ₁‖x‖₁ handled by
+    /// the prox — the decentralized lasso (also [`LeastSquares`]; the
+    /// generator and the intended prox differ).
+    Lasso,
+}
+
+impl ProblemKind {
+    /// Canonical config-file spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProblemKind::LogReg => "logreg",
+            ProblemKind::LeastSquares => "least-squares",
+            ProblemKind::Lasso => "lasso",
+        }
+    }
+}
+
+impl fmt::Display for ProblemKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for ProblemKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<ProblemKind, String> {
+        Ok(match s {
+            "logreg" | "logistic" | "softmax" => ProblemKind::LogReg,
+            "least-squares" | "leastsquares" | "lsq" | "ridge" => ProblemKind::LeastSquares,
+            "lasso" | "sparse-regression" => ProblemKind::Lasso,
+            other => {
+                return Err(format!(
+                    "unknown problem '{other}' (expected logreg | least-squares | lasso)"
+                ))
+            }
+        })
+    }
+}
 
 /// The smooth part of a decentralized composite problem: n nodes, each with
 /// a local f_i that is an average of m batch losses f_ij (finite-sum form).
@@ -85,6 +138,13 @@ pub trait Problem: Send + Sync {
     /// Condition number κ_f = L/μ.
     fn kappa_f(&self) -> f64 {
         self.smoothness() / self.strong_convexity()
+    }
+
+    /// Downcast hook for logreg-specific diagnostics (e.g. the
+    /// heterogeneity index over class shards). Wrappers that delegate to a
+    /// native [`LogReg`] override this to expose it.
+    fn as_logreg(&self) -> Option<&LogReg> {
+        None
     }
 }
 
@@ -179,6 +239,20 @@ pub(crate) mod testutil {
 mod tests {
     use super::*;
     use crate::util::rng::Rng;
+
+    #[test]
+    fn problem_kind_parses_aliases_and_rejects_unknown() {
+        assert_eq!("logreg".parse::<ProblemKind>().unwrap(), ProblemKind::LogReg);
+        assert_eq!("logistic".parse::<ProblemKind>().unwrap(), ProblemKind::LogReg);
+        assert_eq!("least-squares".parse::<ProblemKind>().unwrap(), ProblemKind::LeastSquares);
+        assert_eq!("ridge".parse::<ProblemKind>().unwrap(), ProblemKind::LeastSquares);
+        assert_eq!("lasso".parse::<ProblemKind>().unwrap(), ProblemKind::Lasso);
+        assert!("warp".parse::<ProblemKind>().is_err());
+        // canonical names round-trip through FromStr
+        for kind in [ProblemKind::LogReg, ProblemKind::LeastSquares, ProblemKind::Lasso] {
+            assert_eq!(kind.name().parse::<ProblemKind>().unwrap(), kind);
+        }
+    }
 
     #[test]
     fn spectral_norm_of_diagonal() {

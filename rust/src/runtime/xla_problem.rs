@@ -93,6 +93,9 @@ impl Problem for XlaLogReg {
     fn dim(&self) -> usize {
         self.native.dim()
     }
+    fn as_logreg(&self) -> Option<&crate::problem::LogReg> {
+        Some(&self.native)
+    }
     fn num_nodes(&self) -> usize {
         self.native.num_nodes()
     }
@@ -201,28 +204,22 @@ mod tests {
 
     #[test]
     fn prox_lead_runs_on_xla_backend() {
-        use crate::algorithm::{Algorithm, Hyper, ProxLead};
-        use crate::compress::InfNormQuantizer;
-        use crate::graph::{Graph, MixingOp, MixingRule};
-        use crate::linalg::Mat;
-        use crate::oracle::OracleKind;
-        use crate::prox::L1;
+        use crate::algorithm::{Algorithm, ProxLead};
+        use crate::exp::Experiment;
         let Some(p) = setup() else { return };
-        let g = Graph::ring(3);
-        let w = MixingOp::build(&g, MixingRule::Metropolis);
-        let x0 = Mat::zeros(3, p.dim());
-        let mut alg = ProxLead::new(
-            &p,
-            &w,
-            &x0,
-            Hyper::paper_default(0.5 / p.smoothness()),
-            OracleKind::Full,
-            Box::new(InfNormQuantizer::new(2, 256)),
-            Box::new(L1::new(5e-3)),
-            1,
-        );
+        let p = Arc::new(p);
+        let exp = Experiment::builder()
+            .nodes(3)
+            .set("mixing", "mh")
+            .set("lambda1", "5e-3")
+            .set("bits", "2")
+            .seed(1)
+            .with_problem(Arc::clone(&p) as Arc<dyn Problem>)
+            .build()
+            .expect("xla experiment");
+        let mut alg = ProxLead::builder(&exp).build();
         for _ in 0..50 {
-            alg.step(&p);
+            alg.step(p.as_ref());
         }
         let zeros = vec![0.0; p.dim()];
         let loss_now: f64 = (0..3).map(|i| p.loss(i, alg.x().row(0))).sum();

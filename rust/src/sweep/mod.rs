@@ -24,33 +24,20 @@ pub mod spec;
 pub use pool::{parallel_map, parallel_map_progress};
 pub use spec::{Axis, Cell, SweepSpec};
 
-use crate::algorithm::{
-    solve_reference, Algorithm, Choco, Dgd, DualGd, Hyper, Nids, P2d2, Pdgm, PgExtra, ProxLead,
-};
+// Reference-solution budget shared by every cell (now owned by the
+// Experiment API; re-exported so sweep callers keep compiling).
+pub use crate::exp::{REF_MAX_ITER, REF_TOL};
+
+use crate::algorithm::solve_reference;
 use crate::config::{Config, ConfigError};
-use crate::engine::{self, RunConfig, RunResult};
-use crate::graph::MixingOp;
-use crate::linalg::Mat;
-use crate::problem::{data::blobs, LogReg, Problem};
-use crate::prox::Zero;
+use crate::engine::{self, RunResult};
+use crate::exp::Experiment;
+use crate::problem::Problem;
 use crate::util::bench::Table;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
-
-/// Reference-solution budget shared by every cell — the figure benches'
-/// historical 80k-iteration FISTA budget, so the most ill-conditioned
-/// grid cells (long chains, tiny λ2) still converge their x* well below
-/// the 1e-9 measurement targets (FISTA early-stops at the tolerance, so
-/// well-conditioned problems pay far less). Public so tests can
-/// reproduce a cell's x* exactly.
-pub const REF_MAX_ITER: usize = 80_000;
-pub const REF_TOL: f64 = 1e-12;
-
-/// Inner dual-solve iterations for the DualGD/LessBit-A family (the
-/// warm-started inner loop the paper's §4.3 comparison assumes).
-const DUALGD_INNER_ITERS: usize = 40;
 
 /// The result of one sweep cell.
 #[derive(Clone, Debug)]
@@ -88,91 +75,12 @@ pub fn cell_seed(base_seed: u64, index: usize) -> u64 {
     z ^ (z >> 31)
 }
 
-/// Build the (native) problem instance a cell's config describes. Sweeps
-/// always run the native kernels — the PJRT backend is per-run, not
-/// per-grid (use `proxlead train --backend xla` for that path).
-pub fn build_problem(cfg: &Config) -> LogReg {
-    LogReg::new(blobs(&cfg.blob_spec()), cfg.classes, cfg.lambda2, cfg.batches)
-}
-
-/// The resolved stepsize for a cell (config 0 ⇒ auto 1/(2L)).
-pub fn cell_eta(cfg: &Config, problem: &dyn Problem) -> f64 {
-    if cfg.eta > 0.0 {
-        cfg.eta
-    } else {
-        0.5 / problem.smoothness()
-    }
-}
-
 /// Check that a cell's config resolves to a runnable experiment — every
-/// factory the runner will call, plus the algorithm registry below.
+/// factory the runner will call, without constructing the problem (grids
+/// validate serially up front; data generation stays on the workers).
+/// Delegates to the Experiment API's [`crate::exp::validate_config`].
 pub fn validate_cell(cfg: &Config) -> Result<(), ConfigError> {
-    cfg.topology()?;
-    cfg.mixing_rule()?;
-    cfg.oracle_kind()?;
-    cfg.compressor()?;
-    match cfg.algorithm.as_str() {
-        "prox-lead" | "proxlead" | "lead" | "dgd" | "prox-dgd" | "choco" | "nids" | "p2d2"
-        | "pg-extra" | "pgextra" | "pdgm" | "lessbit-b" | "dualgd" | "lessbit-a" => Ok(()),
-        a => Err(ConfigError(format!("unknown algorithm '{a}'"))),
-    }
-}
-
-/// Instantiate the algorithm a config names, over a prebuilt problem /
-/// mixing matrix / start iterate. The per-family parameter conventions:
-///
-/// - `prox-lead` / `lead`: (η, α, γ) from the config (`lead` forces r ≡ 0);
-/// - `dgd` / `prox-dgd`: η;
-/// - `choco`: η with `gamma` as the gossip stepsize γ_c;
-/// - `pdgm` / `lessbit-b`: θ = γ/(2η) (the PDHG view), `alpha` for COMM;
-/// - `dualgd` / `lessbit-a`: dual stepsize θ = η when set explicitly, else
-///   μ/2 (μ/4 when compressed), with a fixed warm-started inner solve.
-#[allow(clippy::too_many_arguments)]
-pub fn build_algorithm(
-    cfg: &Config,
-    problem: &dyn Problem,
-    w: &MixingOp,
-    x0: &Mat,
-    eta: f64,
-    seed: u64,
-) -> Result<Box<dyn Algorithm>, ConfigError> {
-    let oracle = cfg.oracle_kind()?;
-    let comp = cfg.compressor()?;
-    let prox = cfg.prox();
-    let hyper = Hyper { eta, alpha: cfg.alpha, gamma: cfg.gamma };
-    Ok(match cfg.algorithm.as_str() {
-        "prox-lead" | "proxlead" => {
-            Box::new(ProxLead::new(problem, w, x0, hyper, oracle, comp, prox, seed))
-        }
-        "lead" => {
-            Box::new(ProxLead::new(problem, w, x0, hyper, oracle, comp, Box::new(Zero), seed))
-        }
-        "dgd" | "prox-dgd" => Box::new(Dgd::new(problem, w, x0, eta, oracle, comp, prox, seed)),
-        "choco" => {
-            Box::new(Choco::new(problem, w, x0, eta, cfg.gamma, oracle, comp, prox, seed))
-        }
-        "nids" => Box::new(Nids::new(problem, w, x0, eta, oracle, prox, seed)),
-        "p2d2" => Box::new(P2d2::new(problem, w, x0, eta, oracle, prox, seed)),
-        "pg-extra" | "pgextra" => {
-            Box::new(PgExtra::new(problem, w, x0, eta, oracle, prox, seed))
-        }
-        "pdgm" | "lessbit-b" => {
-            let theta = cfg.gamma / (2.0 * eta);
-            Box::new(Pdgm::new(problem, w, x0, eta, theta, oracle, comp, cfg.alpha, seed))
-        }
-        "dualgd" | "lessbit-a" => {
-            let mu = problem.strong_convexity();
-            let theta = if cfg.eta > 0.0 {
-                cfg.eta
-            } else if comp.variance_bound() > 0.0 {
-                mu / 4.0
-            } else {
-                mu / 2.0
-            };
-            Box::new(DualGd::new(problem, w, x0, theta, DUALGD_INNER_ITERS, comp, cfg.alpha, seed))
-        }
-        a => return Err(ConfigError(format!("unknown algorithm '{a}'"))),
-    })
+    crate::exp::validate_config(cfg)
 }
 
 /// Shared reference-solution cache: cells whose configs describe the same
@@ -187,7 +95,8 @@ pub struct RefCache {
 impl RefCache {
     fn key(cfg: &Config) -> String {
         format!(
-            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}",
+            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}",
+            cfg.problem,
             cfg.nodes,
             cfg.samples_per_node,
             cfg.dim,
@@ -222,28 +131,29 @@ pub fn run_cell(cell: &Cell, target_subopt: Option<f64>) -> CellOutcome {
 
 fn run_cell_cached(cell: &Cell, target_subopt: Option<f64>, cache: &RefCache) -> CellOutcome {
     let t0 = Instant::now();
-    let cfg = &cell.config;
-    let problem = build_problem(cfg);
-    let graph = cfg.topology().expect("validated topology");
-    // auto-selects CSR on sparse graphs, so a `nodes` axis scales O(nnz)
-    let w = MixingOp::build(&graph, cfg.mixing_rule().expect("validated mixing"));
-    let x_star = cache.get_or_solve(cfg, &problem);
-    let eta = cell_eta(cfg, &problem);
+    // sweeps always run the native kernels — the PJRT backend is per-run,
+    // not per-grid (use `proxlead train --backend xla` for that path)
+    let mut cfg = cell.config.clone();
+    cfg.backend = "native".into();
+    let cfg = &cfg;
+    // the single Config → Experiment resolution pipeline (problem registry,
+    // CSR-auto mixing, auto-η); the shared cache injects the reference x*
+    let exp = Experiment::from_config(cfg).expect("validated experiment");
+    exp.set_reference(cache.get_or_solve(cfg, exp.problem.as_ref()));
     let seed = cell_seed(cfg.seed, cell.index);
-    let x0 = Mat::zeros(cfg.nodes, problem.dim());
-    let mut alg =
-        build_algorithm(cfg, &problem, &w, &x0, eta, seed).expect("validated algorithm");
-    let mut run_cfg = RunConfig::fixed(cfg.rounds).every(cfg.record_every);
+    let mut alg = exp.algorithm_with_seed(seed);
+    let mut run_cfg = exp.run_config();
     if let Some(t) = target_subopt {
         run_cfg = run_cfg.until(t);
     }
-    let result = engine::run(alg.as_mut(), &problem, &x_star, &run_cfg);
+    let x_star = exp.reference();
+    let result = engine::run(alg.as_mut(), exp.problem.as_ref(), &x_star, &run_cfg);
     CellOutcome {
         index: cell.index,
         overrides: cell.overrides.clone(),
         name: result.name.clone(),
         seed,
-        eta,
+        eta: exp.hyper.eta,
         result,
         wall_ns: t0.elapsed().as_nanos(),
     }
@@ -495,31 +405,51 @@ mod tests {
     #[test]
     fn every_registered_algorithm_constructs_and_steps() {
         let cfg = tiny_base();
-        let problem = build_problem(&cfg);
-        let graph = cfg.topology().unwrap();
-        let w = MixingOp::build(&graph, cfg.mixing_rule().unwrap());
-        let x0 = Mat::zeros(cfg.nodes, problem.dim());
-        let eta = cell_eta(&cfg, &problem);
-        for name in [
-            "prox-lead",
-            "lead",
-            "dgd",
-            "choco",
-            "nids",
-            "p2d2",
-            "pg-extra",
-            "pdgm",
-            "dualgd",
-        ] {
+        for name in crate::exp::ALGORITHM_NAMES {
             let mut c = cfg.clone();
-            c.algorithm = name.into();
-            if name == "choco" {
+            c.algorithm = (*name).into();
+            if *name == "choco" {
                 c.gamma = 0.2; // gossip stepsize convention
             }
-            let mut alg = build_algorithm(&c, &problem, &w, &x0, eta, 3).unwrap();
-            alg.step(&problem);
+            let exp = Experiment::from_config(&c).unwrap();
+            let mut alg = exp.algorithm_with_seed(3);
+            alg.step(exp.problem.as_ref());
             assert!(alg.x().is_finite(), "{name} produced non-finite iterates");
         }
+    }
+
+    #[test]
+    fn problem_key_is_a_sweep_axis() {
+        // the acceptance scenario: a `problem` axis fans the same grid
+        // across problem families, least-squares running end to end
+        let mut base = tiny_base();
+        base.rounds = 30;
+        base.record_every = 30;
+        let spec =
+            SweepSpec::new(base).axis("problem", &["logreg", "least-squares"]).threads(2);
+        let res = run_sweep(&spec, |_| {}).unwrap();
+        assert_eq!(res.cells.len(), 2);
+        for (c, dim) in res.cells.iter().zip([5 * 3, 5]) {
+            assert!(c.final_subopt().is_finite());
+            assert_eq!(c.result.final_x.cols, dim, "problem axis must rebuild the problem");
+        }
+        // unknown problems are rejected at validation, before fan-out
+        let spec = SweepSpec::new(tiny_base()).axis("problem", &["sudoku"]);
+        assert!(spec.cells().is_err());
+    }
+
+    #[test]
+    fn sweep_forces_native_backend() {
+        // the PJRT backend is per-run, not per-grid: a backend=xla config
+        // sweeps on the native kernels instead of panicking in the pool
+        // when artifacts are unavailable (the stub default)
+        let mut base = tiny_base();
+        base.rounds = 10;
+        base.record_every = 10;
+        base.backend = "xla".into();
+        let res = run_sweep(&SweepSpec::new(base), |_| {}).unwrap();
+        assert_eq!(res.cells.len(), 1);
+        assert!(res.cells[0].final_subopt().is_finite());
     }
 
     #[test]
@@ -576,14 +506,21 @@ mod tests {
     #[test]
     fn reference_cache_shares_identical_problems() {
         let cfg = tiny_base();
-        let problem = build_problem(&cfg);
+        let problem = crate::exp::build_problem(&cfg).unwrap();
         let cache = RefCache::default();
-        let a = cache.get_or_solve(&cfg, &problem);
-        let b = cache.get_or_solve(&cfg, &problem);
+        let a = cache.get_or_solve(&cfg, problem.as_ref());
+        let b = cache.get_or_solve(&cfg, problem.as_ref());
         assert!(Arc::ptr_eq(&a, &b));
         let mut cfg2 = cfg.clone();
         cfg2.lambda1 = 5e-3;
-        let c = cache.get_or_solve(&cfg2, &problem);
+        let c = cache.get_or_solve(&cfg2, problem.as_ref());
         assert!(!Arc::ptr_eq(&a, &c));
+        // a different problem family must never share an x*
+        let mut cfg3 = cfg.clone();
+        cfg3.problem = "least-squares".into();
+        let p3 = crate::exp::build_problem(&cfg3).unwrap();
+        let d = cache.get_or_solve(&cfg3, p3.as_ref());
+        assert!(!Arc::ptr_eq(&a, &d));
+        assert_ne!(a.len(), d.len());
     }
 }

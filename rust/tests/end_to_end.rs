@@ -4,43 +4,29 @@
 use proxlead::algorithm::{solve_reference, suboptimality};
 use proxlead::config::Config;
 use proxlead::coordinator::{self, CoordConfig, Straggler, WireCodec};
+use proxlead::exp::Experiment;
 use proxlead::linalg::Mat;
 use proxlead::oracle::OracleKind;
 use proxlead::problem::{LogReg, Problem};
-use proxlead::prox::Prox;
 use proxlead::runtime::{default_artifact_dir, PjrtRuntime, XlaLogReg};
 use std::sync::Arc;
 use std::time::Duration;
 
-/// Build the (problem, W, x0) trio straight from a Config — the same path
-/// `proxlead train` takes.
-fn from_config(text: &str) -> (Config, LogReg, proxlead::graph::MixingOp, Mat) {
-    let cfg = Config::parse(text).expect("config");
-    let p = LogReg::new(
-        proxlead::problem::data::blobs(&cfg.blob_spec()),
-        cfg.classes,
-        cfg.lambda2,
-        cfg.batches,
-    );
-    let g = cfg.topology().expect("topology");
-    let w = proxlead::graph::MixingOp::build(&g, cfg.mixing_rule().expect("mixing"));
-    let x0 = Mat::zeros(cfg.nodes, p.dim());
-    (cfg, p, w, x0)
+/// Resolve an experiment straight from config text — the same single
+/// pipeline `proxlead train` takes.
+fn from_config(text: &str) -> Experiment {
+    Experiment::from_config(&Config::parse(text).expect("config")).expect("experiment")
 }
 
 #[test]
 fn config_driven_coordinator_run_converges() {
-    let (cfg, p, w, x0) = from_config(
+    let exp = from_config(
         "nodes = 4\nsamples_per_node = 24\ndim = 5\nclasses = 3\nbatches = 4\n\
-         lambda1 = 0.005\nlambda2 = 0.1\nseparation = 1.0\nbits = 2\nrounds = 3000\n",
+         lambda1 = 0.005\nlambda2 = 0.1\nseparation = 1.0\nbits = 2\nrounds = 3000\n\
+         record_every = 1000\n",
     );
-    let x_star = solve_reference(&p, cfg.lambda1, 40_000, 1e-13);
-    let mut ccfg =
-        CoordConfig::new(cfg.rounds, 0.5 / p.smoothness(), cfg.codec().expect("codec"));
-    ccfg.record_every = 1000;
-    ccfg.oracle = cfg.oracle_kind().expect("oracle");
-    let prox: Arc<dyn Prox> = Arc::from(cfg.prox());
-    let res = coordinator::run(Arc::new(p), &w, &x0, prox, &ccfg);
+    let x_star = solve_reference(exp.problem.as_ref(), exp.config.lambda1, 40_000, 1e-13);
+    let res = exp.coordinator();
     let s = suboptimality(res.final_x(), &x_star);
     assert!(s < 1e-11, "config-driven run suboptimality {s}");
     // wire bytes exceed the accounted payload (entropy-coded) bits: each
@@ -57,10 +43,10 @@ fn config_driven_coordinator_run_converges() {
 fn straggler_faults_do_not_change_the_answer() {
     // same seed, with and without stragglers: identical iterates (the
     // barrier absorbs delay; determinism is per-node-RNG driven)
-    let (_, p, w, x0) = from_config(
-        "nodes = 4\nsamples_per_node = 24\ndim = 5\nclasses = 3\nbatches = 4\nlambda2 = 0.1\nseparation = 1.0\n",
+    let exp = from_config(
+        "nodes = 4\nsamples_per_node = 24\ndim = 5\nclasses = 3\nbatches = 4\n\
+         lambda2 = 0.1\nseparation = 1.0\n",
     );
-    let p = Arc::new(p);
     let mk = |straggler| {
         let mut c = CoordConfig::new(120, 0.05, WireCodec::Quant(2, 256));
         c.record_every = 120;
@@ -68,16 +54,16 @@ fn straggler_faults_do_not_change_the_answer() {
         c
     };
     let clean = coordinator::run(
-        Arc::clone(&p) as Arc<dyn Problem>,
-        &w,
-        &x0,
+        Arc::clone(&exp.problem),
+        &exp.mixing,
+        &exp.x0,
         Arc::new(proxlead::prox::Zero),
         &mk(None),
     );
     let faulty = coordinator::run(
-        Arc::clone(&p) as Arc<dyn Problem>,
-        &w,
-        &x0,
+        Arc::clone(&exp.problem),
+        &exp.mixing,
+        &exp.x0,
         Arc::new(proxlead::prox::Zero),
         &mk(Some(Straggler { prob: 0.2, delay: Duration::from_micros(200) })),
     );
@@ -136,15 +122,16 @@ fn coordinator_runs_on_pjrt_backend() {
 
 #[test]
 fn theorem7_schedule_through_engine() {
-    use proxlead::algorithm::{Hyper, ProxLead, Schedule};
-    use proxlead::compress::InfNormQuantizer;
+    use proxlead::algorithm::{ProxLead, Schedule};
     use proxlead::engine::{run, RunConfig};
     use proxlead::linalg::Spectrum;
-    let (_, p, w, x0) = from_config(
-        "nodes = 4\nsamples_per_node = 24\ndim = 5\nclasses = 3\nbatches = 4\nlambda2 = 0.1\nseparation = 1.0\n",
+    let exp = from_config(
+        "nodes = 4\nsamples_per_node = 24\ndim = 5\nclasses = 3\nbatches = 4\n\
+         lambda2 = 0.1\nseparation = 1.0\nbits = 2\n",
     );
-    let x_star = solve_reference(&p, 0.0, 40_000, 1e-13);
-    let spec = Spectrum::of_mixing(&w.to_dense());
+    let p = exp.problem.as_ref();
+    let x_star = solve_reference(p, 0.0, 40_000, 1e-13);
+    let spec = Spectrum::of_mixing(&exp.mixing.to_dense());
     let schedule = Schedule::Theorem7 {
         c: 0.2,
         l: p.smoothness(),
@@ -152,22 +139,14 @@ fn theorem7_schedule_through_engine() {
         kappa_g: spec.kappa_g(),
         lmax_iw: spec.lam_max,
     };
-    let mut alg = ProxLead::new(
-        &p,
-        &w,
-        &x0,
-        schedule.hyper_at(0),
-        OracleKind::Sgd,
-        Box::new(InfNormQuantizer::new(2, 256)),
-        Box::new(proxlead::prox::Zero),
-        5,
-    );
-    let res = run(
-        &mut alg,
-        &p,
-        &x_star,
-        &RunConfig::fixed(30_000).every(3000).with_schedule(schedule),
-    );
+    let mut alg = ProxLead::builder(&exp)
+        .hyper(schedule.hyper_at(0))
+        .oracle(OracleKind::Sgd)
+        .prox(Box::new(proxlead::prox::Zero))
+        .seed(5)
+        .build();
+    let res =
+        run(&mut alg, p, &x_star, &RunConfig::fixed(30_000).every(3000).with_schedule(schedule));
     // O(1/k): the second half of the trace keeps improving (no plateau)
     let h = &res.history;
     let mid = h[h.len() / 2].suboptimality;

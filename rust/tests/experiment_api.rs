@@ -1,0 +1,159 @@
+//! Acceptance tests for the one-experiment API:
+//!
+//! 1. **Matrix test** — every registered algorithm × every registered
+//!    problem constructs through `Experiment` and completes 50 rounds with
+//!    finite iterates (new scenarios are an axis, not a rewrite);
+//! 2. **Pin test** — an `Experiment`-built Prox-LEAD reproduces the
+//!    pre-refactor constructor-built iterate sequence **bit for bit** on
+//!    the ring-32 fixture (resolution moved, arithmetic did not);
+//! 3. The `problem` key flows end to end through a sweep grid.
+
+#![allow(deprecated)] // the pin test intentionally uses the legacy constructor
+
+use proxlead::algorithm::{Algorithm, Hyper, ProxLead};
+use proxlead::compress::InfNormQuantizer;
+use proxlead::config::Config;
+use proxlead::exp::{Experiment, ALGORITHM_NAMES};
+use proxlead::graph::{Graph, MixingOp, MixingRule};
+use proxlead::linalg::Mat;
+use proxlead::oracle::OracleKind;
+use proxlead::problem::data::{blobs, BlobSpec};
+use proxlead::problem::{LogReg, Problem};
+use proxlead::prox::L1;
+
+const PROBLEMS: &[&str] = &["logreg", "least-squares", "lasso"];
+
+fn tiny(problem: &str, algorithm: &str) -> Config {
+    Config::parse(&format!(
+        "problem = {problem}\nalgorithm = {algorithm}\nnodes = 4\nsamples_per_node = 24\n\
+         dim = 6\nclasses = 3\nbatches = 4\nlambda1 = 0.005\nlambda2 = 0.1\n\
+         separation = 1.0\nbits = 2\n"
+    ))
+    .expect("tiny config")
+}
+
+/// Every algorithm × every problem: constructs and stays finite for 50
+/// rounds. This is the "compression is almost free across scenarios" grid
+/// the paper's claim needs to be cheap to extend.
+#[test]
+fn algorithm_problem_matrix_runs_finite() {
+    for problem in PROBLEMS {
+        for algorithm in ALGORITHM_NAMES {
+            let mut cfg = tiny(problem, algorithm);
+            if *algorithm == "choco" {
+                cfg.gamma = 0.2; // gossip stepsize convention
+            }
+            let exp = Experiment::from_config(&cfg)
+                .unwrap_or_else(|e| panic!("{problem} × {algorithm}: {e}"));
+            let mut alg = exp.algorithm_with_seed(3);
+            for round in 0..50 {
+                alg.step(exp.problem.as_ref());
+                assert!(
+                    alg.x().is_finite(),
+                    "{problem} × {algorithm}: non-finite at round {round}"
+                );
+            }
+            assert!(alg.bits() > 0 || alg.grad_evals() > 0, "{problem} × {algorithm} idle");
+        }
+    }
+}
+
+/// The pre-refactor construction path: BlobSpec → LogReg, Graph::ring,
+/// positional `ProxLead::new` — exactly what `sparse_dense_equiv` pinned
+/// before the Experiment API existed.
+fn legacy_ring32() -> (LogReg, MixingOp) {
+    let spec = BlobSpec {
+        nodes: 32,
+        samples_per_node: 12,
+        dim: 6,
+        classes: 3,
+        separation: 1.0,
+        seed: 41,
+        ..Default::default()
+    };
+    let p = LogReg::new(blobs(&spec), 3, 0.1, 4);
+    let g = Graph::ring(32);
+    let w = MixingOp::build(&g, MixingRule::UniformMaxDegree);
+    (p, w)
+}
+
+/// The pin: Experiment-built Prox-LEAD ≡ legacy constructor-built
+/// Prox-LEAD, bit for bit, 200 rounds on ring-32 with 2-bit quantization.
+#[test]
+fn experiment_reproduces_prerefactor_iterates_bit_for_bit() {
+    // legacy side
+    let (p, w) = legacy_ring32();
+    let x0 = Mat::zeros(32, p.dim());
+    let mut legacy = ProxLead::new(
+        &p,
+        &w,
+        &x0,
+        Hyper::paper_default(0.5 / p.smoothness()),
+        OracleKind::Full,
+        Box::new(InfNormQuantizer::new(2, 256)),
+        Box::new(L1::new(5e-3)),
+        7,
+    );
+
+    // Experiment side: the same fixture spelled as a config
+    let cfg = Config::parse(
+        "nodes = 32\nsamples_per_node = 12\ndim = 6\nclasses = 3\nbatches = 4\n\
+         separation = 1.0\nseed = 41\nlambda1 = 0.005\nlambda2 = 0.1\nbits = 2\n",
+    )
+    .unwrap();
+    let exp = Experiment::from_config(&cfg).unwrap();
+    let mut modern = exp.algorithm_with_seed(7);
+
+    for round in 0..200 {
+        let sl = legacy.step(&p);
+        let sm = modern.step(exp.problem.as_ref());
+        assert_eq!(sl.bits, sm.bits, "round {round}: wire bits diverged");
+        for (i, (a, b)) in legacy.x().data.iter().zip(&modern.x().data).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "round {round}, entry {i}: {a:?} (legacy) vs {b:?} (experiment)"
+            );
+        }
+    }
+    assert_eq!(legacy.bits(), modern.bits());
+    assert_eq!(legacy.grad_evals(), modern.grad_evals());
+    assert!(legacy.x().norm_sq() > 0.0, "fixture must make progress");
+}
+
+/// `problem = least-squares` as a sweep cell runs end to end and produces
+/// a finite, shrinking trace (the acceptance scenario for the new axis).
+#[test]
+fn least_squares_sweep_cell_end_to_end() {
+    use proxlead::sweep::{run_sweep, SweepSpec};
+    let base = Config::parse(
+        "nodes = 4\nsamples_per_node = 24\ndim = 8\nbatches = 4\nlambda1 = 0.005\n\
+         lambda2 = 0.1\nrounds = 400\nrecord_every = 100\n",
+    )
+    .unwrap();
+    let spec = SweepSpec::new(base)
+        .variant(&[("problem", "least-squares"), ("algorithm", "prox-lead"), ("bits", "2")])
+        .variant(&[("problem", "lasso"), ("algorithm", "prox-lead"), ("bits", "2")])
+        .threads(2);
+    let res = run_sweep(&spec, |_| {}).unwrap();
+    assert_eq!(res.cells.len(), 2);
+    for cell in &res.cells {
+        let first = cell.result.history.first().unwrap().suboptimality;
+        let last = cell.final_subopt();
+        assert!(last.is_finite());
+        assert!(last < first, "quadratic cell should descend: {first} → {last}");
+        assert_eq!(cell.result.final_x.cols, 8, "regression p = dim");
+    }
+}
+
+/// Builder overrides flow into the constructed algorithm (name/oracle) and
+/// the experiment's auto-η matches the problem the registry built.
+#[test]
+fn builder_overrides_and_auto_eta() {
+    let exp = Experiment::from_config(&tiny("least-squares", "prox-lead")).unwrap();
+    assert!((exp.hyper.eta - 0.5 / exp.problem.smoothness()).abs() < 1e-15);
+    let alg = ProxLead::builder(&exp).oracle(OracleKind::Saga).tag("2bit").build();
+    assert_eq!(alg.name(), "Prox-LEAD (2bit, saga) 2bit");
+    let lead = ProxLead::builder(&exp).prox(Box::new(proxlead::prox::Zero)).build();
+    assert!(lead.name().starts_with("LEAD"));
+}

@@ -2,49 +2,32 @@
 //! through the CSR representation produces the **bit-identical** iterate
 //! sequence as the dense matrix path — same summation order in the SpMM
 //! kernel (see `linalg::sparse`), same compressed bits, same RNG draws —
-//! so switching representations is purely a performance decision.
+//! so switching representations is purely a performance decision. All
+//! algorithms are built through the Experiment API, with
+//! `Experiment::with_mixing` substituting the representation under test.
 
-use proxlead::algorithm::{Algorithm, Hyper, ProxLead};
-use proxlead::compress::InfNormQuantizer;
-use proxlead::graph::{Graph, MixingOp, MixingRule, Topology};
-use proxlead::linalg::Mat;
-use proxlead::oracle::OracleKind;
-use proxlead::problem::data::{blobs, BlobSpec};
-use proxlead::problem::{LogReg, Problem};
-use proxlead::prox::L1;
-use proxlead::util::rng::Rng;
+use proxlead::algorithm::{Algorithm, ProxLead};
+use proxlead::config::Config;
+use proxlead::exp::Experiment;
+use proxlead::graph::{Graph, MixingOp, MixingRule};
+use std::sync::Arc;
 
-fn ring32_logreg() -> LogReg {
-    let spec = BlobSpec {
-        nodes: 32,
-        samples_per_node: 12,
-        dim: 6,
-        classes: 3,
-        separation: 1.0,
-        seed: 41,
-        ..Default::default()
-    };
-    LogReg::new(blobs(&spec), 3, 0.1, 4)
-}
-
-fn prox_lead_2bit(p: &LogReg, w: &MixingOp, x0: &Mat) -> ProxLead {
-    ProxLead::new(
-        p,
-        w,
-        x0,
-        Hyper::paper_default(0.5 / p.smoothness()),
-        OracleKind::Full,
-        Box::new(InfNormQuantizer::new(2, 256)),
-        Box::new(L1::new(5e-3)),
-        7,
+/// The ring-32 fixture (12 samples/node, d = 6, C = 3, λ₂ = 0.1,
+/// λ₁ = 5e-3, 2-bit ∞-norm) as a config — the same problem the historical
+/// BlobSpec fixture generated.
+fn ring32_config() -> Config {
+    Config::parse(
+        "nodes = 32\nsamples_per_node = 12\ndim = 6\nclasses = 3\nbatches = 4\n\
+         separation = 1.0\nseed = 41\nlambda1 = 0.005\nlambda2 = 0.1\nbits = 2\n",
     )
+    .expect("ring32 config")
 }
 
 /// The acceptance criterion: ring n=32, Prox-LEAD 2-bit, 200 rounds —
 /// dense and sparse paths produce bit-identical iterate sequences.
 #[test]
 fn prox_lead_2bit_ring32_bit_identical_over_200_rounds() {
-    let p = ring32_logreg();
+    let cfg = ring32_config();
     let g = Graph::ring(32);
     let dense = MixingOp::dense_from(&g, MixingRule::UniformMaxDegree);
     let sparse = MixingOp::sparse_from(&g, MixingRule::UniformMaxDegree);
@@ -52,12 +35,14 @@ fn prox_lead_2bit_ring32_bit_identical_over_200_rounds() {
     // and the auto-selector picks CSR at this density (96/1024)
     assert!(MixingOp::build(&g, MixingRule::UniformMaxDegree).is_sparse());
 
-    let x0 = Mat::zeros(32, p.dim());
-    let mut alg_d = prox_lead_2bit(&p, &dense, &x0);
-    let mut alg_s = prox_lead_2bit(&p, &sparse, &x0);
+    let exp_d = Experiment::from_config(&cfg).unwrap().with_mixing(dense);
+    let exp_s = Experiment::from_config(&cfg).unwrap().with_mixing(sparse);
+    let p = exp_d.problem.as_ref();
+    let mut alg_d = ProxLead::builder(&exp_d).seed(7).build();
+    let mut alg_s = ProxLead::builder(&exp_s).seed(7).build();
     for round in 0..200 {
-        let sd = alg_d.step(&p);
-        let ss = alg_s.step(&p);
+        let sd = alg_d.step(p);
+        let ss = alg_s.step(exp_s.problem.as_ref());
         assert_eq!(sd.bits, ss.bits, "round {round}: wire bits diverged");
         let (xd, xs) = (alg_d.x(), alg_s.x());
         for (i, (a, b)) in xd.data.iter().zip(&xs.data).enumerate() {
@@ -78,42 +63,40 @@ fn prox_lead_2bit_ring32_bit_identical_over_200_rounds() {
     assert!(alg_d.x().norm_sq() > 0.0);
 }
 
-/// Same contract across every stepping algorithm the sweep registry knows,
-/// on a sparse-eligible ER graph (each algorithm mixes differently: W,
+/// Same contract across every stepping algorithm the registry knows, on a
+/// sparse-eligible ER graph (each algorithm mixes differently: W,
 /// W̃ = (I+W)/2, W − I — all three derived operators must agree).
 #[test]
 fn all_algorithms_bit_identical_on_er_graph() {
-    use proxlead::config::Config;
-    use proxlead::sweep::{build_algorithm, cell_eta};
     let cfg = Config::parse(
         "nodes = 24\nsamples_per_node = 12\ndim = 6\nclasses = 3\nbatches = 4\n\
          lambda1 = 0.005\nlambda2 = 0.1\ntopology = er\nconnectivity = 0.3\nmixing = metropolis\n",
     )
     .expect("config");
-    let p = proxlead::sweep::build_problem(&cfg);
-    let g = cfg.topology().expect("er graph");
-    let dense = MixingOp::dense_from(&g, cfg.mixing_rule().unwrap());
-    let sparse = MixingOp::sparse_from(&g, cfg.mixing_rule().unwrap());
-    let x0 = Mat::zeros(cfg.nodes, p.dim());
-    let eta = cell_eta(&cfg, &p);
-    for name in ["prox-lead", "lead", "dgd", "choco", "nids", "p2d2", "pg-extra", "pdgm", "dualgd"]
-    {
+    let base = Experiment::from_config(&cfg).expect("er experiment");
+    let rule = cfg.mixing_rule().unwrap();
+    let dense = MixingOp::dense_from(&base.graph, rule);
+    let sparse = MixingOp::sparse_from(&base.graph, rule);
+    for name in proxlead::exp::ALGORITHM_NAMES {
         let mut c = cfg.clone();
-        c.algorithm = name.into();
-        if name == "choco" {
+        c.algorithm = (*name).into();
+        if *name == "choco" {
             c.gamma = 0.2;
         }
-        let mut alg_d = build_algorithm(&c, &p, &dense, &x0, eta, 3).unwrap();
-        let mut alg_s = build_algorithm(&c, &p, &sparse, &x0, eta, 3).unwrap();
+        // share base's problem — only the algorithm/mixing vary per arm
+        let exp_d = Experiment::from_config_with_problem(&c, Arc::clone(&base.problem))
+            .unwrap()
+            .with_mixing(dense.clone());
+        let exp_s = Experiment::from_config_with_problem(&c, Arc::clone(&base.problem))
+            .unwrap()
+            .with_mixing(sparse.clone());
+        let mut alg_d = exp_d.algorithm_with_seed(3);
+        let mut alg_s = exp_s.algorithm_with_seed(3);
         for round in 0..25 {
-            alg_d.step(&p);
-            alg_s.step(&p);
+            alg_d.step(exp_d.problem.as_ref());
+            alg_s.step(exp_s.problem.as_ref());
             for (a, b) in alg_d.x().data.iter().zip(&alg_s.x().data) {
-                assert_eq!(
-                    a.to_bits(),
-                    b.to_bits(),
-                    "{name} diverged at round {round}"
-                );
+                assert_eq!(a.to_bits(), b.to_bits(), "{name} diverged at round {round}");
             }
         }
     }
@@ -123,38 +106,29 @@ fn all_algorithms_bit_identical_on_er_graph() {
 /// quantized run per combination, final iterates compared bitwise.
 #[test]
 fn equivalence_holds_across_topologies_and_rules() {
-    let p = ring32_logreg();
-    let x0 = Mat::zeros(32, p.dim());
-    let mut rng = Rng::new(17);
-    for kind in [Topology::Ring, Topology::Chain, Topology::Grid, Topology::ErdosRenyi] {
-        let n = 32; // 32 is not a perfect square; grid gets 25 below
-        let g = match kind {
-            Topology::Grid => Graph::grid(25),
-            _ => Graph::build(kind, n, &mut rng),
-        };
-        let nodes = g.n;
-        let spec = BlobSpec {
-            nodes,
-            samples_per_node: 12,
-            dim: 6,
-            classes: 3,
-            separation: 1.0,
-            seed: 41,
-            ..Default::default()
-        };
-        let prob = LogReg::new(blobs(&spec), 3, 0.1, 4);
-        let x0k = if nodes == 32 { x0.clone() } else { Mat::zeros(nodes, prob.dim()) };
-        for rule in
-            [MixingRule::UniformMaxDegree, MixingRule::Metropolis, MixingRule::LazyMetropolis]
-        {
-            let mut alg_d = prox_lead_2bit(&prob, &MixingOp::dense_from(&g, rule), &x0k);
-            let mut alg_s = prox_lead_2bit(&prob, &MixingOp::sparse_from(&g, rule), &x0k);
+    for topo in ["ring", "chain", "grid", "er"] {
+        let mut cfg = ring32_config();
+        cfg.set("topology", topo).unwrap();
+        if topo == "grid" {
+            cfg.nodes = 25; // 32 is not a perfect square
+        }
+        // one resolution per topology; the rule only swaps the mixing op
+        let base = Experiment::from_config(&cfg).unwrap();
+        for rule in ["uniform", "metropolis", "lazy"] {
+            cfg.set("mixing", rule).unwrap();
+            let r = cfg.mixing_rule().unwrap();
+            let exp_d =
+                base.clone().with_mixing(MixingOp::dense_from(&base.graph, r));
+            let exp_s =
+                base.clone().with_mixing(MixingOp::sparse_from(&base.graph, r));
+            let mut alg_d = ProxLead::builder(&exp_d).seed(7).build();
+            let mut alg_s = ProxLead::builder(&exp_s).seed(7).build();
             for _ in 0..40 {
-                alg_d.step(&prob);
-                alg_s.step(&prob);
+                alg_d.step(exp_d.problem.as_ref());
+                alg_s.step(exp_s.problem.as_ref());
             }
             for (a, b) in alg_d.x().data.iter().zip(&alg_s.x().data) {
-                assert_eq!(a.to_bits(), b.to_bits(), "{kind:?}/{rule:?} diverged");
+                assert_eq!(a.to_bits(), b.to_bits(), "{topo}/{rule} diverged");
             }
         }
     }

@@ -10,13 +10,8 @@
 use proxlead::algorithm::solve_reference;
 use proxlead::config::Config;
 use proxlead::engine::{run, RunConfig};
-use proxlead::graph::MixingOp;
-use proxlead::linalg::Mat;
-use proxlead::problem::Problem;
-use proxlead::sweep::{
-    build_algorithm, build_problem, cell_eta, cell_seed, run_cell, run_sweep, SweepSpec,
-    REF_MAX_ITER, REF_TOL,
-};
+use proxlead::exp::Experiment;
+use proxlead::sweep::{cell_seed, run_cell, run_sweep, SweepSpec, REF_MAX_ITER, REF_TOL};
 
 fn tiny_base(rounds: usize) -> Config {
     Config::parse(&format!(
@@ -83,16 +78,13 @@ fn sweep_cell_matches_serial_engine_run() {
 
     // hand-rolled serial path through engine::run, from the same config
     let cfg = &cells[0].config;
-    let problem = build_problem(cfg);
-    let w = MixingOp::build(&cfg.topology().unwrap(), cfg.mixing_rule().unwrap());
-    let x_star = solve_reference(&problem, cfg.lambda1, REF_MAX_ITER, REF_TOL);
-    let x0 = Mat::zeros(cfg.nodes, problem.dim());
-    let eta = cell_eta(cfg, &problem);
+    let exp = Experiment::from_config(cfg).expect("experiment");
+    let x_star = solve_reference(exp.problem.as_ref(), cfg.lambda1, REF_MAX_ITER, REF_TOL);
     let seed = cell_seed(cfg.seed, cells[0].index);
-    let mut alg = build_algorithm(cfg, &problem, &w, &x0, eta, seed).expect("algorithm");
+    let mut alg = exp.algorithm_with_seed(seed);
     let res = run(
         alg.as_mut(),
-        &problem,
+        exp.problem.as_ref(),
         &x_star,
         &RunConfig::fixed(cfg.rounds).every(cfg.record_every),
     );

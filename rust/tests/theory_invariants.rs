@@ -1,51 +1,34 @@
 //! Cross-module integration tests of the paper's structural invariants —
 //! properties that hold along the whole trajectory, not just at the fixed
-//! point.
+//! point. Every algorithm is constructed through the Experiment API.
 
-use proxlead::algorithm::{solve_reference, suboptimality, Algorithm, Hyper, ProxLead};
-use proxlead::compress::InfNormQuantizer;
-use proxlead::graph::{Graph, MixingOp, MixingRule, Topology};
-use proxlead::linalg::Mat;
+use proxlead::algorithm::{solve_reference, suboptimality, Algorithm, ProxLead};
+use proxlead::config::Config;
+use proxlead::exp::Experiment;
 use proxlead::oracle::OracleKind;
-use proxlead::problem::data::{blobs, BlobSpec, Partition};
-use proxlead::problem::{LogReg, Problem};
-use proxlead::prox::{GroupLasso, Prox, Zero, L1};
-use proxlead::util::rng::Rng;
+use proxlead::prox::{GroupLasso, Prox};
 
-fn fixture(nodes: usize, seed: u64) -> (LogReg, MixingOp) {
-    let spec = BlobSpec {
-        nodes,
-        samples_per_node: 24,
-        dim: 5,
-        classes: 3,
-        separation: 1.0,
-        seed,
-        ..Default::default()
-    };
-    let p = LogReg::new(blobs(&spec), 3, 0.1, 4);
-    let g = Graph::ring(nodes);
-    let w = MixingOp::build(&g, MixingRule::UniformMaxDegree);
-    (p, w)
+/// The historical ring-logreg fixture (24 samples/node, d = 5, C = 3,
+/// λ₂ = 0.1) as a resolved Experiment: auto-η = 1/(2L), uniform ring
+/// mixing, 2-bit ∞-norm compressor, ℓ1(5e-3) prox.
+fn fixture(nodes: usize, seed: u64) -> Experiment {
+    let cfg = Config::parse(&format!(
+        "nodes = {nodes}\nsamples_per_node = 24\ndim = 5\nclasses = 3\nbatches = 4\n\
+         separation = 1.0\nseed = {seed}\nlambda1 = 0.005\nlambda2 = 0.1\nbits = 2\n"
+    ))
+    .expect("fixture config");
+    Experiment::from_config(&cfg).expect("fixture experiment")
 }
 
 /// The dual variable lives in range(I − W): its column sums are zero for
 /// the whole trajectory (the paper's D* = (I − 11ᵀ/n)∇F(X*) needs this).
 #[test]
 fn dual_variable_column_sums_stay_zero() {
-    let (p, w) = fixture(5, 3);
-    let x0 = Mat::zeros(5, p.dim());
-    let mut alg = ProxLead::new(
-        &p,
-        &w,
-        &x0,
-        Hyper::paper_default(0.5 / p.smoothness()),
-        OracleKind::Sgd,
-        Box::new(InfNormQuantizer::new(2, 256)),
-        Box::new(L1::new(5e-3)),
-        9,
-    );
+    let exp = fixture(5, 3);
+    let p = exp.problem.as_ref();
+    let mut alg = ProxLead::builder(&exp).oracle(OracleKind::Sgd).seed(9).build();
     for k in 0..300 {
-        alg.step(&p);
+        alg.step(p);
         if k % 50 == 0 {
             let d = alg.d();
             for j in 0..d.cols {
@@ -64,24 +47,14 @@ fn dual_variable_column_sums_stay_zero() {
 /// converges across a wide grid of (α, γ) without retuning.
 #[test]
 fn robust_to_alpha_gamma_grid() {
-    let (p, w) = fixture(4, 7);
-    let x_star = solve_reference(&p, 5e-3, 40_000, 1e-13);
-    let x0 = Mat::zeros(4, p.dim());
-    let eta = 0.5 / p.smoothness();
+    let exp = fixture(4, 7);
+    let p = exp.problem.as_ref();
+    let x_star = solve_reference(p, 5e-3, 40_000, 1e-13);
     for alpha in [0.1, 0.3, 0.5, 0.7] {
         for gamma in [0.25, 0.5, 1.0] {
-            let mut alg = ProxLead::new(
-                &p,
-                &w,
-                &x0,
-                Hyper { eta, alpha, gamma },
-                OracleKind::Full,
-                Box::new(InfNormQuantizer::new(2, 256)),
-                Box::new(L1::new(5e-3)),
-                13,
-            );
+            let mut alg = ProxLead::builder(&exp).alpha(alpha).gamma(gamma).seed(13).build();
             for _ in 0..5000 {
-                alg.step(&p);
+                alg.step(p);
             }
             let s = suboptimality(alg.x(), &x_star);
             assert!(s < 1e-9, "diverged/stalled at α={alpha}, γ={gamma}: {s}");
@@ -93,30 +66,21 @@ fn robust_to_alpha_gamma_grid() {
 /// with κ_g): same fixed point on ring/star/complete/chain/ER.
 #[test]
 fn same_fixed_point_across_topologies() {
-    let (p, _) = fixture(6, 11);
-    let x_star = solve_reference(&p, 5e-3, 40_000, 1e-13);
-    let x0 = Mat::zeros(6, p.dim());
-    for topo in
-        [Topology::Ring, Topology::Chain, Topology::Star, Topology::Complete, Topology::ErdosRenyi]
-    {
-        let g = Graph::build(topo, 6, &mut Rng::new(5));
-        let w = MixingOp::build(&g, MixingRule::Metropolis);
-        assert!(w.gap_estimate().kappa_g().is_finite());
-        let mut alg = ProxLead::new(
-            &p,
-            &w,
-            &x0,
-            Hyper::paper_default(0.5 / p.smoothness()),
-            OracleKind::Full,
-            Box::new(InfNormQuantizer::new(2, 256)),
-            Box::new(L1::new(5e-3)),
-            3,
-        );
+    let base = fixture(6, 11);
+    let x_star = solve_reference(base.problem.as_ref(), 5e-3, 40_000, 1e-13);
+    for topo in ["ring", "chain", "star", "complete", "er"] {
+        let mut cfg = base.config.clone();
+        cfg.set("topology", topo).unwrap();
+        cfg.set("mixing", "mh").unwrap();
+        let exp = Experiment::from_config(&cfg).unwrap();
+        assert!(exp.mixing.gap_estimate().kappa_g().is_finite());
+        let p = exp.problem.as_ref();
+        let mut alg = ProxLead::builder(&exp).seed(3).build();
         for _ in 0..8000 {
-            alg.step(&p);
+            alg.step(p);
         }
         let s = suboptimality(alg.x(), &x_star);
-        assert!(s < 1e-10, "{topo:?}: suboptimality {s}");
+        assert!(s < 1e-10, "{topo}: suboptimality {s}");
     }
 }
 
@@ -125,37 +89,24 @@ fn same_fixed_point_across_topologies() {
 /// converge to their references at comparable rates.
 #[test]
 fn heterogeneity_does_not_break_convergence() {
-    for partition in [Partition::LabelSorted, Partition::Shuffled] {
-        let spec = BlobSpec {
-            nodes: 4,
-            samples_per_node: 24,
-            dim: 5,
-            classes: 3,
-            separation: 1.0,
-            partition,
-            seed: 21,
-            ..Default::default()
-        };
-        let p = LogReg::new(blobs(&spec), 3, 0.1, 4);
-        let g = Graph::ring(4);
-        let w = MixingOp::build(&g, MixingRule::UniformMaxDegree);
-        let x_star = solve_reference(&p, 0.0, 40_000, 1e-13);
-        let x0 = Mat::zeros(4, p.dim());
-        let mut alg = ProxLead::new(
-            &p,
-            &w,
-            &x0,
-            Hyper::paper_default(0.5 / p.smoothness()),
-            OracleKind::Full,
-            Box::new(InfNormQuantizer::new(2, 256)),
-            Box::new(Zero),
-            3,
-        );
+    for shuffled in [false, true] {
+        let cfg = Config::parse(&format!(
+            "nodes = 4\nsamples_per_node = 24\ndim = 5\nclasses = 3\nbatches = 4\n\
+             separation = 1.0\nseed = 21\nlambda1 = 0\nlambda2 = 0.1\nbits = 2\n\
+             shuffled = {shuffled}\n"
+        ))
+        .unwrap();
+        let exp = Experiment::from_config(&cfg).unwrap();
+        let p = exp.problem.as_ref();
+        let x_star = solve_reference(p, 0.0, 40_000, 1e-13);
+        // λ1 = 0 ⇒ the experiment's default prox is already r ≡ 0
+        assert!(exp.prox().is_zero());
+        let mut alg = ProxLead::builder(&exp).seed(3).build();
         for _ in 0..4000 {
-            alg.step(&p);
+            alg.step(p);
         }
         let s = suboptimality(alg.x(), &x_star);
-        assert!(s < 1e-12, "{partition:?}: {s}");
+        assert!(s < 1e-12, "shuffled = {shuffled}: {s}");
     }
 }
 
@@ -163,22 +114,14 @@ fn heterogeneity_does_not_break_convergence() {
 /// whole feature groups to zero and still converges to the FISTA reference.
 #[test]
 fn group_lasso_composite_converges() {
-    let (p, w) = fixture(4, 17);
+    let exp = fixture(4, 17);
+    let p = exp.problem.as_ref();
     let r = GroupLasso::new(0.02, 3);
-    let x_star = proxlead::algorithm::reference::solve_reference_prox(&p, &r, 60_000, 1e-12);
-    let x0 = Mat::zeros(4, p.dim());
-    let mut alg = ProxLead::new(
-        &p,
-        &w,
-        &x0,
-        Hyper::paper_default(0.5 / p.smoothness()),
-        OracleKind::Full,
-        Box::new(InfNormQuantizer::new(2, 256)),
-        Box::new(GroupLasso::new(0.02, 3)),
-        3,
-    );
+    let x_star = proxlead::algorithm::reference::solve_reference_prox(p, &r, 60_000, 1e-12);
+    let mut alg =
+        ProxLead::builder(&exp).prox(Box::new(GroupLasso::new(0.02, 3))).seed(3).build();
     for _ in 0..6000 {
-        alg.step(&p);
+        alg.step(p);
     }
     let s = suboptimality(alg.x(), &x_star);
     assert!(s < 1e-10, "group-lasso suboptimality {s}");
@@ -195,21 +138,12 @@ fn group_lasso_composite_converges() {
 /// identical and data is heterogeneous (the I−W constraint is active).
 #[test]
 fn consensus_error_vanishes() {
-    let (p, w) = fixture(4, 23);
-    let x0 = Mat::zeros(4, p.dim());
-    let mut alg = ProxLead::new(
-        &p,
-        &w,
-        &x0,
-        Hyper::paper_default(0.5 / p.smoothness()),
-        OracleKind::Full,
-        Box::new(InfNormQuantizer::new(2, 256)),
-        Box::new(L1::new(5e-3)),
-        3,
-    );
+    let exp = fixture(4, 23);
+    let p = exp.problem.as_ref();
+    let mut alg = ProxLead::builder(&exp).seed(3).build();
     let mut early = 0.0;
     for k in 0..4000 {
-        alg.step(&p);
+        alg.step(p);
         if k == 100 {
             early = alg.x().consensus_error();
         }
