@@ -113,7 +113,7 @@ fn main() {
         || {
             let mut cfg = CoordConfig::new(coord_rounds, exp.hyper.eta, WireCodec::Quant(2, 256));
             cfg.record_every = coord_rounds;
-            coordinator::run(Arc::clone(&exp.problem), w, x0, Arc::new(Zero), &cfg)
+            coordinator::run_prox_lead(Arc::clone(&exp.problem), w, x0, Arc::new(Zero), &cfg)
         },
     );
     report.add(&set);

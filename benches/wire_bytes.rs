@@ -1,0 +1,107 @@
+//! Wire-bytes comparison — the paper's bits-axis figures (1b/2b) measured
+//! on a *real* framed codec instead of the engine's accounting model.
+//!
+//! Every registry algorithm runs on the message-passing coordinator over
+//! the same 8-node ring; the "communication cost" column is the total
+//! serialized bytes that actually crossed the per-edge channels (frame
+//! headers included), next to the entropy-coded payload bits the figures
+//! plot. The reproduction target is the paper's headline shape: the
+//! LEAD-family 2-bit rows land within a round-count whisker of their
+//! uncompressed counterparts while moving an order of magnitude fewer
+//! bytes; Choco moves as little but converges to a bias ball; the
+//! uncompressed baselines (NIDS / PG-EXTRA / P2D2 / DGD on a 32-bit wire)
+//! pay the full freight.
+//!
+//! Emits bench_out/wire_bytes.csv + bench_out/wire_bytes.json (CI artifact;
+//! PERF_SMOKE=1 shrinks rounds so the whole harness finishes in seconds).
+
+mod common;
+
+use common::out_dir;
+use proxlead::algorithm::suboptimality;
+use proxlead::config::Config;
+use proxlead::exp::Experiment;
+use proxlead::util::bench::{smoke_mode, BenchReport, BenchSet, Table};
+use std::sync::Arc;
+
+fn base_cfg(rounds: usize) -> Config {
+    // the Table-3 scale suite (DualGD pays an inner solve per round), smooth
+    // panel so the dual family competes on the same objective
+    Config::parse(&format!(
+        "nodes = 8\nsamples_per_node = 60\ndim = 16\nclasses = 5\nbatches = 15\n\
+         separation = 1.0\nlambda1 = 0\nlambda2 = 0.05\nrounds = {rounds}\n\
+         record_every = {rounds}\n"
+    ))
+    .expect("wire_bytes base config")
+}
+
+fn main() {
+    let rounds = if smoke_mode() { 60 } else { 600 };
+    // (label, algorithm, overrides) — the Fig 1b cast plus every remaining
+    // registry baseline on its conventional wire width
+    let variants: &[(&str, &str, &[(&str, &str)])] = &[
+        ("Prox-LEAD 2bit", "prox-lead", &[("bits", "2")]),
+        ("PUDA (C=0, 64bit)", "prox-lead", &[("bits", "64")]),
+        ("LEAD 2bit", "lead", &[("bits", "2")]),
+        ("Choco 2bit", "choco", &[("bits", "2"), ("gamma", "0.2"), ("eta", "0.05")]),
+        ("DGD 32bit", "dgd", &[("bits", "32")]),
+        ("NIDS 32bit", "nids", &[("bits", "32")]),
+        ("PG-EXTRA 32bit", "pg-extra", &[("bits", "32")]),
+        ("P2D2 32bit", "p2d2", &[("bits", "32")]),
+        ("LessBit-B 2bit", "pdgm", &[("bits", "2"), ("gamma", "0.1"), ("alpha", "0.25")]),
+        ("LessBit-A 2bit", "dualgd", &[("bits", "2"), ("alpha", "0.25")]),
+    ];
+
+    let mut set =
+        BenchSet::new(&format!("coordinator wire bytes — {rounds} rounds")).with_reps(0, 1);
+    set.header();
+    let mut table =
+        Table::new("Algorithms on the same wire", &["algorithm", "wire KiB", "Mbit", "subopt"]);
+    let mut csv = String::from("algorithm,codec,rounds,wire_bytes,payload_bits,subopt\n");
+    let mut x_star: Option<Arc<Vec<f64>>> = None;
+
+    for &(label, algorithm, overrides) in variants {
+        let mut cfg = base_cfg(rounds);
+        cfg.set("algorithm", algorithm).expect("algorithm");
+        for &(k, v) in overrides {
+            cfg.set(k, v).expect("override");
+        }
+        let exp = Experiment::from_config(&cfg).expect("experiment");
+        // identical problem across variants ⇒ one reference solve total
+        if let Some(r) = &x_star {
+            exp.set_reference(Arc::clone(r));
+        } else {
+            x_star = Some(exp.reference());
+        }
+        let reference = exp.reference();
+
+        let mut last = None;
+        set.run(label, || last = Some(exp.coordinator()));
+        let res = last.expect("coordinator ran");
+        let (_, x, bits, _) = res.snapshots.last().expect("final snapshot");
+        let s = suboptimality(x, &reference);
+        table.row(vec![
+            label.into(),
+            format!("{:.1}", res.wire_bytes as f64 / 1024.0),
+            format!("{:.2}", *bits as f64 / 1e6),
+            format!("{s:.2e}"),
+        ]);
+        csv.push_str(&format!(
+            "{label},{},{rounds},{},{bits},{s:.6e}\n",
+            exp.codec().name(),
+            res.wire_bytes,
+        ));
+    }
+
+    table.print();
+    std::fs::write(out_dir().join("wire_bytes.csv"), csv).expect("write csv");
+    let mut report = BenchReport::new("wire_bytes");
+    report.add(&set);
+    report.write(out_dir().join("wire_bytes.json").to_str().unwrap()).expect("write json");
+    println!("\nwrote bench_out/wire_bytes.csv + wire_bytes.json");
+    println!(
+        "reading the shape: the 2-bit LEAD-family rows should reach comparable\n\
+         suboptimality while moving ~10x fewer wire bytes than the 32/64-bit rows —\n\
+         'reduces the communication cost almost for free', now measured on real frames."
+    );
+}

@@ -16,7 +16,12 @@
 //! The old `X::new(...)` constructors remain as deprecated shims for the
 //! tests that pin iterate sequences bit-for-bit; everything else
 //! constructs through these builders (usually via
-//! [`Experiment::algorithm`], the name-dispatching registry).
+//! [`Experiment::algorithm`], the name-dispatching registry). The
+//! message-passing coordinator's per-node halves follow the same
+//! per-family parameter conventions — `exp::registry::build_node_algorithm`
+//! is the node-side twin of this module's dispatch, and
+//! `rust/tests/coordinator_parity.rs` pins the two construction paths to
+//! identical iterates under an exact codec.
 
 use super::{Choco, Dgd, DualGd, Hyper, Nids, P2d2, Pdgm, PgExtra, ProxLead};
 use crate::compress::Compressor;
@@ -30,6 +35,28 @@ use crate::prox::Prox;
 /// Warm-started inner dual-solve iterations for the DualGD/LessBit-A
 /// family (the §4.3 comparison's convention).
 pub const DUALGD_INNER_ITERS: usize = 40;
+
+/// Inner-solve gradient-norm tolerance shared by the engine's [`DualGd`]
+/// and the coordinator's `DualGdNode` (one constant, so the two backends
+/// cannot drift apart).
+pub const DUALGD_INNER_TOL: f64 = 1e-12;
+
+/// The DualGD/LessBit-A theory-default dual stepsize: μ/2, or μ/4 when the
+/// communication is compressed. Both registries (engine builder and
+/// coordinator node factory) derive θ through this one function.
+pub fn dualgd_default_theta(mu: f64, compressed: bool) -> f64 {
+    if compressed {
+        mu / 4.0
+    } else {
+        mu / 2.0
+    }
+}
+
+/// The PDGM/LessBit-B default dual stepsize θ = γ/(2η) (the PDHG view),
+/// shared by both registries.
+pub fn pdgm_default_theta(eta: f64, gamma: f64) -> f64 {
+    gamma / (2.0 * eta)
+}
 
 /// The construction surface every algorithm shares, pre-resolved from an
 /// [`Experiment`]. Builders embed one of these and expose chainable
@@ -292,7 +319,7 @@ impl<'a> PdgmBuilder<'a> {
     #[allow(deprecated)]
     pub fn build(self) -> Pdgm {
         let p = self.parts;
-        let theta = self.theta.unwrap_or(p.hyper.gamma / (2.0 * p.hyper.eta));
+        let theta = self.theta.unwrap_or_else(|| pdgm_default_theta(p.hyper.eta, p.hyper.gamma));
         Pdgm::new(p.problem, p.w, p.x0, p.hyper.eta, theta, p.oracle, p.comp, p.hyper.alpha, p.seed)
     }
 }
@@ -332,12 +359,7 @@ impl<'a> DualGdBuilder<'a> {
     pub fn build(self) -> DualGd {
         let p = self.parts;
         let theta = self.theta.unwrap_or_else(|| {
-            let mu = p.problem.strong_convexity();
-            if p.comp.variance_bound() > 0.0 {
-                mu / 4.0
-            } else {
-                mu / 2.0
-            }
+            dualgd_default_theta(p.problem.strong_convexity(), p.comp.variance_bound() > 0.0)
         });
         DualGd::new(p.problem, p.w, p.x0, theta, self.inner_iters, p.comp, p.hyper.alpha, p.seed)
     }

@@ -14,6 +14,10 @@
 //! Choco converges sublinearly (under bounded-gradient assumptions the
 //! paper's algorithms avoid) and inherits DGD's fixed-stepsize bias — both
 //! visible in Fig. 1a.
+//!
+//! Per-node counterpart: [`crate::coordinator::ChocoNode`] — each node
+//! tracks the public replicas x̂ⱼ of itself and its gossip neighbors and
+//! advances them by the decoded wire differences.
 
 use super::{Algorithm, RoundStats};
 use crate::compress::Compressor;

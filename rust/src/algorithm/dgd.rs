@@ -10,6 +10,10 @@
 //! a diminishing stepsize. Compressing X directly (as DCD-SGD did) is
 //! unstable under aggressive compression — the [`super::prox_lead`]
 //! difference-compression COMM is the fix this paper inherits from LEAD.
+//!
+//! Per-node counterpart: [`crate::coordinator::DgdNode`] (the coordinator
+//! quantizes the X broadcast with its wire codec, which is exactly the
+//! DCD-SGD-style raw-iterate compression this note warns about).
 
 use super::{Algorithm, RoundStats};
 use crate::compress::Compressor;

@@ -14,6 +14,11 @@
 //! LEAD/Prox-LEAD add a *second* primal step (free: the gradient is
 //! reused), which is the whole Õ(κ_f·κ_g) → Õ(κ_f + κ_g) improvement the
 //! paper's Table 3 tracks.
+//!
+//! Per-node counterparts: [`crate::coordinator::DualGdNode`] /
+//! [`crate::coordinator::PdgmNode`] — a lossy wire codec switches them onto
+//! the shared compressed-comm node half (`NodeComm`), recovering LessBit
+//! options A and B/C/D on real frames.
 
 use super::{Algorithm, CommState, RoundStats};
 use crate::compress::{Compressor, Identity};
@@ -70,7 +75,7 @@ impl DualGd {
             theta,
             inner_eta: 1.0 / problem.smoothness(),
             inner_iters,
-            inner_tol: 1e-12,
+            inner_tol: super::DUALGD_INNER_TOL,
             comm,
             comp,
             rng: Rng::new(seed),

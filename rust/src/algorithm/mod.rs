@@ -5,8 +5,9 @@
 //! [`Algorithm::step`] over the stacked n×p iterate matrix, with exact
 //! accounting of communicated bits and gradient evaluations. The matrix
 //! form runs on one thread (the bench engine); the message-passing
-//! [`crate::coordinator`] runs the same arithmetic on node threads and is
-//! tested to produce identical iterates.
+//! [`crate::coordinator`] runs the same arithmetic on node threads — every
+//! algorithm here has a per-node half in `coordinator::algorithms`, pinned
+//! bit-for-bit against this matrix form under the exact `Dense64` codec.
 //!
 //! | Module | Algorithms |
 //! |---|---|
@@ -32,8 +33,9 @@ pub mod reference;
 pub mod schedule;
 
 pub use builder::{
-    AlgorithmParts, ChocoBuilder, DgdBuilder, DualGdBuilder, NidsBuilder, P2d2Builder,
-    PdgmBuilder, PgExtraBuilder, ProxLeadBuilder, DUALGD_INNER_ITERS,
+    dualgd_default_theta, pdgm_default_theta, AlgorithmParts, ChocoBuilder, DgdBuilder,
+    DualGdBuilder, NidsBuilder, P2d2Builder, PdgmBuilder, PgExtraBuilder, ProxLeadBuilder,
+    DUALGD_INNER_ITERS, DUALGD_INNER_TOL,
 };
 pub use choco::Choco;
 pub use dgd::Dgd;

@@ -12,6 +12,9 @@
 //! ```
 //!
 //! One broadcast per node per round (the matrix W̃ multiplies).
+//!
+//! Per-node counterpart: [`crate::coordinator::NidsNode`] broadcasts the W̃
+//! operand 2Xᵏ − Xᵏ⁻¹ − η(Gᵏ − Gᵏ⁻¹) and mixes with its (I+W)/2 row.
 
 use super::{Algorithm, RoundStats};
 use crate::graph::MixingOp;

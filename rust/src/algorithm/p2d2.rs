@@ -13,6 +13,11 @@
 //! z̄ᵏ = x̄ᵏ − η ḡᵏ (W̃ preserves row means), so the consensual fixed point
 //! is exactly the composite optimum; the W̃ contraction on the disagreement
 //! subspace gives the linear rate. One broadcast per node per round.
+//!
+//! Per-node counterpart: [`crate::coordinator::P2d2Node`] — the init
+//! product Z¹ = W̃(X⁰ − η∇F(X⁰)) needs the neighbors' gradients, so the
+//! node half declares one *setup round* the coordinator driver exchanges
+//! before step counting starts (the engine performs it at construction).
 
 use super::{Algorithm, RoundStats};
 use crate::graph::MixingOp;

@@ -12,6 +12,10 @@
 //! ```
 //!
 //! (Setting R ≡ 0 recovers EXTRA.)
+//!
+//! Per-node counterpart: [`crate::coordinator::PgExtraNode`] — the only
+//! node half needing two weight rows (W for Xᵏ, W̃ for the cached Xᵏ⁻¹
+//! broadcasts of the previous round).
 
 use super::{Algorithm, RoundStats};
 use crate::graph::MixingOp;

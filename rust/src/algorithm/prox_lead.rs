@@ -17,6 +17,10 @@
 //! - **PUDA / Corollary 6**: `comp = Identity` (C = 0);
 //! - **NIDS**: `comp = Identity`, `prox = Zero`, γ = 1 (see §4.3);
 //! - **SGD / LSVRG / SAGA variants**: choice of [`OracleKind`].
+//!
+//! Per-node counterpart: [`crate::coordinator::ProxLeadNode`] runs the same
+//! arithmetic on node threads over serialized frames (bit-identical under
+//! the exact `Dense64` codec — see `rust/tests/coordinator_parity.rs`).
 
 use super::{Algorithm, CommState, Hyper, RoundStats};
 use crate::compress::Compressor;

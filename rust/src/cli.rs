@@ -24,7 +24,8 @@ USAGE:
   proxlead <SUBCOMMAND> [--config FILE] [--key value]...
 
 SUBCOMMANDS:
-  train       run distributed Prox-LEAD on node threads (the coordinator)
+  train       run any `algorithm` on node threads (the message-passing
+              coordinator: real serialized frames, actual wire bytes)
   sweep       run a parallel experiment grid through the matrix engine
   solve-ref   compute the high-precision reference solution x*
   info        print problem/network condition numbers and artifacts

@@ -62,7 +62,12 @@ impl Compressor for InfNormQuantizer {
             let scale = norm / levels;
             let inv_scale = levels / norm; // hoisted: one divide per block
             for &v in chunk {
-                let mag = (v.abs() * inv_scale + rng.f64()).floor();
+                // the same magnitude expression and boundary clamp as the
+                // wire codec (compress::bits::encode_inf_quantized), so both
+                // paths draw code-identical magnitudes from the same dither
+                // stream — they differ only in the norm the decode scales by
+                // (f64 here, the transmitted f32 on the wire)
+                let mag = (v.abs() * inv_scale + rng.f64()).floor().min(levels);
                 decoded.push(v.signum() * scale * mag);
             }
             bits += 32 + (self.bits as u64) * chunk.len() as u64;

@@ -1,0 +1,900 @@
+//! Per-node halves of every registry algorithm — the [`NodeAlgorithm`]
+//! implementations the generic driver runs on node threads.
+//!
+//! Each struct is the row-i arithmetic of its matrix-engine counterpart,
+//! re-expressed over local vectors, with the *same operation order per
+//! entry* (see each `outgoing`/`update` body's correspondence comments).
+//! Under an exact codec (`Dense64`) a coordinator run is therefore
+//! bit-identical to the engine — `rust/tests/coordinator_parity.rs` pins
+//! all 9 registry names.
+//!
+//! Two communication styles cover all of them:
+//!
+//! - **Difference compression against a running state H** ([`NodeComm`],
+//!   the per-node mirror of the engine's `CommState`): Prox-LEAD/LEAD
+//!   broadcast Q(Z − H); the compressed dual methods (LessBit-A/B =
+//!   DualGD/PDGM under a lossy codec) broadcast Q(X − H). Both endpoints
+//!   blend H ← H + αQ, so the compression error vanishes as Z stabilizes.
+//! - **Raw-vector broadcast**: DGD sends its iterate, Choco the difference
+//!   against its public replica, NIDS/PG-EXTRA/P2D2 their mixing operand.
+//!   The wire codec still applies — running e.g. NIDS over a 2-bit wire is
+//!   a new scenario the matrix engine never modeled (it charges these
+//!   baselines 32 bits/entry and mixes exact values).
+//!
+//! Oracle streams are shared with the engine: `Sgo::for_node` aligns the
+//! per-node RNG fork with the slot the all-nodes constructor would
+//! produce, so even SGD/LSVRG/SAGA runs match the engine bit for bit on an
+//! exact codec.
+
+// Several updates deliberately spell `+ -1.0 * v` / `+ -η * g`: each line
+// mirrors one engine `axpy(alpha, ·)` call so the per-entry f64 operation
+// sequence — and therefore the iterate bits — match exactly.
+#![allow(clippy::neg_multiply)]
+
+use super::node::{NodeAlgorithm, WeightRow};
+use super::CoordConfig;
+use crate::linalg::Mat;
+use crate::oracle::Sgo;
+use crate::problem::Problem;
+use crate::prox::Prox;
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// The engine seeds its oracle with `Rng::new(seed).next_u64()`; drawing
+/// the same value here puts every node thread on the engine's per-node
+/// oracle stream (see [`Sgo::for_node`]).
+fn oracle_for(cfg: &CoordConfig, problem: &dyn Problem, me: usize, x0: &[f64]) -> Sgo {
+    Sgo::for_node(cfg.oracle, problem, me, x0, Rng::new(cfg.seed).next_u64())
+}
+
+/// The COMM procedure of Algorithm 1, one node's share — the per-node
+/// mirror of the engine's `CommState`. Both wire endpoints decode the same
+/// Qᵏ, so H and H_w = (WH)ᵢ stay consistent across the network without
+/// ever exchanging H itself.
+pub struct NodeComm {
+    h: Vec<f64>,
+    h_w: Vec<f64>,
+    alpha: f64,
+    wq: Vec<f64>, // scratch: (W·Qᵏ) row
+}
+
+impl NodeComm {
+    /// H¹ = X⁰ and H_w¹ = (W X⁰)ᵢ — X⁰ is common knowledge, so the init
+    /// product is local (no startup exchange), exactly like the engine's
+    /// `CommState::new`.
+    pub fn new(row: &WeightRow, x0_all: &Mat, alpha: f64) -> NodeComm {
+        let h = x0_all.row(row.node).to_vec();
+        let mut h_w = vec![0.0; x0_all.cols];
+        row.mix_rows_into(&mut h_w, x0_all);
+        NodeComm { h, h_w, alpha, wq: vec![0.0; x0_all.cols] }
+    }
+
+    /// The broadcast operand Z − H (what the wire codec compresses).
+    pub fn diff_into(&self, z: &[f64], out: &mut [f64]) {
+        for ((o, &zi), &hi) in out.iter_mut().zip(z).zip(&self.h) {
+            *o = zi - hi;
+        }
+    }
+
+    /// Absorb one decoded round: writes the gossip residual Ẑ − Ẑ_w into
+    /// `resid` (Ẑ = H + Qᵢ, Ẑ_w = H_w + (WQ)ᵢ) and blends H ← H + αQᵢ,
+    /// H_w ← H_w + α(WQ)ᵢ — the engine's `CommState::comm` per row.
+    pub fn absorb(
+        &mut self,
+        row: &WeightRow,
+        q_own: &[f64],
+        peers: &[(usize, Vec<f64>)],
+        resid: &mut [f64],
+    ) {
+        row.mix_into(&mut self.wq, q_own, peers);
+        let a = self.alpha;
+        for ((((r, h), hw), &q), &wq) in resid
+            .iter_mut()
+            .zip(self.h.iter_mut())
+            .zip(self.h_w.iter_mut())
+            .zip(q_own)
+            .zip(&self.wq)
+        {
+            let z_hat = *h + q;
+            let zw_hat = *hw + wq;
+            *r = z_hat - zw_hat;
+            *h += a * q;
+            *hw += a * wq;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Prox-LEAD (Algorithm 1; LEAD when the prox is Zero)
+// ---------------------------------------------------------------------------
+
+/// Node half of [`crate::algorithm::ProxLead`].
+pub struct ProxLeadNode {
+    problem: Arc<dyn Problem>,
+    prox: Arc<dyn Prox>,
+    row: WeightRow,
+    me: usize,
+    eta: f64,
+    gamma: f64,
+    oracle: Sgo,
+    comm: NodeComm,
+    x: Vec<f64>,
+    d: Vec<f64>,
+    z: Vec<f64>,
+    g: Vec<f64>,
+    resid: Vec<f64>,
+}
+
+impl ProxLeadNode {
+    pub fn new(
+        problem: Arc<dyn Problem>,
+        prox: Arc<dyn Prox>,
+        x0_all: &Mat,
+        row: WeightRow,
+        cfg: &CoordConfig,
+    ) -> ProxLeadNode {
+        let me = row.node;
+        let p = problem.dim();
+        let mut oracle = oracle_for(cfg, problem.as_ref(), me, x0_all.row(me));
+        // lines 1–3: Z¹ = X⁰ − η·SGO(X⁰), X¹ = prox_ηR(Z¹), D¹ = 0
+        let mut g = vec![0.0; p];
+        oracle.sample(problem.as_ref(), me, x0_all.row(me), &mut g);
+        let mut x = x0_all.row(me).to_vec();
+        for (xi, &gi) in x.iter_mut().zip(&g) {
+            *xi += -cfg.eta * gi;
+        }
+        prox.prox(&mut x, cfg.eta);
+        let comm = NodeComm::new(&row, x0_all, cfg.alpha);
+        ProxLeadNode {
+            problem,
+            prox,
+            row,
+            me,
+            eta: cfg.eta,
+            gamma: cfg.gamma,
+            oracle,
+            comm,
+            x,
+            d: vec![0.0; p],
+            z: vec![0.0; p],
+            g,
+            resid: vec![0.0; p],
+        }
+    }
+}
+
+impl NodeAlgorithm for ProxLeadNode {
+    fn outgoing(&mut self, out: &mut [f64]) {
+        // lines 5–6: Z = X − ηG − ηD (engine: z.axpy(-η, G); z.axpy(-η, D))
+        self.oracle.sample(self.problem.as_ref(), self.me, &self.x, &mut self.g);
+        for (((z, &xi), &gi), &di) in self.z.iter_mut().zip(&self.x).zip(&self.g).zip(&self.d) {
+            *z = xi + -self.eta * gi + -self.eta * di;
+        }
+        // COMM broadcast operand: Z − H
+        self.comm.diff_into(&self.z, out);
+    }
+
+    fn update(&mut self, q_own: &[f64], peers: &[(usize, Vec<f64>)]) {
+        self.comm.absorb(&self.row, q_own, peers, &mut self.resid);
+        // lines 8–10: D += γ/(2η)·resid; V = Z − γ/2·resid; X = prox_ηR(V)
+        let coef = self.gamma / (2.0 * self.eta);
+        for ((d, z), &r) in self.d.iter_mut().zip(self.z.iter_mut()).zip(&self.resid) {
+            *d += coef * r;
+            *z += -self.gamma / 2.0 * r;
+        }
+        self.prox.prox(&mut self.z, self.eta);
+        self.x.copy_from_slice(&self.z);
+    }
+
+    fn x(&self) -> &[f64] {
+        &self.x
+    }
+
+    fn grad_evals(&self) -> u64 {
+        self.oracle.grad_evals()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DGD / D-PSGD / Prox-DGD
+// ---------------------------------------------------------------------------
+
+/// Node half of [`crate::algorithm::Dgd`]: broadcast the (codec-compressed)
+/// iterate, mix, gradient step, prox.
+pub struct DgdNode {
+    problem: Arc<dyn Problem>,
+    prox: Arc<dyn Prox>,
+    row: WeightRow,
+    me: usize,
+    eta: f64,
+    oracle: Sgo,
+    x: Vec<f64>,
+    g: Vec<f64>,
+    mixed: Vec<f64>,
+}
+
+impl DgdNode {
+    pub fn new(
+        problem: Arc<dyn Problem>,
+        prox: Arc<dyn Prox>,
+        x0_all: &Mat,
+        row: WeightRow,
+        cfg: &CoordConfig,
+    ) -> DgdNode {
+        let me = row.node;
+        let p = problem.dim();
+        let oracle = oracle_for(cfg, problem.as_ref(), me, x0_all.row(me));
+        DgdNode {
+            problem,
+            prox,
+            row,
+            me,
+            eta: cfg.eta,
+            oracle,
+            x: x0_all.row(me).to_vec(),
+            g: vec![0.0; p],
+            mixed: vec![0.0; p],
+        }
+    }
+}
+
+impl NodeAlgorithm for DgdNode {
+    fn outgoing(&mut self, out: &mut [f64]) {
+        self.oracle.sample(self.problem.as_ref(), self.me, &self.x, &mut self.g);
+        out.copy_from_slice(&self.x);
+    }
+
+    fn update(&mut self, q_own: &[f64], peers: &[(usize, Vec<f64>)]) {
+        // X ← prox_ηr(W X̂ − η G)  (engine: apply_into; axpy(-η, G); prox)
+        self.row.mix_into(&mut self.mixed, q_own, peers);
+        for (m, &gi) in self.mixed.iter_mut().zip(&self.g) {
+            *m += -self.eta * gi;
+        }
+        self.prox.prox(&mut self.mixed, self.eta);
+        self.x.copy_from_slice(&self.mixed);
+    }
+
+    fn x(&self) -> &[f64] {
+        &self.x
+    }
+
+    fn grad_evals(&self) -> u64 {
+        self.oracle.grad_evals()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Choco-SGD / Choco-Gossip
+// ---------------------------------------------------------------------------
+
+/// Node half of [`crate::algorithm::Choco`]: every node keeps public
+/// replicas x̂ⱼ of itself and its gossip neighbors, updated by the
+/// compressed differences everyone broadcasts.
+pub struct ChocoNode {
+    problem: Arc<dyn Problem>,
+    prox: Arc<dyn Prox>,
+    row_minus_i: WeightRow,
+    me: usize,
+    eta: f64,
+    gamma_c: f64,
+    oracle: Sgo,
+    x: Vec<f64>,
+    x_half: Vec<f64>,
+    g: Vec<f64>,
+    corr: Vec<f64>,
+    replica_own: Vec<f64>,
+    /// Neighbor replicas, aligned with the gossip row (ascending id).
+    replicas: Vec<(usize, Vec<f64>)>,
+}
+
+impl ChocoNode {
+    pub fn new(
+        problem: Arc<dyn Problem>,
+        prox: Arc<dyn Prox>,
+        x0_all: &Mat,
+        row: WeightRow,
+        cfg: &CoordConfig,
+    ) -> ChocoNode {
+        let me = row.node;
+        let p = problem.dim();
+        let oracle = oracle_for(cfg, problem.as_ref(), me, x0_all.row(me));
+        let replicas = row.neighbors.iter().map(|&(j, _)| (j, vec![0.0; p])).collect();
+        ChocoNode {
+            problem,
+            prox,
+            row_minus_i: row.minus_identity(),
+            me,
+            eta: cfg.eta,
+            // the experiment γ doubles as Choco's gossip stepsize γ_c (the
+            // registry convention)
+            gamma_c: cfg.gamma,
+            oracle,
+            x: x0_all.row(me).to_vec(),
+            x_half: vec![0.0; p],
+            g: vec![0.0; p],
+            corr: vec![0.0; p],
+            replica_own: vec![0.0; p],
+            replicas,
+        }
+    }
+}
+
+impl NodeAlgorithm for ChocoNode {
+    fn outgoing(&mut self, out: &mut [f64]) {
+        // X½ = X − ηG; broadcast Q(X½ − X̂ᵢ)
+        self.oracle.sample(self.problem.as_ref(), self.me, &self.x, &mut self.g);
+        for ((h, &xi), &gi) in self.x_half.iter_mut().zip(&self.x).zip(&self.g) {
+            *h = xi + -self.eta * gi;
+        }
+        for ((o, &hi), &ri) in out.iter_mut().zip(&self.x_half).zip(&self.replica_own) {
+            *o = hi - ri;
+        }
+    }
+
+    fn update(&mut self, q_own: &[f64], peers: &[(usize, Vec<f64>)]) {
+        // all replicas advance by the decoded differences: X̂ ← X̂ + Q
+        for (r, &q) in self.replica_own.iter_mut().zip(q_own) {
+            *r += q;
+        }
+        for ((_, rep), (_, q)) in self.replicas.iter_mut().zip(peers) {
+            for (r, &qi) in rep.iter_mut().zip(q) {
+                *r += qi;
+            }
+        }
+        // X ← prox_ηr( X½ + γ_c (W − I) X̂ )
+        self.row_minus_i.mix_into(&mut self.corr, &self.replica_own, &self.replicas);
+        for (h, &c) in self.x_half.iter_mut().zip(&self.corr) {
+            *h += self.gamma_c * c;
+        }
+        self.prox.prox(&mut self.x_half, self.eta);
+        self.x.copy_from_slice(&self.x_half);
+    }
+
+    fn x(&self) -> &[f64] {
+        &self.x
+    }
+
+    fn grad_evals(&self) -> u64 {
+        self.oracle.grad_evals()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NIDS
+// ---------------------------------------------------------------------------
+
+/// Node half of [`crate::algorithm::Nids`]: broadcast the W̃ operand
+/// 2Xᵏ − Xᵏ⁻¹ − η(Gᵏ − Gᵏ⁻¹), mix with W̃ = (I+W)/2.
+pub struct NidsNode {
+    problem: Arc<dyn Problem>,
+    prox: Arc<dyn Prox>,
+    row_tilde: WeightRow,
+    me: usize,
+    eta: f64,
+    oracle: Sgo,
+    x: Vec<f64>,
+    x_prev: Vec<f64>,
+    z: Vec<f64>,
+    g: Vec<f64>,
+    g_prev: Vec<f64>,
+    mixed: Vec<f64>,
+}
+
+impl NidsNode {
+    pub fn new(
+        problem: Arc<dyn Problem>,
+        prox: Arc<dyn Prox>,
+        x0_all: &Mat,
+        row: WeightRow,
+        cfg: &CoordConfig,
+    ) -> NidsNode {
+        let me = row.node;
+        let p = problem.dim();
+        let mut oracle = oracle_for(cfg, problem.as_ref(), me, x0_all.row(me));
+        // init: Z¹ = X⁰ − η∇F(X⁰); X¹ = prox(Z¹)
+        let mut g0 = vec![0.0; p];
+        oracle.sample(problem.as_ref(), me, x0_all.row(me), &mut g0);
+        let mut z = x0_all.row(me).to_vec();
+        for (zi, &gi) in z.iter_mut().zip(&g0) {
+            *zi += -cfg.eta * gi;
+        }
+        let mut x = z.clone();
+        prox.prox(&mut x, cfg.eta);
+        NidsNode {
+            problem,
+            prox,
+            row_tilde: row.half_lazy(),
+            me,
+            eta: cfg.eta,
+            oracle,
+            x,
+            x_prev: x0_all.row(me).to_vec(),
+            z,
+            g: vec![0.0; p],
+            g_prev: g0,
+            mixed: vec![0.0; p],
+        }
+    }
+}
+
+impl NodeAlgorithm for NidsNode {
+    fn outgoing(&mut self, out: &mut [f64]) {
+        // inner = 2Xᵏ − Xᵏ⁻¹ − η(Gᵏ − Gᵏ⁻¹), engine's exact axpy sequence
+        self.oracle.sample(self.problem.as_ref(), self.me, &self.x, &mut self.g);
+        for ((((o, &xi), &xp), &gi), &gp) in
+            out.iter_mut().zip(&self.x).zip(&self.x_prev).zip(&self.g).zip(&self.g_prev)
+        {
+            let mut t = xi * 2.0;
+            t += -1.0 * xp;
+            t += -self.eta * gi;
+            t += self.eta * gp;
+            *o = t;
+        }
+    }
+
+    fn update(&mut self, q_own: &[f64], peers: &[(usize, Vec<f64>)]) {
+        // Zᵏ⁺¹ = Zᵏ − Xᵏ + W̃·inner; Xᵏ⁺¹ = prox(Zᵏ⁺¹)
+        self.row_tilde.mix_into(&mut self.mixed, q_own, peers);
+        for ((z, &xi), &m) in self.z.iter_mut().zip(&self.x).zip(&self.mixed) {
+            *z += -1.0 * xi;
+            *z += 1.0 * m;
+        }
+        self.x_prev.copy_from_slice(&self.x);
+        self.g_prev.copy_from_slice(&self.g);
+        self.x.copy_from_slice(&self.z);
+        self.prox.prox(&mut self.x, self.eta);
+    }
+
+    fn x(&self) -> &[f64] {
+        &self.x
+    }
+
+    fn grad_evals(&self) -> u64 {
+        self.oracle.grad_evals()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PG-EXTRA
+// ---------------------------------------------------------------------------
+
+/// Node half of [`crate::algorithm::PgExtra`]: broadcasts Xᵏ and mixes it
+/// with W *and* (cached from the previous round) with W̃ — the only
+/// algorithm whose update needs two weight rows.
+pub struct PgExtraNode {
+    problem: Arc<dyn Problem>,
+    prox: Arc<dyn Prox>,
+    row: WeightRow,
+    row_tilde: WeightRow,
+    me: usize,
+    eta: f64,
+    oracle: Sgo,
+    x: Vec<f64>,
+    x_prev: Vec<f64>,
+    z: Vec<f64>,
+    g: Vec<f64>,
+    g_prev: Vec<f64>,
+    wx: Vec<f64>,
+    wtx_prev: Vec<f64>,
+    /// Previous round's decoded broadcasts (own + peers) — the W̃Xᵏ⁻¹
+    /// operands. Initialized from the common X⁰.
+    prev_own: Vec<f64>,
+    prev_peers: Vec<(usize, Vec<f64>)>,
+}
+
+impl PgExtraNode {
+    pub fn new(
+        problem: Arc<dyn Problem>,
+        prox: Arc<dyn Prox>,
+        x0_all: &Mat,
+        row: WeightRow,
+        cfg: &CoordConfig,
+    ) -> PgExtraNode {
+        let me = row.node;
+        let p = problem.dim();
+        let mut oracle = oracle_for(cfg, problem.as_ref(), me, x0_all.row(me));
+        // init: Z¹ = (W X⁰)ᵢ − η∇F(X⁰)ᵢ; X¹ = prox(Z¹); X⁰ is common
+        // knowledge, so the W·X⁰ product is local
+        let mut g0 = vec![0.0; p];
+        oracle.sample(problem.as_ref(), me, x0_all.row(me), &mut g0);
+        let mut z = vec![0.0; p];
+        row.mix_rows_into(&mut z, x0_all);
+        for (zi, &gi) in z.iter_mut().zip(&g0) {
+            *zi += -cfg.eta * gi;
+        }
+        let mut x = z.clone();
+        prox.prox(&mut x, cfg.eta);
+        let prev_peers = row.neighbors.iter().map(|&(j, _)| (j, x0_all.row(j).to_vec())).collect();
+        PgExtraNode {
+            problem,
+            prox,
+            row_tilde: row.half_lazy(),
+            row,
+            me,
+            eta: cfg.eta,
+            oracle,
+            x,
+            x_prev: x0_all.row(me).to_vec(),
+            z,
+            g: vec![0.0; p],
+            g_prev: g0,
+            wx: vec![0.0; p],
+            wtx_prev: vec![0.0; p],
+            prev_own: x0_all.row(me).to_vec(),
+            prev_peers,
+        }
+    }
+}
+
+impl NodeAlgorithm for PgExtraNode {
+    fn outgoing(&mut self, out: &mut [f64]) {
+        self.oracle.sample(self.problem.as_ref(), self.me, &self.x, &mut self.g);
+        out.copy_from_slice(&self.x);
+    }
+
+    fn update(&mut self, q_own: &[f64], peers: &[(usize, Vec<f64>)]) {
+        // Zᵏ⁺¹ = Zᵏ + WXᵏ − W̃Xᵏ⁻¹ − η(Gᵏ − Gᵏ⁻¹)
+        self.row.mix_into(&mut self.wx, q_own, peers);
+        self.row_tilde.mix_into(&mut self.wtx_prev, &self.prev_own, &self.prev_peers);
+        for ((((z, &wx), &wt), &gi), &gp) in
+            self.z.iter_mut().zip(&self.wx).zip(&self.wtx_prev).zip(&self.g).zip(&self.g_prev)
+        {
+            *z += 1.0 * wx;
+            *z += -1.0 * wt;
+            *z += -self.eta * gi;
+            *z += self.eta * gp;
+        }
+        self.x_prev.copy_from_slice(&self.x);
+        self.g_prev.copy_from_slice(&self.g);
+        self.x.copy_from_slice(&self.z);
+        self.prox.prox(&mut self.x, self.eta);
+        // next round's W̃ operands are this round's decoded broadcasts
+        self.prev_own.copy_from_slice(q_own);
+        for ((_, prev), (_, cur)) in self.prev_peers.iter_mut().zip(peers) {
+            prev.copy_from_slice(cur);
+        }
+    }
+
+    fn x(&self) -> &[f64] {
+        &self.x
+    }
+
+    fn grad_evals(&self) -> u64 {
+        self.oracle.grad_evals()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// P2D2
+// ---------------------------------------------------------------------------
+
+/// Node half of [`crate::algorithm::P2d2`]. The engine performs a W̃
+/// product at *construction* (Z¹ = W̃(X⁰ − η∇F(X⁰))); on the wire that
+/// product needs the neighbors' gradients, so the node declares one setup
+/// round — the driver exchanges frames once before step counting starts.
+pub struct P2d2Node {
+    problem: Arc<dyn Problem>,
+    prox: Arc<dyn Prox>,
+    row_tilde: WeightRow,
+    me: usize,
+    eta: f64,
+    oracle: Sgo,
+    x: Vec<f64>,
+    x_prev: Vec<f64>,
+    z: Vec<f64>,
+    g: Vec<f64>,
+    g_prev: Vec<f64>,
+    pending_setup: bool,
+}
+
+impl P2d2Node {
+    pub fn new(
+        problem: Arc<dyn Problem>,
+        prox: Arc<dyn Prox>,
+        x0_all: &Mat,
+        row: WeightRow,
+        cfg: &CoordConfig,
+    ) -> P2d2Node {
+        let me = row.node;
+        let p = problem.dim();
+        let mut oracle = oracle_for(cfg, problem.as_ref(), me, x0_all.row(me));
+        let mut g0 = vec![0.0; p];
+        oracle.sample(problem.as_ref(), me, x0_all.row(me), &mut g0);
+        P2d2Node {
+            problem,
+            prox,
+            row_tilde: row.half_lazy(),
+            me,
+            eta: cfg.eta,
+            oracle,
+            x: x0_all.row(me).to_vec(),
+            x_prev: x0_all.row(me).to_vec(),
+            z: vec![0.0; p],
+            g: vec![0.0; p],
+            g_prev: g0,
+            pending_setup: true,
+        }
+    }
+}
+
+impl NodeAlgorithm for P2d2Node {
+    fn setup_rounds(&self) -> usize {
+        1
+    }
+
+    fn outgoing(&mut self, out: &mut [f64]) {
+        if self.pending_setup {
+            // init broadcast: X⁰ − η∇F(X⁰) (g_prev holds G⁰)
+            for ((o, &xi), &gi) in out.iter_mut().zip(&self.x).zip(&self.g_prev) {
+                *o = xi + -self.eta * gi;
+            }
+            return;
+        }
+        // inner = Zᵏ + Xᵏ − Xᵏ⁻¹ − η(Gᵏ − Gᵏ⁻¹), engine's axpy sequence
+        self.oracle.sample(self.problem.as_ref(), self.me, &self.x, &mut self.g);
+        for (((((o, &zi), &xi), &xp), &gi), &gp) in out
+            .iter_mut()
+            .zip(&self.z)
+            .zip(&self.x)
+            .zip(&self.x_prev)
+            .zip(&self.g)
+            .zip(&self.g_prev)
+        {
+            let mut t = zi;
+            t += 1.0 * xi;
+            t += -1.0 * xp;
+            t += -self.eta * gi;
+            t += self.eta * gp;
+            *o = t;
+        }
+    }
+
+    fn update(&mut self, q_own: &[f64], peers: &[(usize, Vec<f64>)]) {
+        // Z is overwritten by the W̃ mix, exactly like the engine's
+        // apply_into; then Xᵏ⁺¹ = prox(Zᵏ⁺¹)
+        self.row_tilde.mix_into(&mut self.z, q_own, peers);
+        if self.pending_setup {
+            // x_prev/g_prev already hold X⁰/G⁰ (the engine's init state)
+            self.pending_setup = false;
+        } else {
+            self.x_prev.copy_from_slice(&self.x);
+            self.g_prev.copy_from_slice(&self.g);
+        }
+        self.x.copy_from_slice(&self.z);
+        self.prox.prox(&mut self.x, self.eta);
+    }
+
+    fn x(&self) -> &[f64] {
+        &self.x
+    }
+
+    fn grad_evals(&self) -> u64 {
+        self.oracle.grad_evals()
+    }
+}
+
+/// The dual-ascent consume step DualGD and PDGM share (one copy of the
+/// engine correspondence): on a lossy wire, D += θ(X̂ − X̂_w) through the
+/// COMM state (LessBit); on an exact wire, D += θ(I − W)X — the engine's
+/// fused uncompressed loop.
+#[allow(clippy::too_many_arguments)]
+fn dual_ascend(
+    comm: &mut Option<NodeComm>,
+    row: &WeightRow,
+    theta: f64,
+    x: &[f64],
+    d: &mut [f64],
+    mixed: &mut [f64],
+    resid: &mut [f64],
+    q_own: &[f64],
+    peers: &[(usize, Vec<f64>)],
+) {
+    match comm {
+        Some(c) => {
+            c.absorb(row, q_own, peers, resid);
+            for (di, &r) in d.iter_mut().zip(resid.iter()) {
+                *di += theta * r;
+            }
+        }
+        None => {
+            row.mix_into(mixed, q_own, peers);
+            for ((di, &xi), &wx) in d.iter_mut().zip(x).zip(mixed.iter()) {
+                *di += theta * (xi - wx);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DualGD / LessBit-A
+// ---------------------------------------------------------------------------
+
+/// Node half of [`crate::algorithm::DualGd`]: a warm-started inner solve of
+/// ∇F*(−Dᵢ) per round, then one X broadcast. A lossy codec switches on the
+/// [`NodeComm`] half (LessBit Option A); exact codecs ascend on the raw
+/// mix, matching the engine's uncompressed path.
+pub struct DualGdNode {
+    problem: Arc<dyn Problem>,
+    row: WeightRow,
+    me: usize,
+    theta: f64,
+    inner_eta: f64,
+    inner_iters: usize,
+    inner_tol: f64,
+    inner_grad_evals: u64,
+    x: Vec<f64>,
+    d: Vec<f64>,
+    g: Vec<f64>,
+    comm: Option<NodeComm>,
+    mixed: Vec<f64>,
+    resid: Vec<f64>,
+}
+
+impl DualGdNode {
+    pub fn new(
+        problem: Arc<dyn Problem>,
+        x0_all: &Mat,
+        row: WeightRow,
+        theta: f64,
+        inner_iters: usize,
+        cfg: &CoordConfig,
+    ) -> DualGdNode {
+        let me = row.node;
+        let p = problem.dim();
+        let comm = cfg.codec.is_lossy().then(|| NodeComm::new(&row, x0_all, cfg.alpha));
+        let inner_eta = 1.0 / problem.smoothness();
+        DualGdNode {
+            problem,
+            row,
+            me,
+            theta,
+            inner_eta,
+            inner_iters,
+            inner_tol: crate::algorithm::DUALGD_INNER_TOL,
+            inner_grad_evals: 0,
+            x: x0_all.row(me).to_vec(),
+            d: vec![0.0; p],
+            g: vec![0.0; p],
+            comm,
+            mixed: vec![0.0; p],
+            resid: vec![0.0; p],
+        }
+    }
+}
+
+impl NodeAlgorithm for DualGdNode {
+    fn outgoing(&mut self, out: &mut [f64]) {
+        // inner solve: x = argmin f_i(x) + ⟨d, x⟩ — the engine's per-row
+        // warm-started gradient loop, verbatim
+        let m = self.problem.num_batches() as u64;
+        for _ in 0..self.inner_iters {
+            self.problem.grad(self.me, &self.x, &mut self.g);
+            self.inner_grad_evals += m;
+            let mut sq = 0.0;
+            for (gj, &dj) in self.g.iter_mut().zip(&self.d) {
+                *gj += dj;
+                sq += *gj * *gj;
+            }
+            if sq.sqrt() < self.inner_tol {
+                break;
+            }
+            for (xj, &gj) in self.x.iter_mut().zip(&self.g) {
+                *xj -= self.inner_eta * gj;
+            }
+        }
+        match &self.comm {
+            Some(c) => c.diff_into(&self.x, out),
+            None => out.copy_from_slice(&self.x),
+        }
+    }
+
+    fn update(&mut self, q_own: &[f64], peers: &[(usize, Vec<f64>)]) {
+        dual_ascend(
+            &mut self.comm,
+            &self.row,
+            self.theta,
+            &self.x,
+            &mut self.d,
+            &mut self.mixed,
+            &mut self.resid,
+            q_own,
+            peers,
+        );
+    }
+
+    fn x(&self) -> &[f64] {
+        &self.x
+    }
+
+    fn grad_evals(&self) -> u64 {
+        self.inner_grad_evals
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PDGM / LessBit-B/C/D
+// ---------------------------------------------------------------------------
+
+/// Node half of [`crate::algorithm::Pdgm`]: one primal step per dual
+/// ascent. A lossy codec switches on the [`NodeComm`] half (LessBit
+/// Options B/C/D depending on the oracle).
+pub struct PdgmNode {
+    problem: Arc<dyn Problem>,
+    row: WeightRow,
+    me: usize,
+    eta: f64,
+    theta: f64,
+    oracle: Sgo,
+    x: Vec<f64>,
+    d: Vec<f64>,
+    g: Vec<f64>,
+    comm: Option<NodeComm>,
+    mixed: Vec<f64>,
+    resid: Vec<f64>,
+}
+
+impl PdgmNode {
+    pub fn new(
+        problem: Arc<dyn Problem>,
+        x0_all: &Mat,
+        row: WeightRow,
+        theta: f64,
+        cfg: &CoordConfig,
+    ) -> PdgmNode {
+        let me = row.node;
+        let p = problem.dim();
+        let oracle = oracle_for(cfg, problem.as_ref(), me, x0_all.row(me));
+        let comm = cfg.codec.is_lossy().then(|| NodeComm::new(&row, x0_all, cfg.alpha));
+        PdgmNode {
+            problem,
+            row,
+            me,
+            eta: cfg.eta,
+            theta,
+            oracle,
+            x: x0_all.row(me).to_vec(),
+            d: vec![0.0; p],
+            g: vec![0.0; p],
+            comm,
+            mixed: vec![0.0; p],
+            resid: vec![0.0; p],
+        }
+    }
+}
+
+impl NodeAlgorithm for PdgmNode {
+    fn outgoing(&mut self, out: &mut [f64]) {
+        // primal: X ← X − ηG − ηD (engine: axpy(-η, G); X -= η·D)
+        self.oracle.sample(self.problem.as_ref(), self.me, &self.x, &mut self.g);
+        for ((x, &gi), &di) in self.x.iter_mut().zip(&self.g).zip(&self.d) {
+            *x += -self.eta * gi;
+            *x += -1.0 * (di * self.eta);
+        }
+        match &self.comm {
+            Some(c) => c.diff_into(&self.x, out),
+            None => out.copy_from_slice(&self.x),
+        }
+    }
+
+    fn update(&mut self, q_own: &[f64], peers: &[(usize, Vec<f64>)]) {
+        dual_ascend(
+            &mut self.comm,
+            &self.row,
+            self.theta,
+            &self.x,
+            &mut self.d,
+            &mut self.mixed,
+            &mut self.resid,
+            q_own,
+            peers,
+        );
+    }
+
+    fn x(&self) -> &[f64] {
+        &self.x
+    }
+
+    fn grad_evals(&self) -> u64 {
+        self.oracle.grad_evals()
+    }
+}

@@ -1,20 +1,35 @@
 //! The message-passing coordinator — the "real" distributed runtime.
 //!
-//! Each node is a thread owning its Prox-LEAD state (x, z, d, h, h_w) and
-//! a single-node SGO; neighbors exchange *serialized* compressed frames
-//! over per-edge channels (the paper's 8-machine ring becomes 8 node
-//! threads; see DESIGN.md §4 on why this preserves the iterate sequence).
-//! The leader thread collects per-round metrics and assembles the same
-//! history the matrix engine produces — `leader_matches_matrix_engine`
-//! pins the two implementations to identical iterates.
+//! Each node is a thread owning one [`NodeAlgorithm`] (the per-node half of
+//! any registry algorithm — Prox-LEAD, DGD, Choco, NIDS, PG-EXTRA, P2D2,
+//! PDGM, DualGD); neighbors exchange *serialized* compressed frames over
+//! per-edge channels (the paper's 8-machine ring becomes 8 node threads;
+//! see DESIGN.md §4). The leader thread collects per-round metrics and
+//! assembles the same history the matrix engine produces — under the exact
+//! `Dense64` codec the two backends are pinned **bit for bit** for every
+//! registry algorithm (`rust/tests/coordinator_parity.rs`), which is what
+//! lets the wire-bytes bench compare algorithms on actual framed bytes
+//! rather than the engine's accounting model.
+//!
+//! Construction is a factory call per node: [`run`] takes any
+//! `Fn(node, WeightRow) -> Box<dyn NodeAlgorithm>`; the name-dispatching
+//! factory lives in `exp::registry::build_node_algorithm` so
+//! `Experiment::coordinator()`, the CLI `train`, and sweeps accept every
+//! `algorithm=` value. [`run_prox_lead`] keeps the historical hand-wired
+//! entry point.
 //!
 //! Fault injection: an optional straggler model (per-message delay with
 //! probability `p`) exercises the synchronous-round barrier under skew.
 
+pub mod algorithms;
 pub mod node;
 pub mod wire;
 
-pub use node::NodeConfig;
+pub use algorithms::{
+    ChocoNode, DgdNode, DualGdNode, NidsNode, NodeComm, P2d2Node, PdgmNode, PgExtraNode,
+    ProxLeadNode,
+};
+pub use node::{NodeAlgorithm, NodeConfig, WeightRow};
 pub use wire::{Frame, WireCodec};
 
 use crate::graph::MixingOp;
@@ -88,8 +103,11 @@ pub struct CoordResult {
 }
 
 impl CoordResult {
+    /// The stacked iterate at the last recorded round. `run` guarantees at
+    /// least one snapshot (the final round is always reported), so this is
+    /// total for every completed run.
     pub fn final_x(&self) -> &Mat {
-        &self.snapshots.last().expect("at least one snapshot").1
+        &self.snapshots.last().expect("run() guarantees at least one snapshot").1
     }
 
     /// Suboptimality trace vs a reference solution.
@@ -101,22 +119,27 @@ impl CoordResult {
     }
 }
 
-/// Run distributed Prox-LEAD over node threads. `problem` supplies every
-/// node's data (as the per-machine shards would in a real deployment);
-/// `prox` is the shared non-smooth term; `x0` the common start iterate.
-/// Per-edge channels and neighbor weights are derived from the mixing
-/// operator's structure — one CSR row walk per node on sparse graphs, so
-/// setup is O(nnz), not O(n²).
+/// Run a decentralized algorithm over node threads. `build` constructs the
+/// per-node halves — one call per node with that node's gossip row (derived
+/// from the mixing operator's structure: one CSR row walk per node on
+/// sparse graphs, so setup is O(nnz), not O(n²)). Construction runs
+/// *inside* each node's thread (scoped), so per-node init work — a full
+/// gradient at X⁰, SAGA's m-sample table — overlaps across nodes instead
+/// of serializing on the leader. The name-dispatching factory over an
+/// `Experiment` is `exp::registry::build_node_algorithm`.
 pub fn run(
-    problem: Arc<dyn Problem>,
     w: &MixingOp,
     x0: &Mat,
-    prox: Arc<dyn Prox>,
     cfg: &CoordConfig,
+    build: impl Fn(usize, WeightRow) -> Box<dyn NodeAlgorithm> + Sync,
 ) -> CoordResult {
-    let n = problem.num_nodes();
-    assert_eq!(w.n(), n);
+    let n = w.n();
     assert_eq!(x0.rows, n);
+    assert!(
+        cfg.rounds > 0,
+        "coordinator run needs rounds >= 1 (rounds = 0 would record no snapshots)"
+    );
+    assert!(cfg.record_every > 0, "record_every must be >= 1");
     let start = Instant::now();
 
     // per-node inboxes; every node gets a Sender clone for each neighbor
@@ -128,71 +151,92 @@ pub fn run(
         rxs.push(rx);
     }
     let (report_tx, report_rx) = mpsc::channel::<NodeReport>();
+    let build = &build;
 
-    let mut handles = Vec::with_capacity(n);
-    for (i, rx) in rxs.into_iter().enumerate() {
-        // neighbor senders + mixing weights (w_ij ≠ 0, j ≠ i), ascending j
-        let neighbors: Vec<(usize, f64, mpsc::Sender<Vec<u8>>)> = w
-            .neighbors(i)
-            .into_iter()
-            .map(|(j, wij)| (j, wij, txs[j].clone()))
-            .collect();
-        let node_cfg = NodeConfig {
-            id: i,
-            self_weight: w.self_weight(i),
-            neighbors,
-            inbox: rx,
-            reports: report_tx.clone(),
-            cfg: cfg.clone(),
-        };
-        let problem = Arc::clone(&problem);
-        let prox = Arc::clone(&prox);
-        let x0_all = x0.clone();
-        handles.push(
-            thread::Builder::new()
-                .name(format!("node-{i}"))
-                .spawn(move || node::run_node(problem, prox, &x0_all, node_cfg))
-                .expect("spawn node thread"),
-        );
-    }
-    drop(report_tx);
-    drop(txs);
-
-    // leader: gather reports until every node finished every recorded round
-    let mut pending: std::collections::BTreeMap<usize, Vec<Option<NodeReport>>> =
-        std::collections::BTreeMap::new();
-    let mut snapshots = Vec::new();
-    let mut wire_bytes = 0u64;
-    while let Ok(rep) = report_rx.recv() {
-        let slot = pending.entry(rep.round).or_insert_with(|| vec![None; n]);
-        let node = rep.node;
-        assert!(slot[node].is_none(), "duplicate report from node {node}");
-        slot[node] = Some(rep);
-        // flush completed rounds in order
-        while let Some((&round, slots)) = pending.iter().next() {
-            if !slots.iter().all(|s| s.is_some()) {
-                break;
-            }
-            let slots = pending.remove(&round).unwrap();
-            let mut x = Mat::zeros(n, x0.cols);
-            let (mut bits, mut evals, mut bytes) = (0u64, 0u64, 0u64);
-            for s in slots.into_iter().map(Option::unwrap) {
-                x.row_mut(s.node).copy_from_slice(&s.x);
-                bits += s.payload_bits;
-                evals += s.grad_evals;
-                bytes += s.bytes_sent;
-            }
-            // per-node counters are cumulative: the latest snapshot's sum
-            // is the run total so far
-            wire_bytes = bytes;
-            snapshots.push((round, x, bits, evals));
+    let (snapshots, wire_bytes) = thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(n);
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let row = WeightRow::from_op(w, i);
+            // per-edge senders, aligned with the gossip row (ascending j)
+            let neighbors: Vec<(usize, mpsc::Sender<Vec<u8>>)> =
+                row.neighbors.iter().map(|&(j, _)| (j, txs[j].clone())).collect();
+            let node_cfg = NodeConfig {
+                id: i,
+                neighbors,
+                inbox: rx,
+                reports: report_tx.clone(),
+                cfg: cfg.clone(),
+                dim: x0.cols,
+            };
+            handles.push(
+                thread::Builder::new()
+                    .name(format!("node-{i}"))
+                    .spawn_scoped(scope, move || node::run_node(build(i, row), node_cfg))
+                    .expect("spawn node thread"),
+            );
         }
-    }
-    for h in handles {
-        h.join().expect("node thread panicked");
-    }
+        drop(report_tx);
+        drop(txs);
+
+        // leader: gather reports until every node finished every recorded
+        // round
+        let mut pending: std::collections::BTreeMap<usize, Vec<Option<NodeReport>>> =
+            std::collections::BTreeMap::new();
+        let mut snapshots = Vec::new();
+        let mut wire_bytes = 0u64;
+        while let Ok(rep) = report_rx.recv() {
+            let slot = pending.entry(rep.round).or_insert_with(|| vec![None; n]);
+            let node = rep.node;
+            assert!(slot[node].is_none(), "duplicate report from node {node}");
+            slot[node] = Some(rep);
+            // flush completed rounds in order
+            while let Some((&round, slots)) = pending.iter().next() {
+                if !slots.iter().all(|s| s.is_some()) {
+                    break;
+                }
+                let slots = pending.remove(&round).unwrap();
+                let mut x = Mat::zeros(n, x0.cols);
+                let (mut bits, mut evals, mut bytes) = (0u64, 0u64, 0u64);
+                for s in slots.into_iter().map(Option::unwrap) {
+                    x.row_mut(s.node).copy_from_slice(&s.x);
+                    bits += s.payload_bits;
+                    evals += s.grad_evals;
+                    bytes += s.bytes_sent;
+                }
+                // per-node counters are cumulative: the latest snapshot's
+                // sum is the run total so far (the final round is always
+                // reported, so this covers every frame even when
+                // rounds % record_every != 0)
+                wire_bytes = bytes;
+                snapshots.push((round, x, bits, evals));
+            }
+        }
+        for h in handles {
+            h.join().expect("node thread panicked");
+        }
+        (snapshots, wire_bytes)
+    });
+    assert!(!snapshots.is_empty(), "no snapshots recorded — node threads died before reporting");
 
     CoordResult { snapshots, elapsed: start.elapsed(), wire_bytes }
+}
+
+/// Distributed Prox-LEAD over node threads — the historical entry point,
+/// now a thin [`ProxLeadNode`] factory over the algorithm-generic [`run`].
+/// `problem` supplies every node's data (as the per-machine shards would in
+/// a real deployment); `prox` is the shared non-smooth term; `x0` the
+/// common start iterate.
+pub fn run_prox_lead(
+    problem: Arc<dyn Problem>,
+    w: &MixingOp,
+    x0: &Mat,
+    prox: Arc<dyn Prox>,
+    cfg: &CoordConfig,
+) -> CoordResult {
+    assert_eq!(problem.num_nodes(), w.n());
+    run(w, x0, cfg, |_, row| {
+        Box::new(ProxLeadNode::new(Arc::clone(&problem), Arc::clone(&prox), x0, row, cfg))
+    })
 }
 
 #[cfg(test)]
@@ -204,13 +248,16 @@ mod tests {
     use crate::prox::{Zero, L1};
 
     #[test]
-    fn leader_matches_matrix_engine_exactly() {
-        // identity codec + full gradient is deterministic: node-thread
-        // iterates must equal the Experiment-built matrix engine's bit
-        // for bit (the fixture's auto-η is the same 1/(2L))
+    fn leader_matches_matrix_engine_bit_for_bit() {
+        // exact codec + full gradient: node-thread iterates must equal the
+        // Experiment-built matrix engine's bit for bit (the slots-before-
+        // mixing barrier makes the gossip summation order identical to the
+        // engine kernels; the 9-algorithm matrix version of this test lives
+        // in rust/tests/coordinator_parity.rs)
         let exp = crate::algorithm::testkit::ring_exp();
         let cfg = CoordConfig::new(40, exp.hyper.eta, WireCodec::Dense64);
-        let res = run(Arc::clone(&exp.problem), &exp.mixing, &exp.x0, Arc::new(Zero), &cfg);
+        let res =
+            run_prox_lead(Arc::clone(&exp.problem), &exp.mixing, &exp.x0, Arc::new(Zero), &cfg);
 
         let mut matrix =
             ProxLead::builder(&exp).compressor(Box::new(Identity::f64())).seed(1).build();
@@ -218,8 +265,9 @@ mod tests {
             matrix.step(exp.problem.as_ref());
         }
         let coord_x = res.final_x();
-        let diff = coord_x.dist_sq(matrix.x());
-        assert!(diff < 1e-22, "coordinator vs matrix engine drift: {diff}");
+        for (i, (a, b)) in coord_x.data.iter().zip(&matrix.x().data).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "entry {i}: {a:?} vs {b:?}");
+        }
     }
 
     #[test]
@@ -239,7 +287,7 @@ mod tests {
         let mut ccfg = CoordConfig::new(60, exp.hyper.eta, WireCodec::Quant(2, 256));
         ccfg.record_every = 20;
         ccfg.seed = 33;
-        let explicit = run(
+        let explicit = run_prox_lead(
             Arc::clone(&exp.problem),
             &exp.mixing,
             &exp.x0,
@@ -270,14 +318,14 @@ mod tests {
         let p_arc: Arc<dyn crate::problem::Problem> = Arc::new(p);
         let mut cfg = CoordConfig::new(200, eta, WireCodec::Quant(2, 256));
         cfg.record_every = 50;
-        let dense = run(
+        let dense = run_prox_lead(
             Arc::clone(&p_arc),
             &crate::graph::MixingOp::dense_from(&g, rule),
             &x0,
             Arc::new(Zero),
             &cfg,
         );
-        let sparse = run(
+        let sparse = run_prox_lead(
             Arc::clone(&p_arc),
             &crate::graph::MixingOp::sparse_from(&g, rule),
             &x0,
@@ -305,7 +353,7 @@ mod tests {
         let p_arc: Arc<dyn crate::problem::Problem> = Arc::new(p);
         let mut cfg = CoordConfig::new(3000, eta, WireCodec::Quant(2, 256));
         cfg.record_every = 500;
-        let res = run(p_arc, &w, &x0, Arc::new(L1::new(5e-3)), &cfg);
+        let res = run_prox_lead(p_arc, &w, &x0, Arc::new(L1::new(5e-3)), &cfg);
         let s = suboptimality(res.final_x(), &x_star);
         assert!(s < 1e-12, "distributed Prox-LEAD 2bit suboptimality: {s}");
         assert!(res.wire_bytes > 0);
@@ -325,7 +373,7 @@ mod tests {
         let mut cfg = CoordConfig::new(150, eta, WireCodec::Quant(2, 256));
         cfg.record_every = 150;
         cfg.straggler = Some(Straggler { prob: 0.05, delay: Duration::from_micros(300) });
-        let res = run(p_arc, &w, &x0, Arc::new(Zero), &cfg);
+        let res = run_prox_lead(p_arc, &w, &x0, Arc::new(Zero), &cfg);
         let s = suboptimality(res.final_x(), &x_star);
         assert!(s.is_finite() && s < 1.0, "straggler run must stay sound: {s}");
         assert_eq!(res.snapshots.len(), 1);
@@ -342,11 +390,51 @@ mod tests {
             CoordConfig::new(4000, 1.0 / (6.0 * p_arc.smoothness()), WireCodec::Quant(2, 256));
         cfg.record_every = 1000;
         cfg.oracle = OracleKind::Saga;
-        let res = run(p_arc, &w, &x0, Arc::new(Zero), &cfg);
+        let res = run_prox_lead(p_arc, &w, &x0, Arc::new(Zero), &cfg);
         let s = suboptimality(res.final_x(), &x_star);
         assert!(s < 1e-8, "distributed LEAD-SAGA suboptimality: {s}");
         // grad evals include per-node SAGA init (m per node)
         let (_, _, _, evals) = res.snapshots.last().unwrap();
         assert!(*evals >= 4000);
+    }
+
+    #[test]
+    #[should_panic(expected = "rounds >= 1")]
+    fn zero_rounds_is_a_clear_error_at_entry() {
+        // regression: rounds = 0 used to run to completion with an empty
+        // snapshot list, deferring the panic to CoordResult::final_x
+        let (p, w) = ring_logreg();
+        use crate::problem::Problem;
+        let x0 = Mat::zeros(4, p.dim());
+        let cfg = CoordConfig::new(0, 0.05, WireCodec::Dense64);
+        let _ = run_prox_lead(Arc::new(p), &w, &x0, Arc::new(Zero), &cfg);
+    }
+
+    #[test]
+    fn final_round_reported_when_rounds_not_divisible_by_record_every() {
+        // bookkeeping pin: the run totals (wire bytes, payload bits, grad
+        // evals) must cover every round — nodes always report round
+        // `rounds`, like the engine's `k + 1 == cfg.rounds` rule
+        let (p, w) = ring_logreg();
+        use crate::problem::Problem;
+        let x0 = Mat::zeros(4, p.dim());
+        let eta = safe_eta(&p);
+        let p_arc: Arc<dyn crate::problem::Problem> = Arc::new(p);
+        let mk = |record_every: usize| {
+            let mut cfg = CoordConfig::new(7, eta, WireCodec::Quant(2, 256));
+            cfg.record_every = record_every;
+            run_prox_lead(Arc::clone(&p_arc), &w, &x0, Arc::new(Zero), &cfg)
+        };
+        let thinned = mk(3); // 7 % 3 != 0: rounds 3, 6, then the final 7
+        let dense = mk(1); // every round: ground truth totals
+        let rounds: Vec<usize> = thinned.snapshots.iter().map(|(r, ..)| *r).collect();
+        assert_eq!(rounds, vec![3, 6, 7]);
+        assert_eq!(thinned.wire_bytes, dense.wire_bytes, "wire byte totals must not undercount");
+        let (_, xt, bt, et) = thinned.snapshots.last().unwrap();
+        let (_, xd, bd, ed) = dense.snapshots.last().unwrap();
+        assert_eq!((bt, et), (bd, ed), "payload bits / grad evals must cover all 7 rounds");
+        for (a, b) in xt.data.iter().zip(&xd.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 }

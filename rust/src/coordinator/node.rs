@@ -1,92 +1,205 @@
-//! Per-node Prox-LEAD state machine, run on its own thread.
+//! The algorithm-generic node runtime: one thread per node, synchronous
+//! rounds over serialized frames.
 //!
-//! Vector form of Algorithm 1: the node holds (x, d, h, h_w), draws from
-//! its own single-node SGO, compresses z − h with the wire codec,
-//! broadcasts the frame to its neighbors, and combines their frames into
-//! the mixed estimate ẑ_w = h_w + Σⱼ w_ij q_j. The synchronous-round
-//! barrier: the node blocks until it holds one frame from every neighbor
-//! for the current round. A fast neighbor may already have sent its
-//! round-(k+1) frame while this node still collects round k (it only
-//! needed OUR round-k frame to advance, not our slow neighbor's), so
-//! ahead-of-round frames are buffered; behind-round frames indicate a
-//! protocol violation and panic.
+//! A [`NodeAlgorithm`] is one node's half of a decentralized algorithm —
+//! the per-row arithmetic the matrix engine performs on row i, re-expressed
+//! over local state. The driver [`run_node`] owns everything that is *not*
+//! algorithm arithmetic: wire encoding/decoding, frame transport, the
+//! synchronous-round barrier, straggler injection, and metric reporting.
+//! Per round it
+//!
+//! 1. asks the algorithm for its broadcast vector ([`NodeAlgorithm::outgoing`]),
+//! 2. encodes it with the wire codec and unicasts the frame to every
+//!    gossip neighbor,
+//! 3. gathers exactly one frame per neighbor for the current round
+//!    (buffering ahead-of-round frames from fast neighbors), decodes them,
+//!    and
+//! 4. hands the decoded round back ([`NodeAlgorithm::update`]).
+//!
+//! **Bit-exactness.** The engine's gossip is a W·X product whose kernels
+//! (dense blocked ikj and CSR SpMM) accumulate each output entry over
+//! ascending column index, skipping zero weights. [`WeightRow::mix_into`]
+//! reproduces exactly that order — neighbors ascending with the diagonal
+//! spliced at j = node — so a node-thread round is bit-identical to the
+//! engine's row arithmetic whenever the codec round-trips exactly
+//! (`Dense64`). Frames are therefore collected into per-neighbor slots
+//! *before* mixing; arrival order never touches the arithmetic.
+//!
+//! The synchronous-round barrier: a fast neighbor may already have sent its
+//! round-(k+1) frame while this node still collects round k (it only needed
+//! OUR round-k frame to advance, not our slow neighbor's), so ahead-of-round
+//! frames are buffered; behind-round frames indicate a protocol violation
+//! and panic.
 
 use super::wire::Frame;
 use super::{CoordConfig, NodeReport};
-use crate::linalg::matrix::vaxpy;
+use crate::graph::MixingOp;
 use crate::linalg::Mat;
-use crate::oracle::Sgo;
-use crate::problem::Problem;
-use crate::prox::Prox;
 use crate::util::rng::Rng;
 use std::sync::mpsc::{Receiver, Sender};
-use std::sync::Arc;
 
+/// One node's half of a decentralized algorithm (see the module docs).
+/// Implementations live in [`super::algorithms`]; the name-dispatching
+/// factory is `exp::registry::build_node_algorithm`.
+pub trait NodeAlgorithm: Send {
+    /// Wire exchanges that happen *before* step counting starts (P2D2's
+    /// init round mixes W̃(X⁰ − η∇F(X⁰)), which the matrix engine performs
+    /// at construction). Default: none.
+    fn setup_rounds(&self) -> usize {
+        0
+    }
+
+    /// Compute this round's broadcast vector into `out` (length p). Local
+    /// gradient work happens here.
+    fn outgoing(&mut self, out: &mut [f64]);
+
+    /// Consume the round: `q_own` is the node's own payload as both wire
+    /// endpoints decode it, `peers` the decoded neighbor payloads aligned
+    /// with the gossip row (ascending neighbor id).
+    fn update(&mut self, q_own: &[f64], peers: &[(usize, Vec<f64>)]);
+
+    /// The node's current iterate xᵢ.
+    fn x(&self) -> &[f64];
+
+    /// Cumulative batch-gradient evaluations (including any VR/init cost).
+    fn grad_evals(&self) -> u64;
+}
+
+/// Node i's row of a mixing operator: the self weight plus the (j, w_ij)
+/// gossip neighbors, ascending j — the structure the per-edge channels and
+/// every node-side mix are derived from.
+#[derive(Clone, Debug)]
+pub struct WeightRow {
+    pub node: usize,
+    pub self_weight: f64,
+    /// (neighbor id, w_ij), ascending id, zero weights excluded.
+    pub neighbors: Vec<(usize, f64)>,
+}
+
+impl WeightRow {
+    /// Extract row `node` from the mixing operator (one CSR row walk on
+    /// sparse graphs).
+    pub fn from_op(w: &MixingOp, node: usize) -> WeightRow {
+        WeightRow { node, self_weight: w.self_weight(node), neighbors: w.neighbors(node) }
+    }
+
+    /// The W̃ = (I + W)/2 row, with the same f64 operations as
+    /// [`MixingOp::half_lazy`] (scale by 0.5, then +0.5 on the diagonal) so
+    /// NIDS / PG-EXTRA / P2D2 node mixes stay bit-identical to the engine.
+    pub fn half_lazy(&self) -> WeightRow {
+        WeightRow {
+            node: self.node,
+            self_weight: self.self_weight * 0.5 + 0.5,
+            neighbors: self.neighbors.iter().map(|&(j, w)| (j, w * 0.5)).collect(),
+        }
+    }
+
+    /// The W − I row (Choco's consensus correction), mirroring
+    /// [`MixingOp::minus_identity`].
+    pub fn minus_identity(&self) -> WeightRow {
+        WeightRow {
+            node: self.node,
+            self_weight: self.self_weight - 1.0,
+            neighbors: self.neighbors.clone(),
+        }
+    }
+
+    /// out ← Σⱼ w_ij·vⱼ with `own` at j = node and `peers[k]` at the k-th
+    /// gossip neighbor. Accumulates in ascending-j order and skips zero
+    /// weights — the exact summation order of the engine's matmul/SpMM
+    /// kernels, which makes node mixes bit-identical to W·X rows.
+    pub fn mix_into(&self, out: &mut [f64], own: &[f64], peers: &[(usize, Vec<f64>)]) {
+        debug_assert_eq!(peers.len(), self.neighbors.len());
+        debug_assert!(
+            peers.iter().zip(&self.neighbors).all(|((pj, _), &(j, _))| *pj == j),
+            "peer slots misaligned with the gossip row"
+        );
+        self.mix_with(out, own, |k| peers[k].1.as_slice());
+    }
+
+    /// [`WeightRow::mix_into`] over the rows of a shared matrix (init-time
+    /// products every node can compute locally, e.g. W·X⁰ from the common
+    /// start iterate).
+    pub fn mix_rows_into(&self, out: &mut [f64], x: &Mat) {
+        self.mix_with(out, x.row(self.node), |k| x.row(self.neighbors[k].0));
+    }
+
+    /// The one copy of the order-sensitive accumulation loop both mixes
+    /// share: diagonal spliced before the first neighbor with j > node,
+    /// ascending j throughout, zero weights skipped.
+    fn mix_with<'a>(&self, out: &mut [f64], own: &[f64], peer: impl Fn(usize) -> &'a [f64]) {
+        out.iter_mut().for_each(|o| *o = 0.0);
+        let mut placed = false;
+        for (k, &(j, wij)) in self.neighbors.iter().enumerate() {
+            if !placed && self.node < j {
+                acc(out, self.self_weight, own);
+                placed = true;
+            }
+            acc(out, wij, peer(k));
+        }
+        if !placed {
+            acc(out, self.self_weight, own);
+        }
+    }
+}
+
+/// out += w·v, skipping zero weights exactly like the engine kernels do.
+#[inline]
+fn acc(out: &mut [f64], w: f64, v: &[f64]) {
+    if w == 0.0 {
+        return;
+    }
+    for (o, &x) in out.iter_mut().zip(v) {
+        *o += w * x;
+    }
+}
+
+/// Everything a node thread needs besides its algorithm half.
 pub struct NodeConfig {
     pub id: usize,
-    pub self_weight: f64,
-    /// (neighbor id, w_ij, sender into the neighbor's inbox).
-    pub neighbors: Vec<(usize, f64, Sender<Vec<u8>>)>,
+    /// (neighbor id, sender into that neighbor's inbox), ascending id —
+    /// aligned with the algorithm's [`WeightRow`].
+    pub neighbors: Vec<(usize, Sender<Vec<u8>>)>,
     pub inbox: Receiver<Vec<u8>>,
     pub reports: Sender<NodeReport>,
     pub cfg: CoordConfig,
+    /// Parameter dimension p (frame payloads decode to this length).
+    pub dim: usize,
 }
 
-pub fn run_node(
-    problem: Arc<dyn Problem>,
-    prox: Arc<dyn Prox>,
-    x0_all: &Mat,
-    nc: NodeConfig,
-) {
+/// Drive one node's algorithm through `setup + rounds` wire exchanges.
+///
+/// Reporting follows the engine's record rule: a report at every
+/// `record_every`-th step AND always at step `rounds`, so leader totals
+/// (wire bytes, payload bits, grad evals) cover the whole run even when
+/// `rounds % record_every != 0`.
+pub fn run_node(mut alg: Box<dyn NodeAlgorithm>, nc: NodeConfig) {
     let me = nc.id;
-    let p = problem.dim();
+    let p = nc.dim;
     let cfg = &nc.cfg;
-    let (eta, alpha, gamma) = (cfg.eta, cfg.alpha, cfg.gamma);
     // deterministic per-node streams: compression dither + straggler coin
     let mut comp_rng = Rng::new(cfg.seed).fork(me as u64);
     let mut fault_rng = Rng::new(cfg.seed ^ 0x5747_4C52).fork(me as u64);
-    let seed = cfg.seed.wrapping_add(me as u64);
-    let mut oracle = Sgo::for_node(cfg.oracle, problem.as_ref(), me, x0_all.row(me), seed);
 
-    // Algorithm 1 lines 1–3 (H¹ = X⁰; every node knows the common X⁰, so
-    // h_w = Σⱼ w_ij x⁰_j is computed locally without a startup exchange)
-    let mut x: Vec<f64> = x0_all.row(me).to_vec();
-    let mut h = x.clone();
-    let mut h_w = vec![0.0; p];
-    vaxpy(&mut h_w, nc.self_weight, x0_all.row(me));
-    for &(j, wij, _) in &nc.neighbors {
-        vaxpy(&mut h_w, wij, x0_all.row(j));
-    }
-    let mut g = vec![0.0; p];
-    oracle.sample(problem.as_ref(), me, &x.clone(), &mut g);
-    let mut z: Vec<f64> = x.iter().zip(&g).map(|(xi, gi)| xi - eta * gi).collect();
-    prox.prox(&mut z, eta);
-    x = z;
-    let mut d = vec![0.0; p];
-
-    let mut bytes_sent = 0u64;
-    let mut payload_bits = 0u64;
-    let mut diff = vec![0.0; p];
-    let mut z_buf = vec![0.0; p];
+    let setup = alg.setup_rounds();
+    let total = setup + cfg.rounds;
+    let deg = nc.neighbors.len();
+    let mut payload = vec![0.0; p];
+    // decoded neighbor payloads for the current round, one slot per gossip
+    // neighbor (ascending id); an empty vec marks "not yet received"
+    let mut peers: Vec<(usize, Vec<f64>)> =
+        nc.neighbors.iter().map(|&(j, _)| (j, Vec::new())).collect();
     // frames from neighbors that are a round ahead of us
     let mut future: std::collections::HashMap<u32, Vec<Frame>> = std::collections::HashMap::new();
+    let (mut bytes_sent, mut payload_bits) = (0u64, 0u64);
 
-    for k in 0..cfg.rounds {
-        // line 5–6: z = x − η(g + d)
-        oracle.sample(problem.as_ref(), me, &x, &mut g);
-        for (((zb, &xi), &gi), &di) in z_buf.iter_mut().zip(&x).zip(&g).zip(&d) {
-            *zb = xi - eta * gi - eta * di;
-        }
-
-        // COMM: q = Q(z − h), broadcast the frame
-        for ((df, &zi), &hi) in diff.iter_mut().zip(&z_buf).zip(&h) {
-            *df = zi - hi;
-        }
-        let (payload, q_own, bits) = cfg.codec.encode(&diff, &mut comp_rng);
+    for k in 0..total {
+        alg.outgoing(&mut payload);
+        let (wire, q_own, bits) = cfg.codec.encode(&payload, &mut comp_rng);
         payload_bits += bits;
-        let frame = Frame { round: k as u32, from: me as u16, payload };
+        let frame = Frame { round: k as u32, from: me as u16, payload: wire };
         let buf = frame.to_bytes(&cfg.codec);
-        for &(_, _, ref tx) in &nc.neighbors {
+        for (_, tx) in &nc.neighbors {
             if let Some(s) = cfg.straggler {
                 if fault_rng.bernoulli(s.prob) {
                     std::thread::sleep(s.delay);
@@ -96,62 +209,113 @@ pub fn run_node(
             tx.send(buf.clone()).expect("peer inbox closed");
         }
 
-        // ẑ_w accumulation starts from own contribution
-        let mut wq = vec![0.0; p];
-        vaxpy(&mut wq, nc.self_weight, &q_own);
+        // barrier: exactly one frame per neighbor, slotted by sender id so
+        // arrival order never reaches the arithmetic
+        for (_, v) in peers.iter_mut() {
+            v.clear();
+        }
         let mut got = 0usize;
-        let apply = |f: Frame, wq: &mut Vec<f64>| {
-            let q_j = cfg.codec.decode(&f.payload, p);
-            let wij = nc
-                .neighbors
-                .iter()
-                .find(|(j, _, _)| *j == f.from as usize)
-                .map(|(_, w, _)| *w)
-                .expect("frame from non-neighbor");
-            vaxpy(wq, wij, &q_j);
+        let mut take = |f: Frame, peers: &mut Vec<(usize, Vec<f64>)>, got: &mut usize| {
+            let slot = peers
+                .binary_search_by_key(&(f.from as usize), |&(j, _)| j)
+                .unwrap_or_else(|_| panic!("frame from non-neighbor {}", f.from));
+            assert!(peers[slot].1.is_empty(), "duplicate frame from node {}", f.from);
+            peers[slot].1 = cfg.codec.decode(&f.payload, p);
+            *got += 1;
         };
         for f in future.remove(&(k as u32)).unwrap_or_default() {
-            apply(f, &mut wq);
-            got += 1;
+            take(f, &mut peers, &mut got);
         }
-        while got < nc.neighbors.len() {
+        while got < deg {
             let raw = nc.inbox.recv().expect("inbox closed mid-round");
             let (_, f) = Frame::from_bytes(&raw).expect("malformed frame");
             if (f.round as usize) > k {
                 future.entry(f.round).or_default().push(f);
             } else {
                 assert_eq!(f.round as usize, k, "stale frame from node {}", f.from);
-                apply(f, &mut wq);
-                got += 1;
+                take(f, &mut peers, &mut got);
             }
         }
 
-        // ẑ = h + q, ẑ_w = h_w + wq; update h, h_w; D/V/X updates
-        let coef = gamma / (2.0 * eta);
-        let mut v = vec![0.0; p];
-        for i in 0..p {
-            let z_hat = h[i] + q_own[i];
-            let zw_hat = h_w[i] + wq[i];
-            let resid = z_hat - zw_hat;
-            d[i] += coef * resid;
-            v[i] = z_buf[i] - 0.5 * gamma * resid;
-            h[i] += alpha * q_own[i];
-            h_w[i] += alpha * wq[i];
-        }
-        prox.prox(&mut v, eta);
-        x = v;
+        alg.update(&q_own, &peers);
 
-        if (k + 1) % cfg.record_every == 0 || k + 1 == cfg.rounds {
-            nc.reports
-                .send(NodeReport {
-                    node: me,
-                    round: k + 1,
-                    x: x.clone(),
-                    bytes_sent,
-                    payload_bits,
-                    grad_evals: oracle.grad_evals(),
-                })
-                .expect("leader gone");
+        if k >= setup {
+            let step = k - setup + 1;
+            if step % cfg.record_every == 0 || step == cfg.rounds {
+                nc.reports
+                    .send(NodeReport {
+                        node: me,
+                        round: step,
+                        x: alg.x().to_vec(),
+                        bytes_sent,
+                        payload_bits,
+                        grad_evals: alg.grad_evals(),
+                    })
+                    .expect("leader gone");
+            }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Graph, MixingRule};
+
+    #[test]
+    fn weight_row_mix_matches_matmul_bitwise() {
+        // the contract everything rests on: a WeightRow mix reproduces the
+        // engine's W·X row bit for bit, through both representations and
+        // all three derived operators
+        let g = Graph::grid(16);
+        let mut rng = Rng::new(5);
+        let mut x = Mat::zeros(16, 7);
+        rng.fill_normal(&mut x.data);
+        for op in [
+            MixingOp::dense_from(&g, MixingRule::Metropolis),
+            MixingOp::sparse_from(&g, MixingRule::Metropolis),
+        ] {
+            for derived in ["w", "half_lazy", "minus_identity"] {
+                let full_op = match derived {
+                    "w" => op.clone(),
+                    "half_lazy" => op.half_lazy(),
+                    _ => op.minus_identity(),
+                };
+                let expect = full_op.apply(&x);
+                for i in 0..16 {
+                    let base = WeightRow::from_op(&op, i);
+                    let row = match derived {
+                        "w" => base.clone(),
+                        "half_lazy" => base.half_lazy(),
+                        _ => base.minus_identity(),
+                    };
+                    let peers: Vec<(usize, Vec<f64>)> =
+                        row.neighbors.iter().map(|&(j, _)| (j, x.row(j).to_vec())).collect();
+                    let mut out = vec![0.0; 7];
+                    row.mix_into(&mut out, x.row(i), &peers);
+                    for (a, b) in out.iter().zip(expect.row(i)) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "{derived}: node {i}");
+                    }
+                    let mut out2 = vec![0.0; 7];
+                    row.mix_rows_into(&mut out2, &x);
+                    assert_eq!(out, out2, "{derived}: matrix-form mix differs at node {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn weight_row_derivations_match_operator_entries() {
+        let g = Graph::ring(8);
+        let op = MixingOp::dense_from(&g, MixingRule::UniformMaxDegree);
+        let row = WeightRow::from_op(&op, 3);
+        assert_eq!(row.self_weight, op.self_weight(3));
+        assert_eq!(row.neighbors, op.neighbors(3));
+        let lazy = row.half_lazy();
+        let wl = op.half_lazy();
+        assert_eq!(lazy.self_weight.to_bits(), wl.self_weight(3).to_bits());
+        assert_eq!(lazy.neighbors, wl.neighbors(3));
+        let mi = row.minus_identity();
+        assert_eq!(mi.self_weight.to_bits(), op.minus_identity().self_weight(3).to_bits());
     }
 }

@@ -102,10 +102,15 @@ pub struct Frame {
 }
 
 impl Frame {
+    /// Framing overhead per message: tag + round + from + payload_len.
+    /// The wire-bytes bench charges this against every unicast, which is
+    /// why tiny-dimension runs are header-dominated.
+    pub const HEADER_LEN: usize = 11;
+
     /// Serialize header + payload into one buffer (what the socket of a
     /// real deployment would carry).
     pub fn to_bytes(&self, codec: &WireCodec) -> Vec<u8> {
-        let mut out = Vec::with_capacity(11 + self.payload.len());
+        let mut out = Vec::with_capacity(Frame::HEADER_LEN + self.payload.len());
         out.push(codec.tag());
         out.extend_from_slice(&self.round.to_le_bytes());
         out.extend_from_slice(&self.from.to_le_bytes());
@@ -115,17 +120,18 @@ impl Frame {
     }
 
     pub fn from_bytes(buf: &[u8]) -> Option<(u8, Frame)> {
-        if buf.len() < 11 {
+        if buf.len() < Frame::HEADER_LEN {
             return None;
         }
         let tag = buf[0];
         let round = u32::from_le_bytes(buf[1..5].try_into().ok()?);
         let from = u16::from_le_bytes(buf[5..7].try_into().ok()?);
         let len = u32::from_le_bytes(buf[7..11].try_into().ok()?) as usize;
-        if buf.len() < 11 + len {
+        if buf.len() < Frame::HEADER_LEN + len {
             return None;
         }
-        Some((tag, Frame { round, from, payload: buf[11..11 + len].to_vec() }))
+        let payload = buf[Frame::HEADER_LEN..Frame::HEADER_LEN + len].to_vec();
+        Some((tag, Frame { round, from, payload }))
     }
 }
 

@@ -163,7 +163,21 @@ pub fn run(
             }
         }
         if !alg.x().is_finite() {
-            break; // diverged — history records how far it got
+            // diverged — flush the diverged state before breaking
+            // (mirroring the early-stop flush above), so `final_subopt()`
+            // reports the divergence instead of a stale pre-divergence
+            // sample when the break lands between record points
+            if !due {
+                history.push(MetricPoint {
+                    round: k + 1,
+                    grad_evals: alg.grad_evals(),
+                    bits: alg.bits(),
+                    suboptimality: suboptimality(alg.x(), x_star),
+                    consensus: alg.x().consensus_error(),
+                    wall_ns: start.elapsed().as_nanos(),
+                });
+            }
+            break;
         }
     }
 
@@ -305,6 +319,32 @@ mod tests {
         assert_eq!(pts[1].0, 10.0);
         let bits = res.series(XAxis::Bits);
         assert!(bits.last().unwrap().0 > 0.0);
+    }
+
+    #[test]
+    fn divergence_between_record_points_reaches_history() {
+        // regression: with a deliberately diverging η and a record interval
+        // larger than the blow-up horizon, the loop used to break without
+        // recording the diverged state — final_subopt() then reported the
+        // stale round-0 sample (0.0 here) instead of the divergence
+        use crate::algorithm::Dgd;
+        let exp = ring_exp();
+        let p = exp.problem.as_ref();
+        let x_star = vec![0.0; p.dim()];
+        // η·λ₂ ≫ 2 ⇒ the ridge term alone makes |1 − ηλ₂| > 1: exponential
+        // blow-up to ±inf long before round 2000
+        let mut alg = Dgd::builder(&exp).eta(1e3).build();
+        let res = run(&mut alg, p, &x_star, &RunConfig::fixed(2000).every(2000));
+        let last = res.history.last().expect("history never empty");
+        assert!(last.round > 0 && last.round < 2000, "should diverge mid-run: {}", last.round);
+        assert!(
+            !res.final_subopt().is_finite(),
+            "final_subopt must report the divergence, got {}",
+            res.final_subopt()
+        );
+        assert!(!res.final_x.is_finite());
+        // bookkeeping on the flushed sample is still cumulative
+        assert!(last.grad_evals > 0 && last.bits > 0);
     }
 
     #[test]

@@ -230,7 +230,7 @@ impl Experiment {
     pub fn coord_config(&self) -> CoordConfig {
         let cfg = &self.config;
         let mut c = CoordConfig::new(cfg.rounds, self.hyper.eta, self.codec());
-        c.record_every = cfg.record_every;
+        c.record_every = cfg.record_every.max(1);
         c.alpha = cfg.alpha;
         c.gamma = cfg.gamma;
         c.oracle = self.oracle();
@@ -244,16 +244,15 @@ impl Experiment {
         c
     }
 
-    /// Drive distributed Prox-LEAD on node threads (the message-passing
-    /// coordinator) under [`Experiment::coord_config`].
+    /// Drive the configured algorithm on node threads (the message-passing
+    /// coordinator) under [`Experiment::coord_config`]. Every `algorithm=`
+    /// registry value runs here — the per-node halves are dispatched by
+    /// [`registry::build_node_algorithm`].
     pub fn coordinator(&self) -> CoordResult {
-        coordinator::run(
-            Arc::clone(&self.problem),
-            &self.mixing,
-            &self.x0,
-            Arc::from(self.prox()),
-            &self.coord_config(),
-        )
+        let ccfg = self.coord_config();
+        coordinator::run(&self.mixing, &self.x0, &ccfg, |i, row| {
+            registry::build_node_algorithm(self, &ccfg, i, row)
+        })
     }
 }
 

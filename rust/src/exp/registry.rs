@@ -8,7 +8,9 @@
 //!
 //! **Algorithms** (`algorithm =` config key): every name the sweep grid,
 //! the CLI, and the benches accept, dispatching to the typed builders in
-//! [`crate::algorithm::builder`]. Per-family parameter conventions:
+//! [`crate::algorithm::builder`] — and, for the message-passing
+//! coordinator, to the per-node halves in [`crate::coordinator::algorithms`]
+//! via [`build_node_algorithm`]. Per-family parameter conventions:
 //!
 //! - `prox-lead` / `lead`: (η, α, γ) from the experiment (`lead` forces
 //!   r ≡ 0);
@@ -19,11 +21,18 @@
 //!   μ/2 (μ/4 when compressed), with a fixed warm-started inner solve.
 
 use super::Experiment;
-use crate::algorithm::{Algorithm, Choco, Dgd, DualGd, Nids, P2d2, Pdgm, PgExtra, ProxLead};
+use crate::algorithm::{
+    dualgd_default_theta, pdgm_default_theta, Algorithm, Choco, Dgd, DualGd, Nids, P2d2, Pdgm,
+    PgExtra, ProxLead, DUALGD_INNER_ITERS,
+};
 use crate::config::{Config, ConfigError};
+use crate::coordinator::{
+    ChocoNode, CoordConfig, DgdNode, DualGdNode, NidsNode, NodeAlgorithm, P2d2Node, PdgmNode,
+    PgExtraNode, ProxLeadNode, WeightRow,
+};
 use crate::problem::data::{blobs, regression};
 use crate::problem::{LeastSquares, LogReg, Problem, ProblemKind};
-use crate::prox::Zero;
+use crate::prox::{Prox, Zero};
 use std::sync::Arc;
 
 /// Canonical algorithm names (aliases: `proxlead`, `prox-dgd`, `pgextra`,
@@ -104,6 +113,18 @@ fn wrap_xla(cfg: &Config, native: LogReg) -> Result<Arc<dyn Problem>, ConfigErro
     Ok(Arc::new(xla))
 }
 
+/// The one DualGD/LessBit-A θ resolution both registries share: an explicit
+/// config η is read as the dual stepsize θ; otherwise the theory default
+/// (μ/2, μ/4 when the communication is compressed). A sentinel change here
+/// cannot desynchronize the engine and coordinator paths.
+fn dualgd_theta(exp: &Experiment, compressed: bool) -> f64 {
+    if exp.config.eta > 0.0 {
+        exp.config.eta
+    } else {
+        dualgd_default_theta(exp.problem.strong_convexity(), compressed)
+    }
+}
+
 /// The algorithm registry: instantiate the algorithm an experiment's
 /// config names, over the experiment's resolved components, with an
 /// explicit RNG seed.
@@ -119,16 +140,55 @@ pub fn build_algorithm(exp: &Experiment, seed: u64) -> Result<Box<dyn Algorithm>
         "pg-extra" | "pgextra" => Box::new(PgExtra::builder(exp).seed(seed).build()),
         "pdgm" | "lessbit-b" => Box::new(Pdgm::builder(exp).seed(seed).build()),
         "dualgd" | "lessbit-a" => {
-            // explicit η is read as the dual stepsize θ; otherwise the
-            // builder derives the theory default (μ/2, μ/4 compressed)
-            let mut b = DualGd::builder(exp).seed(seed);
-            if cfg.eta > 0.0 {
-                b = b.theta(cfg.eta);
-            }
-            Box::new(b.build())
+            let theta = dualgd_theta(exp, exp.compressor().variance_bound() > 0.0);
+            Box::new(DualGd::builder(exp).theta(theta).seed(seed).build())
         }
         a => return Err(ConfigError(format!("unknown algorithm '{a}'"))),
     })
+}
+
+/// The node-side registry: build node `node`'s half of the experiment's
+/// configured algorithm for the message-passing coordinator. The same name
+/// table and per-family parameter conventions as [`build_algorithm`] —
+/// `Experiment::coordinator()` hands this to `coordinator::run` as the
+/// per-node factory, so `train`, sweeps, and the wire-bytes bench accept
+/// every `algorithm=` value.
+///
+/// The engine's "is this run compressed?" rule (the configured compressor's
+/// variance bound) maps onto the codec: a lossy wire (`Quant`) switches the
+/// dual methods onto their COMM halves (LessBit-A/B) and derives DualGD's
+/// θ = μ/4 instead of μ/2, exactly like the builder does for a lossy
+/// compressor.
+pub fn build_node_algorithm(
+    exp: &Experiment,
+    ccfg: &CoordConfig,
+    node: usize,
+    row: WeightRow,
+) -> Box<dyn NodeAlgorithm> {
+    debug_assert_eq!(row.node, node, "gossip row must belong to the node being built");
+    let p = Arc::clone(&exp.problem);
+    let prox: Arc<dyn Prox> = Arc::from(exp.prox());
+    let x0 = &exp.x0;
+    match exp.config.algorithm.as_str() {
+        "prox-lead" | "proxlead" => Box::new(ProxLeadNode::new(p, prox, x0, row, ccfg)),
+        "lead" => Box::new(ProxLeadNode::new(p, Arc::new(Zero), x0, row, ccfg)),
+        "dgd" | "prox-dgd" => Box::new(DgdNode::new(p, prox, x0, row, ccfg)),
+        "choco" => Box::new(ChocoNode::new(p, prox, x0, row, ccfg)),
+        "nids" => Box::new(NidsNode::new(p, prox, x0, row, ccfg)),
+        "p2d2" => Box::new(P2d2Node::new(p, prox, x0, row, ccfg)),
+        "pg-extra" | "pgextra" => Box::new(PgExtraNode::new(p, prox, x0, row, ccfg)),
+        "pdgm" | "lessbit-b" => {
+            // θ = γ/(2η), the PDHG view — the same helper the PdgmBuilder
+            // defaults through
+            let theta = pdgm_default_theta(ccfg.eta, ccfg.gamma);
+            Box::new(PdgmNode::new(p, x0, row, theta, ccfg))
+        }
+        "dualgd" | "lessbit-a" => {
+            let theta = dualgd_theta(exp, ccfg.codec.is_lossy());
+            Box::new(DualGdNode::new(p, x0, row, theta, DUALGD_INNER_ITERS, ccfg))
+        }
+        a => unreachable!("algorithm '{a}' validated at Experiment construction"),
+    }
 }
 
 #[cfg(test)]

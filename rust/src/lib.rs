@@ -4,8 +4,10 @@
 //! with Compression"* (Li, Liu, Tang, Yan, Yuan, 2021): the Prox-LEAD
 //! algorithm (Algorithm 1) with SGD / Loopless-SVRG / SAGA gradient oracles,
 //! every baseline the paper compares against, exact communication-bit
-//! accounting, a message-passing multi-node coordinator, and a PJRT runtime
-//! that executes JAX/Pallas-AOT-compiled gradient kernels on the hot path.
+//! accounting, an algorithm-generic message-passing multi-node coordinator
+//! (every registry algorithm runs on real serialized frames, bit-identical
+//! to the matrix engine under an exact codec), and a PJRT runtime that
+//! executes JAX/Pallas-AOT-compiled gradient kernels on the hot path.
 //!
 //! See `DESIGN.md` for the architecture and the per-experiment index, and
 //! `EXPERIMENTS.md` for reproduced figures/tables.

@@ -1,8 +1,9 @@
 //! `proxlead` — the launcher binary.
 //!
 //! Subcommands (see `proxlead help`):
-//! - `train`: distributed Prox-LEAD on node threads (the coordinator),
-//!   optionally with the PJRT/XLA gradient backend (`--backend xla`);
+//! - `train`: any registry algorithm, distributed on node threads (the
+//!   message-passing coordinator), optionally with the PJRT/XLA gradient
+//!   backend (`--backend xla`);
 //! - `sweep`: a parallel experiment grid through the matrix engine (the
 //!   sweep runtime — deterministic regardless of `--threads`);
 //! - `solve-ref`: high-precision centralized reference x*;
@@ -65,7 +66,8 @@ fn cmd_train(inv: &Invocation) -> i32 {
     // power iteration: O(nnz) per step, fine at any n (no dense eigensolve)
     let spec = exp.mixing.gap_estimate();
     println!(
-        "prox-lead train: {} | {} nodes ({}, {}, {}) | {} | η={:.4} α={} γ={}",
+        "proxlead train: {} on {} | {} nodes ({}, {}, {}) | {} | η={:.4} α={} γ={}",
+        cfg.algorithm,
         exp.problem.name(),
         cfg.nodes,
         cfg.topology,

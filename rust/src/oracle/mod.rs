@@ -83,7 +83,9 @@ impl Sgo {
 
     /// Single-node oracle for a coordinator node thread: VR state (and
     /// gradient-eval accounting) cover only `node`; `x0` is that node's
-    /// start row.
+    /// start row. Seeded with the same `seed`, the stream equals the one
+    /// [`Sgo::new`] hands node `node` — so a coordinator node thread and
+    /// the matrix engine draw identical gradient samples.
     pub fn for_node(
         kind: OracleKind,
         problem: &dyn Problem,
@@ -113,7 +115,19 @@ impl Sgo {
             None => (0..problem.num_nodes()).collect(),
         };
         let mut root = Rng::new(seed);
-        let rngs: Vec<Rng> = node_ids.iter().map(|&i| root.fork(i as u64)).collect();
+        let rngs: Vec<Rng> = match only {
+            // fork() advances the root once per call, so a single-node
+            // oracle must skip the draws nodes 0..i would have consumed —
+            // its stream then matches slot i of the all-nodes constructor
+            // (the engine ≡ coordinator oracle-parity contract)
+            Some(i) => {
+                for _ in 0..i {
+                    root.next_u64();
+                }
+                vec![root.fork(i as u64)]
+            }
+            None => node_ids.iter().map(|&i| root.fork(i as u64)).collect(),
+        };
         let mut grad_evals = 0u64;
         let states: Vec<NodeState> = node_ids
             .iter()
@@ -390,6 +404,30 @@ mod tests {
         let mut lsvrg = lsvrg;
         lsvrg.sample(&p, 0, &xi, &mut g);
         assert_eq!(lsvrg.grad_evals(), 10); // +2 per draw (no refresh)
+    }
+
+    #[test]
+    fn for_node_stream_matches_all_nodes_slot() {
+        // the engine ≡ coordinator oracle-parity contract: a single-node
+        // oracle seeded like the engine's draws the exact same samples the
+        // all-nodes oracle hands that node — for every node slot
+        use crate::problem::Problem;
+        let p = problem(); // 2 nodes, m = 4
+        let mut x = Mat::zeros(2, p.dim());
+        Rng::new(4).fill_normal(&mut x.data);
+        for kind in [OracleKind::Sgd, OracleKind::Saga, OracleKind::Lsvrg { p: 0.3 }] {
+            for node in 0..2 {
+                let mut all = Sgo::new(kind, &p, &x, 99);
+                let mut solo = Sgo::for_node(kind, &p, node, x.row(node), 99);
+                let xi = x.row(node).to_vec();
+                let (mut ga, mut gs) = (vec![0.0; p.dim()], vec![0.0; p.dim()]);
+                for draw in 0..20 {
+                    all.sample(&p, node, &xi, &mut ga);
+                    solo.sample(&p, node, &xi, &mut gs);
+                    assert_eq!(ga, gs, "{} node {node} draw {draw}", kind.name());
+                }
+            }
+        }
     }
 
     #[test]

@@ -53,14 +53,14 @@ fn straggler_faults_do_not_change_the_answer() {
         c.straggler = straggler;
         c
     };
-    let clean = coordinator::run(
+    let clean = coordinator::run_prox_lead(
         Arc::clone(&exp.problem),
         &exp.mixing,
         &exp.x0,
         Arc::new(proxlead::prox::Zero),
         &mk(None),
     );
-    let faulty = coordinator::run(
+    let faulty = coordinator::run_prox_lead(
         Arc::clone(&exp.problem),
         &exp.mixing,
         &exp.x0,
@@ -102,7 +102,7 @@ fn coordinator_runs_on_pjrt_backend() {
     let mut cfg = CoordConfig::new(600, 0.5 / p.smoothness(), WireCodec::Quant(2, 256));
     cfg.record_every = 200;
     cfg.oracle = OracleKind::Full;
-    let res = coordinator::run(
+    let res = coordinator::run_prox_lead(
         Arc::clone(&p) as Arc<dyn Problem>,
         &w,
         &x0,
