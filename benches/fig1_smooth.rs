@@ -18,7 +18,7 @@ mod common;
 
 use common::{out_dir, thin};
 use proxlead::config::Config;
-use proxlead::engine::XAxis;
+use proxlead::runner::XAxis;
 use proxlead::problem::Problem;
 use proxlead::sweep::{
     run_sweep_verbose, run_sweep_verbose_with_cache, CellOutcome, RefCache, SweepSpec,

@@ -20,7 +20,7 @@ use common::{out_dir, Fixture};
 use proxlead::algorithm::{Algorithm, CommState, ProxLead};
 use proxlead::compress::bits::{decode_inf_quantized, encode_inf_quantized};
 use proxlead::compress::{Compressor, InfNormQuantizer};
-use proxlead::coordinator::{self, CoordConfig, WireCodec};
+use proxlead::coordinator::{self, CoordConfig, NodeHyper, ProxLeadNode, WireCodec};
 use proxlead::linalg::Mat;
 use proxlead::oracle::OracleKind;
 use proxlead::problem::data::{blobs, BlobSpec};
@@ -106,14 +106,27 @@ fn main() {
     let mut set = BenchSet::new("coordinator (8 node threads, wire frames)").with_reps(w0, n0);
     set.header();
     let coord_rounds = if smoke { 10 } else { 100 };
+    // the generic coordinator entry point with an explicit ProxLeadNode
+    // factory (no reference solve — x_star is only a metric input here)
+    let zeros = vec![0.0; dim];
     set.run_throughput(
         &format!("{coord_rounds} rounds end-to-end (spawn+run+join)"),
         coord_rounds as f64,
         "round",
         || {
-            let mut cfg = CoordConfig::new(coord_rounds, exp.hyper.eta, WireCodec::Quant(2, 256));
-            cfg.record_every = coord_rounds;
-            coordinator::run_prox_lead(Arc::clone(&exp.problem), w, x0, Arc::new(Zero), &cfg)
+            let wire = CoordConfig::new(WireCodec::Quant(2, 256));
+            let hyper = NodeHyper::new(exp.hyper.eta);
+            let spec = proxlead::runner::RunSpec::fixed(coord_rounds).every(coord_rounds);
+            coordinator::run(w, x0, "prox-lead", &wire, &spec, &zeros, &mut [], |_, row| {
+                Box::new(ProxLeadNode::new(
+                    Arc::clone(&exp.problem),
+                    Arc::new(Zero),
+                    x0,
+                    row,
+                    &hyper,
+                    &wire,
+                ))
+            })
         },
     );
     report.add(&set);

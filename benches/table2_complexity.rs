@@ -42,7 +42,7 @@ fn base_cfg(lambda2: f64, eta: f64) -> Config {
 }
 
 fn iters(res: &SweepResult, i: usize) -> usize {
-    res.cells[i].result.rounds_to_target.unwrap_or(BUDGET)
+    res.cells[i].result.rounds_to_target().unwrap_or(BUDGET)
 }
 
 /// κ_f of a cell's problem (rebuilt through the problem registry).

@@ -59,7 +59,7 @@ fn panel(
         let compressed = bits_override != "32" && bits_override != "64";
         let it_s = cell
             .result
-            .rounds_to_target
+            .rounds_to_target()
             .map(|i| i.to_string())
             .unwrap_or_else(|| format!(">{BUDGET}"));
         let last = cell.result.history.last().expect("history");

@@ -18,7 +18,6 @@
 mod common;
 
 use common::out_dir;
-use proxlead::algorithm::suboptimality;
 use proxlead::config::Config;
 use proxlead::exp::Experiment;
 use proxlead::util::bench::{smoke_mode, BenchReport, BenchSet, Table};
@@ -73,23 +72,24 @@ fn main() {
         } else {
             x_star = Some(exp.reference());
         }
-        let reference = exp.reference();
 
+        // the unified run API: suboptimality is sampled by the leader, so
+        // the final history row already carries every column we report
         let mut last = None;
-        set.run(label, || last = Some(exp.coordinator()));
+        set.run(label, || last = Some(exp.run_coordinator(&exp.run_spec())));
         let res = last.expect("coordinator ran");
-        let (_, x, bits, _) = res.snapshots.last().expect("final snapshot");
-        let s = suboptimality(x, &reference);
+        let m = res.history.last().expect("final snapshot");
+        let (bits, s) = (m.bits, m.suboptimality);
         table.row(vec![
             label.into(),
-            format!("{:.1}", res.wire_bytes as f64 / 1024.0),
-            format!("{:.2}", *bits as f64 / 1e6),
+            format!("{:.1}", res.wire_bytes() as f64 / 1024.0),
+            format!("{:.2}", bits as f64 / 1e6),
             format!("{s:.2e}"),
         ]);
         csv.push_str(&format!(
             "{label},{},{rounds},{},{bits},{s:.6e}\n",
             exp.codec().name(),
-            res.wire_bytes,
+            res.wire_bytes(),
         ));
     }
 

@@ -94,7 +94,7 @@ fn main() {
     );
     let mut dense_bits = None;
     for ((&(label, _, _), cell), &c) in OPERATORS.iter().zip(&res.cells).zip(&nsrs) {
-        match cell.result.rounds_to_target {
+        match cell.result.rounds_to_target() {
             Some(iters) => {
                 let bits = cell.result.history.last().unwrap().bits;
                 let per_round = bits / iters as u64;

@@ -14,10 +14,10 @@
 //! ```
 
 use proxlead::algorithm::{Algorithm, Nids, P2d2, ProxLead};
-use proxlead::engine::{run, RunConfig};
 use proxlead::exp::Experiment;
 use proxlead::problem::data::sparse_regression;
 use proxlead::problem::{LeastSquares, Problem};
+use proxlead::runner::{run_engine, RunSpec};
 use std::sync::Arc;
 
 fn support(x: &[f64], tol: f64) -> Vec<usize> {
@@ -43,7 +43,7 @@ fn main() {
     // reference x* for the ℓ1-composite objective, cached on the experiment
     let x_star = exp.reference();
 
-    let cfg = RunConfig::fixed(6000).every(6000);
+    let spec = RunSpec::fixed(6000).every(6000);
     let mut prox_lead = ProxLead::builder(&exp).build();
     let mut nids = Nids::builder(&exp).build();
     let mut p2d2 = P2d2::builder(&exp).build();
@@ -52,7 +52,7 @@ fn main() {
     println!("{:<28} {:>14} {:>10} {:>12}", "algorithm", "suboptimality", "Mbit", "support");
     let mut rows = vec![];
     for alg in [&mut prox_lead as &mut dyn Algorithm, &mut nids, &mut p2d2] {
-        let res = run(alg, exp.problem.as_ref(), &x_star, &cfg);
+        let res = run_engine(alg, exp.problem.as_ref(), &x_star, &spec, &mut []);
         let xbar = res.final_x.row_mean();
         let sup = support(&xbar, 1e-3);
         let true_sup = support(&x_true, 1e-9);

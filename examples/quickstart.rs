@@ -14,9 +14,9 @@
 
 use proxlead::algorithm::{Algorithm, Dgd, ProxLead};
 use proxlead::compress::Identity;
-use proxlead::engine::{run, RunConfig};
 use proxlead::exp::Experiment;
 use proxlead::prox::Zero;
+use proxlead::runner::{run_engine, RunSpec};
 
 fn main() {
     // 1. the scenario: 8 label-sorted blob shards on a ring, λ1 = 5e-3,
@@ -46,11 +46,11 @@ fn main() {
         .prox(Box::new(Zero))
         .build();
 
-    let cfg = RunConfig::fixed(8000).every(800);
+    let spec = RunSpec::fixed(8000).every(800);
     println!("running {} …", prox_lead.name());
-    let r1 = run(&mut prox_lead, exp.problem.as_ref(), &x_star, &cfg);
+    let r1 = run_engine(&mut prox_lead, exp.problem.as_ref(), &x_star, &spec, &mut []);
     println!("running {} …", dgd.name());
-    let r2 = run(&mut dgd, exp.problem.as_ref(), &x_star, &cfg);
+    let r2 = run_engine(&mut dgd, exp.problem.as_ref(), &x_star, &spec, &mut []);
 
     println!("\n round | {:>26} | {:>26}", r1.name, r2.name);
     for (a, b) in r1.history.iter().zip(&r2.history) {

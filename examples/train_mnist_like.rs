@@ -18,12 +18,44 @@
 //! make artifacts && cargo run --release --example train_mnist_like
 //! ```
 
-use proxlead::algorithm::suboptimality;
 use proxlead::exp::Experiment;
+use proxlead::linalg::Mat;
 use proxlead::problem::data::{blobs, heterogeneity_index, BlobSpec};
 use proxlead::problem::{LogReg, Problem};
+use proxlead::runner::{MetricPoint, Probe};
 use proxlead::runtime::{default_artifact_dir, PjrtRuntime, XlaLogReg};
 use std::sync::Arc;
+
+/// A custom streaming probe: per-snapshot loss and training accuracy need
+/// the stacked iterate, so this pairs each `on_sample` row with the
+/// matching `on_iterate` matrix — metrics print *while* training runs.
+struct TrainLog {
+    problem: Arc<XlaLogReg>,
+    lambda1: f64,
+    last: Option<MetricPoint>,
+    final_acc: f64,
+}
+
+impl Probe for TrainLog {
+    fn on_sample(&mut self, m: &MetricPoint) {
+        self.last = Some(*m);
+    }
+
+    fn on_iterate(&mut self, round: usize, x: &Mat) {
+        let m = self.last.expect("on_iterate follows on_sample");
+        let xbar = x.row_mean();
+        let loss = self.problem.global_loss(&xbar)
+            + self.lambda1 * xbar.iter().map(|v| v.abs()).sum::<f64>();
+        let acc = self.problem.native().accuracy(&xbar, self.problem.native().shards());
+        self.final_acc = acc;
+        println!(
+            "{round:>5} {loss:>10.5} {:>12.4e} {:>12.4e} {acc:>6.3} {:>8.2}",
+            m.suboptimality,
+            m.consensus,
+            m.bits as f64 / 1e6,
+        );
+    }
+}
 
 fn main() {
     // the shipped artifact shape: 8 nodes × 240 samples × 64 features,
@@ -71,32 +103,29 @@ fn main() {
         .expect("train_mnist_like experiment");
 
     println!("solving centralized reference x* (FISTA) …");
-    let x_star = exp.reference();
+    let _ = exp.reference();
 
     println!("training: Prox-LEAD-SAGA (2bit) on 8 node threads, PJRT gradients…");
-    let res = exp.coordinator();
-
     println!("\nround   loss        subopt       consensus    acc     Mbit");
-    for (round, x, bits, _) in &res.snapshots {
-        let xbar = x.row_mean();
-        let loss = problem.global_loss(&xbar)
-            + exp.config.lambda1 * xbar.iter().map(|v| v.abs()).sum::<f64>();
-        let acc = problem.native().accuracy(&xbar, problem.native().shards());
-        println!(
-            "{round:>5} {loss:>10.5} {:>12.4e} {:>12.4e} {acc:>6.3} {:>8.2}",
-            suboptimality(x, &x_star),
-            x.consensus_error(),
-            *bits as f64 / 1e6,
-        );
-    }
+    // metrics stream through the unified run API's probe interface —
+    // each row prints as the leader assembles the snapshot, not after the
+    // run finishes
+    let mut log = TrainLog {
+        problem: Arc::clone(&problem),
+        lambda1: exp.config.lambda1,
+        last: None,
+        final_acc: 0.0,
+    };
+    let res = exp.run_coordinator_probed(&exp.run_spec(), &mut [&mut log]);
 
-    let final_sub = suboptimality(res.final_x(), &x_star);
-    let xbar = res.final_x().row_mean();
-    let acc = problem.native().accuracy(&xbar, problem.native().shards());
+    let final_sub = res.final_subopt();
+    let acc = log.final_acc;
     println!(
-        "\nelapsed {:.2?} | wire {} KiB | final suboptimality {final_sub:.3e} | train acc {acc:.3}",
+        "\nelapsed {:.2?} | wire {} KiB | final suboptimality {final_sub:.3e} | \
+         train acc {acc:.3} | stopped by {}",
         res.elapsed,
-        res.wire_bytes / 1024
+        res.wire_bytes() / 1024,
+        res.stopped_by.name(),
     );
     assert!(final_sub < 1.0, "training must make real progress toward x*");
     assert!(acc > 0.8, "label-sorted blobs at sep 1.5 should be largely separable: {acc}");

@@ -43,6 +43,15 @@ CONFIG KEYS (also usable as --key value):
   rounds record_every seed backend(native|xla) out
   straggler_prob straggler_us
 
+TRAIN STOP FLAGS (composable; first criterion hit ends the run and is
+reported as `stopped by …` — `rounds` is always the hard cap):
+  --target 1e-9                   stop at this suboptimality
+  --max-bits N                    stop at a cumulative payload-bit budget
+  --max-grad-evals N              stop at a gradient-evaluation budget
+  --deadline-ms N                 stop at a wall-clock deadline
+  (stops are observed at `record_every` granularity — use
+   --record_every 1 for round-exact budget stops)
+
 SWEEP FLAGS (sweep subcommand only):
   --grid \"key=v1,v2;key2=v1,v2\"   cartesian axes over any config key
   --threads N                     worker threads (default: all cores);
@@ -52,6 +61,7 @@ SWEEP FLAGS (sweep subcommand only):
 
 EXAMPLES:
   proxlead train --rounds 300 --bits 2 --oracle saga --out run.csv
+  proxlead train --rounds 5000 --record_every 1 --max-bits 2000000
   proxlead train --config experiment.cfg --backend xla
   proxlead sweep --grid \"algorithm=prox-lead,dgd;bits=2,32;seed=1,2\" \\
                  --rounds 2000 --threads 8 --out sweep.json

@@ -32,7 +32,7 @@
 #![allow(clippy::neg_multiply)]
 
 use super::node::{NodeAlgorithm, WeightRow};
-use super::CoordConfig;
+use super::{CoordConfig, NodeHyper};
 use crate::linalg::Mat;
 use crate::oracle::Sgo;
 use crate::problem::Problem;
@@ -43,8 +43,14 @@ use std::sync::Arc;
 /// The engine seeds its oracle with `Rng::new(seed).next_u64()`; drawing
 /// the same value here puts every node thread on the engine's per-node
 /// oracle stream (see [`Sgo::for_node`]).
-fn oracle_for(cfg: &CoordConfig, problem: &dyn Problem, me: usize, x0: &[f64]) -> Sgo {
-    Sgo::for_node(cfg.oracle, problem, me, x0, Rng::new(cfg.seed).next_u64())
+fn oracle_for(
+    hyper: &NodeHyper,
+    wire: &CoordConfig,
+    problem: &dyn Problem,
+    me: usize,
+    x0: &[f64],
+) -> Sgo {
+    Sgo::for_node(hyper.oracle, problem, me, x0, Rng::new(wire.seed).next_u64())
 }
 
 /// The COMM procedure of Algorithm 1, one node's share — the per-node
@@ -131,27 +137,28 @@ impl ProxLeadNode {
         prox: Arc<dyn Prox>,
         x0_all: &Mat,
         row: WeightRow,
-        cfg: &CoordConfig,
+        hyper: &NodeHyper,
+        wire: &CoordConfig,
     ) -> ProxLeadNode {
         let me = row.node;
         let p = problem.dim();
-        let mut oracle = oracle_for(cfg, problem.as_ref(), me, x0_all.row(me));
+        let mut oracle = oracle_for(hyper, wire, problem.as_ref(), me, x0_all.row(me));
         // lines 1–3: Z¹ = X⁰ − η·SGO(X⁰), X¹ = prox_ηR(Z¹), D¹ = 0
         let mut g = vec![0.0; p];
         oracle.sample(problem.as_ref(), me, x0_all.row(me), &mut g);
         let mut x = x0_all.row(me).to_vec();
         for (xi, &gi) in x.iter_mut().zip(&g) {
-            *xi += -cfg.eta * gi;
+            *xi += -hyper.eta * gi;
         }
-        prox.prox(&mut x, cfg.eta);
-        let comm = NodeComm::new(&row, x0_all, cfg.alpha);
+        prox.prox(&mut x, hyper.eta);
+        let comm = NodeComm::new(&row, x0_all, hyper.alpha);
         ProxLeadNode {
             problem,
             prox,
             row,
             me,
-            eta: cfg.eta,
-            gamma: cfg.gamma,
+            eta: hyper.eta,
+            gamma: hyper.gamma,
             oracle,
             comm,
             x,
@@ -219,17 +226,18 @@ impl DgdNode {
         prox: Arc<dyn Prox>,
         x0_all: &Mat,
         row: WeightRow,
-        cfg: &CoordConfig,
+        hyper: &NodeHyper,
+        wire: &CoordConfig,
     ) -> DgdNode {
         let me = row.node;
         let p = problem.dim();
-        let oracle = oracle_for(cfg, problem.as_ref(), me, x0_all.row(me));
+        let oracle = oracle_for(hyper, wire, problem.as_ref(), me, x0_all.row(me));
         DgdNode {
             problem,
             prox,
             row,
             me,
-            eta: cfg.eta,
+            eta: hyper.eta,
             oracle,
             x: x0_all.row(me).to_vec(),
             g: vec![0.0; p],
@@ -293,21 +301,22 @@ impl ChocoNode {
         prox: Arc<dyn Prox>,
         x0_all: &Mat,
         row: WeightRow,
-        cfg: &CoordConfig,
+        hyper: &NodeHyper,
+        wire: &CoordConfig,
     ) -> ChocoNode {
         let me = row.node;
         let p = problem.dim();
-        let oracle = oracle_for(cfg, problem.as_ref(), me, x0_all.row(me));
+        let oracle = oracle_for(hyper, wire, problem.as_ref(), me, x0_all.row(me));
         let replicas = row.neighbors.iter().map(|&(j, _)| (j, vec![0.0; p])).collect();
         ChocoNode {
             problem,
             prox,
             row_minus_i: row.minus_identity(),
             me,
-            eta: cfg.eta,
+            eta: hyper.eta,
             // the experiment γ doubles as Choco's gossip stepsize γ_c (the
             // registry convention)
-            gamma_c: cfg.gamma,
+            gamma_c: hyper.gamma,
             oracle,
             x: x0_all.row(me).to_vec(),
             x_half: vec![0.0; p],
@@ -386,26 +395,27 @@ impl NidsNode {
         prox: Arc<dyn Prox>,
         x0_all: &Mat,
         row: WeightRow,
-        cfg: &CoordConfig,
+        hyper: &NodeHyper,
+        wire: &CoordConfig,
     ) -> NidsNode {
         let me = row.node;
         let p = problem.dim();
-        let mut oracle = oracle_for(cfg, problem.as_ref(), me, x0_all.row(me));
+        let mut oracle = oracle_for(hyper, wire, problem.as_ref(), me, x0_all.row(me));
         // init: Z¹ = X⁰ − η∇F(X⁰); X¹ = prox(Z¹)
         let mut g0 = vec![0.0; p];
         oracle.sample(problem.as_ref(), me, x0_all.row(me), &mut g0);
         let mut z = x0_all.row(me).to_vec();
         for (zi, &gi) in z.iter_mut().zip(&g0) {
-            *zi += -cfg.eta * gi;
+            *zi += -hyper.eta * gi;
         }
         let mut x = z.clone();
-        prox.prox(&mut x, cfg.eta);
+        prox.prox(&mut x, hyper.eta);
         NidsNode {
             problem,
             prox,
             row_tilde: row.half_lazy(),
             me,
-            eta: cfg.eta,
+            eta: hyper.eta,
             oracle,
             x,
             x_prev: x0_all.row(me).to_vec(),
@@ -488,11 +498,12 @@ impl PgExtraNode {
         prox: Arc<dyn Prox>,
         x0_all: &Mat,
         row: WeightRow,
-        cfg: &CoordConfig,
+        hyper: &NodeHyper,
+        wire: &CoordConfig,
     ) -> PgExtraNode {
         let me = row.node;
         let p = problem.dim();
-        let mut oracle = oracle_for(cfg, problem.as_ref(), me, x0_all.row(me));
+        let mut oracle = oracle_for(hyper, wire, problem.as_ref(), me, x0_all.row(me));
         // init: Z¹ = (W X⁰)ᵢ − η∇F(X⁰)ᵢ; X¹ = prox(Z¹); X⁰ is common
         // knowledge, so the W·X⁰ product is local
         let mut g0 = vec![0.0; p];
@@ -500,10 +511,10 @@ impl PgExtraNode {
         let mut z = vec![0.0; p];
         row.mix_rows_into(&mut z, x0_all);
         for (zi, &gi) in z.iter_mut().zip(&g0) {
-            *zi += -cfg.eta * gi;
+            *zi += -hyper.eta * gi;
         }
         let mut x = z.clone();
-        prox.prox(&mut x, cfg.eta);
+        prox.prox(&mut x, hyper.eta);
         let prev_peers = row.neighbors.iter().map(|&(j, _)| (j, x0_all.row(j).to_vec())).collect();
         PgExtraNode {
             problem,
@@ -511,7 +522,7 @@ impl PgExtraNode {
             row_tilde: row.half_lazy(),
             row,
             me,
-            eta: cfg.eta,
+            eta: hyper.eta,
             oracle,
             x,
             x_prev: x0_all.row(me).to_vec(),
@@ -593,11 +604,12 @@ impl P2d2Node {
         prox: Arc<dyn Prox>,
         x0_all: &Mat,
         row: WeightRow,
-        cfg: &CoordConfig,
+        hyper: &NodeHyper,
+        wire: &CoordConfig,
     ) -> P2d2Node {
         let me = row.node;
         let p = problem.dim();
-        let mut oracle = oracle_for(cfg, problem.as_ref(), me, x0_all.row(me));
+        let mut oracle = oracle_for(hyper, wire, problem.as_ref(), me, x0_all.row(me));
         let mut g0 = vec![0.0; p];
         oracle.sample(problem.as_ref(), me, x0_all.row(me), &mut g0);
         P2d2Node {
@@ -605,7 +617,7 @@ impl P2d2Node {
             prox,
             row_tilde: row.half_lazy(),
             me,
-            eta: cfg.eta,
+            eta: hyper.eta,
             oracle,
             x: x0_all.row(me).to_vec(),
             x_prev: x0_all.row(me).to_vec(),
@@ -737,11 +749,12 @@ impl DualGdNode {
         row: WeightRow,
         theta: f64,
         inner_iters: usize,
-        cfg: &CoordConfig,
+        hyper: &NodeHyper,
+        wire: &CoordConfig,
     ) -> DualGdNode {
         let me = row.node;
         let p = problem.dim();
-        let comm = cfg.codec.is_lossy().then(|| NodeComm::new(&row, x0_all, cfg.alpha));
+        let comm = wire.codec.is_lossy().then(|| NodeComm::new(&row, x0_all, hyper.alpha));
         let inner_eta = 1.0 / problem.smoothness();
         DualGdNode {
             problem,
@@ -839,17 +852,18 @@ impl PdgmNode {
         x0_all: &Mat,
         row: WeightRow,
         theta: f64,
-        cfg: &CoordConfig,
+        hyper: &NodeHyper,
+        wire: &CoordConfig,
     ) -> PdgmNode {
         let me = row.node;
         let p = problem.dim();
-        let oracle = oracle_for(cfg, problem.as_ref(), me, x0_all.row(me));
-        let comm = cfg.codec.is_lossy().then(|| NodeComm::new(&row, x0_all, cfg.alpha));
+        let oracle = oracle_for(hyper, wire, problem.as_ref(), me, x0_all.row(me));
+        let comm = wire.codec.is_lossy().then(|| NodeComm::new(&row, x0_all, hyper.alpha));
         PdgmNode {
             problem,
             row,
             me,
-            eta: cfg.eta,
+            eta: hyper.eta,
             theta,
             oracle,
             x: x0_all.row(me).to_vec(),

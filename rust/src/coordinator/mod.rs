@@ -4,19 +4,28 @@
 //! any registry algorithm — Prox-LEAD, DGD, Choco, NIDS, PG-EXTRA, P2D2,
 //! PDGM, DualGD); neighbors exchange *serialized* compressed frames over
 //! per-edge channels (the paper's 8-machine ring becomes 8 node threads;
-//! see DESIGN.md §4). The leader thread collects per-round metrics and
-//! assembles the same history the matrix engine produces — under the exact
-//! `Dense64` codec the two backends are pinned **bit for bit** for every
-//! registry algorithm (`rust/tests/coordinator_parity.rs`), which is what
-//! lets the wire-bytes bench compare algorithms on actual framed bytes
-//! rather than the engine's accounting model.
+//! see DESIGN.md §4). The leader thread collects per-round metrics,
+//! samples suboptimality/consensus/wall-clock per snapshot, evaluates the
+//! run's [`crate::runner::StopSet`] (broadcasting an early stop to every
+//! node thread when a criterion hits — see [`node`]), and assembles the same
+//! [`RunResult`]/[`MetricPoint`] history the matrix engine produces. Under
+//! the exact `Dense64` codec the two backends are pinned **bit for bit**
+//! for every registry algorithm (`rust/tests/coordinator_parity.rs`),
+//! which is what lets the wire-bytes bench compare algorithms on actual
+//! framed bytes rather than the engine's accounting model.
+//!
+//! Configuration is split by concern:
+//! - [`CoordConfig`] — wire-only knobs (codec, straggler model, seed);
+//! - [`NodeHyper`] — the algorithm-side hyperparameters a node half needs
+//!   (η, α, γ, oracle), the engine's `Hyper` + oracle restated per node;
+//! - [`crate::runner::RunSpec`] — rounds, sampling, and stop criteria,
+//!   shared verbatim with the engine.
 //!
 //! Construction is a factory call per node: [`run`] takes any
 //! `Fn(node, WeightRow) -> Box<dyn NodeAlgorithm>`; the name-dispatching
 //! factory lives in `exp::registry::build_node_algorithm` so
-//! `Experiment::coordinator()`, the CLI `train`, and sweeps accept every
-//! `algorithm=` value. [`run_prox_lead`] keeps the historical hand-wired
-//! entry point.
+//! `Experiment::run_coordinator`, the CLI `train`, and sweeps accept every
+//! `algorithm=` value.
 //!
 //! Fault injection: an optional straggler model (per-message delay with
 //! probability `p`) exercises the synchronous-round barrier under skew.
@@ -32,11 +41,13 @@ pub use algorithms::{
 pub use node::{NodeAlgorithm, NodeConfig, WeightRow};
 pub use wire::{Frame, WireCodec};
 
+use crate::algorithm::suboptimality;
 use crate::graph::MixingOp;
 use crate::linalg::Mat;
 use crate::oracle::OracleKind;
 use crate::problem::Problem;
 use crate::prox::Prox;
+use crate::runner::{Backend, MetricPoint, Probe, RunResult, RunSpec, StopReason};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
@@ -50,33 +61,66 @@ pub struct Straggler {
     pub delay: Duration,
 }
 
-/// Coordinator run configuration.
-#[derive(Clone)]
+/// Wire-level coordinator knobs — codec, fault model, RNG seed. Rounds,
+/// sampling, and stop criteria live in the shared
+/// [`crate::runner::RunSpec`]; algorithm hyperparameters in [`NodeHyper`].
+#[derive(Clone, Debug)]
 pub struct CoordConfig {
-    pub rounds: usize,
-    pub record_every: usize,
-    pub eta: f64,
-    pub alpha: f64,
-    pub gamma: f64,
     pub codec: WireCodec,
-    pub oracle: OracleKind,
+    /// Drives the per-node compression dither, the straggler coin, and the
+    /// node algorithms' oracle streams (the engine algorithm seed).
     pub seed: u64,
     pub straggler: Option<Straggler>,
 }
 
 impl CoordConfig {
-    pub fn new(rounds: usize, eta: f64, codec: WireCodec) -> CoordConfig {
-        CoordConfig {
-            rounds,
-            record_every: 1,
-            eta,
-            alpha: 0.5,
-            gamma: 1.0,
-            codec,
-            oracle: OracleKind::Full,
-            seed: 42,
-            straggler: None,
-        }
+    pub fn new(codec: WireCodec) -> CoordConfig {
+        CoordConfig { codec, seed: 42, straggler: None }
+    }
+
+    pub fn seed(mut self, seed: u64) -> CoordConfig {
+        self.seed = seed;
+        self
+    }
+
+    pub fn straggler(mut self, s: Straggler) -> CoordConfig {
+        self.straggler = Some(s);
+        self
+    }
+}
+
+/// Algorithm-side hyperparameters a node half draws from — the engine's
+/// `Hyper` (η, α, γ) plus the gradient oracle, restated for per-node
+/// construction. Lossiness is derived from the wire codec, not stored.
+#[derive(Clone, Copy, Debug)]
+pub struct NodeHyper {
+    pub eta: f64,
+    /// COMM blending weight α (Prox-LEAD/LEAD and the LessBit family).
+    pub alpha: f64,
+    /// γ: Prox-LEAD's consensus stepsize / Choco's gossip stepsize γ_c.
+    pub gamma: f64,
+    pub oracle: OracleKind,
+}
+
+impl NodeHyper {
+    /// η with the paper's α = 0.5, γ = 1, full gradient.
+    pub fn new(eta: f64) -> NodeHyper {
+        NodeHyper { eta, alpha: 0.5, gamma: 1.0, oracle: OracleKind::Full }
+    }
+
+    pub fn alpha(mut self, alpha: f64) -> NodeHyper {
+        self.alpha = alpha;
+        self
+    }
+
+    pub fn gamma(mut self, gamma: f64) -> NodeHyper {
+        self.gamma = gamma;
+        self
+    }
+
+    pub fn oracle(mut self, oracle: OracleKind) -> NodeHyper {
+        self.oracle = oracle;
+        self
     }
 }
 
@@ -91,55 +135,53 @@ pub struct NodeReport {
     pub grad_evals: u64,
 }
 
-/// Leader-side aggregated history.
-#[derive(Clone, Debug)]
-pub struct CoordResult {
-    /// (round, stacked X, cumulative payload bits, cumulative grad evals).
-    pub snapshots: Vec<(usize, Mat, u64, u64)>,
-    /// Total wall-clock.
-    pub elapsed: Duration,
-    /// Total framed wire bytes (headers included) across all nodes.
-    pub wire_bytes: u64,
-}
-
-impl CoordResult {
-    /// The stacked iterate at the last recorded round. `run` guarantees at
-    /// least one snapshot (the final round is always reported), so this is
-    /// total for every completed run.
-    pub fn final_x(&self) -> &Mat {
-        &self.snapshots.last().expect("run() guarantees at least one snapshot").1
-    }
-
-    /// Suboptimality trace vs a reference solution.
-    pub fn suboptimality(&self, x_star: &[f64]) -> Vec<(usize, f64)> {
-        self.snapshots
-            .iter()
-            .map(|(r, x, _, _)| (*r, crate::algorithm::suboptimality(x, x_star)))
-            .collect()
-    }
-}
-
-/// Run a decentralized algorithm over node threads. `build` constructs the
-/// per-node halves — one call per node with that node's gossip row (derived
-/// from the mixing operator's structure: one CSR row walk per node on
-/// sparse graphs, so setup is O(nnz), not O(n²)). Construction runs
-/// *inside* each node's thread (scoped), so per-node init work — a full
-/// gradient at X⁰, SAGA's m-sample table — overlaps across nodes instead
-/// of serializing on the leader. The name-dispatching factory over an
-/// `Experiment` is `exp::registry::build_node_algorithm`.
+/// Run a decentralized algorithm over node threads and return the unified
+/// [`RunResult`] (identical shape to the matrix engine's). `build`
+/// constructs the per-node halves — one call per node with that node's
+/// gossip row (derived from the mixing operator's structure: one CSR row
+/// walk per node on sparse graphs, so setup is O(nnz), not O(n²)).
+/// Construction runs *inside* each node's thread (scoped), so per-node
+/// init work — a full gradient at X⁰, SAGA's m-sample table — overlaps
+/// across nodes instead of serializing on the leader.
+///
+/// The leader measures suboptimality against `x_star` at every snapshot
+/// and evaluates `spec.stop` there — stop criteria beyond the round cap
+/// therefore fire at `record_every` granularity (the leader cannot observe
+/// rounds it never sees; use `record_every = 1` for round-exact stops).
+/// `spec.schedule` is engine-only and rejected here; `spec.seed` is
+/// resolved by the caller into `wire.seed`.
+///
+/// Divergence: a *gated* run (any stop criterion beyond the round cap)
+/// stops the fleet at the next checkpoint with `StopReason::Diverged`,
+/// beating every other criterion. An ungated run has no control channels
+/// by design (zero leader round-trips on the fast path) — it completes
+/// the round budget and labels a non-finite final iterate `Diverged`
+/// post-hoc, unlike the engine, which truncates immediately.
+///
+/// The name-dispatching factory over an `Experiment` is
+/// `exp::registry::build_node_algorithm`.
+#[allow(clippy::too_many_arguments)]
 pub fn run(
     w: &MixingOp,
     x0: &Mat,
-    cfg: &CoordConfig,
+    name: &str,
+    wire: &CoordConfig,
+    spec: &RunSpec,
+    x_star: &[f64],
+    probes: &mut [&mut dyn Probe],
     build: impl Fn(usize, WeightRow) -> Box<dyn NodeAlgorithm> + Sync,
-) -> CoordResult {
+) -> RunResult {
     let n = w.n();
+    let rounds = spec.stop.max_rounds;
     assert_eq!(x0.rows, n);
+    assert_eq!(x_star.len(), x0.cols, "x_star dimension must match the iterate width");
+    assert!(rounds > 0, "coordinator run needs rounds >= 1 (0 would record no snapshots)");
+    assert!(spec.record_every > 0, "record_every must be >= 1");
     assert!(
-        cfg.rounds > 0,
-        "coordinator run needs rounds >= 1 (rounds = 0 would record no snapshots)"
+        spec.schedule.is_none(),
+        "stepsize schedules are engine-only (node halves run fixed hyperparameters)"
     );
-    assert!(cfg.record_every > 0, "record_every must be >= 1");
+    let gated = spec.stop.leader_gated();
     let start = Instant::now();
 
     // per-node inboxes; every node gets a Sender clone for each neighbor
@@ -150,12 +192,24 @@ pub fn run(
         txs.push(tx);
         rxs.push(rx);
     }
+    // leader → node control channels (only wired when gating is on)
+    let mut ctrl_txs = Vec::with_capacity(n);
+    let mut ctrl_rxs: Vec<Option<mpsc::Receiver<bool>>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        if gated {
+            let (tx, rx) = mpsc::channel::<bool>();
+            ctrl_txs.push(tx);
+            ctrl_rxs.push(Some(rx));
+        } else {
+            ctrl_rxs.push(None);
+        }
+    }
     let (report_tx, report_rx) = mpsc::channel::<NodeReport>();
     let build = &build;
 
-    let (snapshots, wire_bytes) = thread::scope(|scope| {
+    let (history, final_x, stopped_by) = thread::scope(|scope| {
         let mut handles = Vec::with_capacity(n);
-        for (i, rx) in rxs.into_iter().enumerate() {
+        for (i, (rx, ctrl)) in rxs.into_iter().zip(ctrl_rxs).enumerate() {
             let row = WeightRow::from_op(w, i);
             // per-edge senders, aligned with the gossip row (ascending j)
             let neighbors: Vec<(usize, mpsc::Sender<Vec<u8>>)> =
@@ -165,7 +219,10 @@ pub fn run(
                 neighbors,
                 inbox: rx,
                 reports: report_tx.clone(),
-                cfg: cfg.clone(),
+                control: ctrl,
+                wire: wire.clone(),
+                rounds,
+                record_every: spec.record_every,
                 dim: x0.cols,
             };
             handles.push(
@@ -179,17 +236,17 @@ pub fn run(
         drop(txs);
 
         // leader: gather reports until every node finished every recorded
-        // round
+        // round, flushing completed rounds in order
         let mut pending: std::collections::BTreeMap<usize, Vec<Option<NodeReport>>> =
             std::collections::BTreeMap::new();
-        let mut snapshots = Vec::new();
-        let mut wire_bytes = 0u64;
+        let mut history: Vec<MetricPoint> = Vec::new();
+        let mut final_x: Option<Mat> = None;
+        let mut stopped_by: Option<StopReason> = None;
         while let Ok(rep) = report_rx.recv() {
             let slot = pending.entry(rep.round).or_insert_with(|| vec![None; n]);
             let node = rep.node;
             assert!(slot[node].is_none(), "duplicate report from node {node}");
             slot[node] = Some(rep);
-            // flush completed rounds in order
             while let Some((&round, slots)) = pending.iter().next() {
                 if !slots.iter().all(|s| s.is_some()) {
                     break;
@@ -199,53 +256,118 @@ pub fn run(
                 let (mut bits, mut evals, mut bytes) = (0u64, 0u64, 0u64);
                 for s in slots.into_iter().map(Option::unwrap) {
                     x.row_mut(s.node).copy_from_slice(&s.x);
+                    // per-node counters are cumulative: the latest
+                    // snapshot's sum is the run total so far (the final
+                    // round is always reported, so this covers every frame
+                    // even when rounds % record_every != 0)
                     bits += s.payload_bits;
                     evals += s.grad_evals;
                     bytes += s.bytes_sent;
                 }
-                // per-node counters are cumulative: the latest snapshot's
-                // sum is the run total so far (the final round is always
-                // reported, so this covers every frame even when
-                // rounds % record_every != 0)
-                wire_bytes = bytes;
-                snapshots.push((round, x, bits, evals));
+                // per-snapshot leader sampling: suboptimality vs the
+                // reference, consensus, wall-clock — the engine's row
+                let elapsed = start.elapsed();
+                let m = MetricPoint {
+                    round,
+                    grad_evals: evals,
+                    bits,
+                    wire_bytes: bytes,
+                    suboptimality: suboptimality(&x, x_star),
+                    consensus: x.consensus_error(),
+                    wall_ns: elapsed.as_nanos(),
+                };
+                crate::runner::emit(m, &x, &mut history, probes);
+                if gated && round > 0 {
+                    // first-hit-wins, divergence beating the budget checks
+                    // (a non-finite iterate can't recover — stop the fleet)
+                    let hit = if !x.is_finite() {
+                        Some(StopReason::Diverged)
+                    } else {
+                        spec.stop.check(round, bits, evals, m.suboptimality, elapsed)
+                    };
+                    if let Some(reason) = hit {
+                        // MaxRounds is the natural end, not an early stop
+                        if stopped_by.is_none() && reason != StopReason::MaxRounds {
+                            stopped_by = Some(reason);
+                        }
+                    }
+                    // checkpoint verdict: every node blocks after a
+                    // record_every-multiple before the final round
+                    if round % spec.record_every == 0 && round < rounds {
+                        let go = stopped_by.is_none();
+                        for tx in &ctrl_txs {
+                            // a node that already exited is not an error
+                            let _ = tx.send(go);
+                        }
+                    }
+                }
+                final_x = Some(x);
             }
         }
         for h in handles {
             h.join().expect("node thread panicked");
         }
-        (snapshots, wire_bytes)
+        (history, final_x, stopped_by)
     });
-    assert!(!snapshots.is_empty(), "no snapshots recorded — node threads died before reporting");
+    assert!(!history.is_empty(), "no snapshots recorded — node threads died before reporting");
+    let final_x = final_x.expect("final iterate tracked with every snapshot");
+    let stopped_by = match stopped_by {
+        Some(reason) => reason,
+        // ungated runs always complete the round budget; flag a
+        // non-finite landing state as a divergence after the fact
+        None if final_x.is_finite() => StopReason::MaxRounds,
+        None => StopReason::Diverged,
+    };
 
-    CoordResult { snapshots, elapsed: start.elapsed(), wire_bytes }
+    let result = RunResult {
+        name: name.to_string(),
+        backend: Backend::Coordinator,
+        history,
+        stopped_by,
+        elapsed: start.elapsed(),
+        final_x,
+    };
+    crate::runner::finish(&result, probes);
+    result
 }
 
-/// Distributed Prox-LEAD over node threads — the historical entry point,
-/// now a thin [`ProxLeadNode`] factory over the algorithm-generic [`run`].
-/// `problem` supplies every node's data (as the per-machine shards would in
-/// a real deployment); `prox` is the shared non-smooth term; `x0` the
-/// common start iterate.
+/// Distributed Prox-LEAD over node threads — the historical hand-wired
+/// entry point, kept as a thin shim over the algorithm-generic [`run`] for
+/// sequence-pinning tests. `problem` supplies every node's data (as the
+/// per-machine shards would in a real deployment); `prox` is the shared
+/// non-smooth term; `x0` the common start iterate.
+#[deprecated(note = "use Experiment::run_coordinator(&RunSpec), or coordinator::run with a \
+                     node factory — this shim exists for sequence-pinning tests")]
+#[allow(clippy::too_many_arguments)]
 pub fn run_prox_lead(
     problem: Arc<dyn Problem>,
     w: &MixingOp,
     x0: &Mat,
     prox: Arc<dyn Prox>,
-    cfg: &CoordConfig,
-) -> CoordResult {
+    hyper: &NodeHyper,
+    wire: &CoordConfig,
+    spec: &RunSpec,
+    x_star: &[f64],
+) -> RunResult {
     assert_eq!(problem.num_nodes(), w.n());
-    run(w, x0, cfg, |_, row| {
-        Box::new(ProxLeadNode::new(Arc::clone(&problem), Arc::clone(&prox), x0, row, cfg))
+    run(w, x0, "prox-lead", wire, spec, x_star, &mut [], |_, row| {
+        Box::new(ProxLeadNode::new(Arc::clone(&problem), Arc::clone(&prox), x0, row, hyper, wire))
     })
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the pins below intentionally drive the run_prox_lead shim
 mod tests {
     use super::*;
     use crate::algorithm::testkit::{ring_logreg, safe_eta};
-    use crate::algorithm::{solve_reference, suboptimality, Algorithm, ProxLead};
+    use crate::algorithm::{solve_reference, Algorithm, ProxLead};
     use crate::compress::Identity;
     use crate::prox::{Zero, L1};
+
+    /// Sub-sampled suboptimality trace from the unified history.
+    fn trace(res: &RunResult) -> Vec<(usize, f64)> {
+        res.history.iter().map(|m| (m.round, m.suboptimality)).collect()
+    }
 
     #[test]
     fn leader_matches_matrix_engine_bit_for_bit() {
@@ -255,25 +377,36 @@ mod tests {
         // engine kernels; the 9-algorithm matrix version of this test lives
         // in rust/tests/coordinator_parity.rs)
         let exp = crate::algorithm::testkit::ring_exp();
-        let cfg = CoordConfig::new(40, exp.hyper.eta, WireCodec::Dense64);
-        let res =
-            run_prox_lead(Arc::clone(&exp.problem), &exp.mixing, &exp.x0, Arc::new(Zero), &cfg);
+        let x_star = vec![0.0; exp.problem.dim()];
+        let wire = CoordConfig::new(WireCodec::Dense64).seed(42);
+        let res = run_prox_lead(
+            Arc::clone(&exp.problem),
+            &exp.mixing,
+            &exp.x0,
+            Arc::new(Zero),
+            &NodeHyper::new(exp.hyper.eta),
+            &wire,
+            &RunSpec::fixed(40).every(40),
+            &x_star,
+        );
 
         let mut matrix =
-            ProxLead::builder(&exp).compressor(Box::new(Identity::f64())).seed(1).build();
+            ProxLead::builder(&exp).compressor(Box::new(Identity::f64())).seed(42).build();
         for _ in 0..40 {
             matrix.step(exp.problem.as_ref());
         }
-        let coord_x = res.final_x();
-        for (i, (a, b)) in coord_x.data.iter().zip(&matrix.x().data).enumerate() {
+        for (i, (a, b)) in res.final_x.data.iter().zip(&matrix.x().data).enumerate() {
             assert_eq!(a.to_bits(), b.to_bits(), "entry {i}: {a:?} vs {b:?}");
         }
+        assert_eq!(res.backend, Backend::Coordinator);
+        assert_eq!(res.stopped_by, StopReason::MaxRounds);
     }
 
     #[test]
     fn experiment_coordinator_matches_explicit_wiring() {
         // the Experiment-level coordinator entry point drives the same run
-        // the hand-wired CoordConfig produces, bit for bit
+        // the hand-wired shim produces, bit for bit, through the unified
+        // RunResult
         let mut cfg = crate::config::Config::parse(
             "nodes = 4\nsamples_per_node = 24\ndim = 5\nclasses = 3\nbatches = 4\n\
              separation = 1.0\nseed = 33\nlambda1 = 0.005\nlambda2 = 0.1\nbits = 2\n",
@@ -282,26 +415,28 @@ mod tests {
         cfg.rounds = 60;
         cfg.record_every = 20;
         let exp = crate::exp::Experiment::from_config(&cfg).unwrap();
-        let via_exp = exp.coordinator();
+        let via_exp = exp.run_coordinator(&exp.run_spec());
 
-        let mut ccfg = CoordConfig::new(60, exp.hyper.eta, WireCodec::Quant(2, 256));
-        ccfg.record_every = 20;
-        ccfg.seed = 33;
+        let x_star = exp.reference();
+        let wire = CoordConfig::new(WireCodec::Quant(2, 256)).seed(33);
         let explicit = run_prox_lead(
             Arc::clone(&exp.problem),
             &exp.mixing,
             &exp.x0,
             Arc::new(L1::new(5e-3)),
-            &ccfg,
+            &NodeHyper::new(exp.hyper.eta),
+            &wire,
+            &RunSpec::fixed(60).every(20),
+            &x_star,
         );
-        assert_eq!(via_exp.snapshots.len(), explicit.snapshots.len());
-        for ((ra, xa, ba, ea), (rb, xb, bb, eb)) in
-            via_exp.snapshots.iter().zip(&explicit.snapshots)
-        {
-            assert_eq!((ra, ba, ea), (rb, bb, eb));
-            for (a, b) in xa.data.iter().zip(&xb.data) {
-                assert_eq!(a.to_bits(), b.to_bits());
-            }
+        assert_eq!(via_exp.history.len(), explicit.history.len());
+        for (a, b) in via_exp.history.iter().zip(&explicit.history) {
+            assert_eq!((a.round, a.bits, a.grad_evals), (b.round, b.bits, b.grad_evals));
+            assert_eq!(a.wire_bytes, b.wire_bytes);
+            assert_eq!(a.suboptimality.to_bits(), b.suboptimality.to_bits());
+        }
+        for (a, b) in via_exp.final_x.data.iter().zip(&explicit.final_x.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 
@@ -314,32 +449,38 @@ mod tests {
         let g = crate::graph::Graph::ring(4);
         let rule = crate::graph::MixingRule::UniformMaxDegree;
         let x0 = Mat::zeros(4, p.dim());
-        let eta = safe_eta(&p);
+        let x_star = vec![0.0; p.dim()];
+        let hyper = NodeHyper::new(safe_eta(&p));
         let p_arc: Arc<dyn crate::problem::Problem> = Arc::new(p);
-        let mut cfg = CoordConfig::new(200, eta, WireCodec::Quant(2, 256));
-        cfg.record_every = 50;
+        let wire = CoordConfig::new(WireCodec::Quant(2, 256));
+        let spec = RunSpec::fixed(200).every(50);
         let dense = run_prox_lead(
             Arc::clone(&p_arc),
             &crate::graph::MixingOp::dense_from(&g, rule),
             &x0,
             Arc::new(Zero),
-            &cfg,
+            &hyper,
+            &wire,
+            &spec,
+            &x_star,
         );
         let sparse = run_prox_lead(
             Arc::clone(&p_arc),
             &crate::graph::MixingOp::sparse_from(&g, rule),
             &x0,
             Arc::new(Zero),
-            &cfg,
+            &hyper,
+            &wire,
+            &spec,
+            &x_star,
         );
-        assert_eq!(dense.snapshots.len(), sparse.snapshots.len());
-        for ((rd, xd, bd, ed), (rs, xs, bs, es)) in
-            dense.snapshots.iter().zip(&sparse.snapshots)
-        {
-            assert_eq!((rd, bd, ed), (rs, bs, es));
-            for (a, b) in xd.data.iter().zip(&xs.data) {
-                assert_eq!(a.to_bits(), b.to_bits());
-            }
+        assert_eq!(dense.history.len(), sparse.history.len());
+        for (a, b) in dense.history.iter().zip(&sparse.history) {
+            assert_eq!((a.round, a.bits, a.grad_evals), (b.round, b.bits, b.grad_evals));
+            assert_eq!(a.suboptimality.to_bits(), b.suboptimality.to_bits());
+        }
+        for (a, b) in dense.final_x.data.iter().zip(&sparse.final_x.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 
@@ -349,17 +490,26 @@ mod tests {
         use crate::problem::Problem;
         let x_star = solve_reference(&p, 5e-3, 40_000, 1e-13);
         let x0 = Mat::zeros(4, p.dim());
-        let eta = safe_eta(&p);
+        let hyper = NodeHyper::new(safe_eta(&p));
         let p_arc: Arc<dyn crate::problem::Problem> = Arc::new(p);
-        let mut cfg = CoordConfig::new(3000, eta, WireCodec::Quant(2, 256));
-        cfg.record_every = 500;
-        let res = run_prox_lead(p_arc, &w, &x0, Arc::new(L1::new(5e-3)), &cfg);
-        let s = suboptimality(res.final_x(), &x_star);
+        let wire = CoordConfig::new(WireCodec::Quant(2, 256));
+        let res = run_prox_lead(
+            p_arc,
+            &w,
+            &x0,
+            Arc::new(L1::new(5e-3)),
+            &hyper,
+            &wire,
+            &RunSpec::fixed(3000).every(500),
+            &x_star,
+        );
+        let s = res.final_subopt();
         assert!(s < 1e-12, "distributed Prox-LEAD 2bit suboptimality: {s}");
-        assert!(res.wire_bytes > 0);
-        // trace is decreasing overall
-        let trace = res.suboptimality(&x_star);
-        assert!(trace.last().unwrap().1 < trace.first().unwrap().1 * 1e-6);
+        assert!(res.wire_bytes() > 0);
+        // trace is decreasing overall (round 0 is the descent baseline)
+        let t = trace(&res);
+        assert_eq!(t.first().unwrap().0, 0);
+        assert!(t.last().unwrap().1 < t[1].1 * 1e-6);
     }
 
     #[test]
@@ -368,15 +518,23 @@ mod tests {
         use crate::problem::Problem;
         let x_star = solve_reference(&p, 0.0, 40_000, 1e-13);
         let x0 = Mat::zeros(4, p.dim());
-        let eta = safe_eta(&p);
+        let hyper = NodeHyper::new(safe_eta(&p));
         let p_arc: Arc<dyn crate::problem::Problem> = Arc::new(p);
-        let mut cfg = CoordConfig::new(150, eta, WireCodec::Quant(2, 256));
-        cfg.record_every = 150;
-        cfg.straggler = Some(Straggler { prob: 0.05, delay: Duration::from_micros(300) });
-        let res = run_prox_lead(p_arc, &w, &x0, Arc::new(Zero), &cfg);
-        let s = suboptimality(res.final_x(), &x_star);
+        let wire = CoordConfig::new(WireCodec::Quant(2, 256))
+            .straggler(Straggler { prob: 0.05, delay: Duration::from_micros(300) });
+        let res = run_prox_lead(
+            p_arc,
+            &w,
+            &x0,
+            Arc::new(Zero),
+            &hyper,
+            &wire,
+            &RunSpec::fixed(150).every(150),
+            &x_star,
+        );
+        let s = res.final_subopt();
         assert!(s.is_finite() && s < 1.0, "straggler run must stay sound: {s}");
-        assert_eq!(res.snapshots.len(), 1);
+        assert_eq!(res.history.len(), 2); // round 0 + the final round
     }
 
     #[test]
@@ -386,55 +544,107 @@ mod tests {
         let x_star = solve_reference(&p, 0.0, 40_000, 1e-13);
         let x0 = Mat::zeros(4, p.dim());
         let p_arc: Arc<dyn crate::problem::Problem> = Arc::new(p);
-        let mut cfg =
-            CoordConfig::new(4000, 1.0 / (6.0 * p_arc.smoothness()), WireCodec::Quant(2, 256));
-        cfg.record_every = 1000;
-        cfg.oracle = OracleKind::Saga;
-        let res = run_prox_lead(p_arc, &w, &x0, Arc::new(Zero), &cfg);
-        let s = suboptimality(res.final_x(), &x_star);
+        let hyper =
+            NodeHyper::new(1.0 / (6.0 * p_arc.smoothness())).oracle(OracleKind::Saga);
+        let wire = CoordConfig::new(WireCodec::Quant(2, 256));
+        let res = run_prox_lead(
+            p_arc,
+            &w,
+            &x0,
+            Arc::new(Zero),
+            &hyper,
+            &wire,
+            &RunSpec::fixed(4000).every(1000),
+            &x_star,
+        );
+        let s = res.final_subopt();
         assert!(s < 1e-8, "distributed LEAD-SAGA suboptimality: {s}");
         // grad evals include per-node SAGA init (m per node)
-        let (_, _, _, evals) = res.snapshots.last().unwrap();
-        assert!(*evals >= 4000);
+        assert!(res.history.last().unwrap().grad_evals >= 4000);
     }
 
     #[test]
     #[should_panic(expected = "rounds >= 1")]
     fn zero_rounds_is_a_clear_error_at_entry() {
         // regression: rounds = 0 used to run to completion with an empty
-        // snapshot list, deferring the panic to CoordResult::final_x
+        // snapshot list, deferring the panic to the final-iterate accessor
         let (p, w) = ring_logreg();
         use crate::problem::Problem;
         let x0 = Mat::zeros(4, p.dim());
-        let cfg = CoordConfig::new(0, 0.05, WireCodec::Dense64);
-        let _ = run_prox_lead(Arc::new(p), &w, &x0, Arc::new(Zero), &cfg);
+        let x_star = vec![0.0; p.dim()];
+        let _ = run_prox_lead(
+            Arc::new(p),
+            &w,
+            &x0,
+            Arc::new(Zero),
+            &NodeHyper::new(0.05),
+            &CoordConfig::new(WireCodec::Dense64),
+            &RunSpec::fixed(0),
+            &x_star,
+        );
     }
 
     #[test]
     fn final_round_reported_when_rounds_not_divisible_by_record_every() {
         // bookkeeping pin: the run totals (wire bytes, payload bits, grad
         // evals) must cover every round — nodes always report round
-        // `rounds`, like the engine's `k + 1 == cfg.rounds` rule
+        // `rounds`, like the engine's final-round rule
         let (p, w) = ring_logreg();
         use crate::problem::Problem;
         let x0 = Mat::zeros(4, p.dim());
-        let eta = safe_eta(&p);
+        let x_star = vec![0.0; p.dim()];
+        let hyper = NodeHyper::new(safe_eta(&p));
         let p_arc: Arc<dyn crate::problem::Problem> = Arc::new(p);
+        let wire = CoordConfig::new(WireCodec::Quant(2, 256));
         let mk = |record_every: usize| {
-            let mut cfg = CoordConfig::new(7, eta, WireCodec::Quant(2, 256));
-            cfg.record_every = record_every;
-            run_prox_lead(Arc::clone(&p_arc), &w, &x0, Arc::new(Zero), &cfg)
+            run_prox_lead(
+                Arc::clone(&p_arc),
+                &w,
+                &x0,
+                Arc::new(Zero),
+                &hyper,
+                &wire,
+                &RunSpec::fixed(7).every(record_every),
+                &x_star,
+            )
         };
-        let thinned = mk(3); // 7 % 3 != 0: rounds 3, 6, then the final 7
+        let thinned = mk(3); // 7 % 3 != 0: rounds 0, 3, 6, then the final 7
         let dense = mk(1); // every round: ground truth totals
-        let rounds: Vec<usize> = thinned.snapshots.iter().map(|(r, ..)| *r).collect();
-        assert_eq!(rounds, vec![3, 6, 7]);
-        assert_eq!(thinned.wire_bytes, dense.wire_bytes, "wire byte totals must not undercount");
-        let (_, xt, bt, et) = thinned.snapshots.last().unwrap();
-        let (_, xd, bd, ed) = dense.snapshots.last().unwrap();
-        assert_eq!((bt, et), (bd, ed), "payload bits / grad evals must cover all 7 rounds");
-        for (a, b) in xt.data.iter().zip(&xd.data) {
+        let rounds: Vec<usize> = thinned.history.iter().map(|m| m.round).collect();
+        assert_eq!(rounds, vec![0, 3, 6, 7]);
+        let (t, d) = (thinned.history.last().unwrap(), dense.history.last().unwrap());
+        assert_eq!(t.wire_bytes, d.wire_bytes, "wire byte totals must not undercount");
+        assert_eq!((t.bits, t.grad_evals), (d.bits, d.grad_evals), "totals must cover 7 rounds");
+        for (a, b) in thinned.final_x.data.iter().zip(&dense.final_x.data) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn round_zero_snapshot_is_the_post_init_state() {
+        // the coordinator history now starts at round 0 like the engine's:
+        // the post-construction iterate, zero wire traffic (for setup-free
+        // algorithms), init-cost grad evals
+        let (p, w) = ring_logreg();
+        use crate::problem::Problem;
+        let x0 = Mat::zeros(4, p.dim());
+        let x_star = vec![0.0; p.dim()];
+        let p_arc: Arc<dyn crate::problem::Problem> = Arc::new(p);
+        let res = run_prox_lead(
+            Arc::clone(&p_arc),
+            &w,
+            &x0,
+            Arc::new(Zero),
+            &NodeHyper::new(0.05),
+            &CoordConfig::new(WireCodec::Dense64),
+            &RunSpec::fixed(5),
+            &x_star,
+        );
+        let first = res.history.first().unwrap();
+        assert_eq!(first.round, 0);
+        assert_eq!(first.bits, 0);
+        assert_eq!(first.wire_bytes, 0);
+        assert!(first.grad_evals > 0, "round 0 carries the init gradient cost");
+        assert_eq!(res.history.len(), 6); // rounds 0..=5
     }
 }

@@ -5,8 +5,8 @@
 //! the per-row arithmetic the matrix engine performs on row i, re-expressed
 //! over local state. The driver [`run_node`] owns everything that is *not*
 //! algorithm arithmetic: wire encoding/decoding, frame transport, the
-//! synchronous-round barrier, straggler injection, and metric reporting.
-//! Per round it
+//! synchronous-round barrier, straggler injection, metric reporting, and
+//! the leader's early-stop protocol. Per round it
 //!
 //! 1. asks the algorithm for its broadcast vector ([`NodeAlgorithm::outgoing`]),
 //! 2. encodes it with the wire codec and unicasts the frame to every
@@ -30,6 +30,17 @@
 //! OUR round-k frame to advance, not our slow neighbor's), so ahead-of-round
 //! frames are buffered; behind-round frames indicate a protocol violation
 //! and panic.
+//!
+//! **Early stop (leader gating).** When the run's
+//! [`crate::runner::StopSet`] carries a criterion the leader must observe
+//! (target suboptimality, bits/grad-evals budget, deadline), every node
+//! blocks after each `record_every`-checkpoint report until the leader
+//! broadcasts continue-or-stop over the per-node control channel. All
+//! nodes checkpoint at the same steps, so they all receive the same
+//! decision and a stopped run ends on the same round network-wide — which
+//! is what makes budget stops deterministic and bit-comparable to the
+//! engine. Between checkpoints nodes free-run exactly as in the ungated
+//! case.
 
 use super::wire::Frame;
 use super::{CoordConfig, NodeReport};
@@ -162,27 +173,36 @@ pub struct NodeConfig {
     pub neighbors: Vec<(usize, Sender<Vec<u8>>)>,
     pub inbox: Receiver<Vec<u8>>,
     pub reports: Sender<NodeReport>,
-    pub cfg: CoordConfig,
+    /// Leader gating channel (`Some` when the run's stop set needs leader
+    /// observation): `true` = continue past the checkpoint, `false` = stop.
+    pub control: Option<Receiver<bool>>,
+    /// Wire-level knobs: codec, straggler model, RNG seed.
+    pub wire: CoordConfig,
+    /// Counted algorithm rounds (setup rounds excluded).
+    pub rounds: usize,
+    /// Report (and, when gated, checkpoint) every this many rounds.
+    pub record_every: usize,
     /// Parameter dimension p (frame payloads decode to this length).
     pub dim: usize,
 }
 
 /// Drive one node's algorithm through `setup + rounds` wire exchanges.
 ///
-/// Reporting follows the engine's record rule: a report at every
-/// `record_every`-th step AND always at step `rounds`, so leader totals
-/// (wire bytes, payload bits, grad evals) cover the whole run even when
-/// `rounds % record_every != 0`.
+/// Reporting follows the engine's record rule: a report at round 0 (the
+/// post-init state, after any setup exchanges — mirroring the engine's
+/// round-0 sample), at every `record_every`-th step, AND always at step
+/// `rounds`, so leader totals (wire bytes, payload bits, grad evals)
+/// cover the whole run even when `rounds % record_every != 0`.
 pub fn run_node(mut alg: Box<dyn NodeAlgorithm>, nc: NodeConfig) {
     let me = nc.id;
     let p = nc.dim;
-    let cfg = &nc.cfg;
+    let wire = &nc.wire;
     // deterministic per-node streams: compression dither + straggler coin
-    let mut comp_rng = Rng::new(cfg.seed).fork(me as u64);
-    let mut fault_rng = Rng::new(cfg.seed ^ 0x5747_4C52).fork(me as u64);
+    let mut comp_rng = Rng::new(wire.seed).fork(me as u64);
+    let mut fault_rng = Rng::new(wire.seed ^ 0x5747_4C52).fork(me as u64);
 
     let setup = alg.setup_rounds();
-    let total = setup + cfg.rounds;
+    let total = setup + nc.rounds;
     let deg = nc.neighbors.len();
     let mut payload = vec![0.0; p];
     // decoded neighbor payloads for the current round, one slot per gossip
@@ -194,13 +214,28 @@ pub fn run_node(mut alg: Box<dyn NodeAlgorithm>, nc: NodeConfig) {
     let (mut bytes_sent, mut payload_bits) = (0u64, 0u64);
 
     for k in 0..total {
+        if k == setup {
+            // round-0 report: the post-initialization state (engine: the
+            // sample taken before the first step). Setup-round wire costs
+            // (P2D2's init exchange) are already in the counters.
+            nc.reports
+                .send(NodeReport {
+                    node: me,
+                    round: 0,
+                    x: alg.x().to_vec(),
+                    bytes_sent,
+                    payload_bits,
+                    grad_evals: alg.grad_evals(),
+                })
+                .expect("leader gone");
+        }
         alg.outgoing(&mut payload);
-        let (wire, q_own, bits) = cfg.codec.encode(&payload, &mut comp_rng);
+        let (frame_bytes, q_own, bits) = wire.codec.encode(&payload, &mut comp_rng);
         payload_bits += bits;
-        let frame = Frame { round: k as u32, from: me as u16, payload: wire };
-        let buf = frame.to_bytes(&cfg.codec);
+        let frame = Frame { round: k as u32, from: me as u16, payload: frame_bytes };
+        let buf = frame.to_bytes(&wire.codec);
         for (_, tx) in &nc.neighbors {
-            if let Some(s) = cfg.straggler {
+            if let Some(s) = wire.straggler {
                 if fault_rng.bernoulli(s.prob) {
                     std::thread::sleep(s.delay);
                 }
@@ -220,7 +255,7 @@ pub fn run_node(mut alg: Box<dyn NodeAlgorithm>, nc: NodeConfig) {
                 .binary_search_by_key(&(f.from as usize), |&(j, _)| j)
                 .unwrap_or_else(|_| panic!("frame from non-neighbor {}", f.from));
             assert!(peers[slot].1.is_empty(), "duplicate frame from node {}", f.from);
-            peers[slot].1 = cfg.codec.decode(&f.payload, p);
+            peers[slot].1 = wire.codec.decode(&f.payload, p);
             *got += 1;
         };
         for f in future.remove(&(k as u32)).unwrap_or_default() {
@@ -241,7 +276,7 @@ pub fn run_node(mut alg: Box<dyn NodeAlgorithm>, nc: NodeConfig) {
 
         if k >= setup {
             let step = k - setup + 1;
-            if step % cfg.record_every == 0 || step == cfg.rounds {
+            if step % nc.record_every == 0 || step == nc.rounds {
                 nc.reports
                     .send(NodeReport {
                         node: me,
@@ -252,6 +287,17 @@ pub fn run_node(mut alg: Box<dyn NodeAlgorithm>, nc: NodeConfig) {
                         grad_evals: alg.grad_evals(),
                     })
                     .expect("leader gone");
+            }
+            // checkpoint gate: wait for the leader's continue/stop verdict
+            // (sent for every flushed multiple of record_every before the
+            // final round — the same set of steps on every node, so a stop
+            // lands network-wide on one round)
+            if step % nc.record_every == 0 && step < nc.rounds {
+                if let Some(ctrl) = &nc.control {
+                    if !ctrl.recv().expect("leader gone at checkpoint") {
+                        break;
+                    }
+                }
             }
         }
     }

@@ -1,35 +1,22 @@
 //! The synchronous matrix-form engine: drives any [`Algorithm`] for K
-//! rounds, applies stepsize schedules, and records the metric history
-//! behind every figure in §5 — suboptimality vs (rounds | epochs |
-//! gradient evaluations | communicated bits).
+//! rounds on one thread with identical arithmetic to the message-passing
+//! [`crate::coordinator`] (verified bit for bit by integration test).
 //!
-//! The message-passing [`crate::coordinator`] is the "real" distributed
-//! runtime; this engine is the fast single-thread harness the benchmark
-//! suite sweeps with (identical arithmetic, verified by integration test).
+//! The run loop itself lives in [`crate::runner`] — the one run API both
+//! backends share (composable [`crate::runner::StopSet`], streaming
+//! [`crate::runner::Probe`]s, one [`RunResult`] shape). This module keeps
+//! the deprecated [`RunConfig`]/[`run`] shims for sequence-pinning tests
+//! and the [`rounds_to`] convenience.
 
-use crate::algorithm::{suboptimality, Algorithm, Schedule};
-use crate::linalg::Mat;
+use crate::algorithm::{Algorithm, Schedule};
 use crate::problem::Problem;
-use std::time::Instant;
+use crate::runner::{self, RunSpec};
 
-/// One recorded metric sample.
-#[derive(Clone, Copy, Debug)]
-pub struct MetricPoint {
-    /// Round index (1-based after the step executes).
-    pub round: usize,
-    /// Cumulative batch-gradient evaluations across all nodes.
-    pub grad_evals: u64,
-    /// Cumulative communicated bits across all nodes.
-    pub bits: u64,
-    /// ‖Xᵏ − 1(x*)ᵀ‖²/n vs the reference solution.
-    pub suboptimality: f64,
-    /// Σᵢ ‖xᵢ − x̄‖² consensus error.
-    pub consensus: f64,
-    /// Wall-clock since run start.
-    pub wall_ns: u128,
-}
+pub use crate::runner::{MetricPoint, RunResult, StopReason, XAxis};
 
-/// Run controls.
+/// Run controls of the pre-`runner` engine API.
+#[deprecated(note = "use runner::RunSpec (composable StopSet + streaming probes) — this shim \
+                     exists for sequence-pinning tests")]
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     pub rounds: usize,
@@ -41,6 +28,7 @@ pub struct RunConfig {
     pub schedule: Option<Schedule>,
 }
 
+#[allow(deprecated)]
 impl RunConfig {
     pub fn fixed(rounds: usize) -> RunConfig {
         RunConfig { rounds, record_every: 1, target_subopt: None, schedule: None }
@@ -60,128 +48,32 @@ impl RunConfig {
         self.schedule = Some(s);
         self
     }
-}
 
-/// The full trace of one algorithm run.
-#[derive(Clone, Debug)]
-pub struct RunResult {
-    pub name: String,
-    pub history: Vec<MetricPoint>,
-    /// First round at which `target_subopt` was met (if requested and met).
-    pub rounds_to_target: Option<usize>,
-    pub final_x: Mat,
-}
-
-impl RunResult {
-    pub fn final_subopt(&self) -> f64 {
-        self.history.last().map_or(f64::NAN, |m| m.suboptimality)
-    }
-
-    /// Series (x_metric, suboptimality) for the figure CSVs.
-    pub fn series(&self, x: XAxis) -> Vec<(f64, f64)> {
-        self.history
-            .iter()
-            .map(|m| {
-                let xv = match x {
-                    XAxis::Rounds => m.round as f64,
-                    XAxis::GradEvals => m.grad_evals as f64,
-                    XAxis::Bits => m.bits as f64,
-                    XAxis::Epochs(per_epoch) => m.grad_evals as f64 / per_epoch as f64,
-                };
-                (xv, m.suboptimality)
-            })
-            .collect()
+    /// The equivalent [`RunSpec`] (what the shimmed [`run`] executes).
+    pub fn to_spec(&self) -> RunSpec {
+        let mut spec = RunSpec::fixed(self.rounds).every(self.record_every);
+        if let Some(t) = self.target_subopt {
+            spec = spec.until(t);
+        }
+        if let Some(s) = &self.schedule {
+            spec = spec.with_schedule(s.clone());
+        }
+        spec
     }
 }
 
-/// Which x-axis a figure uses.
-#[derive(Clone, Copy, Debug)]
-pub enum XAxis {
-    Rounds,
-    GradEvals,
-    Bits,
-    /// Epochs = grad_evals / (n·m batch evals per epoch).
-    Epochs(u64),
-}
-
-/// Drive `alg` under `cfg`, measuring against `x_star`.
+/// Drive `alg` under `cfg`, measuring against `x_star` — the historical
+/// entry point, now a thin shim over [`runner::run_engine`].
+#[deprecated(note = "use Experiment::run(&RunSpec) or runner::run_engine — this shim exists \
+                     for sequence-pinning tests")]
+#[allow(deprecated)]
 pub fn run(
     alg: &mut dyn Algorithm,
     problem: &dyn Problem,
     x_star: &[f64],
     cfg: &RunConfig,
 ) -> RunResult {
-    let start = Instant::now();
-    let mut history = Vec::with_capacity(cfg.rounds / cfg.record_every + 2);
-    let mut rounds_to_target = None;
-
-    // round-0 sample (post-initialization state)
-    history.push(MetricPoint {
-        round: 0,
-        grad_evals: alg.grad_evals(),
-        bits: alg.bits(),
-        suboptimality: suboptimality(alg.x(), x_star),
-        consensus: alg.x().consensus_error(),
-        wall_ns: 0,
-    });
-
-    for k in 0..cfg.rounds {
-        if let Some(s) = &cfg.schedule {
-            alg.apply_hyper(s.hyper_at(k as u64));
-        }
-        alg.step(problem);
-        let due = (k + 1) % cfg.record_every == 0 || k + 1 == cfg.rounds;
-        let mut subopt = f64::NAN;
-        if due || cfg.target_subopt.is_some() {
-            subopt = suboptimality(alg.x(), x_star);
-        }
-        if due {
-            history.push(MetricPoint {
-                round: k + 1,
-                grad_evals: alg.grad_evals(),
-                bits: alg.bits(),
-                suboptimality: subopt,
-                consensus: alg.x().consensus_error(),
-                wall_ns: start.elapsed().as_nanos(),
-            });
-        }
-        if let Some(t) = cfg.target_subopt {
-            if subopt < t {
-                rounds_to_target = Some(k + 1);
-                if !due {
-                    // make sure the stopping state is in the history
-                    history.push(MetricPoint {
-                        round: k + 1,
-                        grad_evals: alg.grad_evals(),
-                        bits: alg.bits(),
-                        suboptimality: subopt,
-                        consensus: alg.x().consensus_error(),
-                        wall_ns: start.elapsed().as_nanos(),
-                    });
-                }
-                break;
-            }
-        }
-        if !alg.x().is_finite() {
-            // diverged — flush the diverged state before breaking
-            // (mirroring the early-stop flush above), so `final_subopt()`
-            // reports the divergence instead of a stale pre-divergence
-            // sample when the break lands between record points
-            if !due {
-                history.push(MetricPoint {
-                    round: k + 1,
-                    grad_evals: alg.grad_evals(),
-                    bits: alg.bits(),
-                    suboptimality: suboptimality(alg.x(), x_star),
-                    consensus: alg.x().consensus_error(),
-                    wall_ns: start.elapsed().as_nanos(),
-                });
-            }
-            break;
-        }
-    }
-
-    RunResult { name: alg.name(), history, rounds_to_target, final_x: alg.x().clone() }
+    runner::run_engine(alg, problem, x_star, &cfg.to_spec(), &mut [])
 }
 
 /// Convenience: rounds needed to hit `target`, or None within the budget.
@@ -192,22 +84,24 @@ pub fn rounds_to(
     target: f64,
     budget: usize,
 ) -> Option<usize> {
-    let cfg = RunConfig::fixed(budget).every(budget.max(1)).until(target);
-    run(alg, problem, x_star, &cfg).rounds_to_target
+    let spec = RunSpec::fixed(budget).every(budget.max(1)).until(target);
+    runner::run_engine(alg, problem, x_star, &spec, &mut []).rounds_to_target()
 }
 
 #[cfg(test)]
 mod tests {
     //! Theorem-level integration tests: the behaviors Theorems 5, 7, 8, 9
-    //! promise, observed end-to-end through the engine. All algorithms are
-    //! constructed through the Experiment builders (the ring_exp fixture
-    //! resolves the same problem/network as the historical ring_logreg).
+    //! promise, observed end-to-end through the engine driver. All
+    //! algorithms are constructed through the Experiment builders (the
+    //! ring_exp fixture resolves the same problem/network as the
+    //! historical ring_logreg).
     use super::*;
     use crate::algorithm::testkit::ring_exp;
     use crate::algorithm::{solve_reference, ProxLead, Schedule};
     use crate::compress::Identity;
     use crate::linalg::Spectrum;
     use crate::oracle::OracleKind;
+    use crate::runner::run_engine;
     use crate::util::stats::loglinear_slope;
 
     #[test]
@@ -220,7 +114,7 @@ mod tests {
         let plateau = |eta: f64| {
             let mut alg =
                 ProxLead::builder(&exp).eta(eta).oracle(OracleKind::Sgd).seed(5).build();
-            let res = run(&mut alg, p, &x_star, &RunConfig::fixed(4000).every(50));
+            let res = run_engine(&mut alg, p, &x_star, &RunSpec::fixed(4000).every(50), &mut []);
             // average the tail — the noise ball level
             let tail: Vec<f64> =
                 res.history.iter().rev().take(20).map(|m| m.suboptimality).collect();
@@ -250,10 +144,16 @@ mod tests {
         };
         let rounds = 20_000;
         let mut fixed = mk();
-        let fixed_res = run(&mut fixed, p, &x_star, &RunConfig::fixed(rounds).every(500));
+        let fixed_res =
+            run_engine(&mut fixed, p, &x_star, &RunSpec::fixed(rounds).every(500), &mut []);
         let mut dim = mk();
-        let dim_res =
-            run(&mut dim, p, &x_star, &RunConfig::fixed(rounds).every(500).with_schedule(schedule));
+        let dim_res = run_engine(
+            &mut dim,
+            p,
+            &x_star,
+            &RunSpec::fixed(rounds).every(500).with_schedule(schedule),
+            &mut [],
+        );
         let f_final = fixed_res.final_subopt();
         let d_final = dim_res.final_subopt();
         assert!(
@@ -275,7 +175,8 @@ mod tests {
                 .prox(Box::new(crate::prox::L1::new(5e-3)))
                 .seed(5)
                 .build();
-            let res = run(&mut alg, p, &x_star, &RunConfig::fixed(8000).every(200));
+            let res =
+                run_engine(&mut alg, p, &x_star, &RunSpec::fixed(8000).every(200), &mut []);
             let ys: Vec<f64> =
                 res.history.iter().map(|m| m.suboptimality).filter(|s| *s > 1e-20).collect();
             let slope = loglinear_slope(&ys);
@@ -291,9 +192,10 @@ mod tests {
         let x_star = solve_reference(p, 0.0, 40_000, 1e-13);
         let mut alg =
             ProxLead::builder(&exp).compressor(Box::new(Identity::f64())).seed(5).build();
-        let res = run(&mut alg, p, &x_star, &RunConfig::fixed(5000).until(1e-8));
-        let hit = res.rounds_to_target.expect("should reach 1e-8");
+        let res = run_engine(&mut alg, p, &x_star, &RunSpec::fixed(5000).until(1e-8), &mut []);
+        let hit = res.rounds_to_target().expect("should reach 1e-8");
         assert!(hit < 2000, "took {hit} rounds");
+        assert_eq!(res.stopped_by, StopReason::TargetSubopt);
         // monotone bookkeeping: bits and grad evals nondecreasing
         for w in res.history.windows(2) {
             assert!(w[1].bits >= w[0].bits);
@@ -311,7 +213,7 @@ mod tests {
             .compressor(Box::new(Identity::f64()))
             .seed(5)
             .build();
-        let res = run(&mut alg, p, &x_star, &RunConfig::fixed(100).every(10));
+        let res = run_engine(&mut alg, p, &x_star, &RunSpec::fixed(100).every(10), &mut []);
         assert_eq!(res.history.len(), 11); // round 0 + 10 samples
         assert_eq!(res.history.last().unwrap().round, 100);
         // series x-axis extraction
@@ -334,9 +236,10 @@ mod tests {
         // η·λ₂ ≫ 2 ⇒ the ridge term alone makes |1 − ηλ₂| > 1: exponential
         // blow-up to ±inf long before round 2000
         let mut alg = Dgd::builder(&exp).eta(1e3).build();
-        let res = run(&mut alg, p, &x_star, &RunConfig::fixed(2000).every(2000));
+        let res = run_engine(&mut alg, p, &x_star, &RunSpec::fixed(2000).every(2000), &mut []);
         let last = res.history.last().expect("history never empty");
         assert!(last.round > 0 && last.round < 2000, "should diverge mid-run: {}", last.round);
+        assert_eq!(res.stopped_by, StopReason::Diverged);
         assert!(
             !res.final_subopt().is_finite(),
             "final_subopt must report the divergence, got {}",
@@ -348,13 +251,31 @@ mod tests {
     }
 
     #[test]
-    fn final_subopt_is_nan_on_empty_history() {
-        let res = RunResult {
-            name: "empty".into(),
-            history: Vec::new(),
-            rounds_to_target: None,
-            final_x: Mat::zeros(1, 1),
+    #[allow(deprecated)]
+    fn deprecated_shim_matches_run_spec_path_bit_for_bit() {
+        // the sequence-pinning contract of the RunConfig shim: identical
+        // MetricPoint sequence and final iterate through both entry points
+        let exp = ring_exp();
+        let p = exp.problem.as_ref();
+        let x_star = solve_reference(p, 0.0, 40_000, 1e-13);
+        let mk = || ProxLead::builder(&exp).seed(5).build();
+        let legacy = {
+            let mut alg = mk();
+            run(&mut alg, p, &x_star, &RunConfig::fixed(120).every(30).until(1e-11))
         };
-        assert!(res.final_subopt().is_nan());
+        let modern = {
+            let mut alg = mk();
+            run_engine(&mut alg, p, &x_star, &RunSpec::fixed(120).every(30).until(1e-11), &mut [])
+        };
+        assert_eq!(legacy.history.len(), modern.history.len());
+        for (a, b) in legacy.history.iter().zip(&modern.history) {
+            assert_eq!(a.round, b.round);
+            assert_eq!(a.bits, b.bits);
+            assert_eq!(a.grad_evals, b.grad_evals);
+            assert_eq!(a.suboptimality.to_bits(), b.suboptimality.to_bits());
+        }
+        assert_eq!(legacy.stopped_by, modern.stopped_by);
+        assert_eq!(legacy.final_x.data, modern.final_x.data);
+        assert_eq!(legacy.rounds_to_target(), modern.rounds_to_target());
     }
 }

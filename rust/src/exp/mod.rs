@@ -21,9 +21,12 @@
 //!    │
 //!    ├── experiment.algorithm()   → Box<dyn Algorithm>   (registry +
 //!    │                              typed builders, see [`registry`])
-//!    ├── experiment.run(&RunConfig)      → engine::run   (matrix form)
-//!    └── experiment.coordinator()        → node threads + wire frames
+//!    ├── experiment.run(&RunSpec)             → matrix engine
+//!    └── experiment.run_coordinator(&RunSpec) → node threads + wire frames
 //! ```
+//!
+//! Both backends speak the one run vocabulary of [`crate::runner`]
+//! (composable stop criteria, streaming probes, unified `RunResult`).
 //!
 //! Adding a scenario (a new problem family, algorithm, topology, or
 //! compressor) means registering it once here — every sweep axis, bench,
@@ -36,13 +39,13 @@ pub use registry::{build_problem, ALGORITHM_NAMES};
 use crate::algorithm::{solve_reference, Algorithm, Hyper};
 use crate::compress::Compressor;
 use crate::config::{Config, ConfigError};
-use crate::coordinator::{self, CoordConfig, CoordResult, Straggler, WireCodec};
-use crate::engine::{self, RunConfig, RunResult};
+use crate::coordinator::{self, CoordConfig, Straggler, WireCodec};
 use crate::graph::{Graph, MixingOp};
 use crate::linalg::Mat;
 use crate::oracle::OracleKind;
 use crate::problem::{Problem, ProblemKind};
 use crate::prox::Prox;
+use crate::runner::{self, Probe, RunResult, RunSpec};
 use std::sync::{Arc, OnceLock};
 use std::time::Duration;
 
@@ -212,31 +215,35 @@ impl Experiment {
         registry::build_algorithm(self, seed).expect("algorithm validated at construction")
     }
 
-    /// Run controls matching the config (`rounds`, `record_every`).
-    pub fn run_config(&self) -> RunConfig {
-        RunConfig::fixed(self.config.rounds).every(self.config.record_every)
+    /// Run controls matching the config (`rounds`, `record_every`) —
+    /// extend with [`RunSpec`] combinators (`until`, `bits_budget`,
+    /// `deadline`, …) before handing to either backend.
+    pub fn run_spec(&self) -> RunSpec {
+        RunSpec::fixed(self.config.rounds).every(self.config.record_every)
     }
 
     /// Drive the configured algorithm through the synchronous matrix
-    /// engine, measuring against the cached reference.
-    pub fn run(&self, cfg: &RunConfig) -> RunResult {
-        let mut alg = self.algorithm();
-        let x_star = self.reference();
-        engine::run(alg.as_mut(), self.problem.as_ref(), &x_star, cfg)
+    /// engine, measuring against the cached reference. `spec.seed`
+    /// overrides the config seed (sweep cells derive per-cell seeds).
+    pub fn run(&self, spec: &RunSpec) -> RunResult {
+        self.run_probed(spec, &mut [])
     }
 
-    /// Coordinator run controls matching the config (rounds, η, codec,
-    /// α/γ, oracle, seed, straggler model).
+    /// [`Experiment::run`] with streaming [`Probe`]s (live CSV, progress
+    /// lines, custom per-round observers).
+    pub fn run_probed(&self, spec: &RunSpec, probes: &mut [&mut dyn Probe]) -> RunResult {
+        let mut alg = self.algorithm_with_seed(spec.seed.unwrap_or(self.config.seed));
+        let x_star = self.reference();
+        runner::run_engine(alg.as_mut(), self.problem.as_ref(), &x_star, spec, probes)
+    }
+
+    /// Wire-level coordinator knobs matching the config (codec, straggler
+    /// model, seed). Rounds/sampling/stops travel in the [`RunSpec`].
     pub fn coord_config(&self) -> CoordConfig {
         let cfg = &self.config;
-        let mut c = CoordConfig::new(cfg.rounds, self.hyper.eta, self.codec());
-        c.record_every = cfg.record_every.max(1);
-        c.alpha = cfg.alpha;
-        c.gamma = cfg.gamma;
-        c.oracle = self.oracle();
-        c.seed = cfg.seed;
+        let mut c = CoordConfig::new(self.codec()).seed(cfg.seed);
         if cfg.straggler_prob > 0.0 {
-            c.straggler = Some(Straggler {
+            c = c.straggler(Straggler {
                 prob: cfg.straggler_prob,
                 delay: Duration::from_micros(cfg.straggler_us),
             });
@@ -245,14 +252,36 @@ impl Experiment {
     }
 
     /// Drive the configured algorithm on node threads (the message-passing
-    /// coordinator) under [`Experiment::coord_config`]. Every `algorithm=`
-    /// registry value runs here — the per-node halves are dispatched by
-    /// [`registry::build_node_algorithm`].
-    pub fn coordinator(&self) -> CoordResult {
-        let ccfg = self.coord_config();
-        coordinator::run(&self.mixing, &self.x0, &ccfg, |i, row| {
-            registry::build_node_algorithm(self, &ccfg, i, row)
-        })
+    /// coordinator) under the same [`RunSpec`] vocabulary as
+    /// [`Experiment::run`] — target/bits/evals/deadline stops reach the
+    /// node threads through the leader's early-stop broadcast. Every
+    /// `algorithm=` registry value runs here — the per-node halves are
+    /// dispatched by [`registry::build_node_algorithm`].
+    pub fn run_coordinator(&self, spec: &RunSpec) -> RunResult {
+        self.run_coordinator_probed(spec, &mut [])
+    }
+
+    /// [`Experiment::run_coordinator`] with streaming [`Probe`]s.
+    pub fn run_coordinator_probed(
+        &self,
+        spec: &RunSpec,
+        probes: &mut [&mut dyn Probe],
+    ) -> RunResult {
+        let mut wire = self.coord_config();
+        if let Some(s) = spec.seed {
+            wire.seed = s;
+        }
+        let x_star = self.reference();
+        coordinator::run(
+            &self.mixing,
+            &self.x0,
+            &self.config.algorithm,
+            &wire,
+            spec,
+            &x_star,
+            probes,
+            |i, row| registry::build_node_algorithm(self, &wire, i, row),
+        )
     }
 }
 
@@ -287,7 +316,7 @@ pub fn validate_config(cfg: &Config) -> Result<(), ConfigError> {
 ///     .nodes(8)
 ///     .set("bits", "2")
 ///     .build()?;
-/// let trace = exp.run(&exp.run_config());
+/// let trace = exp.run(&exp.run_spec());
 /// ```
 pub struct ExperimentBuilder {
     cfg: Config,
@@ -454,10 +483,12 @@ mod tests {
     #[test]
     fn run_drives_the_engine() {
         let exp = Experiment::from_config(&tiny("logreg")).unwrap();
-        let res = exp.run(&exp.run_config());
+        let res = exp.run(&exp.run_spec());
         assert_eq!(res.history.last().unwrap().round, 40);
         assert!(res.final_subopt().is_finite());
         assert!(res.name.starts_with("Prox-LEAD"));
+        assert_eq!(res.backend, crate::runner::Backend::Engine);
+        assert_eq!(res.stopped_by, crate::runner::StopReason::MaxRounds);
     }
 
     #[test]

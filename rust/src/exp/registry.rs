@@ -27,8 +27,8 @@ use crate::algorithm::{
 };
 use crate::config::{Config, ConfigError};
 use crate::coordinator::{
-    ChocoNode, CoordConfig, DgdNode, DualGdNode, NidsNode, NodeAlgorithm, P2d2Node, PdgmNode,
-    PgExtraNode, ProxLeadNode, WeightRow,
+    ChocoNode, CoordConfig, DgdNode, DualGdNode, NidsNode, NodeAlgorithm, NodeHyper, P2d2Node,
+    PdgmNode, PgExtraNode, ProxLeadNode, WeightRow,
 };
 use crate::problem::data::{blobs, regression};
 use crate::problem::{LeastSquares, LogReg, Problem, ProblemKind};
@@ -150,7 +150,7 @@ pub fn build_algorithm(exp: &Experiment, seed: u64) -> Result<Box<dyn Algorithm>
 /// The node-side registry: build node `node`'s half of the experiment's
 /// configured algorithm for the message-passing coordinator. The same name
 /// table and per-family parameter conventions as [`build_algorithm`] —
-/// `Experiment::coordinator()` hands this to `coordinator::run` as the
+/// `Experiment::run_coordinator` hands this to `coordinator::run` as the
 /// per-node factory, so `train`, sweeps, and the wire-bytes bench accept
 /// every `algorithm=` value.
 ///
@@ -161,7 +161,7 @@ pub fn build_algorithm(exp: &Experiment, seed: u64) -> Result<Box<dyn Algorithm>
 /// compressor.
 pub fn build_node_algorithm(
     exp: &Experiment,
-    ccfg: &CoordConfig,
+    wire: &CoordConfig,
     node: usize,
     row: WeightRow,
 ) -> Box<dyn NodeAlgorithm> {
@@ -169,23 +169,29 @@ pub fn build_node_algorithm(
     let p = Arc::clone(&exp.problem);
     let prox: Arc<dyn Prox> = Arc::from(exp.prox());
     let x0 = &exp.x0;
+    // the engine's Hyper + oracle, restated per node (η resolved by the
+    // experiment; the wire config carries codec/seed)
+    let h = &NodeHyper::new(exp.hyper.eta)
+        .alpha(exp.config.alpha)
+        .gamma(exp.config.gamma)
+        .oracle(exp.oracle());
     match exp.config.algorithm.as_str() {
-        "prox-lead" | "proxlead" => Box::new(ProxLeadNode::new(p, prox, x0, row, ccfg)),
-        "lead" => Box::new(ProxLeadNode::new(p, Arc::new(Zero), x0, row, ccfg)),
-        "dgd" | "prox-dgd" => Box::new(DgdNode::new(p, prox, x0, row, ccfg)),
-        "choco" => Box::new(ChocoNode::new(p, prox, x0, row, ccfg)),
-        "nids" => Box::new(NidsNode::new(p, prox, x0, row, ccfg)),
-        "p2d2" => Box::new(P2d2Node::new(p, prox, x0, row, ccfg)),
-        "pg-extra" | "pgextra" => Box::new(PgExtraNode::new(p, prox, x0, row, ccfg)),
+        "prox-lead" | "proxlead" => Box::new(ProxLeadNode::new(p, prox, x0, row, h, wire)),
+        "lead" => Box::new(ProxLeadNode::new(p, Arc::new(Zero), x0, row, h, wire)),
+        "dgd" | "prox-dgd" => Box::new(DgdNode::new(p, prox, x0, row, h, wire)),
+        "choco" => Box::new(ChocoNode::new(p, prox, x0, row, h, wire)),
+        "nids" => Box::new(NidsNode::new(p, prox, x0, row, h, wire)),
+        "p2d2" => Box::new(P2d2Node::new(p, prox, x0, row, h, wire)),
+        "pg-extra" | "pgextra" => Box::new(PgExtraNode::new(p, prox, x0, row, h, wire)),
         "pdgm" | "lessbit-b" => {
             // θ = γ/(2η), the PDHG view — the same helper the PdgmBuilder
             // defaults through
-            let theta = pdgm_default_theta(ccfg.eta, ccfg.gamma);
-            Box::new(PdgmNode::new(p, x0, row, theta, ccfg))
+            let theta = pdgm_default_theta(h.eta, h.gamma);
+            Box::new(PdgmNode::new(p, x0, row, theta, h, wire))
         }
         "dualgd" | "lessbit-a" => {
-            let theta = dualgd_theta(exp, ccfg.codec.is_lossy());
-            Box::new(DualGdNode::new(p, x0, row, theta, DUALGD_INNER_ITERS, ccfg))
+            let theta = dualgd_theta(exp, wire.codec.is_lossy());
+            Box::new(DualGdNode::new(p, x0, row, theta, DUALGD_INNER_ITERS, h, wire))
         }
         a => unreachable!("algorithm '{a}' validated at Experiment construction"),
     }

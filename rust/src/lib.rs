@@ -29,6 +29,7 @@ pub mod linalg;
 pub mod oracle;
 pub mod problem;
 pub mod prox;
+pub mod runner;
 pub mod runtime;
 pub mod sweep;
 pub mod util;

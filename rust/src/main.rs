@@ -13,11 +13,13 @@
 //! Every subcommand resolves its configuration through the one
 //! [`Experiment`] pipeline — no per-command factory wiring.
 
-use proxlead::algorithm::{solve_reference, suboptimality};
+use proxlead::algorithm::solve_reference;
 use proxlead::cli::{self, Invocation, USAGE};
 use proxlead::exp::Experiment;
 use proxlead::problem::Problem;
+use proxlead::runner::{CsvProbe, Probe, ProgressProbe, RunSpec};
 use proxlead::runtime::{default_artifact_dir, PjrtRuntime};
+use std::time::Duration;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -57,14 +59,50 @@ fn resolve(inv: &Invocation) -> Result<Experiment, i32> {
     })
 }
 
+/// Parse the train stop flags into the run spec (composable; any subset).
+fn train_spec(inv: &Invocation, exp: &Experiment) -> Result<RunSpec, String> {
+    let mut spec = exp.run_spec();
+    for (key, val) in &inv.extra {
+        spec = match key.as_str() {
+            "target" => match val.parse::<f64>() {
+                Ok(t) if t > 0.0 => spec.until(t),
+                _ => return Err(format!("--target needs a positive float (got '{val}')")),
+            },
+            "max-bits" => match val.parse::<u64>() {
+                Ok(b) if b > 0 => spec.bits_budget(b),
+                _ => return Err(format!("--max-bits needs a positive integer (got '{val}')")),
+            },
+            "max-grad-evals" => match val.parse::<u64>() {
+                Ok(g) if g > 0 => spec.grad_evals_budget(g),
+                _ => {
+                    return Err(format!("--max-grad-evals needs a positive integer (got '{val}')"))
+                }
+            },
+            "deadline-ms" => match val.parse::<u64>() {
+                Ok(ms) => spec.deadline(Duration::from_millis(ms)),
+                _ => return Err(format!("--deadline-ms needs an integer (got '{val}')")),
+            },
+            _ => return Err(format!("unrecognized or invalid flag --{key} {val}\n\n{USAGE}")),
+        };
+    }
+    Ok(spec)
+}
+
 fn cmd_train(inv: &Invocation) -> i32 {
     let cfg = &inv.config;
     let exp = match resolve(inv) {
         Ok(e) => e,
         Err(code) => return code,
     };
+    let spec = match train_spec(inv, &exp) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
     // power iteration: O(nnz) per step, fine at any n (no dense eigensolve)
-    let spec = exp.mixing.gap_estimate();
+    let gap = exp.mixing.gap_estimate();
     println!(
         "proxlead train: {} on {} | {} nodes ({}, {}, {}) | {} | η={:.4} α={} γ={}",
         cfg.algorithm,
@@ -83,34 +121,31 @@ fn cmd_train(inv: &Invocation) -> i32 {
         exp.problem.kappa_f(),
         // ≈ when power iteration exhausted its budget (near-degenerate
         // spectral edge, e.g. very large rings) — estimate, not exact
-        if spec.converged { "=" } else { "≈" },
-        spec.kappa_g(),
+        if gap.converged { "=" } else { "≈" },
+        gap.kappa_g(),
         if cfg.shuffled { "shuffled (iid)" } else { "sorted (non-iid)" }
     );
 
     // reference for the suboptimality metric (cached on the experiment)
     eprint!("solving reference x*… ");
-    let x_star = exp.reference();
+    let _ = exp.reference();
     eprintln!("done");
 
-    let res = exp.coordinator();
-
-    println!("round      subopt        consensus     Mbits    grad-evals");
-    let mut csv = String::from("round,suboptimality,consensus,bits,grad_evals\n");
-    for (round, x, bits, evals) in &res.snapshots {
-        let s = suboptimality(x, &x_star);
-        let c = x.consensus_error();
-        println!("{round:>6} {s:>13.4e} {c:>13.4e} {:>8.2} {evals:>10}", *bits as f64 / 1e6);
-        csv.push_str(&format!("{round},{s:.6e},{c:.6e},{bits},{evals}\n"));
-    }
-    println!(
-        "elapsed {:.2?} | wire {} KiB | final suboptimality {:.3e}",
-        res.elapsed,
-        res.wire_bytes / 1024,
-        suboptimality(res.final_x(), &x_star)
-    );
-    if !cfg.out.is_empty() {
-        std::fs::write(&cfg.out, csv).expect("write csv");
+    // metrics stream while the run is in flight: progress lines always,
+    // live CSV when --out is set (a killed run keeps its rows)
+    let mut progress = ProgressProbe::new();
+    if cfg.out.is_empty() {
+        exp.run_coordinator_probed(&spec, &mut [&mut progress]);
+    } else {
+        let mut csv = match CsvProbe::to_path(&cfg.out) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("open {}: {e}", cfg.out);
+                return 1;
+            }
+        };
+        let probes: &mut [&mut dyn Probe] = &mut [&mut progress, &mut csv];
+        exp.run_coordinator_probed(&spec, probes);
         println!("wrote {}", cfg.out);
     }
     0

@@ -1,0 +1,689 @@
+//! The one run API — every backend, every consumer.
+//!
+//! The paper's central claim is that Prox-LEAD "reduces the communication
+//! cost almost for free"; measuring that requires runs that stop on
+//! *communication* budgets, not just round counts. This module owns the
+//! whole run vocabulary, shared by the synchronous matrix engine and the
+//! message-passing coordinator:
+//!
+//! ```text
+//! RunSpec {
+//!    stop: StopSet            — max rounds, target suboptimality,
+//!                               cumulative-bits budget, grad-evals budget,
+//!                               wall-clock deadline; ANY combination,
+//!                               first hit wins
+//!    record_every, schedule, seed
+//! }
+//!    │
+//!    ├── Experiment::run(&spec)              → engine  (matrix form)
+//!    └── Experiment::run_coordinator(&spec)  → node threads + wire frames
+//!              │
+//!              ▼   streaming, while the run is in flight
+//!        Probe::on_sample(&MetricPoint)      — live CSV, progress lines, …
+//!        Probe::on_iterate(round, &Mat)      — the stacked iterate Xᵏ
+//!        Probe::on_finish(&RunOutcome)
+//!              │
+//!              ▼
+//! RunResult { backend, history: Vec<MetricPoint>, stopped_by: StopReason,
+//!             elapsed, final_x }             — ONE shape for both backends
+//! ```
+//!
+//! **Stop granularity.** The engine evaluates the [`StopSet`] after every
+//! round (all counters are local). The coordinator's leader only observes
+//! the network at recorded snapshots, so budget/target/deadline stops fire
+//! at `record_every` granularity there — set `record_every = 1` for
+//! round-exact budget stops (and for bit-identical engine ↔ coordinator
+//! stop rounds, which `rust/tests/run_api.rs` pins under `Dense64`).
+//!
+//! The deprecated shims ([`crate::engine::RunConfig`],
+//! [`crate::coordinator::run_prox_lead`]) forward here and exist only for
+//! sequence-pinning tests.
+
+pub mod probe;
+
+pub use probe::{CsvProbe, Probe, ProgressProbe};
+
+use crate::algorithm::{suboptimality, Algorithm, Schedule};
+use crate::linalg::Mat;
+use crate::problem::Problem;
+use std::time::{Duration, Instant};
+
+/// One recorded metric sample — the row behind every figure in §5
+/// (suboptimality vs rounds | epochs | gradient evaluations | bits).
+#[derive(Clone, Copy, Debug)]
+pub struct MetricPoint {
+    /// Round index (1-based after the step executes; 0 = post-init state).
+    pub round: usize,
+    /// Cumulative batch-gradient evaluations across all nodes.
+    pub grad_evals: u64,
+    /// Cumulative communicated payload bits across all nodes (the
+    /// entropy-coded accounting the figures plot).
+    pub bits: u64,
+    /// Cumulative framed wire bytes across all nodes (headers included).
+    /// Real serialized bytes on the coordinator; 0 on the matrix engine,
+    /// whose communication is an accounting model, not a wire.
+    pub wire_bytes: u64,
+    /// ‖Xᵏ − 1(x*)ᵀ‖²/n vs the reference solution.
+    pub suboptimality: f64,
+    /// Σᵢ ‖xᵢ − x̄‖² consensus error.
+    pub consensus: f64,
+    /// Wall-clock since run start.
+    pub wall_ns: u128,
+}
+
+/// Which criterion ended a run (recorded in [`RunResult::stopped_by`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    /// The round budget ran out (the default end of a run).
+    MaxRounds,
+    /// Suboptimality fell below [`StopSet::target_subopt`].
+    TargetSubopt,
+    /// Cumulative payload bits reached [`StopSet::max_bits`].
+    BitsBudget,
+    /// Cumulative gradient evaluations reached [`StopSet::max_grad_evals`].
+    GradEvalsBudget,
+    /// Wall-clock passed [`StopSet::deadline`].
+    Deadline,
+    /// The iterate went non-finite (the run is flushed, then abandoned).
+    Diverged,
+}
+
+impl StopReason {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StopReason::MaxRounds => "max-rounds",
+            StopReason::TargetSubopt => "target-subopt",
+            StopReason::BitsBudget => "bits-budget",
+            StopReason::GradEvalsBudget => "grad-evals-budget",
+            StopReason::Deadline => "deadline",
+            StopReason::Diverged => "diverged",
+        }
+    }
+}
+
+/// Composable stop criteria: any combination, first hit wins. Ties within
+/// one evaluation are broken in the fixed order target-subopt → bits →
+/// grad-evals → deadline → max-rounds (divergence is detected separately
+/// and beats them all).
+#[derive(Clone, Copy, Debug)]
+pub struct StopSet {
+    /// Hard round cap — always present; the other criteria are optional.
+    pub max_rounds: usize,
+    /// Stop once suboptimality falls below this.
+    pub target_subopt: Option<f64>,
+    /// Stop once cumulative payload bits (all nodes) reach this budget.
+    pub max_bits: Option<u64>,
+    /// Stop once cumulative gradient evaluations reach this budget.
+    pub max_grad_evals: Option<u64>,
+    /// Stop once this much wall-clock has elapsed.
+    pub deadline: Option<Duration>,
+}
+
+impl StopSet {
+    /// A pure round cap — combinators add the optional criteria.
+    pub fn rounds(max_rounds: usize) -> StopSet {
+        StopSet {
+            max_rounds,
+            target_subopt: None,
+            max_bits: None,
+            max_grad_evals: None,
+            deadline: None,
+        }
+    }
+
+    /// First criterion hit by the given counters, if any (see the ordering
+    /// contract on [`StopSet`]). `subopt` may be NaN when the caller did
+    /// not measure it — NaN never triggers the target.
+    pub fn check(
+        &self,
+        round: usize,
+        bits: u64,
+        grad_evals: u64,
+        subopt: f64,
+        elapsed: Duration,
+    ) -> Option<StopReason> {
+        if let Some(t) = self.target_subopt {
+            if subopt < t {
+                return Some(StopReason::TargetSubopt);
+            }
+        }
+        if let Some(b) = self.max_bits {
+            if bits >= b {
+                return Some(StopReason::BitsBudget);
+            }
+        }
+        if let Some(g) = self.max_grad_evals {
+            if grad_evals >= g {
+                return Some(StopReason::GradEvalsBudget);
+            }
+        }
+        if let Some(d) = self.deadline {
+            if elapsed >= d {
+                return Some(StopReason::Deadline);
+            }
+        }
+        if round >= self.max_rounds {
+            return Some(StopReason::MaxRounds);
+        }
+        None
+    }
+
+    /// True when suboptimality must be measured every evaluation (an early
+    /// target is set).
+    pub fn needs_subopt(&self) -> bool {
+        self.target_subopt.is_some()
+    }
+
+    /// True when the coordinator's leader must gate node threads at
+    /// checkpoints (any criterion beyond the round cap — those need
+    /// leader-side observation plus an early-stop broadcast).
+    pub fn leader_gated(&self) -> bool {
+        self.target_subopt.is_some()
+            || self.max_bits.is_some()
+            || self.max_grad_evals.is_some()
+            || self.deadline.is_some()
+    }
+}
+
+/// Run controls shared by both backends.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    pub stop: StopSet,
+    /// Sample the metrics every this many rounds (1 = every round; the
+    /// final round is always sampled). Must be ≥ 1.
+    pub record_every: usize,
+    /// Stepsize schedule applied before every round (Theorem 7 etc.).
+    /// Engine-only: the coordinator's node halves run fixed
+    /// hyperparameters, and `run_coordinator` rejects a schedule.
+    pub schedule: Option<Schedule>,
+    /// Algorithm RNG seed override (None ⇒ the experiment's config seed).
+    /// Sweep cells derive theirs from the cell index.
+    pub seed: Option<u64>,
+}
+
+impl RunSpec {
+    /// Run for exactly `rounds` rounds, sampling every round.
+    pub fn fixed(rounds: usize) -> RunSpec {
+        RunSpec { stop: StopSet::rounds(rounds), record_every: 1, schedule: None, seed: None }
+    }
+
+    pub fn every(mut self, k: usize) -> RunSpec {
+        self.record_every = k.max(1);
+        self
+    }
+
+    /// Stop early once suboptimality falls below `subopt`.
+    pub fn until(mut self, subopt: f64) -> RunSpec {
+        self.stop.target_subopt = Some(subopt);
+        self
+    }
+
+    /// Stop once cumulative payload bits reach `bits`.
+    pub fn bits_budget(mut self, bits: u64) -> RunSpec {
+        self.stop.max_bits = Some(bits);
+        self
+    }
+
+    /// Stop once cumulative gradient evaluations reach `evals`.
+    pub fn grad_evals_budget(mut self, evals: u64) -> RunSpec {
+        self.stop.max_grad_evals = Some(evals);
+        self
+    }
+
+    /// Stop once `d` of wall-clock has elapsed.
+    pub fn deadline(mut self, d: Duration) -> RunSpec {
+        self.stop.deadline = Some(d);
+        self
+    }
+
+    pub fn with_schedule(mut self, s: Schedule) -> RunSpec {
+        self.schedule = Some(s);
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> RunSpec {
+        self.seed = Some(seed);
+        self
+    }
+}
+
+/// Which runtime produced a [`RunResult`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// The synchronous matrix engine (single thread, accounting model).
+    Engine,
+    /// The message-passing coordinator (node threads, real framed bytes).
+    Coordinator,
+}
+
+impl Backend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Engine => "engine",
+            Backend::Coordinator => "coordinator",
+        }
+    }
+}
+
+/// The full trace of one run — the ONE shape both backends return.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    /// Display name: the algorithm's `name()` on the engine, the config's
+    /// `algorithm` key on the coordinator.
+    pub name: String,
+    pub backend: Backend,
+    pub history: Vec<MetricPoint>,
+    /// The criterion that ended the run (first hit wins).
+    pub stopped_by: StopReason,
+    /// Total wall-clock.
+    pub elapsed: Duration,
+    /// The final stacked iterate (n × p).
+    pub final_x: Mat,
+}
+
+impl RunResult {
+    pub fn final_subopt(&self) -> f64 {
+        self.history.last().map_or(f64::NAN, |m| m.suboptimality)
+    }
+
+    /// First round at which the suboptimality target was met, if the run
+    /// stopped on it (the target beats every other criterion at the same
+    /// evaluation, so the last recorded round *is* the hit round).
+    pub fn rounds_to_target(&self) -> Option<usize> {
+        match self.stopped_by {
+            StopReason::TargetSubopt => self.history.last().map(|m| m.round),
+            _ => None,
+        }
+    }
+
+    /// Total framed wire bytes (0 for engine runs).
+    pub fn wire_bytes(&self) -> u64 {
+        self.history.last().map_or(0, |m| m.wire_bytes)
+    }
+
+    /// Series (x_metric, suboptimality) for the figure CSVs.
+    pub fn series(&self, x: XAxis) -> Vec<(f64, f64)> {
+        if let XAxis::Epochs(per_epoch) = x {
+            // a 0 divisor would silently produce inf/NaN x-coordinates in
+            // every figure CSV downstream — fail loudly instead
+            assert!(per_epoch > 0, "XAxis::Epochs needs per_epoch >= 1 (n·m batch evals)");
+        }
+        self.history
+            .iter()
+            .map(|m| {
+                let xv = match x {
+                    XAxis::Rounds => m.round as f64,
+                    XAxis::GradEvals => m.grad_evals as f64,
+                    XAxis::Bits => m.bits as f64,
+                    XAxis::Epochs(per_epoch) => m.grad_evals as f64 / per_epoch as f64,
+                };
+                (xv, m.suboptimality)
+            })
+            .collect()
+    }
+
+    /// The flat end-of-run summary handed to [`Probe::on_finish`].
+    pub fn outcome(&self) -> RunOutcome {
+        let last = self.history.last();
+        RunOutcome {
+            name: self.name.clone(),
+            backend: self.backend,
+            stopped_by: self.stopped_by,
+            rounds: last.map_or(0, |m| m.round),
+            final_subopt: self.final_subopt(),
+            grad_evals: last.map_or(0, |m| m.grad_evals),
+            bits: last.map_or(0, |m| m.bits),
+            wire_bytes: last.map_or(0, |m| m.wire_bytes),
+            elapsed: self.elapsed,
+        }
+    }
+}
+
+/// Which x-axis a figure uses.
+#[derive(Clone, Copy, Debug)]
+pub enum XAxis {
+    Rounds,
+    GradEvals,
+    Bits,
+    /// Epochs = grad_evals / (n·m batch evals per epoch). The divisor must
+    /// be ≥ 1 — [`RunResult::series`] panics on 0.
+    Epochs(u64),
+}
+
+/// End-of-run summary, streamed to [`Probe::on_finish`] and printed by the
+/// built-in progress probe and the sweep runtime's per-cell lines.
+#[derive(Clone, Debug)]
+pub struct RunOutcome {
+    pub name: String,
+    pub backend: Backend,
+    pub stopped_by: StopReason,
+    /// Last recorded round.
+    pub rounds: usize,
+    pub final_subopt: f64,
+    pub grad_evals: u64,
+    pub bits: u64,
+    pub wire_bytes: u64,
+    pub elapsed: Duration,
+}
+
+impl RunOutcome {
+    /// One human-readable line: name, backend, final state, stop reason.
+    pub fn summary_line(&self) -> String {
+        let wire = if self.wire_bytes > 0 {
+            format!(" | wire {} KiB", self.wire_bytes / 1024)
+        } else {
+            String::new()
+        };
+        format!(
+            "{} [{}] subopt {:.3e} @ round {} | {:.2} Mbit{wire} | stopped by {} | {:.2?}",
+            self.name,
+            self.backend.name(),
+            self.final_subopt,
+            self.rounds,
+            self.bits as f64 / 1e6,
+            self.stopped_by.name(),
+            self.elapsed,
+        )
+    }
+}
+
+/// Push one sample into the history and stream it to every probe — the
+/// one emit path both backends use (the coordinator's leader calls this
+/// per flushed snapshot).
+pub(crate) fn emit(
+    m: MetricPoint,
+    x: &Mat,
+    history: &mut Vec<MetricPoint>,
+    probes: &mut [&mut dyn Probe],
+) {
+    history.push(m);
+    for p in probes.iter_mut() {
+        p.on_sample(&m);
+        p.on_iterate(m.round, x);
+    }
+}
+
+/// Deliver the end-of-run summary to every probe (both backends' shared
+/// epilogue).
+pub(crate) fn finish(result: &RunResult, probes: &mut [&mut dyn Probe]) {
+    let outcome = result.outcome();
+    for p in probes.iter_mut() {
+        p.on_finish(&outcome);
+    }
+}
+
+/// Drive `alg` through the synchronous matrix engine under `spec`,
+/// measuring against `x_star` and streaming samples to `probes`. The
+/// [`StopSet`] is evaluated after every round. `spec.seed` is resolved by
+/// the caller (the algorithm arrives constructed); see
+/// [`crate::exp::Experiment::run`] for the seed-resolving entry point.
+pub fn run_engine(
+    alg: &mut dyn Algorithm,
+    problem: &dyn Problem,
+    x_star: &[f64],
+    spec: &RunSpec,
+    probes: &mut [&mut dyn Probe],
+) -> RunResult {
+    assert!(
+        spec.record_every >= 1,
+        "record_every must be >= 1 (0 would divide by zero sizing the history)"
+    );
+    let start = Instant::now();
+    let rounds = spec.stop.max_rounds;
+    let mut history: Vec<MetricPoint> = Vec::with_capacity(rounds / spec.record_every + 2);
+    let mut stopped_by = StopReason::MaxRounds;
+
+    // round-0 sample (post-initialization state)
+    emit(
+        MetricPoint {
+            round: 0,
+            grad_evals: alg.grad_evals(),
+            bits: alg.bits(),
+            wire_bytes: 0,
+            suboptimality: suboptimality(alg.x(), x_star),
+            consensus: alg.x().consensus_error(),
+            wall_ns: 0,
+        },
+        alg.x(),
+        &mut history,
+        probes,
+    );
+
+    for k in 0..rounds {
+        if let Some(s) = &spec.schedule {
+            alg.apply_hyper(s.hyper_at(k as u64));
+        }
+        alg.step(problem);
+        let round = k + 1;
+        let due = round % spec.record_every == 0 || round == rounds;
+        let mut subopt = f64::NAN;
+        if due || spec.stop.needs_subopt() {
+            subopt = suboptimality(alg.x(), x_star);
+        }
+        let elapsed = start.elapsed();
+        let sample = |subopt: f64, alg: &dyn Algorithm| MetricPoint {
+            round,
+            grad_evals: alg.grad_evals(),
+            bits: alg.bits(),
+            wire_bytes: 0,
+            suboptimality: subopt,
+            consensus: alg.x().consensus_error(),
+            wall_ns: elapsed.as_nanos(),
+        };
+        if due {
+            emit(sample(subopt, &*alg), alg.x(), &mut history, probes);
+        }
+        // divergence beats every stop criterion (the documented contract,
+        // matching the coordinator's leader), and the diverged state is
+        // flushed before breaking so final_subopt() reports it instead of
+        // a stale pre-divergence sample between record points
+        let hit = if !alg.x().is_finite() {
+            Some(StopReason::Diverged)
+        } else {
+            spec.stop.check(round, alg.bits(), alg.grad_evals(), subopt, elapsed)
+        };
+        if let Some(reason) = hit {
+            stopped_by = reason;
+            if !due {
+                // make sure the stopping state is in the history, with a
+                // measured suboptimality even when only a budget criterion
+                // demanded the stop
+                let s = if subopt.is_nan() { suboptimality(alg.x(), x_star) } else { subopt };
+                emit(sample(s, &*alg), alg.x(), &mut history, probes);
+            }
+            break;
+        }
+    }
+
+    let result = RunResult {
+        name: alg.name(),
+        backend: Backend::Engine,
+        history,
+        stopped_by,
+        elapsed: start.elapsed(),
+        final_x: alg.x().clone(),
+    };
+    finish(&result, probes);
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithm::testkit::ring_exp;
+    use crate::algorithm::{solve_reference, ProxLead};
+    use crate::compress::Identity;
+
+    fn exact_prox_lead(exp: &crate::exp::Experiment) -> Box<dyn Algorithm> {
+        Box::new(ProxLead::builder(exp).compressor(Box::new(Identity::f64())).seed(5).build())
+    }
+
+    #[test]
+    fn stop_set_order_is_target_bits_evals_deadline_rounds() {
+        let s = StopSet {
+            max_rounds: 10,
+            target_subopt: Some(1e-3),
+            max_bits: Some(100),
+            max_grad_evals: Some(100),
+            deadline: Some(Duration::from_secs(1)),
+        };
+        let hit = |sub: f64, bits, evals, el| s.check(10, bits, evals, sub, el);
+        assert_eq!(hit(1e-4, 100, 100, Duration::from_secs(2)), Some(StopReason::TargetSubopt));
+        assert_eq!(hit(1.0, 100, 100, Duration::from_secs(2)), Some(StopReason::BitsBudget));
+        assert_eq!(hit(1.0, 0, 100, Duration::from_secs(2)), Some(StopReason::GradEvalsBudget));
+        assert_eq!(hit(1.0, 0, 0, Duration::from_secs(2)), Some(StopReason::Deadline));
+        assert_eq!(hit(1.0, 0, 0, Duration::ZERO), Some(StopReason::Deadline));
+        assert_eq!(
+            StopSet::rounds(10).check(10, 0, 0, f64::NAN, Duration::ZERO),
+            Some(StopReason::MaxRounds)
+        );
+        assert_eq!(StopSet::rounds(10).check(9, 0, 0, f64::NAN, Duration::ZERO), None);
+        // NaN suboptimality never triggers the target
+        assert_eq!(
+            s.check(1, 0, 0, f64::NAN, Duration::ZERO),
+            None,
+            "NaN must not satisfy the target"
+        );
+    }
+
+    #[test]
+    fn bits_budget_stops_the_engine_early() {
+        let exp = ring_exp();
+        let x_star = vec![0.0; exp.problem.dim()];
+        let mut alg = exact_prox_lead(&exp);
+        // one round moves n·p·64 bits exactly (Dense64-equivalent)
+        let per_round = (exp.config.nodes * exp.problem.dim() * 64) as u64;
+        let spec = RunSpec::fixed(100).bits_budget(3 * per_round);
+        let res = run_engine(alg.as_mut(), exp.problem.as_ref(), &x_star, &spec, &mut []);
+        assert_eq!(res.stopped_by, StopReason::BitsBudget);
+        assert_eq!(res.history.last().unwrap().round, 3);
+        assert_eq!(res.history.last().unwrap().bits, 3 * per_round);
+        assert!(res.rounds_to_target().is_none());
+    }
+
+    #[test]
+    fn grad_evals_budget_stops_the_engine_early() {
+        let exp = ring_exp();
+        let x_star = vec![0.0; exp.problem.dim()];
+        let mut alg = exact_prox_lead(&exp);
+        let init = alg.grad_evals(); // construction cost (full grad at X⁰)
+        let spec = RunSpec::fixed(500).grad_evals_budget(init * 4);
+        let res = run_engine(alg.as_mut(), exp.problem.as_ref(), &x_star, &spec, &mut []);
+        assert_eq!(res.stopped_by, StopReason::GradEvalsBudget);
+        let last = res.history.last().unwrap();
+        assert!(last.round < 500, "budget must bite early, ran to {}", last.round);
+        assert!(last.grad_evals >= init * 4);
+    }
+
+    #[test]
+    fn deadline_stops_the_engine() {
+        let exp = ring_exp();
+        let x_star = vec![0.0; exp.problem.dim()];
+        let mut alg = exact_prox_lead(&exp);
+        let spec = RunSpec::fixed(1_000_000).deadline(Duration::ZERO);
+        let res = run_engine(alg.as_mut(), exp.problem.as_ref(), &x_star, &spec, &mut []);
+        assert_eq!(res.stopped_by, StopReason::Deadline);
+        assert_eq!(res.history.last().unwrap().round, 1);
+    }
+
+    #[test]
+    fn target_stop_records_reason_and_round() {
+        let exp = ring_exp();
+        let p = exp.problem.as_ref();
+        let x_star = solve_reference(p, 0.0, 40_000, 1e-13);
+        let mut alg = exact_prox_lead(&exp);
+        let res = run_engine(alg.as_mut(), p, &x_star, &RunSpec::fixed(5000).until(1e-8), &mut []);
+        assert_eq!(res.stopped_by, StopReason::TargetSubopt);
+        let hit = res.rounds_to_target().expect("target reached");
+        assert!(hit < 2000, "took {hit} rounds");
+        assert_eq!(hit, res.history.last().unwrap().round);
+        assert!(res.final_subopt() < 1e-8);
+    }
+
+    #[test]
+    fn completed_runs_report_max_rounds() {
+        let exp = ring_exp();
+        let x_star = vec![0.0; exp.problem.dim()];
+        let mut alg = exact_prox_lead(&exp);
+        let res =
+            run_engine(alg.as_mut(), exp.problem.as_ref(), &x_star, &RunSpec::fixed(10), &mut []);
+        assert_eq!(res.stopped_by, StopReason::MaxRounds);
+        assert_eq!(res.backend, Backend::Engine);
+        assert_eq!(res.history.last().unwrap().round, 10);
+        assert_eq!(res.wire_bytes(), 0, "the engine models bits, not framed bytes");
+    }
+
+    #[test]
+    #[should_panic(expected = "record_every must be >= 1")]
+    fn record_every_zero_is_a_clear_error() {
+        // regression: a literal-constructed spec with record_every = 0 used
+        // to divide by zero at the history-capacity computation
+        let exp = ring_exp();
+        let x_star = vec![0.0; exp.problem.dim()];
+        let mut alg = exact_prox_lead(&exp);
+        let spec = RunSpec { record_every: 0, ..RunSpec::fixed(10) };
+        let _ = run_engine(alg.as_mut(), exp.problem.as_ref(), &x_star, &spec, &mut []);
+    }
+
+    #[test]
+    #[should_panic(expected = "per_epoch >= 1")]
+    fn epochs_axis_rejects_zero_divisor() {
+        // regression: XAxis::Epochs(0) divided by zero, writing inf/NaN
+        // x-coordinates into the figure CSVs
+        let res = RunResult {
+            name: "x".into(),
+            backend: Backend::Engine,
+            history: vec![MetricPoint {
+                round: 1,
+                grad_evals: 10,
+                bits: 1,
+                wire_bytes: 0,
+                suboptimality: 0.5,
+                consensus: 0.0,
+                wall_ns: 0,
+            }],
+            stopped_by: StopReason::MaxRounds,
+            elapsed: Duration::ZERO,
+            final_x: Mat::zeros(1, 1),
+        };
+        let _ = res.series(XAxis::Epochs(0));
+    }
+
+    #[test]
+    fn probes_stream_samples_and_finish() {
+        #[derive(Default)]
+        struct Counter {
+            samples: usize,
+            iterates: usize,
+            finished: Option<StopReason>,
+        }
+        impl Probe for Counter {
+            fn on_sample(&mut self, _m: &MetricPoint) {
+                self.samples += 1;
+            }
+            fn on_iterate(&mut self, _round: usize, _x: &Mat) {
+                self.iterates += 1;
+            }
+            fn on_finish(&mut self, o: &RunOutcome) {
+                self.finished = Some(o.stopped_by);
+            }
+        }
+        let exp = ring_exp();
+        let x_star = vec![0.0; exp.problem.dim()];
+        let mut alg = exact_prox_lead(&exp);
+        let mut c = Counter::default();
+        let res = run_engine(
+            alg.as_mut(),
+            exp.problem.as_ref(),
+            &x_star,
+            &RunSpec::fixed(40).every(10),
+            &mut [&mut c],
+        );
+        assert_eq!(res.history.len(), 5); // round 0 + 4 samples
+        assert_eq!(c.samples, 5);
+        assert_eq!(c.iterates, 5);
+        assert_eq!(c.finished, Some(StopReason::MaxRounds));
+        let line = res.outcome().summary_line();
+        assert!(line.contains("max-rounds") && line.contains("engine"), "{line}");
+    }
+}

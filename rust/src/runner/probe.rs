@@ -1,0 +1,157 @@
+//! Streaming run probes: metrics observed *during* a run instead of only
+//! materializing after it.
+//!
+//! Both backends call every probe at each recorded sample (the engine on
+//! its thread, the coordinator on the leader thread as node reports
+//! complete a round) and once at the end. Built-ins cover the two outputs
+//! the CLI and sweep runtime used to assemble by hand: live CSV emission
+//! ([`CsvProbe`]) and progress lines ([`ProgressProbe`]).
+
+use super::{MetricPoint, RunOutcome};
+use crate::linalg::Mat;
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+
+/// Observer of a run in flight. All methods default to no-ops so a probe
+/// implements only what it needs.
+pub trait Probe {
+    /// A recorded metric sample (round 0 = post-init state).
+    fn on_sample(&mut self, _m: &MetricPoint) {}
+
+    /// The stacked iterate Xᵏ (n × p) at a recorded sample, delivered
+    /// right after [`Probe::on_sample`] for the same round — for
+    /// checkpointing, per-round loss/accuracy, or custom diagnostics.
+    fn on_iterate(&mut self, _round: usize, _x: &Mat) {}
+
+    /// The run finished (any stop reason); flush buffers here.
+    fn on_finish(&mut self, _outcome: &RunOutcome) {}
+}
+
+/// Streams one CSV row per sample:
+/// `round,suboptimality,consensus,bits,wire_bytes,grad_evals`.
+///
+/// Rows hit the writer as the run progresses (a killed run keeps every
+/// sample already emitted); the writer is flushed at `on_finish`.
+pub struct CsvProbe<W: Write> {
+    out: W,
+    header_written: bool,
+}
+
+impl CsvProbe<BufWriter<File>> {
+    /// Stream to a file at `path` (created/truncated, buffered).
+    pub fn to_path(path: &str) -> io::Result<CsvProbe<BufWriter<File>>> {
+        Ok(CsvProbe::new(BufWriter::new(File::create(path)?)))
+    }
+}
+
+impl<W: Write> CsvProbe<W> {
+    pub fn new(out: W) -> CsvProbe<W> {
+        CsvProbe { out, header_written: false }
+    }
+
+    /// Recover the writer (e.g. a `Vec<u8>` buffer in tests).
+    pub fn into_writer(self) -> W {
+        self.out
+    }
+}
+
+impl<W: Write> Probe for CsvProbe<W> {
+    fn on_sample(&mut self, m: &MetricPoint) {
+        if !self.header_written {
+            writeln!(self.out, "round,suboptimality,consensus,bits,wire_bytes,grad_evals")
+                .expect("csv probe write");
+            self.header_written = true;
+        }
+        writeln!(
+            self.out,
+            "{},{:.6e},{:.6e},{},{},{}",
+            m.round, m.suboptimality, m.consensus, m.bits, m.wire_bytes, m.grad_evals
+        )
+        .expect("csv probe write");
+        // flush per row so the durability promise holds: a killed run
+        // keeps every sample already emitted (row rate is bounded by
+        // record_every, so this is cheap)
+        self.out.flush().expect("csv probe flush");
+    }
+
+    fn on_finish(&mut self, _outcome: &RunOutcome) {
+        self.out.flush().expect("csv probe flush");
+    }
+}
+
+/// Prints one aligned progress line per sample and a summary line at the
+/// end — the formatting `proxlead train` used to hand-roll.
+#[derive(Default)]
+pub struct ProgressProbe {
+    header_written: bool,
+}
+
+impl ProgressProbe {
+    pub fn new() -> ProgressProbe {
+        ProgressProbe::default()
+    }
+}
+
+impl Probe for ProgressProbe {
+    fn on_sample(&mut self, m: &MetricPoint) {
+        if !self.header_written {
+            println!("round      subopt        consensus     Mbits    grad-evals");
+            self.header_written = true;
+        }
+        println!(
+            "{:>6} {:>13.4e} {:>13.4e} {:>8.2} {:>10}",
+            m.round,
+            m.suboptimality,
+            m.consensus,
+            m.bits as f64 / 1e6,
+            m.grad_evals
+        );
+    }
+
+    fn on_finish(&mut self, outcome: &RunOutcome) {
+        println!("{}", outcome.summary_line());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runner::{Backend, StopReason};
+    use std::time::Duration;
+
+    fn point(round: usize) -> MetricPoint {
+        MetricPoint {
+            round,
+            grad_evals: 4 * round as u64,
+            bits: 100 * round as u64,
+            wire_bytes: 120 * round as u64,
+            suboptimality: 1.0 / (round + 1) as f64,
+            consensus: 0.5,
+            wall_ns: 1,
+        }
+    }
+
+    #[test]
+    fn csv_probe_streams_header_and_rows() {
+        let mut probe = CsvProbe::new(Vec::new());
+        probe.on_sample(&point(0));
+        probe.on_sample(&point(10));
+        probe.on_finish(&RunOutcome {
+            name: "x".into(),
+            backend: Backend::Coordinator,
+            stopped_by: StopReason::BitsBudget,
+            rounds: 10,
+            final_subopt: 0.09,
+            grad_evals: 40,
+            bits: 1000,
+            wire_bytes: 1200,
+            elapsed: Duration::from_millis(5),
+        });
+        let text = String::from_utf8(probe.into_writer()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[0], "round,suboptimality,consensus,bits,wire_bytes,grad_evals");
+        assert!(lines[1].starts_with("0,"), "{}", lines[1]);
+        assert!(lines[2].starts_with("10,") && lines[2].contains(",1000,1200,40"));
+    }
+}

@@ -5,9 +5,9 @@
 //! module turns those grids into data: a declarative [`SweepSpec`]
 //! (see [`spec`]) expands into indexed cells, a zero-dependency
 //! `std::sync::mpsc` thread pool (see [`pool`]) fans the cells out to
-//! worker threads, each cell runs through the existing [`crate::engine`]
-//! harness, and the results aggregate into the deterministic JSON
-//! trajectory format built on [`crate::util::json`].
+//! worker threads, each cell runs through the unified [`crate::runner`]
+//! API on the matrix engine, and the results aggregate into the
+//! deterministic JSON trajectory format built on [`crate::util::json`].
 //!
 //! **Determinism contract:** a cell is a pure function of its index — the
 //! data seed comes from the cell's `Config`, the algorithm seed from
@@ -16,7 +16,7 @@
 //! which deliberately excludes wall-clock and thread count) is
 //! **byte-identical regardless of thread count or scheduling**. The
 //! integration suite asserts this, and pins a sweep cell to a hand-rolled
-//! serial [`crate::engine::run`] of the same configuration.
+//! serial [`crate::runner::run_engine`] of the same configuration.
 
 pub mod pool;
 pub mod spec;
@@ -30,9 +30,9 @@ pub use crate::exp::{REF_MAX_ITER, REF_TOL};
 
 use crate::algorithm::solve_reference;
 use crate::config::{Config, ConfigError};
-use crate::engine::{self, RunResult};
 use crate::exp::Experiment;
 use crate::problem::Problem;
+use crate::runner::RunResult;
 use crate::util::bench::Table;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -124,7 +124,8 @@ impl RefCache {
 
 /// Run one cell serially, solving its own reference. This is the exact
 /// function the pool fans out (modulo the shared [`RefCache`]), exposed so
-/// tests can pin a sweep cell to the serial [`engine::run`] path.
+/// tests can pin a sweep cell to the serial [`crate::runner::run_engine`]
+/// path.
 pub fn run_cell(cell: &Cell, target_subopt: Option<f64>) -> CellOutcome {
     run_cell_cached(cell, target_subopt, &RefCache::default())
 }
@@ -141,13 +142,13 @@ fn run_cell_cached(cell: &Cell, target_subopt: Option<f64>, cache: &RefCache) ->
     let exp = Experiment::from_config(cfg).expect("validated experiment");
     exp.set_reference(cache.get_or_solve(cfg, exp.problem.as_ref()));
     let seed = cell_seed(cfg.seed, cell.index);
-    let mut alg = exp.algorithm_with_seed(seed);
-    let mut run_cfg = exp.run_config();
+    // the unified run API: per-cell seed + optional early-stop target on
+    // the experiment's own rounds/record_every
+    let mut spec = exp.run_spec().with_seed(seed);
     if let Some(t) = target_subopt {
-        run_cfg = run_cfg.until(t);
+        spec = spec.until(t);
     }
-    let x_star = exp.reference();
-    let result = engine::run(alg.as_mut(), exp.problem.as_ref(), &x_star, &run_cfg);
+    let result = exp.run(&spec);
     CellOutcome {
         index: cell.index,
         overrides: cell.overrides.clone(),
@@ -265,10 +266,13 @@ impl CellOutcome {
             (
                 "rounds_to_target",
                 self.result
-                    .rounds_to_target
+                    .rounds_to_target()
                     .map(|r| Json::Num(r as f64))
                     .unwrap_or(Json::Null),
             ),
+            // which criterion ended the cell (deterministic: sweeps carry
+            // no wall-clock deadline)
+            ("stopped_by", self.result.stopped_by.name().into()),
             ("grad_evals", last.map(|m| Json::Num(m.grad_evals as f64)).unwrap_or(Json::Null)),
             ("bits", last.map(|m| Json::Num(m.bits as f64)).unwrap_or(Json::Null)),
             ("history", history),
@@ -349,7 +353,7 @@ impl SweepResult {
                 ov.join(" "),
                 last.map(|m| format!("{:.3e}", m.suboptimality)).unwrap_or_default(),
                 c.result
-                    .rounds_to_target
+                    .rounds_to_target()
                     .map(|r| format!("{r}"))
                     .or_else(|| last.map(|m| format!("{}", m.round)))
                     .unwrap_or_default(),

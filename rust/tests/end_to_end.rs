@@ -1,13 +1,16 @@
 //! Whole-stack integration: launcher-level configuration → coordinator →
 //! (optionally) PJRT gradients, plus failure-injection and schedule paths.
 
-use proxlead::algorithm::{solve_reference, suboptimality};
+#![allow(deprecated)] // the hand-wired runs intentionally pin the run_prox_lead shim
+
+use proxlead::algorithm::solve_reference;
 use proxlead::config::Config;
-use proxlead::coordinator::{self, CoordConfig, Straggler, WireCodec};
+use proxlead::coordinator::{self, CoordConfig, NodeHyper, Straggler, WireCodec};
 use proxlead::exp::Experiment;
 use proxlead::linalg::Mat;
 use proxlead::oracle::OracleKind;
 use proxlead::problem::{LogReg, Problem};
+use proxlead::runner::RunSpec;
 use proxlead::runtime::{default_artifact_dir, PjrtRuntime, XlaLogReg};
 use std::sync::Arc;
 use std::time::Duration;
@@ -25,18 +28,17 @@ fn config_driven_coordinator_run_converges() {
          lambda1 = 0.005\nlambda2 = 0.1\nseparation = 1.0\nbits = 2\nrounds = 3000\n\
          record_every = 1000\n",
     );
-    let x_star = solve_reference(exp.problem.as_ref(), exp.config.lambda1, 40_000, 1e-13);
-    let res = exp.coordinator();
-    let s = suboptimality(res.final_x(), &x_star);
+    let res = exp.run_coordinator(&exp.run_spec());
+    let s = res.final_subopt();
     assert!(s < 1e-11, "config-driven run suboptimality {s}");
     // wire bytes exceed the accounted payload (entropy-coded) bits: each
     // node unicasts to deg = 2 neighbors, frames add 11-byte headers, and
     // the fixed-width codec spends (b+1)/b × the accounted bits — at this
     // tiny dimension (p = 15) headers dominate, so only sanity-bound it
-    let (_, _, bits, _) = res.snapshots.last().unwrap();
-    let payload_bytes = *bits as f64 / 8.0;
-    assert!(res.wire_bytes as f64 > payload_bytes);
-    assert!((res.wire_bytes as f64) < payload_bytes * 2.0 * 8.0);
+    let last = res.history.last().unwrap();
+    let payload_bytes = last.bits as f64 / 8.0;
+    assert!(res.wire_bytes() as f64 > payload_bytes);
+    assert!((res.wire_bytes() as f64) < payload_bytes * 2.0 * 8.0);
 }
 
 #[test]
@@ -47,27 +49,24 @@ fn straggler_faults_do_not_change_the_answer() {
         "nodes = 4\nsamples_per_node = 24\ndim = 5\nclasses = 3\nbatches = 4\n\
          lambda2 = 0.1\nseparation = 1.0\n",
     );
-    let mk = |straggler| {
-        let mut c = CoordConfig::new(120, 0.05, WireCodec::Quant(2, 256));
-        c.record_every = 120;
-        c.straggler = straggler;
-        c
+    let x_star = vec![0.0; exp.problem.dim()];
+    let mk = |straggler: Option<Straggler>| {
+        let mut wire = CoordConfig::new(WireCodec::Quant(2, 256));
+        wire.straggler = straggler;
+        coordinator::run_prox_lead(
+            Arc::clone(&exp.problem),
+            &exp.mixing,
+            &exp.x0,
+            Arc::new(proxlead::prox::Zero),
+            &NodeHyper::new(0.05),
+            &wire,
+            &RunSpec::fixed(120).every(120),
+            &x_star,
+        )
     };
-    let clean = coordinator::run_prox_lead(
-        Arc::clone(&exp.problem),
-        &exp.mixing,
-        &exp.x0,
-        Arc::new(proxlead::prox::Zero),
-        &mk(None),
-    );
-    let faulty = coordinator::run_prox_lead(
-        Arc::clone(&exp.problem),
-        &exp.mixing,
-        &exp.x0,
-        Arc::new(proxlead::prox::Zero),
-        &mk(Some(Straggler { prob: 0.2, delay: Duration::from_micros(200) })),
-    );
-    let drift = clean.final_x().dist_sq(faulty.final_x());
+    let clean = mk(None);
+    let faulty = mk(Some(Straggler { prob: 0.2, delay: Duration::from_micros(200) }));
+    let drift = clean.final_x.dist_sq(&faulty.final_x);
     assert!(drift < 1e-24, "stragglers changed the iterates: {drift}");
 }
 
@@ -99,32 +98,30 @@ fn coordinator_runs_on_pjrt_backend() {
     let w = proxlead::graph::MixingOp::build(&g, proxlead::graph::MixingRule::UniformMaxDegree);
     let x_star = solve_reference(p.as_ref(), 5e-3, 60_000, 1e-12);
     let x0 = Mat::zeros(4, p.dim());
-    let mut cfg = CoordConfig::new(600, 0.5 / p.smoothness(), WireCodec::Quant(2, 256));
-    cfg.record_every = 200;
-    cfg.oracle = OracleKind::Full;
+    let hyper = NodeHyper::new(0.5 / p.smoothness()).oracle(OracleKind::Full);
     let res = coordinator::run_prox_lead(
         Arc::clone(&p) as Arc<dyn Problem>,
         &w,
         &x0,
         Arc::new(proxlead::prox::L1::new(5e-3)),
-        &cfg,
+        &hyper,
+        &CoordConfig::new(WireCodec::Quant(2, 256)),
+        &RunSpec::fixed(600).every(200),
+        &x_star,
     );
     // λ2 = 5e-3 is pinned by the artifact, so κ_f is large and 600 rounds
     // only buys partial progress — assert steady descent, not tolerance
-    let s = suboptimality(res.final_x(), &x_star);
+    let s = res.final_subopt();
     assert!(s.is_finite());
-    let trace = res.suboptimality(&x_star);
-    assert!(
-        trace.last().unwrap().1 < 0.5 * trace.first().unwrap().1,
-        "PJRT-backed run should at least halve suboptimality: {trace:?}"
-    );
+    let first = res.history.first().unwrap().suboptimality;
+    assert!(s < 0.5 * first, "PJRT-backed run should at least halve suboptimality: {s}");
 }
 
 #[test]
 fn theorem7_schedule_through_engine() {
     use proxlead::algorithm::{ProxLead, Schedule};
-    use proxlead::engine::{run, RunConfig};
     use proxlead::linalg::Spectrum;
+    use proxlead::runner::run_engine;
     let exp = from_config(
         "nodes = 4\nsamples_per_node = 24\ndim = 5\nclasses = 3\nbatches = 4\n\
          lambda2 = 0.1\nseparation = 1.0\nbits = 2\n",
@@ -145,8 +142,13 @@ fn theorem7_schedule_through_engine() {
         .prox(Box::new(proxlead::prox::Zero))
         .seed(5)
         .build();
-    let res =
-        run(&mut alg, p, &x_star, &RunConfig::fixed(30_000).every(3000).with_schedule(schedule));
+    let res = run_engine(
+        &mut alg,
+        p,
+        &x_star,
+        &RunSpec::fixed(30_000).every(3000).with_schedule(schedule),
+        &mut [],
+    );
     // O(1/k): the second half of the trace keeps improving (no plateau)
     let h = &res.history;
     let mid = h[h.len() / 2].suboptimality;

@@ -1,0 +1,165 @@
+//! Acceptance tests for the unified run API (ISSUE 5): composable stop
+//! criteria honored by BOTH backends through one `RunSpec` → `RunResult`
+//! shape, with the coordinator's early stop actually reaching the node
+//! threads.
+//!
+//! 1. **Bits-budget cross-backend parity** — under the exact `Dense64`
+//!    codec with `record_every = 1`, a payload-bit budget stops the matrix
+//!    engine and the node-thread coordinator on the same round at the same
+//!    cumulative bit count, both reporting `stopped_by = BitsBudget`.
+//! 2. **Wire-level budget stop** — a 2-bit Prox-LEAD coordinator run (the
+//!    paper's wire) stops early at a bit budget: the early-stop broadcast
+//!    reaches the node threads, the history is truncated, and the run
+//!    reports how it ended.
+//! 3. **Target/deadline/grad-evals stops on the coordinator** — the stops
+//!    the engine always had now work on node threads.
+//! 4. **Streaming probes** — a CSV probe observes every sample of a
+//!    coordinator run as it happens.
+
+use proxlead::config::Config;
+use proxlead::exp::Experiment;
+use proxlead::runner::{Backend, CsvProbe, Probe, RunSpec, StopReason};
+use std::time::Duration;
+
+fn base_cfg(bits: u32, rounds: usize, record_every: usize) -> Config {
+    Config::parse(&format!(
+        "nodes = 4\nsamples_per_node = 24\ndim = 5\nclasses = 3\nbatches = 4\n\
+         separation = 1.0\nseed = 33\nlambda1 = 0.005\nlambda2 = 0.1\nbits = {bits}\n\
+         rounds = {rounds}\nrecord_every = {record_every}\n"
+    ))
+    .expect("run_api config")
+}
+
+#[test]
+fn bits_budget_stops_both_backends_at_the_same_count() {
+    // Dense64: engine accounting (Identity::f64) and wire payload agree at
+    // 64 bits/entry, so the budget must bite on the same round with the
+    // same cumulative count on both backends
+    let exp = Experiment::from_config(&base_cfg(64, 200, 1)).unwrap();
+    let per_round = (exp.config.nodes * exp.problem.dim() * 64) as u64;
+    let spec = exp.run_spec().bits_budget(7 * per_round);
+
+    let engine = exp.run(&spec);
+    let coord = exp.run_coordinator(&spec);
+
+    assert_eq!(engine.stopped_by, StopReason::BitsBudget);
+    assert_eq!(coord.stopped_by, StopReason::BitsBudget);
+    let (e, c) = (engine.history.last().unwrap(), coord.history.last().unwrap());
+    assert_eq!(e.round, 7, "engine should stop exactly at the budget");
+    assert_eq!(c.round, e.round, "both backends must stop on the same round");
+    assert_eq!(c.bits, e.bits, "both backends must stop at the same cumulative bit count");
+    assert_eq!(c.bits, 7 * per_round);
+    // and the iterates at the stop are bit-identical (Dense64 parity)
+    for (a, b) in coord.final_x.data.iter().zip(&engine.final_x.data) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+#[test]
+fn two_bit_prox_lead_coordinator_stops_at_a_bit_budget() {
+    // the acceptance scenario: a communication-budgeted wire experiment.
+    // Run once unbounded to learn the full cost, then demand half.
+    let exp = Experiment::from_config(&base_cfg(2, 400, 1)).unwrap();
+    let full = exp.run_coordinator(&exp.run_spec());
+    assert_eq!(full.stopped_by, StopReason::MaxRounds);
+    let total_bits = full.history.last().unwrap().bits;
+
+    let budget = total_bits / 2;
+    let res = exp.run_coordinator(&exp.run_spec().bits_budget(budget));
+    assert_eq!(res.stopped_by, StopReason::BitsBudget, "must report how it ended");
+    let last = res.history.last().unwrap();
+    assert!(last.round < 400, "early stop must reach the node threads, ran {}", last.round);
+    assert!(last.bits >= budget, "stop fires at the first snapshot over budget");
+    assert!(
+        last.bits < total_bits,
+        "budgeted run must move fewer bits than the full run ({} vs {total_bits})",
+        last.bits
+    );
+    assert_eq!(res.backend, Backend::Coordinator);
+    assert!(res.wire_bytes() > 0 && res.wire_bytes() < full.wire_bytes());
+}
+
+#[test]
+fn coordinator_honors_target_subopt() {
+    let exp = Experiment::from_config(&base_cfg(2, 3000, 1)).unwrap();
+    let res = exp.run_coordinator(&exp.run_spec().until(1e-6));
+    assert_eq!(res.stopped_by, StopReason::TargetSubopt);
+    let hit = res.rounds_to_target().expect("target reached");
+    assert!(hit < 3000, "should early-stop, took {hit}");
+    assert!(res.final_subopt() < 1e-6);
+}
+
+#[test]
+fn coordinator_honors_deadline() {
+    // a zero deadline trips at the first gated checkpoint — the broadcast
+    // stops all nodes long before the 50k-round cap
+    let exp = Experiment::from_config(&base_cfg(2, 50_000, 10)).unwrap();
+    let res = exp.run_coordinator(&exp.run_spec().deadline(Duration::ZERO));
+    assert_eq!(res.stopped_by, StopReason::Deadline);
+    let last = res.history.last().unwrap().round;
+    assert_eq!(last, 10, "deadline fires at the first checkpoint (record_every granularity)");
+}
+
+#[test]
+fn coordinator_honors_grad_evals_budget() {
+    let exp = Experiment::from_config(&base_cfg(2, 5000, 5)).unwrap();
+    // round-0 init cost (engine ≡ coordinator accounting, pinned by the
+    // parity suite) from a 1-round engine run — cheap
+    let init = exp.run(&RunSpec::fixed(1)).history[0].grad_evals;
+    let res = exp.run_coordinator(&exp.run_spec().grad_evals_budget(init * 3));
+    assert_eq!(res.stopped_by, StopReason::GradEvalsBudget);
+    let last = res.history.last().unwrap();
+    assert!(last.round < 5000, "budget must bite early, ran {}", last.round);
+    assert!(last.grad_evals >= init * 3);
+}
+
+#[test]
+fn stop_granularity_is_record_every_on_the_coordinator() {
+    // with record_every = 25 the leader only observes every 25th round, so
+    // a budget stop lands on a multiple of 25
+    let exp = Experiment::from_config(&base_cfg(2, 400, 25)).unwrap();
+    let full = exp.run_coordinator(&exp.run_spec());
+    let total_bits = full.history.last().unwrap().bits;
+    let res = exp.run_coordinator(&exp.run_spec().bits_budget(total_bits / 3));
+    assert_eq!(res.stopped_by, StopReason::BitsBudget);
+    let last = res.history.last().unwrap().round;
+    assert!(last % 25 == 0 && last < 400, "stop must land on a checkpoint, got {last}");
+}
+
+#[test]
+fn csv_probe_streams_coordinator_samples() {
+    let exp = Experiment::from_config(&base_cfg(2, 60, 20)).unwrap();
+    let mut csv = CsvProbe::new(Vec::new());
+    {
+        let probes: &mut [&mut dyn Probe] = &mut [&mut csv];
+        let res = exp.run_coordinator_probed(&exp.run_spec(), probes);
+        assert_eq!(res.history.len(), 4); // rounds 0, 20, 40, 60
+    }
+    let text = String::from_utf8(csv.into_writer()).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 5, "header + 4 samples:\n{text}");
+    assert_eq!(lines[0], "round,suboptimality,consensus,bits,wire_bytes,grad_evals");
+    assert!(lines[1].starts_with("0,"));
+    assert!(lines[4].starts_with("60,"));
+    // wire bytes column is live (non-zero once frames flow)
+    let cols: Vec<&str> = lines[4].split(',').collect();
+    assert!(cols[4].parse::<u64>().unwrap() > 0);
+}
+
+#[test]
+fn unified_results_serialize_the_same_fields_across_backends() {
+    // the "one RunResult" contract consumers rely on: same accessor
+    // surface, same history schema, backend tag tells them apart
+    let exp = Experiment::from_config(&base_cfg(64, 30, 10)).unwrap();
+    let spec = exp.run_spec();
+    for res in [exp.run(&spec), exp.run_coordinator(&spec)] {
+        assert!(res.final_subopt().is_finite());
+        assert_eq!(res.history.first().unwrap().round, 0);
+        assert_eq!(res.history.last().unwrap().round, 30);
+        assert!(res.rounds_to_target().is_none());
+        let series = res.series(proxlead::runner::XAxis::Bits);
+        assert_eq!(series.len(), res.history.len());
+        let line = res.outcome().summary_line();
+        assert!(line.contains(res.backend.name()), "{line}");
+    }
+}

@@ -4,13 +4,13 @@
 //!    to **byte-identical** JSON (the acceptance criterion — wall-clock
 //!    and thread count are deliberately excluded from the aggregate);
 //! 2. one sweep cell's trajectory is **bit-identical** to a hand-rolled
-//!    serial `engine::run` of the same configuration (the sweep is the
-//!    serial path, fanned out — never a different code path).
+//!    serial `runner::run_engine` of the same configuration (the sweep is
+//!    the serial path, fanned out — never a different code path).
 
 use proxlead::algorithm::solve_reference;
 use proxlead::config::Config;
-use proxlead::engine::{run, RunConfig};
 use proxlead::exp::Experiment;
+use proxlead::runner::{run_engine, RunSpec};
 use proxlead::sweep::{cell_seed, run_cell, run_sweep, SweepSpec, REF_MAX_ITER, REF_TOL};
 
 fn tiny_base(rounds: usize) -> Config {
@@ -76,17 +76,19 @@ fn sweep_cell_matches_serial_engine_run() {
     assert_eq!(cells.len(), 1);
     let outcome = run_cell(&cells[0], None);
 
-    // hand-rolled serial path through engine::run, from the same config
+    // hand-rolled serial path through runner::run_engine, from the same
+    // config
     let cfg = &cells[0].config;
     let exp = Experiment::from_config(cfg).expect("experiment");
     let x_star = solve_reference(exp.problem.as_ref(), cfg.lambda1, REF_MAX_ITER, REF_TOL);
     let seed = cell_seed(cfg.seed, cells[0].index);
     let mut alg = exp.algorithm_with_seed(seed);
-    let res = run(
+    let res = run_engine(
         alg.as_mut(),
         exp.problem.as_ref(),
         &x_star,
-        &RunConfig::fixed(cfg.rounds).every(cfg.record_every),
+        &RunSpec::fixed(cfg.rounds).every(cfg.record_every),
+        &mut [],
     );
 
     assert_eq!(outcome.seed, seed);
@@ -116,9 +118,9 @@ fn target_early_stop_is_deterministic() {
     let serial = run_sweep(&spec.clone().threads(1), |_| {}).expect("serial");
     let wide = run_sweep(&spec.threads(8), |_| {}).expect("wide");
     for (s, w) in serial.cells.iter().zip(&wide.cells) {
-        assert_eq!(s.result.rounds_to_target, w.result.rounds_to_target);
+        assert_eq!(s.result.rounds_to_target(), w.result.rounds_to_target());
         assert!(
-            s.result.rounds_to_target.is_some(),
+            s.result.rounds_to_target().is_some(),
             "{} should hit 1e-6 within budget",
             s.name
         );
