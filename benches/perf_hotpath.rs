@@ -18,9 +18,13 @@ mod common;
 
 use common::{out_dir, Fixture};
 use proxlead::algorithm::{Algorithm, CommState, ProxLead};
-use proxlead::compress::bits::{decode_inf_quantized, encode_inf_quantized};
+use proxlead::compress::bits::{
+    decode_inf_quantized, decode_inf_quantized_into, encode_inf_quantized,
+    encode_inf_quantized_into,
+};
 use proxlead::compress::{Compressor, InfNormQuantizer};
-use proxlead::coordinator::{self, CoordConfig, NodeHyper, ProxLeadNode, WireCodec};
+use proxlead::coordinator::wire::{frame_begin, frame_end};
+use proxlead::coordinator::{self, CoordConfig, FrameRef, NodeHyper, ProxLeadNode, WireCodec};
 use proxlead::linalg::Mat;
 use proxlead::oracle::OracleKind;
 use proxlead::problem::data::{blobs, BlobSpec};
@@ -73,6 +77,28 @@ fn main() {
     set.run_throughput("decode 64k entries (wire)", 65_536.0 * 8.0, "B", || {
         decode_inf_quantized(&bytes, 65_536, 2, 256)
     });
+    // the zero-alloc scratch paths the coordinator hot loop actually runs:
+    // reused encode buffer + decoded slice, reused decode slice, and the
+    // borrowing frame parse (before/after rows for the codec rework live
+    // under these names in BENCH_perf_hotpath.json)
+    {
+        let mut out_buf: Vec<u8> = Vec::new();
+        let mut decoded = vec![0.0; 65_536];
+        set.run_throughput("encode_into 64k (reused scratch)", 65_536.0 * 8.0, "B", || {
+            out_buf.clear();
+            encode_inf_quantized_into(&x, 2, 256, &mut rng, &mut decoded, &mut out_buf)
+        });
+        set.run_throughput("decode_into 64k (reused scratch)", 65_536.0 * 8.0, "B", || {
+            decode_inf_quantized_into(&bytes, 2, 256, &mut decoded).expect("well-formed")
+        });
+        let mut frame: Vec<u8> = Vec::new();
+        frame_begin(&mut frame, WireCodec::Quant(2, 256).tag(), 7, 3);
+        frame.extend_from_slice(&bytes);
+        frame_end(&mut frame);
+        set.run_throughput("FrameRef::parse (borrowing)", frame.len() as f64, "B", || {
+            FrameRef::parse(&frame).expect("well-formed frame")
+        });
+    }
     report.add(&set);
 
     // ---------- L3: COMM round + Prox-LEAD step --------------------------

@@ -14,56 +14,119 @@
 //! entropy coder removes (QSGD uses Elias coding); we keep the fixed-width
 //! codec for simplicity and charge the entropy-coded size.
 //! An all-zero block is encoded as norm = 0 with no entry codes.
+//!
+//! # Scratch-buffer API and errors
+//!
+//! The hot-path entry points are [`encode_inf_quantized_into`] and
+//! [`decode_inf_quantized_into`]: both work over caller-provided scratch
+//! (an append-only `Vec<u8>` on the encode side, a fixed `&mut [f64]` on
+//! the decode side) and allocate nothing once the scratch has warmed up.
+//! Decoding is *total*: any byte slice either decodes or returns a
+//! [`QuantError`] — it never panics and never reads out of bounds. The
+//! allocating `encode_inf_quantized` / `decode_inf_quantized` wrappers
+//! remain for tests and benches that want the one-shot shape.
 
 use super::quantize::levels_for_bits;
 use crate::util::rng::Rng;
+use std::fmt;
 
-/// MSB-first bit writer.
-pub struct BitWriter {
-    pub bytes: Vec<u8>,
-    nbits: usize,
+/// Why a quantized bitstream failed to decode. Maps 1:1 onto
+/// [`crate::coordinator::wire::WireError`] at the frame layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantError {
+    /// The stream ended before the advertised entries were all read.
+    Truncated { need_bits: usize, have_bits: usize },
+    /// A block header norm that is NaN or negative — not a value
+    /// `encode_inf_quantized` can emit for any input (+∞ is accepted: a
+    /// diverging sender legitimately produces it, and the resulting ±∞
+    /// entries surface as divergence at the algorithm layer).
+    BadBlockNorm { block: usize },
+    /// Whole unread bytes remain after the final block (at most 7 bits of
+    /// zero-padding are legal).
+    TrailingBytes { used_bytes: usize, got_bytes: usize },
 }
 
-impl BitWriter {
-    pub fn new() -> Self {
-        BitWriter {
-            bytes: Vec::new(),
-            nbits: 0,
+impl fmt::Display for QuantError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            QuantError::Truncated { need_bits, have_bits } => {
+                write!(f, "quant stream truncated: need {need_bits} bits, have {have_bits}")
+            }
+            QuantError::BadBlockNorm { block } => {
+                write!(f, "quant block {block} has a NaN or negative norm")
+            }
+            QuantError::TrailingBytes { used_bytes, got_bytes } => {
+                write!(f, "quant stream has trailing bytes: used {used_bytes} of {got_bytes}")
+            }
         }
     }
+}
 
+impl std::error::Error for QuantError {}
+
+/// Largest field width the chunked writer/reader accept. The accumulator
+/// keeps < 8 carried bits between calls, so `7 + width` must fit in a u64;
+/// the codec itself never exceeds 32 (an f32 norm).
+pub const MAX_FIELD_BITS: u32 = 56;
+
+/// MSB-first bit writer appending to a caller-provided byte buffer.
+///
+/// Bits collect in a u64 accumulator and flush to the buffer a whole byte
+/// at a time, so the per-field cost is one shift/or plus at most
+/// `width/8 + 1` byte pushes — no per-bit loop. The byte stream is
+/// identical to the historical bit-at-a-time writer's. Call
+/// [`BitWriter::finish`] to pad the final partial byte with zeros.
+pub struct BitWriter<'a> {
+    buf: &'a mut Vec<u8>,
+    /// Low `fill` bits are pending output; higher bits are stale garbage
+    /// that the flush masks away.
+    acc: u64,
+    fill: u32,
+    written: usize,
+}
+
+impl<'a> BitWriter<'a> {
+    /// Start writing at the current end of `buf` (append-only: existing
+    /// bytes, e.g. a frame header, are left untouched).
+    pub fn new(buf: &'a mut Vec<u8>) -> Self {
+        BitWriter { buf, acc: 0, fill: 0, written: 0 }
+    }
+
+    #[inline]
     pub fn write_bits(&mut self, value: u64, width: u32) {
-        debug_assert!(width <= 64);
+        debug_assert!(width <= MAX_FIELD_BITS, "field wider than the accumulator allows");
         debug_assert!(width == 64 || value < (1u64 << width), "value overflows field");
-        for i in (0..width).rev() {
-            let bit = (value >> i) & 1;
-            let byte_idx = self.nbits / 8;
-            if byte_idx == self.bytes.len() {
-                self.bytes.push(0);
-            }
-            if bit == 1 {
-                self.bytes[byte_idx] |= 1 << (7 - self.nbits % 8);
-            }
-            self.nbits += 1;
+        self.acc = (self.acc << width) | value;
+        self.fill += width;
+        self.written += width as usize;
+        while self.fill >= 8 {
+            self.fill -= 8;
+            // `as u8` keeps exactly bits [fill, fill+8) — the oldest
+            // pending byte; stale bits above never reach the output.
+            self.buf.push((self.acc >> self.fill) as u8);
         }
     }
 
+    #[inline]
     pub fn write_f32(&mut self, x: f32) {
         self.write_bits(x.to_bits() as u64, 32);
     }
 
+    /// Total bits written so far (excluding final padding).
     pub fn bit_len(&self) -> usize {
-        self.nbits
+        self.written
+    }
+
+    /// Flush the trailing partial byte, zero-padded in the low positions
+    /// (same padding the historical writer produced implicitly).
+    pub fn finish(self) {
+        if self.fill > 0 {
+            self.buf.push((self.acc << (8 - self.fill)) as u8);
+        }
     }
 }
 
-impl Default for BitWriter {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-/// MSB-first bit reader.
+/// MSB-first bit reader with checked, non-panicking reads.
 pub struct BitReader<'a> {
     bytes: &'a [u8],
     pos: usize,
@@ -74,52 +137,95 @@ impl<'a> BitReader<'a> {
         BitReader { bytes, pos: 0 }
     }
 
-    pub fn read_bits(&mut self, width: u32) -> u64 {
-        let mut v = 0u64;
-        for _ in 0..width {
-            let byte_idx = self.pos / 8;
-            let bit = (self.bytes[byte_idx] >> (7 - self.pos % 8)) & 1;
-            v = (v << 1) | bit as u64;
-            self.pos += 1;
+    /// Read `width` bits, or `None` when fewer remain. Consumes whole
+    /// bytes through the accumulator rather than looping per bit.
+    #[inline]
+    pub fn try_read_bits(&mut self, width: u32) -> Option<u64> {
+        debug_assert!(width <= MAX_FIELD_BITS, "field wider than the accumulator allows");
+        let end = self.pos.checked_add(width as usize)?;
+        if end > self.bytes.len() * 8 {
+            return None;
         }
-        v
+        let mut v = 0u64;
+        let mut rem = width as usize;
+        let mut p = self.pos;
+        // head: finish the current partial byte
+        let head = (8 - p % 8) % 8;
+        if head > 0 {
+            let take = head.min(rem);
+            let byte = self.bytes[p / 8] as u64;
+            v = (byte >> (head - take)) & ((1u64 << take) - 1);
+            p += take;
+            rem -= take;
+        }
+        // body: whole bytes
+        while rem >= 8 {
+            v = (v << 8) | self.bytes[p / 8] as u64;
+            p += 8;
+            rem -= 8;
+        }
+        // tail: top bits of the next byte
+        if rem > 0 {
+            v = (v << rem) | (self.bytes[p / 8] as u64 >> (8 - rem));
+            p += rem;
+        }
+        self.pos = p;
+        Some(v)
+    }
+
+    /// Panicking convenience for streams known to be well-formed (tests).
+    pub fn read_bits(&mut self, width: u32) -> u64 {
+        self.try_read_bits(width).expect("bitstream exhausted")
+    }
+
+    #[inline]
+    pub fn try_read_f32(&mut self) -> Option<f32> {
+        self.try_read_bits(32).map(|b| f32::from_bits(b as u32))
     }
 
     pub fn read_f32(&mut self) -> f32 {
-        f32::from_bits(self.read_bits(32) as u32)
+        self.try_read_f32().expect("bitstream exhausted")
     }
 
     pub fn bits_read(&self) -> usize {
         self.pos
     }
+
+    /// Bits remaining in the stream.
+    pub fn bits_left(&self) -> usize {
+        self.bytes.len() * 8 - self.pos
+    }
 }
 
-/// Encode `x` with the b-bit ∞-norm quantizer into wire bytes.
-/// Returns (bytes, decoded vector, exact payload bits). The decoded vector
-/// is bit-identical to what [`decode_inf_quantized`] recovers on the
-/// receiving side (both go through the f32 norm).
-pub fn encode_inf_quantized(
+/// Encode `x` with the b-bit ∞-norm quantizer, appending wire bytes to
+/// `out` and writing the dequantized values (bit-identical to what the
+/// receiver recovers — both sides go through the f32 norm) into `decoded`.
+/// Returns the exact *accounted* payload bits. Allocates nothing beyond
+/// `out`'s growth; with a warmed-up `out` the hot path is allocation-free.
+pub fn encode_inf_quantized_into(
     x: &[f64],
     bits: u32,
     block: usize,
     rng: &mut Rng,
-) -> (Vec<u8>, Vec<f64>, u64) {
+    decoded: &mut [f64],
+    out: &mut Vec<u8>,
+) -> u64 {
+    assert_eq!(decoded.len(), x.len(), "decoded scratch length mismatch");
     let levels = levels_for_bits(bits);
-    let mut w = BitWriter::new();
-    let mut decoded = Vec::with_capacity(x.len());
+    let mut w = BitWriter::new(out);
     let mut accounted = 0u64;
-    for chunk in x.chunks(block) {
+    for (chunk, dec) in x.chunks(block).zip(decoded.chunks_mut(block)) {
         let norm = chunk.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
         w.write_f32(norm as f32);
         if norm == 0.0 {
-            decoded.extend(std::iter::repeat(0.0).take(chunk.len()));
+            dec.fill(0.0);
             accounted += 32;
             continue;
         }
         let norm32 = norm as f32 as f64; // receiver sees the f32 norm
         let scale = norm32 / levels;
         let inv_scale = levels / norm; // hoisted: one divide per block
-        for &v in chunk {
+        for (&v, d) in chunk.iter().zip(dec.iter_mut()) {
             // dither against the f64 norm (what the sender holds), with the
             // same hoisted-reciprocal expression as InfNormQuantizer so the
             // two paths draw code-identical magnitudes; the floor can
@@ -129,38 +235,86 @@ pub fn encode_inf_quantized(
             // unbiasedness up to O(ulp)).
             let mag = (v.abs() * inv_scale + rng.f64()).floor().min(levels);
             let code = mag as u64;
-            let sign = if v < 0.0 { 1u64 } else { 0u64 };
+            let sign = (v < 0.0) as u64;
             w.write_bits((sign << bits) | code, bits + 1);
-            decoded.push((1.0 - 2.0 * sign as f64) * scale * mag);
+            *d = (1.0 - 2.0 * sign as f64) * scale * mag;
         }
         accounted += 32 + bits as u64 * chunk.len() as u64;
     }
-    (w.bytes, decoded, accounted)
+    w.finish();
+    accounted
 }
 
-/// Decode wire bytes produced by [`encode_inf_quantized`].
-pub fn decode_inf_quantized(bytes: &[u8], n: usize, bits: u32, block: usize) -> Vec<f64> {
+/// Decode wire bytes produced by the ∞-norm encoder into `out` (whose
+/// length fixes the expected entry count). Total over arbitrary input:
+/// any malformed stream returns a [`QuantError`]; nothing panics and
+/// nothing allocates.
+pub fn decode_inf_quantized_into(
+    bytes: &[u8],
+    bits: u32,
+    block: usize,
+    out: &mut [f64],
+) -> Result<(), QuantError> {
     let levels = levels_for_bits(bits);
     let mag_mask = (1u64 << bits) - 1;
     let mut r = BitReader::new(bytes);
-    let mut out = Vec::with_capacity(n);
-    let mut remaining = n;
-    while remaining > 0 {
-        let chunk = remaining.min(block);
-        let norm = r.read_f32() as f64;
-        if norm == 0.0 {
-            out.extend(std::iter::repeat(0.0).take(chunk));
-        } else {
-            let scale = norm / levels;
-            for _ in 0..chunk {
-                let code = r.read_bits(bits + 1);
-                let sign = (code >> bits) & 1;
-                let mag = (code & mag_mask) as f64;
-                out.push((1.0 - 2.0 * sign as f64) * scale * mag);
-            }
+    let have_bits = bytes.len() * 8;
+    for (bi, chunk) in out.chunks_mut(block).enumerate() {
+        let norm32 = r.try_read_f32().ok_or(QuantError::Truncated {
+            need_bits: r.bits_read() + 32,
+            have_bits,
+        })?;
+        // accepts +∞ (a diverging sender), rejects NaN and negatives —
+        // `!(x >= 0.0)` is false for +∞, true for NaN
+        if !(norm32 >= 0.0) {
+            return Err(QuantError::BadBlockNorm { block: bi });
         }
-        remaining -= chunk;
+        let norm = norm32 as f64;
+        if norm == 0.0 {
+            chunk.fill(0.0);
+            continue;
+        }
+        let scale = norm / levels;
+        for slot in chunk.iter_mut() {
+            let code = r.try_read_bits(bits + 1).ok_or(QuantError::Truncated {
+                need_bits: r.bits_read() + (bits + 1) as usize,
+                have_bits,
+            })?;
+            let sign = (code >> bits) & 1;
+            let mag = (code & mag_mask) as f64;
+            *slot = (1.0 - 2.0 * sign as f64) * scale * mag;
+        }
     }
+    // at most 7 bits of zero-padding may remain; a whole spare byte means
+    // the payload is longer than this vector's encoding
+    if r.bits_left() >= 8 {
+        return Err(QuantError::TrailingBytes {
+            used_bytes: (r.bits_read() + 7) / 8,
+            got_bytes: bytes.len(),
+        });
+    }
+    Ok(())
+}
+
+/// Allocating convenience wrapper over [`encode_inf_quantized_into`]:
+/// returns (bytes, decoded vector, exact accounted payload bits).
+pub fn encode_inf_quantized(
+    x: &[f64],
+    bits: u32,
+    block: usize,
+    rng: &mut Rng,
+) -> (Vec<u8>, Vec<f64>, u64) {
+    let mut bytes = Vec::new();
+    let mut decoded = vec![0.0; x.len()];
+    let accounted = encode_inf_quantized_into(x, bits, block, rng, &mut decoded, &mut bytes);
+    (bytes, decoded, accounted)
+}
+
+/// Allocating wrapper over [`decode_inf_quantized_into`] for streams known
+/// to be well-formed (tests/benches); panics on malformed input.
+pub fn decode_inf_quantized(bytes: &[u8], n: usize, bits: u32, block: usize) -> Vec<f64> {
+    let mut out = vec![0.0; n];
+    decode_inf_quantized_into(bytes, bits, block, &mut out).expect("malformed quantizer stream");
     out
 }
 
@@ -170,17 +324,81 @@ mod tests {
 
     #[test]
     fn bit_writer_reader_roundtrip() {
-        let mut w = BitWriter::new();
+        let mut buf = Vec::new();
+        let mut w = BitWriter::new(&mut buf);
         w.write_bits(0b101, 3);
         w.write_bits(0xFFFF, 16);
         w.write_f32(1.25);
         w.write_bits(0, 1);
-        let mut r = BitReader::new(&w.bytes);
+        let nbits = w.bit_len();
+        w.finish();
+        let mut r = BitReader::new(&buf);
         assert_eq!(r.read_bits(3), 0b101);
         assert_eq!(r.read_bits(16), 0xFFFF);
         assert_eq!(r.read_f32(), 1.25);
         assert_eq!(r.read_bits(1), 0);
-        assert_eq!(r.bits_read(), w.bit_len());
+        assert_eq!(r.bits_read(), nbits);
+    }
+
+    #[test]
+    fn chunked_writer_matches_bit_at_a_time_reference() {
+        // the accumulator flush must reproduce the historical per-bit
+        // writer's byte stream exactly (wire compatibility)
+        fn reference_write(fields: &[(u64, u32)]) -> Vec<u8> {
+            let mut bytes = Vec::new();
+            let mut nbits = 0usize;
+            for &(value, width) in fields {
+                for i in (0..width).rev() {
+                    let bit = (value >> i) & 1;
+                    if nbits / 8 == bytes.len() {
+                        bytes.push(0);
+                    }
+                    if bit == 1 {
+                        bytes[nbits / 8] |= 1 << (7 - nbits % 8);
+                    }
+                    nbits += 1;
+                }
+            }
+            bytes
+        }
+        let mut rng = Rng::new(41);
+        for _ in 0..200 {
+            let nfields = 1 + rng.below(12);
+            let fields: Vec<(u64, u32)> = (0..nfields)
+                .map(|_| {
+                    let width = 1 + rng.below(32) as u32;
+                    let value = rng.next_u64() & ((1u64 << width) - 1);
+                    (value, width)
+                })
+                .collect();
+            let mut buf = Vec::new();
+            let mut w = BitWriter::new(&mut buf);
+            for &(v, wid) in &fields {
+                w.write_bits(v, wid);
+            }
+            w.finish();
+            assert_eq!(buf, reference_write(&fields), "fields {fields:?}");
+        }
+    }
+
+    #[test]
+    fn writer_appends_after_existing_bytes() {
+        let mut buf = vec![0xAB, 0xCD];
+        let mut w = BitWriter::new(&mut buf);
+        w.write_bits(0xF0, 8);
+        w.finish();
+        assert_eq!(buf, vec![0xAB, 0xCD, 0xF0]);
+    }
+
+    #[test]
+    fn reader_refuses_overrun() {
+        let bytes = [0xFFu8; 2];
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.try_read_bits(12), Some(0xFFF));
+        assert_eq!(r.try_read_bits(5), None, "only 4 bits left");
+        assert_eq!(r.try_read_bits(4), Some(0xF));
+        assert_eq!(r.try_read_bits(1), None);
+        assert_eq!(r.bits_left(), 0);
     }
 
     #[test]
@@ -201,6 +419,71 @@ mod tests {
                 assert!(bytes.len() * 8 <= (nbits as usize) * 2 + 64);
             }
         }
+    }
+
+    #[test]
+    fn into_variants_reuse_scratch_across_rounds() {
+        let mut rng = Rng::new(55);
+        let x: Vec<f64> = (0..300).map(|_| rng.normal()).collect();
+        let mut out = Vec::new();
+        let mut decoded = vec![0.0; 300];
+        let mut recv = vec![0.0; 300];
+        for _ in 0..3 {
+            out.clear();
+            let nbits = encode_inf_quantized_into(&x, 4, 128, &mut rng, &mut decoded, &mut out);
+            assert!(nbits > 0);
+            decode_inf_quantized_into(&out, 4, 128, &mut recv).unwrap();
+            assert_eq!(decoded, recv);
+        }
+    }
+
+    #[test]
+    fn decode_rejects_truncated_stream() {
+        let mut rng = Rng::new(56);
+        let x: Vec<f64> = (0..64).map(|_| rng.normal()).collect();
+        let (bytes, _, _) = encode_inf_quantized(&x, 4, 64, &mut rng);
+        let mut out = vec![0.0; 64];
+        for cut in [0, 3, 4, bytes.len() - 1] {
+            let e = decode_inf_quantized_into(&bytes[..cut], 4, 64, &mut out);
+            assert!(
+                matches!(e, Err(QuantError::Truncated { .. })),
+                "cut={cut}: {e:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn decode_rejects_bad_norm_and_trailing_bytes() {
+        let mut rng = Rng::new(57);
+        let x: Vec<f64> = (0..64).map(|_| rng.normal()).collect();
+        let (bytes, _, _) = encode_inf_quantized(&x, 4, 64, &mut rng);
+        let mut out = vec![0.0; 64];
+
+        let mut nan = bytes.clone();
+        nan[..4].copy_from_slice(&f32::NAN.to_bits().to_be_bytes());
+        assert_eq!(
+            decode_inf_quantized_into(&nan, 4, 64, &mut out),
+            Err(QuantError::BadBlockNorm { block: 0 })
+        );
+
+        let mut neg = bytes.clone();
+        neg[..4].copy_from_slice(&(-1.0f32).to_bits().to_be_bytes());
+        assert_eq!(
+            decode_inf_quantized_into(&neg, 4, 64, &mut out),
+            Err(QuantError::BadBlockNorm { block: 0 })
+        );
+
+        let mut long = bytes.clone();
+        long.push(0x00);
+        assert!(matches!(
+            decode_inf_quantized_into(&long, 4, 64, &mut out),
+            Err(QuantError::TrailingBytes { .. })
+        ));
+
+        // +∞ norm is legal (diverging sender): decodes to ±∞/0 entries
+        let mut inf = bytes;
+        inf[..4].copy_from_slice(&f32::INFINITY.to_bits().to_be_bytes());
+        assert_eq!(decode_inf_quantized_into(&inf, 4, 64, &mut out), Ok(()));
     }
 
     #[test]

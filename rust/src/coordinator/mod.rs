@@ -28,7 +28,17 @@
 //! `algorithm=` value.
 //!
 //! Fault injection: an optional straggler model (per-message delay with
-//! probability `p`) exercises the synchronous-round barrier under skew.
+//! probability `p`) exercises the synchronous-round barrier under skew,
+//! and an optional [`FrameTamper`] corrupts one prescribed broadcast to
+//! exercise the malformed-frame path end to end.
+//!
+//! **Wire faults.** The receive path is panic-free: a malformed or
+//! protocol-violating frame surfaces as a typed [`WireError`], the
+//! detecting node floods an ABORT teardown wave (so the synchronous
+//! barrier never deadlocks on a dead peer), and the run returns normally
+//! with [`StopReason::WireFault`] — the history holds every snapshot
+//! completed before the fault (or a synthesized round-0 state when the
+//! fault hit before the first one).
 
 pub mod algorithms;
 pub mod node;
@@ -39,7 +49,7 @@ pub use algorithms::{
     ProxLeadNode,
 };
 pub use node::{NodeAlgorithm, NodeConfig, WeightRow};
-pub use wire::{Frame, WireCodec};
+pub use wire::{Frame, FrameRef, WireCodec, WireError, WireFault};
 
 use crate::algorithm::suboptimality;
 use crate::graph::MixingOp;
@@ -61,6 +71,50 @@ pub struct Straggler {
     pub delay: Duration,
 }
 
+/// Deterministic frame-corruption hook (tests/chaos): node `node` corrupts
+/// its round-`round` broadcast in the prescribed way. Every neighbor
+/// receives the same corrupt bytes, detects the same typed
+/// [`WireError`], and the run tears down into
+/// [`StopReason::WireFault`] instead of crashing a thread.
+#[derive(Clone, Copy, Debug)]
+pub struct FrameTamper {
+    pub node: usize,
+    /// Wire round (setup rounds included) whose broadcast is corrupted.
+    pub round: usize,
+    pub kind: TamperKind,
+}
+
+/// The corrupt-frame matrix: each variant exercises one arm of
+/// [`WireError`] end to end. See `rust/tests/wire_errors.rs`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TamperKind {
+    /// Ship only the first 6 header bytes → `TruncatedHeader`.
+    TruncateHeader,
+    /// Drop the last payload byte (header untouched) → `TruncatedPayload`.
+    ShortPayload,
+    /// Append 8 zero bytes and re-patch the length → a codec-level size
+    /// error (`PayloadSize` dense, `TrailingBytes` quant).
+    OverlongPayload,
+    /// Append bytes beyond the framed length → `TrailingBytes`.
+    TrailingGarbage,
+    /// Tag byte no codec owns → `UnknownTag`.
+    UnknownTag,
+    /// A *valid* codec tag that isn't this run's codec → `TagMismatch`.
+    WrongCodecTag,
+    /// Overwrite the first quant block norm with NaN → `BadBlockNorm`
+    /// (meaningful for `WireCodec::Quant` payloads).
+    BadQuantNorm,
+}
+
+/// What a node thread sends the leader over the report channel.
+#[derive(Clone, Debug)]
+pub enum NodeEvent {
+    Report(NodeReport),
+    /// A malformed/protocol-violating frame was detected; the sender has
+    /// flooded ABORT and exited.
+    Fault(WireFault),
+}
+
 /// Wire-level coordinator knobs — codec, fault model, RNG seed. Rounds,
 /// sampling, and stop criteria live in the shared
 /// [`crate::runner::RunSpec`]; algorithm hyperparameters in [`NodeHyper`].
@@ -71,11 +125,14 @@ pub struct CoordConfig {
     /// node algorithms' oracle streams (the engine algorithm seed).
     pub seed: u64,
     pub straggler: Option<Straggler>,
+    /// Deterministic corrupt-frame injection (tests/chaos); `None` in
+    /// every production path.
+    pub tamper: Option<FrameTamper>,
 }
 
 impl CoordConfig {
     pub fn new(codec: WireCodec) -> CoordConfig {
-        CoordConfig { codec, seed: 42, straggler: None }
+        CoordConfig { codec, seed: 42, straggler: None, tamper: None }
     }
 
     pub fn seed(mut self, seed: u64) -> CoordConfig {
@@ -85,6 +142,11 @@ impl CoordConfig {
 
     pub fn straggler(mut self, s: Straggler) -> CoordConfig {
         self.straggler = Some(s);
+        self
+    }
+
+    pub fn tamper(mut self, t: FrameTamper) -> CoordConfig {
+        self.tamper = Some(t);
         self
     }
 }
@@ -184,11 +246,13 @@ pub fn run(
     let gated = spec.stop.leader_gated();
     let start = Instant::now();
 
-    // per-node inboxes; every node gets a Sender clone for each neighbor
+    // per-node inboxes; every node gets a Sender clone for each neighbor.
+    // Frames travel as Arc<[u8]>: one refcounted buffer per broadcast
+    // instead of one Vec clone per neighbor.
     let mut txs = Vec::with_capacity(n);
     let mut rxs = Vec::with_capacity(n);
     for _ in 0..n {
-        let (tx, rx) = mpsc::channel::<Vec<u8>>();
+        let (tx, rx) = mpsc::channel::<Arc<[u8]>>();
         txs.push(tx);
         rxs.push(rx);
     }
@@ -204,15 +268,15 @@ pub fn run(
             ctrl_rxs.push(None);
         }
     }
-    let (report_tx, report_rx) = mpsc::channel::<NodeReport>();
+    let (report_tx, report_rx) = mpsc::channel::<NodeEvent>();
     let build = &build;
 
-    let (history, final_x, stopped_by) = thread::scope(|scope| {
+    let (history, final_x, stopped_by, faults) = thread::scope(|scope| {
         let mut handles = Vec::with_capacity(n);
         for (i, (rx, ctrl)) in rxs.into_iter().zip(ctrl_rxs).enumerate() {
             let row = WeightRow::from_op(w, i);
             // per-edge senders, aligned with the gossip row (ascending j)
-            let neighbors: Vec<(usize, mpsc::Sender<Vec<u8>>)> =
+            let neighbors: Vec<(usize, mpsc::Sender<Arc<[u8]>>)> =
                 row.neighbors.iter().map(|&(j, _)| (j, txs[j].clone())).collect();
             let node_cfg = NodeConfig {
                 id: i,
@@ -242,7 +306,27 @@ pub fn run(
         let mut history: Vec<MetricPoint> = Vec::new();
         let mut final_x: Option<Mat> = None;
         let mut stopped_by: Option<StopReason> = None;
-        while let Ok(rep) = report_rx.recv() {
+        // wire faults (possibly several nodes detecting the same corrupt
+        // broadcast); resolved deterministically after the drain
+        let mut faults: Vec<WireFault> = Vec::new();
+        let mut released_on_fault = false;
+        while let Ok(ev) = report_rx.recv() {
+            let rep = match ev {
+                NodeEvent::Report(r) => r,
+                NodeEvent::Fault(fa) => {
+                    faults.push(fa);
+                    // release checkpoint-blocked nodes, now and at their
+                    // next checkpoint: one queued `false` per node is
+                    // enough, a node stops at the first false it consumes
+                    if gated && !released_on_fault {
+                        released_on_fault = true;
+                        for tx in &ctrl_txs {
+                            let _ = tx.send(false);
+                        }
+                    }
+                    continue;
+                }
+            };
             let slot = pending.entry(rep.round).or_insert_with(|| vec![None; n]);
             let node = rep.node;
             assert!(slot[node].is_none(), "duplicate report from node {node}");
@@ -294,7 +378,7 @@ pub fn run(
                     // checkpoint verdict: every node blocks after a
                     // record_every-multiple before the final round
                     if round % spec.record_every == 0 && round < rounds {
-                        let go = stopped_by.is_none();
+                        let go = stopped_by.is_none() && faults.is_empty();
                         for tx in &ctrl_txs {
                             // a node that already exited is not an error
                             let _ = tx.send(go);
@@ -307,16 +391,40 @@ pub fn run(
         for h in handles {
             h.join().expect("node thread panicked");
         }
-        (history, final_x, stopped_by)
+        (history, final_x, stopped_by, faults)
     });
-    assert!(!history.is_empty(), "no snapshots recorded — node threads died before reporting");
+    // deterministic fault resolution: several neighbors may report the
+    // same corrupt broadcast — pick the earliest round, lowest node id
+    let fault = faults.into_iter().min_by_key(|f| (f.round, f.node));
+    let (mut history, mut final_x) = (history, final_x);
+    if history.is_empty() {
+        // a wire fault before the first complete snapshot: synthesize the
+        // round-0 state from x0 so the RunResult invariants (non-empty
+        // history, final iterate) hold and the fault is still reportable
+        assert!(fault.is_some(), "no snapshots recorded — node threads died before reporting");
+        let x = x0.clone();
+        let m = MetricPoint {
+            round: 0,
+            grad_evals: 0,
+            bits: 0,
+            wire_bytes: 0,
+            suboptimality: suboptimality(&x, x_star),
+            consensus: x.consensus_error(),
+            wall_ns: start.elapsed().as_nanos(),
+        };
+        crate::runner::emit(m, &x, &mut history, probes);
+        final_x = Some(x);
+    }
     let final_x = final_x.expect("final iterate tracked with every snapshot");
-    let stopped_by = match stopped_by {
-        Some(reason) => reason,
+    let stopped_by = match (fault, stopped_by) {
+        // a faulted run's history is truncated mid-flight; reporting any
+        // other stop reason would misrepresent it
+        (Some(f), _) => StopReason::WireFault(f),
+        (None, Some(reason)) => reason,
         // ungated runs always complete the round budget; flag a
         // non-finite landing state as a divergence after the fact
-        None if final_x.is_finite() => StopReason::MaxRounds,
-        None => StopReason::Diverged,
+        (None, None) if final_x.is_finite() => StopReason::MaxRounds,
+        (None, None) => StopReason::Diverged,
     };
 
     let result = RunResult {

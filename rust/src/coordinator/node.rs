@@ -25,11 +25,33 @@
 //! (`Dense64`). Frames are therefore collected into per-neighbor slots
 //! *before* mixing; arrival order never touches the arithmetic.
 //!
-//! The synchronous-round barrier: a fast neighbor may already have sent its
-//! round-(k+1) frame while this node still collects round k (it only needed
-//! OUR round-k frame to advance, not our slow neighbor's), so ahead-of-round
-//! frames are buffered; behind-round frames indicate a protocol violation
-//! and panic.
+//! **Zero-alloc hot path.** All per-round buffers — the outgoing payload,
+//! the frame build buffer, the decoded own-payload, the per-neighbor
+//! decode slots, the ahead-of-round stash — are allocated once before the
+//! round loop and reused; encode/decode run through the scratch APIs
+//! ([`super::wire::WireCodec::encode_into`]/`decode_into`,
+//! [`super::wire::FrameRef::parse`]). The only per-round allocation is the
+//! single refcounted transport buffer (`Arc<[u8]>`) the channel handoff
+//! requires — one per broadcast, not one per neighbor.
+//!
+//! **Panic-free receive path + teardown protocol.** A malformed frame is
+//! detected as a typed [`WireError`] (never a panic), reported to the
+//! leader as a [`WireFault`], and followed by an `ABORT` flood so every
+//! neighbor blocked on the synchronous barrier unblocks instead of
+//! deadlocking on a dead peer; receivers of `ABORT` re-flood and exit, so
+//! the teardown wave covers any connected graph. Clean exits (round budget
+//! done, leader stop verdict) flood `BYE` — "no more frames from me" —
+//! which is harmless to a peer that already holds this node's frames but
+//! fatal (teardown, no fault report) to one that still *needs* a frame
+//! this sender can no longer send; that situation only arises downstream
+//! of a fault, where the leader releases checkpoint-blocked nodes early.
+//!
+//! The synchronous-round barrier bounds skew to exactly one round: a
+//! neighbor can only start round k+1 after receiving our round-k frame,
+//! and can therefore send us nothing beyond round k+1 while we still
+//! gather round k. A single reused one-round-ahead stash replaces any
+//! general future-frame map; a frame two or more rounds ahead (or stale)
+//! is a protocol violation reported as [`WireError::RoundSkew`].
 //!
 //! **Early stop (leader gating).** When the run's
 //! [`crate::runner::StopSet`] carries a criterion the leader must observe
@@ -42,12 +64,13 @@
 //! engine. Between checkpoints nodes free-run exactly as in the ungated
 //! case.
 
-use super::wire::Frame;
-use super::{CoordConfig, NodeReport};
+use super::wire::{self, Frame, FrameRef, WireCodec, WireError, WireFault, ABORT_TAG, BYE_TAG};
+use super::{CoordConfig, NodeEvent, NodeReport, TamperKind};
 use crate::graph::MixingOp;
-use crate::linalg::Mat;
+use crate::linalg::{vaxpy, Mat};
 use crate::util::rng::Rng;
 use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
 
 /// One node's half of a decentralized algorithm (see the module docs).
 /// Implementations live in [`super::algorithms`]; the name-dispatching
@@ -137,7 +160,10 @@ impl WeightRow {
 
     /// The one copy of the order-sensitive accumulation loop both mixes
     /// share: diagonal spliced before the first neighbor with j > node,
-    /// ascending j throughout, zero weights skipped.
+    /// ascending j throughout, zero weights skipped. The axpy itself is
+    /// the shared chunked kernel ([`crate::linalg::vaxpy`]) the engine's
+    /// matmul/SpMM inner loops also run — same per-element order, so the
+    /// bit-exactness contract survives the vectorization-friendly shape.
     fn mix_with<'a>(&self, out: &mut [f64], own: &[f64], peer: impl Fn(usize) -> &'a [f64]) {
         out.iter_mut().for_each(|o| *o = 0.0);
         let mut placed = false;
@@ -160,9 +186,7 @@ fn acc(out: &mut [f64], w: f64, v: &[f64]) {
     if w == 0.0 {
         return;
     }
-    for (o, &x) in out.iter_mut().zip(v) {
-        *o += w * x;
-    }
+    vaxpy(out, w, v);
 }
 
 /// Everything a node thread needs besides its algorithm half.
@@ -170,13 +194,13 @@ pub struct NodeConfig {
     pub id: usize,
     /// (neighbor id, sender into that neighbor's inbox), ascending id —
     /// aligned with the algorithm's [`WeightRow`].
-    pub neighbors: Vec<(usize, Sender<Vec<u8>>)>,
-    pub inbox: Receiver<Vec<u8>>,
-    pub reports: Sender<NodeReport>,
+    pub neighbors: Vec<(usize, Sender<Arc<[u8]>>)>,
+    pub inbox: Receiver<Arc<[u8]>>,
+    pub reports: Sender<NodeEvent>,
     /// Leader gating channel (`Some` when the run's stop set needs leader
     /// observation): `true` = continue past the checkpoint, `false` = stop.
     pub control: Option<Receiver<bool>>,
-    /// Wire-level knobs: codec, straggler model, RNG seed.
+    /// Wire-level knobs: codec, straggler model, RNG seed, tamper.
     pub wire: CoordConfig,
     /// Counted algorithm rounds (setup rounds excluded).
     pub rounds: usize,
@@ -184,6 +208,100 @@ pub struct NodeConfig {
     pub record_every: usize,
     /// Parameter dimension p (frame payloads decode to this length).
     pub dim: usize,
+}
+
+/// Outcome of absorbing one received buffer into the current round.
+enum Gather {
+    /// Decoded into its neighbor slot for round k.
+    Consumed,
+    /// A round-(k+1) frame from a fast neighbor, stashed for next round.
+    Ahead,
+    /// Fault-teardown flood: re-flood and exit.
+    Abort,
+    /// Clean goodbye from `slot`: fatal only if that neighbor's frame is
+    /// still owed this round (or any later round).
+    Bye(usize),
+}
+
+/// Parse + validate + decode one received buffer. Total: every malformed
+/// or protocol-violating input comes back as `Err(WireError)`.
+fn absorb(
+    raw: Arc<[u8]>,
+    k: u32,
+    expected_tag: u8,
+    codec: &WireCodec,
+    peers: &mut [(usize, Vec<f64>)],
+    filled: &mut [bool],
+    ahead_next: &mut Vec<Arc<[u8]>>,
+) -> Result<Gather, WireError> {
+    let f = FrameRef::parse(&raw)?;
+    let (tag, round, from) = (f.tag, f.round, f.from);
+    if tag == ABORT_TAG {
+        return Ok(Gather::Abort);
+    }
+    let slot = match peers.binary_search_by_key(&(from as usize), |&(j, _)| j) {
+        Ok(s) => s,
+        Err(_) => return Err(WireError::NonNeighbor { from }),
+    };
+    if tag == BYE_TAG {
+        return Ok(Gather::Bye(slot));
+    }
+    if tag != expected_tag {
+        return Err(if WireCodec::known_tag(tag) {
+            WireError::TagMismatch { expected: expected_tag, got: tag }
+        } else {
+            WireError::UnknownTag { tag }
+        });
+    }
+    if round != k {
+        // the synchronous barrier bounds honest skew to exactly +1 (a
+        // neighbor needs OUR round-k frame to get past round k)
+        if round == k + 1 {
+            ahead_next.push(raw);
+            return Ok(Gather::Ahead);
+        }
+        return Err(WireError::RoundSkew { from, frame_round: round, expect: k });
+    }
+    if filled[slot] {
+        return Err(WireError::DuplicateFrame { from, round: k });
+    }
+    codec.decode_into(f.payload, &mut peers[slot].1)?;
+    filled[slot] = true;
+    Ok(Gather::Consumed)
+}
+
+/// Flood a payload-less control frame (ABORT or BYE) to every neighbor.
+/// Send failures mean the peer already exited — ignored by design.
+fn flood(neighbors: &[(usize, Sender<Arc<[u8]>>)], tag: u8, round: u32, me: u16) {
+    let mut buf = Vec::with_capacity(Frame::HEADER_LEN);
+    wire::frame_begin(&mut buf, tag, round, me);
+    wire::frame_end(&mut buf);
+    let buf: Arc<[u8]> = Arc::from(buf.as_slice());
+    for (_, tx) in neighbors {
+        let _ = tx.send(Arc::clone(&buf));
+    }
+}
+
+/// Corrupt an outgoing frame buffer in a prescribed way (test/chaos hook;
+/// see [`super::FrameTamper`]).
+fn apply_tamper(buf: &mut Vec<u8>, kind: TamperKind) {
+    match kind {
+        TamperKind::TruncateHeader => buf.truncate(6),
+        TamperKind::ShortPayload => {
+            buf.pop();
+        }
+        TamperKind::OverlongPayload => {
+            buf.extend_from_slice(&[0u8; 8]);
+            wire::frame_end(buf); // re-patch: header now claims the extra bytes
+        }
+        TamperKind::TrailingGarbage => buf.extend_from_slice(&[0xDE, 0xAD]),
+        TamperKind::UnknownTag => buf[0] = 0x7E,
+        TamperKind::WrongCodecTag => buf[0] = if buf[0] == 0 { 1 } else { 0 },
+        TamperKind::BadQuantNorm => {
+            buf[Frame::HEADER_LEN..Frame::HEADER_LEN + 4]
+                .copy_from_slice(&f32::NAN.to_bits().to_be_bytes());
+        }
+    }
 }
 
 /// Drive one node's algorithm through `setup + rounds` wire exchanges.
@@ -196,79 +314,134 @@ pub struct NodeConfig {
 pub fn run_node(mut alg: Box<dyn NodeAlgorithm>, nc: NodeConfig) {
     let me = nc.id;
     let p = nc.dim;
-    let wire = &nc.wire;
+    let wire_cfg = &nc.wire;
     // deterministic per-node streams: compression dither + straggler coin
-    let mut comp_rng = Rng::new(wire.seed).fork(me as u64);
-    let mut fault_rng = Rng::new(wire.seed ^ 0x5747_4C52).fork(me as u64);
+    let mut comp_rng = Rng::new(wire_cfg.seed).fork(me as u64);
+    let mut fault_rng = Rng::new(wire_cfg.seed ^ 0x5747_4C52).fork(me as u64);
 
     let setup = alg.setup_rounds();
     let total = setup + nc.rounds;
     let deg = nc.neighbors.len();
+    let expected_tag = wire_cfg.codec.tag();
+
+    // round-persistent scratch — allocated once, reused every round
     let mut payload = vec![0.0; p];
-    // decoded neighbor payloads for the current round, one slot per gossip
-    // neighbor (ascending id); an empty vec marks "not yet received"
+    let mut q_own = vec![0.0; p];
+    let mut frame_buf: Vec<u8> = Vec::with_capacity(Frame::HEADER_LEN + p * 8 + 8);
     let mut peers: Vec<(usize, Vec<f64>)> =
-        nc.neighbors.iter().map(|&(j, _)| (j, Vec::new())).collect();
-    // frames from neighbors that are a round ahead of us
-    let mut future: std::collections::HashMap<u32, Vec<Frame>> = std::collections::HashMap::new();
+        nc.neighbors.iter().map(|&(j, _)| (j, vec![0.0; p])).collect();
+    let mut filled = vec![false; deg];
+    let mut departed = vec![false; deg];
+    // raw round-(k+1) buffers from fast neighbors; swapped each round
+    let mut ahead: Vec<Arc<[u8]>> = Vec::with_capacity(deg);
+    let mut ahead_next: Vec<Arc<[u8]>> = Vec::with_capacity(deg);
     let (mut bytes_sent, mut payload_bits) = (0u64, 0u64);
+
+    // fault teardown: flood ABORT, report the typed fault, exit
+    let fault = |e: WireError, k: usize| {
+        flood(&nc.neighbors, ABORT_TAG, k as u32, me as u16);
+        let _ = nc.reports.send(NodeEvent::Fault(WireFault {
+            node: me as u16,
+            round: k as u32,
+            error: e,
+        }));
+    };
+    // secondary teardown (a peer died or said goodbye mid-gather): keep the
+    // wave moving but report nothing — the detecting node already did
+    let teardown = |k: usize| flood(&nc.neighbors, ABORT_TAG, k as u32, me as u16);
 
     for k in 0..total {
         if k == setup {
             // round-0 report: the post-initialization state (engine: the
             // sample taken before the first step). Setup-round wire costs
             // (P2D2's init exchange) are already in the counters.
-            nc.reports
-                .send(NodeReport {
-                    node: me,
-                    round: 0,
-                    x: alg.x().to_vec(),
-                    bytes_sent,
-                    payload_bits,
-                    grad_evals: alg.grad_evals(),
-                })
-                .expect("leader gone");
+            let sent = nc.reports.send(NodeEvent::Report(NodeReport {
+                node: me,
+                round: 0,
+                x: alg.x().to_vec(),
+                bytes_sent,
+                payload_bits,
+                grad_evals: alg.grad_evals(),
+            }));
+            if sent.is_err() {
+                return;
+            }
         }
         alg.outgoing(&mut payload);
-        let (frame_bytes, q_own, bits) = wire.codec.encode(&payload, &mut comp_rng);
+        wire::frame_begin(&mut frame_buf, expected_tag, k as u32, me as u16);
+        let bits = wire_cfg.codec.encode_into(&payload, &mut comp_rng, &mut q_own, &mut frame_buf);
+        wire::frame_end(&mut frame_buf);
         payload_bits += bits;
-        let frame = Frame { round: k as u32, from: me as u16, payload: frame_bytes };
-        let buf = frame.to_bytes(&wire.codec);
+        if let Some(t) = wire_cfg.tamper {
+            if t.node == me && t.round == k {
+                apply_tamper(&mut frame_buf, t.kind);
+            }
+        }
+        // one refcounted buffer for the whole broadcast — the round's only
+        // allocation (channel handoff needs ownership)
+        let buf: Arc<[u8]> = Arc::from(frame_buf.as_slice());
         for (_, tx) in &nc.neighbors {
-            if let Some(s) = wire.straggler {
+            if let Some(s) = wire_cfg.straggler {
                 if fault_rng.bernoulli(s.prob) {
                     std::thread::sleep(s.delay);
                 }
             }
             bytes_sent += buf.len() as u64;
-            tx.send(buf.clone()).expect("peer inbox closed");
+            if tx.send(Arc::clone(&buf)).is_err() {
+                // peer gone mid-run: only happens downstream of a fault or
+                // an early leader release — join the teardown wave
+                teardown(k);
+                return;
+            }
         }
 
         // barrier: exactly one frame per neighbor, slotted by sender id so
         // arrival order never reaches the arithmetic
-        for (_, v) in peers.iter_mut() {
-            v.clear();
-        }
+        filled.iter_mut().for_each(|f| *f = false);
         let mut got = 0usize;
-        let mut take = |f: Frame, peers: &mut Vec<(usize, Vec<f64>)>, got: &mut usize| {
-            let slot = peers
-                .binary_search_by_key(&(f.from as usize), |&(j, _)| j)
-                .unwrap_or_else(|_| panic!("frame from non-neighbor {}", f.from));
-            assert!(peers[slot].1.is_empty(), "duplicate frame from node {}", f.from);
-            peers[slot].1 = wire.codec.decode(&f.payload, p);
-            *got += 1;
-        };
-        for f in future.remove(&(k as u32)).unwrap_or_default() {
-            take(f, &mut peers, &mut got);
+        std::mem::swap(&mut ahead, &mut ahead_next);
+        for raw in ahead.drain(..) {
+            match absorb(raw, k as u32, expected_tag, &wire_cfg.codec, &mut peers, &mut filled, &mut ahead_next)
+            {
+                Ok(Gather::Consumed) => got += 1,
+                Ok(Gather::Ahead) => {}
+                Ok(Gather::Bye(slot)) => departed[slot] = true,
+                Ok(Gather::Abort) => {
+                    teardown(k);
+                    return;
+                }
+                Err(e) => {
+                    fault(e, k);
+                    return;
+                }
+            }
         }
         while got < deg {
-            let raw = nc.inbox.recv().expect("inbox closed mid-round");
-            let (_, f) = Frame::from_bytes(&raw).expect("malformed frame");
-            if (f.round as usize) > k {
-                future.entry(f.round).or_default().push(f);
-            } else {
-                assert_eq!(f.round as usize, k, "stale frame from node {}", f.from);
-                take(f, &mut peers, &mut got);
+            // a departed neighbor can never fill its owed slot — tear down
+            // instead of blocking forever
+            if filled.iter().zip(&departed).any(|(&f, &d)| d && !f) {
+                teardown(k);
+                return;
+            }
+            let raw = match nc.inbox.recv() {
+                Ok(r) => r,
+                // every sender dropped without a goodbye: fault teardown
+                // already in flight elsewhere
+                Err(_) => return,
+            };
+            match absorb(raw, k as u32, expected_tag, &wire_cfg.codec, &mut peers, &mut filled, &mut ahead_next)
+            {
+                Ok(Gather::Consumed) => got += 1,
+                Ok(Gather::Ahead) => {}
+                Ok(Gather::Bye(slot)) => departed[slot] = true,
+                Ok(Gather::Abort) => {
+                    teardown(k);
+                    return;
+                }
+                Err(e) => {
+                    fault(e, k);
+                    return;
+                }
             }
         }
 
@@ -277,16 +450,17 @@ pub fn run_node(mut alg: Box<dyn NodeAlgorithm>, nc: NodeConfig) {
         if k >= setup {
             let step = k - setup + 1;
             if step % nc.record_every == 0 || step == nc.rounds {
-                nc.reports
-                    .send(NodeReport {
-                        node: me,
-                        round: step,
-                        x: alg.x().to_vec(),
-                        bytes_sent,
-                        payload_bits,
-                        grad_evals: alg.grad_evals(),
-                    })
-                    .expect("leader gone");
+                let sent = nc.reports.send(NodeEvent::Report(NodeReport {
+                    node: me,
+                    round: step,
+                    x: alg.x().to_vec(),
+                    bytes_sent,
+                    payload_bits,
+                    grad_evals: alg.grad_evals(),
+                }));
+                if sent.is_err() {
+                    return;
+                }
             }
             // checkpoint gate: wait for the leader's continue/stop verdict
             // (sent for every flushed multiple of record_every before the
@@ -294,13 +468,17 @@ pub fn run_node(mut alg: Box<dyn NodeAlgorithm>, nc: NodeConfig) {
             // lands network-wide on one round)
             if step % nc.record_every == 0 && step < nc.rounds {
                 if let Some(ctrl) = &nc.control {
-                    if !ctrl.recv().expect("leader gone at checkpoint") {
+                    if !ctrl.recv().unwrap_or(false) {
                         break;
                     }
                 }
             }
         }
     }
+    // clean exit: tell the neighborhood no more frames are coming (harmless
+    // when everyone stops at the same round; unblocks stragglers when the
+    // leader released this node early after a fault)
+    flood(&nc.neighbors, BYE_TAG, total as u32, me as u16);
 }
 
 #[cfg(test)]
@@ -363,5 +541,51 @@ mod tests {
         assert_eq!(lazy.neighbors, wl.neighbors(3));
         let mi = row.minus_identity();
         assert_eq!(mi.self_weight.to_bits(), op.minus_identity().self_weight(3).to_bits());
+    }
+
+    #[test]
+    fn absorb_rejects_protocol_violations() {
+        let codec = WireCodec::Dense64;
+        let mk = |round: u32, from: u16, payload: Vec<u8>| -> Arc<[u8]> {
+            let f = Frame { round, from, payload };
+            Arc::from(f.to_bytes(&codec).as_slice())
+        };
+        let p = 3usize;
+        let good = vec![0u8; p * 8];
+        let mut peers = vec![(1usize, vec![0.0; p]), (4usize, vec![0.0; p])];
+        let mut filled = vec![false; 2];
+        let mut ahead = Vec::new();
+        let k = 5u32;
+        macro_rules! run {
+            ($raw:expr) => {
+                absorb($raw, k, codec.tag(), &codec, &mut peers, &mut filled, &mut ahead)
+                    .map(|_| ())
+            };
+        }
+        // non-neighbor sender
+        assert_eq!(run!(mk(k, 2, good.clone())), Err(WireError::NonNeighbor { from: 2 }));
+        // stale and too-far-ahead rounds
+        assert_eq!(
+            run!(mk(k - 1, 1, good.clone())),
+            Err(WireError::RoundSkew { from: 1, frame_round: k - 1, expect: k })
+        );
+        assert_eq!(
+            run!(mk(k + 2, 1, good.clone())),
+            Err(WireError::RoundSkew { from: 1, frame_round: k + 2, expect: k })
+        );
+        // duplicate after a good frame
+        assert!(run!(mk(k, 1, good.clone())).is_ok());
+        assert_eq!(
+            run!(mk(k, 1, good.clone())),
+            Err(WireError::DuplicateFrame { from: 1, round: k })
+        );
+        // one round ahead is buffered, not an error
+        assert!(run!(mk(k + 1, 4, good.clone())).is_ok());
+        assert_eq!(ahead.len(), 1);
+        // short dense payload surfaces the codec error
+        assert_eq!(
+            run!(mk(k, 4, vec![0u8; p * 8 - 1])),
+            Err(WireError::PayloadSize { expected: p * 8, got: p * 8 - 1 })
+        );
     }
 }

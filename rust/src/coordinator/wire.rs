@@ -11,14 +11,148 @@
 //! - tag 0 `DENSE64`: p×8 bytes little-endian f64 (identity compressor);
 //! - tag 1 `DENSE32`: p×4 bytes f32 (the "32bit" baselines);
 //! - tag 2 `QUANT`: the bit-packed ∞-norm quantizer stream of
-//!   [`crate::compress::bits::encode_inf_quantized`].
+//!   [`crate::compress::bits::encode_inf_quantized_into`];
+//! - tag 0xFF `ABORT`: empty payload, floods a fatal fault through the
+//!   network so neighbors unblock instead of deadlocking on a dead peer.
 //!
 //! Decoding is deterministic, so the sender-side decoded Qᵢ (needed for
 //! its own H update) and every receiver's decode agree bit-exactly — the
 //! property the COMM error compensation relies on.
+//!
+//! # Panic-free pull parsing and caller-provided scratch
+//!
+//! The receive path is *total*: [`FrameRef::parse`] borrows the raw bytes
+//! (no payload copy) and every malformed input — truncated header, short
+//! or overlong payload, trailing garbage, unknown tag, corrupt quantizer
+//! block — comes back as a typed [`WireError`], never a panic. The send
+//! path is allocation-free per round: [`frame_begin`]/[`frame_end`]
+//! build the header in a reused buffer, [`WireCodec::encode_into`]
+//! appends the payload to it, and [`WireCodec::decode_into`] writes into
+//! a reused `&mut [f64]`. The allocating [`WireCodec::encode`] wrapper
+//! remains for one-shot call sites (tests, benches).
 
-use crate::compress::bits::{decode_inf_quantized, encode_inf_quantized};
+use crate::compress::bits::{
+    decode_inf_quantized_into, encode_inf_quantized, encode_inf_quantized_into, QuantError,
+};
 use crate::util::rng::Rng;
+use std::fmt;
+
+/// Frame tag announcing a fatal fault; the payload is empty. Nodes that
+/// receive it re-flood and exit, so one corrupt frame tears the run down
+/// deterministically instead of deadlocking the synchronous barrier.
+pub const ABORT_TAG: u8 = 0xFF;
+
+/// Frame tag for a clean goodbye ("no more frames from me"); the payload
+/// is empty. Harmless to peers that already hold this sender's frames;
+/// fatal to a peer still owed one — which only happens downstream of a
+/// fault, where it unblocks the synchronous barrier (see
+/// [`super::node`]'s teardown protocol).
+pub const BYE_TAG: u8 = 0xFE;
+
+/// A wire fault as reported to the leader: which node detected what, and
+/// in which round. Rides inside [`crate::runner::StopReason::WireFault`]
+/// so a corrupt frame surfaces as a reported run outcome.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WireFault {
+    /// The node that *detected* the fault (not the sender of the bad frame).
+    pub node: u16,
+    /// The detecting node's wire round (setup rounds included).
+    pub round: u32,
+    pub error: WireError,
+}
+
+impl fmt::Display for WireFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "node {} at round {}: {}", self.node, self.round, self.error)
+    }
+}
+
+/// Everything that can go wrong turning received bytes back into a
+/// payload vector. `Copy + Eq` so it can ride inside
+/// [`crate::runner::StopReason`] without touching that enum's derives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// Fewer than [`Frame::HEADER_LEN`] bytes.
+    TruncatedHeader { len: usize },
+    /// The header's payload_len promises more bytes than were received.
+    TruncatedPayload { need: usize, got: usize },
+    /// Bytes beyond the framed length (or spare whole bytes after a
+    /// quantizer stream).
+    TrailingBytes { expected: usize, got: usize },
+    /// A tag no codec in this build understands.
+    UnknownTag { tag: u8 },
+    /// A valid codec tag, but not the codec this run negotiated.
+    TagMismatch { expected: u8, got: u8 },
+    /// Dense payload whose byte length does not match the vector length.
+    PayloadSize { expected: usize, got: usize },
+    /// Quantizer bitstream ran dry mid-block.
+    TruncatedBitstream { need_bits: usize, got_bits: usize },
+    /// Quantizer block header norm is NaN or negative.
+    BadBlockNorm { block: usize },
+    /// Frame from a node that is not a neighbor on this edge set.
+    NonNeighbor { from: u16 },
+    /// Second frame from the same neighbor in one round.
+    DuplicateFrame { from: u16, round: u32 },
+    /// Frame round outside the one-round skew the synchronous barrier
+    /// allows (stale, or more than one round ahead).
+    RoundSkew { from: u16, frame_round: u32, expect: u32 },
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            WireError::TruncatedHeader { len } => {
+                write!(f, "truncated header: {len} of {} bytes", Frame::HEADER_LEN)
+            }
+            WireError::TruncatedPayload { need, got } => {
+                write!(f, "truncated payload: header promises {need} bytes, got {got}")
+            }
+            WireError::TrailingBytes { expected, got } => {
+                write!(f, "trailing bytes: expected {expected}, got {got}")
+            }
+            WireError::UnknownTag { tag } => write!(f, "unknown frame tag {tag:#04x}"),
+            WireError::TagMismatch { expected, got } => {
+                write!(f, "codec tag mismatch: negotiated {expected}, frame carries {got}")
+            }
+            WireError::PayloadSize { expected, got } => {
+                write!(f, "dense payload size mismatch: expected {expected} bytes, got {got}")
+            }
+            WireError::TruncatedBitstream { need_bits, got_bits } => {
+                write!(f, "quant stream truncated: need {need_bits} bits, have {got_bits}")
+            }
+            WireError::BadBlockNorm { block } => {
+                write!(f, "quant block {block} has a NaN or negative norm")
+            }
+            WireError::NonNeighbor { from } => write!(f, "frame from non-neighbor node {from}"),
+            WireError::DuplicateFrame { from, round } => {
+                write!(f, "duplicate frame from node {from} in round {round}")
+            }
+            WireError::RoundSkew { from, frame_round, expect } => {
+                write!(
+                    f,
+                    "round skew from node {from}: frame round {frame_round}, expected {expect} \
+                     (±1 ahead allowed)"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<QuantError> for WireError {
+    fn from(e: QuantError) -> WireError {
+        match e {
+            QuantError::Truncated { need_bits, have_bits } => {
+                WireError::TruncatedBitstream { need_bits, got_bits: have_bits }
+            }
+            QuantError::BadBlockNorm { block } => WireError::BadBlockNorm { block },
+            QuantError::TrailingBytes { used_bytes, got_bytes } => {
+                WireError::TrailingBytes { expected: used_bytes, got: got_bytes }
+            }
+        }
+    }
+}
 
 /// How a node's payload is put on the wire.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -30,53 +164,111 @@ pub enum WireCodec {
 }
 
 impl WireCodec {
-    /// Encode `x`; returns (wire bytes, decoded values both sides agree
-    /// on, accounted payload bits).
-    pub fn encode(&self, x: &[f64], rng: &mut Rng) -> (Vec<u8>, Vec<f64>, u64) {
+    /// Encode `x`, appending wire bytes to `out` and writing the decoded
+    /// values both sides agree on into `decoded`. Returns the accounted
+    /// payload bits. Allocation-free once `out`'s capacity has warmed up.
+    pub fn encode_into(
+        &self,
+        x: &[f64],
+        rng: &mut Rng,
+        decoded: &mut [f64],
+        out: &mut Vec<u8>,
+    ) -> u64 {
+        debug_assert_eq!(decoded.len(), x.len(), "decoded scratch length mismatch");
         match *self {
             WireCodec::Dense64 => {
-                let mut bytes = Vec::with_capacity(x.len() * 8);
-                for &v in x {
-                    bytes.extend_from_slice(&v.to_le_bytes());
+                for (&v, d) in x.iter().zip(decoded.iter_mut()) {
+                    out.extend_from_slice(&v.to_le_bytes());
+                    *d = v;
                 }
-                (bytes, x.to_vec(), 64 * x.len() as u64)
+                64 * x.len() as u64
             }
             WireCodec::Dense32 => {
-                let mut bytes = Vec::with_capacity(x.len() * 4);
-                let mut decoded = Vec::with_capacity(x.len());
-                for &v in x {
+                for (&v, d) in x.iter().zip(decoded.iter_mut()) {
                     let f = v as f32;
-                    bytes.extend_from_slice(&f.to_le_bytes());
-                    decoded.push(f as f64);
+                    out.extend_from_slice(&f.to_le_bytes());
+                    *d = f as f64;
                 }
-                (bytes, decoded, 32 * x.len() as u64)
+                32 * x.len() as u64
             }
-            WireCodec::Quant(bits, block) => encode_inf_quantized(x, bits, block, rng),
+            WireCodec::Quant(bits, block) => {
+                encode_inf_quantized_into(x, bits, block, rng, decoded, out)
+            }
         }
     }
 
-    pub fn decode(&self, bytes: &[u8], n: usize) -> Vec<f64> {
+    /// Decode a received payload into `out` (whose length fixes the
+    /// expected vector length). Total over arbitrary bytes: malformed
+    /// payloads return a [`WireError`]; nothing panics, nothing allocates.
+    pub fn decode_into(&self, payload: &[u8], out: &mut [f64]) -> Result<(), WireError> {
         match *self {
-            WireCodec::Dense64 => bytes
-                .chunks_exact(8)
-                .take(n)
-                .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
-                .collect(),
-            WireCodec::Dense32 => bytes
-                .chunks_exact(4)
-                .take(n)
-                .map(|c| f32::from_le_bytes(c.try_into().unwrap()) as f64)
-                .collect(),
-            WireCodec::Quant(bits, block) => decode_inf_quantized(bytes, n, bits, block),
+            WireCodec::Dense64 => {
+                if payload.len() != out.len() * 8 {
+                    return Err(WireError::PayloadSize {
+                        expected: out.len() * 8,
+                        got: payload.len(),
+                    });
+                }
+                for (chunk, slot) in payload.chunks_exact(8).zip(out.iter_mut()) {
+                    let mut b = [0u8; 8];
+                    b.copy_from_slice(chunk);
+                    *slot = f64::from_le_bytes(b);
+                }
+                Ok(())
+            }
+            WireCodec::Dense32 => {
+                if payload.len() != out.len() * 4 {
+                    return Err(WireError::PayloadSize {
+                        expected: out.len() * 4,
+                        got: payload.len(),
+                    });
+                }
+                for (chunk, slot) in payload.chunks_exact(4).zip(out.iter_mut()) {
+                    let mut b = [0u8; 4];
+                    b.copy_from_slice(chunk);
+                    *slot = f32::from_le_bytes(b) as f64;
+                }
+                Ok(())
+            }
+            WireCodec::Quant(bits, block) => {
+                decode_inf_quantized_into(payload, bits, block, out).map_err(WireError::from)
+            }
         }
     }
 
-    fn tag(&self) -> u8 {
+    /// Allocating one-shot encode; returns (wire bytes, decoded values
+    /// both sides agree on, accounted payload bits).
+    pub fn encode(&self, x: &[f64], rng: &mut Rng) -> (Vec<u8>, Vec<f64>, u64) {
+        match *self {
+            WireCodec::Quant(bits, block) => encode_inf_quantized(x, bits, block, rng),
+            _ => {
+                let mut bytes = Vec::with_capacity(x.len() * 8);
+                let mut decoded = vec![0.0; x.len()];
+                let bits = self.encode_into(x, rng, &mut decoded, &mut bytes);
+                (bytes, decoded, bits)
+            }
+        }
+    }
+
+    /// Checked one-shot decode (allocating convenience over
+    /// [`WireCodec::decode_into`]).
+    pub fn decode(&self, payload: &[u8], n: usize) -> Result<Vec<f64>, WireError> {
+        let mut out = vec![0.0; n];
+        self.decode_into(payload, &mut out)?;
+        Ok(out)
+    }
+
+    pub fn tag(&self) -> u8 {
         match self {
             WireCodec::Dense64 => 0,
             WireCodec::Dense32 => 1,
             WireCodec::Quant(..) => 2,
         }
+    }
+
+    /// Is `tag` any codec this build understands (ABORT excluded)?
+    pub fn known_tag(tag: u8) -> bool {
+        tag <= 2
     }
 
     /// Assumption-2 style noise bound (0 for the dense codecs).
@@ -93,7 +285,63 @@ impl WireCodec {
     }
 }
 
-/// One framed round message.
+/// Start a frame in a reused buffer: clears it and writes the header with
+/// a zero payload_len placeholder. Append the payload (e.g. via
+/// [`WireCodec::encode_into`]), then call [`frame_end`] to patch the
+/// length. Allocation-free once the buffer's capacity has warmed up.
+pub fn frame_begin(out: &mut Vec<u8>, tag: u8, round: u32, from: u16) {
+    out.clear();
+    out.push(tag);
+    out.extend_from_slice(&round.to_le_bytes());
+    out.extend_from_slice(&from.to_le_bytes());
+    out.extend_from_slice(&0u32.to_le_bytes());
+}
+
+/// Patch the payload_len field once the payload has been appended.
+pub fn frame_end(out: &mut Vec<u8>) {
+    debug_assert!(out.len() >= Frame::HEADER_LEN, "frame_end before frame_begin");
+    let len = (out.len() - Frame::HEADER_LEN) as u32;
+    out[7..11].copy_from_slice(&len.to_le_bytes());
+}
+
+/// A parsed frame borrowing the receive buffer — the pull-style view the
+/// node hot loop uses; no payload copy, no allocation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FrameRef<'a> {
+    pub tag: u8,
+    pub round: u32,
+    pub from: u16,
+    pub payload: &'a [u8],
+}
+
+impl<'a> FrameRef<'a> {
+    /// Total parse of a received buffer. The buffer must contain exactly
+    /// one frame: short buffers, payloads shorter than the header's
+    /// payload_len, and trailing garbage are all typed errors.
+    pub fn parse(buf: &'a [u8]) -> Result<FrameRef<'a>, WireError> {
+        if buf.len() < Frame::HEADER_LEN {
+            return Err(WireError::TruncatedHeader { len: buf.len() });
+        }
+        let tag = buf[0];
+        let mut b4 = [0u8; 4];
+        b4.copy_from_slice(&buf[1..5]);
+        let round = u32::from_le_bytes(b4);
+        let from = u16::from_le_bytes([buf[5], buf[6]]);
+        b4.copy_from_slice(&buf[7..11]);
+        let len = u32::from_le_bytes(b4) as usize;
+        let framed = Frame::HEADER_LEN + len;
+        if buf.len() < framed {
+            return Err(WireError::TruncatedPayload { need: framed, got: buf.len() });
+        }
+        if buf.len() > framed {
+            return Err(WireError::TrailingBytes { expected: framed, got: buf.len() });
+        }
+        Ok(FrameRef { tag, round, from, payload: &buf[Frame::HEADER_LEN..] })
+    }
+}
+
+/// One framed round message, owned form (tests and frame construction;
+/// the hot loop parses with [`FrameRef`] instead).
 #[derive(Clone, Debug)]
 pub struct Frame {
     pub round: u32,
@@ -111,27 +359,10 @@ impl Frame {
     /// real deployment would carry).
     pub fn to_bytes(&self, codec: &WireCodec) -> Vec<u8> {
         let mut out = Vec::with_capacity(Frame::HEADER_LEN + self.payload.len());
-        out.push(codec.tag());
-        out.extend_from_slice(&self.round.to_le_bytes());
-        out.extend_from_slice(&self.from.to_le_bytes());
-        out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        frame_begin(&mut out, codec.tag(), self.round, self.from);
         out.extend_from_slice(&self.payload);
+        frame_end(&mut out);
         out
-    }
-
-    pub fn from_bytes(buf: &[u8]) -> Option<(u8, Frame)> {
-        if buf.len() < Frame::HEADER_LEN {
-            return None;
-        }
-        let tag = buf[0];
-        let round = u32::from_le_bytes(buf[1..5].try_into().ok()?);
-        let from = u16::from_le_bytes(buf[5..7].try_into().ok()?);
-        let len = u32::from_le_bytes(buf[7..11].try_into().ok()?) as usize;
-        if buf.len() < Frame::HEADER_LEN + len {
-            return None;
-        }
-        let payload = buf[Frame::HEADER_LEN..Frame::HEADER_LEN + len].to_vec();
-        Some((tag, Frame { round, from, payload }))
     }
 }
 
@@ -146,11 +377,11 @@ mod tests {
         let (bytes, decoded, bits) = WireCodec::Dense64.encode(&x, &mut rng);
         assert_eq!(decoded, x);
         assert_eq!(bits, 256);
-        assert_eq!(WireCodec::Dense64.decode(&bytes, 4), x);
+        assert_eq!(WireCodec::Dense64.decode(&bytes, 4).unwrap(), x);
 
         let (bytes32, dec32, bits32) = WireCodec::Dense32.encode(&x, &mut rng);
         assert_eq!(bits32, 128);
-        assert_eq!(WireCodec::Dense32.decode(&bytes32, 4), dec32);
+        assert_eq!(WireCodec::Dense32.decode(&bytes32, 4).unwrap(), dec32);
         assert!((dec32[1] - x[1]).abs() < 1e-6);
     }
 
@@ -160,8 +391,41 @@ mod tests {
         let x: Vec<f64> = (0..300).map(|_| rng.normal()).collect();
         let codec = WireCodec::Quant(2, 256);
         let (bytes, decoded, _) = codec.encode(&x, &mut rng);
-        let recv = codec.decode(&bytes, 300);
+        let recv = codec.decode(&bytes, 300).unwrap();
         assert_eq!(decoded, recv, "sender/receiver decode divergence");
+    }
+
+    #[test]
+    fn encode_into_matches_one_shot_encode() {
+        let mut rng = Rng::new(3);
+        let x: Vec<f64> = (0..300).map(|_| rng.normal()).collect();
+        for codec in [WireCodec::Dense64, WireCodec::Dense32, WireCodec::Quant(4, 128)] {
+            let (bytes_a, dec_a, bits_a) = codec.encode(&x, &mut Rng::new(77));
+            let mut bytes_b = Vec::new();
+            let mut dec_b = vec![0.0; 300];
+            let bits_b = codec.encode_into(&x, &mut Rng::new(77), &mut dec_b, &mut bytes_b);
+            assert_eq!(bytes_a, bytes_b, "{codec:?} byte stream");
+            assert_eq!(dec_a, dec_b, "{codec:?} decoded");
+            assert_eq!(bits_a, bits_b, "{codec:?} accounted bits");
+        }
+    }
+
+    #[test]
+    fn dense_decode_rejects_size_mismatch() {
+        let x = vec![1.0; 8];
+        let (bytes, _, _) = WireCodec::Dense64.encode(&x, &mut Rng::new(4));
+        let mut out = vec![0.0; 8];
+        assert!(WireCodec::Dense64.decode_into(&bytes, &mut out).is_ok());
+        assert_eq!(
+            WireCodec::Dense64.decode_into(&bytes[..63], &mut out),
+            Err(WireError::PayloadSize { expected: 64, got: 63 })
+        );
+        let mut long = bytes.clone();
+        long.push(0);
+        assert_eq!(
+            WireCodec::Dense64.decode_into(&long, &mut out),
+            Err(WireError::PayloadSize { expected: 64, got: 65 })
+        );
     }
 
     #[test]
@@ -169,18 +433,51 @@ mod tests {
         let codec = WireCodec::Quant(2, 256);
         let f = Frame { round: 77, from: 3, payload: vec![1, 2, 3, 4, 5] };
         let bytes = f.to_bytes(&codec);
-        let (tag, g) = Frame::from_bytes(&bytes).unwrap();
-        assert_eq!(tag, 2);
+        let g = FrameRef::parse(&bytes).unwrap();
+        assert_eq!(g.tag, 2);
         assert_eq!(g.round, 77);
         assert_eq!(g.from, 3);
-        assert_eq!(g.payload, f.payload);
+        assert_eq!(g.payload, &f.payload[..]);
     }
 
     #[test]
-    fn frame_rejects_truncation() {
+    fn frame_begin_end_reuses_buffer() {
+        let mut buf = Vec::new();
+        for round in 0..3u32 {
+            frame_begin(&mut buf, 1, round, 9);
+            buf.extend_from_slice(&[0xAA; 12]);
+            frame_end(&mut buf);
+            let f = FrameRef::parse(&buf).unwrap();
+            assert_eq!((f.tag, f.round, f.from), (1, round, 9));
+            assert_eq!(f.payload, &[0xAA; 12]);
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed_buffers() {
         let f = Frame { round: 1, from: 0, payload: vec![9; 100] };
         let bytes = f.to_bytes(&WireCodec::Dense64);
-        assert!(Frame::from_bytes(&bytes[..10]).is_none());
-        assert!(Frame::from_bytes(&bytes[..50]).is_none());
+        assert_eq!(
+            FrameRef::parse(&bytes[..10]),
+            Err(WireError::TruncatedHeader { len: 10 })
+        );
+        assert_eq!(
+            FrameRef::parse(&bytes[..50]),
+            Err(WireError::TruncatedPayload { need: 111, got: 50 })
+        );
+        let mut garbage = bytes.clone();
+        garbage.extend_from_slice(&[1, 2, 3]);
+        assert_eq!(
+            FrameRef::parse(&garbage),
+            Err(WireError::TrailingBytes { expected: 111, got: 114 })
+        );
+        assert_eq!(FrameRef::parse(&[]), Err(WireError::TruncatedHeader { len: 0 }));
+    }
+
+    #[test]
+    fn wire_error_display_is_informative() {
+        let e = WireError::RoundSkew { from: 3, frame_round: 9, expect: 4 };
+        let s = format!("{e}");
+        assert!(s.contains("node 3") && s.contains('9') && s.contains('4'), "{s}");
     }
 }

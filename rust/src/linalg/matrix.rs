@@ -5,6 +5,11 @@
 //! The hot operation is the blocked matmul in [`Mat::matmul`], tuned in the
 //! performance pass (see EXPERIMENTS.md §Perf): i-k-j loop order with a
 //! cache-blocked k dimension vectorizes well under LLVM's auto-vectorizer.
+//! Its inner accumulation — and the inner loop of every other
+//! order-sensitive kernel in the crate (transposed matmul, CSR SpMM, the
+//! coordinator's node-side mixes) — is the one fixed-width chunked
+//! [`vaxpy`], so bit-exactness between all those paths is enforced
+//! structurally rather than by parallel-maintained loops.
 
 use std::fmt;
 use std::ops::{Add, AddAssign, Mul, Sub, SubAssign};
@@ -134,9 +139,7 @@ impl Mat {
                         continue;
                     }
                     let b_row = &other.data[k * m..(k + 1) * m];
-                    for (o, &b) in out_row.iter_mut().zip(b_row) {
-                        *o += a * b;
-                    }
+                    vaxpy(out_row, a, b_row);
                 }
             }
         }
@@ -156,9 +159,7 @@ impl Mat {
                     continue;
                 }
                 let out_row = &mut out.data[i * m..(i + 1) * m];
-                for (o, &b) in out_row.iter_mut().zip(b_row) {
-                    *o += a * b;
-                }
+                vaxpy(out_row, a, b_row);
             }
         }
         out
@@ -190,12 +191,10 @@ impl Mat {
             .sum()
     }
 
-    /// self += alpha * other  (axpy).
+    /// self += alpha * other  (axpy), via the shared chunked [`vaxpy`].
     pub fn axpy(&mut self, alpha: f64, other: &Mat) {
         assert_eq!(self.data.len(), other.data.len());
-        for (a, &b) in self.data.iter_mut().zip(&other.data) {
-            *a += alpha * b;
-        }
+        vaxpy(&mut self.data, alpha, &other.data);
     }
 
     /// self = alpha*self + beta*other.
@@ -323,9 +322,29 @@ pub fn vnorm(a: &[f64]) -> f64 {
     vnorm_sq(a).sqrt()
 }
 
+/// y += alpha·x — THE shared accumulation kernel. Every order-sensitive
+/// hot loop in the crate (dense blocked ikj matmul, transposed matmul,
+/// CSR SpMM, the coordinator's `WeightRow` mixes) funnels through this one
+/// function, so the engine≡coordinator bit-exactness contract has a single
+/// point of truth.
+///
+/// Fixed-width 8-lane chunks with a scalar remainder: a branch-free body
+/// LLVM's auto-vectorizer maps onto packed mul/add. Each element still
+/// performs exactly one `y[i] += alpha * x[i]` in ascending index order —
+/// element operations are independent, so the chunking changes codegen,
+/// never results: output stays bit-identical to the scalar loop.
+#[inline]
 pub fn vaxpy(y: &mut [f64], alpha: f64, x: &[f64]) {
     debug_assert_eq!(y.len(), x.len());
-    for (yi, &xi) in y.iter_mut().zip(x) {
+    const W: usize = 8;
+    let mut yc = y.chunks_exact_mut(W);
+    let mut xc = x.chunks_exact(W);
+    for (ys, xs) in (&mut yc).zip(&mut xc) {
+        for i in 0..W {
+            ys[i] += alpha * xs[i];
+        }
+    }
+    for (yi, &xi) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
         *yi += alpha * xi;
     }
 }

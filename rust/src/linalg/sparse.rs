@@ -14,7 +14,7 @@
 //! close. The algorithms rely on this to keep sparse/dense iterate
 //! sequences interchangeable (see `rust/tests/sparse_dense_equiv.rs`).
 
-use super::matrix::Mat;
+use super::matrix::{vaxpy, Mat};
 
 /// Row-major CSR sparse f64 matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -115,9 +115,9 @@ impl SparseMat {
                 }
                 let k = self.col_idx[idx];
                 let x_row = &x.data[k * m..(k + 1) * m];
-                for (o, &b) in out_row.iter_mut().zip(x_row) {
-                    *o += a * b;
-                }
+                // the shared chunked kernel: same per-element order as the
+                // dense ikj matmul, so the bitwise contract holds
+                vaxpy(out_row, a, x_row);
             }
         }
     }

@@ -86,6 +86,10 @@ pub enum StopReason {
     Deadline,
     /// The iterate went non-finite (the run is flushed, then abandoned).
     Diverged,
+    /// A node received a malformed or protocol-violating frame and the run
+    /// was torn down (coordinator backend only). Carries the earliest fault
+    /// by (round, node) — see [`crate::coordinator::wire::WireError`].
+    WireFault(crate::coordinator::wire::WireFault),
 }
 
 impl StopReason {
@@ -97,6 +101,7 @@ impl StopReason {
             StopReason::GradEvalsBudget => "grad-evals-budget",
             StopReason::Deadline => "deadline",
             StopReason::Diverged => "diverged",
+            StopReason::WireFault(_) => "wire-fault",
         }
     }
 }

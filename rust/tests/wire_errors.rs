@@ -1,0 +1,273 @@
+//! The corrupt-frame matrix: every malformed or protocol-violating input
+//! must surface as a typed `WireError` — never a panic, never a hang.
+//!
+//! Two layers:
+//! - frame/codec level: deterministic corruptions of real encoded frames,
+//!   checked against `FrameRef::parse` + `WireCodec::decode_into` across
+//!   all three codecs;
+//! - end to end: `CoordConfig::tamper` corrupts one prescribed broadcast
+//!   inside a live coordinator run; the run must return normally with
+//!   `StopReason::WireFault` carrying the expected error kind (gated and
+//!   ungated), with every node thread joined — the teardown protocol's
+//!   no-deadlock guarantee.
+
+#![allow(deprecated)] // run_prox_lead is the stable hand-wired entry point
+
+use proxlead::config::Config;
+use proxlead::coordinator::{
+    self, CoordConfig, FrameRef, FrameTamper, NodeHyper, TamperKind, WireCodec, WireError,
+};
+use proxlead::exp::Experiment;
+use proxlead::runner::{RunSpec, StopReason};
+use proxlead::util::rng::Rng;
+use std::mem::discriminant;
+use std::sync::Arc;
+
+/// A valid one-frame buffer for `codec` carrying an n-entry payload.
+fn good_frame(codec: &WireCodec, n: usize, round: u32, from: u16) -> Vec<u8> {
+    let mut rng = Rng::new(11);
+    let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let (payload, _, _) = codec.encode(&x, &mut Rng::new(5));
+    coordinator::Frame { round, from, payload }.to_bytes(codec)
+}
+
+/// Parse + decode the way the node receive path does, collapsed to the
+/// first error.
+fn receive(codec: &WireCodec, buf: &[u8], n: usize) -> Result<(), WireError> {
+    let f = FrameRef::parse(buf)?;
+    if f.tag != codec.tag() {
+        return Err(if WireCodec::known_tag(f.tag) {
+            WireError::TagMismatch { expected: codec.tag(), got: f.tag }
+        } else {
+            WireError::UnknownTag { tag: f.tag }
+        });
+    }
+    let mut out = vec![0.0; n];
+    codec.decode_into(f.payload, &mut out)
+}
+
+#[test]
+fn corrupt_frames_return_typed_errors_across_all_codecs() {
+    let n = 70; // spans a non-integral number of quant bytes
+    for codec in [WireCodec::Dense64, WireCodec::Dense32, WireCodec::Quant(2, 64)] {
+        let bytes = good_frame(&codec, n, 3, 1);
+        assert_eq!(receive(&codec, &bytes, n), Ok(()), "{codec:?}: baseline frame must pass");
+
+        // truncated header: fewer bytes than the fixed header
+        assert_eq!(
+            receive(&codec, &bytes[..6], n),
+            Err(WireError::TruncatedHeader { len: 6 }),
+            "{codec:?}"
+        );
+
+        // short payload: header promises more than was received
+        let short = &bytes[..bytes.len() - 1];
+        assert_eq!(
+            receive(&codec, short, n),
+            Err(WireError::TruncatedPayload { need: bytes.len(), got: bytes.len() - 1 }),
+            "{codec:?}"
+        );
+
+        // overlong payload with a re-patched length: parses, codec rejects
+        let mut long = bytes.clone();
+        long.extend_from_slice(&[0u8; 8]);
+        let plen = (long.len() - coordinator::Frame::HEADER_LEN) as u32;
+        long[7..11].copy_from_slice(&plen.to_le_bytes());
+        let e = receive(&codec, &long, n).unwrap_err();
+        match codec {
+            WireCodec::Quant(..) => assert!(
+                matches!(e, WireError::TrailingBytes { .. }),
+                "{codec:?}: spare whole bytes after the final block, got {e:?}"
+            ),
+            _ => assert!(
+                matches!(e, WireError::PayloadSize { .. }),
+                "{codec:?}: dense length check, got {e:?}"
+            ),
+        }
+
+        // trailing garbage beyond the framed length
+        let mut garbage = bytes.clone();
+        garbage.extend_from_slice(&[0xDE, 0xAD]);
+        assert!(
+            matches!(receive(&codec, &garbage, n), Err(WireError::TrailingBytes { .. })),
+            "{codec:?}"
+        );
+
+        // a tag no codec owns
+        let mut unknown = bytes.clone();
+        unknown[0] = 0x7E;
+        assert_eq!(
+            receive(&codec, &unknown, n),
+            Err(WireError::UnknownTag { tag: 0x7E }),
+            "{codec:?}"
+        );
+
+        // a valid tag that is not this run's codec
+        let mut wrong = bytes.clone();
+        wrong[0] = if wrong[0] == 0 { 1 } else { 0 };
+        assert!(
+            matches!(receive(&codec, &wrong, n), Err(WireError::TagMismatch { .. })),
+            "{codec:?}"
+        );
+
+        // empty and pure-garbage buffers
+        assert_eq!(receive(&codec, &[], n), Err(WireError::TruncatedHeader { len: 0 }));
+        let mut junk_rng = Rng::new(9);
+        let junk: Vec<u8> = (0..8).flat_map(|_| junk_rng.next_u64().to_le_bytes()).collect();
+        let mut junk = junk;
+        junk[0] = codec.tag(); // force the tag so the codec layer is reached
+        let r = receive(&codec, &junk, n);
+        assert!(r.is_err(), "{codec:?}: 64 random bytes cannot be a valid {n}-entry frame");
+    }
+}
+
+#[test]
+fn corrupt_quant_block_norm_is_rejected() {
+    let codec = WireCodec::Quant(4, 64);
+    let n = 128;
+    let mut bytes = good_frame(&codec, n, 0, 2);
+    // first 4 payload bytes are block 0's f32 norm, MSB-first
+    let h = coordinator::Frame::HEADER_LEN;
+    bytes[h..h + 4].copy_from_slice(&f32::NAN.to_bits().to_be_bytes());
+    assert_eq!(receive(&codec, &bytes, n), Err(WireError::BadBlockNorm { block: 0 }));
+    bytes[h..h + 4].copy_from_slice(&(-2.5f32).to_bits().to_be_bytes());
+    assert_eq!(receive(&codec, &bytes, n), Err(WireError::BadBlockNorm { block: 0 }));
+}
+
+fn fixture() -> Experiment {
+    let cfg = Config::parse(
+        "nodes = 4\nsamples_per_node = 24\ndim = 5\nclasses = 3\nbatches = 4\n\
+         lambda2 = 0.1\nseparation = 1.0\nbits = 2\n",
+    )
+    .expect("config");
+    Experiment::from_config(&cfg).expect("experiment")
+}
+
+/// Run a short tampered coordinator round-trip and return the fault the
+/// run reported.
+fn tampered_run(
+    exp: &Experiment,
+    codec: WireCodec,
+    tamper: FrameTamper,
+    spec: &RunSpec,
+) -> coordinator::WireFault {
+    let x_star = vec![0.0; exp.problem.dim()];
+    let wire = CoordConfig::new(codec).seed(7).tamper(tamper);
+    let res = coordinator::run_prox_lead(
+        Arc::clone(&exp.problem),
+        &exp.mixing,
+        &exp.x0,
+        Arc::new(proxlead::prox::Zero),
+        &NodeHyper::new(0.05),
+        &wire,
+        spec,
+        &x_star,
+    );
+    assert!(!res.history.is_empty(), "faulted runs still carry their pre-fault history");
+    assert!(res.final_x.rows == exp.x0.rows, "final iterate shape survives the fault");
+    match res.stopped_by {
+        StopReason::WireFault(f) => f,
+        other => panic!("expected StopReason::WireFault, got {other:?}"),
+    }
+}
+
+#[test]
+fn tampered_broadcasts_stop_the_run_with_the_expected_fault() {
+    let exp = fixture();
+    let round = 3usize;
+    // (tamper, an example of the expected error kind). The fault's round
+    // is the *detecting* node's: decode-level errors fire exactly at the
+    // tampered round, parse/tag-level ones may be caught one round early
+    // (the receiver still gathering round r−1 parses every arrival).
+    let cases: [(TamperKind, WireError, bool); 7] = [
+        (TamperKind::TruncateHeader, WireError::TruncatedHeader { len: 0 }, false),
+        (TamperKind::ShortPayload, WireError::TruncatedPayload { need: 0, got: 0 }, false),
+        (TamperKind::OverlongPayload, WireError::TrailingBytes { expected: 0, got: 0 }, true),
+        (TamperKind::TrailingGarbage, WireError::TrailingBytes { expected: 0, got: 0 }, false),
+        (TamperKind::UnknownTag, WireError::UnknownTag { tag: 0 }, false),
+        (TamperKind::WrongCodecTag, WireError::TagMismatch { expected: 0, got: 0 }, false),
+        (TamperKind::BadQuantNorm, WireError::BadBlockNorm { block: 0 }, true),
+    ];
+    for (kind, expect, round_exact) in cases {
+        let fault = tampered_run(
+            &exp,
+            WireCodec::Quant(2, 256),
+            FrameTamper { node: 2, round, kind },
+            &RunSpec::fixed(8).every(2),
+        );
+        assert_eq!(
+            discriminant(&fault.error),
+            discriminant(&expect),
+            "{kind:?}: got {:?}",
+            fault.error
+        );
+        if round_exact {
+            assert_eq!(fault.round as usize, round, "{kind:?}: decode-level detection round");
+        } else {
+            assert!(
+                (fault.round as usize) == round || (fault.round as usize) + 1 == round,
+                "{kind:?}: detected at {}, tampered at {round}",
+                fault.round
+            );
+        }
+        // the detector is a gossip neighbor of the tampering node, never
+        // the tamperer itself
+        assert_ne!(fault.node, 2, "{kind:?}: the sender cannot detect its own corruption");
+    }
+}
+
+#[test]
+fn dense_codec_faults_end_to_end_too() {
+    let exp = fixture();
+    let fault = tampered_run(
+        &exp,
+        WireCodec::Dense64,
+        FrameTamper { node: 0, round: 2, kind: TamperKind::OverlongPayload },
+        &RunSpec::fixed(6).every(3),
+    );
+    assert!(
+        matches!(fault.error, WireError::PayloadSize { .. }),
+        "dense length check end to end, got {:?}",
+        fault.error
+    );
+}
+
+#[test]
+fn gated_runs_tear_down_without_deadlock_on_a_fault() {
+    // a leader-gated run (bits budget ⇒ checkpoint blocking) with a fault
+    // between checkpoints: the leader must release every blocked node and
+    // the fault must win over the budget in the reported stop reason
+    let exp = fixture();
+    let fault = tampered_run(
+        &exp,
+        WireCodec::Quant(2, 256),
+        FrameTamper { node: 1, round: 5, kind: TamperKind::BadQuantNorm },
+        &RunSpec::fixed(40).every(2).bits_budget(u64::MAX / 2),
+    );
+    assert_eq!(discriminant(&fault.error), discriminant(&WireError::BadBlockNorm { block: 0 }));
+    assert_eq!(fault.round, 5);
+}
+
+#[test]
+fn fault_in_the_first_round_still_produces_a_round_zero_history() {
+    let exp = fixture();
+    let x_star = vec![0.0; exp.problem.dim()];
+    let wire = CoordConfig::new(WireCodec::Quant(2, 256))
+        .seed(7)
+        .tamper(FrameTamper { node: 0, round: 0, kind: TamperKind::TruncateHeader });
+    let res = coordinator::run_prox_lead(
+        Arc::clone(&exp.problem),
+        &exp.mixing,
+        &exp.x0,
+        Arc::new(proxlead::prox::Zero),
+        &NodeHyper::new(0.05),
+        &wire,
+        &RunSpec::fixed(8).every(2),
+        &x_star,
+    );
+    assert!(matches!(res.stopped_by, StopReason::WireFault(_)));
+    let first = res.history.first().unwrap();
+    assert_eq!(first.round, 0, "round-0 snapshot survives an immediate fault");
+    assert!(first.suboptimality.is_finite());
+    assert_eq!(res.stopped_by.name(), "wire-fault");
+}

@@ -1,0 +1,98 @@
+//! Pins the tentpole claim: the wire codec hot path performs ZERO heap
+//! allocations per round once its scratch buffers have warmed up.
+//!
+//! A counting `#[global_allocator]` wraps the system allocator; the single
+//! test below (one `#[test]` so no parallel test thread allocates into the
+//! measured window) warms each codec's scratch, then drives several full
+//! encode → frame → parse → decode → mix rounds and asserts the allocation
+//! counter did not move. The one per-round allocation the coordinator
+//! still makes — the `Arc<[u8]>` transport buffer the channel handoff
+//! needs — lives *outside* these codec paths and is excluded by design
+//! (see DESIGN.md §4).
+
+use proxlead::coordinator::wire::{frame_begin, frame_end};
+use proxlead::coordinator::{FrameRef, WeightRow, WireCodec};
+use proxlead::util::rng::Rng;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+fn allocs() -> usize {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+#[test]
+fn codec_round_trip_is_zero_alloc_after_warmup() {
+    let p = 600usize; // several quant blocks, non-integral byte boundary
+    let mut rng = Rng::new(42);
+    let x: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+    // a 3-neighbor gossip row exercising mix_into's spliced-diagonal loop
+    let row = WeightRow {
+        node: 2,
+        self_weight: 0.4,
+        neighbors: vec![(0, 0.2), (1, 0.2), (5, 0.2)],
+    };
+
+    for codec in [WireCodec::Dense64, WireCodec::Dense32, WireCodec::Quant(2, 256)] {
+        // scratch allocated once, exactly as run_node does
+        let mut frame_buf: Vec<u8> = Vec::new();
+        let mut q_own = vec![0.0; p];
+        let mut peers: Vec<(usize, Vec<f64>)> =
+            row.neighbors.iter().map(|&(j, _)| (j, vec![0.0; p])).collect();
+        let mut mixed = vec![0.0; p];
+
+        // warmup round: grows frame_buf to its steady-state capacity
+        let mut round = |rng: &mut Rng, frame_buf: &mut Vec<u8>, k: u32| {
+            frame_begin(frame_buf, codec.tag(), k, 2);
+            let bits = codec.encode_into(&x, rng, &mut q_own, frame_buf);
+            frame_end(frame_buf);
+            let f = FrameRef::parse(frame_buf).expect("well-formed frame");
+            assert_eq!(f.round, k);
+            for slot in peers.iter_mut() {
+                codec.decode_into(f.payload, &mut slot.1).expect("well-formed payload");
+            }
+            row.mix_into(&mut mixed, &q_own, &peers);
+            bits
+        };
+        round(&mut rng, &mut frame_buf, 0);
+
+        let before = allocs();
+        let mut total_bits = 0u64;
+        for k in 1..=8u32 {
+            total_bits += round(&mut rng, &mut frame_buf, k);
+        }
+        let after = allocs();
+        assert!(total_bits > 0);
+        assert_eq!(
+            after - before,
+            0,
+            "{codec:?}: encode_into/FrameRef::parse/decode_into/mix_into allocated \
+             {} time(s) across 8 warmed-up rounds",
+            after - before
+        );
+    }
+}

@@ -1,0 +1,34 @@
+#!/usr/bin/env sh
+# Refresh the committed perf-regression baselines (BENCH_*.json).
+#
+# Runs the two gated harnesses in the same PERF_SMOKE configuration the CI
+# perf-regression job uses (smoke timings are only comparable to smoke
+# timings) and copies their reports to the repo root. Commit the updated
+# BENCH_*.json files together with the change that moved the numbers.
+#
+# Usage: scripts/bench_baseline.sh [--full]
+#   --full   run without PERF_SMOKE (local deep measurement; NOT what the
+#            CI gate compares against — don't commit these as baselines)
+
+set -eu
+
+cd "$(dirname "$0")/.."
+
+SMOKE=1
+if [ "${1:-}" = "--full" ]; then
+    SMOKE=""
+fi
+
+for bench in perf_hotpath wire_bytes; do
+    echo "==> cargo bench --bench $bench ${SMOKE:+(PERF_SMOKE=1)}"
+    PERF_SMOKE="$SMOKE" cargo bench --bench "$bench"
+done
+
+if [ -n "$SMOKE" ]; then
+    cp rust/bench_out/perf_hotpath.json BENCH_perf_hotpath.json
+    cp rust/bench_out/wire_bytes.json BENCH_wire_bytes.json
+    echo "wrote BENCH_perf_hotpath.json and BENCH_wire_bytes.json"
+    echo "commit them to arm/refresh the CI perf-regression gate"
+else
+    echo "full-mode reports left in rust/bench_out/ (not copied to BENCH_*)"
+fi

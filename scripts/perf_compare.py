@@ -1,0 +1,125 @@
+#!/usr/bin/env python3
+"""Compare a fresh BenchReport JSON against a committed baseline.
+
+Part of the CI perf-regression gate: the perf job reruns the perf_hotpath
+and wire_bytes harnesses in PERF_SMOKE mode and calls this script against
+the committed ``BENCH_<name>.json`` baselines. A benchmark whose p50
+regresses by more than ``--tolerance`` (default ±30%) fails the job.
+
+Stdlib-only by design (the repo builds offline; CI runners only need a
+stock python3).
+
+Modes
+-----
+- baseline present: compare every (set title, result name) pair found in
+  BOTH files on the ``p50_ns`` statistic; exit 1 on any regression beyond
+  tolerance. Rows present on only one side are listed but never fail the
+  gate (benches evolve).
+- baseline missing: bootstrap mode — print how to seed the baseline from
+  the uploaded artifact and exit 0. The first CI run on a runner with a
+  Rust toolchain therefore *creates* the gate rather than failing it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def load_rows(path: Path) -> tuple[dict, dict[tuple[str, str], float]]:
+    doc = json.loads(path.read_text())
+    if doc.get("schema") != "proxlead-perf-v1":
+        sys.exit(f"error: {path} has schema {doc.get('schema')!r}, "
+                 "expected 'proxlead-perf-v1'")
+    rows: dict[tuple[str, str], float] = {}
+    for s in doc.get("sets", []):
+        title = s.get("title", "")
+        for r in s.get("results", []):
+            p50 = r.get("p50_ns")
+            if isinstance(p50, (int, float)) and p50 > 0:
+                rows[(title, r.get("name", ""))] = float(p50)
+    return doc, rows
+
+
+def fmt_ns(ns: float) -> str:
+    for bound, unit, div in ((1e3, "ns", 1.0), (1e6, "us", 1e3), (1e9, "ms", 1e6)):
+        if ns < bound:
+            return f"{ns / div:.2f} {unit}"
+    return f"{ns / 1e9:.3f} s"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True, type=Path,
+                    help="committed BENCH_<name>.json baseline")
+    ap.add_argument("--current", required=True, type=Path,
+                    help="fresh bench_out/<name>.json from this run")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="allowed fractional p50 regression (default 0.30)")
+    args = ap.parse_args()
+
+    if not args.current.exists():
+        sys.exit(f"error: current report {args.current} not found — "
+                 "did the bench run fail?")
+
+    if not args.baseline.exists():
+        print(f"perf_compare: no baseline at {args.baseline} — bootstrap mode.")
+        print("  To arm the regression gate, commit this run's report as the "
+              "baseline:")
+        print(f"    cp {args.current} {args.baseline} && git add {args.baseline}")
+        print("  (the perf job uploads it as an artifact named "
+              "perf-regression-json).")
+        return 0
+
+    base_doc, base = load_rows(args.baseline)
+    cur_doc, cur = load_rows(args.current)
+
+    if bool(base_doc.get("smoke")) != bool(cur_doc.get("smoke")):
+        print(f"warning: smoke flags differ (baseline={base_doc.get('smoke')}, "
+              f"current={cur_doc.get('smoke')}); timings are not comparable "
+              "across modes — treating as bootstrap, not failing.")
+        return 0
+
+    shared = sorted(set(base) & set(cur))
+    only_base = sorted(set(base) - set(cur))
+    only_cur = sorted(set(cur) - set(base))
+    if not shared:
+        print("warning: baseline and current share no benchmark rows; "
+              "nothing to compare (did the harness get renamed wholesale?).")
+        return 0
+
+    regressions = []
+    print(f"perf_compare: {len(shared)} shared rows, tolerance ±"
+          f"{args.tolerance:.0%} on p50")
+    for key in shared:
+        b, c = base[key], cur[key]
+        ratio = c / b
+        marker = " "
+        if ratio > 1.0 + args.tolerance:
+            marker = "R"  # regression
+            regressions.append((key, b, c, ratio))
+        elif ratio < 1.0 - args.tolerance:
+            marker = "+"  # improvement beyond tolerance (informational)
+        print(f"  [{marker}] {key[0]} / {key[1]}: "
+              f"{fmt_ns(b)} -> {fmt_ns(c)}  (x{ratio:.2f})")
+    for key in only_base:
+        print(f"  [-] {key[0]} / {key[1]}: only in baseline (row removed?)")
+    for key in only_cur:
+        print(f"  [n] {key[0]} / {key[1]}: new row (no baseline yet)")
+
+    if regressions:
+        print(f"\nFAIL: {len(regressions)} benchmark(s) regressed beyond "
+              f"{args.tolerance:.0%}:")
+        for (title, name), b, c, ratio in regressions:
+            print(f"  {title} / {name}: {fmt_ns(b)} -> {fmt_ns(c)} (x{ratio:.2f})")
+        print("If the slowdown is intentional, refresh the baseline via "
+              "scripts/bench_baseline.sh and commit the new BENCH_*.json.")
+        return 1
+    print("OK: no regression beyond tolerance.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,197 @@
+#!/usr/bin/env python3
+"""Cross-language oracle for the chunked bit-packing rework.
+
+The container this repo grows in has no Rust toolchain, so the rework of
+``compress::bits`` (u64-accumulator writer / whole-byte reader replacing
+the historical bit-at-a-time loops) is verified here by executing BOTH
+algorithms in Python and asserting byte/bit identity:
+
+1. writer: the accumulator flush (exact port of ``BitWriter::write_bits``
+   + ``finish``) against the historical per-bit MSB-first writer, over
+   randomized field sequences;
+2. reader: the head/body/tail whole-byte read (exact port of
+   ``BitReader::try_read_bits``) against a per-bit reference reader,
+   including exhaustion behaviour at every truncation point;
+3. quant stream: the ∞-norm block layout (f32 norm + sign/magnitude
+   fields) written by both writers and decoded by both readers, round-
+   tripping sign/magnitude codes exactly.
+
+Mirrors the Rust unit tests (`chunked_writer_matches_bit_at_a_time_
+reference`, `reader_refuses_overrun`) so the same property is pinned on
+both sides of the language gap. Stdlib-only; exit 0 = all checks pass.
+"""
+
+import random
+import struct
+import sys
+
+MAX_FIELD_BITS = 56  # keep 7 carried bits + field inside 64 bits
+
+
+# ---------------------------------------------------------------- writers
+def reference_write(fields):
+    """Historical writer: one bit at a time, MSB-first."""
+    out = bytearray()
+    nbits = 0
+    for value, width in fields:
+        for i in reversed(range(width)):
+            if nbits // 8 == len(out):
+                out.append(0)
+            if (value >> i) & 1:
+                out[nbits // 8] |= 1 << (7 - nbits % 8)
+            nbits += 1
+    return bytes(out)
+
+
+def chunked_write(fields):
+    """Port of the new BitWriter: u64 accumulator, whole-byte flush."""
+    out = bytearray()
+    acc = 0
+    fill = 0
+    for value, width in fields:
+        assert width <= MAX_FIELD_BITS and value < (1 << width)
+        acc = ((acc << width) | value) & ((1 << 64) - 1)  # u64 wrap
+        fill += width
+        while fill >= 8:
+            fill -= 8
+            out.append((acc >> fill) & 0xFF)  # `as u8` masks stale bits
+    if fill > 0:  # finish(): zero-pad the low positions
+        out.append((acc << (8 - fill)) & 0xFF)
+    return bytes(out)
+
+
+# ---------------------------------------------------------------- readers
+def reference_read(data, widths):
+    """Per-bit MSB-first reader; None once the stream is exhausted."""
+    pos = 0
+    vals = []
+    for w in widths:
+        if pos + w > len(data) * 8:
+            vals.append(None)
+            continue
+        v = 0
+        for _ in range(w):
+            v = (v << 1) | ((data[pos // 8] >> (7 - pos % 8)) & 1)
+            pos += 1
+        vals.append(v)
+    return vals
+
+
+def chunked_read(data, widths):
+    """Port of the new BitReader.try_read_bits: head/body/tail bytes."""
+    pos = 0
+    vals = []
+    for w in widths:
+        assert w <= MAX_FIELD_BITS
+        if pos + w > len(data) * 8:
+            vals.append(None)  # refuse the overrun, position unchanged
+            continue
+        v = 0
+        rem = w
+        p = pos
+        head = (8 - p % 8) % 8
+        if head > 0:
+            take = min(head, rem)
+            v = (data[p // 8] >> (head - take)) & ((1 << take) - 1)
+            p += take
+            rem -= take
+        while rem >= 8:
+            v = (v << 8) | data[p // 8]
+            p += 8
+            rem -= 8
+        if rem > 0:
+            v = (v << rem) | (data[p // 8] >> (8 - rem))
+            p += rem
+        pos = p
+        vals.append(v)
+    return vals
+
+
+# ---------------------------------------------------------------- checks
+def check_writers(trials=2000, seed=41):
+    rng = random.Random(seed)
+    for t in range(trials):
+        fields = []
+        for _ in range(1 + rng.randrange(24)):
+            width = 1 + rng.randrange(MAX_FIELD_BITS)
+            fields.append((rng.getrandbits(width), width))
+        a = reference_write(fields)
+        b = chunked_write(fields)
+        assert a == b, f"writer divergence at trial {t}: {fields}"
+    print(f"  writers byte-identical over {trials} randomized field lists")
+
+
+def check_readers(trials=2000, seed=42):
+    rng = random.Random(seed)
+    for t in range(trials):
+        widths = [1 + rng.randrange(MAX_FIELD_BITS)
+                  for _ in range(1 + rng.randrange(24))]
+        fields = [(rng.getrandbits(w), w) for w in widths]
+        stream = chunked_write(fields)
+        # full read, then every truncation point (overrun refusal)
+        for cut in range(len(stream) + 1):
+            data = stream[:cut]
+            assert reference_read(data, widths) == chunked_read(data, widths), \
+                f"reader divergence at trial {t}, cut {cut}"
+        got = chunked_read(stream, widths)
+        assert got == [v for v, _ in fields], f"roundtrip loss at trial {t}"
+    print(f"  readers bit-identical over {trials} lists × every truncation")
+
+
+def quant_fields(x, bits, block, dither):
+    """The ∞-norm quantizer stream layout as (value, width) fields."""
+    levels = float(1 << (bits - 1))
+    fields = []
+    codes = []
+    for start in range(0, len(x), block):
+        chunk = x[start:start + block]
+        norm = max(abs(v) for v in chunk)
+        norm32 = struct.unpack(">I", struct.pack(">f", norm))[0]
+        fields.append((norm32, 32))
+        if norm == 0.0:
+            continue
+        inv_scale = levels / norm
+        for v in chunk:
+            mag = min(float(int(abs(v) * inv_scale + next(dither))), levels)
+            code = int(mag)
+            sign = 1 if v < 0.0 else 0
+            fields.append(((sign << bits) | code, bits + 1))
+            codes.append((sign, code))
+    return fields, codes
+
+
+def check_quant_stream(trials=200, seed=43):
+    rng = random.Random(seed)
+    for t in range(trials):
+        n = 1 + rng.randrange(300)
+        bits = rng.choice([2, 4, 8])
+        block = rng.choice([64, 256])
+        x = [rng.gauss(0, 1) for _ in range(n)]
+        dither_seq = [rng.random() for _ in range(n)]
+        fields, codes = quant_fields(x, bits, block, iter(dither_seq))
+        old = reference_write(fields)
+        new = chunked_write(fields)
+        assert old == new, f"quant stream divergence at trial {t}"
+        # decode with the chunked reader: norms + sign/magnitude fields
+        widths = [w for _, w in fields]
+        vals = chunked_read(new, widths)
+        decoded = []
+        for (v, w), got in zip(fields, vals):
+            assert got == v, f"quant field loss at trial {t}"
+            if w != 32:
+                decoded.append(((got >> bits) & 1, got & ((1 << bits) - 1)))
+        assert decoded == codes, f"sign/magnitude code loss at trial {t}"
+    print(f"  quant block streams byte-identical over {trials} trials")
+
+
+def main():
+    print("verify_bitpack: chunked accumulator vs historical per-bit codec")
+    check_writers()
+    check_readers()
+    check_quant_stream()
+    print("PASS: all bitpack equivalence checks hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
