@@ -13,9 +13,16 @@
 //! against the dense Jacobi eigensolve at small n, and one full sparse
 //! Prox-LEAD matrix round at n = 512 to show gossip has left the hot path.
 //!
+//! The final set drives the event-driven **sim backend** end to end —
+//! 2-bit Prox-LEAD over real wire frames on ring and Erdős–Rényi graphs,
+//! n up to 10⁶ in full mode (ring n = 10⁵ in smoke mode, the acceptance
+//! row) — reporting rounds/sec and wire bytes/round. Large ER graphs come
+//! from the O(m + n) skip-sampler (`Graph::try_erdos_renyi_sparse`); the
+//! exact O(n²) config-path sampler is intractable at n ≥ 10⁵.
+//!
 //! Every set lands in `bench_out/scaling_n.json` (schema proxlead-perf-v1);
 //! CI uploads it next to perf_hotpath's as the second trajectory artifact.
-//! `PERF_SMOKE=1` caps n at 128 with minimal reps.
+//! `PERF_SMOKE=1` caps gossip n at 128 and sim n at 10⁵ with minimal reps.
 
 mod common;
 
@@ -139,6 +146,71 @@ fn main() {
             set.run_throughput(&format!("matrix step, {label}"), 1.0, "round", || {
                 alg.step(exp.problem.as_ref())
             });
+        }
+        report.add(&set);
+    }
+
+    // ---------- sim backend: massive-n end-to-end rounds ------------------
+    {
+        let (warm, reps) = if smoke { (0, 1) } else { (1, 3) };
+        let rounds = if smoke { 3usize } else { 8 };
+        let workers = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+        let title =
+            format!("sim backend — 2-bit Prox-LEAD, {rounds} rounds, {workers} workers");
+        let mut set = BenchSet::new(&title).with_reps(warm, reps);
+        set.header();
+        // (n, erdős–rényi?) rows; smoke keeps the n = 10⁵ acceptance row
+        let rows: &[(usize, bool)] = if smoke {
+            &[(1024, false), (1024, true), (100_000, false)]
+        } else {
+            &[(10_000, false), (100_000, false), (1_000_000, false), (10_000, true), (100_000, true)]
+        };
+        for &(n, er) in rows {
+            // a tiny per-node problem: the bench measures the round loop
+            // (encode → frame → decode → update), not the oracle
+            let mut exp = Experiment::builder()
+                .nodes(n)
+                .set("problem", "least-squares")
+                .set("samples_per_node", "2")
+                .set("dim", "4")
+                .set("batches", "1")
+                .set("lambda1", "1e-3")
+                .bits(2)
+                .set("rounds", &rounds.to_string())
+                .set("record_every", &rounds.to_string())
+                .build()
+                .expect("sim scaling experiment");
+            let topo = if er {
+                // O(m + n) skip-sampler — the config-path exact sampler is
+                // O(n²) and intractable at these sizes
+                let g = Graph::try_erdos_renyi_sparse(n, Graph::auto_er_prob(n), &mut rng, 100)
+                    .expect("connected sparse ER draw");
+                let w = MixingOp::sparse_from(&g, MixingRule::Metropolis);
+                exp.graph = g;
+                exp = exp.with_mixing(w);
+                "er  "
+            } else {
+                "ring"
+            };
+            // pin x* = 0 so the reference FISTA solve stays out of the bench
+            exp.set_reference(std::sync::Arc::new(vec![0.0; exp.x0.cols]));
+            let spec = exp.run_spec();
+            let nnz = exp.mixing.nnz();
+            let mut last = None;
+            set.run_throughput(
+                &format!("{topo} n={n:<7} (nnz={nnz})"),
+                rounds as f64,
+                "round",
+                || last = Some(exp.run_sim(&spec)),
+            );
+            let res = last.expect("at least one timed rep");
+            let end = res.history.last().expect("sim history");
+            assert!(end.suboptimality.is_finite(), "sim diverged at n={n}");
+            println!(
+                "    {topo} n={n}: {:.1} payload bits/round/node, {:.1} wire bytes/round/node",
+                end.bits as f64 / (end.round.max(1) * n) as f64,
+                end.wire_bytes as f64 / (end.round.max(1) * n) as f64,
+            );
         }
         report.add(&set);
     }

@@ -24,8 +24,10 @@ USAGE:
   proxlead <SUBCOMMAND> [--config FILE] [--key value]...
 
 SUBCOMMANDS:
-  train       run any `algorithm` on node threads (the message-passing
-              coordinator: real serialized frames, actual wire bytes)
+  train       run any `algorithm` on the configured `backend`: the matrix
+              engine (default), the message-passing coordinator (node
+              threads, real serialized frames), or the sharded massive-n
+              simulator (`--backend sim`, 100k+ nodes)
   sweep       run a parallel experiment grid through the matrix engine
   solve-ref   compute the high-precision reference solution x*
   info        print problem/network condition numbers and artifacts
@@ -40,7 +42,8 @@ CONFIG KEYS (also usable as --key value):
   algorithm(prox-lead|lead|dgd|choco|nids|p2d2|pg-extra|pdgm|dualgd)
   oracle(full|sgd|lsvrg|saga) lsvrg_p compressor(inf|l2|randk|topk)
   bits(2..16|32|64) block sparsify_k eta(0=auto 1/2L) alpha gamma
-  rounds record_every seed backend(native|xla) out
+  rounds record_every seed backend(engine|coordinator|sim)
+  compute(native|xla) out
   straggler_prob straggler_us
 
 TRAIN STOP FLAGS (composable; first criterion hit ends the run and is
@@ -62,7 +65,8 @@ SWEEP FLAGS (sweep subcommand only):
 EXAMPLES:
   proxlead train --rounds 300 --bits 2 --oracle saga --out run.csv
   proxlead train --rounds 5000 --record_every 1 --max-bits 2000000
-  proxlead train --config experiment.cfg --backend xla
+  proxlead train --config experiment.cfg --compute xla
+  proxlead train --backend sim --nodes 100000 --problem least-squares
   proxlead sweep --grid \"algorithm=prox-lead,dgd;bits=2,32;seed=1,2\" \\
                  --rounds 2000 --threads 8 --out sweep.json
   proxlead sweep --grid \"problem=logreg,least-squares;bits=2,32\" --rounds 500

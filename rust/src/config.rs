@@ -55,7 +55,14 @@ pub struct Config {
     pub rounds: usize,
     pub record_every: usize,
     pub seed: u64,
+    /// Run backend: `engine` (synchronous matrix form), `coordinator`
+    /// (one thread per node, real framed wire bytes), or `sim` (the
+    /// event-driven massive-n simulator). A sweepable grid axis.
     pub backend: String,
+    /// Compute kernel provider for the engine's matrix arithmetic:
+    /// `native` (portable Rust kernels) or `xla` (PJRT-compiled gradient
+    /// kernels; logreg only).
+    pub compute: String,
     pub out: String,
     pub straggler_prob: f64,
     pub straggler_us: u64,
@@ -90,7 +97,8 @@ impl Default for Config {
             rounds: 500,
             record_every: 10,
             seed: 42,
-            backend: "native".into(),
+            backend: "engine".into(),
+            compute: "native".into(),
             out: String::new(),
             straggler_prob: 0.0,
             straggler_us: 0,
@@ -170,6 +178,7 @@ impl Config {
             "record_every" => self.record_every = p(key, val)?,
             "seed" => self.seed = p(key, val)?,
             "backend" => self.backend = val.into(),
+            "compute" => self.compute = val.into(),
             "out" => self.out = val.into(),
             "straggler_prob" => self.straggler_prob = p(key, val)?,
             "straggler_us" => self.straggler_us = p(key, val)?,
@@ -356,7 +365,7 @@ impl Config {
              algorithm = {}\noracle = {}\nlsvrg_p = {}\n\
              compressor = {}\nbits = {}\nblock = {}\nsparsify_k = {}\n\
              eta = {}\nalpha = {}\ngamma = {}\n\
-             rounds = {}\nrecord_every = {}\nseed = {}\nbackend = {}\nout = {}\n\
+             rounds = {}\nrecord_every = {}\nseed = {}\nbackend = {}\ncompute = {}\nout = {}\n\
              straggler_prob = {}\nstraggler_us = {}\n",
             self.problem,
             self.nodes,
@@ -385,6 +394,7 @@ impl Config {
             self.record_every,
             self.seed,
             self.backend,
+            self.compute,
             self.out,
             self.straggler_prob,
             self.straggler_us,
@@ -448,7 +458,8 @@ mod tests {
             ("rounds", "123"),
             ("record_every", "7"),
             ("seed", "99"),
-            ("backend", "xla"),
+            ("backend", "sim"),
+            ("compute", "xla"),
             ("out", "run.json"),
             ("straggler_prob", "0.1"),
             ("straggler_us", "500"),

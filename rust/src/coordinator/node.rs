@@ -283,8 +283,9 @@ fn flood(neighbors: &[(usize, Sender<Arc<[u8]>>)], tag: u8, round: u32, me: u16)
 }
 
 /// Corrupt an outgoing frame buffer in a prescribed way (test/chaos hook;
-/// see [`super::FrameTamper`]).
-fn apply_tamper(buf: &mut Vec<u8>, kind: TamperKind) {
+/// see [`super::FrameTamper`]). Shared with the sim backend, which applies
+/// the tamper at the broadcast site (`crate::sim`).
+pub(crate) fn apply_tamper(buf: &mut Vec<u8>, kind: TamperKind) {
     match kind {
         TamperKind::TruncateHeader => buf.truncate(6),
         TamperKind::ShortPayload => {

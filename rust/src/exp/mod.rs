@@ -46,6 +46,7 @@ use crate::oracle::OracleKind;
 use crate::problem::{Problem, ProblemKind};
 use crate::prox::Prox;
 use crate::runner::{self, Probe, RunResult, RunSpec};
+use crate::sim;
 use std::sync::{Arc, OnceLock};
 use std::time::Duration;
 
@@ -283,6 +284,53 @@ impl Experiment {
             |i, row| registry::build_node_algorithm(self, &wire, i, row),
         )
     }
+
+    /// Drive the configured algorithm through the event-driven massive-n
+    /// simulation backend ([`crate::sim`]): the same per-node halves and
+    /// wire codec path as the coordinator, but on a fixed sharded worker
+    /// pool instead of one thread per node — n = 100k–1M nodes in
+    /// O(nnz + n·d) memory. Bit-identical to both other backends under
+    /// `Dense64` (`rust/tests/sim_parity.rs`).
+    pub fn run_sim(&self, spec: &RunSpec) -> RunResult {
+        self.run_sim_probed(spec, &mut [])
+    }
+
+    /// [`Experiment::run_sim`] with streaming [`Probe`]s.
+    pub fn run_sim_probed(&self, spec: &RunSpec, probes: &mut [&mut dyn Probe]) -> RunResult {
+        let mut wire = self.coord_config();
+        if let Some(s) = spec.seed {
+            wire.seed = s;
+        }
+        let x_star = self.reference();
+        sim::run(
+            &self.mixing,
+            &self.x0,
+            &self.config.algorithm,
+            &wire,
+            spec,
+            &x_star,
+            probes,
+            |i, row| registry::build_node_algorithm(self, &wire, i, row),
+        )
+    }
+
+    /// Dispatch on the config's `backend` key (`engine` | `coordinator` |
+    /// `sim`, validated at construction) — the one entry point `proxlead
+    /// train` and the sweep runtime call, so `backend` is a grid axis like
+    /// any other config key.
+    pub fn run_backend(&self, spec: &RunSpec) -> RunResult {
+        self.run_backend_probed(spec, &mut [])
+    }
+
+    /// [`Experiment::run_backend`] with streaming [`Probe`]s.
+    pub fn run_backend_probed(&self, spec: &RunSpec, probes: &mut [&mut dyn Probe]) -> RunResult {
+        match self.config.backend.as_str() {
+            "coordinator" => self.run_coordinator_probed(spec, probes),
+            "sim" => self.run_sim_probed(spec, probes),
+            // "engine", enforced by ensure_backend at construction
+            _ => self.run_probed(spec, probes),
+        }
+    }
 }
 
 /// The factory checks shared by [`validate_config`] and
@@ -293,6 +341,7 @@ fn validate_runtime_factories(cfg: &Config) -> Result<(), ConfigError> {
     cfg.mixing_rule()?;
     cfg.oracle_kind()?;
     cfg.codec()?;
+    registry::ensure_backend(&cfg.backend)?;
     registry::ensure_algorithm(&cfg.algorithm)
 }
 
@@ -519,6 +568,9 @@ mod tests {
         assert!(validate_config(&bad).is_err());
         let mut bad = tiny("logreg");
         bad.backend = "tpu".into();
+        assert!(validate_config(&bad).is_err());
+        let mut bad = tiny("logreg");
+        bad.compute = "tpu".into();
         assert!(validate_config(&bad).is_err());
     }
 

@@ -40,6 +40,16 @@ use std::sync::Arc;
 pub const ALGORITHM_NAMES: &[&str] =
     &["prox-lead", "lead", "dgd", "choco", "nids", "p2d2", "pg-extra", "pdgm", "dualgd"];
 
+/// Err unless `name` is a run backend (`engine` | `coordinator` | `sim`);
+/// the key every [`crate::exp::Experiment::run_backend`] dispatch and the
+/// sweep grid validate against.
+pub fn ensure_backend(name: &str) -> Result<(), ConfigError> {
+    match name {
+        "engine" | "coordinator" | "sim" => Ok(()),
+        b => Err(ConfigError(format!("unknown backend '{b}' (engine | coordinator | sim)"))),
+    }
+}
+
 /// Err unless `name` is a registered algorithm (canonical or alias).
 pub fn ensure_algorithm(name: &str) -> Result<(), ConfigError> {
     match name {
@@ -61,15 +71,15 @@ pub fn check_problem_shape(cfg: &Config) -> Result<(), ConfigError> {
             cfg.samples_per_node, cfg.batches
         )));
     }
-    match cfg.backend.as_str() {
+    match cfg.compute.as_str() {
         "native" | "xla" => Ok(()),
-        b => Err(ConfigError(format!("unknown backend '{b}' (native | xla)"))),
+        c => Err(ConfigError(format!("unknown compute '{c}' (native | xla)"))),
     }
 }
 
 /// The problem registry: build the instance a config's `problem` key
 /// names. Sweeps and the CLI both construct through here (the PJRT/XLA
-/// wrapper is applied when `backend = xla`; logreg only).
+/// wrapper is applied when `compute = xla`; logreg only).
 pub fn build_problem(cfg: &Config) -> Result<Arc<dyn Problem>, ConfigError> {
     let kind = cfg.problem_kind()?;
     check_problem_shape(cfg)?;
@@ -77,16 +87,16 @@ pub fn build_problem(cfg: &Config) -> Result<Arc<dyn Problem>, ConfigError> {
         ProblemKind::LogReg => {
             let native =
                 LogReg::new(blobs(&cfg.blob_spec()), cfg.classes, cfg.lambda2, cfg.batches);
-            if cfg.backend == "xla" {
+            if cfg.compute == "xla" {
                 wrap_xla(cfg, native)?
             } else {
                 Arc::new(native)
             }
         }
         ProblemKind::LeastSquares | ProblemKind::Lasso => {
-            if cfg.backend == "xla" {
+            if cfg.compute == "xla" {
                 return Err(ConfigError(
-                    "backend = xla supports only problem = logreg (no regression artifacts)"
+                    "compute = xla supports only problem = logreg (no regression artifacts)"
                         .into(),
                 ));
             }
@@ -103,10 +113,10 @@ pub fn build_problem(cfg: &Config) -> Result<Arc<dyn Problem>, ConfigError> {
 fn wrap_xla(cfg: &Config, native: LogReg) -> Result<Arc<dyn Problem>, ConfigError> {
     use crate::runtime::{default_artifact_dir, PjrtRuntime, XlaLogReg};
     let rt = PjrtRuntime::load(&default_artifact_dir()).map_err(|e| {
-        ConfigError(format!("backend = xla requested but artifacts unavailable: {e}"))
+        ConfigError(format!("compute = xla requested but artifacts unavailable: {e}"))
     })?;
     let xla = XlaLogReg::new(native, Arc::new(rt))
-        .map_err(|e| ConfigError(format!("backend = xla: {e}")))?;
+        .map_err(|e| ConfigError(format!("compute = xla: {e}")))?;
     if !xla.batch_on_xla() && cfg.oracle != "full" {
         eprintln!("note: no batch-shape artifact; stochastic draws use the native kernel");
     }
@@ -231,9 +241,9 @@ mod tests {
     }
 
     #[test]
-    fn xla_backend_is_logreg_only() {
+    fn xla_compute_is_logreg_only() {
         let mut cfg = tiny("least-squares");
-        cfg.backend = "xla".into();
+        cfg.compute = "xla".into();
         assert!(build_problem(&cfg).unwrap_err().0.contains("logreg"));
     }
 
@@ -245,7 +255,7 @@ mod tests {
         cfg.batches = 0;
         assert!(check_problem_shape(&cfg).is_err());
         cfg.batches = 4;
-        cfg.backend = "quantum".into();
+        cfg.compute = "quantum".into();
         assert!(check_problem_shape(&cfg).is_err());
     }
 

@@ -151,6 +151,65 @@ impl Graph {
         None
     }
 
+    /// Sparse Erdős–Rényi sampler for massive n: geometric skip-sampling
+    /// over the (i,j) pair index draws each present edge directly, so the
+    /// cost is O(m + n) instead of the O(n²) Bernoulli-per-pair loop of
+    /// [`Graph::try_erdos_renyi`] — at n = 10⁶ with p = 2·ln n/n that is
+    /// ~1.4·10⁷ draws instead of 5·10¹¹. Statistically the same G(n, p)
+    /// (each pair is present independently with probability `prob`), but a
+    /// *different* stream-consumption pattern, so seeded draws do not
+    /// reproduce `try_erdos_renyi`'s graphs — seeded experiments keep the
+    /// exact sampler; the scaling benches use this one. Re-samples until
+    /// connected like the exact sampler; returns None after `attempts`
+    /// disconnected draws.
+    pub fn try_erdos_renyi_sparse(
+        n: usize,
+        prob: f64,
+        rng: &mut Rng,
+        attempts: usize,
+    ) -> Option<Graph> {
+        assert!(n >= 2);
+        assert!((0.0..=1.0).contains(&prob));
+        if prob >= 1.0 {
+            return Some(Graph::complete(n));
+        }
+        let total = n * (n - 1) / 2; // pairs (i,j), i<j, in row-major order
+        let log1m = (1.0 - prob).ln(); // < 0; prob > 0 or nothing connects
+        for _attempt in 0..attempts {
+            if prob <= 0.0 {
+                return None; // empty graph can't be connected (n ≥ 2)
+            }
+            let mut edges = Vec::with_capacity((prob * total as f64 * 1.1) as usize + 16);
+            // skip-sampling: the gap to the next present pair is geometric
+            // with success prob `prob`; ⌊ln(u)/ln(1−p)⌋ inverts its CDF.
+            // Pair indices enumerate the upper triangle row-major: row i
+            // holds the n−1−i pairs (i, i+1..n). `idx` is monotone, so the
+            // (row, row_start) cursor below advances O(n) total.
+            let mut idx = 0usize;
+            let mut row = 0usize; // current row i
+            let mut row_start = 0usize; // pair index of (row, row+1)
+            loop {
+                let u = rng.f64().max(f64::MIN_POSITIVE); // avoid ln(0)
+                let skip = (u.ln() / log1m).floor() as usize;
+                idx = match idx.checked_add(skip) {
+                    Some(v) if v < total => v,
+                    _ => break,
+                };
+                while idx - row_start >= n - 1 - row {
+                    row_start += n - 1 - row;
+                    row += 1;
+                }
+                edges.push((row, row + 1 + (idx - row_start)));
+                idx += 1;
+            }
+            let g = Graph::from_edges(n, edges);
+            if g.is_connected() {
+                return Some(g);
+            }
+        }
+        None
+    }
+
     pub fn degree(&self, i: usize) -> usize {
         self.adj[i].len()
     }
@@ -257,6 +316,31 @@ mod tests {
             assert!(g.is_connected());
             assert_eq!(g.n, 20);
         }
+    }
+
+    #[test]
+    fn erdos_renyi_sparse_matches_family() {
+        // the skip-sampler draws the same G(n, p) family: connected,
+        // simple, i<j edges only, edge count near p·n(n−1)/2
+        let mut rng = Rng::new(7);
+        let n = 400;
+        let p = Graph::auto_er_prob(n);
+        let g = Graph::try_erdos_renyi_sparse(n, p, &mut rng, 1000).unwrap();
+        assert_eq!(g.n, n);
+        assert!(g.is_connected());
+        for i in 0..n {
+            for &j in &g.adj[i] {
+                assert!(j < n && j != i);
+            }
+        }
+        let expect = p * (n * (n - 1) / 2) as f64;
+        let m = g.num_edges() as f64;
+        assert!((m - expect).abs() < 6.0 * expect.sqrt(), "m={m} expect≈{expect}");
+        // degenerate probabilities: p=1 is the complete graph, p=0 can
+        // never connect and must return None instead of spinning
+        let full = Graph::try_erdos_renyi_sparse(5, 1.0, &mut rng, 1).unwrap();
+        assert_eq!(full.num_edges(), 10);
+        assert!(Graph::try_erdos_renyi_sparse(5, 0.0, &mut rng, 3).is_none());
     }
 
     #[test]

@@ -31,6 +31,7 @@ pub mod problem;
 pub mod prox;
 pub mod runner;
 pub mod runtime;
+pub mod sim;
 pub mod sweep;
 pub mod util;
 

@@ -1,9 +1,11 @@
 //! `proxlead` — the launcher binary.
 //!
 //! Subcommands (see `proxlead help`):
-//! - `train`: any registry algorithm, distributed on node threads (the
-//!   message-passing coordinator), optionally with the PJRT/XLA gradient
-//!   backend (`--backend xla`);
+//! - `train`: any registry algorithm on the configured run backend —
+//!   `--backend engine` (matrix engine, the default), `--backend
+//!   coordinator` (message-passing node threads, real wire bytes), or
+//!   `--backend sim` (sharded massive-n simulator) — optionally with the
+//!   PJRT/XLA gradient compute path (`--compute xla`);
 //! - `sweep`: a parallel experiment grid through the matrix engine (the
 //!   sweep runtime — deterministic regardless of `--threads`);
 //! - `solve-ref`: high-precision centralized reference x*;
@@ -104,9 +106,10 @@ fn cmd_train(inv: &Invocation) -> i32 {
     // power iteration: O(nnz) per step, fine at any n (no dense eigensolve)
     let gap = exp.mixing.gap_estimate();
     println!(
-        "proxlead train: {} on {} | {} nodes ({}, {}, {}) | {} | η={:.4} α={} γ={}",
+        "proxlead train: {} on {} [{} backend] | {} nodes ({}, {}, {}) | {} | η={:.4} α={} γ={}",
         cfg.algorithm,
         exp.problem.name(),
+        cfg.backend,
         cfg.nodes,
         cfg.topology,
         cfg.mixing,
@@ -135,7 +138,7 @@ fn cmd_train(inv: &Invocation) -> i32 {
     // live CSV when --out is set (a killed run keeps its rows)
     let mut progress = ProgressProbe::new();
     if cfg.out.is_empty() {
-        exp.run_coordinator_probed(&spec, &mut [&mut progress]);
+        exp.run_backend_probed(&spec, &mut [&mut progress]);
     } else {
         let mut csv = match CsvProbe::to_path(&cfg.out) {
             Ok(p) => p,
@@ -145,7 +148,7 @@ fn cmd_train(inv: &Invocation) -> i32 {
             }
         };
         let probes: &mut [&mut dyn Probe] = &mut [&mut progress, &mut csv];
-        exp.run_coordinator_probed(&spec, probes);
+        exp.run_backend_probed(&spec, probes);
         println!("wrote {}", cfg.out);
     }
     0
@@ -248,7 +251,7 @@ fn cmd_info(inv: &Invocation) -> i32 {
     // reported separately below (no hard dependency on artifacts, and no
     // double runtime load when they exist)
     let mut native_cfg = inv.config.clone();
-    native_cfg.backend = "native".into();
+    native_cfg.compute = "native".into();
     let exp = match Experiment::from_config(&native_cfg) {
         Ok(e) => e,
         Err(e) => {

@@ -16,7 +16,9 @@
 //! }
 //!    │
 //!    ├── Experiment::run(&spec)              → engine  (matrix form)
-//!    └── Experiment::run_coordinator(&spec)  → node threads + wire frames
+//!    ├── Experiment::run_coordinator(&spec)  → node threads + wire frames
+//!    └── Experiment::run_sim(&spec)          → sharded event-driven sim
+//!                                              (100k–1M nodes, wire frames)
 //!              │
 //!              ▼   streaming, while the run is in flight
 //!        Probe::on_sample(&MetricPoint)      — live CSV, progress lines, …
@@ -33,7 +35,10 @@
 //! the network at recorded snapshots, so budget/target/deadline stops fire
 //! at `record_every` granularity there — set `record_every = 1` for
 //! round-exact budget stops (and for bit-identical engine ↔ coordinator
-//! stop rounds, which `rust/tests/run_api.rs` pins under `Dense64`).
+//! stop rounds, which `rust/tests/run_api.rs` pins under `Dense64`). The
+//! sim backend samples on the same snapshot grid as the coordinator, so
+//! the three backends stop on the same round at the same cumulative bit
+//! count (`rust/tests/sim_parity.rs`).
 //!
 //! The deprecated shims ([`crate::engine::RunConfig`],
 //! [`crate::coordinator::run_prox_lead`]) forward here and exist only for
@@ -259,6 +264,9 @@ pub enum Backend {
     Engine,
     /// The message-passing coordinator (node threads, real framed bytes).
     Coordinator,
+    /// The event-driven massive-n simulator (sharded worker pool driving
+    /// the per-node halves over real wire frames — no per-node threads).
+    Sim,
 }
 
 impl Backend {
@@ -266,6 +274,7 @@ impl Backend {
         match self {
             Backend::Engine => "engine",
             Backend::Coordinator => "coordinator",
+            Backend::Sim => "sim",
         }
     }
 }

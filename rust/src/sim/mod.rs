@@ -1,0 +1,595 @@
+//! Event-driven massive-n simulation backend: the third runner.
+//!
+//! The message-passing coordinator spawns one OS thread per node — faithful
+//! to a real deployment, and hard-capped around n ≤ 64. This backend drives
+//! the *same* per-node [`NodeAlgorithm`] halves over the *same* zero-alloc
+//! wire codec path at n = 100k–1M by replacing threads-and-channels with a
+//! sharded round loop over the CSR mixing structure:
+//!
+//! ```text
+//!   round k (all participants, fixed pool of min(cores, n) threads):
+//!     phase A — claim contiguous node shards; per node i:
+//!                 outgoing → frame_begin/encode_into/frame_end →
+//!                 FrameRef::parse → decode_into → shared slot row q[i]
+//!     ── barrier ──
+//!     phase B — claim shards; per node i:
+//!                 copy neighbor slot rows q[j] into reused peer scratch,
+//!                 alg.update(q[i], peers)
+//!     ── barrier ──
+//!     main thread only: snapshot / StopSet / probes on the engine's
+//!     record grid, then release the pool into round k+1
+//! ```
+//!
+//! **Bit-parity with engine and coordinator.** Two contracts compose:
+//! [`WeightRow::mix_into`] reproduces the engine's ascending-j summation
+//! order, and the codec decode path is deterministic — the sender-side
+//! decode of a frame and every receiver's decode agree bit-exactly (see
+//! [`crate::coordinator::wire`]). The second contract is the lever that
+//! makes an O(n·d)-memory simulation possible at all: instead of decoding
+//! each broadcast once per *edge* (what the coordinator's receivers do),
+//! the sim parses and decodes each frame exactly once per *broadcast* into
+//! a shared n×p slot matrix, and phase B reads neighbor rows from there.
+//! Per-node compression dither streams are reproduced exactly
+//! (`Rng::new(seed).fork(i)`, same as `run_node`), so under `Dense64` the
+//! sim is bit-identical to both other backends, and under lossy codecs it
+//! is bit-identical to the coordinator's arithmetic (`rust/tests/
+//! sim_parity.rs` pins the full 9-algorithm matrix).
+//!
+//! **Memory is O(nnz + n·d).** Per node: the algorithm half's own state
+//! (O(d) each), one reused frame buffer, one slot row, one RNG. Per run:
+//! the CSR neighbor structure (nnz ids + n+1 offsets) and one n×d snapshot
+//! matrix. Per participant: O(max_degree·d) peer scratch. No per-node
+//! threads, no per-node channels, no per-node history.
+//!
+//! **Zero allocation per warmed-up round.** All buffers above are
+//! allocated before the round loop; the loop itself runs on reused scratch,
+//! atomics, and `Barrier::wait`. Snapshots are the documented exception
+//! (they push one `MetricPoint` into a pre-sized history and may touch
+//! probe code); `rust/tests/sim_zero_alloc.rs` pins the non-snapshot
+//! rounds at exactly zero allocations via a counting global allocator.
+//!
+//! **What is simulated away.** Stragglers (`CoordConfig::straggler`) are a
+//! wall-clock transport phenomenon with no arithmetic effect, so the sim
+//! ignores them. Frame tamper *is* honored, but detection happens at the
+//! broadcast site (the one shared decode) rather than at each receiver:
+//! the resulting [`WireFault`] carries the *sender's* id, the faulted
+//! round is discarded exactly like the coordinator's (history truncates at
+//! the last complete snapshot), and `stopped_by` reports the fault the
+//! same way. Node ids on the wire truncate to the frame format's u16
+//! `from` field above n = 65535 — frames never cross nodes here, so only
+//! that diagnostic field is affected, never routing or arithmetic.
+
+use crate::algorithm::suboptimality;
+use crate::coordinator::node;
+use crate::coordinator::wire::{self, Frame, FrameRef, WireCodec, WireError, WireFault};
+use crate::coordinator::{CoordConfig, FrameTamper, NodeAlgorithm, WeightRow};
+use crate::graph::MixingOp;
+use crate::linalg::Mat;
+use crate::runner::{Backend, MetricPoint, Probe, RunResult, RunSpec, StopReason};
+use crate::util::rng::Rng;
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Barrier, Mutex};
+use std::thread;
+use std::time::Instant;
+
+/// Shard granularity for the work-claiming counters: big enough that a
+/// `fetch_add` amortizes over cache-friendly contiguous work, small enough
+/// that a ring at n = 1024 still load-balances across a desktop's cores.
+const CHUNK: usize = 64;
+
+/// A `Vec` whose *elements* are individually handed out as `&mut` across
+/// the worker pool.
+///
+/// SAFETY contract (upheld by the round loop, not the type): during any
+/// phase, element i is touched only by the single participant that claimed
+/// the shard containing i from that phase's atomic counter, and phases are
+/// separated by `Barrier::wait` (which establishes happens-before in both
+/// directions). Outside the phases, only the main thread touches elements,
+/// and only while every worker is parked on the round barrier.
+struct SlotVec<T> {
+    slots: Vec<UnsafeCell<T>>,
+}
+
+// SAFETY: see the struct docs — element access is externally synchronized
+// by shard ownership + barriers.
+unsafe impl<T: Send> Sync for SlotVec<T> {}
+
+impl<T> SlotVec<T> {
+    fn new(items: Vec<T>) -> SlotVec<T> {
+        SlotVec { slots: items.into_iter().map(UnsafeCell::new).collect() }
+    }
+
+    /// SAFETY: caller must hold exclusive claim on index `i` (see struct
+    /// docs).
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn get_mut(&self, i: usize) -> &mut T {
+        &mut *self.slots[i].get()
+    }
+}
+
+/// Row-sliced view of a dense n×p matrix shared across the pool: phase A
+/// writes row i under the same exclusive-claim discipline as [`SlotVec`],
+/// phase B reads rows concurrently (no writers exist then — the phases are
+/// barrier-separated).
+struct RowMat {
+    ptr: *mut f64,
+    rows: usize,
+    cols: usize,
+}
+
+// SAFETY: access discipline documented on the struct; the pointee outlives
+// the worker scope (it is a stack local of `run_with_workers`).
+unsafe impl Send for RowMat {}
+unsafe impl Sync for RowMat {}
+
+impl RowMat {
+    fn new(m: &mut Mat) -> RowMat {
+        RowMat { ptr: m.data.as_mut_ptr(), rows: m.rows, cols: m.cols }
+    }
+
+    /// SAFETY: caller must hold exclusive claim on row `i` and no shared
+    /// readers may exist (phase A discipline).
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn row_mut(&self, i: usize) -> &mut [f64] {
+        debug_assert!(i < self.rows);
+        std::slice::from_raw_parts_mut(self.ptr.add(i * self.cols), self.cols)
+    }
+
+    /// SAFETY: no `&mut` to row `i` may exist (phase B discipline).
+    unsafe fn row(&self, i: usize) -> &[f64] {
+        debug_assert!(i < self.rows);
+        std::slice::from_raw_parts(self.ptr.add(i * self.cols), self.cols)
+    }
+}
+
+/// Per-participant cumulative wire accounting; slot `pid` is written only
+/// by participant `pid` during phases, read only by main between rounds.
+#[derive(Default)]
+struct Counter {
+    bits: u64,
+    bytes: u64,
+}
+
+/// Everything the phase kernels need, shared immutably across the pool.
+struct Shared<'a> {
+    n: usize,
+    codec: &'a WireCodec,
+    tag: u8,
+    tamper: Option<FrameTamper>,
+    /// CSR neighbor structure: node i's gossip neighbors (ascending j,
+    /// zero weights excluded — the same ids `WeightRow` carries) are
+    /// `ids[off[i]..off[i+1]]`.
+    off: &'a [usize],
+    ids: &'a [u32],
+    algs: &'a SlotVec<Option<Box<dyn NodeAlgorithm>>>,
+    rngs: &'a SlotVec<Rng>,
+    frames: &'a SlotVec<Vec<u8>>,
+    counters: &'a SlotVec<Counter>,
+    q: &'a RowMat,
+    /// Wire round index, published by main before each round's first
+    /// barrier.
+    round: &'a AtomicUsize,
+    next_build: &'a AtomicUsize,
+    next_a: &'a AtomicUsize,
+    next_b: &'a AtomicUsize,
+    done: &'a AtomicBool,
+    fault_flag: &'a AtomicBool,
+    faults: &'a Mutex<Vec<WireFault>>,
+    bar: &'a Barrier,
+}
+
+/// Per-participant reused scratch (the only per-thread state).
+struct Scratch {
+    /// `outgoing` destination (p).
+    payload: Vec<f64>,
+    /// `encode_into`'s sender-side decode destination (p); the value the
+    /// network consumes is re-derived through `parse`/`decode_into`.
+    enc: Vec<f64>,
+    /// Peer slots handed to `update`, pre-sized to the global max degree.
+    peers: Vec<(usize, Vec<f64>)>,
+}
+
+impl Scratch {
+    fn new(p: usize, max_deg: usize) -> Scratch {
+        Scratch {
+            payload: vec![0.0; p],
+            enc: vec![0.0; p],
+            peers: (0..max_deg).map(|_| (0usize, vec![0.0; p])).collect(),
+        }
+    }
+}
+
+/// Claim contiguous [`CHUNK`]-sized shards from `counter` until the index
+/// space `0..n` is drained, running `f` on every claimed index. Each
+/// participant over-claims at most once, and main resets the counter
+/// before the next phase begins.
+fn drain(counter: &AtomicUsize, n: usize, mut f: impl FnMut(usize)) {
+    loop {
+        let s = counter.fetch_add(CHUNK, Ordering::Relaxed);
+        if s >= n {
+            break;
+        }
+        for i in s..(s + CHUNK).min(n) {
+            f(i);
+        }
+    }
+}
+
+/// Parse + validate + decode one self-produced frame — the broadcast-site
+/// equivalent of the coordinator's receive path (`node::absorb`), minus
+/// the checks that cannot fire without a transport (neighbor identity,
+/// round skew, duplicates).
+fn parse_decode(sh: &Shared, buf: &[u8], out: &mut [f64]) -> Result<(), WireError> {
+    let f = FrameRef::parse(buf)?;
+    if f.tag != sh.tag {
+        return Err(if WireCodec::known_tag(f.tag) {
+            WireError::TagMismatch { expected: sh.tag, got: f.tag }
+        } else {
+            WireError::UnknownTag { tag: f.tag }
+        });
+    }
+    sh.codec.decode_into(f.payload, out)
+}
+
+/// Phase A for one claimed node: broadcast — encode the outgoing payload
+/// into the node's reused frame buffer, account bits/bytes, then parse +
+/// decode the frame once into the shared slot row (every receiver's decode
+/// by the codec determinism contract).
+fn phase_a(sh: &Shared, sc: &mut Scratch, pid: usize, i: usize, k: usize) {
+    // SAFETY: shard claim makes this participant the only one touching
+    // node i's slots this phase; barriers order phases (see SlotVec docs).
+    let alg = unsafe { sh.algs.get_mut(i) }.as_mut().expect("alg built");
+    alg.outgoing(&mut sc.payload);
+    let buf = unsafe { sh.frames.get_mut(i) };
+    wire::frame_begin(buf, sh.tag, k as u32, i as u16);
+    let rng = unsafe { sh.rngs.get_mut(i) };
+    let bits = sh.codec.encode_into(&sc.payload, rng, &mut sc.enc, buf);
+    wire::frame_end(buf);
+    if let Some(t) = &sh.tamper {
+        if t.node == i && t.round == k {
+            node::apply_tamper(buf, t.kind);
+        }
+    }
+    let deg = (sh.off[i + 1] - sh.off[i]) as u64;
+    // same accounting as run_node: payload bits once per broadcast, frame
+    // bytes once per neighbor unicast (tampered length counts, as there)
+    let c = unsafe { sh.counters.get_mut(pid) };
+    c.bits += bits;
+    c.bytes += buf.len() as u64 * deg;
+    let q_row = unsafe { sh.q.row_mut(i) };
+    if let Err(error) = parse_decode(sh, buf, q_row) {
+        // keep processing the shard: the round is discarded wholesale by
+        // main after the phase-B barrier, and fault resolution is
+        // deterministic (min round, then min node) regardless of which
+        // participants pushed
+        sh.fault_flag.store(true, Ordering::Relaxed);
+        sh.faults
+            .lock()
+            .expect("fault sink poisoned")
+            .push(WireFault { node: i as u16, round: k as u32, error });
+    }
+}
+
+/// Phase B for one claimed node: gather — copy the neighbor slot rows into
+/// the participant's peer scratch (ascending j, exactly the coordinator's
+/// per-neighbor slot layout) and hand the decoded round to the algorithm.
+fn phase_b(sh: &Shared, sc: &mut Scratch, i: usize) {
+    let (s, e) = (sh.off[i], sh.off[i + 1]);
+    let deg = e - s;
+    for (slot, &j) in sc.peers[..deg].iter_mut().zip(&sh.ids[s..e]) {
+        slot.0 = j as usize;
+        // SAFETY: phase B has no writers to q (barrier-separated from
+        // phase A), so shared row reads are sound.
+        slot.1.copy_from_slice(unsafe { sh.q.row(j as usize) });
+    }
+    // SAFETY: exclusive shard claim on node i (see SlotVec docs).
+    let alg = unsafe { sh.algs.get_mut(i) }.as_mut().expect("alg built");
+    alg.update(unsafe { sh.q.row(i) }, &sc.peers[..deg]);
+}
+
+/// One participant's whole life: parallel build pass, then the barrier-
+/// stepped round loop until main raises `done`.
+fn participate(
+    sh: &Shared,
+    w: &MixingOp,
+    build: &(impl Fn(usize, WeightRow) -> Box<dyn NodeAlgorithm> + Sync),
+    pid: usize,
+    p: usize,
+    max_deg: usize,
+    seed: u64,
+) {
+    let mut sc = Scratch::new(p, max_deg);
+    let frame_cap = Frame::HEADER_LEN + p * 8 + 8;
+    drain(sh.next_build, sh.n, |i| {
+        let row = WeightRow::from_op(w, i);
+        // SAFETY: exclusive shard claim on node i during the build pass.
+        unsafe {
+            *sh.algs.get_mut(i) = Some(build(i, row));
+            // the coordinator's per-node dither stream, reproduced exactly
+            *sh.rngs.get_mut(i) = Rng::new(seed).fork(i as u64);
+            sh.frames.get_mut(i).reserve_exact(frame_cap);
+        }
+    });
+    sh.bar.wait();
+    loop {
+        sh.bar.wait();
+        // published by main before releasing the barrier (happens-before
+        // via the barrier itself, hence Relaxed)
+        if sh.done.load(Ordering::Relaxed) {
+            break;
+        }
+        let k = sh.round.load(Ordering::Relaxed);
+        drain(sh.next_a, sh.n, |i| phase_a(sh, &mut sc, pid, i, k));
+        sh.bar.wait();
+        drain(sh.next_b, sh.n, |i| phase_b(sh, &mut sc, i));
+        sh.bar.wait();
+    }
+}
+
+/// Run `name` through the sim backend — the same signature as
+/// [`crate::coordinator::run`], so [`crate::exp::Experiment`] dispatches
+/// to either interchangeably. Uses one worker per available core (capped
+/// at n); [`run_with_workers`] pins the pool size explicitly.
+pub fn run(
+    w: &MixingOp,
+    x0: &Mat,
+    name: &str,
+    wire: &CoordConfig,
+    spec: &RunSpec,
+    x_star: &[f64],
+    probes: &mut [&mut dyn Probe],
+    build: impl Fn(usize, WeightRow) -> Box<dyn NodeAlgorithm> + Sync,
+) -> RunResult {
+    run_with_workers(w, x0, name, wire, spec, x_star, probes, build, 0)
+}
+
+/// [`run`] with an explicit participant count (`0` = one per core). The
+/// result is bit-identical for every pool size — shard claiming reorders
+/// only *which thread* runs a node's arithmetic, never the arithmetic or
+/// the per-node RNG streams — which `rust/tests/sim_parity.rs` pins.
+#[allow(clippy::too_many_arguments)]
+pub fn run_with_workers(
+    w: &MixingOp,
+    x0: &Mat,
+    name: &str,
+    wire: &CoordConfig,
+    spec: &RunSpec,
+    x_star: &[f64],
+    probes: &mut [&mut dyn Probe],
+    build: impl Fn(usize, WeightRow) -> Box<dyn NodeAlgorithm> + Sync,
+    workers: usize,
+) -> RunResult {
+    let n = w.n();
+    let p = x0.cols;
+    let rounds = spec.stop.max_rounds;
+    assert_eq!(x0.rows, n);
+    assert_eq!(x_star.len(), p, "x_star dimension must match the iterate width");
+    assert!(rounds > 0, "sim run needs rounds >= 1 (0 would record no snapshots)");
+    assert!(spec.record_every > 0, "record_every must be >= 1");
+    assert!(
+        spec.schedule.is_none(),
+        "stepsize schedules are engine-only (node halves run fixed hyperparameters)"
+    );
+    let gated = spec.stop.leader_gated();
+    let start = Instant::now();
+
+    let participants = if workers > 0 {
+        workers
+    } else {
+        thread::available_parallelism().map(|c| c.get()).unwrap_or(1)
+    }
+    .clamp(1, n);
+
+    // CSR neighbor structure (ascending j, zero weights excluded — the
+    // exact id sequence WeightRow::from_op produces, shared by every
+    // algorithm's mix).
+    let mut off = Vec::with_capacity(n + 1);
+    let mut ids: Vec<u32> = Vec::with_capacity(w.nnz());
+    off.push(0usize);
+    for i in 0..n {
+        for (j, _) in w.neighbors(i) {
+            ids.push(j as u32);
+        }
+        off.push(ids.len());
+    }
+    let max_deg = (0..n).map(|i| off[i + 1] - off[i]).max().unwrap_or(0);
+
+    let mut q = Mat::zeros(n, p);
+    let mut snap = Mat::zeros(n, p);
+    let mut history: Vec<MetricPoint> = Vec::with_capacity(rounds / spec.record_every + 2);
+    let mut stopped_by: Option<StopReason> = None;
+
+    let algs = SlotVec::new((0..n).map(|_| None).collect::<Vec<Option<Box<dyn NodeAlgorithm>>>>());
+    let rngs = SlotVec::new((0..n).map(|_| Rng::new(0)).collect::<Vec<Rng>>());
+    let frames = SlotVec::new(vec![Vec::<u8>::new(); n]);
+    let counters = SlotVec::new((0..participants).map(|_| Counter::default()).collect::<Vec<_>>());
+    let q_view = RowMat::new(&mut q);
+    let round = AtomicUsize::new(0);
+    let next_build = AtomicUsize::new(0);
+    let next_a = AtomicUsize::new(0);
+    let next_b = AtomicUsize::new(0);
+    let done = AtomicBool::new(false);
+    let fault_flag = AtomicBool::new(false);
+    let faults: Mutex<Vec<WireFault>> = Mutex::new(Vec::new());
+    let bar = Barrier::new(participants);
+    let sh = Shared {
+        n,
+        codec: &wire.codec,
+        tag: wire.codec.tag(),
+        tamper: wire.tamper,
+        off: &off,
+        ids: &ids,
+        algs: &algs,
+        rngs: &rngs,
+        frames: &frames,
+        counters: &counters,
+        q: &q_view,
+        round: &round,
+        next_build: &next_build,
+        next_a: &next_a,
+        next_b: &next_b,
+        done: &done,
+        fault_flag: &fault_flag,
+        faults: &faults,
+        bar: &bar,
+    };
+    let sh = &sh;
+    let build = &build;
+    let seed = wire.seed;
+
+    thread::scope(|scope| {
+        for pid in 1..participants {
+            thread::Builder::new()
+                .name(format!("sim-{pid}"))
+                .spawn_scoped(scope, move || participate(sh, w, build, pid, p, max_deg, seed))
+                .expect("spawn sim worker");
+        }
+        // the caller thread is participant 0 AND the leader: it works the
+        // phases like everyone else and owns the exclusive windows between
+        // a round's last barrier and the next round's first
+        let mut sc = Scratch::new(p, max_deg);
+        let frame_cap = Frame::HEADER_LEN + p * 8 + 8;
+        drain(sh.next_build, n, |i| {
+            let row = WeightRow::from_op(w, i);
+            // SAFETY: exclusive shard claim on node i during the build pass.
+            unsafe {
+                *sh.algs.get_mut(i) = Some(build(i, row));
+                *sh.rngs.get_mut(i) = Rng::new(seed).fork(i as u64);
+                sh.frames.get_mut(i).reserve_exact(frame_cap);
+            }
+        });
+        sh.bar.wait();
+        // exclusive window: all workers are parked on the round barrier
+        // SAFETY: main-exclusive access between barriers (see SlotVec docs).
+        let setup = unsafe { sh.algs.get_mut(0) }.as_ref().expect("alg built").setup_rounds();
+        debug_assert!(
+            (0..n).all(|i| unsafe { sh.algs.get_mut(i) }.as_ref().unwrap().setup_rounds() == setup),
+            "heterogeneous setup_rounds across nodes"
+        );
+        let total = setup + rounds;
+
+        // main-only snapshot: copy every node's iterate, sum the cumulative
+        // counters, emit on the shared record grid, evaluate the StopSet
+        let take = |step: usize,
+                        snap: &mut Mat,
+                        history: &mut Vec<MetricPoint>,
+                        probes: &mut [&mut dyn Probe],
+                        stopped_by: &mut Option<StopReason>| {
+            let (mut bits, mut bytes, mut evals) = (0u64, 0u64, 0u64);
+            for pid in 0..participants {
+                // SAFETY: main-exclusive window.
+                let c = unsafe { sh.counters.get_mut(pid) };
+                bits += c.bits;
+                bytes += c.bytes;
+            }
+            for i in 0..n {
+                // SAFETY: main-exclusive window.
+                let alg = unsafe { sh.algs.get_mut(i) }.as_ref().expect("alg built");
+                evals += alg.grad_evals();
+                snap.row_mut(i).copy_from_slice(alg.x());
+            }
+            let elapsed = start.elapsed();
+            let m = MetricPoint {
+                round: step,
+                grad_evals: evals,
+                bits,
+                wire_bytes: bytes,
+                suboptimality: suboptimality(snap, x_star),
+                consensus: snap.consensus_error(),
+                wall_ns: elapsed.as_nanos(),
+            };
+            crate::runner::emit(m, snap, history, probes);
+            if gated && step > 0 {
+                // first-hit-wins, divergence beating the budget checks —
+                // the coordinator leader's exact rule
+                let hit = if !snap.is_finite() {
+                    Some(StopReason::Diverged)
+                } else {
+                    spec.stop.check(step, bits, evals, m.suboptimality, elapsed)
+                };
+                if let Some(reason) = hit {
+                    // MaxRounds is the natural end, not an early stop
+                    if stopped_by.is_none() && reason != StopReason::MaxRounds {
+                        *stopped_by = Some(reason);
+                    }
+                }
+            }
+        };
+
+        for k in 0..total {
+            if k == setup {
+                // the engine's round-0 sample: post-init state, setup wire
+                // costs already on the counters
+                take(0, &mut snap, &mut history, probes, &mut stopped_by);
+            }
+            sh.next_a.store(0, Ordering::Relaxed);
+            sh.next_b.store(0, Ordering::Relaxed);
+            sh.round.store(k, Ordering::Relaxed);
+            sh.bar.wait();
+            drain(sh.next_a, n, |i| phase_a(sh, &mut sc, 0, i, k));
+            sh.bar.wait();
+            drain(sh.next_b, n, |i| phase_b(sh, &mut sc, i));
+            sh.bar.wait();
+            // exclusive window again
+            if sh.fault_flag.load(Ordering::Relaxed) {
+                // the faulted round is discarded — same truncation as the
+                // coordinator, whose leader never completes that snapshot
+                break;
+            }
+            if k >= setup {
+                let step = k - setup + 1;
+                if step % spec.record_every == 0 || step == rounds {
+                    take(step, &mut snap, &mut history, probes, &mut stopped_by);
+                    if stopped_by.is_some() {
+                        break;
+                    }
+                }
+            }
+        }
+        sh.done.store(true, Ordering::Relaxed);
+        sh.bar.wait();
+    });
+
+    // deterministic fault resolution — earliest round, lowest node id
+    let fault =
+        sh.faults.lock().expect("fault sink poisoned").drain(..).min_by_key(|f| (f.round, f.node));
+    if history.is_empty() {
+        // a wire fault before the first complete snapshot: synthesize the
+        // round-0 state from x0 so the RunResult invariants hold
+        assert!(fault.is_some(), "no snapshots recorded on a fault-free sim run");
+        snap = x0.clone();
+        let m = MetricPoint {
+            round: 0,
+            grad_evals: 0,
+            bits: 0,
+            wire_bytes: 0,
+            suboptimality: suboptimality(&snap, x_star),
+            consensus: snap.consensus_error(),
+            wall_ns: start.elapsed().as_nanos(),
+        };
+        crate::runner::emit(m, &snap, &mut history, probes);
+    }
+    let final_x = snap;
+    let stopped_by = match (fault, stopped_by) {
+        // a faulted run's history is truncated mid-flight; any other stop
+        // reason would misrepresent it
+        (Some(f), _) => StopReason::WireFault(f),
+        (None, Some(reason)) => reason,
+        // ungated runs always complete the round budget; flag a
+        // non-finite landing state as a divergence after the fact
+        (None, None) if final_x.is_finite() => StopReason::MaxRounds,
+        (None, None) => StopReason::Diverged,
+    };
+
+    let result = RunResult {
+        name: name.to_string(),
+        backend: Backend::Sim,
+        history,
+        stopped_by,
+        elapsed: start.elapsed(),
+        final_x,
+    };
+    crate::runner::finish(&result, probes);
+    result
+}

@@ -132,10 +132,12 @@ pub fn run_cell(cell: &Cell, target_subopt: Option<f64>) -> CellOutcome {
 
 fn run_cell_cached(cell: &Cell, target_subopt: Option<f64>, cache: &RefCache) -> CellOutcome {
     let t0 = Instant::now();
-    // sweeps always run the native kernels — the PJRT backend is per-run,
-    // not per-grid (use `proxlead train --backend xla` for that path)
+    // sweeps always run the native kernels — the PJRT compute path is
+    // per-run, not per-grid (use `proxlead train --compute xla` for that).
+    // `cfg.backend` (engine | coordinator | sim) is left alone so a grid
+    // can sweep over the run backend itself.
     let mut cfg = cell.config.clone();
-    cfg.backend = "native".into();
+    cfg.compute = "native".into();
     let cfg = &cfg;
     // the single Config → Experiment resolution pipeline (problem registry,
     // CSR-auto mixing, auto-η); the shared cache injects the reference x*
@@ -148,7 +150,7 @@ fn run_cell_cached(cell: &Cell, target_subopt: Option<f64>, cache: &RefCache) ->
     if let Some(t) = target_subopt {
         spec = spec.until(t);
     }
-    let result = exp.run(&spec);
+    let result = exp.run_backend(&spec);
     CellOutcome {
         index: cell.index,
         overrides: cell.overrides.clone(),
@@ -443,17 +445,43 @@ mod tests {
     }
 
     #[test]
-    fn sweep_forces_native_backend() {
-        // the PJRT backend is per-run, not per-grid: a backend=xla config
-        // sweeps on the native kernels instead of panicking in the pool
-        // when artifacts are unavailable (the stub default)
+    fn sweep_forces_native_compute() {
+        // the PJRT compute path is per-run, not per-grid: a compute=xla
+        // config sweeps on the native kernels instead of panicking in the
+        // pool when artifacts are unavailable (the stub default)
         let mut base = tiny_base();
         base.rounds = 10;
         base.record_every = 10;
-        base.backend = "xla".into();
+        base.compute = "xla".into();
         let res = run_sweep(&SweepSpec::new(base), |_| {}).unwrap();
         assert_eq!(res.cells.len(), 1);
         assert!(res.cells[0].final_subopt().is_finite());
+    }
+
+    #[test]
+    fn backend_is_a_sweep_axis() {
+        // the run backend (engine | coordinator | sim) is gridable: the
+        // same cell dispatches to all three and every backend reports
+        // itself in the result. Per-cell seeds differ, so this asserts
+        // dispatch, not bit-parity (rust/tests/sim_parity.rs pins that).
+        let mut base = tiny_base();
+        base.rounds = 10;
+        base.record_every = 10;
+        let spec = SweepSpec::new(base)
+            .axis("backend", &["engine", "coordinator", "sim"])
+            .threads(2);
+        let res = run_sweep(&spec, |_| {}).unwrap();
+        assert_eq!(res.cells.len(), 3);
+        use crate::runner::Backend;
+        for (c, b) in
+            res.cells.iter().zip([Backend::Engine, Backend::Coordinator, Backend::Sim])
+        {
+            assert_eq!(c.result.backend, b, "backend axis must reach {}", b.name());
+            assert!(c.final_subopt().is_finite());
+        }
+        // unknown backends are rejected at validation, before fan-out
+        let spec = SweepSpec::new(tiny_base()).axis("backend", &["tpu"]);
+        assert!(spec.cells().is_err());
     }
 
     #[test]

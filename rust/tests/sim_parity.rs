@@ -1,0 +1,221 @@
+//! Sim ↔ coordinator ↔ matrix-engine parity — the acceptance suite for the
+//! event-driven massive-n simulation backend (`proxlead::sim`).
+//!
+//! 1. **9-way tri-backend bit matrix** — every `algorithm=` value runs on
+//!    the sim under the exact `Dense64` codec via
+//!    `Experiment::run_sim(&RunSpec)` and must reproduce both the matrix
+//!    engine's and the coordinator's suboptimality history, gradient-eval
+//!    totals, wire accounting, and final iterates exactly.
+//! 2. **Erdős–Rényi topology** — parity is not a ring artifact: the CSR
+//!    mixing path matches on an irregular-degree graph too.
+//! 3. **Oracle-stream parity** — a stochastic (SAGA) run matches: the sim
+//!    forks the same per-node RNG streams as both other backends.
+//! 4. **Stop parity** — a bits-budget run stops all three backends on the
+//!    same round at the same cumulative bit count (the same snapshot
+//!    grid), with identical final iterates.
+//! 5. **Pool-size invariance** — `run_with_workers` is bit-identical for 1,
+//!    3, and auto workers: shard claiming reorders which thread runs a
+//!    node, never the arithmetic or the RNG streams.
+//! 6. **Fault injection** — a tampered broadcast tears the run down with
+//!    `StopReason::WireFault`; the sim detects at the broadcast site, so
+//!    the fault names the *sender* (the coordinator's receivers would).
+
+use proxlead::config::Config;
+use proxlead::coordinator::{FrameTamper, TamperKind};
+use proxlead::exp::{registry, Experiment, ALGORITHM_NAMES};
+use proxlead::runner::{Backend, RunSpec, StopReason};
+use proxlead::sim;
+
+fn cfg_for(algorithm: &str, bits: u32) -> Config {
+    let mut cfg = Config::parse(&format!(
+        "algorithm = {algorithm}\nnodes = 16\nsamples_per_node = 24\ndim = 5\nclasses = 3\n\
+         batches = 4\nseparation = 1.0\nseed = 33\nlambda1 = 0.005\nlambda2 = 0.1\n\
+         bits = {bits}\nrounds = 40\nrecord_every = 40\n"
+    ))
+    .expect("parity config");
+    if algorithm == "choco" {
+        cfg.gamma = 0.2; // gossip stepsize convention
+    }
+    cfg
+}
+
+/// Assert two runs' iterates and recorded metrics are bit-for-bit equal.
+fn assert_bit_equal(tag: &str, a: &proxlead::runner::RunResult, b: &proxlead::runner::RunResult) {
+    assert_eq!(a.history.len(), b.history.len(), "{tag}: history length");
+    for (x, y) in a.history.iter().zip(&b.history) {
+        assert_eq!(x.round, y.round, "{tag}");
+        assert_eq!(
+            x.suboptimality.to_bits(),
+            y.suboptimality.to_bits(),
+            "{tag}: suboptimality diverged at round {}",
+            x.round
+        );
+        assert_eq!(x.consensus.to_bits(), y.consensus.to_bits(), "{tag}: round {}", x.round);
+        assert_eq!(x.grad_evals, y.grad_evals, "{tag}: grad-eval accounting at {}", x.round);
+    }
+    for (i, (x, y)) in a.final_x.data.iter().zip(&b.final_x.data).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: final iterate entry {i} ({x:?} vs {y:?})");
+    }
+}
+
+#[test]
+fn all_nine_algorithms_match_both_backends_bit_for_bit() {
+    for name in ALGORITHM_NAMES {
+        let exp = Experiment::from_config(&cfg_for(name, 64)).unwrap();
+        let spec = exp.run_spec().every(10);
+        let s = exp.run_sim(&spec);
+        let engine = exp.run(&spec);
+        let coord = exp.run_coordinator(&spec);
+
+        assert_eq!(s.backend, Backend::Sim, "{name}");
+        assert_eq!(s.stopped_by, StopReason::MaxRounds, "{name}");
+        assert_eq!(s.history.last().unwrap().round, exp.config.rounds, "{name}");
+        assert_bit_equal(&format!("{name} sim≡engine"), &s, &engine);
+        assert_bit_equal(&format!("{name} sim≡coordinator"), &s, &coord);
+        // both wire backends serialize the same frames to the same
+        // neighbors — payload-bit and framed-byte accounting must agree
+        // exactly (the engine has no wire; its bit model is compared in
+        // coordinator_parity.rs)
+        for (x, y) in s.history.iter().zip(&coord.history) {
+            assert_eq!(x.bits, y.bits, "{name}: payload bits at round {}", x.round);
+            assert_eq!(x.wire_bytes, y.wire_bytes, "{name}: wire bytes at round {}", x.round);
+        }
+        assert!(s.wire_bytes() > 0, "{name}: no frames on the sim wire");
+    }
+}
+
+#[test]
+fn erdos_renyi_topology_matches_engine() {
+    // irregular degrees, CSR-auto mixing: parity is not a ring artifact
+    let mut cfg = cfg_for("prox-lead", 64);
+    cfg.nodes = 32;
+    cfg.set("topology", "er").unwrap();
+    let exp = Experiment::from_config(&cfg).unwrap();
+    let spec = exp.run_spec().every(20);
+    let s = exp.run_sim(&spec);
+    let engine = exp.run(&spec);
+    assert_bit_equal("er-32 sim≡engine", &s, &engine);
+}
+
+#[test]
+fn saga_oracle_streams_match_across_backends() {
+    // stochastic draws, not just deterministic gradients: the sim forks
+    // Rng::new(seed).fork(i) per node exactly like the node threads do
+    let mut cfg = cfg_for("prox-lead", 64);
+    cfg.oracle = "saga".into();
+    let exp = Experiment::from_config(&cfg).unwrap();
+    let spec = exp.run_spec();
+    let s = exp.run_sim(&spec);
+    let engine = exp.run(&spec);
+    let coord = exp.run_coordinator(&spec);
+    assert_bit_equal("saga sim≡engine", &s, &engine);
+    // per-node SAGA table init (m per node) is counted on all three sides
+    assert_eq!(
+        s.history.last().unwrap().grad_evals,
+        coord.history.last().unwrap().grad_evals
+    );
+}
+
+#[test]
+fn bits_budget_stops_all_three_backends_on_the_same_round() {
+    // same snapshot grid ⇒ same stop round at the same cumulative bits
+    let mut cfg = cfg_for("prox-lead", 64);
+    cfg.rounds = 12;
+    cfg.record_every = 1;
+    let exp = Experiment::from_config(&cfg).unwrap();
+    // the budget that is first met exactly at round 7 (bits are strictly
+    // increasing round over round — every round transmits)
+    let full = exp.run(&exp.run_spec());
+    let budget = full.history.iter().find(|m| m.round == 7).unwrap().bits;
+    let spec = exp.run_spec().bits_budget(budget);
+
+    let s = exp.run_sim(&spec);
+    let engine = exp.run(&spec);
+    let coord = exp.run_coordinator(&spec);
+    for (r, tag) in [(&s, "sim"), (&engine, "engine"), (&coord, "coordinator")] {
+        assert_eq!(r.stopped_by, StopReason::BitsBudget, "{tag}");
+        let end = r.history.last().unwrap();
+        assert_eq!(end.round, 7, "{tag}: stop round");
+        assert_eq!(end.bits, budget, "{tag}: stop bit count");
+    }
+    assert_bit_equal("bits-budget sim≡engine", &s, &engine);
+    assert_bit_equal("bits-budget sim≡coordinator", &s, &coord);
+}
+
+#[test]
+fn worker_count_never_changes_results() {
+    // the quantized codec exercises the per-node dither RNG streams; any
+    // pool size must replay them identically (shard claiming reorders
+    // *which thread* runs a node, never the node's arithmetic)
+    let cfg = cfg_for("prox-lead", 2);
+    let exp = Experiment::from_config(&cfg).unwrap();
+    let spec = exp.run_spec().every(10);
+    let wire = exp.coord_config();
+    let x_star = exp.reference();
+    let mut with_pool = |workers: usize| {
+        sim::run_with_workers(
+            &exp.mixing,
+            &exp.x0,
+            &exp.config.algorithm,
+            &wire,
+            &spec,
+            &x_star,
+            &mut [],
+            |i, row| registry::build_node_algorithm(&exp, &wire, i, row),
+            workers,
+        )
+    };
+    let auto = exp.run_sim(&spec); // 0 = one worker per core
+    let one = with_pool(1);
+    let three = with_pool(3);
+    assert_bit_equal("1 worker ≡ auto pool", &one, &auto);
+    assert_bit_equal("3 workers ≡ auto pool", &three, &auto);
+    for m in &auto.history {
+        assert_eq!(m.bits, one.history.iter().find(|x| x.round == m.round).unwrap().bits);
+    }
+}
+
+#[test]
+fn tampered_broadcast_faults_at_the_sender() {
+    let exp = Experiment::from_config(&cfg_for("prox-lead", 2)).unwrap();
+    let x_star = exp.reference();
+    let tampered = |round: usize| {
+        // cfg bits=2 ⇒ coord_config frames a quantized wire
+        let wire = exp
+            .coord_config()
+            .tamper(FrameTamper { node: 2, round, kind: TamperKind::TruncateHeader });
+        sim::run(
+            &exp.mixing,
+            &exp.x0,
+            &exp.config.algorithm,
+            &wire,
+            &RunSpec::fixed(8).every(2),
+            &x_star,
+            &mut [],
+            |i, row| registry::build_node_algorithm(&exp, &wire, i, row),
+        )
+    };
+    let res = tampered(3);
+    match res.stopped_by {
+        StopReason::WireFault(f) => {
+            // the sim applies the tamper at the broadcast site, so the
+            // fault names the *sender* — on the coordinator a receiving
+            // neighbor detects it instead (wire_errors.rs)
+            assert_eq!(f.node, 2, "sim faults name the tampering sender");
+            assert_eq!(f.round, 3, "detected in the tampered round");
+        }
+        other => panic!("expected StopReason::WireFault, got {other:?}"),
+    }
+    // the faulted round is discarded; the pre-fault history survives
+    let last = res.history.last().unwrap();
+    assert!(last.round < 3, "faulted round must not be snapshotted");
+    assert_eq!(res.history.first().unwrap().round, 0);
+    assert_eq!(res.final_x.rows, exp.x0.rows);
+
+    // a round-0 fault still yields a round-0 history (synthesized from X⁰)
+    let res = tampered(0);
+    assert!(matches!(res.stopped_by, StopReason::WireFault(_)));
+    let first = res.history.first().unwrap();
+    assert_eq!(first.round, 0, "round-0 snapshot survives an immediate fault");
+    assert!(first.suboptimality.is_finite());
+}

@@ -1,0 +1,107 @@
+//! Pins the sim backend's memory claim: after warmup, a simulation round
+//! allocates NOTHING — the round loop runs entirely in buffers sized at
+//! startup (CSR shards, per-node frames, the shared broadcast matrix,
+//! per-participant scratch).
+//!
+//! A counting `#[global_allocator]` wraps the system allocator (the same
+//! harness as `wire_zero_alloc.rs`; one `#[test]` so no parallel test
+//! thread allocates into the measured window). Two identical runs that
+//! differ only in round count must allocate the *same* number of times:
+//! per-run setup (experiment wiring, thread spawns, scratch warmup) is
+//! equal by construction, so any difference is a per-round allocation.
+//!
+//! Documented exclusions, all sized at startup and identical across the
+//! two runs, so they cannot hide a per-round allocation: snapshot rows in
+//! the preallocated history (`record_every` here samples only round 0 and
+//! the final round in both runs) and the per-participant scratch warmup.
+//! The problem is least-squares: its `grad_slice` is allocation-free
+//! (logreg's allocates a logits buffer per call, which would charge the
+//! oracle, not the round loop, to this pin).
+
+use proxlead::config::Config;
+use proxlead::exp::{registry, Experiment};
+use proxlead::runner::RunSpec;
+use proxlead::sim;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+fn allocs() -> usize {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+#[test]
+fn sim_round_loop_is_zero_alloc_after_warmup() {
+    // 2-bit quantized wire: the round loop covers encode → frame → parse →
+    // decode → mix → prox step, including the per-node dither RNG draws
+    let cfg = Config::parse(
+        "problem = least-squares\nalgorithm = prox-lead\nnodes = 64\n\
+         samples_per_node = 4\ndim = 6\nbatches = 1\nseed = 9\n\
+         lambda1 = 0.005\nlambda2 = 0.1\nbits = 2\n",
+    )
+    .expect("zero-alloc config");
+    let exp = Experiment::from_config(&cfg).expect("experiment");
+    // x* = 0 keeps the FISTA reference solve out of the measured window
+    exp.set_reference(std::sync::Arc::new(vec![0.0; exp.x0.cols]));
+    let x_star = exp.reference();
+
+    // record_every ≫ rounds: both runs snapshot exactly twice (round 0 and
+    // the always-sampled final round), so history pushes are equal too
+    let run_rounds = |rounds: usize| -> usize {
+        let spec = RunSpec::fixed(rounds).every(1_000);
+        let wire = exp.coord_config();
+        let before = allocs();
+        let res = sim::run_with_workers(
+            &exp.mixing,
+            &exp.x0,
+            &exp.config.algorithm,
+            &wire,
+            &spec,
+            &x_star,
+            &mut [],
+            |i, row| registry::build_node_algorithm(&exp, &wire, i, row),
+            2, // fixed pool: identical thread-spawn count in both runs
+        );
+        let after = allocs();
+        assert_eq!(res.history.len(), 2, "round 0 + final round only");
+        assert_eq!(res.history.last().unwrap().round, rounds);
+        assert!(res.final_subopt().is_finite());
+        after - before
+    };
+
+    // first run warms lazy process-wide state (thread-local init, condvar
+    // internals); then compare best-of-two at each round count
+    let _warm = run_rounds(4);
+    let short = run_rounds(4).min(run_rounds(4));
+    let long = run_rounds(12).min(run_rounds(12));
+    assert!(
+        long <= short,
+        "8 extra warmed-up sim rounds allocated {} time(s) \
+         (setup allocs: {short} for 4 rounds, {long} for 12)",
+        long - short
+    );
+}

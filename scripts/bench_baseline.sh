@@ -1,7 +1,7 @@
 #!/usr/bin/env sh
 # Refresh the committed perf-regression baselines (BENCH_*.json).
 #
-# Runs the two gated harnesses in the same PERF_SMOKE configuration the CI
+# Runs the gated harnesses in the same PERF_SMOKE configuration the CI
 # perf-regression job uses (smoke timings are only comparable to smoke
 # timings) and copies their reports to the repo root. Commit the updated
 # BENCH_*.json files together with the change that moved the numbers.
@@ -19,7 +19,7 @@ if [ "${1:-}" = "--full" ]; then
     SMOKE=""
 fi
 
-for bench in perf_hotpath wire_bytes; do
+for bench in perf_hotpath wire_bytes scaling_n; do
     echo "==> cargo bench --bench $bench ${SMOKE:+(PERF_SMOKE=1)}"
     PERF_SMOKE="$SMOKE" cargo bench --bench "$bench"
 done
@@ -27,7 +27,8 @@ done
 if [ -n "$SMOKE" ]; then
     cp rust/bench_out/perf_hotpath.json BENCH_perf_hotpath.json
     cp rust/bench_out/wire_bytes.json BENCH_wire_bytes.json
-    echo "wrote BENCH_perf_hotpath.json and BENCH_wire_bytes.json"
+    cp rust/bench_out/scaling_n.json BENCH_scaling_n.json
+    echo "wrote BENCH_perf_hotpath.json, BENCH_wire_bytes.json, BENCH_scaling_n.json"
     echo "commit them to arm/refresh the CI perf-regression gate"
 else
     echo "full-mode reports left in rust/bench_out/ (not copied to BENCH_*)"

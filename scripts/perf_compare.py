@@ -108,6 +108,11 @@ def main() -> int:
         print(f"  [-] {key[0]} / {key[1]}: only in baseline (row removed?)")
     for key in only_cur:
         print(f"  [n] {key[0]} / {key[1]}: new row (no baseline yet)")
+    if only_base or only_cur:
+        print(f"note: skipped {len(only_base) + len(only_cur)} one-sided "
+              "row(s) — [-]/[n] rows are informational and never gate "
+              "(benches evolve; refresh via scripts/bench_baseline.sh to "
+              "fold new rows into the baseline).")
 
     if regressions:
         print(f"\nFAIL: {len(regressions)} benchmark(s) regressed beyond "
