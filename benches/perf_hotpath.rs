@@ -75,7 +75,7 @@ fn main() {
     });
     let (bytes, _, _) = encode_inf_quantized(&x, 2, 256, &mut Rng::new(1));
     set.run_throughput("decode 64k entries (wire)", 65_536.0 * 8.0, "B", || {
-        decode_inf_quantized(&bytes, 65_536, 2, 256)
+        decode_inf_quantized(&bytes, 65_536, 2, 256).expect("well-formed stream")
     });
     // the zero-alloc scratch paths the coordinator hot loop actually runs:
     // reused encode buffer + decoded slice, reused decode slice, and the

@@ -1,0 +1,64 @@
+//! `proxlead-lint` — check the repo's standing source contracts.
+//!
+//! Usage: `cargo run --release --bin lint [-- [ROOT] [--json PATH]]`
+//!
+//! Walks `ROOT` (default: this crate's `src/`) and applies the rule table
+//! in [`proxlead::lint`]. Exit status: 0 clean, 1 diagnostics found,
+//! 2 usage or I/O error. `--json PATH` additionally writes the CI report.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use proxlead::lint;
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/src"));
+    let mut json_out: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--json" => match args.next() {
+                Some(p) => json_out = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("lint: --json requires a path");
+                    return ExitCode::from(2);
+                }
+            },
+            "--help" | "-h" => {
+                println!("usage: lint [ROOT] [--json PATH]");
+                println!("rules: {}", lint::rule_ids().join(", "));
+                return ExitCode::SUCCESS;
+            }
+            flag if flag.starts_with('-') => {
+                eprintln!("lint: unknown flag `{flag}` (try --help)");
+                return ExitCode::from(2);
+            }
+            path => root = PathBuf::from(path),
+        }
+    }
+
+    let (files_scanned, diags) = match lint::lint_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("lint: cannot scan {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    for d in &diags {
+        println!("{d}");
+    }
+    if let Some(path) = json_out {
+        let report = lint::report_json(files_scanned, &diags).to_string();
+        if let Err(e) = std::fs::write(&path, report) {
+            eprintln!("lint: cannot write {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+    }
+    if diags.is_empty() {
+        println!("lint: {files_scanned} files clean ({} rules)", lint::rule_ids().len());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("lint: {} diagnostic(s) across {files_scanned} files", diags.len());
+        ExitCode::FAILURE
+    }
+}

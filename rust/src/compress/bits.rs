@@ -153,27 +153,39 @@ impl<'a> BitReader<'a> {
         let head = (8 - p % 8) % 8;
         if head > 0 {
             let take = head.min(rem);
-            let byte = self.bytes[p / 8] as u64;
+            let byte = self.byte_at(p);
             v = (byte >> (head - take)) & ((1u64 << take) - 1);
             p += take;
             rem -= take;
         }
         // body: whole bytes
         while rem >= 8 {
-            v = (v << 8) | self.bytes[p / 8] as u64;
+            v = (v << 8) | self.byte_at(p);
             p += 8;
             rem -= 8;
         }
         // tail: top bits of the next byte
         if rem > 0 {
-            v = (v << rem) | (self.bytes[p / 8] as u64 >> (8 - rem));
+            v = (v << rem) | (self.byte_at(p) >> (8 - rem));
             p += rem;
         }
         self.pos = p;
         Some(v)
     }
 
-    /// Panicking convenience for streams known to be well-formed (tests).
+    /// Byte holding bit position `bit_pos`, as the accumulator type. Total:
+    /// the bounds pre-check in `try_read_bits` makes the out-of-range arm
+    /// unreachable, but decode-path code never bare-indexes (lint rule
+    /// `panic-freedom`), so a short stream reads as zero rather than
+    /// panicking.
+    #[inline]
+    fn byte_at(&self, bit_pos: usize) -> u64 {
+        self.bytes.get(bit_pos / 8).copied().unwrap_or(0) as u64
+    }
+
+    /// Panicking convenience for streams known to be well-formed. Test-only:
+    /// wire-path callers must use [`Self::try_read_bits`].
+    #[cfg(test)]
     pub fn read_bits(&mut self, width: u32) -> u64 {
         self.try_read_bits(width).expect("bitstream exhausted")
     }
@@ -183,6 +195,9 @@ impl<'a> BitReader<'a> {
         self.try_read_bits(32).map(|b| f32::from_bits(b as u32))
     }
 
+    /// Panicking convenience for streams known to be well-formed. Test-only:
+    /// wire-path callers must use [`Self::try_read_f32`].
+    #[cfg(test)]
     pub fn read_f32(&mut self) -> f32 {
         self.try_read_f32().expect("bitstream exhausted")
     }
@@ -310,12 +325,18 @@ pub fn encode_inf_quantized(
     (bytes, decoded, accounted)
 }
 
-/// Allocating wrapper over [`decode_inf_quantized_into`] for streams known
-/// to be well-formed (tests/benches); panics on malformed input.
-pub fn decode_inf_quantized(bytes: &[u8], n: usize, bits: u32, block: usize) -> Vec<f64> {
+/// Allocating wrapper over [`decode_inf_quantized_into`] (tests/benches).
+/// Total like the `_into` form: malformed input is a typed [`QuantError`],
+/// never a panic.
+pub fn decode_inf_quantized(
+    bytes: &[u8],
+    n: usize,
+    bits: u32,
+    block: usize,
+) -> Result<Vec<f64>, QuantError> {
     let mut out = vec![0.0; n];
-    decode_inf_quantized_into(bytes, bits, block, &mut out).expect("malformed quantizer stream");
-    out
+    decode_inf_quantized_into(bytes, bits, block, &mut out)?;
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -409,7 +430,8 @@ mod tests {
                 let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
                 let mut rng2 = Rng::new(99);
                 let (bytes, decoded, nbits) = encode_inf_quantized(&x, bits, 256, &mut rng2);
-                let recovered = decode_inf_quantized(&bytes, n, bits, 256);
+                let recovered =
+                    decode_inf_quantized(&bytes, n, bits, 256).expect("well-formed stream");
                 assert_eq!(decoded.len(), n);
                 assert_eq!(recovered.len(), n);
                 for (i, (&d, &r)) in decoded.iter().zip(&recovered).enumerate() {
@@ -563,7 +585,7 @@ mod tests {
             assert_eq!(u.to_bits(), v.to_bits(), "idx {i}: {u:?} vs {v:?}");
         }
         // and the receiving side decodes the same vector
-        let recv = decode_inf_quantized(&bytes, 256, 4, 256);
+        let recv = decode_inf_quantized(&bytes, 256, 4, 256).expect("well-formed stream");
         assert_eq!(recv, b);
     }
 }

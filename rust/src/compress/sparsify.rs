@@ -79,7 +79,11 @@ impl Compressor for TopK {
         let p = x.len();
         let k = self.k.min(p);
         let mut order: Vec<usize> = (0..p).collect();
-        order.sort_by(|&a, &b| x[b].abs().partial_cmp(&x[a].abs()).unwrap());
+        // total_cmp: behavior-identical to partial_cmp on non-NaN input
+        // (keys are |x_i|, so ±0.0 tie-breaking cannot differ) and total on
+        // NaN — a diverged iterate ranks NaN above every finite magnitude
+        // and propagates it to the consensus layer instead of panicking.
+        order.sort_by(|&a, &b| x[b].abs().total_cmp(&x[a].abs()));
         let mut decoded = vec![0.0; p];
         for &i in &order[..k] {
             decoded[i] = x[i];
@@ -108,6 +112,21 @@ impl Compressor for TopK {
 mod tests {
     use super::*;
     use crate::compress::empirical_bias;
+
+    #[test]
+    fn topk_nan_input_does_not_panic() {
+        // regression: the magnitude sort used partial_cmp().unwrap(), which
+        // panicked the moment a diverged iterate carried a NaN. total_cmp
+        // ranks NaN above every finite |x_i|, so it is *kept* and surfaces
+        // downstream where divergence checks can see it.
+        let q = TopK::new(2);
+        let x = [1.0, f64::NAN, -3.0, 2.0];
+        let c = q.compress(&x, &mut Rng::new(27));
+        assert!(c.decoded[1].is_nan(), "NaN entry must survive top-k selection");
+        assert_eq!(c.decoded[2], -3.0, "largest finite magnitude kept alongside NaN");
+        assert_eq!(c.decoded[0], 0.0);
+        assert_eq!(c.decoded[3], 0.0);
+    }
 
     #[test]
     fn randk_unbiased() {

@@ -244,6 +244,7 @@ pub fn run(
         "stepsize schedules are engine-only (node halves run fixed hyperparameters)"
     );
     let gated = spec.stop.leader_gated();
+    #[allow(clippy::disallowed_methods)] // wall-clock run timing (see clippy.toml)
     let start = Instant::now();
 
     // per-node inboxes; every node gets a Sender clone for each neighbor.

@@ -262,11 +262,18 @@ fn absorb(
         }
         return Err(WireError::RoundSkew { from, frame_round: round, expect: k });
     }
-    if filled[slot] {
+    // `slot` came from binary_search over these same slices, so the lookups
+    // cannot miss; decode-path code still never bare-indexes (lint rule
+    // `panic-freedom`), so a miss degrades to a typed error, not a panic.
+    let (Some(was_filled), Some((_, slot_buf))) = (filled.get_mut(slot), peers.get_mut(slot))
+    else {
+        return Err(WireError::NonNeighbor { from });
+    };
+    if *was_filled {
         return Err(WireError::DuplicateFrame { from, round: k });
     }
-    codec.decode_into(f.payload, &mut peers[slot].1)?;
-    filled[slot] = true;
+    codec.decode_into(f.payload, slot_buf)?;
+    *was_filled = true;
     Ok(Gather::Consumed)
 }
 

@@ -297,11 +297,16 @@ pub fn frame_begin(out: &mut Vec<u8>, tag: u8, round: u32, from: u16) {
     out.extend_from_slice(&0u32.to_le_bytes());
 }
 
-/// Patch the payload_len field once the payload has been appended.
+/// Patch the payload_len field once the payload has been appended. Total:
+/// calling it on a buffer shorter than a header (a misuse `frame_begin`
+/// makes impossible) is a debug assertion, and a no-op in release rather
+/// than a panic.
 pub fn frame_end(out: &mut Vec<u8>) {
     debug_assert!(out.len() >= Frame::HEADER_LEN, "frame_end before frame_begin");
-    let len = (out.len() - Frame::HEADER_LEN) as u32;
-    out[7..11].copy_from_slice(&len.to_le_bytes());
+    let len = out.len().saturating_sub(Frame::HEADER_LEN) as u32;
+    if let Some(field) = out.get_mut(7..11) {
+        field.copy_from_slice(&len.to_le_bytes());
+    }
 }
 
 /// A parsed frame borrowing the receive buffer — the pull-style view the
@@ -319,24 +324,27 @@ impl<'a> FrameRef<'a> {
     /// one frame: short buffers, payloads shorter than the header's
     /// payload_len, and trailing garbage are all typed errors.
     pub fn parse(buf: &'a [u8]) -> Result<FrameRef<'a>, WireError> {
-        if buf.len() < Frame::HEADER_LEN {
+        // index-free by construction (lint rule `panic-freedom`): the header
+        // is destructured through a refutable slice pattern, the payload
+        // through checked `get` — no arithmetic here can panic.
+        let Some(header) = buf.get(..Frame::HEADER_LEN) else {
             return Err(WireError::TruncatedHeader { len: buf.len() });
-        }
-        let tag = buf[0];
-        let mut b4 = [0u8; 4];
-        b4.copy_from_slice(&buf[1..5]);
-        let round = u32::from_le_bytes(b4);
-        let from = u16::from_le_bytes([buf[5], buf[6]]);
-        b4.copy_from_slice(&buf[7..11]);
-        let len = u32::from_le_bytes(b4) as usize;
+        };
+        let &[tag, r0, r1, r2, r3, f0, f1, l0, l1, l2, l3] = header else {
+            // `get(..HEADER_LEN)` yielded exactly HEADER_LEN (= 11) bytes
+            return Err(WireError::TruncatedHeader { len: buf.len() });
+        };
+        let round = u32::from_le_bytes([r0, r1, r2, r3]);
+        let from = u16::from_le_bytes([f0, f1]);
+        let len = u32::from_le_bytes([l0, l1, l2, l3]) as usize;
         let framed = Frame::HEADER_LEN + len;
-        if buf.len() < framed {
-            return Err(WireError::TruncatedPayload { need: framed, got: buf.len() });
-        }
         if buf.len() > framed {
             return Err(WireError::TrailingBytes { expected: framed, got: buf.len() });
         }
-        Ok(FrameRef { tag, round, from, payload: &buf[Frame::HEADER_LEN..] })
+        let Some(payload) = buf.get(Frame::HEADER_LEN..framed) else {
+            return Err(WireError::TruncatedPayload { need: framed, got: buf.len() });
+        };
+        Ok(FrameRef { tag, round, from, payload })
     }
 }
 

@@ -327,7 +327,7 @@ pub fn validate_mixing(w: &Mat, g: &Graph) -> Result<Spectrum, String> {
                 return Err(format!("W has weight on non-edge ({i},{j})"));
             }
         }
-        let row_sum: f64 = w.row(i).iter().sum();
+        let row_sum = crate::linalg::vsum(w.row(i));
         if (row_sum - 1.0).abs() > 1e-10 {
             return Err(format!("row {i} sums to {row_sum}, not 1"));
         }

@@ -26,6 +26,7 @@ pub mod engine;
 pub mod exp;
 pub mod graph;
 pub mod linalg;
+pub mod lint;
 pub mod oracle;
 pub mod problem;
 pub mod prox;

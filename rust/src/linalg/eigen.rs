@@ -67,7 +67,7 @@ pub fn sym_eigen(a: &Mat) -> (Vec<f64>, Mat) {
         }
     }
     let mut eig: Vec<(f64, usize)> = (0..n).map(|i| (m[(i, i)], i)).collect();
-    eig.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    eig.sort_by(|a, b| b.0.total_cmp(&a.0));
     let vals: Vec<f64> = eig.iter().map(|e| e.0).collect();
     let mut vecs = Mat::zeros(n, n);
     for (new_col, &(_, old_col)) in eig.iter().enumerate() {
@@ -173,12 +173,12 @@ fn power_dominant(
     tol: f64,
     seed: u64,
 ) -> (f64, usize, bool) {
-    use super::matrix::{vdot, vnorm};
+    use super::matrix::{vdot, vnorm, vsum};
     let mut rng = crate::util::rng::Rng::new(seed);
     let mut v = vec![0.0; n];
     rng.fill_normal(&mut v);
     let project = |v: &mut [f64]| {
-        let mean = v.iter().sum::<f64>() / v.len() as f64;
+        let mean = vsum(v) / v.len() as f64;
         v.iter_mut().for_each(|x| *x -= mean);
     };
     if deflate_ones {
@@ -295,7 +295,7 @@ impl PinvNorm {
                 continue;
             }
             let row = y.row(i);
-            total += wgt * row.iter().map(|x| x * x).sum::<f64>();
+            total += wgt * super::matrix::vnorm_sq(row);
         }
         total
     }

@@ -165,30 +165,26 @@ impl Mat {
         out
     }
 
-    /// Frobenius norm squared ‖A‖²_F.
+    /// Frobenius norm squared ‖A‖²_F, via the pinned [`vnorm_sq`] kernel.
     pub fn norm_sq(&self) -> f64 {
-        self.data.iter().map(|x| x * x).sum()
+        vnorm_sq(&self.data)
     }
 
     pub fn norm(&self) -> f64 {
         self.norm_sq().sqrt()
     }
 
-    /// ⟨A, B⟩ Frobenius inner product.
+    /// ⟨A, B⟩ Frobenius inner product, via the pinned [`vdot`] kernel.
     pub fn dot(&self, other: &Mat) -> f64 {
         assert_eq!(self.data.len(), other.data.len());
-        self.data.iter().zip(&other.data).map(|(a, b)| a * b).sum()
+        vdot(&self.data, &other.data)
     }
 
-    /// ‖A − B‖²_F without allocating the difference.
+    /// ‖A − B‖²_F without allocating the difference, via [`vdist_sq`].
     pub fn dist_sq(&self, other: &Mat) -> f64 {
         assert_eq!(self.rows, other.rows);
         assert_eq!(self.cols, other.cols);
-        self.data
-            .iter()
-            .zip(&other.data)
-            .map(|(a, b)| (a - b) * (a - b))
-            .sum()
+        vdist_sq(&self.data, &other.data)
     }
 
     /// self += alpha * other  (axpy), via the shared chunked [`vaxpy`].
@@ -243,7 +239,7 @@ impl Mat {
     }
 
     pub fn max_abs(&self) -> f64 {
-        self.data.iter().fold(0.0f64, |m, &x| m.max(x.abs()))
+        vinf_norm(&self.data)
     }
 
     pub fn is_finite(&self) -> bool {
@@ -309,13 +305,26 @@ impl Mul<f64> for &Mat {
 
 // --- vector helpers (free functions over &[f64]) ---------------------------
 
+/// Σ aᵢ·bᵢ in ascending index order — the pinned dot-product reduction.
 pub fn vdot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
+    // lint:allow(parity-order): kernel definition — the one pinned-order dot
     a.iter().zip(b).map(|(x, y)| x * y).sum()
 }
 
+/// Σ aᵢ² in ascending index order — the pinned squared-norm reduction.
 pub fn vnorm_sq(a: &[f64]) -> f64 {
+    // lint:allow(parity-order): kernel definition — the one pinned-order ‖·‖²
     a.iter().map(|x| x * x).sum()
+}
+
+/// Σ aᵢ in ascending index order — the pinned plain-sum reduction. Row-sum
+/// and mean computations (mixing-matrix checks, spectral utilities) route
+/// through here so every float reduction in the crate has one summation
+/// order.
+pub fn vsum(a: &[f64]) -> f64 {
+    // lint:allow(parity-order): kernel definition — the one pinned-order Σ
+    a.iter().sum()
 }
 
 pub fn vnorm(a: &[f64]) -> f64 {
@@ -353,11 +362,16 @@ pub fn vsub(a: &[f64], b: &[f64]) -> Vec<f64> {
     a.iter().zip(b).map(|(x, y)| x - y).collect()
 }
 
+/// Σ (aᵢ−bᵢ)² in ascending index order — the pinned distance reduction.
 pub fn vdist_sq(a: &[f64], b: &[f64]) -> f64 {
+    // lint:allow(parity-order): kernel definition — the one pinned-order dist²
     a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
 }
 
+/// max |aᵢ| scanned in ascending index order (order-insensitive, but pinned
+/// anyway so ∞-norms share one code path).
 pub fn vinf_norm(a: &[f64]) -> f64 {
+    // lint:allow(parity-order): kernel definition — the one pinned-order max|·|
     a.iter().fold(0.0f64, |m, &x| m.max(x.abs()))
 }
 

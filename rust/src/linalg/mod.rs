@@ -8,5 +8,5 @@ pub mod matrix;
 pub mod sparse;
 
 pub use eigen::{power_gap_estimate, sym_eigen, GapEstimate, PinvNorm, Spectrum};
-pub use matrix::{vaxpy, vdist_sq, vdot, vinf_norm, vnorm, vnorm_sq, vsub, Mat};
+pub use matrix::{vaxpy, vdist_sq, vdot, vinf_norm, vnorm, vnorm_sq, vsub, vsum, Mat};
 pub use sparse::SparseMat;

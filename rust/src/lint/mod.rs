@@ -1,0 +1,878 @@
+//! `proxlead-lint`: a source-level checker for the repo's standing contracts.
+//!
+//! The crate's correctness story is a handful of *source properties* —
+//! panic-free wire decoding, zero-alloc hot loops, deterministic parity
+//! modules, one pinned float-summation order, no resurrecting deprecated
+//! entry points — that tests can only sample, never prove. This module
+//! enforces them at the text level with a small lexical scanner (strings,
+//! comments, and char literals stripped; `#[cfg(test)]` regions skipped;
+//! function bodies tracked), driven by the declarative [`RULES`] table.
+//! Zero dependencies by design: no `syn`, no `proc-macro2` — the offline
+//! build environment has no registry, and a lexical pass is all these
+//! rules need.
+//!
+//! Diagnostics print as `file:line: rule-id: message` (and as a JSON
+//! report for CI via [`report_json`]). A finding can be suppressed only by
+//! an inline justification comment on the same or the preceding line:
+//!
+//! ```text
+//! lint:allow(rule-id): why this site is exempt
+//! ```
+//!
+//! written as a `//` line comment. An allow with an unknown rule-id or an
+//! empty justification is itself a diagnostic (`bad-allow`) and suppresses
+//! nothing.
+//!
+//! Run with `cargo run --release --bin lint` (see `src/bin/lint.rs`); the
+//! rule-by-rule contract map lives in DESIGN.md §6.
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Marker introducing a suppression comment. Built from two halves so the
+/// scanner never reads its own definition as an (unjustified) suppression.
+const ALLOW_MARKER: &str = concat!("// lint:", "allow(");
+
+/// Rule-id of the meta-diagnostic for malformed suppression comments.
+pub const BAD_ALLOW: &str = "bad-allow";
+
+/// One entry of the declarative rule table.
+pub struct Rule {
+    /// Stable diagnostic id (`panic-freedom`, `zero-alloc`, …).
+    pub id: &'static str,
+    /// One-line statement of the contract the rule enforces.
+    pub summary: &'static str,
+    /// Forbidden token spellings, matched on stripped source with ident
+    /// boundaries respected on both ends.
+    pub patterns: &'static [&'static str],
+    /// Additionally flag bare `[...]` indexing / slicing expressions.
+    pub bare_index: bool,
+    /// Path scope, relative to `src/` with `/` separators. Entries ending
+    /// in `/` are directory prefixes, others exact files. Empty = whole
+    /// tree.
+    pub files: &'static [&'static str],
+    /// Path anti-scope (same syntax), applied after `files`.
+    pub exclude: &'static [&'static str],
+    /// When `Some`, only these function bodies (by exact name) are in
+    /// scope; `None` scopes the whole file.
+    pub fns: Option<&'static [&'static str]>,
+}
+
+/// The repo-contract rule table. Order is presentation order in reports.
+pub const RULES: &[Rule] = &[
+    Rule {
+        id: "panic-freedom",
+        summary: "wire-path code must be total: decode returns typed errors, never panics",
+        patterns: &[
+            ".unwrap()",
+            ".expect(",
+            "panic!(",
+            "unreachable!(",
+            "todo!(",
+            "unimplemented!(",
+            "assert!(",
+            "assert_eq!(",
+            "assert_ne!(",
+        ],
+        bare_index: true,
+        files: &["coordinator/wire.rs", "coordinator/node.rs", "compress/bits.rs"],
+        exclude: &[],
+        fns: Some(&[
+            // node.rs: the decode half (everything a hostile frame reaches)
+            "absorb",
+            // bits.rs: the reader side of the quantizer codec
+            "try_read_bits",
+            "try_read_f32",
+            "byte_at",
+            "decode_inf_quantized",
+            "decode_inf_quantized_into",
+            // wire.rs: whole-file intent, spelled per function so the rule
+            // composes with the fn tracker (encode side included — frames
+            // are built in the same hot loop that decodes)
+            "encode_into",
+            "decode_into",
+            "frame_begin",
+            "frame_end",
+            "parse",
+            "payload_len",
+            "known_tag",
+        ]),
+    },
+    Rule {
+        id: "zero-alloc",
+        summary: "hot-path function allocates: warmed-up rounds must be allocation-free",
+        patterns: &[
+            "Vec::new(",
+            "Vec::with_capacity(",
+            "vec!",
+            ".to_vec(",
+            ".clone()",
+            "Box::new(",
+            "format!(",
+            ".collect(",
+            ".to_string(",
+            "String::new(",
+        ],
+        bare_index: false,
+        files: &[
+            "linalg/matrix.rs",
+            "linalg/sparse.rs",
+            "compress/bits.rs",
+            "coordinator/wire.rs",
+            "coordinator/node.rs",
+            "sim/mod.rs",
+        ],
+        exclude: &[],
+        fns: Some(&[
+            // linalg: the shared accumulation kernels
+            "vaxpy",
+            "vsum",
+            "vdot",
+            "vnorm_sq",
+            "vdist_sq",
+            "vinf_norm",
+            "matmul_into",
+            "axpy",
+            "apply_into",
+            // codec: the _into pairs the coordinator round loop drives
+            "write_bits",
+            "write_f32",
+            "try_read_bits",
+            "try_read_f32",
+            "encode_inf_quantized_into",
+            "decode_inf_quantized_into",
+            "encode_into",
+            "decode_into",
+            "frame_begin",
+            "frame_end",
+            "parse",
+            // node hot loop: mixing + gather
+            "mix_into",
+            "mix_rows_into",
+            "mix_with",
+            "acc",
+            "absorb",
+            // sim backend: the per-round phase bodies
+            "phase_a",
+            "phase_b",
+            "parse_decode",
+            "drain",
+        ]),
+    },
+    Rule {
+        id: "determinism",
+        summary: "parity-critical module reads iteration order or wall-clock state",
+        patterns: &["HashMap", "HashSet", "Instant::now(", "SystemTime"],
+        bare_index: false,
+        files: &[
+            "algorithm/",
+            "compress/",
+            "engine/",
+            "exp/",
+            "graph/",
+            "linalg/",
+            "oracle/",
+            "problem/",
+            "prox/",
+            "coordinator/algorithms.rs",
+            "coordinator/node.rs",
+            "coordinator/wire.rs",
+            "util/rng.rs",
+        ],
+        // timing allowlist: runner/sweep/bench layers and the leader loops
+        // (coordinator/mod.rs, sim/mod.rs) are *not* listed above; they own
+        // wall-clock reads and carry clippy::disallowed_methods allows.
+        exclude: &[],
+        fns: None,
+    },
+    Rule {
+        id: "parity-order",
+        summary: "float reduction outside the pinned kernels: route through vsum/vdot/vnorm_sq \
+                  (linalg::matrix) so engine, coordinator, and sim sum in one order",
+        patterns: &[".sum(", ".fold(", ".product(", ".rfold("],
+        bare_index: false,
+        files: &[
+            "linalg/",
+            "graph/mixing.rs",
+            "coordinator/node.rs",
+            "coordinator/algorithms.rs",
+        ],
+        exclude: &[],
+        fns: None,
+    },
+    Rule {
+        id: "deprecated-api",
+        summary: "deprecated entry point: use AlgorithmBuilder / Experiment::run instead of the \
+                  positional constructors and engine shims",
+        patterns: &[
+            "ProxLead::new(",
+            "Dgd::new(",
+            "Choco::new(",
+            "Nids::new(",
+            "PgExtra::new(",
+            "P2d2::new(",
+            "DualGd::new(",
+            "Pdgm::new(",
+            "Pdgm::plain(",
+            "Pdgm::lessbit_b(",
+            "engine::RunConfig",
+            "engine::run(",
+            "run_prox_lead(",
+        ],
+        bare_index: false,
+        files: &[],
+        exclude: &[
+            // the shims live (and are pin-tested) here; everything else
+            // must go through the builder/experiment layers
+            "algorithm/",
+            "engine/",
+            "coordinator/mod.rs",
+        ],
+        fns: None,
+    },
+    Rule {
+        id: "total-cmp",
+        summary: "float comparison via partial_cmp can panic/misorder on NaN: use f64::total_cmp",
+        patterns: &[".partial_cmp("],
+        bare_index: false,
+        files: &[],
+        exclude: &[],
+        fns: None,
+    },
+];
+
+/// All known rule ids, including the synthetic [`BAD_ALLOW`].
+pub fn rule_ids() -> Vec<&'static str> {
+    let mut ids: Vec<&'static str> = RULES.iter().map(|r| r.id).collect();
+    ids.push(BAD_ALLOW);
+    ids
+}
+
+impl Rule {
+    /// Path scope test for a `src/`-relative, `/`-separated path.
+    pub fn applies_to(&self, rel: &str) -> bool {
+        let hit = |list: &[&str]| {
+            list.iter().any(|e| {
+                if let Some(dir) = e.strip_suffix('/') {
+                    rel.starts_with(dir) && rel[dir.len()..].starts_with('/')
+                } else {
+                    rel == *e
+                }
+            })
+        };
+        (self.files.is_empty() || hit(self.files)) && !hit(self.exclude)
+    }
+}
+
+/// One finding, printable as `file:line: rule-id: message`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: {}: {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// A parsed suppression comment.
+struct Allow {
+    line: usize,
+    id: String,
+}
+
+/// Lexed view of one source file: comments/strings/chars blanked out,
+/// `#[cfg(test)]` and function-body spans resolved, suppressions parsed.
+struct Lexed {
+    /// Source with every comment, string, and char literal replaced by
+    /// spaces — byte-for-byte the same length as the input.
+    stripped: Vec<u8>,
+    /// Byte offset of the start of each line (line numbers are 1-based).
+    line_starts: Vec<usize>,
+    /// Byte spans covered by `#[cfg(test)]` items.
+    test_spans: Vec<(usize, usize)>,
+    /// Function-body spans `(start, end, name)`, innermost = latest start.
+    fn_spans: Vec<(usize, usize, String)>,
+    /// Valid suppressions (each covers its own line and the next).
+    allows: Vec<Allow>,
+    /// Malformed suppressions, pre-packaged as diagnostics (file unset).
+    bad_allows: Vec<(usize, String)>,
+}
+
+impl Lexed {
+    fn new(src: &str) -> Lexed {
+        let bytes = src.as_bytes();
+        let stripped = strip(bytes);
+        let mut line_starts = vec![0usize];
+        for (i, &b) in bytes.iter().enumerate() {
+            if b == b'\n' {
+                line_starts.push(i + 1);
+            }
+        }
+        let (test_spans, fn_spans) = structure(&stripped);
+        let mut lx = Lexed {
+            stripped,
+            line_starts,
+            test_spans,
+            fn_spans,
+            allows: Vec::new(),
+            bad_allows: Vec::new(),
+        };
+        lx.parse_allows(src);
+        lx
+    }
+
+    fn line_of(&self, pos: usize) -> usize {
+        match self.line_starts.binary_search(&pos) {
+            Ok(i) => i + 1,
+            Err(i) => i,
+        }
+    }
+
+    fn in_test(&self, pos: usize) -> bool {
+        self.test_spans.iter().any(|&(s, e)| s <= pos && pos < e)
+    }
+
+    fn fn_at(&self, pos: usize) -> Option<&str> {
+        self.fn_spans
+            .iter()
+            .filter(|&&(s, e, _)| s <= pos && pos < e)
+            .max_by_key(|&&(s, _, _)| s)
+            .map(|(_, _, name)| name.as_str())
+    }
+
+    fn allowed(&self, rule: &str, line: usize) -> bool {
+        self.allows.iter().any(|a| a.id == rule && (a.line == line || a.line + 1 == line))
+    }
+
+    /// Scan ORIGINAL lines for suppression comments (they live in comments,
+    /// which the stripped view blanks out).
+    fn parse_allows(&mut self, src: &str) {
+        for (i, text) in src.lines().enumerate() {
+            let line = i + 1;
+            let Some(at) = text.find(ALLOW_MARKER) else { continue };
+            let rest = &text[at + ALLOW_MARKER.len()..];
+            let parsed = rest.split_once(')').and_then(|(id, tail)| {
+                let just = tail.strip_prefix(':')?.trim();
+                Some((id.trim().to_string(), !just.is_empty()))
+            });
+            match parsed {
+                Some((id, true)) if rule_ids().contains(&id.as_str()) => {
+                    self.allows.push(Allow { line, id });
+                }
+                Some((id, justified)) => {
+                    let why = if !rule_ids().contains(&id.as_str()) {
+                        format!("unknown rule-id `{id}` in suppression")
+                    } else if !justified {
+                        format!("suppression of `{id}` lacks a justification text")
+                    } else {
+                        "malformed suppression".to_string()
+                    };
+                    self.bad_allows.push((line, why));
+                }
+                None => {
+                    self.bad_allows.push((
+                        line,
+                        "malformed suppression: expected `(rule-id): justification`".to_string(),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// Blank out comments (line + nested block), string literals (plain, byte,
+/// raw), and char literals. Lifetimes (`'a`) are left intact. Output has
+/// the same length as the input; newlines survive so line numbers hold.
+fn strip(bytes: &[u8]) -> Vec<u8> {
+    let mut out = bytes.to_vec();
+    let n = bytes.len();
+    let mut i = 0;
+    let blank = |out: &mut [u8], from: usize, to: usize| {
+        for b in &mut out[from..to.min(n)] {
+            if *b != b'\n' {
+                *b = b' ';
+            }
+        }
+    };
+    while i < n {
+        let b = bytes[i];
+        // line comment
+        if b == b'/' && bytes.get(i + 1) == Some(&b'/') {
+            let end = bytes[i..].iter().position(|&c| c == b'\n').map_or(n, |p| i + p);
+            blank(&mut out, i, end);
+            i = end;
+            continue;
+        }
+        // block comment (nested)
+        if b == b'/' && bytes.get(i + 1) == Some(&b'*') {
+            let mut depth = 1;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if bytes[j] == b'/' && bytes.get(j + 1) == Some(&b'*') {
+                    depth += 1;
+                    j += 2;
+                } else if bytes[j] == b'*' && bytes.get(j + 1) == Some(&b'/') {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut out, i, j);
+            i = j;
+            continue;
+        }
+        // raw string (optionally byte): r"..." / r#"..."# / br#"..."#
+        if (b == b'r' || b == b'b') && (i == 0 || !is_ident(bytes[i - 1])) {
+            let mut j = i;
+            if bytes[j] == b'b' && bytes.get(j + 1) == Some(&b'r') {
+                j += 1;
+            }
+            if bytes[j] == b'r' {
+                let mut hashes = 0;
+                let mut k = j + 1;
+                while bytes.get(k) == Some(&b'#') {
+                    hashes += 1;
+                    k += 1;
+                }
+                if bytes.get(k) == Some(&b'"') {
+                    // scan for closing quote + matching hashes
+                    let mut e = k + 1;
+                    'raw: while e < n {
+                        if bytes[e] == b'"' {
+                            let mut h = 0;
+                            while h < hashes && bytes.get(e + 1 + h) == Some(&b'#') {
+                                h += 1;
+                            }
+                            if h == hashes {
+                                e += 1 + hashes;
+                                break 'raw;
+                            }
+                        }
+                        e += 1;
+                    }
+                    blank(&mut out, i, e);
+                    i = e;
+                    continue;
+                }
+            }
+        }
+        // plain / byte string
+        if b == b'"' {
+            let mut j = i + 1;
+            while j < n {
+                match bytes[j] {
+                    b'\\' => j += 2,
+                    b'"' => {
+                        j += 1;
+                        break;
+                    }
+                    _ => j += 1,
+                }
+            }
+            blank(&mut out, i, j);
+            i = j;
+            continue;
+        }
+        // char literal vs lifetime: a closing quote within a short window
+        // (escape-aware) means char literal; otherwise leave it (lifetime)
+        if b == b'\'' {
+            let mut j = i + 1;
+            let window = (i + 8).min(n);
+            let mut closed = None;
+            while j < window {
+                match bytes[j] {
+                    b'\\' => j += 2,
+                    b'\'' if j > i + 1 => {
+                        closed = Some(j + 1);
+                        break;
+                    }
+                    _ => j += 1,
+                }
+            }
+            if let Some(end) = closed {
+                blank(&mut out, i, end);
+                i = end;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// One structural walk over stripped bytes: `#[cfg(test)]` item spans and
+/// function-body spans (by header name).
+fn structure(stripped: &[u8]) -> (Vec<(usize, usize)>, Vec<(usize, usize, String)>) {
+    const CFG_TEST: &[u8] = b"#[cfg(test)]";
+    let n = stripped.len();
+    let mut test_spans = Vec::new();
+    let mut fn_spans = Vec::new();
+    let mut fn_stack: Vec<(usize, usize, String)> = Vec::new(); // (start, open_depth, name)
+    let mut pending_fn: Option<String> = None;
+    let mut pending_test: Option<(usize, usize)> = None; // (attr_pos, attr_depth)
+    let mut open_tests: Vec<(usize, usize)> = Vec::new(); // (start, open_depth)
+    let mut depth = 0usize;
+    let mut i = 0;
+    while i < n {
+        let b = stripped[i];
+        if b == b'#' && stripped[i..].starts_with(CFG_TEST) {
+            pending_test = Some((i, depth));
+            i += CFG_TEST.len();
+            continue;
+        }
+        if is_ident(b) {
+            let start = i;
+            while i < n && is_ident(stripped[i]) {
+                i += 1;
+            }
+            let word = &stripped[start..i];
+            if word == b"fn" {
+                // capture the following identifier as the function name
+                let mut j = i;
+                while j < n && (stripped[j] as char).is_whitespace() {
+                    j += 1;
+                }
+                let name_start = j;
+                while j < n && is_ident(stripped[j]) {
+                    j += 1;
+                }
+                if j > name_start {
+                    pending_fn =
+                        Some(String::from_utf8_lossy(&stripped[name_start..j]).into_owned());
+                    i = j;
+                }
+            }
+            continue;
+        }
+        match b {
+            b'{' => {
+                if let Some(name) = pending_fn.take() {
+                    fn_stack.push((i, depth, name));
+                }
+                if let Some((attr_pos, _)) = pending_test.take() {
+                    open_tests.push((attr_pos, depth));
+                }
+                depth += 1;
+            }
+            b'}' => {
+                depth = depth.saturating_sub(1);
+                if fn_stack.last().is_some_and(|&(_, d, _)| d == depth) {
+                    let (start, _, name) = fn_stack.pop().unwrap_or_default();
+                    fn_spans.push((start, i + 1, name));
+                }
+                if open_tests.last().is_some_and(|&(_, d)| d == depth) {
+                    let (start, _) = open_tests.pop().unwrap_or_default();
+                    test_spans.push((start, i + 1));
+                }
+            }
+            b';' => {
+                // `fn f(...);` (trait method) or `#[cfg(test)] use x;`
+                pending_fn = None;
+                if let Some((attr_pos, d)) = pending_test {
+                    if d == depth {
+                        test_spans.push((attr_pos, i + 1));
+                        pending_test = None;
+                    }
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    // unterminated spans (truncated input): close at EOF
+    for (start, _, name) in fn_stack {
+        fn_spans.push((start, n, name));
+    }
+    for (start, _) in open_tests {
+        test_spans.push((start, n));
+    }
+    if let Some((start, _)) = pending_test {
+        test_spans.push((start, n));
+    }
+    (test_spans, fn_spans)
+}
+
+/// Occurrences of `pat` in `hay` with ident boundaries respected on both
+/// ends (so `assert!(` never matches inside `debug_assert!(`).
+fn find_guarded(hay: &[u8], pat: &str, out: &mut Vec<usize>) {
+    let p = pat.as_bytes();
+    let guard_front = is_ident(p[0]);
+    let guard_back = is_ident(p[p.len() - 1]);
+    let mut from = 0;
+    while from + p.len() <= hay.len() {
+        let Some(off) = hay[from..].windows(p.len()).position(|w| w == p) else { break };
+        let at = from + off;
+        let front_ok = !guard_front || at == 0 || !is_ident(hay[at - 1]);
+        let back_ok = !guard_back
+            || at + p.len() >= hay.len()
+            || !is_ident(hay[at + p.len()]);
+        if front_ok && back_ok {
+            out.push(at);
+        }
+        from = at + 1;
+    }
+}
+
+/// Positions of bare `[...]` indexing: a `[` directly preceded by an
+/// identifier character, `)`, or `]`. Attribute (`#[`), slice-type (`&[`),
+/// macro (`vec![`), and pattern positions all fail the predecessor test.
+fn find_bare_index(hay: &[u8], out: &mut Vec<usize>) {
+    for i in 1..hay.len() {
+        if hay[i] == b'[' && (is_ident(hay[i - 1]) || hay[i - 1] == b')' || hay[i - 1] == b']') {
+            out.push(i);
+        }
+    }
+}
+
+/// Lint one file's source. `rel` is the `src/`-relative path with `/`
+/// separators (used for scoping and in diagnostics).
+pub fn lint_source(rel: &str, src: &str) -> Vec<Diagnostic> {
+    let lx = Lexed::new(src);
+    let mut diags: Vec<Diagnostic> = Vec::new();
+    for (line, why) in &lx.bad_allows {
+        let pos = lx.line_starts.get(line - 1).copied().unwrap_or(0);
+        if !lx.in_test(pos) {
+            diags.push(Diagnostic {
+                file: rel.to_string(),
+                line: *line,
+                rule: BAD_ALLOW,
+                message: why.clone(),
+            });
+        }
+    }
+    let mut hits: Vec<usize> = Vec::new();
+    for rule in RULES {
+        if !rule.applies_to(rel) {
+            continue;
+        }
+        let mut found: Vec<(usize, String)> = Vec::new();
+        for pat in rule.patterns {
+            hits.clear();
+            find_guarded(&lx.stripped, pat, &mut hits);
+            for &pos in &hits {
+                found.push((pos, format!("{} (forbidden: `{}`)", rule.summary, pat)));
+            }
+        }
+        if rule.bare_index {
+            hits.clear();
+            find_bare_index(&lx.stripped, &mut hits);
+            for &pos in &hits {
+                found.push((pos, format!("{} (forbidden: bare `[...]` indexing)", rule.summary)));
+            }
+        }
+        for (pos, message) in found {
+            if lx.in_test(pos) {
+                continue;
+            }
+            if let Some(fns) = rule.fns {
+                match lx.fn_at(pos) {
+                    Some(name) if fns.contains(&name) => {}
+                    _ => continue,
+                }
+            }
+            let line = lx.line_of(pos);
+            if lx.allowed(rule.id, line) {
+                continue;
+            }
+            if diags.iter().any(|d| d.rule == rule.id && d.line == line) {
+                continue; // one report per rule per line
+            }
+            diags.push(Diagnostic { file: rel.to_string(), line, rule: rule.id, message });
+        }
+    }
+    diags.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    diags
+}
+
+/// Recursively collect `.rs` files under `root`, as sorted relative paths.
+fn collect_rs(root: &Path) -> io::Result<Vec<PathBuf>> {
+    fn walk(dir: &Path, acc: &mut Vec<PathBuf>) -> io::Result<()> {
+        let mut entries: Vec<PathBuf> = fs::read_dir(dir)?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .collect();
+        entries.sort();
+        for p in entries {
+            if p.is_dir() {
+                walk(&p, acc)?;
+            } else if p.extension().is_some_and(|x| x == "rs") {
+                acc.push(p);
+            }
+        }
+        Ok(())
+    }
+    let mut acc = Vec::new();
+    walk(root, &mut acc)?;
+    Ok(acc)
+}
+
+/// Lint every `.rs` file under `root` (normally `rust/src`). Returns the
+/// number of files scanned and all diagnostics, sorted by path.
+pub fn lint_tree(root: &Path) -> io::Result<(usize, Vec<Diagnostic>)> {
+    let files = collect_rs(root)?;
+    let mut diags = Vec::new();
+    for path in &files {
+        let rel: String = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let src = fs::read_to_string(path)?;
+        diags.extend(lint_source(&rel, &src));
+    }
+    Ok((files.len(), diags))
+}
+
+/// CI-facing JSON report.
+pub fn report_json(files_scanned: usize, diags: &[Diagnostic]) -> Json {
+    Json::obj(vec![
+        ("schema", "proxlead-lint-v1".into()),
+        ("files_scanned", files_scanned.into()),
+        ("clean", diags.is_empty().into()),
+        (
+            "diagnostics",
+            Json::Arr(
+                diags
+                    .iter()
+                    .map(|d| {
+                        Json::obj(vec![
+                            ("file", d.file.as_str().into()),
+                            ("line", d.line.into()),
+                            ("rule", d.rule.into()),
+                            ("message", d.message.as_str().into()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ids(diags: &[Diagnostic]) -> Vec<&'static str> {
+        diags.iter().map(|d| d.rule).collect()
+    }
+
+    #[test]
+    fn stripping_blanks_comments_strings_chars() {
+        let src = "let a = \"x.unwrap()\"; // .unwrap()\nlet c = '\\''; /* .unwrap() */\n";
+        let s = strip(src.as_bytes());
+        let text = String::from_utf8_lossy(&s);
+        assert!(!text.contains(".unwrap()"), "stripped: {text}");
+        assert_eq!(s.len(), src.len(), "stripping must preserve length");
+        assert_eq!(text.matches('\n').count(), 2, "newlines must survive");
+    }
+
+    #[test]
+    fn stripping_handles_raw_strings_and_lifetimes() {
+        let src = "fn f<'a>(x: &'a str) { let r = r#\"panic!(\"#; }";
+        let text = String::from_utf8_lossy(&strip(src.as_bytes())).into_owned();
+        assert!(!text.contains("panic!("), "raw string not stripped: {text}");
+        assert!(text.contains("<'a>"), "lifetime must survive: {text}");
+    }
+
+    #[test]
+    fn guarded_match_respects_ident_boundaries() {
+        let mut out = Vec::new();
+        find_guarded(b"debug_assert!(x); assert!(y);", "assert!(", &mut out);
+        assert_eq!(out.len(), 1, "debug_assert must not match");
+        out.clear();
+        find_guarded(b"let m: HashMapLike = x; let h: HashMap<u8, u8>;", "HashMap", &mut out);
+        assert_eq!(out.len(), 1, "HashMapLike must not match");
+    }
+
+    #[test]
+    fn bare_index_detector_skips_non_index_brackets() {
+        let mut out = Vec::new();
+        find_bare_index(b"#[cfg(test)] let a: &[u8] = x; vec![0; n]; b[i]; f()[0];", &mut out);
+        assert_eq!(out.len(), 2, "expected b[i] and f()[0] only, got {out:?}");
+    }
+
+    #[test]
+    fn cfg_test_region_is_skipped() {
+        let src = "fn absorb() { let x = 1; }\n#[cfg(test)]\nmod tests {\n    fn absorb() { \
+                   x.unwrap(); }\n}\n";
+        let diags = lint_source("coordinator/node.rs", src);
+        assert!(diags.is_empty(), "test region must be exempt: {diags:?}");
+    }
+
+    #[test]
+    fn fn_scope_limits_rule_to_listed_bodies() {
+        let src = "fn absorb() { x.unwrap(); }\nfn helper() { y.unwrap(); }\n";
+        let diags = lint_source("coordinator/node.rs", src);
+        assert_eq!(ids(&diags), vec!["panic-freedom"]);
+        assert_eq!(diags.first().map(|d| d.line), Some(1), "only absorb is scoped");
+    }
+
+    #[test]
+    fn justified_allow_suppresses_next_line() {
+        let allow = format!("{}parity-order): kernel definition", super::ALLOW_MARKER);
+        let src = format!("fn vsum(a: &[f64]) -> f64 {{\n    {allow}: pinned\n    \
+                           a.iter().sum()\n}}\n");
+        let diags = lint_source("linalg/matrix.rs", &src);
+        assert!(diags.is_empty(), "justified allow must suppress: {diags:?}");
+    }
+
+    #[test]
+    fn unjustified_allow_is_rejected_and_suppresses_nothing() {
+        let allow = format!("{}parity-order):", super::ALLOW_MARKER);
+        let src = format!("fn f(a: &[f64]) -> f64 {{\n    {allow}\n    a.iter().sum()\n}}\n");
+        let diags = lint_source("linalg/matrix.rs", &src);
+        let got = ids(&diags);
+        assert!(got.contains(&BAD_ALLOW), "missing bad-allow: {diags:?}");
+        assert!(got.contains(&"parity-order"), "must not suppress: {diags:?}");
+    }
+
+    #[test]
+    fn unknown_rule_id_in_allow_is_rejected() {
+        let allow = format!("{}no-such-rule): because reasons", super::ALLOW_MARKER);
+        let src = format!("fn f() {{\n    {allow}\n    let x = 1;\n}}\n");
+        let diags = lint_source("linalg/matrix.rs", &src);
+        assert_eq!(ids(&diags), vec![BAD_ALLOW]);
+    }
+
+    #[test]
+    fn diagnostics_carry_file_line_and_display_format() {
+        let src = "fn parse() {\n    let x = buf[0];\n}\n";
+        let diags = lint_source("coordinator/wire.rs", src);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        let d = &diags[0];
+        assert_eq!((d.file.as_str(), d.line, d.rule), ("coordinator/wire.rs", 2, "panic-freedom"));
+        let shown = d.to_string();
+        assert!(shown.starts_with("coordinator/wire.rs:2: panic-freedom: "), "{shown}");
+    }
+
+    #[test]
+    fn path_scoping_matches_dirs_and_files() {
+        let r = &RULES[2]; // determinism
+        assert!(r.applies_to("linalg/matrix.rs"));
+        assert!(r.applies_to("coordinator/wire.rs"));
+        assert!(!r.applies_to("runner/mod.rs"), "runner is on the timing allowlist");
+        assert!(!r.applies_to("util/bench.rs"), "bench is on the timing allowlist");
+    }
+
+    #[test]
+    fn deprecated_rule_exempts_definition_sites() {
+        let src = "fn f() { let a = ProxLead::new(1); }\n";
+        assert_eq!(ids(&lint_source("exp/mod.rs", src)), vec!["deprecated-api"]);
+        assert!(lint_source("algorithm/prox_lead.rs", src).is_empty());
+    }
+}

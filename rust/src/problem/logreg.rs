@@ -192,9 +192,8 @@ impl LogReg {
                 let argmax = row
                     .iter()
                     .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .unwrap()
-                    .0;
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map_or(0, |best| best.0);
                 hit += (argmax == label) as usize;
                 tot += 1;
             }

@@ -442,6 +442,7 @@ pub fn run_engine(
         spec.record_every >= 1,
         "record_every must be >= 1 (0 would divide by zero sizing the history)"
     );
+    #[allow(clippy::disallowed_methods)] // wall-clock run timing (see clippy.toml)
     let start = Instant::now();
     let rounds = spec.stop.max_rounds;
     let mut history: Vec<MetricPoint> = Vec::with_capacity(rounds / spec.record_every + 2);

@@ -372,6 +372,7 @@ pub fn run_with_workers(
         "stepsize schedules are engine-only (node halves run fixed hyperparameters)"
     );
     let gated = spec.stop.leader_gated();
+    #[allow(clippy::disallowed_methods)] // wall-clock run timing (see clippy.toml)
     let start = Instant::now();
 
     let participants = if workers > 0 {

@@ -131,6 +131,7 @@ pub fn run_cell(cell: &Cell, target_subopt: Option<f64>) -> CellOutcome {
 }
 
 fn run_cell_cached(cell: &Cell, target_subopt: Option<f64>, cache: &RefCache) -> CellOutcome {
+    #[allow(clippy::disallowed_methods)] // wall-clock run timing (see clippy.toml)
     let t0 = Instant::now();
     // sweeps always run the native kernels — the PJRT compute path is
     // per-run, not per-grid (use `proxlead train --compute xla` for that).

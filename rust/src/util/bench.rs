@@ -124,6 +124,7 @@ impl BenchSet {
         }
         let mut samples = Vec::with_capacity(self.reps);
         for _ in 0..self.reps {
+            #[allow(clippy::disallowed_methods)] // wall-clock run timing (see clippy.toml)
             let t0 = Instant::now();
             std::hint::black_box(f());
             samples.push(t0.elapsed().as_nanos() as f64);
@@ -300,7 +301,7 @@ impl CsvSeries {
     pub fn to_csv(&self) -> String {
         // union of x values, sorted
         let mut xs: Vec<f64> = self.series.iter().flatten().map(|p| p.0).collect();
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.sort_by(|a, b| a.total_cmp(b));
         xs.dedup();
         let mut out = String::new();
         let _ = writeln!(out, "{},{}", self.xlabel, self.names.join(","));

@@ -1,0 +1,97 @@
+//! The linter's own contract: the fixture corpus trips every rule at the
+//! expected `file:line`, the real tree is lint-clean, and the wire decode
+//! path carries no suppressions at all (ISSUE-8 acceptance criteria).
+
+use std::path::Path;
+
+use proxlead::lint;
+
+fn fixtures_root() -> &'static Path {
+    Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/tests/lint_fixtures"))
+}
+
+fn src_root() -> &'static Path {
+    Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/src"))
+}
+
+#[test]
+fn fixture_corpus_triggers_every_rule_exactly_once() {
+    let (files, diags) = lint::lint_tree(fixtures_root()).expect("fixture scan");
+    assert_eq!(files, 9, "fixture corpus drifted: {files} files");
+    let got: Vec<(String, usize, &str)> =
+        diags.iter().map(|d| (d.file.clone(), d.line, d.rule)).collect();
+    let want = [
+        ("algorithm/choco.rs".to_string(), 7, "determinism"),
+        ("coordinator/wire.rs".to_string(), 5, "panic-freedom"),
+        ("exp/registry.rs".to_string(), 6, "deprecated-api"),
+        ("linalg/matrix.rs".to_string(), 6, "parity-order"),
+        ("sim/mod.rs".to_string(), 5, "zero-alloc"),
+        ("sweep/mod.rs".to_string(), 6, "total-cmp"),
+        ("util/bad_allow.rs".to_string(), 6, "bad-allow"),
+    ];
+    assert_eq!(got, want, "fixture diagnostics drifted");
+    // ...which is every rule-id, each exactly once
+    let mut ids: Vec<&str> = diags.iter().map(|d| d.rule).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    let mut all = lint::rule_ids();
+    all.sort_unstable();
+    assert_eq!(ids, all, "some rule has no fixture trigger");
+}
+
+#[test]
+fn fixture_diagnostics_render_file_line_rule() {
+    let (_, diags) = lint::lint_tree(fixtures_root()).expect("fixture scan");
+    let shown: Vec<String> = diags.iter().map(|d| d.to_string()).collect();
+    assert!(
+        shown.iter().any(|s| s.starts_with("coordinator/wire.rs:5: panic-freedom: ")),
+        "diagnostic format drifted: {shown:?}"
+    );
+}
+
+#[test]
+fn real_tree_is_lint_clean() {
+    let (files, diags) = lint::lint_tree(src_root()).expect("src scan");
+    assert!(files >= 50, "src walk looks wrong: only {files} files");
+    let listing: Vec<String> = diags.iter().map(|d| d.to_string()).collect();
+    assert!(diags.is_empty(), "rust/src must be lint-clean:\n{}", listing.join("\n"));
+}
+
+#[test]
+fn unjustified_allow_is_rejected_not_honored() {
+    // the bad-allow fixture also proves the suppression did NOT take
+    // effect — here on a minimal inline source instead of the corpus
+    let marker = concat!("// lint:", "allow(");
+    let src = format!("fn f(v: &mut [f64]) {{\n    {marker}total-cmp):\n    \
+                       v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}}\n");
+    let diags = lint::lint_source("sweep/mod.rs", &src);
+    let ids: Vec<&str> = diags.iter().map(|d| d.rule).collect();
+    assert!(ids.contains(&"bad-allow"), "{diags:?}");
+    assert!(ids.contains(&"total-cmp"), "unjustified allow must not suppress: {diags:?}");
+}
+
+#[test]
+fn wire_decode_path_has_no_suppressions() {
+    // acceptance criterion: panic-freedom in the wire path is enforced by
+    // the rule itself, never waived by lint:allow comments
+    let marker = concat!("lint:", "allow(");
+    for rel in ["coordinator/wire.rs", "coordinator/node.rs", "compress/bits.rs"] {
+        let path = src_root().join(rel);
+        let src = std::fs::read_to_string(&path).expect("wire-path source readable");
+        assert!(
+            !src.contains(marker),
+            "{rel} must carry no lint suppressions at all (wire decode path)"
+        );
+    }
+}
+
+#[test]
+fn json_report_round_trips_diagnostic_fields() {
+    let (files, diags) = lint::lint_tree(fixtures_root()).expect("fixture scan");
+    let report = lint::report_json(files, &diags).to_string();
+    for needle in
+        ["\"schema\":\"proxlead-lint-v1\"", "\"clean\":false", "panic-freedom", "bad-allow"]
+    {
+        assert!(report.contains(needle), "JSON report missing {needle}: {report}");
+    }
+}

@@ -1,0 +1,9 @@
+//! Fixture: MUST trigger `determinism` exactly once (wall-clock read in a
+//! parity-critical module). Never compiled — scanned by lint_contract.rs.
+
+use std::time::Instant;
+
+pub fn step() -> u128 {
+    let t0 = Instant::now();
+    t0.elapsed().as_nanos()
+}

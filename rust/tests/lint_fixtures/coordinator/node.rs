@@ -1,0 +1,20 @@
+//! Fixture: MUST be clean — panicking constructs inside `#[cfg(test)]`
+//! are exempt even in scoped functions. Never compiled — scanned by
+//! lint_contract.rs.
+
+fn absorb(x: Option<u8>) -> u8 {
+    x.unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    fn absorb(x: Option<u8>) -> u8 {
+        x.unwrap()
+    }
+
+    #[test]
+    fn indexing_in_tests_is_fine() {
+        let buf = [1u8, 2];
+        assert_eq!(buf[0], 1);
+    }
+}

@@ -1,0 +1,11 @@
+//! Fixture: MUST trigger `panic-freedom` exactly once (bare indexing in a
+//! scoped wire-path function). Never compiled — scanned by lint_contract.rs.
+
+pub fn parse(buf: &[u8]) -> u8 {
+    buf[0]
+}
+
+pub fn helper_outside_scope(buf: &[u8]) -> u8 {
+    // same construct, unscoped fn name: the rule must NOT fire here
+    buf[1]
+}

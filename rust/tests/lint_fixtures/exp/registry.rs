@@ -1,0 +1,7 @@
+//! Fixture: MUST trigger `deprecated-api` exactly once (positional
+//! constructor outside algorithm/engine). Never compiled — scanned by
+//! lint_contract.rs.
+
+pub fn build() -> ProxLead {
+    ProxLead::new(0.1)
+}

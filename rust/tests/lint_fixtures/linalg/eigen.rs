@@ -1,0 +1,7 @@
+//! Fixture: MUST be clean — a justified suppression exempts the reduction
+//! on the following line. Never compiled — scanned by lint_contract.rs.
+
+pub fn pinned_sum(a: &[f64]) -> f64 {
+    // lint:allow(parity-order): fixture kernel — order pinned by definition
+    a.iter().sum()
+}

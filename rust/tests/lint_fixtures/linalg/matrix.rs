@@ -1,0 +1,7 @@
+//! Fixture: MUST trigger `parity-order` exactly once (a float reduction
+//! outside the pinned kernels, with no justification comment). Never
+//! compiled — scanned by lint_contract.rs.
+
+pub fn rogue_norm_sq(a: &[f64]) -> f64 {
+    a.iter().map(|x| x * x).sum()
+}

@@ -1,0 +1,11 @@
+//! Fixture: MUST trigger `zero-alloc` exactly once (allocation inside a
+//! scoped sim phase body). Never compiled — scanned by lint_contract.rs.
+
+fn phase_a(n: usize) -> Vec<f64> {
+    vec![0.0; n]
+}
+
+fn not_a_phase(n: usize) -> Vec<f64> {
+    // unscoped fn: allocation is fine here
+    Vec::with_capacity(n)
+}

@@ -1,0 +1,7 @@
+//! Fixture: MUST trigger `total-cmp` exactly once (NaN-panicking float
+//! comparison; the rule is repo-wide). Never compiled — scanned by
+//! lint_contract.rs.
+
+pub fn sort_scores(v: &mut [f64]) {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}

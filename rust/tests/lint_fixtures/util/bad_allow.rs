@@ -1,0 +1,8 @@
+//! Fixture: MUST trigger `bad-allow` exactly once (suppression comment
+//! with no justification text). Never compiled — scanned by
+//! lint_contract.rs.
+
+pub fn quiet(a: &[f64]) -> f64 {
+    // lint:allow(total-cmp):
+    a.len() as f64
+}

@@ -25,6 +25,13 @@ for bench in perf_hotpath wire_bytes scaling_n; do
 done
 
 if [ -n "$SMOKE" ]; then
+    # refuse to arm the CI gate with a malformed or empty report: each
+    # fresh report must parse as a non-empty BenchReport before it may
+    # overwrite a committed baseline (one-line error + nonzero exit here
+    # thanks to set -e)
+    for name in perf_hotpath wire_bytes scaling_n; do
+        python3 scripts/perf_compare.py --validate "rust/bench_out/$name.json"
+    done
     cp rust/bench_out/perf_hotpath.json BENCH_perf_hotpath.json
     cp rust/bench_out/wire_bytes.json BENCH_wire_bytes.json
     cp rust/bench_out/scaling_n.json BENCH_scaling_n.json

@@ -18,6 +18,13 @@ Modes
 - baseline missing: bootstrap mode — print how to seed the baseline from
   the uploaded artifact and exit 0. The first CI run on a runner with a
   Rust toolchain therefore *creates* the gate rather than failing it.
+- ``--validate REPORT``: only check that REPORT parses as a non-empty
+  BenchReport and exit. Used by scripts/bench_baseline.sh before a fresh
+  report may overwrite a committed baseline.
+
+A malformed, empty, or row-less report on either side is always a
+one-line ``error:`` exit — never a traceback (covered by
+scripts/test_perf_compare.py, run in CI without a Rust toolchain).
 """
 
 from __future__ import annotations
@@ -28,18 +35,44 @@ import sys
 from pathlib import Path
 
 
+REFRESH_HINT = "refresh it via scripts/bench_baseline.sh"
+
+
 def load_rows(path: Path) -> tuple[dict, dict[tuple[str, str], float]]:
-    doc = json.loads(path.read_text())
+    """Parse one BenchReport JSON; every failure mode is a one-line
+    sys.exit (the CI log must say *what* is wrong with *which* file, never
+    show a traceback)."""
+    try:
+        text = path.read_text()
+    except OSError as e:
+        sys.exit(f"error: cannot read {path}: {e.strerror or e}")
+    if not text.strip():
+        sys.exit(f"error: {path} is empty — {REFRESH_HINT}")
+    try:
+        doc = json.loads(text)
+    except json.JSONDecodeError as e:
+        sys.exit(f"error: {path} is not valid JSON "
+                 f"(line {e.lineno}, col {e.colno}: {e.msg}) — {REFRESH_HINT}")
+    if not isinstance(doc, dict):
+        sys.exit(f"error: {path} holds a JSON {type(doc).__name__}, "
+                 f"expected a BenchReport object — {REFRESH_HINT}")
     if doc.get("schema") != "proxlead-perf-v1":
         sys.exit(f"error: {path} has schema {doc.get('schema')!r}, "
                  "expected 'proxlead-perf-v1'")
     rows: dict[tuple[str, str], float] = {}
     for s in doc.get("sets", []):
+        if not isinstance(s, dict):
+            continue
         title = s.get("title", "")
         for r in s.get("results", []):
+            if not isinstance(r, dict):
+                continue
             p50 = r.get("p50_ns")
             if isinstance(p50, (int, float)) and p50 > 0:
                 rows[(title, r.get("name", ""))] = float(p50)
+    if not rows:
+        sys.exit(f"error: {path} contains no benchmark rows "
+                 f"(schema ok, measurements missing) — {REFRESH_HINT}")
     return doc, rows
 
 
@@ -52,13 +85,27 @@ def fmt_ns(ns: float) -> str:
 
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--baseline", required=True, type=Path,
+    ap.add_argument("--baseline", type=Path,
                     help="committed BENCH_<name>.json baseline")
-    ap.add_argument("--current", required=True, type=Path,
+    ap.add_argument("--current", type=Path,
                     help="fresh bench_out/<name>.json from this run")
     ap.add_argument("--tolerance", type=float, default=0.30,
                     help="allowed fractional p50 regression (default 0.30)")
+    ap.add_argument("--validate", type=Path, metavar="REPORT",
+                    help="only check that REPORT parses as a non-empty "
+                         "BenchReport, then exit (bench_baseline.sh runs "
+                         "this before overwriting a committed baseline)")
     args = ap.parse_args()
+
+    if args.validate is not None:
+        if not args.validate.exists():
+            sys.exit(f"error: {args.validate} not found")
+        _, rows = load_rows(args.validate)
+        print(f"ok: {args.validate} is a valid BenchReport "
+              f"({len(rows)} benchmark rows)")
+        return 0
+    if args.baseline is None or args.current is None:
+        ap.error("--baseline and --current are required (or use --validate)")
 
     if not args.current.exists():
         sys.exit(f"error: current report {args.current} not found — "

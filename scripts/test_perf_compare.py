@@ -1,0 +1,150 @@
+#!/usr/bin/env python3
+"""Tests for scripts/perf_compare.py error handling — stdlib only.
+
+The contract under test (ISSUE 8 satellite): a malformed or empty
+``BENCH_*.json`` on either side of the perf gate must produce a one-line
+``error:`` message and a nonzero exit, never a Python traceback; valid
+inputs keep their bootstrap/compare semantics. Run directly (CI does, on
+a runner with no Rust toolchain)::
+
+    python3 scripts/test_perf_compare.py
+"""
+
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+import tempfile
+import unittest
+from pathlib import Path
+
+SCRIPT = Path(__file__).resolve().parent / "perf_compare.py"
+
+
+def report(p50: float = 100.0, name: str = "bench-a", smoke: bool = True) -> dict:
+    return {
+        "schema": "proxlead-perf-v1",
+        "name": "t",
+        "smoke": smoke,
+        "sets": [{"title": "set", "results": [{"name": name, "p50_ns": p50}]}],
+    }
+
+
+class PerfCompareCli(unittest.TestCase):
+    def setUp(self) -> None:
+        self._tmp = tempfile.TemporaryDirectory()
+        self.dir = Path(self._tmp.name)
+        self.addCleanup(self._tmp.cleanup)
+
+    def write(self, fname: str, content) -> Path:
+        p = self.dir / fname
+        if isinstance(content, (dict, list)):
+            p.write_text(json.dumps(content))
+        else:
+            p.write_text(content)
+        return p
+
+    def run_compare(self, *argv: str) -> subprocess.CompletedProcess:
+        return subprocess.run(
+            [sys.executable, str(SCRIPT), *argv],
+            capture_output=True, text=True, check=False,
+        )
+
+    def assert_one_line_error(self, proc: subprocess.CompletedProcess, *needles: str) -> None:
+        self.assertNotEqual(proc.returncode, 0, proc.stdout)
+        combined = proc.stdout + proc.stderr
+        self.assertNotIn("Traceback", combined, f"traceback leaked:\n{combined}")
+        error_lines = [l for l in proc.stderr.splitlines() if l.startswith("error:")]
+        self.assertEqual(len(error_lines), 1, f"want exactly one error line:\n{combined}")
+        for needle in needles:
+            self.assertIn(needle, error_lines[0])
+
+    # --- malformed / empty inputs -----------------------------------------
+
+    def test_malformed_baseline_is_one_line_error(self):
+        base = self.write("BENCH_x.json", "{not json at all")
+        cur = self.write("cur.json", report())
+        proc = self.run_compare("--baseline", str(base), "--current", str(cur))
+        self.assert_one_line_error(proc, "not valid JSON", "BENCH_x.json")
+
+    def test_empty_baseline_is_one_line_error(self):
+        base = self.write("BENCH_x.json", "")
+        cur = self.write("cur.json", report())
+        proc = self.run_compare("--baseline", str(base), "--current", str(cur))
+        self.assert_one_line_error(proc, "is empty", "bench_baseline.sh")
+
+    def test_whitespace_only_counts_as_empty(self):
+        base = self.write("BENCH_x.json", "  \n\t\n")
+        cur = self.write("cur.json", report())
+        proc = self.run_compare("--baseline", str(base), "--current", str(cur))
+        self.assert_one_line_error(proc, "is empty")
+
+    def test_wrong_schema_is_one_line_error(self):
+        base = self.write("BENCH_x.json", {"schema": "something-else"})
+        cur = self.write("cur.json", report())
+        proc = self.run_compare("--baseline", str(base), "--current", str(cur))
+        self.assert_one_line_error(proc, "schema")
+
+    def test_row_less_report_is_one_line_error(self):
+        base = self.write("BENCH_x.json",
+                          {"schema": "proxlead-perf-v1", "smoke": True, "sets": []})
+        cur = self.write("cur.json", report())
+        proc = self.run_compare("--baseline", str(base), "--current", str(cur))
+        self.assert_one_line_error(proc, "no benchmark rows")
+
+    def test_non_object_json_is_one_line_error(self):
+        base = self.write("BENCH_x.json", [1, 2, 3])
+        cur = self.write("cur.json", report())
+        proc = self.run_compare("--baseline", str(base), "--current", str(cur))
+        self.assert_one_line_error(proc, "expected a BenchReport object")
+
+    def test_malformed_current_is_one_line_error(self):
+        base = self.write("BENCH_x.json", report())
+        cur = self.write("cur.json", '{"schema": "proxlead-perf-v1", "sets": [')
+        proc = self.run_compare("--baseline", str(base), "--current", str(cur))
+        self.assert_one_line_error(proc, "not valid JSON", "cur.json")
+
+    # --- healthy paths stay intact ----------------------------------------
+
+    def test_missing_baseline_is_bootstrap_mode(self):
+        cur = self.write("cur.json", report())
+        proc = self.run_compare("--baseline", str(self.dir / "absent.json"),
+                                "--current", str(cur))
+        self.assertEqual(proc.returncode, 0, proc.stderr)
+        self.assertIn("bootstrap", proc.stdout)
+
+    def test_within_tolerance_passes(self):
+        base = self.write("BENCH_x.json", report(p50=100.0))
+        cur = self.write("cur.json", report(p50=110.0))
+        proc = self.run_compare("--baseline", str(base), "--current", str(cur))
+        self.assertEqual(proc.returncode, 0, proc.stdout + proc.stderr)
+        self.assertIn("no regression", proc.stdout)
+
+    def test_regression_beyond_tolerance_fails(self):
+        base = self.write("BENCH_x.json", report(p50=100.0))
+        cur = self.write("cur.json", report(p50=200.0))
+        proc = self.run_compare("--baseline", str(base), "--current", str(cur))
+        self.assertEqual(proc.returncode, 1, proc.stdout + proc.stderr)
+        self.assertIn("FAIL", proc.stdout)
+
+    # --- the --validate mode bench_baseline.sh relies on -------------------
+
+    def test_validate_accepts_good_report(self):
+        good = self.write("fresh.json", report())
+        proc = self.run_compare("--validate", str(good))
+        self.assertEqual(proc.returncode, 0, proc.stderr)
+        self.assertIn("ok:", proc.stdout)
+
+    def test_validate_rejects_empty_report(self):
+        bad = self.write("fresh.json", "")
+        proc = self.run_compare("--validate", str(bad))
+        self.assert_one_line_error(proc, "is empty")
+
+    def test_validate_rejects_missing_file(self):
+        proc = self.run_compare("--validate", str(self.dir / "absent.json"))
+        self.assert_one_line_error(proc, "not found")
+
+
+if __name__ == "__main__":
+    unittest.main(verbosity=2)
