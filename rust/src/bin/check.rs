@@ -1,0 +1,93 @@
+//! `proxlead-check` — schedule-exploring model checker for the sim and
+//! coordinator sync protocols.
+//!
+//! Usage: `cargo run --release --bin check [-- [SCENARIO...] [--quick] [--json PATH]]`
+//!
+//! Runs the named scenarios (default: all of
+//! [`proxlead::check::scenarios::NAMES`]) under the controlled scheduler:
+//! bounded-preemption DFS plus seed-recorded random schedules, with
+//! happens-before race tracking, deadlock detection, and outcome
+//! invariance checks. Exit status: 0 every scenario passed, 1 findings,
+//! 2 usage error. `--json PATH` additionally writes the
+//! `proxlead-check-v1` report CI archives.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use proxlead::check::scenarios::{self, Budget};
+use proxlead::check::{report_json, ScenarioReport};
+
+fn main() -> ExitCode {
+    let mut names: Vec<String> = Vec::new();
+    let mut budget = Budget::Full;
+    let mut json_out: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--json" => match args.next() {
+                Some(p) => json_out = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("check: --json requires a path");
+                    return ExitCode::from(2);
+                }
+            },
+            "--quick" => budget = Budget::Quick,
+            "--help" | "-h" => {
+                println!("usage: check [SCENARIO...] [--quick] [--json PATH]");
+                println!("scenarios: {}", scenarios::NAMES.join(", "));
+                return ExitCode::SUCCESS;
+            }
+            flag if flag.starts_with('-') => {
+                eprintln!("check: unknown flag `{flag}` (try --help)");
+                return ExitCode::from(2);
+            }
+            name => names.push(name.to_string()),
+        }
+    }
+
+    let mut reports: Vec<ScenarioReport> = Vec::new();
+    if names.is_empty() {
+        reports = scenarios::run_all(budget);
+        for r in &reports {
+            println!("{}", r.summary_line());
+        }
+    } else {
+        for name in &names {
+            match scenarios::run_by_name(name, budget) {
+                Some(r) => {
+                    println!("{}", r.summary_line());
+                    reports.push(r);
+                }
+                None => {
+                    eprintln!(
+                        "check: unknown scenario `{name}` (known: {})",
+                        scenarios::NAMES.join(", ")
+                    );
+                    return ExitCode::from(2);
+                }
+            }
+        }
+    }
+
+    if let Some(path) = json_out {
+        let report = report_json(&reports).to_string();
+        if let Err(e) = std::fs::write(&path, report) {
+            eprintln!("check: cannot write {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+    }
+
+    let failed: Vec<&str> = reports.iter().filter(|r| !r.pass).map(|r| r.name.as_str()).collect();
+    for r in reports.iter().filter(|r| !r.pass) {
+        for f in &r.findings {
+            eprintln!("check: [{}] {}: {}", r.name, f.kind.name(), f.detail);
+        }
+    }
+    if failed.is_empty() {
+        println!("check: {} scenario(s) clean", reports.len());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("check: {} scenario(s) failed: {}", failed.len(), failed.join(", "));
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,1398 @@
+//! `proxlead-check` — deterministic schedule exploration for the repo's two
+//! hand-rolled synchronization protocols (DESIGN.md §6b).
+//!
+//! The sim backend's barrier-phased shard protocol (`crate::sim`) and the
+//! coordinator's channel teardown (`crate::coordinator`) are exercised by
+//! the parity suite only under whatever interleavings the OS happens to
+//! produce. This module is a zero-dependency "loom-lite": the shim layer in
+//! [`crate::runtime::sync`] routes every atomic access, barrier arrival,
+//! channel operation, and thread spawn through a cooperative scheduler that
+//! serializes the run (one logical thread holds the token at a time) and
+//! *chooses* the interleaving — bounded-preemption DFS from replayed
+//! prefixes for systematic coverage at tiny n, plus seed-recorded random
+//! schedules for breadth.
+//!
+//! What one explored execution checks:
+//!
+//! - **Races on `Relaxed` pairs.** A vector clock per logical thread tracks
+//!   happens-before: barrier releases join all arrivals' clocks, channel
+//!   messages carry the sender's clock, acquire loads join the variable's
+//!   release clock. An access that observes a cross-thread write with no
+//!   happens-before edge is reported — except RMW-against-RMW pairs (the
+//!   shard-claim counters and fault-flag raises are atomicity-only by
+//!   design). Executions themselves are sequentially consistent; the
+//!   checker does not simulate weak memory, it proves which `Relaxed` sites
+//!   are ordered by *other* edges (see DESIGN.md §6b for the tsan
+//!   comparison).
+//! - **Deadlocks.** Every live logical thread blocked on a disabled
+//!   operation (barrier arity mismatch, `recv` with live senders and an
+//!   empty queue after teardown, a join gate with live peers) is reported
+//!   with the full blocked-op listing.
+//! - **Schedule invariance.** The scenario returns an [`Outcome`]
+//!   fingerprint (slot matrix bits, history, stop reason); all explored
+//!   schedules must produce the same fingerprint.
+//!
+//! Scenario definitions live in [`scenarios`]; `cargo run --release --bin
+//! check` drives them and emits the `proxlead-check-v1` JSON report.
+
+pub mod scenarios;
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::fmt;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Hard wall against a true hang (an unshimmed blocking call, or a thread
+/// crunching uncontrolled for this long): after this much scheduler
+/// silence, the execution is poisoned and reported as stuck.
+const WATCHDOG: Duration = Duration::from_secs(10);
+
+/// Panic message prefix used when the scheduler unwinds an execution on
+/// purpose (deadlock/stuck poisoning); the explorer filters these out of
+/// the stray-panic findings.
+const POISON_MSG: &str = "proxlead-check: execution poisoned";
+
+// ---------------------------------------------------------------------------
+// vector clocks
+
+/// A grow-on-demand vector clock over logical thread ids.
+#[derive(Clone, Debug, Default)]
+struct VClock(Vec<u64>);
+
+impl VClock {
+    fn ensure(&mut self, len: usize) {
+        if self.0.len() < len {
+            self.0.resize(len, 0);
+        }
+    }
+
+    fn tick(&mut self, tid: usize) {
+        self.ensure(tid + 1);
+        self.0[tid] += 1;
+    }
+
+    fn get(&self, tid: usize) -> u64 {
+        self.0.get(tid).copied().unwrap_or(0)
+    }
+
+    fn join(&mut self, other: &VClock) {
+        self.ensure(other.0.len());
+        for (i, &v) in other.0.iter().enumerate() {
+            if v > self.0[i] {
+                self.0[i] = v;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// operations and findings
+
+/// The kind of shimmed atomic access (see [`crate::runtime::sync`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum AtomicKind {
+    Load,
+    Store,
+    /// Read-modify-write (`fetch_add`, flag raise via `fetch_or`): pairs of
+    /// RMWs on one variable are atomicity-only and never flagged as races.
+    Rmw,
+}
+
+/// One announced shim operation — every variant is a yield point.
+#[derive(Clone, Debug)]
+pub(crate) enum Op {
+    /// First announcement of a freshly spawned logical thread; the parent's
+    /// matching [`Op::SpawnWait`] is enabled once this is announced, which
+    /// makes thread registration order deterministic for replay.
+    Begin,
+    /// Parent-side half of the spawn handshake.
+    SpawnWait { child: usize },
+    /// Atomic access; `acquire`/`release` carry the ordering strength (both
+    /// false = relaxed) so the scheduler can maintain release clocks.
+    Atomic { var: usize, site: &'static str, kind: AtomicKind, acquire: bool, release: bool },
+    BarrierArrive { bar: usize },
+    ChanSend { ch: usize },
+    ChanRecv { ch: usize },
+    ChanDropSender { ch: usize },
+    ChanDropReceiver { ch: usize },
+    /// Pre-join gate (`sync::pre_join`): enabled once every other logical
+    /// thread is dead, so the real (uncontrolled) `join` that follows can
+    /// never block the token holder.
+    Join,
+}
+
+/// What a granted operation tells the shim layer to do.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum YieldOutcome {
+    /// Perform the real operation (the thread still holds the token).
+    Proceed,
+    /// Channel endpoint is closed: `send` must return the value, `recv`
+    /// must return a disconnect error.
+    Closed,
+}
+
+/// Classification of one checker finding.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FindingKind {
+    /// Unordered cross-thread access pair on one atomic variable.
+    Race,
+    /// All live logical threads blocked on disabled operations.
+    Deadlock,
+    /// Watchdog or step-limit poisoning (livelock / unshimmed blocking).
+    Stuck,
+    /// A scenario panicked outside the scheduler's own poisoning.
+    Panic,
+    /// Explored schedules disagree on the scenario outcome fingerprint.
+    Invariance,
+    /// Fewer distinct schedules than the scenario demands.
+    Coverage,
+    /// A replayed prefix stopped matching the enabled set (scenario is
+    /// itself schedule-dependent in its communication structure).
+    Divergence,
+}
+
+impl FindingKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FindingKind::Race => "race",
+            FindingKind::Deadlock => "deadlock",
+            FindingKind::Stuck => "stuck",
+            FindingKind::Panic => "panic",
+            FindingKind::Invariance => "invariance",
+            FindingKind::Coverage => "coverage",
+            FindingKind::Divergence => "divergence",
+        }
+    }
+}
+
+/// One deduplicated checker finding.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    pub kind: FindingKind,
+    pub detail: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.kind.name(), self.detail)
+    }
+}
+
+/// What one scenario execution returns: a fingerprint that must be
+/// bit-identical across every explored schedule, plus a human label.
+#[derive(Clone, Debug)]
+pub struct Outcome {
+    pub fingerprint: u64,
+    pub label: String,
+}
+
+// ---------------------------------------------------------------------------
+// FNV-1a — schedule and outcome fingerprints
+
+/// Tiny FNV-1a hasher for schedule and outcome fingerprints (zero-dep, and
+/// deterministic across runs unlike `DefaultHasher`).
+pub struct Fnv(u64);
+
+impl Fnv {
+    pub fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.0 ^= u64::from(b);
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    pub fn write_bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= u64::from(b);
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv {
+    fn default() -> Fnv {
+        Fnv::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scheduler state
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Ts {
+    /// OS-running before its `Begin` announcement.
+    Startup,
+    /// Holds the token.
+    Running,
+    /// Announced a pending op, waiting for a grant.
+    Parked,
+    /// Arrived at a barrier, waiting for the release.
+    BarrierWait,
+    /// Barrier released (or equivalent): schedulable with no pending op.
+    Released,
+    Dead,
+}
+
+struct Th {
+    name: String,
+    clock: VClock,
+    state: Ts,
+    pending: Option<Op>,
+    /// Set when `Begin` is announced (spawn handshake).
+    begun: bool,
+}
+
+#[derive(Clone)]
+struct WriteRec {
+    tid: usize,
+    /// Writer's own clock component at the write — the happens-before test
+    /// for a later access by `t` is `t.clock[tid] >= stamp`.
+    stamp: u64,
+    rmw: bool,
+    site: &'static str,
+}
+
+#[derive(Default)]
+struct VarMeta {
+    /// Clock transferred to acquire loads; maintained by release stores
+    /// (overwrite), release RMWs (join), and cleared by relaxed stores.
+    release_clock: VClock,
+    last_write: Option<WriteRec>,
+}
+
+struct BarMeta {
+    site: &'static str,
+    arity: usize,
+    waiting: Vec<usize>,
+    clock: VClock,
+}
+
+struct ChanMeta {
+    site: &'static str,
+    senders: usize,
+    receiver_open: bool,
+    /// Sender clocks, in lockstep with the typed queue in the shim layer
+    /// (both are only touched by the token holder).
+    msgs: VecDeque<VClock>,
+    /// Joined at every sender drop; transferred to a disconnect `recv`.
+    close_clock: VClock,
+}
+
+/// One schedule choice point, recorded for DFS child generation and replay.
+#[derive(Clone, Debug)]
+pub(crate) struct ChoicePoint {
+    enabled: Vec<usize>,
+    chosen: usize,
+    running_before: Option<usize>,
+    /// Preemptions accumulated strictly before this step.
+    preempts_before: usize,
+}
+
+enum Policy {
+    /// Replay `prefix`, then run-to-completion (continue the last running
+    /// thread when enabled, else lowest tid). An empty prefix is the
+    /// deterministic baseline schedule.
+    Replay(Vec<usize>),
+    Random(Rng),
+}
+
+struct SchedInner {
+    threads: Vec<Th>,
+    current: Option<usize>,
+    last_running: Option<usize>,
+    vars: HashMap<usize, VarMeta>,
+    bars: Vec<BarMeta>,
+    chans: Vec<ChanMeta>,
+    findings: Vec<Finding>,
+    poisoned: bool,
+    log: Vec<ChoicePoint>,
+    preempts: usize,
+    policy: Policy,
+    step_limit: usize,
+    /// Joined at every thread exit; transferred at the pre-join gate.
+    exit_clock: VClock,
+}
+
+pub(crate) struct Checker {
+    inner: Mutex<SchedInner>,
+    cv: Condvar,
+}
+
+enum ApplyResult {
+    Proceed,
+    Disconnected,
+    BarrierBlocked,
+}
+
+impl Checker {
+    fn fresh(policy: Policy, step_limit: usize) -> Arc<Checker> {
+        let mut main = Th {
+            name: "main".to_string(),
+            clock: VClock::default(),
+            state: Ts::Running,
+            pending: None,
+            begun: true,
+        };
+        main.clock.tick(0);
+        Arc::new(Checker {
+            inner: Mutex::new(SchedInner {
+                threads: vec![main],
+                current: Some(0),
+                last_running: Some(0),
+                vars: HashMap::new(),
+                bars: Vec::new(),
+                chans: Vec::new(),
+                findings: Vec::new(),
+                poisoned: false,
+                log: Vec::new(),
+                preempts: 0,
+                policy,
+                step_limit,
+                exit_clock: VClock::default(),
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    fn lock(&self) -> MutexGuard<'_, SchedInner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    pub(crate) fn register_child(&self, parent: usize, name: &str) -> usize {
+        let mut g = self.lock();
+        let tid = g.threads.len();
+        g.threads[parent].clock.tick(parent);
+        let clock = g.threads[parent].clock.clone();
+        g.threads.push(Th {
+            name: name.to_string(),
+            clock,
+            state: Ts::Startup,
+            pending: None,
+            begun: false,
+        });
+        tid
+    }
+
+    pub(crate) fn register_barrier(&self, arity: usize, site: &'static str) -> usize {
+        let mut g = self.lock();
+        g.bars.push(BarMeta { site, arity, waiting: Vec::new(), clock: VClock::default() });
+        g.bars.len() - 1
+    }
+
+    pub(crate) fn register_channel(&self, site: &'static str) -> usize {
+        let mut g = self.lock();
+        g.chans.push(ChanMeta {
+            site,
+            senders: 1,
+            receiver_open: true,
+            msgs: VecDeque::new(),
+            close_clock: VClock::default(),
+        });
+        g.chans.len() - 1
+    }
+
+    /// `Sender::clone` bookkeeping — a pure refcount bump, not a yield
+    /// point (cloning is thread-local and communicates nothing).
+    pub(crate) fn sender_cloned(&self, ch: usize) {
+        let mut g = self.lock();
+        g.chans[ch].senders += 1;
+    }
+
+    /// Announce `op`, hand the token to the scheduler's choice, and apply
+    /// the op's bookkeeping once granted. Panics if the execution is
+    /// poisoned (deadlock/stuck) so the scenario unwinds.
+    pub(crate) fn yield_op(&self, tid: usize, op: Op) -> YieldOutcome {
+        let mut g = self.lock();
+        g = self.announce(g, tid, op);
+        g = self.wait_granted(g, tid);
+        let op = g.threads[tid].pending.take().expect("granted thread lost its pending op");
+        match Self::apply(&mut g, tid, &op) {
+            ApplyResult::Proceed => YieldOutcome::Proceed,
+            ApplyResult::Disconnected => YieldOutcome::Closed,
+            ApplyResult::BarrierBlocked => {
+                // parked again (state = BarrierWait, set by apply); hand the
+                // token off and wait for the release grant
+                Self::pick_next(&mut g, &self.cv);
+                drop(self.wait_granted(g, tid));
+                YieldOutcome::Proceed
+            }
+        }
+    }
+
+    /// [`Checker::yield_op`] for teardown paths (`Drop` impls): never
+    /// panics — on a poisoned execution it falls back to detached
+    /// bookkeeping so unwinding threads don't double-panic.
+    pub(crate) fn yield_op_noexcept(&self, tid: usize, op: Op) {
+        if std::thread::panicking() {
+            self.apply_detached(&op);
+            return;
+        }
+        let mut g = self.lock();
+        if g.poisoned {
+            drop(g);
+            self.apply_detached(&op);
+            return;
+        }
+        g = self.announce(g, tid, op);
+        loop {
+            if g.poisoned {
+                if let Some(op) = g.threads[tid].pending.take() {
+                    g.threads[tid].state = Ts::Running;
+                    drop(g);
+                    self.apply_detached(&op);
+                }
+                return;
+            }
+            if g.current == Some(tid) && g.threads[tid].state == Ts::Running {
+                break;
+            }
+            let (g2, _) = self
+                .cv
+                .wait_timeout(g, WATCHDOG)
+                .unwrap_or_else(|e| e.into_inner());
+            g = g2;
+        }
+        let op = g.threads[tid].pending.take().expect("granted thread lost its pending op");
+        let _ = Self::apply(&mut g, tid, &op);
+    }
+
+    /// Sender dropped from a thread this checker never registered (e.g.
+    /// after the execution already finished): bookkeeping only, no yield.
+    pub(crate) fn detach_drop_sender(&self, ch: usize) {
+        self.apply_detached(&Op::ChanDropSender { ch });
+    }
+
+    /// Receiver counterpart of [`Checker::detach_drop_sender`].
+    pub(crate) fn detach_drop_receiver(&self, ch: usize) {
+        self.apply_detached(&Op::ChanDropReceiver { ch });
+    }
+
+    /// Minimal fallback bookkeeping when the scheduler is poisoned: keep
+    /// channel refcounts sane without scheduling.
+    fn apply_detached(&self, op: &Op) {
+        let mut g = self.lock();
+        match op {
+            Op::ChanDropSender { ch } => {
+                g.chans[*ch].senders = g.chans[*ch].senders.saturating_sub(1);
+            }
+            Op::ChanDropReceiver { ch } => g.chans[*ch].receiver_open = false,
+            _ => {}
+        }
+    }
+
+    fn announce<'a>(
+        &'a self,
+        mut g: MutexGuard<'a, SchedInner>,
+        tid: usize,
+        op: Op,
+    ) -> MutexGuard<'a, SchedInner> {
+        g.threads[tid].clock.tick(tid);
+        if matches!(op, Op::Begin) {
+            g.threads[tid].begun = true;
+        }
+        g.threads[tid].state = Ts::Parked;
+        g.threads[tid].pending = Some(op);
+        if g.current == Some(tid) {
+            g.current = None;
+        }
+        if g.current.is_none() {
+            Self::pick_next(&mut g, &self.cv);
+        }
+        g
+    }
+
+    fn wait_granted<'a>(
+        &'a self,
+        mut g: MutexGuard<'a, SchedInner>,
+        tid: usize,
+    ) -> MutexGuard<'a, SchedInner> {
+        loop {
+            if g.poisoned {
+                drop(g);
+                panic!("{POISON_MSG} — unwinding logical thread {tid}");
+            }
+            if g.current == Some(tid) && g.threads[tid].state == Ts::Running {
+                return g;
+            }
+            let (g2, to) = self
+                .cv
+                .wait_timeout(g, WATCHDOG)
+                .unwrap_or_else(|e| e.into_inner());
+            g = g2;
+            if to.timed_out() && g.current != Some(tid) && !g.poisoned {
+                let name = g.threads[tid].name.clone();
+                g.findings.push(Finding {
+                    kind: FindingKind::Stuck,
+                    detail: format!(
+                        "watchdog: no scheduler progress for {}s while `{name}` waited \
+                         (unshimmed blocking call?)",
+                        WATCHDOG.as_secs()
+                    ),
+                });
+                g.poisoned = true;
+                self.cv.notify_all();
+            }
+        }
+    }
+
+    /// Thread teardown: mark dead, fold the exit clock, hand the token on.
+    /// Never panics (runs from `Drop` during unwinds too).
+    pub(crate) fn thread_exit(&self, tid: usize) {
+        let mut g = self.lock();
+        let clock = g.threads[tid].clock.clone();
+        g.exit_clock.join(&clock);
+        g.threads[tid].state = Ts::Dead;
+        g.threads[tid].pending = None;
+        if g.current == Some(tid) {
+            g.current = None;
+        }
+        if !g.poisoned && g.current.is_none() {
+            Self::pick_next(&mut g, &self.cv);
+        }
+        self.cv.notify_all();
+    }
+
+    fn enabled_tids(g: &SchedInner) -> Vec<usize> {
+        g.threads
+            .iter()
+            .enumerate()
+            .filter(|(i, t)| match t.state {
+                Ts::Released => true,
+                Ts::Parked => Self::op_enabled(g, *i),
+                _ => false,
+            })
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    fn op_enabled(g: &SchedInner, tid: usize) -> bool {
+        match g.threads[tid].pending.as_ref() {
+            None => false,
+            Some(op) => match op {
+                Op::Begin
+                | Op::Atomic { .. }
+                | Op::BarrierArrive { .. }
+                | Op::ChanSend { .. }
+                | Op::ChanDropSender { .. }
+                | Op::ChanDropReceiver { .. } => true,
+                Op::SpawnWait { child } => g.threads[*child].begun,
+                Op::ChanRecv { ch } => {
+                    let c = &g.chans[*ch];
+                    !c.msgs.is_empty() || c.senders == 0
+                }
+                Op::Join => g
+                    .threads
+                    .iter()
+                    .enumerate()
+                    .all(|(i, t)| i == tid || t.state == Ts::Dead),
+            },
+        }
+    }
+
+    /// Choose and grant the next thread; on an empty enabled set with no
+    /// startup stragglers, diagnose and poison.
+    fn pick_next(g: &mut SchedInner, cv: &Condvar) {
+        if g.poisoned {
+            return;
+        }
+        if g.log.len() >= g.step_limit {
+            g.findings.push(Finding {
+                kind: FindingKind::Stuck,
+                detail: format!("step limit {} exceeded (livelock?)", g.step_limit),
+            });
+            g.poisoned = true;
+            cv.notify_all();
+            return;
+        }
+        let enabled = Self::enabled_tids(g);
+        if enabled.is_empty() {
+            if g.threads.iter().any(|t| matches!(t.state, Ts::Startup | Ts::Running)) {
+                // an uncontrolled thread will announce shortly; token stays
+                // free until it does
+                g.current = None;
+                return;
+            }
+            if g.threads.iter().all(|t| t.state == Ts::Dead) {
+                g.current = None;
+                return;
+            }
+            let blocked: Vec<String> = g
+                .threads
+                .iter()
+                .enumerate()
+                .filter(|(_, t)| !matches!(t.state, Ts::Dead))
+                .map(|(i, t)| format!("`{}`(t{i}) blocked on {}", t.name, Self::op_desc(g, i)))
+                .collect();
+            g.findings.push(Finding {
+                kind: FindingKind::Deadlock,
+                detail: format!("no enabled thread: {}", blocked.join("; ")),
+            });
+            g.poisoned = true;
+            cv.notify_all();
+            return;
+        }
+        let chosen = match &mut g.policy {
+            Policy::Replay(prefix) => {
+                let idx = g.log.len();
+                match prefix.get(idx) {
+                    Some(&want) if enabled.contains(&want) => want,
+                    Some(&want) => {
+                        g.findings.push(Finding {
+                            kind: FindingKind::Divergence,
+                            detail: format!(
+                                "replay divergence at step {idx}: wanted t{want}, enabled {:?}",
+                                enabled
+                            ),
+                        });
+                        Self::default_pick(&enabled, g.last_running)
+                    }
+                    None => Self::default_pick(&enabled, g.last_running),
+                }
+            }
+            Policy::Random(rng) => enabled[rng.below(enabled.len())],
+        };
+        let preempt = matches!(g.last_running, Some(rb) if enabled.contains(&rb) && chosen != rb);
+        g.log.push(ChoicePoint {
+            enabled,
+            chosen,
+            running_before: g.last_running,
+            preempts_before: g.preempts,
+        });
+        if preempt {
+            g.preempts += 1;
+        }
+        g.current = Some(chosen);
+        g.last_running = Some(chosen);
+        g.threads[chosen].state = Ts::Running;
+        cv.notify_all();
+    }
+
+    fn default_pick(enabled: &[usize], last: Option<usize>) -> usize {
+        match last {
+            Some(rb) if enabled.contains(&rb) => rb,
+            _ => *enabled.iter().min().expect("non-empty enabled set"),
+        }
+    }
+
+    fn op_desc(g: &SchedInner, tid: usize) -> String {
+        let t = &g.threads[tid];
+        match (&t.state, t.pending.as_ref()) {
+            (Ts::BarrierWait, _) => {
+                let at =
+                    g.bars.iter().find(|b| b.waiting.contains(&tid)).map_or("?", |b| b.site);
+                format!("barrier `{at}` (release pending)")
+            }
+            (_, Some(Op::Begin)) => "spawn handshake".to_string(),
+            (_, Some(Op::SpawnWait { child })) => format!("spawn of t{child}"),
+            (_, Some(Op::Atomic { site, .. })) => format!("atomic `{site}`"),
+            (_, Some(Op::BarrierArrive { bar })) => format!("barrier `{}`", g.bars[*bar].site),
+            (_, Some(Op::ChanSend { ch })) => format!("send on `{}`", g.chans[*ch].site),
+            (_, Some(Op::ChanRecv { ch })) => format!(
+                "recv on `{}` ({} live sender(s), empty queue)",
+                g.chans[*ch].site, g.chans[*ch].senders
+            ),
+            (_, Some(Op::ChanDropSender { ch })) => {
+                format!("sender drop on `{}`", g.chans[*ch].site)
+            }
+            (_, Some(Op::ChanDropReceiver { ch })) => {
+                format!("receiver drop on `{}`", g.chans[*ch].site)
+            }
+            (_, Some(Op::Join)) => "pre-join gate (live peers remain)".to_string(),
+            (_, None) => "nothing (inconsistent state)".to_string(),
+        }
+    }
+
+    fn apply(g: &mut SchedInner, tid: usize, op: &Op) -> ApplyResult {
+        match op {
+            Op::Begin | Op::SpawnWait { .. } => ApplyResult::Proceed,
+            Op::Join => {
+                let ec = g.exit_clock.clone();
+                g.threads[tid].clock.join(&ec);
+                ApplyResult::Proceed
+            }
+            Op::Atomic { var, site, kind, acquire, release } => {
+                Self::apply_atomic(g, tid, *var, site, *kind, *acquire, *release);
+                ApplyResult::Proceed
+            }
+            Op::BarrierArrive { bar } => {
+                let clk = g.threads[tid].clock.clone();
+                let b = &mut g.bars[*bar];
+                b.clock.join(&clk);
+                b.waiting.push(tid);
+                if b.waiting.len() < b.arity {
+                    g.threads[tid].state = Ts::BarrierWait;
+                    return ApplyResult::BarrierBlocked;
+                }
+                let release_clock = std::mem::take(&mut b.clock);
+                let waiters = std::mem::take(&mut b.waiting);
+                for w in waiters {
+                    g.threads[w].clock.join(&release_clock);
+                    if w != tid {
+                        g.threads[w].state = Ts::Released;
+                        g.threads[w].pending = None;
+                    }
+                }
+                ApplyResult::Proceed
+            }
+            Op::ChanSend { ch } => {
+                if !g.chans[*ch].receiver_open {
+                    return ApplyResult::Disconnected;
+                }
+                let clk = g.threads[tid].clock.clone();
+                g.chans[*ch].msgs.push_back(clk);
+                ApplyResult::Proceed
+            }
+            Op::ChanRecv { ch } => match g.chans[*ch].msgs.pop_front() {
+                Some(mc) => {
+                    g.threads[tid].clock.join(&mc);
+                    ApplyResult::Proceed
+                }
+                None => {
+                    // enabled with an empty queue means senders == 0
+                    let cc = g.chans[*ch].close_clock.clone();
+                    g.threads[tid].clock.join(&cc);
+                    ApplyResult::Disconnected
+                }
+            },
+            Op::ChanDropSender { ch } => {
+                let clk = g.threads[tid].clock.clone();
+                let c = &mut g.chans[*ch];
+                c.senders = c.senders.saturating_sub(1);
+                c.close_clock.join(&clk);
+                ApplyResult::Proceed
+            }
+            Op::ChanDropReceiver { ch } => {
+                g.chans[*ch].receiver_open = false;
+                ApplyResult::Proceed
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn apply_atomic(
+        g: &mut SchedInner,
+        tid: usize,
+        var: usize,
+        site: &'static str,
+        kind: AtomicKind,
+        acquire: bool,
+        release: bool,
+    ) {
+        if acquire && matches!(kind, AtomicKind::Load | AtomicKind::Rmw) {
+            let rc = g.vars.get(&var).map(|m| m.release_clock.clone()).unwrap_or_default();
+            g.threads[tid].clock.join(&rc);
+        }
+        let my_clock = g.threads[tid].clock.clone();
+        let stamp = my_clock.get(tid);
+        let prior = g.vars.get(&var).and_then(|m| m.last_write.clone());
+        if let Some(w) = prior {
+            if w.tid != tid && my_clock.get(w.tid) < w.stamp {
+                let benign = w.rmw && kind == AtomicKind::Rmw;
+                if !benign {
+                    let access = match kind {
+                        AtomicKind::Load => "load",
+                        AtomicKind::Store => "store",
+                        AtomicKind::Rmw => "rmw",
+                    };
+                    let writer = g.threads[w.tid].name.clone();
+                    let f = Finding {
+                        kind: FindingKind::Race,
+                        detail: format!(
+                            "{access} at `{site}` is unordered against the write at `{}` by \
+                             `{writer}` (no happens-before edge; schedule-dependent value)",
+                            w.site
+                        ),
+                    };
+                    if !g.findings.contains(&f) {
+                        g.findings.push(f);
+                    }
+                }
+            }
+        }
+        let meta = g.vars.entry(var).or_default();
+        match kind {
+            AtomicKind::Load => {}
+            AtomicKind::Store => {
+                if release {
+                    meta.release_clock = my_clock;
+                } else {
+                    // a relaxed store breaks the release sequence: a later
+                    // acquire load must not inherit stale ordering
+                    meta.release_clock = VClock::default();
+                }
+                meta.last_write = Some(WriteRec { tid, stamp, rmw: false, site });
+            }
+            AtomicKind::Rmw => {
+                if release {
+                    meta.release_clock.join(&my_clock);
+                }
+                // relaxed RMWs leave the release sequence intact
+                meta.last_write = Some(WriteRec { tid, stamp, rmw: true, site });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// thread-local registration (consumed by crate::runtime::sync)
+
+thread_local! {
+    static ACTIVE: std::cell::RefCell<Option<Handle>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+/// This thread's registration with an active checker, if any. The shim
+/// layer consults this on every operation; `None` means pass-through.
+#[derive(Clone)]
+pub(crate) struct Handle {
+    pub(crate) ck: Arc<Checker>,
+    pub(crate) tid: usize,
+}
+
+pub(crate) fn active() -> Option<Handle> {
+    ACTIVE.with(|a| a.borrow().clone())
+}
+
+fn set_active(h: Option<Handle>) {
+    ACTIVE.with(|a| *a.borrow_mut() = h);
+}
+
+/// RAII registration for a spawned worker thread: announces `Begin` on
+/// entry, announces thread death on drop (including during unwinds).
+pub(crate) struct ThreadGuard {
+    h: Handle,
+}
+
+impl ThreadGuard {
+    pub(crate) fn enter(ck: Arc<Checker>, tid: usize) -> ThreadGuard {
+        set_active(Some(Handle { ck: ck.clone(), tid }));
+        ck.yield_op(tid, Op::Begin);
+        ThreadGuard { h: Handle { ck, tid } }
+    }
+}
+
+impl Drop for ThreadGuard {
+    fn drop(&mut self) {
+        self.h.ck.thread_exit(self.h.tid);
+        set_active(None);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// one controlled execution
+
+struct ExecRun {
+    log: Vec<ChoicePoint>,
+    findings: Vec<Finding>,
+    outcome: Option<Outcome>,
+    panic_msg: Option<String>,
+    schedule_fp: u64,
+}
+
+fn panic_payload(e: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+fn run_once(policy: Policy, step_limit: usize, f: &dyn Fn() -> Outcome) -> ExecRun {
+    let ck = Checker::fresh(policy, step_limit);
+    set_active(Some(Handle { ck: ck.clone(), tid: 0 }));
+    let res = panic::catch_unwind(AssertUnwindSafe(f));
+    set_active(None);
+    ck.thread_exit(0);
+    let g = ck.lock();
+    let mut h = Fnv::new();
+    for cp in &g.log {
+        h.write_u64(cp.chosen as u64);
+    }
+    ExecRun {
+        log: g.log.clone(),
+        findings: g.findings.clone(),
+        panic_msg: res.as_ref().err().map(|e| panic_payload(e.as_ref())),
+        outcome: res.ok(),
+        schedule_fp: h.finish(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the explorer
+
+/// Exploration budget and identity for one scenario.
+#[derive(Clone, Debug)]
+pub struct ExploreSpec {
+    pub name: &'static str,
+    /// Executions spent on bounded-preemption DFS from replayed prefixes.
+    pub dfs_budget: usize,
+    /// Executions spent on seed-recorded uniformly random schedules.
+    pub random_budget: usize,
+    /// Preemption bound for DFS child prefixes (the classic small-bound
+    /// heuristic: most protocol bugs need very few forced switches).
+    pub max_preemptions: usize,
+    pub seed: u64,
+    /// Poison an execution past this many scheduler choice points.
+    pub step_limit: usize,
+    /// Minimum distinct schedule fingerprints the exploration must reach.
+    pub min_distinct: usize,
+}
+
+/// Aggregated result of exploring one scenario.
+#[derive(Clone, Debug)]
+pub struct ScenarioReport {
+    pub name: String,
+    pub executions: usize,
+    pub distinct: usize,
+    pub dfs_executions: usize,
+    pub random_executions: usize,
+    pub max_steps: usize,
+    /// Distinct outcome labels with fingerprints (length 1 iff invariant).
+    pub outcomes: Vec<String>,
+    pub findings: Vec<Finding>,
+    pub schedule_invariant: bool,
+    pub pass: bool,
+}
+
+impl ScenarioReport {
+    pub fn summary_line(&self) -> String {
+        format!(
+            "{}: {} — {} executions ({} dfs, {} random), {} distinct schedules, \
+             {} finding(s), outcome {}",
+            self.name,
+            if self.pass { "PASS" } else { "FAIL" },
+            self.executions,
+            self.dfs_executions,
+            self.random_executions,
+            self.distinct,
+            self.findings.len(),
+            if self.schedule_invariant { "invariant" } else { "SCHEDULE-DEPENDENT" },
+        )
+    }
+}
+
+struct Collect {
+    executions: usize,
+    seen: HashSet<u64>,
+    findings: Vec<Finding>,
+    outcomes: HashMap<u64, String>,
+    max_steps: usize,
+}
+
+impl Collect {
+    fn add(&mut self, run: &ExecRun) {
+        self.executions += 1;
+        self.seen.insert(run.schedule_fp);
+        self.max_steps = self.max_steps.max(run.log.len());
+        for f in &run.findings {
+            if !self.findings.contains(f) {
+                self.findings.push(f.clone());
+            }
+        }
+        if let Some(o) = &run.outcome {
+            self.outcomes.entry(o.fingerprint).or_insert_with(|| o.label.clone());
+        }
+        if let Some(msg) = &run.panic_msg {
+            if !msg.contains("proxlead-check") {
+                let f = Finding {
+                    kind: FindingKind::Panic,
+                    detail: format!("scenario panicked: {msg}"),
+                };
+                if !self.findings.contains(&f) {
+                    self.findings.push(f);
+                }
+            }
+        }
+    }
+}
+
+/// Explore `f` under `spec`: DFS over bounded-preemption prefix
+/// alternatives first, then random schedules (topped up until
+/// `min_distinct` or the attempt cap). `f` runs once per execution on this
+/// thread with its spawned workers routed through the active checker.
+pub fn explore(spec: &ExploreSpec, f: impl Fn() -> Outcome) -> ScenarioReport {
+    let f: &dyn Fn() -> Outcome = &f;
+    let mut c = Collect {
+        executions: 0,
+        seen: HashSet::new(),
+        findings: Vec::new(),
+        outcomes: HashMap::new(),
+        max_steps: 0,
+    };
+
+    // phase 1: bounded-preemption DFS from replayed prefixes
+    let mut stack: Vec<Vec<usize>> = vec![Vec::new()];
+    let mut dfs_executions = 0;
+    while let Some(prefix) = stack.pop() {
+        if dfs_executions >= spec.dfs_budget {
+            break;
+        }
+        let run = run_once(Policy::Replay(prefix.clone()), spec.step_limit, f);
+        dfs_executions += 1;
+        for (s, cp) in run.log.iter().enumerate().skip(prefix.len()) {
+            if cp.enabled.len() < 2 {
+                continue;
+            }
+            for &alt in &cp.enabled {
+                if alt == cp.chosen {
+                    continue;
+                }
+                let delta = match cp.running_before {
+                    Some(rb) if cp.enabled.contains(&rb) && alt != rb => 1,
+                    _ => 0,
+                };
+                if cp.preempts_before + delta > spec.max_preemptions {
+                    continue;
+                }
+                let mut child: Vec<usize> = run.log[..s].iter().map(|p| p.chosen).collect();
+                child.push(alt);
+                stack.push(child);
+            }
+        }
+        c.add(&run);
+    }
+
+    // phase 2: seed-recorded random schedules, topped up to min_distinct
+    let mut random_executions = 0;
+    let cap = spec.random_budget + 3 * spec.min_distinct;
+    while random_executions < spec.random_budget
+        || (c.seen.len() < spec.min_distinct && random_executions < cap)
+    {
+        let seed = spec.seed.wrapping_add(random_executions as u64);
+        let run = run_once(Policy::Random(Rng::new(seed)), spec.step_limit, f);
+        random_executions += 1;
+        c.add(&run);
+    }
+
+    let mut findings = c.findings;
+    let schedule_invariant = c.outcomes.len() <= 1;
+    if !schedule_invariant {
+        let mut labels: Vec<String> = c
+            .outcomes
+            .iter()
+            .map(|(fp, label)| format!("{label}#{fp:016x}"))
+            .collect();
+        labels.sort();
+        findings.push(Finding {
+            kind: FindingKind::Invariance,
+            detail: format!("outcome differs across schedules: {}", labels.join(" vs ")),
+        });
+    }
+    if c.seen.len() < spec.min_distinct {
+        findings.push(Finding {
+            kind: FindingKind::Coverage,
+            detail: format!(
+                "only {} distinct schedules explored (need {})",
+                c.seen.len(),
+                spec.min_distinct
+            ),
+        });
+    }
+    findings.sort();
+    let mut outcomes: Vec<String> = c
+        .outcomes
+        .iter()
+        .map(|(fp, label)| format!("{label}#{fp:016x}"))
+        .collect();
+    outcomes.sort();
+    let pass = findings.is_empty();
+    ScenarioReport {
+        name: spec.name.to_string(),
+        executions: c.executions,
+        distinct: c.seen.len(),
+        dfs_executions,
+        random_executions,
+        max_steps: c.max_steps,
+        outcomes,
+        findings,
+        schedule_invariant,
+        pass,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON report
+
+/// Render the `proxlead-check-v1` report consumed by CI and validated by
+/// `scripts/test_check_report.py`.
+pub fn report_json(reports: &[ScenarioReport]) -> Json {
+    let scenarios: Vec<Json> = reports
+        .iter()
+        .map(|r| {
+            let findings: Vec<Json> = r
+                .findings
+                .iter()
+                .map(|f| {
+                    Json::obj(vec![
+                        ("kind", f.kind.name().into()),
+                        ("detail", f.detail.as_str().into()),
+                    ])
+                })
+                .collect();
+            Json::obj(vec![
+                ("name", r.name.as_str().into()),
+                ("pass", r.pass.into()),
+                ("executions", r.executions.into()),
+                ("distinct_schedules", r.distinct.into()),
+                ("dfs_executions", r.dfs_executions.into()),
+                ("random_executions", r.random_executions.into()),
+                ("max_steps", r.max_steps.into()),
+                ("schedule_invariant", r.schedule_invariant.into()),
+                ("outcomes", Json::Arr(r.outcomes.iter().map(|o| o.as_str().into()).collect())),
+                ("findings", Json::Arr(findings)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("schema", "proxlead-check-v1".into()),
+        ("pass", reports.iter().all(|r| r.pass).into()),
+        ("scenarios", Json::Arr(scenarios)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::sync;
+    use std::sync::atomic::Ordering;
+
+    fn spec(name: &'static str) -> ExploreSpec {
+        ExploreSpec {
+            name,
+            dfs_budget: 40,
+            random_budget: 40,
+            max_preemptions: 2,
+            seed: 7,
+            step_limit: 10_000,
+            min_distinct: 2,
+        }
+    }
+
+    #[test]
+    fn relaxed_store_load_without_barrier_is_a_race_and_schedule_dependent() {
+        let report = explore(&spec("unit-racy-flag"), || {
+            let flag = sync::AtomicUsize::new(0, "unit.flag");
+            let mut v = 0;
+            std::thread::scope(|s| {
+                sync::spawn_scoped(s, "writer", || {
+                    flag.store(1, Ordering::Relaxed);
+                });
+                v = flag.load(Ordering::Relaxed);
+                sync::pre_join();
+            });
+            Outcome { fingerprint: v as u64, label: format!("v={v}") }
+        });
+        assert!(
+            report.findings.iter().any(|f| f.kind == FindingKind::Race),
+            "expected a race finding: {:?}",
+            report.findings
+        );
+        assert!(!report.schedule_invariant, "v must depend on the schedule");
+        assert!(!report.pass);
+    }
+
+    #[test]
+    fn barrier_separated_relaxed_pair_is_clean_and_invariant() {
+        let report = explore(&spec("unit-barrier-hb"), || {
+            let flag = sync::AtomicUsize::new(0, "unit.flag");
+            let bar = sync::Barrier::new(2, "unit.bar");
+            let mut v = 0;
+            std::thread::scope(|s| {
+                sync::spawn_scoped(s, "writer", || {
+                    flag.store(1, Ordering::Relaxed);
+                    bar.wait();
+                });
+                bar.wait();
+                v = flag.load(Ordering::Relaxed);
+                sync::pre_join();
+            });
+            Outcome { fingerprint: v as u64, label: format!("v={v}") }
+        });
+        assert!(report.pass, "barrier-ordered relaxed pair must be clean: {:?}", report.findings);
+        assert_eq!(report.outcomes.len(), 1);
+        assert!(report.distinct >= 2, "only {} distinct schedules", report.distinct);
+    }
+
+    #[test]
+    fn rmw_rmw_contention_is_exempt_and_deterministic() {
+        let report = explore(&spec("unit-rmw-claim"), || {
+            let next = sync::AtomicUsize::new(0, "unit.next");
+            let bar = sync::Barrier::new(2, "unit.bar");
+            std::thread::scope(|s| {
+                sync::spawn_scoped(s, "claimer", || {
+                    while next.fetch_add(1, Ordering::Relaxed) < 4 {}
+                    bar.wait();
+                });
+                while next.fetch_add(1, Ordering::Relaxed) < 4 {}
+                bar.wait();
+                sync::pre_join();
+            });
+            let total = next.load(Ordering::Relaxed);
+            Outcome { fingerprint: total as u64, label: format!("total={total}") }
+        });
+        assert!(
+            !report.findings.iter().any(|f| f.kind == FindingKind::Race),
+            "rmw-vs-rmw claims must not be flagged: {:?}",
+            report.findings
+        );
+        assert!(report.schedule_invariant, "claim totals are schedule-invariant");
+    }
+
+    #[test]
+    fn barrier_arity_mismatch_deadlocks() {
+        let report = explore(&spec("unit-arity-deadlock"), || {
+            let bar = sync::Barrier::new(3, "unit.bar3");
+            std::thread::scope(|s| {
+                sync::spawn_scoped(s, "worker", || {
+                    bar.wait();
+                });
+                bar.wait();
+                sync::pre_join();
+            });
+            Outcome { fingerprint: 0, label: "unreachable".to_string() }
+        });
+        assert!(
+            report.findings.iter().any(|f| f.kind == FindingKind::Deadlock),
+            "2 arrivals at an arity-3 barrier must deadlock: {:?}",
+            report.findings
+        );
+        assert!(!report.pass);
+    }
+
+    #[test]
+    fn blocked_recv_with_live_sender_deadlocks() {
+        let report = explore(&spec("unit-recv-deadlock"), || {
+            let (tx, rx) = sync::channel::<u8>("unit.ch");
+            std::thread::scope(|s| {
+                sync::spawn_scoped(s, "idle", || {});
+                // tx is alive on this thread, so recv can never be enabled
+                let _ = rx.recv();
+                drop(tx);
+                sync::pre_join();
+            });
+            Outcome { fingerprint: 0, label: "unreachable".to_string() }
+        });
+        assert!(
+            report.findings.iter().any(|f| f.kind == FindingKind::Deadlock),
+            "recv with a live local sender must deadlock: {:?}",
+            report.findings
+        );
+    }
+
+    #[test]
+    fn channel_disconnect_after_drain_is_clean() {
+        let report = explore(&spec("unit-chan-drain"), || {
+            let (tx, rx) = sync::channel::<u64>("unit.ch");
+            let mut got = Vec::new();
+            std::thread::scope(|s| {
+                sync::spawn_scoped(s, "sender", move || {
+                    let _ = tx.send(10);
+                    let _ = tx.send(20);
+                });
+                while let Ok(v) = rx.recv() {
+                    got.push(v);
+                }
+                sync::pre_join();
+            });
+            let mut h = Fnv::new();
+            for v in &got {
+                h.write_u64(*v);
+            }
+            Outcome { fingerprint: h.finish(), label: format!("got={got:?}") }
+        });
+        assert!(report.pass, "drain-then-disconnect must be clean: {:?}", report.findings);
+        assert_eq!(report.outcomes.len(), 1, "fifo order is schedule-invariant");
+    }
+
+    #[test]
+    fn release_acquire_pair_is_not_a_race_but_value_still_schedule_dependent() {
+        let report = explore(&spec("unit-acq-rel"), || {
+            let flag = sync::AtomicUsize::new(0, "unit.flag");
+            let mut v = 0;
+            std::thread::scope(|s| {
+                sync::spawn_scoped(s, "writer", || {
+                    flag.store(1, Ordering::Release);
+                });
+                v = flag.load(Ordering::Acquire);
+                sync::pre_join();
+            });
+            Outcome { fingerprint: v as u64, label: format!("v={v}") }
+        });
+        assert!(
+            !report.findings.iter().any(|f| f.kind == FindingKind::Race),
+            "release/acquire pair is ordered when it hits: {:?}",
+            report.findings
+        );
+        assert!(
+            report.findings.iter().any(|f| f.kind == FindingKind::Invariance),
+            "unsynchronized timing still makes the value schedule-dependent"
+        );
+    }
+
+    #[test]
+    fn coverage_shortfall_is_reported() {
+        let mut s = spec("unit-coverage");
+        s.dfs_budget = 2;
+        s.random_budget = 1;
+        s.min_distinct = 50;
+        let report = explore(&s, || Outcome { fingerprint: 1, label: "one".to_string() });
+        assert!(report.findings.iter().any(|f| f.kind == FindingKind::Coverage));
+        assert!(!report.pass);
+    }
+
+    #[test]
+    fn report_json_round_trips() {
+        let report = explore(&spec("unit-json"), || Outcome {
+            fingerprint: 7,
+            label: "seven".to_string(),
+        });
+        let rendered = report_json(&[report]).to_string();
+        let parsed = Json::parse(&rendered).expect("check report must re-parse");
+        assert_eq!(
+            parsed.get("schema").and_then(|s| s.as_str()),
+            Some("proxlead-check-v1")
+        );
+        let scen = parsed.get("scenarios").and_then(|s| s.as_arr()).expect("scenarios array");
+        assert_eq!(scen.len(), 1);
+        assert_eq!(scen[0].get("name").and_then(|s| s.as_str()), Some("unit-json"));
+    }
+
+    #[test]
+    fn dfs_replay_is_deterministic() {
+        let run = || {
+            explore(&spec("unit-replay"), || {
+                let flag = sync::AtomicUsize::new(0, "unit.flag");
+                let bar = sync::Barrier::new(2, "unit.bar");
+                std::thread::scope(|s| {
+                    sync::spawn_scoped(s, "w", || {
+                        flag.fetch_add(3, Ordering::Relaxed);
+                        bar.wait();
+                    });
+                    flag.fetch_add(4, Ordering::Relaxed);
+                    bar.wait();
+                    sync::pre_join();
+                });
+                let v = flag.load(Ordering::Relaxed);
+                Outcome { fingerprint: v as u64, label: format!("v={v}") }
+            })
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.distinct, b.distinct, "exploration must be reproducible");
+        assert_eq!(a.outcomes, b.outcomes);
+        assert_eq!(a.findings, b.findings);
+    }
+}

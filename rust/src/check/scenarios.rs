@@ -1,0 +1,276 @@
+//! Named model-checking scenarios over the real sim/coordinator protocols.
+//!
+//! Each scenario builds one tiny [`Experiment`] up front (data generation
+//! and the FISTA reference are warmed *outside* [`explore`], so executions
+//! spend their scheduler steps on the protocol under test, not on setup),
+//! then runs a full backend under the controlled scheduler once per
+//! explored schedule. The outcome fingerprint hashes exactly what the
+//! repo's determinism contract pins — final-iterate bits, the counted
+//! history columns, and the stop label — and deliberately excludes the
+//! wall-clock fields, which legitimately vary per schedule.
+//!
+//! Expected outcomes are *pinned*, not just invariant: a scenario that
+//! lands on a stable-but-wrong stop reason under every schedule fails with
+//! a divergence finding rather than passing the invariance check.
+
+use crate::check::{explore, ExploreSpec, Finding, FindingKind, Fnv, Outcome, ScenarioReport};
+use crate::config::Config;
+use crate::coordinator::{self, FrameTamper, TamperKind};
+use crate::exp::{registry, Experiment};
+use crate::runner::{RunResult, StopReason};
+use crate::sim;
+
+/// Scenario names, in the order `--bin check` runs them.
+pub const NAMES: &[&str] = &[
+    "sim-ring-phases",
+    "sim-tamper-teardown",
+    "coord-fault-teardown",
+    "coord-bits-budget-stop",
+];
+
+/// Exploration depth: [`Budget::Full`] is the CI hard gate (≥ 1000
+/// distinct schedules per scenario); [`Budget::Quick`] keeps the
+/// `cargo test` scenario suite fast.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Budget {
+    Quick,
+    Full,
+}
+
+impl Budget {
+    /// Distinct-schedule floor enforced per scenario (a shortfall is a
+    /// coverage finding, failing the run).
+    pub fn min_distinct(self) -> usize {
+        match self {
+            Budget::Quick => 16,
+            Budget::Full => 1000,
+        }
+    }
+}
+
+fn spec(name: &'static str, budget: Budget) -> ExploreSpec {
+    let (dfs_budget, random_budget) = match budget {
+        Budget::Quick => (12, 24),
+        Budget::Full => (300, 1100),
+    };
+    ExploreSpec {
+        name,
+        dfs_budget,
+        random_budget,
+        max_preemptions: 2,
+        seed: 0x70726f78_6c656164, // "proxlead"
+        step_limit: 50_000,
+        min_distinct: budget.min_distinct(),
+    }
+}
+
+/// Tiny ring experiment shared by every scenario: generated logistic
+/// regression, dense 64-bit codec (decode errors come from tamper hooks,
+/// never from quantization), one metric row per round.
+fn ring_exp(nodes: usize, rounds: usize) -> Experiment {
+    let text = format!(
+        "algorithm = prox-lead\n\
+         topology = ring\n\
+         nodes = {nodes}\n\
+         samples_per_node = 6\n\
+         dim = 2\n\
+         classes = 2\n\
+         batches = 2\n\
+         seed = 11\n\
+         lambda1 = 0.005\n\
+         lambda2 = 0.1\n\
+         bits = 64\n\
+         rounds = {rounds}\n\
+         record_every = 1\n"
+    );
+    let cfg = Config::parse(&text).expect("scenario config parses");
+    Experiment::from_config(&cfg).expect("scenario experiment resolves")
+}
+
+/// Fingerprint of everything the determinism contract pins, and nothing
+/// it doesn't: `wall_ns`/`elapsed` stay out.
+fn outcome_of(res: &RunResult) -> Outcome {
+    let mut h = Fnv::new();
+    h.write_u64(res.final_x.rows as u64);
+    h.write_u64(res.final_x.cols as u64);
+    for v in &res.final_x.data {
+        h.write_u64(v.to_bits());
+    }
+    for m in &res.history {
+        h.write_u64(m.round as u64);
+        h.write_u64(m.grad_evals);
+        h.write_u64(m.bits);
+        h.write_u64(m.wire_bytes);
+        h.write_u64(m.suboptimality.to_bits());
+        h.write_u64(m.consensus.to_bits());
+    }
+    let label = match &res.stopped_by {
+        StopReason::WireFault(f) => format!("wire-fault@r{}n{}", f.round, f.node),
+        other => other.name().to_string(),
+    };
+    h.write_bytes(label.as_bytes());
+    Outcome { fingerprint: h.finish(), label }
+}
+
+/// Pin the semantic outcome over and above schedule invariance.
+fn expect_outcome(mut r: ScenarioReport, want: &str) -> ScenarioReport {
+    let ok = !r.outcomes.is_empty()
+        && r.outcomes.iter().all(|o| o.split('#').next() == Some(want));
+    if !ok {
+        r.findings.push(Finding {
+            kind: FindingKind::Divergence,
+            detail: format!("expected outcome '{want}', observed [{}]", r.outcomes.join(", ")),
+        });
+        r.pass = false;
+    }
+    r
+}
+
+/// The sim's phase A/B chunk-claim protocol on a clean ring: 4 nodes,
+/// 3 participants (so claiming genuinely interleaves), 2 rounds to the
+/// natural end. Exercises every Relaxed site in `sim::run_with_workers`.
+fn sim_ring_phases(budget: Budget) -> ScenarioReport {
+    let exp = ring_exp(4, 2);
+    let wire = exp.coord_config();
+    let run = exp.run_spec();
+    let x_star = exp.reference();
+    let r = explore(&spec("sim-ring-phases", budget), || {
+        let res = sim::run_with_workers(
+            &exp.mixing,
+            &exp.x0,
+            &exp.config.algorithm,
+            &wire,
+            &run,
+            &x_star,
+            &mut [],
+            |i, row| registry::build_node_algorithm(&exp, &wire, i, row),
+            3,
+        );
+        outcome_of(&res)
+    });
+    expect_outcome(r, "max-rounds")
+}
+
+/// A corrupt frame raised mid-run: whichever participant claims node 2's
+/// shard in round 1 records the fault and raises `fault_flag`; the run
+/// must stop at the same truncated history under every schedule. The sim
+/// reports the *sender's* id.
+fn sim_tamper_teardown(budget: Budget) -> ScenarioReport {
+    let exp = ring_exp(4, 2);
+    let wire = exp
+        .coord_config()
+        .tamper(FrameTamper { node: 2, round: 1, kind: TamperKind::TrailingGarbage });
+    let run = exp.run_spec();
+    let x_star = exp.reference();
+    let r = explore(&spec("sim-tamper-teardown", budget), || {
+        let res = sim::run_with_workers(
+            &exp.mixing,
+            &exp.x0,
+            &exp.config.algorithm,
+            &wire,
+            &run,
+            &x_star,
+            &mut [],
+            |i, row| registry::build_node_algorithm(&exp, &wire, i, row),
+            3,
+        );
+        outcome_of(&res)
+    });
+    expect_outcome(r, "wire-fault@r1n2")
+}
+
+/// The coordinator's ABORT teardown: node 1 corrupts its round-1
+/// broadcast in a 3-ring. Node 1 floods ascending by neighbor id, so
+/// node 0 always dequeues the corrupt frame before any ABORT can reach it
+/// (mpsc FIFO + program order) and always reports; min-(round, node)
+/// resolution must land on the *detector* (round 1, node 0) under every
+/// schedule, whether or not node 2 also detects.
+fn coord_fault_teardown(budget: Budget) -> ScenarioReport {
+    let exp = ring_exp(3, 2);
+    let wire = exp
+        .coord_config()
+        .tamper(FrameTamper { node: 1, round: 1, kind: TamperKind::UnknownTag });
+    let run = exp.run_spec();
+    let x_star = exp.reference();
+    let r = explore(&spec("coord-fault-teardown", budget), || {
+        let res = coordinator::run(
+            &exp.mixing,
+            &exp.x0,
+            &exp.config.algorithm,
+            &wire,
+            &run,
+            &x_star,
+            &mut [],
+            |i, row| registry::build_node_algorithm(&exp, &wire, i, row),
+        );
+        outcome_of(&res)
+    });
+    expect_outcome(r, "wire-fault@r1n0")
+}
+
+/// The gated control path: a 1-bit budget trips at the round-1 flush, the
+/// leader's checkpoint verdict turns `false`, and every node must stop
+/// after step 1 — same truncated history under every schedule.
+fn coord_bits_budget_stop(budget: Budget) -> ScenarioReport {
+    let exp = ring_exp(3, 3);
+    let wire = exp.coord_config();
+    let run = exp.run_spec().bits_budget(1);
+    let x_star = exp.reference();
+    let r = explore(&spec("coord-bits-budget-stop", budget), || {
+        let res = coordinator::run(
+            &exp.mixing,
+            &exp.x0,
+            &exp.config.algorithm,
+            &wire,
+            &run,
+            &x_star,
+            &mut [],
+            |i, row| registry::build_node_algorithm(&exp, &wire, i, row),
+        );
+        outcome_of(&res)
+    });
+    expect_outcome(r, "bits-budget")
+}
+
+fn lookup(name: &str) -> Option<fn(Budget) -> ScenarioReport> {
+    match name {
+        "sim-ring-phases" => Some(sim_ring_phases),
+        "sim-tamper-teardown" => Some(sim_tamper_teardown),
+        "coord-fault-teardown" => Some(coord_fault_teardown),
+        "coord-bits-budget-stop" => Some(coord_bits_budget_stop),
+        _ => None,
+    }
+}
+
+/// Run one scenario by name (`None` for an unknown name).
+pub fn run_by_name(name: &str, budget: Budget) -> Option<ScenarioReport> {
+    lookup(name).map(|f| f(budget))
+}
+
+/// Run every named scenario in [`NAMES`] order.
+pub fn run_all(budget: Budget) -> Vec<ScenarioReport> {
+    NAMES
+        .iter()
+        .map(|n| run_by_name(n, budget).expect("NAMES entries are exhaustively matched"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_listed_name_resolves_and_unknown_names_do_not() {
+        for n in NAMES {
+            // resolution only — running is rust/tests/check_scenarios.rs
+            assert!(lookup(n).is_some(), "unmatched scenario name {n}");
+        }
+        assert!(run_by_name("no-such-scenario", Budget::Quick).is_none());
+    }
+
+    #[test]
+    fn budget_floors_match_the_acceptance_bar() {
+        assert_eq!(Budget::Full.min_distinct(), 1000);
+        assert!(Budget::Quick.min_distinct() >= 8);
+    }
+}

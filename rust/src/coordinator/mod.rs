@@ -39,6 +39,11 @@
 //! with [`StopReason::WireFault`] — the history holds every snapshot
 //! completed before the fault (or a synthesized round-0 state when the
 //! fault hit before the first one).
+//!
+//! All channels and thread spawns go through the [`crate::runtime::sync`]
+//! shim layer, so `proxlead-check` (see [`crate::check`] and DESIGN.md
+//! §6b) can replay the teardown protocol under controlled schedules; in
+//! production the shims are transparent `mpsc`/`thread` wrappers.
 
 pub mod algorithms;
 pub mod node;
@@ -58,7 +63,7 @@ use crate::oracle::OracleKind;
 use crate::problem::Problem;
 use crate::prox::Prox;
 use crate::runner::{Backend, MetricPoint, Probe, RunResult, RunSpec, StopReason};
-use std::sync::mpsc;
+use crate::runtime::sync;
 use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
@@ -253,23 +258,23 @@ pub fn run(
     let mut txs = Vec::with_capacity(n);
     let mut rxs = Vec::with_capacity(n);
     for _ in 0..n {
-        let (tx, rx) = mpsc::channel::<Arc<[u8]>>();
+        let (tx, rx) = sync::channel::<Arc<[u8]>>("coord.inbox");
         txs.push(tx);
         rxs.push(rx);
     }
     // leader → node control channels (only wired when gating is on)
     let mut ctrl_txs = Vec::with_capacity(n);
-    let mut ctrl_rxs: Vec<Option<mpsc::Receiver<bool>>> = Vec::with_capacity(n);
+    let mut ctrl_rxs: Vec<Option<sync::Receiver<bool>>> = Vec::with_capacity(n);
     for _ in 0..n {
         if gated {
-            let (tx, rx) = mpsc::channel::<bool>();
+            let (tx, rx) = sync::channel::<bool>("coord.ctrl");
             ctrl_txs.push(tx);
             ctrl_rxs.push(Some(rx));
         } else {
             ctrl_rxs.push(None);
         }
     }
-    let (report_tx, report_rx) = mpsc::channel::<NodeEvent>();
+    let (report_tx, report_rx) = sync::channel::<NodeEvent>("coord.reports");
     let build = &build;
 
     let (history, final_x, stopped_by, faults) = thread::scope(|scope| {
@@ -277,7 +282,7 @@ pub fn run(
         for (i, (rx, ctrl)) in rxs.into_iter().zip(ctrl_rxs).enumerate() {
             let row = WeightRow::from_op(w, i);
             // per-edge senders, aligned with the gossip row (ascending j)
-            let neighbors: Vec<(usize, mpsc::Sender<Arc<[u8]>>)> =
+            let neighbors: Vec<(usize, sync::Sender<Arc<[u8]>>)> =
                 row.neighbors.iter().map(|&(j, _)| (j, txs[j].clone())).collect();
             let node_cfg = NodeConfig {
                 id: i,
@@ -290,12 +295,9 @@ pub fn run(
                 record_every: spec.record_every,
                 dim: x0.cols,
             };
-            handles.push(
-                thread::Builder::new()
-                    .name(format!("node-{i}"))
-                    .spawn_scoped(scope, move || node::run_node(build(i, row), node_cfg))
-                    .expect("spawn node thread"),
-            );
+            handles.push(sync::spawn_scoped(scope, &format!("node-{i}"), move || {
+                node::run_node(build(i, row), node_cfg)
+            }));
         }
         drop(report_tx);
         drop(txs);
@@ -389,6 +391,9 @@ pub fn run(
                 final_x = Some(x);
             }
         }
+        // under proxlead-check: wait for every node thread to exit so the
+        // joins below never block the schedule token
+        sync::pre_join();
         for h in handles {
             h.join().expect("node thread panicked");
         }

@@ -68,8 +68,8 @@ use super::wire::{self, Frame, FrameRef, WireCodec, WireError, WireFault, ABORT_
 use super::{CoordConfig, NodeEvent, NodeReport, TamperKind};
 use crate::graph::MixingOp;
 use crate::linalg::{vaxpy, Mat};
+use crate::runtime::sync::{Receiver, Sender};
 use crate::util::rng::Rng;
-use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 
 /// One node's half of a decentralized algorithm (see the module docs).

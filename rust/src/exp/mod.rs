@@ -342,6 +342,16 @@ fn validate_runtime_factories(cfg: &Config) -> Result<(), ConfigError> {
     cfg.oracle_kind()?;
     cfg.codec()?;
     registry::ensure_backend(&cfg.backend)?;
+    // the sim shares the coordinator's frame format, whose `from` field is
+    // a u16 — reject instead of silently truncating sender ids in
+    // WireFault reports (the arithmetic never routes on the id)
+    if cfg.backend == "sim" && cfg.nodes > u16::MAX as usize {
+        return Err(ConfigError(format!(
+            "backend = sim supports at most 65535 nodes (frame sender ids are u16 on the \
+             wire); got nodes = {}",
+            cfg.nodes
+        )));
+    }
     registry::ensure_algorithm(&cfg.algorithm)
 }
 

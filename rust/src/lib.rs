@@ -18,6 +18,7 @@
 #![allow(clippy::field_reassign_with_default)]
 
 pub mod algorithm;
+pub mod check;
 pub mod cli;
 pub mod compress;
 pub mod config;

@@ -243,6 +243,19 @@ pub const RULES: &[Rule] = &[
         exclude: &[],
         fns: None,
     },
+    Rule {
+        id: "atomic-ordering",
+        summary: "explicit atomic Ordering outside the runtime/sync shim layer: route the \
+                  access through crate::runtime::sync so proxlead-check can schedule it, and \
+                  justify the memory-order choice in a suppression",
+        patterns: &["Ordering::Relaxed", "Ordering::SeqCst"],
+        bare_index: false,
+        files: &[],
+        // the shim layer itself converts Ordering into checker acquire/
+        // release flags — it is the one place the tokens may appear bare
+        exclude: &["runtime/sync.rs"],
+        fns: None,
+    },
 ];
 
 /// All known rule ids, including the synthetic [`BAD_ALLOW`].

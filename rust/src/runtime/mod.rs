@@ -24,6 +24,7 @@
 //! wrapper's `Rc`s.
 
 pub mod manifest;
+pub mod sync;
 pub mod xla_problem;
 
 pub use manifest::{ArtifactMeta, Manifest};

@@ -1,0 +1,419 @@
+//! The synchronization shim layer — every atomic, barrier, channel, and
+//! thread spawn the sim backend and the coordinator use goes through this
+//! module (DESIGN.md §6b, enforced by the `atomic-ordering` lint rule).
+//!
+//! In production the wrappers are transparent: one thread-local lookup per
+//! operation (no allocation, no locking — the sim's zero-alloc round
+//! contract holds), then the underlying `std` primitive. When the calling
+//! thread is registered with an active [`crate::check`] scheduler — which
+//! only scenario code sets up — every operation first announces itself as
+//! a yield point, lets the scheduler pick the interleaving, and only then
+//! performs the real operation while still holding the schedule token.
+//! That serialization is what makes the model checker's happens-before
+//! bookkeeping exact: real effects occur in exactly the modeled order.
+//!
+//! Design note (deviation from a `cfg`-gated shim): dispatch is by
+//! thread-local registration at *runtime*, not compile-time `cfg`, so the
+//! scenario suite runs under a plain `cargo test` / `cargo run --bin
+//! check` with no custom `RUSTFLAGS` plumbing, and production binaries pay
+//! only the thread-local check. See DESIGN.md §6b.
+//!
+//! The `Ordering` parameters are live in both modes: production code
+//! states its real ordering (and the lint rule demands a justification
+//! comment at every `Relaxed`/`SeqCst` call site outside this module),
+//! while the checker uses the stated ordering to maintain release clocks,
+//! so an unjustified downgrade shows up as a race finding in scenarios.
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+use crate::check::{self, AtomicKind, Op, YieldOutcome};
+
+/// Does `ord` carry acquire semantics on a load/RMW?
+fn acquires(ord: Ordering) -> bool {
+    matches!(ord, Ordering::Acquire | Ordering::AcqRel | Ordering::SeqCst)
+}
+
+/// Does `ord` carry release semantics on a store/RMW?
+fn releases(ord: Ordering) -> bool {
+    matches!(ord, Ordering::Release | Ordering::AcqRel | Ordering::SeqCst)
+}
+
+fn hook_atomic(var: usize, site: &'static str, kind: AtomicKind, ord: Ordering) {
+    if let Some(h) = check::active() {
+        h.ck.yield_op(
+            h.tid,
+            Op::Atomic { var, site, kind, acquire: acquires(ord), release: releases(ord) },
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// atomics
+
+/// Shimmed [`std::sync::atomic::AtomicUsize`] with a site label for checker
+/// diagnostics and lint accounting.
+pub struct AtomicUsize {
+    inner: std::sync::atomic::AtomicUsize,
+    site: &'static str,
+}
+
+impl AtomicUsize {
+    pub fn new(v: usize, site: &'static str) -> AtomicUsize {
+        AtomicUsize { inner: std::sync::atomic::AtomicUsize::new(v), site }
+    }
+
+    fn var(&self) -> usize {
+        &self.inner as *const std::sync::atomic::AtomicUsize as usize
+    }
+
+    pub fn load(&self, ord: Ordering) -> usize {
+        hook_atomic(self.var(), self.site, AtomicKind::Load, ord);
+        self.inner.load(ord)
+    }
+
+    pub fn store(&self, v: usize, ord: Ordering) {
+        hook_atomic(self.var(), self.site, AtomicKind::Store, ord);
+        self.inner.store(v, ord);
+    }
+
+    pub fn fetch_add(&self, v: usize, ord: Ordering) -> usize {
+        hook_atomic(self.var(), self.site, AtomicKind::Rmw, ord);
+        self.inner.fetch_add(v, ord)
+    }
+}
+
+/// Shimmed [`std::sync::atomic::AtomicBool`]; `raise` is the idempotent
+/// monotone flag-set (an RMW, so concurrent raises are atomicity-only and
+/// not race-flagged by the checker).
+pub struct AtomicBool {
+    inner: std::sync::atomic::AtomicBool,
+    site: &'static str,
+}
+
+impl AtomicBool {
+    pub fn new(v: bool, site: &'static str) -> AtomicBool {
+        AtomicBool { inner: std::sync::atomic::AtomicBool::new(v), site }
+    }
+
+    fn var(&self) -> usize {
+        &self.inner as *const std::sync::atomic::AtomicBool as usize
+    }
+
+    pub fn load(&self, ord: Ordering) -> bool {
+        hook_atomic(self.var(), self.site, AtomicKind::Load, ord);
+        self.inner.load(ord)
+    }
+
+    pub fn store(&self, v: bool, ord: Ordering) {
+        hook_atomic(self.var(), self.site, AtomicKind::Store, ord);
+        self.inner.store(v, ord);
+    }
+
+    /// Set the flag to `true` via `fetch_or` — use for flags that several
+    /// threads may raise concurrently (idempotent; RMW-vs-RMW pairs are
+    /// exempt from the checker's race rule by design).
+    pub fn raise(&self, ord: Ordering) {
+        hook_atomic(self.var(), self.site, AtomicKind::Rmw, ord);
+        self.inner.fetch_or(true, ord);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// barrier
+
+enum BarrierInner {
+    Std(std::sync::Barrier),
+    Chk { ck: Arc<check::Checker>, id: usize },
+}
+
+/// Shimmed [`std::sync::Barrier`]. `wait` returns `()` — the leader flag
+/// is unused by every caller in this repo.
+pub struct Barrier {
+    inner: BarrierInner,
+}
+
+impl Barrier {
+    pub fn new(arity: usize, site: &'static str) -> Barrier {
+        match check::active() {
+            Some(h) => {
+                let id = h.ck.register_barrier(arity, site);
+                Barrier { inner: BarrierInner::Chk { ck: h.ck, id } }
+            }
+            None => Barrier { inner: BarrierInner::Std(std::sync::Barrier::new(arity)) },
+        }
+    }
+
+    pub fn wait(&self) {
+        match &self.inner {
+            BarrierInner::Std(b) => {
+                b.wait();
+            }
+            BarrierInner::Chk { ck, id } => {
+                let h = check::active()
+                    .expect("checked barrier reached from a thread the checker never registered");
+                assert!(
+                    Arc::ptr_eq(&h.ck, ck),
+                    "checked barrier crossed into a different checker's execution"
+                );
+                ck.yield_op(h.tid, Op::BarrierArrive { bar: *id });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// channels
+
+/// Error returned by [`Sender::send`] when the receiver is gone; carries
+/// the unsent value like [`std::sync::mpsc::SendError`].
+#[derive(Debug)]
+pub struct SendError<T>(pub T);
+
+impl<T> fmt::Display for SendError<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "sending on a closed channel")
+    }
+}
+
+/// Error returned by [`Receiver::recv`] once every sender is dropped and
+/// the queue is drained.
+#[derive(Debug, PartialEq, Eq)]
+pub struct RecvError;
+
+impl fmt::Display for RecvError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "receiving on a closed channel")
+    }
+}
+
+struct ChkCore<T> {
+    /// Typed FIFO in lockstep with the scheduler's clock queue: both are
+    /// only touched while holding the schedule token.
+    q: Mutex<VecDeque<T>>,
+    ck: Arc<check::Checker>,
+    id: usize,
+}
+
+struct ChkSender<T> {
+    core: Arc<ChkCore<T>>,
+}
+
+impl<T> Drop for ChkSender<T> {
+    fn drop(&mut self) {
+        // teardown is a visible event: a dropped sender may enable a
+        // peer's disconnect-recv, so it yields (poison-tolerantly)
+        match check::active() {
+            Some(h) if Arc::ptr_eq(&h.ck, &self.core.ck) => {
+                self.core.ck.yield_op_noexcept(h.tid, Op::ChanDropSender { ch: self.core.id });
+            }
+            _ => self.core.ck.detach_drop_sender(self.core.id),
+        }
+    }
+}
+
+struct ChkReceiver<T> {
+    core: Arc<ChkCore<T>>,
+}
+
+impl<T> Drop for ChkReceiver<T> {
+    fn drop(&mut self) {
+        match check::active() {
+            Some(h) if Arc::ptr_eq(&h.ck, &self.core.ck) => {
+                self.core.ck.yield_op_noexcept(h.tid, Op::ChanDropReceiver { ch: self.core.id });
+            }
+            _ => self.core.ck.detach_drop_receiver(self.core.id),
+        }
+    }
+}
+
+enum SenderInner<T> {
+    Std(mpsc::Sender<T>),
+    Chk(ChkSender<T>),
+}
+
+/// Shimmed [`std::sync::mpsc::Sender`].
+pub struct Sender<T>(SenderInner<T>);
+
+impl<T> Sender<T> {
+    pub fn send(&self, t: T) -> Result<(), SendError<T>> {
+        match &self.0 {
+            SenderInner::Std(tx) => tx.send(t).map_err(|e| SendError(e.0)),
+            SenderInner::Chk(s) => {
+                let h = check::active()
+                    .expect("checked sender used from a thread the checker never registered");
+                match s.core.ck.yield_op(h.tid, Op::ChanSend { ch: s.core.id }) {
+                    YieldOutcome::Closed => Err(SendError(t)),
+                    YieldOutcome::Proceed => {
+                        s.core.q.lock().unwrap_or_else(|e| e.into_inner()).push_back(t);
+                        Ok(())
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Sender<T> {
+        match &self.0 {
+            SenderInner::Std(tx) => Sender(SenderInner::Std(tx.clone())),
+            SenderInner::Chk(s) => {
+                s.core.ck.sender_cloned(s.core.id);
+                Sender(SenderInner::Chk(ChkSender { core: s.core.clone() }))
+            }
+        }
+    }
+}
+
+enum ReceiverInner<T> {
+    Std(mpsc::Receiver<T>),
+    Chk(ChkReceiver<T>),
+}
+
+/// Shimmed [`std::sync::mpsc::Receiver`] (blocking `recv` only — that is
+/// the complete coordinator surface).
+pub struct Receiver<T>(ReceiverInner<T>);
+
+impl<T> Receiver<T> {
+    pub fn recv(&self) -> Result<T, RecvError> {
+        match &self.0 {
+            ReceiverInner::Std(rx) => rx.recv().map_err(|_| RecvError),
+            ReceiverInner::Chk(r) => {
+                let h = check::active()
+                    .expect("checked receiver used from a thread the checker never registered");
+                match r.core.ck.yield_op(h.tid, Op::ChanRecv { ch: r.core.id }) {
+                    YieldOutcome::Closed => Err(RecvError),
+                    YieldOutcome::Proceed => Ok(r
+                        .core
+                        .q
+                        .lock()
+                        .unwrap_or_else(|e| e.into_inner())
+                        .pop_front()
+                        .expect("checker channel queue desynced from the schedule")),
+                }
+            }
+        }
+    }
+}
+
+/// Shimmed [`std::sync::mpsc::channel`]; `site` labels the channel in
+/// checker diagnostics. The mode (std vs checked) is fixed at creation by
+/// whether the creating thread is registered with an active checker.
+pub fn channel<T: Send>(site: &'static str) -> (Sender<T>, Receiver<T>) {
+    match check::active() {
+        Some(h) => {
+            let id = h.ck.register_channel(site);
+            let core =
+                Arc::new(ChkCore { q: Mutex::new(VecDeque::new()), ck: h.ck.clone(), id });
+            (
+                Sender(SenderInner::Chk(ChkSender { core: core.clone() })),
+                Receiver(ReceiverInner::Chk(ChkReceiver { core })),
+            )
+        }
+        None => {
+            let (tx, rx) = mpsc::channel();
+            (Sender(SenderInner::Std(tx)), Receiver(ReceiverInner::Std(rx)))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// threads
+
+/// Shimmed [`std::thread::Builder::spawn_scoped`] with a thread name. When
+/// the spawning thread is registered with a checker, the child is
+/// registered too and the pair performs a deterministic handshake: the
+/// parent's spawn op only becomes schedulable once the child has announced
+/// itself, so registration order never depends on OS timing.
+pub fn spawn_scoped<'scope, 'env, T, F>(
+    scope: &'scope thread::Scope<'scope, 'env>,
+    name: &str,
+    f: F,
+) -> thread::ScopedJoinHandle<'scope, T>
+where
+    F: FnOnce() -> T + Send + 'scope,
+    T: Send + 'scope,
+{
+    let builder = thread::Builder::new().name(name.to_string());
+    match check::active() {
+        Some(h) => {
+            let child = h.ck.register_child(h.tid, name);
+            let ck = h.ck.clone();
+            let handle = builder
+                .spawn_scoped(scope, move || {
+                    let _reg = check::ThreadGuard::enter(ck, child);
+                    f()
+                })
+                .expect("spawn checked worker thread");
+            h.ck.yield_op(h.tid, Op::SpawnWait { child });
+            handle
+        }
+        None => builder.spawn_scoped(scope, f).expect("spawn worker thread"),
+    }
+}
+
+/// The pre-join gate: call immediately before joining worker threads (or
+/// before a `thread::scope`'s implicit join). Under a checker this blocks
+/// the schedule until every other logical thread has exited, so the real
+/// join below can never block the token holder; in production it is free.
+pub fn pre_join() {
+    if let Some(h) = check::active() {
+        h.ck.yield_op(h.tid, Op::Join);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Production-path (no active checker) behavior of every wrapper.
+
+    #[test]
+    fn atomics_pass_through() {
+        let a = AtomicUsize::new(3, "t.a");
+        assert_eq!(a.fetch_add(4, Ordering::Relaxed), 3);
+        assert_eq!(a.load(Ordering::Acquire), 7);
+        a.store(1, Ordering::Release);
+        assert_eq!(a.load(Ordering::Relaxed), 1);
+        let b = AtomicBool::new(false, "t.b");
+        b.raise(Ordering::Relaxed);
+        assert!(b.load(Ordering::Relaxed));
+        b.store(false, Ordering::Relaxed);
+        assert!(!b.load(Ordering::Relaxed));
+    }
+
+    #[test]
+    fn channel_passes_through_and_reports_disconnects() {
+        let (tx, rx) = channel::<u32>("t.ch");
+        let tx2 = tx.clone();
+        tx.send(1).unwrap();
+        tx2.send(2).unwrap();
+        assert_eq!(rx.recv(), Ok(1));
+        assert_eq!(rx.recv(), Ok(2));
+        drop(tx);
+        drop(tx2);
+        assert_eq!(rx.recv(), Err(RecvError));
+        let (tx, rx) = channel::<u32>("t.ch2");
+        drop(rx);
+        assert!(tx.send(9).is_err());
+    }
+
+    #[test]
+    fn barrier_and_spawn_pass_through() {
+        let bar = Barrier::new(2, "t.bar");
+        let hits = AtomicUsize::new(0, "t.hits");
+        std::thread::scope(|s| {
+            spawn_scoped(s, "t-worker", || {
+                hits.fetch_add(1, Ordering::SeqCst);
+                bar.wait();
+            });
+            bar.wait();
+            pre_join();
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+}

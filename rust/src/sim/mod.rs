@@ -55,9 +55,19 @@
 //! the resulting [`WireFault`] carries the *sender's* id, the faulted
 //! round is discarded exactly like the coordinator's (history truncates at
 //! the last complete snapshot), and `stopped_by` reports the fault the
-//! same way. Node ids on the wire truncate to the frame format's u16
-//! `from` field above n = 65535 — frames never cross nodes here, so only
-//! that diagnostic field is affected, never routing or arithmetic.
+//! same way. Node ids ride the frame format's u16 `from` field, so the sim
+//! refuses n > 65535 outright: config-driven runs get a typed
+//! [`crate::exp::ConfigError`] at validation and [`run_with_workers`]
+//! asserts at entry — a truncated sender id must never reach a
+//! [`WireFault`] report.
+//!
+//! **Checked synchronization.** Every atomic, barrier, and spawn below
+//! goes through the [`crate::runtime::sync`] shim layer, so
+//! `proxlead-check` (see [`crate::check`] and DESIGN.md §6b) can replay
+//! the whole phase protocol under controlled schedules; in production the
+//! shims are transparent wrappers. Each `Ordering::Relaxed` call site
+//! carries a `lint:allow(atomic-ordering)` justification tied to the
+//! happens-before argument the checker verifies.
 
 use crate::algorithm::suboptimality;
 use crate::coordinator::node;
@@ -66,10 +76,11 @@ use crate::coordinator::{CoordConfig, FrameTamper, NodeAlgorithm, WeightRow};
 use crate::graph::MixingOp;
 use crate::linalg::Mat;
 use crate::runner::{Backend, MetricPoint, Probe, RunResult, RunSpec, StopReason};
+use crate::runtime::sync::{self, AtomicBool, AtomicUsize, Barrier};
 use crate::util::rng::Rng;
 use std::cell::UnsafeCell;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Barrier, Mutex};
+use std::sync::atomic::Ordering;
+use std::sync::Mutex;
 use std::thread;
 use std::time::Instant;
 
@@ -206,6 +217,7 @@ impl Scratch {
 /// before the next phase begins.
 fn drain(counter: &AtomicUsize, n: usize, mut f: impl FnMut(usize)) {
     loop {
+        // lint:allow(atomic-ordering): atomicity-only shard claim — no data rides on its order
         let s = counter.fetch_add(CHUNK, Ordering::Relaxed);
         if s >= n {
             break;
@@ -263,7 +275,8 @@ fn phase_a(sh: &Shared, sc: &mut Scratch, pid: usize, i: usize, k: usize) {
         // main after the phase-B barrier, and fault resolution is
         // deterministic (min round, then min node) regardless of which
         // participants pushed
-        sh.fault_flag.store(true, Ordering::Relaxed);
+        // lint:allow(atomic-ordering): idempotent monotone raise, read only after the phase barrier
+        sh.fault_flag.raise(Ordering::Relaxed);
         sh.faults
             .lock()
             .expect("fault sink poisoned")
@@ -316,9 +329,11 @@ fn participate(
         sh.bar.wait();
         // published by main before releasing the barrier (happens-before
         // via the barrier itself, hence Relaxed)
+        // lint:allow(atomic-ordering): main's store happens-before via the round barrier
         if sh.done.load(Ordering::Relaxed) {
             break;
         }
+        // lint:allow(atomic-ordering): written only in main's barrier-guarded exclusive window
         let k = sh.round.load(Ordering::Relaxed);
         drain(sh.next_a, sh.n, |i| phase_a(sh, &mut sc, pid, i, k));
         sh.bar.wait();
@@ -366,6 +381,12 @@ pub fn run_with_workers(
     assert_eq!(x0.rows, n);
     assert_eq!(x_star.len(), p, "x_star dimension must match the iterate width");
     assert!(rounds > 0, "sim run needs rounds >= 1 (0 would record no snapshots)");
+    // config-driven runs are rejected earlier with a typed ConfigError
+    // (exp::validate); this guards direct callers of the sim API
+    assert!(
+        n <= u16::MAX as usize,
+        "sim backend: n = {n} exceeds 65535 — node ids must fit the wire format's u16 `from` field"
+    );
     assert!(spec.record_every > 0, "record_every must be >= 1");
     assert!(
         spec.schedule.is_none(),
@@ -406,14 +427,14 @@ pub fn run_with_workers(
     let frames = SlotVec::new(vec![Vec::<u8>::new(); n]);
     let counters = SlotVec::new((0..participants).map(|_| Counter::default()).collect::<Vec<_>>());
     let q_view = RowMat::new(&mut q);
-    let round = AtomicUsize::new(0);
-    let next_build = AtomicUsize::new(0);
-    let next_a = AtomicUsize::new(0);
-    let next_b = AtomicUsize::new(0);
-    let done = AtomicBool::new(false);
-    let fault_flag = AtomicBool::new(false);
+    let round = AtomicUsize::new(0, "sim.round");
+    let next_build = AtomicUsize::new(0, "sim.next_build");
+    let next_a = AtomicUsize::new(0, "sim.next_a");
+    let next_b = AtomicUsize::new(0, "sim.next_b");
+    let done = AtomicBool::new(false, "sim.done");
+    let fault_flag = AtomicBool::new(false, "sim.fault_flag");
     let faults: Mutex<Vec<WireFault>> = Mutex::new(Vec::new());
-    let bar = Barrier::new(participants);
+    let bar = Barrier::new(participants, "sim.round_barrier");
     let sh = Shared {
         n,
         codec: &wire.codec,
@@ -441,10 +462,9 @@ pub fn run_with_workers(
 
     thread::scope(|scope| {
         for pid in 1..participants {
-            thread::Builder::new()
-                .name(format!("sim-{pid}"))
-                .spawn_scoped(scope, move || participate(sh, w, build, pid, p, max_deg, seed))
-                .expect("spawn sim worker");
+            sync::spawn_scoped(scope, &format!("sim-{pid}"), move || {
+                participate(sh, w, build, pid, p, max_deg, seed)
+            });
         }
         // the caller thread is participant 0 AND the leader: it works the
         // phases like everyone else and owns the exclusive windows between
@@ -524,8 +544,11 @@ pub fn run_with_workers(
                 // costs already on the counters
                 take(0, &mut snap, &mut history, probes, &mut stopped_by);
             }
+            // lint:allow(atomic-ordering): main-exclusive window; the barrier publishes the reset
             sh.next_a.store(0, Ordering::Relaxed);
+            // lint:allow(atomic-ordering): same barrier-published exclusive-window reset as next_a
             sh.next_b.store(0, Ordering::Relaxed);
+            // lint:allow(atomic-ordering): same barrier-published exclusive-window store as next_a
             sh.round.store(k, Ordering::Relaxed);
             sh.bar.wait();
             drain(sh.next_a, n, |i| phase_a(sh, &mut sc, 0, i, k));
@@ -533,6 +556,7 @@ pub fn run_with_workers(
             drain(sh.next_b, n, |i| phase_b(sh, &mut sc, i));
             sh.bar.wait();
             // exclusive window again
+            // lint:allow(atomic-ordering): every raise happens-before via the phase-B barrier
             if sh.fault_flag.load(Ordering::Relaxed) {
                 // the faulted round is discarded — same truncation as the
                 // coordinator, whose leader never completes that snapshot
@@ -548,8 +572,12 @@ pub fn run_with_workers(
                 }
             }
         }
+        // lint:allow(atomic-ordering): the final barrier publishes `done` to every worker
         sh.done.store(true, Ordering::Relaxed);
         sh.bar.wait();
+        // under proxlead-check: wait for every worker to exit so the
+        // scope's implicit join below never blocks the schedule token
+        sync::pre_join();
     });
 
     // deterministic fault resolution — earliest round, lowest node id

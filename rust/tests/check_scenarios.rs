@@ -1,0 +1,33 @@
+//! The `proxlead-check` scenario suite at Quick budget: every named
+//! scenario must pass (no races, deadlocks, or stuck executions), stay
+//! schedule-invariant, clear the distinct-schedule floor, and round-trip
+//! through the `proxlead-check-v1` JSON report. CI runs the same suite at
+//! Full budget (≥ 1000 distinct schedules per scenario) as a hard gate via
+//! `cargo run --release --bin check`.
+
+use proxlead::check::report_json;
+use proxlead::check::scenarios::{run_all, Budget, NAMES};
+
+#[test]
+fn quick_budget_scenarios_pass_and_are_schedule_invariant() {
+    let reports = run_all(Budget::Quick);
+    assert_eq!(reports.len(), NAMES.len());
+    for r in &reports {
+        assert!(r.findings.is_empty(), "{}: {:?}", r.name, r.findings);
+        assert!(r.pass, "{}", r.summary_line());
+        assert!(r.schedule_invariant, "{}", r.summary_line());
+        assert!(
+            r.distinct >= Budget::Quick.min_distinct(),
+            "coverage floor missed: {}",
+            r.summary_line()
+        );
+        assert_eq!(r.outcomes.len(), 1, "{}: outcomes {:?}", r.name, r.outcomes);
+    }
+
+    let json = report_json(&reports).to_string();
+    assert!(json.contains("\"schema\":\"proxlead-check-v1\""), "{json}");
+    assert!(json.contains("\"pass\":true"), "{json}");
+    for name in NAMES {
+        assert!(json.contains(&format!("\"name\":\"{name}\"")), "{json}");
+    }
+}

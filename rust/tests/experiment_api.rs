@@ -146,6 +146,26 @@ fn least_squares_sweep_cell_end_to_end() {
     }
 }
 
+/// The sim shares the coordinator's frame format, whose `from` field is a
+/// u16: a config asking the sim backend for more nodes than that must be
+/// rejected with a typed error up front — not silently truncate sender
+/// ids in `WireFault` reports. Validation stays cheap (no data is
+/// generated), so the rejection costs nothing.
+#[test]
+fn sim_backend_rejects_more_nodes_than_u16_ids() {
+    let mut cfg = tiny("logreg", "prox-lead");
+    cfg.backend = "sim".into();
+    cfg.nodes = 70_000;
+    let err = proxlead::exp::validate_config(&cfg).expect_err("70k-node sim must be rejected");
+    let msg = err.to_string();
+    assert!(msg.contains("65535"), "error must name the limit: {msg}");
+    assert!(msg.contains("u16"), "error must explain the wire-format cause: {msg}");
+    assert!(msg.contains("70000"), "error must echo the offending value: {msg}");
+    // the boundary itself is representable and passes the same validation
+    cfg.nodes = 65_535;
+    proxlead::exp::validate_config(&cfg).expect("65535 nodes is exactly representable");
+}
+
 /// Builder overrides flow into the constructed algorithm (name/oracle) and
 /// the experiment's auto-η matches the problem the registry built.
 #[test]

@@ -17,7 +17,7 @@ fn src_root() -> &'static Path {
 #[test]
 fn fixture_corpus_triggers_every_rule_exactly_once() {
     let (files, diags) = lint::lint_tree(fixtures_root()).expect("fixture scan");
-    assert_eq!(files, 9, "fixture corpus drifted: {files} files");
+    assert_eq!(files, 10, "fixture corpus drifted: {files} files");
     let got: Vec<(String, usize, &str)> =
         diags.iter().map(|d| (d.file.clone(), d.line, d.rule)).collect();
     let want = [
@@ -25,6 +25,7 @@ fn fixture_corpus_triggers_every_rule_exactly_once() {
         ("coordinator/wire.rs".to_string(), 5, "panic-freedom"),
         ("exp/registry.rs".to_string(), 6, "deprecated-api"),
         ("linalg/matrix.rs".to_string(), 6, "parity-order"),
+        ("runner/mod.rs".to_string(), 6, "atomic-ordering"),
         ("sim/mod.rs".to_string(), 5, "zero-alloc"),
         ("sweep/mod.rs".to_string(), 6, "total-cmp"),
         ("util/bad_allow.rs".to_string(), 6, "bad-allow"),

@@ -1,0 +1,7 @@
+//! Fixture: MUST trigger `atomic-ordering` exactly once (a bare memory-
+//! order token outside the runtime/sync shim layer, with no justification
+//! comment). Never compiled — scanned by lint_contract.rs.
+
+pub fn rogue_claim(counter: &std::sync::atomic::AtomicUsize) -> usize {
+    counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+}

@@ -1,0 +1,113 @@
+//! Teardown liveness under a fault/finish race: a frame corrupted at the
+//! FINAL wire round makes the ABORT teardown race the clean BYE flood (on
+//! the coordinator) and the natural end of the round loop (on the sim).
+//! Both backends must come to rest within a bounded wall-clock budget —
+//! no thread may block on a channel or barrier whose peer already left —
+//! and must resolve the reported fault to the min-(round, node) winner.
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+use proxlead::config::Config;
+use proxlead::coordinator::{self, FrameTamper, TamperKind};
+use proxlead::exp::{registry, Experiment};
+use proxlead::runner::StopReason;
+use proxlead::sim;
+
+fn ring_exp(nodes: usize, rounds: usize) -> Experiment {
+    let cfg = Config::parse(&format!(
+        "algorithm = prox-lead\ntopology = ring\nnodes = {nodes}\nsamples_per_node = 6\n\
+         dim = 2\nclasses = 2\nbatches = 2\nseed = 11\nlambda1 = 0.005\nlambda2 = 0.1\n\
+         bits = 64\nrounds = {rounds}\nrecord_every = 1\n"
+    ))
+    .expect("config parses");
+    Experiment::from_config(&cfg).expect("experiment resolves")
+}
+
+/// Run `f` on a worker thread; fail the test if it has not finished
+/// within `secs` (a hung teardown shows up as a timeout, not a CI hang).
+fn with_watchdog<T: Send + 'static>(secs: u64, f: impl FnOnce() -> T + Send + 'static) -> T {
+    let (tx, rx) = mpsc::channel();
+    let h = thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(v) => {
+            h.join().expect("watchdog worker panicked");
+            v
+        }
+        Err(_) => panic!("teardown did not complete within {secs}s — liveness regression"),
+    }
+}
+
+/// Node 1 corrupts its round-1 (final-round) broadcast in a 3-ring: both
+/// neighbors detect and flood ABORT while node 1, whose own gather sees
+/// only good frames, finishes cleanly and floods BYE. The leader must
+/// resolve the two detector reports to the lowest-(round, node) one.
+#[test]
+fn coordinator_fault_vs_clean_bye_resolves_min_round_node() {
+    let exp = ring_exp(3, 2);
+    let wire = exp
+        .coord_config()
+        .tamper(FrameTamper { node: 1, round: 1, kind: TamperKind::ShortPayload });
+    let spec = exp.run_spec();
+    let x_star = exp.reference();
+    let res = with_watchdog(60, move || {
+        coordinator::run(
+            &exp.mixing,
+            &exp.x0,
+            &exp.config.algorithm,
+            &wire,
+            &spec,
+            &x_star,
+            &mut [],
+            |i, row| registry::build_node_algorithm(&exp, &wire, i, row),
+        )
+    });
+    match res.stopped_by {
+        StopReason::WireFault(f) => assert_eq!(
+            (f.round, f.node),
+            (1u32, 0u16),
+            "coordinator must report the lowest-(round, node) *detector*"
+        ),
+        other => panic!("expected a wire-fault stop, got {other:?}"),
+    }
+    assert_eq!(res.history.len(), 2, "rounds 0 and 1 flush; the faulted round must not");
+}
+
+/// The sim analog: node 2's encoded frame is corrupted at the final wire
+/// round, so the participant that claims its shard faults while every
+/// other shard completes the round cleanly. The sim reports the *sender*
+/// of the corrupt frame, at the faulted round.
+#[test]
+fn sim_fault_vs_clean_finish_resolves_min_round_node() {
+    let exp = ring_exp(4, 2);
+    let wire = exp
+        .coord_config()
+        .tamper(FrameTamper { node: 2, round: 1, kind: TamperKind::TrailingGarbage });
+    let spec = exp.run_spec();
+    let x_star = exp.reference();
+    let res = with_watchdog(60, move || {
+        sim::run_with_workers(
+            &exp.mixing,
+            &exp.x0,
+            &exp.config.algorithm,
+            &wire,
+            &spec,
+            &x_star,
+            &mut [],
+            |i, row| registry::build_node_algorithm(&exp, &wire, i, row),
+            2,
+        )
+    });
+    match res.stopped_by {
+        StopReason::WireFault(f) => assert_eq!(
+            (f.round, f.node),
+            (1u32, 2u16),
+            "sim must report the *sender* of the corrupt frame"
+        ),
+        other => panic!("expected a wire-fault stop, got {other:?}"),
+    }
+    assert_eq!(res.history.len(), 2, "the faulted round's snapshot must not be recorded");
+}

@@ -1,0 +1,137 @@
+#!/usr/bin/env python3
+"""Validate a ``proxlead-check-v1`` report emitted by ``--bin check``.
+
+Usage::
+
+    python3 scripts/check_report.py check_report.json [--min-distinct N]
+
+Exit status: 0 — schema-valid and every scenario passed (and met the
+``--min-distinct`` floor, when given); 1 — schema-valid but at least one
+scenario failed or missed the floor (details printed); 2 — unreadable
+file or schema violation (one ``error:`` line, never a traceback).
+
+CI runs this against the artifact the concurrency-check job uploads, so a
+truncated or hand-edited report fails loudly instead of green-washing.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+SCHEMA = "proxlead-check-v1"
+FINDING_KINDS = {"race", "deadlock", "stuck", "panic", "invariance", "coverage", "divergence"}
+COUNT_KEYS = ("executions", "distinct_schedules", "dfs_executions", "random_executions",
+              "max_steps")
+
+
+def fail(msg: str):
+    print(f"error: {msg}", file=sys.stderr)
+    sys.exit(2)
+
+
+def validate(report) -> list[str]:
+    """Schema- and consistency-check; returns the failing scenario names."""
+    if not isinstance(report, dict):
+        fail("top level must be an object")
+    if report.get("schema") != SCHEMA:
+        fail(f"schema must be '{SCHEMA}', got {report.get('schema')!r}")
+    if not isinstance(report.get("pass"), bool):
+        fail("top-level 'pass' must be a bool")
+    scenarios = report.get("scenarios")
+    if not isinstance(scenarios, list) or not scenarios:
+        fail("'scenarios' must be a non-empty array")
+    failing = []
+    seen = set()
+    for i, s in enumerate(scenarios):
+        where = f"scenarios[{i}]"
+        if not isinstance(s, dict):
+            fail(f"{where} must be an object")
+        name = s.get("name")
+        if not isinstance(name, str) or not name:
+            fail(f"{where}.name must be a non-empty string")
+        if name in seen:
+            fail(f"duplicate scenario name '{name}'")
+        seen.add(name)
+        for key in ("pass", "schedule_invariant"):
+            if not isinstance(s.get(key), bool):
+                fail(f"{where}.{key} must be a bool")
+        for key in COUNT_KEYS:
+            v = s.get(key)
+            if not isinstance(v, int) or isinstance(v, bool) or v < 0:
+                fail(f"{where}.{key} must be a non-negative integer")
+        if s["executions"] != s["dfs_executions"] + s["random_executions"]:
+            fail(f"{where}: executions must equal dfs_executions + random_executions")
+        if s["distinct_schedules"] > s["executions"]:
+            fail(f"{where}: distinct_schedules exceeds executions")
+        outcomes = s.get("outcomes")
+        if not isinstance(outcomes, list) or not all(isinstance(o, str) for o in outcomes):
+            fail(f"{where}.outcomes must be an array of strings")
+        if s["schedule_invariant"] != (len(outcomes) <= 1):
+            fail(f"{where}: schedule_invariant disagrees with the outcome count")
+        findings = s.get("findings")
+        if not isinstance(findings, list):
+            fail(f"{where}.findings must be an array")
+        for j, f in enumerate(findings):
+            if not isinstance(f, dict):
+                fail(f"{where}.findings[{j}] must be an object")
+            if f.get("kind") not in FINDING_KINDS:
+                fail(f"{where}.findings[{j}].kind must be one of {sorted(FINDING_KINDS)}")
+            if not isinstance(f.get("detail"), str) or not f["detail"]:
+                fail(f"{where}.findings[{j}].detail must be a non-empty string")
+        if s["pass"] != (len(findings) == 0):
+            fail(f"{where}: pass disagrees with findings")
+        if not s["pass"]:
+            failing.append(name)
+    if report["pass"] != (len(failing) == 0):
+        fail("top-level pass disagrees with the per-scenario passes")
+    return failing
+
+
+def main(argv: list[str]) -> int:
+    path = None
+    min_distinct = 0
+    args = iter(argv[1:])
+    for arg in args:
+        if arg == "--min-distinct":
+            raw = next(args, None)
+            if raw is None or not raw.isdigit():
+                fail("--min-distinct requires a non-negative integer")
+            min_distinct = int(raw)
+        elif arg.startswith("-"):
+            fail(f"unknown flag {arg} (usage: check_report.py REPORT.json [--min-distinct N])")
+        elif path is None:
+            path = arg
+        else:
+            fail("exactly one report path expected")
+    if path is None:
+        fail("usage: check_report.py REPORT.json [--min-distinct N]")
+    try:
+        text = Path(path).read_text()
+    except OSError as e:
+        fail(f"cannot read {path}: {e}")
+    try:
+        report = json.loads(text)
+    except json.JSONDecodeError as e:
+        fail(f"{path} is not valid JSON: {e}")
+
+    failing = validate(report)
+    shallow = [s["name"] for s in report["scenarios"]
+               if s["distinct_schedules"] < min_distinct]
+    for s in report["scenarios"]:
+        for f in s["findings"]:
+            print(f"{s['name']}: {f['kind']}: {f['detail']}")
+    for name in shallow:
+        print(f"{name}: coverage: below the --min-distinct {min_distinct} floor")
+    n = len(report["scenarios"])
+    if failing or shallow:
+        bad = sorted(set(failing) | set(shallow))
+        print(f"check report: {len(bad)}/{n} scenario(s) failed: {', '.join(bad)}")
+        return 1
+    print(f"check report: {n} scenario(s) clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

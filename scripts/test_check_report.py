@@ -1,0 +1,149 @@
+#!/usr/bin/env python3
+"""Tests for scripts/check_report.py — stdlib only.
+
+The contract under test (ISSUE 9 satellite): the ``proxlead-check-v1``
+report written by ``cargo run --bin check -- --json`` round-trips through
+the validator with the binary's own exit-code convention — 0 clean,
+1 findings / coverage shortfall, 2 unreadable or schema-invalid input
+(one ``error:`` line, never a traceback). Run directly (CI does, on a
+runner with no Rust toolchain)::
+
+    python3 scripts/test_check_report.py
+"""
+
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+import tempfile
+import unittest
+from pathlib import Path
+
+SCRIPT = Path(__file__).resolve().parent / "check_report.py"
+
+
+def scenario(name: str = "sim-ring-phases", ok: bool = True, distinct: int = 1200) -> dict:
+    """One scenario entry shaped exactly like the Rust emitter's."""
+    findings = [] if ok else [{"kind": "race", "detail": "sim.round: unordered store/load"}]
+    return {
+        "name": name,
+        "pass": ok,
+        "executions": 1400,
+        "distinct_schedules": distinct,
+        "dfs_executions": 300,
+        "random_executions": 1100,
+        "max_steps": 412,
+        "schedule_invariant": True,
+        "outcomes": ["max-rounds#00000000deadbeef"],
+        "findings": findings,
+    }
+
+
+def report(scenarios: list | None = None) -> dict:
+    scenarios = scenarios if scenarios is not None else [scenario()]
+    return {
+        "schema": "proxlead-check-v1",
+        "pass": all(s["pass"] for s in scenarios),
+        "scenarios": scenarios,
+    }
+
+
+class CheckReportCli(unittest.TestCase):
+    def setUp(self) -> None:
+        self._tmp = tempfile.TemporaryDirectory()
+        self.dir = Path(self._tmp.name)
+        self.addCleanup(self._tmp.cleanup)
+
+    def write(self, content) -> Path:
+        p = self.dir / "check_report.json"
+        p.write_text(json.dumps(content) if isinstance(content, (dict, list)) else content)
+        return p
+
+    def run_validator(self, *argv: str) -> subprocess.CompletedProcess:
+        return subprocess.run(
+            [sys.executable, str(SCRIPT), *argv],
+            capture_output=True, text=True, check=False,
+        )
+
+    def assert_schema_error(self, proc: subprocess.CompletedProcess, *needles: str) -> None:
+        self.assertEqual(proc.returncode, 2, proc.stdout + proc.stderr)
+        combined = proc.stdout + proc.stderr
+        self.assertNotIn("Traceback", combined, f"traceback leaked:\n{combined}")
+        error_lines = [l for l in proc.stderr.splitlines() if l.startswith("error:")]
+        self.assertEqual(len(error_lines), 1, f"want exactly one error line:\n{combined}")
+        for needle in needles:
+            self.assertIn(needle, error_lines[0])
+
+    # -- exit 0: clean round-trip -------------------------------------
+
+    def test_passing_report_exits_zero(self) -> None:
+        proc = self.run_validator(str(self.write(report())))
+        self.assertEqual(proc.returncode, 0, proc.stdout + proc.stderr)
+        self.assertIn("1 scenario(s) clean", proc.stdout)
+
+    def test_min_distinct_floor_met_exits_zero(self) -> None:
+        p = self.write(report([scenario(distinct=1000)]))
+        proc = self.run_validator(str(p), "--min-distinct", "1000")
+        self.assertEqual(proc.returncode, 0, proc.stdout + proc.stderr)
+
+    # -- exit 1: valid report, failing content ------------------------
+
+    def test_findings_exit_one_and_are_printed(self) -> None:
+        p = self.write(report([scenario(), scenario(name="coord-fault-teardown", ok=False)]))
+        proc = self.run_validator(str(p))
+        self.assertEqual(proc.returncode, 1, proc.stdout + proc.stderr)
+        self.assertIn("coord-fault-teardown: race:", proc.stdout)
+        self.assertIn("1/2 scenario(s) failed", proc.stdout)
+
+    def test_min_distinct_shortfall_exits_one(self) -> None:
+        p = self.write(report([scenario(distinct=999)]))
+        proc = self.run_validator(str(p), "--min-distinct", "1000")
+        self.assertEqual(proc.returncode, 1, proc.stdout + proc.stderr)
+        self.assertIn("below the --min-distinct 1000 floor", proc.stdout)
+
+    # -- exit 2: unreadable or schema-invalid input -------------------
+
+    def test_missing_file_is_a_schema_error(self) -> None:
+        self.assert_schema_error(self.run_validator(str(self.dir / "absent.json")),
+                                 "cannot read")
+
+    def test_malformed_json_is_a_schema_error(self) -> None:
+        self.assert_schema_error(self.run_validator(str(self.write("{not json"))),
+                                 "not valid JSON")
+
+    def test_wrong_schema_tag_is_rejected(self) -> None:
+        bad = report()
+        bad["schema"] = "proxlead-lint-v1"
+        self.assert_schema_error(self.run_validator(str(self.write(bad))),
+                                 "proxlead-check-v1")
+
+    def test_execution_count_mismatch_is_rejected(self) -> None:
+        bad = report()
+        bad["scenarios"][0]["executions"] = 7
+        self.assert_schema_error(self.run_validator(str(self.write(bad))),
+                                 "dfs_executions + random_executions")
+
+    def test_invariance_flag_must_match_outcomes(self) -> None:
+        bad = report()
+        bad["scenarios"][0]["outcomes"] = ["max-rounds#1", "wire-fault@r1n0#2"]
+        self.assert_schema_error(self.run_validator(str(self.write(bad))),
+                                 "schedule_invariant")
+
+    def test_pass_flag_must_match_findings(self) -> None:
+        bad = report()
+        bad["scenarios"][0]["findings"] = [{"kind": "deadlock", "detail": "stuck at barrier"}]
+        self.assert_schema_error(self.run_validator(str(self.write(bad))), "pass")
+
+    def test_unknown_finding_kind_is_rejected(self) -> None:
+        bad = report([scenario(ok=False)])
+        bad["scenarios"][0]["findings"][0]["kind"] = "vibes"
+        self.assert_schema_error(self.run_validator(str(self.write(bad))), "kind")
+
+    def test_unknown_flag_is_a_usage_error(self) -> None:
+        self.assert_schema_error(self.run_validator(str(self.write(report())), "--verbose"),
+                                 "unknown flag")
+
+
+if __name__ == "__main__":
+    unittest.main(verbosity=2)
