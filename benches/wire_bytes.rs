@@ -93,6 +93,38 @@ fn main() {
         ));
     }
 
+    // the same frames over a real byte stream: one loopback-Tcp row pins
+    // the socket transport's cost next to its in-process twin (identical
+    // wire accounting — the transport moves frames, it doesn't re-price
+    // them — so the delta this row shows is pure runtime overhead)
+    {
+        let mut cfg = base_cfg(rounds);
+        cfg.set("algorithm", "prox-lead").expect("algorithm");
+        cfg.set("bits", "2").expect("override");
+        let exp = Experiment::from_config(&cfg).expect("experiment");
+        if let Some(r) = &x_star {
+            exp.set_reference(Arc::clone(r));
+        }
+        let label = "Prox-LEAD 2bit tcp-loopback";
+        let mut last = None;
+        set.run(label, || last = Some(exp.run_coordinator_loopback(&exp.run_spec(), "tcp")));
+        let res = last.expect("loopback coordinator ran");
+        let m = res.history.last().expect("final snapshot");
+        table.row(vec![
+            label.into(),
+            format!("{:.1}", res.wire_bytes() as f64 / 1024.0),
+            format!("{:.2}", m.bits as f64 / 1e6),
+            format!("{:.2e}", m.suboptimality),
+        ]);
+        csv.push_str(&format!(
+            "{label},{},{rounds},{},{},{:.6e}\n",
+            exp.codec().name(),
+            res.wire_bytes(),
+            m.bits,
+            m.suboptimality,
+        ));
+    }
+
     table.print();
     std::fs::write(out_dir().join("wire_bytes.csv"), csv).expect("write csv");
     let mut report = BenchReport::new("wire_bytes");

@@ -27,7 +27,14 @@ SUBCOMMANDS:
   train       run any `algorithm` on the configured `backend`: the matrix
               engine (default), the message-passing coordinator (node
               threads, real serialized frames), or the sharded massive-n
-              simulator (`--backend sim`, 100k+ nodes)
+              simulator (`--backend sim`, 100k+ nodes). With
+              `--transport tcp|unix` the coordinator listens on `bind`
+              and waits for `proxlead node` worker processes instead of
+              spawning threads
+  node        run ONE node of a socket-transport coordinator run in this
+              process: dials the leader's `bind` address (bounded retry),
+              handshakes as `--node-id N`, exits on BYE/ABORT. Launch n
+              workers against one `train --transport tcp|unix` leader
   sweep       run a parallel experiment grid through the matrix engine
   solve-ref   compute the high-precision reference solution x*
   info        print problem/network condition numbers and artifacts
@@ -45,6 +52,8 @@ CONFIG KEYS (also usable as --key value):
   rounds record_every seed backend(engine|coordinator|sim)
   compute(native|xla) out
   straggler_prob straggler_us
+  transport(inproc|tcp|unix) bind(host:port | socket path)
+  connect_timeout_ms (worker dial budget; leader accepts for 2x)
 
 TRAIN STOP FLAGS (composable; first criterion hit ends the run and is
 reported as `stopped by …` — `rounds` is always the hard cap):
@@ -54,6 +63,11 @@ reported as `stopped by …` — `rounds` is always the hard cap):
   --deadline-ms N                 stop at a wall-clock deadline
   (stops are observed at `record_every` granularity — use
    --record_every 1 for round-exact budget stops)
+  --json result.json              write the full RunResult (history,
+                                  stop reason, final iterate) as JSON
+
+NODE FLAGS (node subcommand only; stop flags must match the leader's):
+  --node-id N                     which node this worker is (0-based)
 
 SWEEP FLAGS (sweep subcommand only):
   --grid \"key=v1,v2;key2=v1,v2\"   cartesian axes over any config key
@@ -71,6 +85,10 @@ EXAMPLES:
                  --rounds 2000 --threads 8 --out sweep.json
   proxlead sweep --grid \"problem=logreg,least-squares;bits=2,32\" --rounds 500
   proxlead info --nodes 16 --topology grid
+  proxlead train --backend coordinator --transport unix --bind /tmp/pl.sock \\
+                 --nodes 4 --json result.json   # leader; plus 4 workers:
+  proxlead node --node-id 0 --backend coordinator --transport unix \\
+                --bind /tmp/pl.sock --nodes 4   # …and ids 1, 2, 3
 ";
 
 /// Parse `args` (without argv[0]).

@@ -66,6 +66,18 @@ pub struct Config {
     pub out: String,
     pub straggler_prob: f64,
     pub straggler_us: u64,
+    // transport
+    /// Coordinator byte-stream transport: `inproc` (node threads over
+    /// checker-visible channels, the default), `tcp`, or `unix` (node
+    /// *processes* over sockets — see DESIGN.md §4e). Non-inproc values
+    /// require `backend = coordinator`. A sweepable grid axis.
+    pub transport: String,
+    /// Leader listen address, and what `proxlead node` dials: `host:port`
+    /// for tcp, a filesystem path for unix. Ignored under inproc.
+    pub bind: String,
+    /// Total dial budget for `proxlead node` (bounded exponential backoff
+    /// while the leader is still binding), milliseconds.
+    pub connect_timeout_ms: u64,
 }
 
 impl Default for Config {
@@ -102,6 +114,9 @@ impl Default for Config {
             out: String::new(),
             straggler_prob: 0.0,
             straggler_us: 0,
+            transport: "inproc".into(),
+            bind: String::new(),
+            connect_timeout_ms: 5000,
         }
     }
 }
@@ -182,6 +197,9 @@ impl Config {
             "out" => self.out = val.into(),
             "straggler_prob" => self.straggler_prob = p(key, val)?,
             "straggler_us" => self.straggler_us = p(key, val)?,
+            "transport" => self.transport = val.into(),
+            "bind" => self.bind = val.into(),
+            "connect_timeout_ms" => self.connect_timeout_ms = p(key, val)?,
             _ => return Err(ConfigError(format!("unknown key '{key}'"))),
         }
         Ok(())
@@ -366,7 +384,8 @@ impl Config {
              compressor = {}\nbits = {}\nblock = {}\nsparsify_k = {}\n\
              eta = {}\nalpha = {}\ngamma = {}\n\
              rounds = {}\nrecord_every = {}\nseed = {}\nbackend = {}\ncompute = {}\nout = {}\n\
-             straggler_prob = {}\nstraggler_us = {}\n",
+             straggler_prob = {}\nstraggler_us = {}\n\
+             transport = {}\nbind = {}\nconnect_timeout_ms = {}\n",
             self.problem,
             self.nodes,
             self.samples_per_node,
@@ -398,6 +417,9 @@ impl Config {
             self.out,
             self.straggler_prob,
             self.straggler_us,
+            self.transport,
+            self.bind,
+            self.connect_timeout_ms,
         )
     }
 }
@@ -463,6 +485,9 @@ mod tests {
             ("out", "run.json"),
             ("straggler_prob", "0.1"),
             ("straggler_us", "500"),
+            ("transport", "tcp"),
+            ("bind", "127.0.0.1:7070"),
+            ("connect_timeout_ms", "250"),
         ] {
             all.set(k, v).unwrap();
         }

@@ -64,6 +64,7 @@ use crate::problem::Problem;
 use crate::prox::Prox;
 use crate::runner::{Backend, MetricPoint, Probe, RunResult, RunSpec, StopReason};
 use crate::runtime::sync;
+use crate::transport::{socket, Hello, InProcLink, Transport, TransportError};
 use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
@@ -238,6 +239,31 @@ pub fn run(
     probes: &mut [&mut dyn Probe],
     build: impl Fn(usize, WeightRow) -> Box<dyn NodeAlgorithm> + Sync,
 ) -> RunResult {
+    run_with_transport(w, x0, name, wire, spec, x_star, probes, build, Transport::InProc)
+}
+
+/// [`run`], generic over the byte-stream transport. `Transport::InProc`
+/// spawns node threads over [`sync`] channels — byte-identical to the
+/// historical coordinator and fully visible to `proxlead-check`.
+/// `Transport::Socket` instead accepts `n` node *processes* on a
+/// pre-bound TCP/Unix listener (handshake: node id + config fingerprint
+/// + run shape; mismatch → typed reject), relays their frames along the
+/// mixing graph's edges, and folds every socket failure into the same
+/// typed teardown ([`WireError::Transport`] →
+/// [`StopReason::WireFault`]) — a dead peer yields a stop reason, never
+/// a hang. See DESIGN.md §4e.
+#[allow(clippy::too_many_arguments)]
+pub fn run_with_transport(
+    w: &MixingOp,
+    x0: &Mat,
+    name: &str,
+    wire: &CoordConfig,
+    spec: &RunSpec,
+    x_star: &[f64],
+    probes: &mut [&mut dyn Probe],
+    build: impl Fn(usize, WeightRow) -> Box<dyn NodeAlgorithm> + Sync,
+    transport: Transport,
+) -> RunResult {
     let n = w.n();
     let rounds = spec.stop.max_rounds;
     assert_eq!(x0.rows, n);
@@ -248,161 +274,35 @@ pub fn run(
         spec.schedule.is_none(),
         "stepsize schedules are engine-only (node halves run fixed hyperparameters)"
     );
+    // the wire header's `from` field is u16 — same bound as run_sim. The
+    // typed-error guard lives in exp::validate_runtime_factories; this is
+    // the library-level backstop.
+    assert!(n <= u16::MAX as usize, "coordinator backend supports at most 65535 nodes (u16 ids)");
     let gated = spec.stop.leader_gated();
     #[allow(clippy::disallowed_methods)] // wall-clock run timing (see clippy.toml)
     let start = Instant::now();
 
-    // per-node inboxes; every node gets a Sender clone for each neighbor.
-    // Frames travel as Arc<[u8]>: one refcounted buffer per broadcast
-    // instead of one Vec clone per neighbor.
-    let mut txs = Vec::with_capacity(n);
-    let mut rxs = Vec::with_capacity(n);
-    for _ in 0..n {
-        let (tx, rx) = sync::channel::<Arc<[u8]>>("coord.inbox");
-        txs.push(tx);
-        rxs.push(rx);
-    }
-    // leader → node control channels (only wired when gating is on)
-    let mut ctrl_txs = Vec::with_capacity(n);
-    let mut ctrl_rxs: Vec<Option<sync::Receiver<bool>>> = Vec::with_capacity(n);
-    for _ in 0..n {
-        if gated {
-            let (tx, rx) = sync::channel::<bool>("coord.ctrl");
-            ctrl_txs.push(tx);
-            ctrl_rxs.push(Some(rx));
-        } else {
-            ctrl_rxs.push(None);
+    let out = match transport {
+        Transport::InProc => {
+            leader_inproc(w, x0, wire, spec, x_star, gated, start, probes, &build)
         }
-    }
-    let (report_tx, report_rx) = sync::channel::<NodeEvent>("coord.reports");
-    let build = &build;
-
-    let (history, final_x, stopped_by, faults) = thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(n);
-        for (i, (rx, ctrl)) in rxs.into_iter().zip(ctrl_rxs).enumerate() {
-            let row = WeightRow::from_op(w, i);
-            // per-edge senders, aligned with the gossip row (ascending j)
-            let neighbors: Vec<(usize, sync::Sender<Arc<[u8]>>)> =
-                row.neighbors.iter().map(|&(j, _)| (j, txs[j].clone())).collect();
-            let node_cfg = NodeConfig {
-                id: i,
-                neighbors,
-                inbox: rx,
-                reports: report_tx.clone(),
-                control: ctrl,
-                wire: wire.clone(),
-                rounds,
-                record_every: spec.record_every,
-                dim: x0.cols,
-            };
-            handles.push(sync::spawn_scoped(scope, &format!("node-{i}"), move || {
-                node::run_node(build(i, row), node_cfg)
-            }));
-        }
-        drop(report_tx);
-        drop(txs);
-
-        // leader: gather reports until every node finished every recorded
-        // round, flushing completed rounds in order
-        let mut pending: std::collections::BTreeMap<usize, Vec<Option<NodeReport>>> =
-            std::collections::BTreeMap::new();
-        let mut history: Vec<MetricPoint> = Vec::new();
-        let mut final_x: Option<Mat> = None;
-        let mut stopped_by: Option<StopReason> = None;
-        // wire faults (possibly several nodes detecting the same corrupt
-        // broadcast); resolved deterministically after the drain
-        let mut faults: Vec<WireFault> = Vec::new();
-        let mut released_on_fault = false;
-        while let Ok(ev) = report_rx.recv() {
-            let rep = match ev {
-                NodeEvent::Report(r) => r,
-                NodeEvent::Fault(fa) => {
-                    faults.push(fa);
-                    // release checkpoint-blocked nodes, now and at their
-                    // next checkpoint: one queued `false` per node is
-                    // enough, a node stops at the first false it consumes
-                    if gated && !released_on_fault {
-                        released_on_fault = true;
-                        for tx in &ctrl_txs {
-                            let _ = tx.send(false);
-                        }
-                    }
-                    continue;
-                }
-            };
-            let slot = pending.entry(rep.round).or_insert_with(|| vec![None; n]);
-            let node = rep.node;
-            assert!(slot[node].is_none(), "duplicate report from node {node}");
-            slot[node] = Some(rep);
-            while let Some((&round, slots)) = pending.iter().next() {
-                if !slots.iter().all(|s| s.is_some()) {
-                    break;
-                }
-                let slots = pending.remove(&round).unwrap();
-                let mut x = Mat::zeros(n, x0.cols);
-                let (mut bits, mut evals, mut bytes) = (0u64, 0u64, 0u64);
-                for s in slots.into_iter().map(Option::unwrap) {
-                    x.row_mut(s.node).copy_from_slice(&s.x);
-                    // per-node counters are cumulative: the latest
-                    // snapshot's sum is the run total so far (the final
-                    // round is always reported, so this covers every frame
-                    // even when rounds % record_every != 0)
-                    bits += s.payload_bits;
-                    evals += s.grad_evals;
-                    bytes += s.bytes_sent;
-                }
-                // per-snapshot leader sampling: suboptimality vs the
-                // reference, consensus, wall-clock — the engine's row
-                let elapsed = start.elapsed();
-                let m = MetricPoint {
-                    round,
-                    grad_evals: evals,
-                    bits,
-                    wire_bytes: bytes,
-                    suboptimality: suboptimality(&x, x_star),
-                    consensus: x.consensus_error(),
-                    wall_ns: elapsed.as_nanos(),
-                };
-                crate::runner::emit(m, &x, &mut history, probes);
-                if gated && round > 0 {
-                    // first-hit-wins, divergence beating the budget checks
-                    // (a non-finite iterate can't recover — stop the fleet)
-                    let hit = if !x.is_finite() {
-                        Some(StopReason::Diverged)
-                    } else {
-                        spec.stop.check(round, bits, evals, m.suboptimality, elapsed)
-                    };
-                    if let Some(reason) = hit {
-                        // MaxRounds is the natural end, not an early stop
-                        if stopped_by.is_none() && reason != StopReason::MaxRounds {
-                            stopped_by = Some(reason);
-                        }
-                    }
-                    // checkpoint verdict: every node blocks after a
-                    // record_every-multiple before the final round
-                    if round % spec.record_every == 0 && round < rounds {
-                        let go = stopped_by.is_none() && faults.is_empty();
-                        for tx in &ctrl_txs {
-                            // a node that already exited is not an error
-                            let _ = tx.send(go);
-                        }
-                    }
-                }
-                final_x = Some(x);
-            }
-        }
-        // under proxlead-check: wait for every node thread to exit so the
-        // joins below never block the schedule token
-        sync::pre_join();
-        for h in handles {
-            h.join().expect("node thread panicked");
-        }
-        (history, final_x, stopped_by, faults)
-    });
+        Transport::Socket { listener, fingerprint, accept_timeout } => leader_socket(
+            w,
+            x0,
+            spec,
+            x_star,
+            gated,
+            start,
+            probes,
+            listener,
+            fingerprint,
+            accept_timeout,
+        ),
+    };
+    let LeaderOutcome { mut history, mut final_x, stopped_by, faults } = out;
     // deterministic fault resolution: several neighbors may report the
     // same corrupt broadcast — pick the earliest round, lowest node id
     let fault = faults.into_iter().min_by_key(|f| (f.round, f.node));
-    let (mut history, mut final_x) = (history, final_x);
     if history.is_empty() {
         // a wire fault before the first complete snapshot: synthesize the
         // round-0 state from x0 so the RunResult invariants (non-empty
@@ -443,6 +343,282 @@ pub fn run(
     };
     crate::runner::finish(&result, probes);
     result
+}
+
+/// What a leader loop hands back to [`run_with_transport`]: everything the
+/// shared RunResult-assembly tail needs, transport-agnostic.
+struct LeaderOutcome {
+    history: Vec<MetricPoint>,
+    final_x: Option<Mat>,
+    stopped_by: Option<StopReason>,
+    faults: Vec<WireFault>,
+}
+
+/// The transport-agnostic leader: gather [`NodeEvent`]s until every node
+/// finished every recorded round, flushing completed rounds in order and
+/// issuing checkpoint verdicts. `next_event` returns `None` when all node
+/// event sources have hung up; `send_verdict` delivers one go/stop verdict
+/// to every node.
+#[allow(clippy::too_many_arguments)]
+fn leader_loop(
+    n: usize,
+    x0: &Mat,
+    x_star: &[f64],
+    spec: &RunSpec,
+    gated: bool,
+    start: Instant,
+    probes: &mut [&mut dyn Probe],
+    mut next_event: impl FnMut() -> Option<NodeEvent>,
+    mut send_verdict: impl FnMut(bool),
+) -> LeaderOutcome {
+    let rounds = spec.stop.max_rounds;
+    let mut pending: std::collections::BTreeMap<usize, Vec<Option<NodeReport>>> =
+        std::collections::BTreeMap::new();
+    let mut history: Vec<MetricPoint> = Vec::new();
+    let mut final_x: Option<Mat> = None;
+    let mut stopped_by: Option<StopReason> = None;
+    // wire faults (possibly several nodes detecting the same corrupt
+    // broadcast); resolved deterministically after the drain
+    let mut faults: Vec<WireFault> = Vec::new();
+    let mut released_on_fault = false;
+    while let Some(ev) = next_event() {
+        let rep = match ev {
+            NodeEvent::Report(r) => r,
+            NodeEvent::Fault(fa) => {
+                faults.push(fa);
+                // release checkpoint-blocked nodes, now and at their
+                // next checkpoint: one queued `false` per node is
+                // enough, a node stops at the first false it consumes
+                if gated && !released_on_fault {
+                    released_on_fault = true;
+                    send_verdict(false);
+                }
+                continue;
+            }
+        };
+        let slot = pending.entry(rep.round).or_insert_with(|| vec![None; n]);
+        let node = rep.node;
+        assert!(slot[node].is_none(), "duplicate report from node {node}");
+        slot[node] = Some(rep);
+        while let Some((&round, slots)) = pending.iter().next() {
+            if !slots.iter().all(|s| s.is_some()) {
+                break;
+            }
+            let slots = pending.remove(&round).unwrap();
+            let mut x = Mat::zeros(n, x0.cols);
+            let (mut bits, mut evals, mut bytes) = (0u64, 0u64, 0u64);
+            for s in slots.into_iter().map(Option::unwrap) {
+                x.row_mut(s.node).copy_from_slice(&s.x);
+                // per-node counters are cumulative: the latest
+                // snapshot's sum is the run total so far (the final
+                // round is always reported, so this covers every frame
+                // even when rounds % record_every != 0)
+                bits += s.payload_bits;
+                evals += s.grad_evals;
+                bytes += s.bytes_sent;
+            }
+            // per-snapshot leader sampling: suboptimality vs the
+            // reference, consensus, wall-clock — the engine's row
+            let elapsed = start.elapsed();
+            let m = MetricPoint {
+                round,
+                grad_evals: evals,
+                bits,
+                wire_bytes: bytes,
+                suboptimality: suboptimality(&x, x_star),
+                consensus: x.consensus_error(),
+                wall_ns: elapsed.as_nanos(),
+            };
+            crate::runner::emit(m, &x, &mut history, probes);
+            if gated && round > 0 {
+                // first-hit-wins, divergence beating the budget checks
+                // (a non-finite iterate can't recover — stop the fleet)
+                let hit = if !x.is_finite() {
+                    Some(StopReason::Diverged)
+                } else {
+                    spec.stop.check(round, bits, evals, m.suboptimality, elapsed)
+                };
+                if let Some(reason) = hit {
+                    // MaxRounds is the natural end, not an early stop
+                    if stopped_by.is_none() && reason != StopReason::MaxRounds {
+                        stopped_by = Some(reason);
+                    }
+                }
+                // checkpoint verdict: every node blocks after a
+                // record_every-multiple before the final round
+                if round % spec.record_every == 0 && round < rounds {
+                    let go = stopped_by.is_none() && faults.is_empty();
+                    send_verdict(go);
+                }
+            }
+            final_x = Some(x);
+        }
+    }
+    LeaderOutcome { history, final_x, stopped_by, faults }
+}
+
+/// In-process leader: node threads over [`sync`] channels, the historical
+/// coordinator wiring. Stays fully visible to `proxlead-check` (channel
+/// site labels `coord.inbox` / `coord.ctrl` / `coord.reports`).
+#[allow(clippy::too_many_arguments)]
+fn leader_inproc(
+    w: &MixingOp,
+    x0: &Mat,
+    wire: &CoordConfig,
+    spec: &RunSpec,
+    x_star: &[f64],
+    gated: bool,
+    start: Instant,
+    probes: &mut [&mut dyn Probe],
+    build: &(impl Fn(usize, WeightRow) -> Box<dyn NodeAlgorithm> + Sync),
+) -> LeaderOutcome {
+    let n = w.n();
+    // per-node inboxes; every node gets a Sender clone for each neighbor.
+    // Frames travel as Arc<[u8]>: one refcounted buffer per broadcast
+    // instead of one Vec clone per neighbor.
+    let mut txs = Vec::with_capacity(n);
+    let mut rxs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = sync::channel::<Arc<[u8]>>("coord.inbox");
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    // leader → node control channels (only wired when gating is on)
+    let mut ctrl_txs = Vec::with_capacity(n);
+    let mut ctrl_rxs: Vec<Option<sync::Receiver<bool>>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        if gated {
+            let (tx, rx) = sync::channel::<bool>("coord.ctrl");
+            ctrl_txs.push(tx);
+            ctrl_rxs.push(Some(rx));
+        } else {
+            ctrl_rxs.push(None);
+        }
+    }
+    let (report_tx, report_rx) = sync::channel::<NodeEvent>("coord.reports");
+
+    thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(n);
+        for (i, (rx, ctrl)) in rxs.into_iter().zip(ctrl_rxs).enumerate() {
+            let row = WeightRow::from_op(w, i);
+            // per-edge senders, aligned with the gossip row (ascending j)
+            let edge_txs: Vec<sync::Sender<Arc<[u8]>>> =
+                row.neighbors.iter().map(|&(j, _)| txs[j].clone()).collect();
+            let neighbors: Vec<usize> = row.neighbors.iter().map(|&(j, _)| j).collect();
+            let link = InProcLink::new(edge_txs, rx, report_tx.clone(), ctrl);
+            let node_cfg = NodeConfig {
+                id: i,
+                neighbors,
+                link: Box::new(link),
+                wire: wire.clone(),
+                rounds: spec.stop.max_rounds,
+                record_every: spec.record_every,
+                dim: x0.cols,
+            };
+            handles.push(sync::spawn_scoped(scope, &format!("node-{i}"), move || {
+                node::run_node(build(i, row), node_cfg)
+            }));
+        }
+        drop(report_tx);
+        drop(txs);
+
+        let out = leader_loop(
+            n,
+            x0,
+            x_star,
+            spec,
+            gated,
+            start,
+            probes,
+            || report_rx.recv().ok(),
+            |go| {
+                for tx in &ctrl_txs {
+                    // a node that already exited is not an error
+                    let _ = tx.send(go);
+                }
+            },
+        );
+        // under proxlead-check: wait for every node thread to exit so the
+        // joins below never block the schedule token
+        sync::pre_join();
+        for h in handles {
+            h.join().expect("node thread panicked");
+        }
+        out
+    })
+}
+
+/// Socket leader: accept `n` remote node processes, then relay frames
+/// between them along the mixing graph while feeding reports/faults into
+/// the shared [`leader_loop`]. The kernel does the buffering a [`sync`]
+/// channel would — these reader threads deliberately bypass the
+/// checker-visible shim (a socket `read` can't be scheduled by
+/// `proxlead-check`); the InProc arm keeps full checker coverage.
+#[allow(clippy::too_many_arguments)]
+fn leader_socket(
+    w: &MixingOp,
+    x0: &Mat,
+    spec: &RunSpec,
+    x_star: &[f64],
+    gated: bool,
+    start: Instant,
+    probes: &mut [&mut dyn Probe],
+    listener: socket::Listener,
+    fingerprint: u64,
+    accept_timeout: Duration,
+) -> LeaderOutcome {
+    let n = w.n();
+    let hello = Hello {
+        fingerprint,
+        n: n as u32,
+        dim: x0.cols as u32,
+        rounds: spec.stop.max_rounds as u32,
+        record_every: spec.record_every as u32,
+        gated,
+    };
+    // setup failures surface as a round-0 wire fault on the node that
+    // failed to join: the shared tail turns it into StopReason::WireFault
+    let fail = |te: TransportError, node: u16| LeaderOutcome {
+        history: Vec::new(),
+        final_x: None,
+        stopped_by: None,
+        faults: vec![WireFault { node, round: 0, error: WireError::Transport(te) }],
+    };
+    let streams = match socket::accept_nodes(&listener, &hello, accept_timeout) {
+        Ok(s) => s,
+        Err(te) => {
+            let node = match te {
+                TransportError::HandshakeTimeout { missing } => missing,
+                _ => 0,
+            };
+            return fail(te, node);
+        }
+    };
+    let (readers, writers) = match socket::split(streams) {
+        Ok(rw) => rw,
+        Err(te) => return fail(te, 0),
+    };
+    let (ev_tx, ev_rx) = std::sync::mpsc::channel::<NodeEvent>();
+    thread::scope(|scope| {
+        for (i, reader) in readers.into_iter().enumerate() {
+            let neighbors: Vec<usize> = w.neighbors(i).iter().map(|&(j, _)| j).collect();
+            let writers = &writers;
+            let ev_tx = ev_tx.clone();
+            thread::Builder::new()
+                .name(format!("uplink-{i}"))
+                .spawn_scoped(scope, move || {
+                    socket::run_uplink(i as u16, reader, &neighbors, writers, &ev_tx);
+                })
+                .expect("spawn uplink thread");
+        }
+        // each uplink thread holds a clone; dropping ours makes ev_rx hang
+        // up exactly when the last socket closes
+        drop(ev_tx);
+        let mut vbuf = Vec::new();
+        leader_loop(n, x0, x_star, spec, gated, start, probes, || ev_rx.recv().ok(), |go| {
+            socket::send_verdicts(&writers, go, &mut vbuf)
+        })
+    })
 }
 
 /// Distributed Prox-LEAD over node threads — the historical hand-wired

@@ -68,7 +68,7 @@ use super::wire::{self, Frame, FrameRef, WireCodec, WireError, WireFault, ABORT_
 use super::{CoordConfig, NodeEvent, NodeReport, TamperKind};
 use crate::graph::MixingOp;
 use crate::linalg::{vaxpy, Mat};
-use crate::runtime::sync::{Receiver, Sender};
+use crate::transport::NodeLink;
 use crate::util::rng::Rng;
 use std::sync::Arc;
 
@@ -192,14 +192,13 @@ fn acc(out: &mut [f64], w: f64, v: &[f64]) {
 /// Everything a node thread needs besides its algorithm half.
 pub struct NodeConfig {
     pub id: usize,
-    /// (neighbor id, sender into that neighbor's inbox), ascending id —
-    /// aligned with the algorithm's [`WeightRow`].
-    pub neighbors: Vec<(usize, Sender<Arc<[u8]>>)>,
-    pub inbox: Receiver<Arc<[u8]>>,
-    pub reports: Sender<NodeEvent>,
-    /// Leader gating channel (`Some` when the run's stop set needs leader
-    /// observation): `true` = continue past the checkpoint, `false` = stop.
-    pub control: Option<Receiver<bool>>,
+    /// Gossip neighbor ids, ascending — aligned with the algorithm's
+    /// [`WeightRow`].
+    pub neighbors: Vec<usize>,
+    /// The node's view of the network: in-process channels or a socket to
+    /// the leader ([`crate::transport`]). Carries broadcast, receive, the
+    /// report uplink, and the leader's checkpoint verdicts.
+    pub link: Box<dyn NodeLink>,
     /// Wire-level knobs: codec, straggler model, RNG seed, tamper.
     pub wire: CoordConfig,
     /// Counted algorithm rounds (setup rounds excluded).
@@ -278,15 +277,20 @@ fn absorb(
 }
 
 /// Flood a payload-less control frame (ABORT or BYE) to every neighbor.
-/// Send failures mean the peer already exited — ignored by design.
-fn flood(neighbors: &[(usize, Sender<Arc<[u8]>>)], tag: u8, round: u32, me: u16) {
+/// Send failures mean the peer already exited — ignored by design (the
+/// link's broadcast still *attempts* every neighbor past a dead one).
+fn flood(link: &mut dyn NodeLink, tag: u8, round: u32, me: u16) {
     let mut buf = Vec::with_capacity(Frame::HEADER_LEN);
     wire::frame_begin(&mut buf, tag, round, me);
     wire::frame_end(&mut buf);
     let buf: Arc<[u8]> = Arc::from(buf.as_slice());
-    for (_, tx) in neighbors {
-        let _ = tx.send(Arc::clone(&buf));
-    }
+    let _ = link.broadcast(&buf);
+}
+
+/// Fault teardown: flood ABORT, report the typed fault to the leader.
+fn fault(link: &mut dyn NodeLink, e: WireError, k: usize, me: u16) {
+    flood(link, ABORT_TAG, k as u32, me);
+    let _ = link.report(NodeEvent::Fault(WireFault { node: me, round: k as u32, error: e }));
 }
 
 /// Corrupt an outgoing frame buffer in a prescribed way (test/chaos hook;
@@ -323,6 +327,7 @@ pub fn run_node(mut alg: Box<dyn NodeAlgorithm>, nc: NodeConfig) {
     let me = nc.id;
     let p = nc.dim;
     let wire_cfg = &nc.wire;
+    let mut link = nc.link;
     // deterministic per-node streams: compression dither + straggler coin
     let mut comp_rng = Rng::new(wire_cfg.seed).fork(me as u64);
     let mut fault_rng = Rng::new(wire_cfg.seed ^ 0x5747_4C52).fork(me as u64);
@@ -337,7 +342,7 @@ pub fn run_node(mut alg: Box<dyn NodeAlgorithm>, nc: NodeConfig) {
     let mut q_own = vec![0.0; p];
     let mut frame_buf: Vec<u8> = Vec::with_capacity(Frame::HEADER_LEN + p * 8 + 8);
     let mut peers: Vec<(usize, Vec<f64>)> =
-        nc.neighbors.iter().map(|&(j, _)| (j, vec![0.0; p])).collect();
+        nc.neighbors.iter().map(|&j| (j, vec![0.0; p])).collect();
     let mut filled = vec![false; deg];
     let mut departed = vec![false; deg];
     // raw round-(k+1) buffers from fast neighbors; swapped each round
@@ -345,25 +350,12 @@ pub fn run_node(mut alg: Box<dyn NodeAlgorithm>, nc: NodeConfig) {
     let mut ahead_next: Vec<Arc<[u8]>> = Vec::with_capacity(deg);
     let (mut bytes_sent, mut payload_bits) = (0u64, 0u64);
 
-    // fault teardown: flood ABORT, report the typed fault, exit
-    let fault = |e: WireError, k: usize| {
-        flood(&nc.neighbors, ABORT_TAG, k as u32, me as u16);
-        let _ = nc.reports.send(NodeEvent::Fault(WireFault {
-            node: me as u16,
-            round: k as u32,
-            error: e,
-        }));
-    };
-    // secondary teardown (a peer died or said goodbye mid-gather): keep the
-    // wave moving but report nothing — the detecting node already did
-    let teardown = |k: usize| flood(&nc.neighbors, ABORT_TAG, k as u32, me as u16);
-
     for k in 0..total {
         if k == setup {
             // round-0 report: the post-initialization state (engine: the
             // sample taken before the first step). Setup-round wire costs
             // (P2D2's init exchange) are already in the counters.
-            let sent = nc.reports.send(NodeEvent::Report(NodeReport {
+            let sent = link.report(NodeEvent::Report(NodeReport {
                 node: me,
                 round: 0,
                 x: alg.x().to_vec(),
@@ -385,22 +377,27 @@ pub fn run_node(mut alg: Box<dyn NodeAlgorithm>, nc: NodeConfig) {
                 apply_tamper(&mut frame_buf, t.kind);
             }
         }
-        // one refcounted buffer for the whole broadcast — the round's only
-        // allocation (channel handoff needs ownership)
-        let buf: Arc<[u8]> = Arc::from(frame_buf.as_slice());
-        for (_, tx) in &nc.neighbors {
-            if let Some(s) = wire_cfg.straggler {
+        // straggler coins: one per gossip edge, drawn in ascending-neighbor
+        // order — the same fault_rng consumption as the historical per-edge
+        // send loop, so seeded runs stay comparable across transports
+        if let Some(s) = wire_cfg.straggler {
+            for _ in 0..deg {
                 if fault_rng.bernoulli(s.prob) {
                     std::thread::sleep(s.delay);
                 }
             }
-            bytes_sent += buf.len() as u64;
-            if tx.send(Arc::clone(&buf)).is_err() {
-                // peer gone mid-run: only happens downstream of a fault or
-                // an early leader release — join the teardown wave
-                teardown(k);
-                return;
-            }
+        }
+        // one refcounted buffer for the whole broadcast — the round's only
+        // allocation (the transport handoff needs ownership). Wire bytes
+        // count per gossip edge regardless of how the transport moves them
+        // (the socket hub relays one upstream copy along each edge).
+        let buf: Arc<[u8]> = Arc::from(frame_buf.as_slice());
+        bytes_sent += (buf.len() * deg) as u64;
+        if link.broadcast(&buf).is_err() {
+            // peer gone mid-run: only happens downstream of a fault or an
+            // early leader release — join the teardown wave
+            flood(&mut *link, ABORT_TAG, k as u32, me as u16);
+            return;
         }
 
         // barrier: exactly one frame per neighbor, slotted by sender id so
@@ -415,11 +412,11 @@ pub fn run_node(mut alg: Box<dyn NodeAlgorithm>, nc: NodeConfig) {
                 Ok(Gather::Ahead) => {}
                 Ok(Gather::Bye(slot)) => departed[slot] = true,
                 Ok(Gather::Abort) => {
-                    teardown(k);
+                    flood(&mut *link, ABORT_TAG, k as u32, me as u16);
                     return;
                 }
                 Err(e) => {
-                    fault(e, k);
+                    fault(&mut *link, e, k, me as u16);
                     return;
                 }
             }
@@ -428,13 +425,14 @@ pub fn run_node(mut alg: Box<dyn NodeAlgorithm>, nc: NodeConfig) {
             // a departed neighbor can never fill its owed slot — tear down
             // instead of blocking forever
             if filled.iter().zip(&departed).any(|(&f, &d)| d && !f) {
-                teardown(k);
+                flood(&mut *link, ABORT_TAG, k as u32, me as u16);
                 return;
             }
-            let raw = match nc.inbox.recv() {
+            let raw = match link.recv() {
                 Ok(r) => r,
-                // every sender dropped without a goodbye: fault teardown
-                // already in flight elsewhere
+                // link gone without a goodbye (every in-process sender
+                // dropped, or the socket died): fault teardown already in
+                // flight elsewhere
                 Err(_) => return,
             };
             match absorb(raw, k as u32, expected_tag, &wire_cfg.codec, &mut peers, &mut filled, &mut ahead_next)
@@ -443,11 +441,11 @@ pub fn run_node(mut alg: Box<dyn NodeAlgorithm>, nc: NodeConfig) {
                 Ok(Gather::Ahead) => {}
                 Ok(Gather::Bye(slot)) => departed[slot] = true,
                 Ok(Gather::Abort) => {
-                    teardown(k);
+                    flood(&mut *link, ABORT_TAG, k as u32, me as u16);
                     return;
                 }
                 Err(e) => {
-                    fault(e, k);
+                    fault(&mut *link, e, k, me as u16);
                     return;
                 }
             }
@@ -458,7 +456,7 @@ pub fn run_node(mut alg: Box<dyn NodeAlgorithm>, nc: NodeConfig) {
         if k >= setup {
             let step = k - setup + 1;
             if step % nc.record_every == 0 || step == nc.rounds {
-                let sent = nc.reports.send(NodeEvent::Report(NodeReport {
+                let sent = link.report(NodeEvent::Report(NodeReport {
                     node: me,
                     round: step,
                     x: alg.x().to_vec(),
@@ -473,12 +471,11 @@ pub fn run_node(mut alg: Box<dyn NodeAlgorithm>, nc: NodeConfig) {
             // checkpoint gate: wait for the leader's continue/stop verdict
             // (sent for every flushed multiple of record_every before the
             // final round — the same set of steps on every node, so a stop
-            // lands network-wide on one round)
+            // lands network-wide on one round). Ungated links answer an
+            // immediate `continue`, matching the historical no-channel case.
             if step % nc.record_every == 0 && step < nc.rounds {
-                if let Some(ctrl) = &nc.control {
-                    if !ctrl.recv().unwrap_or(false) {
-                        break;
-                    }
+                if !link.verdict().unwrap_or(false) {
+                    break;
                 }
             }
         }
@@ -486,7 +483,7 @@ pub fn run_node(mut alg: Box<dyn NodeAlgorithm>, nc: NodeConfig) {
     // clean exit: tell the neighborhood no more frames are coming (harmless
     // when everyone stops at the same round; unblocks stragglers when the
     // leader released this node early after a fault)
-    flood(&nc.neighbors, BYE_TAG, total as u32, me as u16);
+    flood(&mut *link, BYE_TAG, total as u32, me as u16);
 }
 
 #[cfg(test)]

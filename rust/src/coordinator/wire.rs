@@ -34,6 +34,7 @@
 use crate::compress::bits::{
     decode_inf_quantized_into, encode_inf_quantized, encode_inf_quantized_into, QuantError,
 };
+use crate::transport::TransportError;
 use crate::util::rng::Rng;
 use std::fmt;
 
@@ -96,6 +97,10 @@ pub enum WireError {
     /// Frame round outside the one-round skew the synchronous barrier
     /// allows (stale, or more than one round ahead).
     RoundSkew { from: u16, frame_round: u32, expect: u32 },
+    /// The byte stream under the frames failed (socket transports only):
+    /// EOF mid-run, short read, refused dial, timeout. In-process
+    /// channels never produce this variant.
+    Transport(TransportError),
 }
 
 impl fmt::Display for WireError {
@@ -134,6 +139,7 @@ impl fmt::Display for WireError {
                      (±1 ahead allowed)"
                 )
             }
+            WireError::Transport(e) => write!(f, "transport: {e}"),
         }
     }
 }

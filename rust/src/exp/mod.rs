@@ -45,8 +45,11 @@ use crate::linalg::Mat;
 use crate::oracle::OracleKind;
 use crate::problem::{Problem, ProblemKind};
 use crate::prox::Prox;
+use crate::coordinator::node::run_node;
+use crate::coordinator::{NodeConfig, WeightRow};
 use crate::runner::{self, Probe, RunResult, RunSpec};
 use crate::sim;
+use crate::transport::{self, socket, Hello, Transport};
 use std::sync::{Arc, OnceLock};
 use std::time::Duration;
 
@@ -262,18 +265,35 @@ impl Experiment {
         self.run_coordinator_probed(spec, &mut [])
     }
 
-    /// [`Experiment::run_coordinator`] with streaming [`Probe`]s.
+    /// [`Experiment::run_coordinator`] with streaming [`Probe`]s. Honors
+    /// the config's `transport` key: `inproc` spawns node threads; `tcp` /
+    /// `unix` bind the config's `bind` address and wait for `proxlead
+    /// node` worker processes to dial in (a bind failure panics with the
+    /// config error — pre-flight with [`Experiment::bind_transport`] to
+    /// handle it).
     pub fn run_coordinator_probed(
         &self,
         spec: &RunSpec,
         probes: &mut [&mut dyn Probe],
+    ) -> RunResult {
+        let transport = self.bind_transport().unwrap_or_else(|e| panic!("{e}"));
+        self.run_coordinator_transport(spec, probes, transport)
+    }
+
+    /// [`Experiment::run_coordinator_probed`] over an explicit, already
+    /// bound [`Transport`] (tests bind ephemeral listeners themselves).
+    pub fn run_coordinator_transport(
+        &self,
+        spec: &RunSpec,
+        probes: &mut [&mut dyn Probe],
+        transport: Transport,
     ) -> RunResult {
         let mut wire = self.coord_config();
         if let Some(s) = spec.seed {
             wire.seed = s;
         }
         let x_star = self.reference();
-        coordinator::run(
+        coordinator::run_with_transport(
             &self.mixing,
             &self.x0,
             &self.config.algorithm,
@@ -282,7 +302,154 @@ impl Experiment {
             &x_star,
             probes,
             |i, row| registry::build_node_algorithm(self, &wire, i, row),
+            transport,
         )
+    }
+
+    /// Config fingerprint for the socket handshake: FNV-1a over the
+    /// canonical config rendering with the output path blanked (where a
+    /// run's JSON lands must not stop machines from agreeing they run the
+    /// same experiment). Leader and `proxlead node` workers must match.
+    pub fn wire_fingerprint(&self) -> u64 {
+        let mut c = self.config.clone();
+        c.out = String::new();
+        transport::fingerprint(&c.to_text())
+    }
+
+    /// Bind the configured transport: `inproc` needs no resources; `tcp`
+    /// and `unix` bind the leader's listener at the config's `bind`
+    /// address. The fallible half of a socket run, split out so callers
+    /// can surface bind errors as config errors instead of panics.
+    pub fn bind_transport(&self) -> Result<Transport, ConfigError> {
+        let cfg = &self.config;
+        // workers get connect_timeout_ms of dial budget; the leader's
+        // accept loop waits twice that (1s floor for ephemeral-port tests)
+        let accept = Duration::from_millis(cfg.connect_timeout_ms.saturating_mul(2).max(1000));
+        let fp = self.wire_fingerprint();
+        match cfg.transport.as_str() {
+            "inproc" => Ok(Transport::InProc),
+            "tcp" => {
+                let l = std::net::TcpListener::bind(&cfg.bind)
+                    .map_err(|e| ConfigError(format!("bind {}: {e}", cfg.bind)))?;
+                Ok(Transport::tcp(l, fp, accept))
+            }
+            "unix" => {
+                // a stale socket file from a dead leader would fail the
+                // bind; the path is ours by configuration
+                let _ = std::fs::remove_file(&cfg.bind);
+                let l = std::os::unix::net::UnixListener::bind(&cfg.bind)
+                    .map_err(|e| ConfigError(format!("bind {}: {e}", cfg.bind)))?;
+                Ok(Transport::unix(l, fp, accept))
+            }
+            t => Err(ConfigError(format!("unknown transport '{t}' (inproc | tcp | unix)"))),
+        }
+    }
+
+    /// Run ONE node's half of a socket-coordinator run: dial the leader at
+    /// the config's `bind` address (bounded retry while the leader is
+    /// still binding), handshake as `node`, then drive the configured
+    /// algorithm over the socket link until BYE/ABORT. This is what
+    /// `proxlead node --node-id i` executes, once per worker process; the
+    /// leader assembles the [`RunResult`].
+    pub fn run_node_worker(&self, spec: &RunSpec, node: usize) -> Result<(), ConfigError> {
+        let cfg = &self.config;
+        let addr = match cfg.transport.as_str() {
+            "tcp" => socket::DialAddr::Tcp(cfg.bind.clone()),
+            "unix" => socket::DialAddr::Unix(std::path::PathBuf::from(&cfg.bind)),
+            t => {
+                return Err(ConfigError(format!(
+                    "transport = {t} has no node workers (use tcp or unix)"
+                )))
+            }
+        };
+        self.run_node_worker_at(spec, node, &addr)
+    }
+
+    /// [`Experiment::run_node_worker`] with an explicit dial address (the
+    /// loopback harness dials an ephemeral port the OS picked).
+    pub fn run_node_worker_at(
+        &self,
+        spec: &RunSpec,
+        node: usize,
+        addr: &socket::DialAddr,
+    ) -> Result<(), ConfigError> {
+        let n = self.mixing.n();
+        if node >= n {
+            return Err(ConfigError(format!("node id {node} out of range (nodes = {n})")));
+        }
+        let mut wire = self.coord_config();
+        if let Some(s) = spec.seed {
+            wire.seed = s;
+        }
+        let hello = Hello {
+            fingerprint: self.wire_fingerprint(),
+            n: n as u32,
+            dim: self.problem.dim() as u32,
+            rounds: spec.stop.max_rounds as u32,
+            record_every: spec.record_every as u32,
+            gated: spec.stop.leader_gated(),
+        };
+        let timeout = Duration::from_millis(self.config.connect_timeout_ms.max(1));
+        let link = socket::dial(addr, node as u16, &hello, timeout)
+            .map_err(|e| ConfigError(format!("node {node}: dial {addr:?}: {e}")))?;
+        let row = WeightRow::from_op(&self.mixing, node);
+        let neighbors: Vec<usize> = row.neighbors.iter().map(|&(j, _)| j).collect();
+        let alg = registry::build_node_algorithm(self, &wire, node, row);
+        run_node(
+            alg,
+            NodeConfig {
+                id: node,
+                neighbors,
+                link: Box::new(link),
+                wire,
+                rounds: spec.stop.max_rounds,
+                record_every: spec.record_every,
+                dim: self.problem.dim(),
+            },
+        );
+        Ok(())
+    }
+
+    /// Loopback socket harness: bind an ephemeral listener (tcp on
+    /// 127.0.0.1:0, unix on a unique temp path), run every node worker on
+    /// an in-process thread, and drive the leader — a complete
+    /// socket-transport run inside one process. The transport parity tests
+    /// and the wire-bytes bench use this; real deployments run `proxlead
+    /// node` worker processes instead. `kind` is `"tcp"` or `"unix"`.
+    pub fn run_coordinator_loopback(&self, spec: &RunSpec, kind: &str) -> RunResult {
+        let accept = Duration::from_secs(30);
+        let fp = self.wire_fingerprint();
+        let (transport, addr) = match kind {
+            "tcp" => {
+                let l = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback tcp");
+                let addr = l.local_addr().expect("loopback local addr").to_string();
+                (Transport::tcp(l, fp, accept), socket::DialAddr::Tcp(addr))
+            }
+            "unix" => {
+                let path = loopback_socket_path();
+                let _ = std::fs::remove_file(&path);
+                let l =
+                    std::os::unix::net::UnixListener::bind(&path).expect("bind loopback unix");
+                (Transport::unix(l, fp, accept), socket::DialAddr::Unix(path))
+            }
+            t => panic!("loopback transport must be tcp or unix (got {t})"),
+        };
+        let n = self.mixing.n();
+        let res = std::thread::scope(|scope| {
+            for i in 0..n {
+                let addr = addr.clone();
+                scope.spawn(move || {
+                    // a worker that fails to dial shows up leader-side as
+                    // a HandshakeTimeout fault — nothing to do here
+                    let _ = self.run_node_worker_at(spec, i, &addr);
+                });
+            }
+            self.run_coordinator_transport(spec, &mut [], transport)
+        });
+        if let socket::DialAddr::Unix(p) = &addr {
+            let _ = std::fs::remove_file(p);
+        }
+        res
     }
 
     /// Drive the configured algorithm through the event-driven massive-n
@@ -333,6 +500,14 @@ impl Experiment {
     }
 }
 
+/// A collision-free unix socket path for a loopback run: process id plus
+/// a per-process counter (no clocks, no randomness — see clippy.toml).
+fn loopback_socket_path() -> std::path::PathBuf {
+    static SEQ: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+    let k = SEQ.fetch_add(1, std::sync::atomic::Ordering::AcqRel);
+    std::env::temp_dir().join(format!("proxlead-loop-{}-{k}.sock", std::process::id()))
+}
+
 /// The factory checks shared by [`validate_config`] and
 /// [`Experiment::from_config`]'s assembly — one checklist, so the two
 /// paths cannot drift (a factory validated here is safe to `expect()` in
@@ -342,15 +517,34 @@ fn validate_runtime_factories(cfg: &Config) -> Result<(), ConfigError> {
     cfg.oracle_kind()?;
     cfg.codec()?;
     registry::ensure_backend(&cfg.backend)?;
-    // the sim shares the coordinator's frame format, whose `from` field is
-    // a u16 — reject instead of silently truncating sender ids in
+    // the sim and the coordinator share one frame format, whose `from`
+    // field is a u16 — reject instead of silently truncating sender ids in
     // WireFault reports (the arithmetic never routes on the id)
-    if cfg.backend == "sim" && cfg.nodes > u16::MAX as usize {
+    if (cfg.backend == "sim" || cfg.backend == "coordinator") && cfg.nodes > u16::MAX as usize {
         return Err(ConfigError(format!(
-            "backend = sim supports at most 65535 nodes (frame sender ids are u16 on the \
+            "backend = {} supports at most 65535 nodes (frame sender ids are u16 on the \
              wire); got nodes = {}",
-            cfg.nodes
+            cfg.backend, cfg.nodes
         )));
+    }
+    match cfg.transport.as_str() {
+        "inproc" => {}
+        "tcp" | "unix" => {
+            if cfg.backend != "coordinator" {
+                return Err(ConfigError(format!(
+                    "transport = {} requires backend = coordinator (got backend = {})",
+                    cfg.transport, cfg.backend
+                )));
+            }
+            if cfg.bind.is_empty() {
+                return Err(ConfigError(format!(
+                    "transport = {} needs a bind address (`bind = host:port` for tcp, a \
+                     socket path for unix)",
+                    cfg.transport
+                )));
+            }
+        }
+        t => return Err(ConfigError(format!("unknown transport '{t}' (inproc | tcp | unix)"))),
     }
     registry::ensure_algorithm(&cfg.algorithm)
 }

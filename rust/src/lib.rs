@@ -35,6 +35,7 @@ pub mod runner;
 pub mod runtime;
 pub mod sim;
 pub mod sweep;
+pub mod transport;
 pub mod util;
 
 pub fn version() -> &'static str {

@@ -79,7 +79,12 @@ pub const RULES: &[Rule] = &[
             "assert_ne!(",
         ],
         bare_index: true,
-        files: &["coordinator/wire.rs", "coordinator/node.rs", "compress/bits.rs"],
+        files: &[
+            "coordinator/wire.rs",
+            "coordinator/node.rs",
+            "compress/bits.rs",
+            "transport/framing.rs",
+        ],
         exclude: &[],
         fns: Some(&[
             // node.rs: the decode half (everything a hostile frame reaches)
@@ -100,6 +105,16 @@ pub const RULES: &[Rule] = &[
             "parse",
             "payload_len",
             "known_tag",
+            // transport/framing.rs: everything bytes off a socket reach —
+            // the outer length-delimited framing and the control-frame
+            // decoders (a hostile peer drives all of these)
+            "read_frame_into",
+            "write_frame",
+            "decode_hello",
+            "decode_report",
+            "decode_fault",
+            "decode_verdict",
+            "decode_reject",
         ]),
     },
     Rule {
@@ -125,6 +140,7 @@ pub const RULES: &[Rule] = &[
             "coordinator/wire.rs",
             "coordinator/node.rs",
             "sim/mod.rs",
+            "transport/framing.rs",
         ],
         exclude: &[],
         fns: Some(&[
@@ -161,6 +177,11 @@ pub const RULES: &[Rule] = &[
             "phase_b",
             "parse_decode",
             "drain",
+            // transport framing: the per-round socket read/write path
+            // reuses one scratch buffer (resize, not reallocate) — the
+            // PR-6 zero-alloc decode contract extended to the socket
+            "read_frame_into",
+            "write_frame",
         ]),
     },
     Rule {

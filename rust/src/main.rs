@@ -5,7 +5,11 @@
 //!   `--backend engine` (matrix engine, the default), `--backend
 //!   coordinator` (message-passing node threads, real wire bytes), or
 //!   `--backend sim` (sharded massive-n simulator) — optionally with the
-//!   PJRT/XLA gradient compute path (`--compute xla`);
+//!   PJRT/XLA gradient compute path (`--compute xla`). Under
+//!   `--transport tcp|unix` the coordinator leader listens on `bind` for
+//!   `proxlead node` worker processes instead of spawning threads;
+//! - `node`: one worker process of a socket-transport coordinator run
+//!   (dials the leader, handshakes as `--node-id N`);
 //! - `sweep`: a parallel experiment grid through the matrix engine (the
 //!   sweep runtime — deterministic regardless of `--threads`);
 //! - `solve-ref`: high-precision centralized reference x*;
@@ -34,6 +38,7 @@ fn main() {
     };
     let code = match inv.subcommand.as_str() {
         "train" => cmd_train(&inv),
+        "node" => cmd_node(&inv),
         "sweep" => cmd_sweep(&inv),
         "solve-ref" => cmd_solve_ref(&inv),
         "info" => cmd_info(&inv),
@@ -84,6 +89,8 @@ fn train_spec(inv: &Invocation, exp: &Experiment) -> Result<RunSpec, String> {
                 Ok(ms) => spec.deadline(Duration::from_millis(ms)),
                 _ => return Err(format!("--deadline-ms needs an integer (got '{val}')")),
             },
+            // consumed by cmd_train after the run (not a stop criterion)
+            "json" => spec,
             _ => return Err(format!("unrecognized or invalid flag --{key} {val}\n\n{USAGE}")),
         };
     }
@@ -137,8 +144,8 @@ fn cmd_train(inv: &Invocation) -> i32 {
     // metrics stream while the run is in flight: progress lines always,
     // live CSV when --out is set (a killed run keeps its rows)
     let mut progress = ProgressProbe::new();
-    if cfg.out.is_empty() {
-        exp.run_backend_probed(&spec, &mut [&mut progress]);
+    let res = if cfg.out.is_empty() {
+        exp.run_backend_probed(&spec, &mut [&mut progress])
     } else {
         let mut csv = match CsvProbe::to_path(&cfg.out) {
             Ok(p) => p,
@@ -148,10 +155,70 @@ fn cmd_train(inv: &Invocation) -> i32 {
             }
         };
         let probes: &mut [&mut dyn Probe] = &mut [&mut progress, &mut csv];
-        exp.run_backend_probed(&spec, probes);
+        let res = exp.run_backend_probed(&spec, probes);
         println!("wrote {}", cfg.out);
+        res
+    };
+    if let Some(path) = inv.flag("json") {
+        if let Err(e) = std::fs::write(path, res.to_json()) {
+            eprintln!("write {path}: {e}");
+            return 1;
+        }
+        println!("wrote {path}");
     }
     0
+}
+
+/// `proxlead node`: one worker process of a socket-transport coordinator
+/// run. Dials the leader at the config's `bind` address, handshakes as
+/// `--node-id N`, drives the configured algorithm's node half over the
+/// socket, and exits when the leader tears the run down (BYE/ABORT). The
+/// stop flags must match the leader's invocation — they shape the
+/// handshake (rounds, record_every, gating), and a mismatch is a typed
+/// reject at dial time.
+fn cmd_node(inv: &Invocation) -> i32 {
+    let Some(id) = inv.flag("node-id") else {
+        eprintln!("node: --node-id N is required (0-based, one worker per node)");
+        return 2;
+    };
+    let node: usize = match id.parse() {
+        Ok(v) => v,
+        Err(_) => {
+            eprintln!("--node-id needs a non-negative integer (got '{id}')");
+            return 2;
+        }
+    };
+    let exp = match resolve(inv) {
+        Ok(e) => e,
+        Err(code) => return code,
+    };
+    // the remaining extras are the train stop flags, shared with the leader
+    let rest = Invocation {
+        subcommand: inv.subcommand.clone(),
+        config: inv.config.clone(),
+        extra: inv.extra.iter().filter(|(k, _)| k != "node-id").cloned().collect(),
+    };
+    let spec = match train_spec(&rest, &exp) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    eprintln!(
+        "proxlead node {node}: dialing {} over {} ({} on {})",
+        inv.config.bind,
+        inv.config.transport,
+        inv.config.algorithm,
+        exp.problem.name()
+    );
+    match exp.run_node_worker(&spec, node) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
+    }
 }
 
 fn cmd_sweep(inv: &Invocation) -> i32 {

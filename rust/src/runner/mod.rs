@@ -51,6 +51,7 @@ pub use probe::{CsvProbe, Probe, ProgressProbe};
 use crate::algorithm::{suboptimality, Algorithm, Schedule};
 use crate::linalg::Mat;
 use crate::problem::Problem;
+use crate::util::json::Json;
 use std::time::{Duration, Instant};
 
 /// One recorded metric sample — the row behind every figure in §5
@@ -334,6 +335,44 @@ impl RunResult {
                 (xv, m.suboptimality)
             })
             .collect()
+    }
+
+    /// Serialize the full result — every history row, the stop reason, and
+    /// the final stacked iterate — as one JSON object. `proxlead train
+    /// --json FILE` writes this, and the multi-process CI smoke job uploads
+    /// it as the run artifact.
+    pub fn to_json(&self) -> String {
+        let history = Json::Arr(
+            self.history
+                .iter()
+                .map(|m| {
+                    Json::obj(vec![
+                        ("round", Json::Num(m.round as f64)),
+                        ("grad_evals", Json::Num(m.grad_evals as f64)),
+                        ("bits", Json::Num(m.bits as f64)),
+                        ("wire_bytes", Json::Num(m.wire_bytes as f64)),
+                        ("suboptimality", Json::Num(m.suboptimality)),
+                        ("consensus", Json::Num(m.consensus)),
+                        ("wall_ns", Json::Num(m.wall_ns as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        let final_x = Json::obj(vec![
+            ("rows", Json::Num(self.final_x.rows as f64)),
+            ("cols", Json::Num(self.final_x.cols as f64)),
+            ("data", Json::arr_f64(&self.final_x.data)),
+        ]);
+        Json::obj(vec![
+            ("schema", Json::Str("proxlead-run-v1".into())),
+            ("name", Json::Str(self.name.clone())),
+            ("backend", Json::Str(self.backend.name().into())),
+            ("stopped_by", Json::Str(self.stopped_by.name().into())),
+            ("elapsed_ns", Json::Num(self.elapsed.as_nanos() as f64)),
+            ("history", history),
+            ("final_x", final_x),
+        ])
+        .to_string()
     }
 
     /// The flat end-of-run summary handed to [`Probe::on_finish`].
@@ -662,6 +701,23 @@ mod tests {
             final_x: Mat::zeros(1, 1),
         };
         let _ = res.series(XAxis::Epochs(0));
+    }
+
+    #[test]
+    fn run_result_serializes_to_parseable_json() {
+        let exp = ring_exp();
+        let x_star = vec![0.0; exp.problem.dim()];
+        let mut alg = exact_prox_lead(&exp);
+        let res =
+            run_engine(alg.as_mut(), exp.problem.as_ref(), &x_star, &RunSpec::fixed(4), &mut []);
+        let v = Json::parse(&res.to_json()).unwrap();
+        assert_eq!(v.get("schema").unwrap().as_str(), Some("proxlead-run-v1"));
+        assert_eq!(v.get("backend").unwrap().as_str(), Some("engine"));
+        assert_eq!(v.get("stopped_by").unwrap().as_str(), Some("max-rounds"));
+        assert_eq!(v.get("history").unwrap().as_arr().unwrap().len(), res.history.len());
+        let fx = v.get("final_x").unwrap();
+        assert_eq!(fx.get("rows").unwrap().as_usize(), Some(res.final_x.rows));
+        assert_eq!(fx.get("data").unwrap().as_arr().unwrap().len(), res.final_x.data.len());
     }
 
     #[test]

@@ -23,6 +23,14 @@
 //! comment at every `Relaxed`/`SeqCst` call site outside this module),
 //! while the checker uses the stated ordering to maintain release clocks,
 //! so an unjustified downgrade shows up as a race finding in scenarios.
+//!
+//! **Scope note (DESIGN.md §4e):** only the *in-process* transport runs
+//! through this shim. A socket-transport coordinator's uplink reader
+//! threads (`transport::socket::run_uplink`) deliberately use plain
+//! `std::thread` + `std::sync::mpsc`: their nondeterminism comes from
+//! the kernel's socket scheduling, which the checker cannot enumerate —
+//! that path is covered by the transport parity/kill tests and the CI
+//! multi-process smoke job instead.
 
 use std::collections::VecDeque;
 use std::fmt;

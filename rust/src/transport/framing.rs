@@ -1,0 +1,498 @@
+//! Length-delimited socket framing + the control-plane frame codecs.
+//!
+//! A socket message is `[u32 outer_len LE][outer_len bytes]`, where the
+//! body is one *inner* frame in the exact [`crate::coordinator::wire`]
+//! format (`[tag][round][from][payload_len][payload…]`). The outer prefix
+//! is deliberately redundant for well-formed frames: the tamper matrix
+//! ([`crate::coordinator::TamperKind`]) produces inner frames whose own
+//! length field lies (truncated header, short payload, trailing garbage),
+//! and without an independent delimiter one corrupt frame would desync
+//! the byte stream forever. With it, corrupt frames transit the relay
+//! intact and the *receiving node's* decode path detects them — the same
+//! typed [`crate::coordinator::WireError`] as in-process transport.
+//!
+//! **Contract (lint-enforced):** [`read_frame_into`] and [`write_frame`]
+//! are on the `zero-alloc` + `panic-freedom` scope lists — reads land in
+//! a caller-owned scratch buffer (amortized like the PR-6 decode
+//! scratch), and every malformed input or socket failure returns a typed
+//! [`TransportError`], never a panic. The `decode_*` control codecs are
+//! `panic-freedom`-scoped: total over arbitrary bytes.
+
+use super::{
+    map_io, Reject, TransportError, FAULT_TAG, HELLO_TAG, REJECT_TAG, REPORT_TAG, VERDICT_TAG,
+    WELCOME_TAG,
+};
+use crate::coordinator::wire::{frame_begin, frame_end};
+use crate::coordinator::{FrameRef, NodeReport, WireError, WireFault};
+use std::io::{ErrorKind, Read, Write};
+
+/// Outer-frame size cap: an adversarial or desynced length prefix must
+/// not make the receiver allocate unbounded scratch.
+pub const MAX_FRAME_LEN: u32 = 64 * 1024 * 1024;
+
+/// Write one outer-framed message: length prefix, then the inner frame
+/// bytes, then flush. Allocation-free; all failures are typed.
+pub fn write_frame<W: Write>(w: &mut W, frame: &[u8]) -> Result<(), TransportError> {
+    let len = frame.len() as u64;
+    if len > MAX_FRAME_LEN as u64 {
+        return Err(TransportError::Oversize { len: len.min(u32::MAX as u64) as u32 });
+    }
+    let hdr = (len as u32).to_le_bytes();
+    w.write_all(&hdr).map_err(|e| map_io(&e))?;
+    w.write_all(frame).map_err(|e| map_io(&e))?;
+    w.flush().map_err(|e| map_io(&e))
+}
+
+/// Read one outer-framed message into `scratch` (resized to the exact
+/// frame length; its warmed-up capacity is reused across frames, so the
+/// steady state allocates nothing). Distinguishes a clean close at a
+/// message boundary ([`TransportError::Eof`]) from a stream that died
+/// mid-message ([`TransportError::ShortRead`]).
+pub fn read_frame_into<R: Read>(r: &mut R, scratch: &mut Vec<u8>) -> Result<(), TransportError> {
+    let mut hdr = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        let Some(rest) = hdr.get_mut(got..) else {
+            return Err(TransportError::Protocol);
+        };
+        match r.read(rest) {
+            Ok(0) => {
+                return Err(if got == 0 {
+                    TransportError::Eof
+                } else {
+                    TransportError::ShortRead { need: 4, got: got as u32 }
+                });
+            }
+            Ok(k) => got += k,
+            Err(ref e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(map_io(&e)),
+        }
+    }
+    let len = u32::from_le_bytes(hdr);
+    if len > MAX_FRAME_LEN {
+        return Err(TransportError::Oversize { len });
+    }
+    scratch.resize(len as usize, 0);
+    let mut off = 0usize;
+    while off < len as usize {
+        let Some(rest) = scratch.get_mut(off..) else {
+            return Err(TransportError::Protocol);
+        };
+        match r.read(rest) {
+            Ok(0) => return Err(TransportError::ShortRead { need: len, got: off as u32 }),
+            Ok(k) => off += k,
+            Err(ref e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(map_io(&e)),
+        }
+    }
+    Ok(())
+}
+
+/// The handshake payload a dialing node presents: the config fingerprint
+/// ([`super::fingerprint`] over the canonical config text) plus the
+/// run-shape fields that live *outside* the config (CLI-resolved), so
+/// flag drift between leader and worker invocations is caught before any
+/// wire round starts. The node id rides in the inner header's `from`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Hello {
+    pub fingerprint: u64,
+    pub n: u32,
+    pub dim: u32,
+    pub rounds: u32,
+    pub record_every: u32,
+    pub gated: bool,
+}
+
+/// Total little-endian u64 read at `off`.
+fn rd8(p: &[u8], off: usize) -> Option<u64> {
+    let s = p.get(off..off.checked_add(8)?)?;
+    let a = <[u8; 8]>::try_from(s).ok()?;
+    Some(u64::from_le_bytes(a))
+}
+
+/// Total little-endian u32 read at `off`.
+fn rd4(p: &[u8], off: usize) -> Option<u32> {
+    let s = p.get(off..off.checked_add(4)?)?;
+    let a = <[u8; 4]>::try_from(s).ok()?;
+    Some(u32::from_le_bytes(a))
+}
+
+/// Build a HELLO frame for node `node` into `out` (reused buffer).
+pub fn encode_hello(out: &mut Vec<u8>, node: u16, h: &Hello) {
+    frame_begin(out, HELLO_TAG, 0, node);
+    out.extend_from_slice(&h.fingerprint.to_le_bytes());
+    out.extend_from_slice(&h.n.to_le_bytes());
+    out.extend_from_slice(&h.dim.to_le_bytes());
+    out.extend_from_slice(&h.rounds.to_le_bytes());
+    out.extend_from_slice(&h.record_every.to_le_bytes());
+    out.push(h.gated as u8);
+    frame_end(out);
+}
+
+/// Total decode of a HELLO frame: `(node id, Hello)`.
+pub fn decode_hello(f: &FrameRef<'_>) -> Result<(u16, Hello), TransportError> {
+    if f.tag != HELLO_TAG || f.payload.len() != 25 {
+        return Err(TransportError::Protocol);
+    }
+    let p = f.payload;
+    let (Some(fingerprint), Some(n), Some(dim), Some(rounds), Some(record_every)) =
+        (rd8(p, 0), rd4(p, 8), rd4(p, 12), rd4(p, 16), rd4(p, 20))
+    else {
+        return Err(TransportError::Protocol);
+    };
+    let gated = match p.get(24) {
+        Some(0) => false,
+        Some(1) => true,
+        _ => return Err(TransportError::Protocol),
+    };
+    Ok((f.from, Hello { fingerprint, n, dim, rounds, record_every, gated }))
+}
+
+/// Build a WELCOME frame (empty payload) into `out`.
+pub fn encode_welcome(out: &mut Vec<u8>) {
+    frame_begin(out, WELCOME_TAG, 0, 0);
+    frame_end(out);
+}
+
+/// Build a REJECT frame carrying the typed reason into `out`.
+pub fn encode_reject(out: &mut Vec<u8>, r: Reject) {
+    frame_begin(out, REJECT_TAG, 0, 0);
+    out.push(r.code());
+    frame_end(out);
+}
+
+/// Total decode of a REJECT frame.
+pub fn decode_reject(f: &FrameRef<'_>) -> Result<Reject, TransportError> {
+    if f.tag != REJECT_TAG {
+        return Err(TransportError::Protocol);
+    }
+    match f.payload {
+        &[c] => Reject::from_code(c).ok_or(TransportError::Protocol),
+        _ => Err(TransportError::Protocol),
+    }
+}
+
+/// Build a VERDICT frame (`true` = continue past the checkpoint).
+pub fn encode_verdict(out: &mut Vec<u8>, go: bool) {
+    frame_begin(out, VERDICT_TAG, 0, 0);
+    out.push(go as u8);
+    frame_end(out);
+}
+
+/// Total decode of a VERDICT frame.
+pub fn decode_verdict(f: &FrameRef<'_>) -> Result<bool, TransportError> {
+    if f.tag != VERDICT_TAG {
+        return Err(TransportError::Protocol);
+    }
+    match f.payload {
+        &[0] => Ok(false),
+        &[1] => Ok(true),
+        _ => Err(TransportError::Protocol),
+    }
+}
+
+/// Build a REPORT frame from a node snapshot: counters, then the iterate
+/// as little-endian f64s. Round and node id ride in the inner header.
+pub fn encode_report(out: &mut Vec<u8>, r: &NodeReport) {
+    frame_begin(out, REPORT_TAG, r.round as u32, r.node as u16);
+    out.extend_from_slice(&r.bytes_sent.to_le_bytes());
+    out.extend_from_slice(&r.payload_bits.to_le_bytes());
+    out.extend_from_slice(&r.grad_evals.to_le_bytes());
+    for v in &r.x {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    frame_end(out);
+}
+
+/// Total decode of a REPORT frame (the iterate length is implied by the
+/// payload size; the leader checks it against the run's dimension).
+pub fn decode_report(f: &FrameRef<'_>) -> Result<NodeReport, TransportError> {
+    if f.tag != REPORT_TAG {
+        return Err(TransportError::Protocol);
+    }
+    let p = f.payload;
+    let (Some(bytes_sent), Some(payload_bits), Some(grad_evals)) =
+        (rd8(p, 0), rd8(p, 8), rd8(p, 16))
+    else {
+        return Err(TransportError::Protocol);
+    };
+    let Some(body) = p.get(24..) else {
+        return Err(TransportError::Protocol);
+    };
+    if body.len() % 8 != 0 {
+        return Err(TransportError::Protocol);
+    }
+    let mut x = Vec::with_capacity(body.len() / 8);
+    for c in body.chunks_exact(8) {
+        let Ok(a) = <[u8; 8]>::try_from(c) else {
+            return Err(TransportError::Protocol);
+        };
+        x.push(f64::from_le_bytes(a));
+    }
+    Ok(NodeReport {
+        node: f.from as usize,
+        round: f.round as usize,
+        x,
+        bytes_sent,
+        payload_bits,
+        grad_evals,
+    })
+}
+
+/// Fixed 26-byte encoding of a [`WireError`]:
+/// `[code u8][subcode u8][a u64][b u64][c u64]`.
+fn wire_error_fields(e: WireError) -> (u8, u8, u64, u64, u64) {
+    match e {
+        WireError::TruncatedHeader { len } => (0, 0, len as u64, 0, 0),
+        WireError::TruncatedPayload { need, got } => (1, 0, need as u64, got as u64, 0),
+        WireError::TrailingBytes { expected, got } => (2, 0, expected as u64, got as u64, 0),
+        WireError::UnknownTag { tag } => (3, 0, tag as u64, 0, 0),
+        WireError::TagMismatch { expected, got } => (4, 0, expected as u64, got as u64, 0),
+        WireError::PayloadSize { expected, got } => (5, 0, expected as u64, got as u64, 0),
+        WireError::TruncatedBitstream { need_bits, got_bits } => {
+            (6, 0, need_bits as u64, got_bits as u64, 0)
+        }
+        WireError::BadBlockNorm { block } => (7, 0, block as u64, 0, 0),
+        WireError::NonNeighbor { from } => (8, 0, from as u64, 0, 0),
+        WireError::DuplicateFrame { from, round } => (9, 0, from as u64, round as u64, 0),
+        WireError::RoundSkew { from, frame_round, expect } => {
+            (10, 0, from as u64, frame_round as u64, expect as u64)
+        }
+        WireError::Transport(t) => {
+            let (sub, a, b) = match t {
+                TransportError::Eof => (0, 0, 0),
+                TransportError::ShortRead { need, got } => (1, need as u64, got as u64),
+                TransportError::TimedOut => (2, 0, 0),
+                TransportError::Refused => (3, 0, 0),
+                TransportError::Oversize { len } => (4, len as u64, 0),
+                TransportError::Rejected(r) => (5, r.code() as u64, 0),
+                TransportError::Protocol => (6, 0, 0),
+                TransportError::Closed => (7, 0, 0),
+                TransportError::HandshakeTimeout { missing } => (8, missing as u64, 0),
+            };
+            (11, sub, a, b, 0)
+        }
+    }
+}
+
+/// Total inverse of [`wire_error_fields`].
+fn wire_error_from_fields(code: u8, sub: u8, a: u64, b: u64, c: u64) -> Option<WireError> {
+    Some(match code {
+        0 => WireError::TruncatedHeader { len: a as usize },
+        1 => WireError::TruncatedPayload { need: a as usize, got: b as usize },
+        2 => WireError::TrailingBytes { expected: a as usize, got: b as usize },
+        3 => WireError::UnknownTag { tag: a as u8 },
+        4 => WireError::TagMismatch { expected: a as u8, got: b as u8 },
+        5 => WireError::PayloadSize { expected: a as usize, got: b as usize },
+        6 => WireError::TruncatedBitstream { need_bits: a as usize, got_bits: b as usize },
+        7 => WireError::BadBlockNorm { block: a as usize },
+        8 => WireError::NonNeighbor { from: a as u16 },
+        9 => WireError::DuplicateFrame { from: a as u16, round: b as u32 },
+        10 => WireError::RoundSkew { from: a as u16, frame_round: b as u32, expect: c as u32 },
+        11 => WireError::Transport(match sub {
+            0 => TransportError::Eof,
+            1 => TransportError::ShortRead { need: a as u32, got: b as u32 },
+            2 => TransportError::TimedOut,
+            3 => TransportError::Refused,
+            4 => TransportError::Oversize { len: a as u32 },
+            5 => TransportError::Rejected(Reject::from_code(a as u8)?),
+            6 => TransportError::Protocol,
+            7 => TransportError::Closed,
+            8 => TransportError::HandshakeTimeout { missing: a as u16 },
+            _ => return None,
+        }),
+        _ => return None,
+    })
+}
+
+/// Build a FAULT frame from a node-detected wire fault. The detecting
+/// node and round ride in the inner header.
+pub fn encode_fault(out: &mut Vec<u8>, f: &WireFault) {
+    frame_begin(out, FAULT_TAG, f.round, f.node);
+    let (code, sub, a, b, c) = wire_error_fields(f.error);
+    out.push(code);
+    out.push(sub);
+    out.extend_from_slice(&a.to_le_bytes());
+    out.extend_from_slice(&b.to_le_bytes());
+    out.extend_from_slice(&c.to_le_bytes());
+    frame_end(out);
+}
+
+/// Total decode of a FAULT frame.
+pub fn decode_fault(f: &FrameRef<'_>) -> Result<WireFault, TransportError> {
+    if f.tag != FAULT_TAG || f.payload.len() != 26 {
+        return Err(TransportError::Protocol);
+    }
+    let p = f.payload;
+    let (Some(&code), Some(&sub), Some(a), Some(b), Some(c)) =
+        (p.first(), p.get(1), rd8(p, 2), rd8(p, 10), rd8(p, 18))
+    else {
+        return Err(TransportError::Protocol);
+    };
+    let error = wire_error_from_fields(code, sub, a, b, c).ok_or(TransportError::Protocol)?;
+    Ok(WireFault { node: f.from, round: f.round, error })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn outer_framing_round_trips_and_reuses_scratch() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &[1, 2, 3, 4, 5]).unwrap();
+        write_frame(&mut wire, &[9]).unwrap();
+        write_frame(&mut wire, &[]).unwrap();
+        let mut r = Cursor::new(wire);
+        let mut scratch = Vec::new();
+        read_frame_into(&mut r, &mut scratch).unwrap();
+        assert_eq!(scratch, vec![1, 2, 3, 4, 5]);
+        read_frame_into(&mut r, &mut scratch).unwrap();
+        assert_eq!(scratch, vec![9], "scratch must shrink to the frame length");
+        read_frame_into(&mut r, &mut scratch).unwrap();
+        assert!(scratch.is_empty());
+        assert_eq!(read_frame_into(&mut r, &mut scratch), Err(TransportError::Eof));
+    }
+
+    #[test]
+    fn short_reads_are_typed_not_eof() {
+        // stream dies inside the length prefix
+        let mut r = Cursor::new(vec![5u8, 0]);
+        let mut scratch = Vec::new();
+        assert_eq!(
+            read_frame_into(&mut r, &mut scratch),
+            Err(TransportError::ShortRead { need: 4, got: 2 })
+        );
+        // stream dies inside the body
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &[7u8; 10]).unwrap();
+        wire.truncate(4 + 6);
+        let mut r = Cursor::new(wire);
+        assert_eq!(
+            read_frame_into(&mut r, &mut scratch),
+            Err(TransportError::ShortRead { need: 10, got: 6 })
+        );
+    }
+
+    #[test]
+    fn oversize_length_prefix_is_rejected_before_allocating() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&(MAX_FRAME_LEN + 1).to_le_bytes());
+        let mut scratch = Vec::new();
+        assert_eq!(
+            read_frame_into(&mut Cursor::new(wire), &mut scratch),
+            Err(TransportError::Oversize { len: MAX_FRAME_LEN + 1 })
+        );
+        assert!(scratch.is_empty(), "the lying prefix must not size the scratch");
+    }
+
+    #[test]
+    fn hello_round_trips() {
+        let h = Hello {
+            fingerprint: 0xDEAD_BEEF_CAFE_F00D,
+            n: 8,
+            dim: 40,
+            rounds: 300,
+            record_every: 50,
+            gated: true,
+        };
+        let mut buf = Vec::new();
+        encode_hello(&mut buf, 5, &h);
+        let f = FrameRef::parse(&buf).unwrap();
+        assert_eq!(decode_hello(&f).unwrap(), (5, h));
+        // truncated payload is a typed protocol error
+        let mut short = buf.clone();
+        short.pop();
+        crate::coordinator::wire::frame_end(&mut short);
+        let f = FrameRef::parse(&short).unwrap();
+        assert_eq!(decode_hello(&f), Err(TransportError::Protocol));
+    }
+
+    #[test]
+    fn reject_welcome_verdict_round_trip() {
+        let mut buf = Vec::new();
+        for r in [Reject::NodeIdRange, Reject::SpecShape] {
+            encode_reject(&mut buf, r);
+            let f = FrameRef::parse(&buf).unwrap();
+            assert_eq!(decode_reject(&f).unwrap(), r);
+        }
+        for go in [true, false] {
+            encode_verdict(&mut buf, go);
+            let f = FrameRef::parse(&buf).unwrap();
+            assert_eq!(decode_verdict(&f).unwrap(), go);
+        }
+        encode_welcome(&mut buf);
+        let f = FrameRef::parse(&buf).unwrap();
+        assert_eq!(f.tag, WELCOME_TAG);
+        assert!(f.payload.is_empty());
+        assert_eq!(decode_verdict(&f), Err(TransportError::Protocol), "wrong tag is typed");
+    }
+
+    #[test]
+    fn report_round_trips_bit_exactly() {
+        let r = NodeReport {
+            node: 3,
+            round: 120,
+            x: vec![1.5, -2.25e-300, f64::MAX, 0.0],
+            bytes_sent: 123_456,
+            payload_bits: 789,
+            grad_evals: 42,
+        };
+        let mut buf = Vec::new();
+        encode_report(&mut buf, &r);
+        let f = FrameRef::parse(&buf).unwrap();
+        let d = decode_report(&f).unwrap();
+        assert_eq!((d.node, d.round), (3, 120));
+        assert_eq!((d.bytes_sent, d.payload_bits, d.grad_evals), (123_456, 789, 42));
+        assert_eq!(d.x.len(), 4);
+        for (a, b) in d.x.iter().zip(&r.x) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // a payload that is not a whole number of f64s is typed
+        let mut odd = buf.clone();
+        odd.push(0);
+        crate::coordinator::wire::frame_end(&mut odd);
+        let f = FrameRef::parse(&odd).unwrap();
+        assert!(matches!(decode_report(&f), Err(TransportError::Protocol)));
+    }
+
+    #[test]
+    fn fault_round_trips_every_error_arm() {
+        let errors = [
+            WireError::TruncatedHeader { len: 6 },
+            WireError::TruncatedPayload { need: 100, got: 50 },
+            WireError::TrailingBytes { expected: 10, got: 12 },
+            WireError::UnknownTag { tag: 0x7E },
+            WireError::TagMismatch { expected: 0, got: 1 },
+            WireError::PayloadSize { expected: 64, got: 63 },
+            WireError::TruncatedBitstream { need_bits: 12, got_bits: 8 },
+            WireError::BadBlockNorm { block: 2 },
+            WireError::NonNeighbor { from: 9 },
+            WireError::DuplicateFrame { from: 1, round: 7 },
+            WireError::RoundSkew { from: 2, frame_round: 9, expect: 4 },
+            WireError::Transport(TransportError::Eof),
+            WireError::Transport(TransportError::ShortRead { need: 11, got: 3 }),
+            WireError::Transport(TransportError::TimedOut),
+            WireError::Transport(TransportError::Refused),
+            WireError::Transport(TransportError::Oversize { len: 1 << 30 }),
+            WireError::Transport(TransportError::Rejected(Reject::ConfigFingerprint)),
+            WireError::Transport(TransportError::Protocol),
+            WireError::Transport(TransportError::Closed),
+            WireError::Transport(TransportError::HandshakeTimeout { missing: 3 }),
+        ];
+        let mut buf = Vec::new();
+        for e in errors {
+            let fault = WireFault { node: 7, round: 31, error: e };
+            encode_fault(&mut buf, &fault);
+            let f = FrameRef::parse(&buf).unwrap();
+            assert_eq!(decode_fault(&f).unwrap(), fault, "{e:?}");
+        }
+        // unknown code byte is typed, not a panic
+        encode_fault(&mut buf, &WireFault { node: 0, round: 0, error: WireError::Transport(TransportError::Eof) });
+        let hdr = crate::coordinator::Frame::HEADER_LEN;
+        buf[hdr] = 0xEE;
+        let f = FrameRef::parse(&buf).unwrap();
+        assert_eq!(decode_fault(&f), Err(TransportError::Protocol));
+    }
+}

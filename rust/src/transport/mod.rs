@@ -1,0 +1,386 @@
+//! The byte-stream transport layer: how a node's framed wire bytes reach
+//! its gossip neighbors, abstracted behind [`NodeLink`] so the coordinator
+//! node loop ([`crate::coordinator::node::run_node`]) is transport-generic.
+//!
+//! Three implementations:
+//!
+//! - **InProc** ([`InProcLink`]): the original per-edge
+//!   [`crate::runtime::sync`] channels — byte-identical to the historical
+//!   coordinator, still fully visible to the `proxlead-check` scheduler
+//!   and the lint rules, and the parity baseline the socket transports are
+//!   pinned against (`rust/tests/transport_parity.rs`).
+//! - **Tcp** / **Unix** ([`socket::SocketLink`]): real OS byte streams.
+//!   Each node process dials the leader ([`socket::dial`]) with bounded
+//!   exponential backoff, performs a [`Hello`] handshake (node id +
+//!   config fingerprint + run-shape fields; mismatch → typed
+//!   [`Reject`]), and then exchanges length-delimited frames
+//!   ([`framing`]) — the leader relays data frames along the mixing
+//!   graph's edges, so the per-edge channel abstraction survives the
+//!   hub-and-spoke socket topology.
+//!
+//! **Fault taxonomy.** Every socket failure mode — EOF, connection
+//! refused, timeout, short read, oversize frame, handshake rejection —
+//! is a typed [`TransportError`], folded into
+//! [`crate::coordinator::WireError::Transport`] so a dead peer surfaces
+//! through the existing ABORT/BYE teardown as a
+//! [`crate::runner::StopReason::WireFault`] — never a hang, never a
+//! panic. The socket read path reuses a scratch buffer
+//! ([`framing::read_frame_into`]) so the PR-6 zero-alloc decode path
+//! ([`crate::coordinator::FrameRef::parse`] + `decode_into`) is
+//! preserved end to end; the one allocation per received frame is the
+//! `Arc<[u8]>` handoff the in-process transport also pays per broadcast.
+//!
+//! See DESIGN.md §4e for the wire-level contract.
+
+pub mod framing;
+pub mod socket;
+
+pub use framing::Hello;
+pub use socket::{dial, DialAddr, SocketLink};
+
+use crate::coordinator::NodeEvent;
+use crate::runtime::sync;
+use std::fmt;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Control-plane frame tags, disjoint from the codec tags (0–2) and the
+/// teardown tags (`BYE` 0xFE, `ABORT` 0xFF). Control frames reuse the
+/// 11-byte inner header so one parser serves both planes.
+pub const VERDICT_TAG: u8 = 0xF8;
+/// Handshake rejection (leader → node); payload is one [`Reject`] code.
+pub const REJECT_TAG: u8 = 0xF9;
+/// Handshake acceptance (leader → node); empty payload.
+pub const WELCOME_TAG: u8 = 0xFA;
+/// Handshake opener (node → leader); payload is a [`Hello`].
+pub const HELLO_TAG: u8 = 0xFB;
+/// A node-detected [`crate::coordinator::WireFault`] (node → leader).
+pub const FAULT_TAG: u8 = 0xFC;
+/// A [`crate::coordinator::NodeReport`] snapshot (node → leader).
+pub const REPORT_TAG: u8 = 0xFD;
+
+/// Why the leader refused a dialing node's handshake.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Reject {
+    /// Node id outside `0..n`.
+    NodeIdRange,
+    /// A node with this id already completed the handshake.
+    DuplicateNode,
+    /// The node's config fingerprint differs from the leader's — the two
+    /// processes parsed different configs.
+    ConfigFingerprint,
+    /// Fingerprints agree but a run-shape field (n, dim, rounds,
+    /// record_every, gating) differs — CLI-flag drift outside the config.
+    SpecShape,
+}
+
+impl Reject {
+    pub(crate) fn code(self) -> u8 {
+        match self {
+            Reject::NodeIdRange => 0,
+            Reject::DuplicateNode => 1,
+            Reject::ConfigFingerprint => 2,
+            Reject::SpecShape => 3,
+        }
+    }
+
+    pub(crate) fn from_code(c: u8) -> Option<Reject> {
+        match c {
+            0 => Some(Reject::NodeIdRange),
+            1 => Some(Reject::DuplicateNode),
+            2 => Some(Reject::ConfigFingerprint),
+            3 => Some(Reject::SpecShape),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Reject {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Reject::NodeIdRange => write!(f, "node id outside 0..n"),
+            Reject::DuplicateNode => write!(f, "duplicate node id"),
+            Reject::ConfigFingerprint => write!(f, "config fingerprint mismatch"),
+            Reject::SpecShape => write!(f, "run-shape mismatch (n/dim/rounds/record_every/gating)"),
+        }
+    }
+}
+
+/// Everything that can go wrong moving framed bytes over a link. `Copy +
+/// Eq` so it can ride inside [`crate::coordinator::WireError`] (and thus
+/// [`crate::runner::StopReason`]) without touching those enums' derives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportError {
+    /// Clean close at a message boundary — the peer's socket is gone.
+    Eof,
+    /// The stream ended mid-message: `got` of `need` bytes.
+    ShortRead { need: u32, got: u32 },
+    /// A per-op read/write deadline expired.
+    TimedOut,
+    /// Connection refused past the dial retry budget.
+    Refused,
+    /// An outer length prefix beyond [`framing::MAX_FRAME_LEN`].
+    Oversize { len: u32 },
+    /// The leader refused this node's handshake.
+    Rejected(Reject),
+    /// Bytes that violate the control-plane framing (bad handshake reply,
+    /// undecodable control payload).
+    Protocol,
+    /// The in-process channel peer is gone (the socket `Eof` analogue).
+    Closed,
+    /// Fewer than n nodes completed the handshake within the accept
+    /// deadline; `missing` is the lowest absent node id.
+    HandshakeTimeout { missing: u16 },
+}
+
+impl fmt::Display for TransportError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            TransportError::Eof => write!(f, "connection closed by peer"),
+            TransportError::ShortRead { need, got } => {
+                write!(f, "short read: {got} of {need} bytes before the stream ended")
+            }
+            TransportError::TimedOut => write!(f, "socket operation timed out"),
+            TransportError::Refused => write!(f, "connection refused past the retry budget"),
+            TransportError::Oversize { len } => {
+                write!(f, "frame length {len} exceeds the {} byte cap", framing::MAX_FRAME_LEN)
+            }
+            TransportError::Rejected(r) => write!(f, "handshake rejected: {r}"),
+            TransportError::Protocol => write!(f, "control-plane protocol violation"),
+            TransportError::Closed => write!(f, "channel closed by peer"),
+            TransportError::HandshakeTimeout { missing } => {
+                write!(f, "handshake deadline expired; lowest missing node: {missing}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+/// Map an io error onto the transport taxonomy (refused/timeout/EOF; the
+/// long tail degrades to `Closed`, which still tears the run down typed).
+pub(crate) fn map_io(e: &std::io::Error) -> TransportError {
+    use std::io::ErrorKind;
+    match e.kind() {
+        ErrorKind::ConnectionRefused => TransportError::Refused,
+        ErrorKind::WouldBlock | ErrorKind::TimedOut => TransportError::TimedOut,
+        ErrorKind::UnexpectedEof
+        | ErrorKind::ConnectionReset
+        | ErrorKind::ConnectionAborted
+        | ErrorKind::BrokenPipe => TransportError::Eof,
+        _ => TransportError::Closed,
+    }
+}
+
+/// FNV-1a over a config's canonical text form ([`crate::config::Config::
+/// to_text`]) — the handshake fingerprint that catches two processes
+/// running different configs before any wire round starts.
+pub fn fingerprint(text: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in text.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// One node's view of the network: broadcast a framed buffer to every
+/// gossip neighbor, receive the next inbound frame, and talk to the
+/// leader (metric reports up, continue/stop verdicts down). The node
+/// round loop is written against this trait only; the implementations
+/// decide whether the bytes cross a channel or a socket.
+pub trait NodeLink: Send {
+    /// Send `frame` to every gossip neighbor. Must *attempt* all
+    /// neighbors even after one fails (the ABORT teardown wave relies on
+    /// reaching the still-alive ones); returns `Err` if any send failed.
+    fn broadcast(&mut self, frame: &Arc<[u8]>) -> Result<(), TransportError>;
+
+    /// Block for the next inbound neighbor frame (data, BYE, or ABORT —
+    /// verbatim bytes; the caller's `absorb` does the judging).
+    fn recv(&mut self) -> Result<Arc<[u8]>, TransportError>;
+
+    /// Report a snapshot or a detected fault to the leader.
+    fn report(&mut self, ev: NodeEvent) -> Result<(), TransportError>;
+
+    /// Block for the leader's checkpoint verdict: `true` = continue.
+    fn verdict(&mut self) -> Result<bool, TransportError>;
+
+    /// Is this run leader-gated (checkpoint verdicts flow at all)?
+    fn gated(&self) -> bool;
+}
+
+/// The in-process transport: per-edge [`sync`] channels, exactly as the
+/// coordinator has always wired them — every operation still goes through
+/// the shim layer, so `proxlead-check` schedules it and the teardown
+/// scenarios keep their coverage.
+pub struct InProcLink {
+    /// Senders into each gossip neighbor's inbox, ascending neighbor id.
+    neighbors: Vec<sync::Sender<Arc<[u8]>>>,
+    inbox: sync::Receiver<Arc<[u8]>>,
+    reports: sync::Sender<NodeEvent>,
+    /// `Some` iff the run is leader-gated.
+    control: Option<sync::Receiver<bool>>,
+}
+
+impl InProcLink {
+    pub fn new(
+        neighbors: Vec<sync::Sender<Arc<[u8]>>>,
+        inbox: sync::Receiver<Arc<[u8]>>,
+        reports: sync::Sender<NodeEvent>,
+        control: Option<sync::Receiver<bool>>,
+    ) -> InProcLink {
+        InProcLink { neighbors, inbox, reports, control }
+    }
+}
+
+impl NodeLink for InProcLink {
+    fn broadcast(&mut self, frame: &Arc<[u8]>) -> Result<(), TransportError> {
+        // attempt every neighbor: a dead peer (dropped receiver) must not
+        // stop the teardown wave from reaching the live ones
+        let mut ok = true;
+        for tx in &self.neighbors {
+            ok &= tx.send(Arc::clone(frame)).is_ok();
+        }
+        if ok {
+            Ok(())
+        } else {
+            Err(TransportError::Closed)
+        }
+    }
+
+    fn recv(&mut self) -> Result<Arc<[u8]>, TransportError> {
+        self.inbox.recv().map_err(|_| TransportError::Closed)
+    }
+
+    fn report(&mut self, ev: NodeEvent) -> Result<(), TransportError> {
+        self.reports.send(ev).map_err(|_| TransportError::Closed)
+    }
+
+    fn verdict(&mut self) -> Result<bool, TransportError> {
+        match &self.control {
+            Some(rx) => rx.recv().map_err(|_| TransportError::Closed),
+            None => Ok(true),
+        }
+    }
+
+    fn gated(&self) -> bool {
+        self.control.is_some()
+    }
+}
+
+/// The leader-side transport selector [`crate::coordinator::
+/// run_with_transport`] is generic over: in-process node threads, or a
+/// pre-bound socket listener the node *processes* dial. The listener is
+/// bound by the caller (so tests can bind port 0 and learn the address)
+/// and carries the handshake fingerprint plus the accept deadline.
+pub enum Transport {
+    /// Node threads over [`sync`] channels — today's behavior, verbatim.
+    InProc,
+    /// Node processes over a byte-stream socket (TCP or Unix).
+    Socket {
+        listener: socket::Listener,
+        /// The [`fingerprint`] dialing nodes must present.
+        fingerprint: u64,
+        /// Handshake deadline: all n nodes must connect within this.
+        accept_timeout: Duration,
+    },
+}
+
+impl Transport {
+    pub fn tcp(l: std::net::TcpListener, fingerprint: u64, accept_timeout: Duration) -> Transport {
+        Transport::Socket { listener: socket::Listener::Tcp(l), fingerprint, accept_timeout }
+    }
+
+    pub fn unix(
+        l: std::os::unix::net::UnixListener,
+        fingerprint: u64,
+        accept_timeout: Duration,
+    ) -> Transport {
+        Transport::Socket { listener: socket::Listener::Unix(l), fingerprint, accept_timeout }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::NodeReport;
+
+    #[test]
+    fn fingerprint_is_stable_and_content_sensitive() {
+        let a = fingerprint("nodes = 8\nbits = 2\n");
+        assert_eq!(a, fingerprint("nodes = 8\nbits = 2\n"), "must be deterministic");
+        assert_ne!(a, fingerprint("nodes = 8\nbits = 32\n"));
+        assert_ne!(fingerprint(""), fingerprint(" "));
+    }
+
+    #[test]
+    fn reject_codes_round_trip() {
+        for r in [
+            Reject::NodeIdRange,
+            Reject::DuplicateNode,
+            Reject::ConfigFingerprint,
+            Reject::SpecShape,
+        ] {
+            assert_eq!(Reject::from_code(r.code()), Some(r));
+        }
+        assert_eq!(Reject::from_code(9), None);
+    }
+
+    #[test]
+    fn inproc_link_matches_channel_semantics() {
+        let (tx_a, rx_a) = sync::channel::<Arc<[u8]>>("t.inbox");
+        let (tx_rep, rx_rep) = sync::channel::<NodeEvent>("t.reports");
+        let (tx_ctrl, rx_ctrl) = sync::channel::<bool>("t.ctrl");
+        let mut link =
+            InProcLink::new(vec![tx_a], rx_a, tx_rep, Some(rx_ctrl));
+        assert!(link.gated());
+
+        let frame: Arc<[u8]> = Arc::from([1u8, 2, 3].as_slice());
+        link.broadcast(&frame).unwrap();
+        assert_eq!(&link.recv().unwrap()[..], &[1, 2, 3]);
+
+        link.report(NodeEvent::Report(NodeReport {
+            node: 0,
+            round: 0,
+            x: vec![0.0],
+            bytes_sent: 3,
+            payload_bits: 0,
+            grad_evals: 0,
+        }))
+        .unwrap();
+        assert!(matches!(rx_rep.recv().unwrap(), NodeEvent::Report(r) if r.bytes_sent == 3));
+
+        tx_ctrl.send(true).unwrap();
+        assert_eq!(link.verdict(), Ok(true));
+        drop(tx_ctrl);
+        assert_eq!(link.verdict(), Err(TransportError::Closed));
+    }
+
+    #[test]
+    fn inproc_broadcast_attempts_all_neighbors_past_a_dead_one() {
+        let (tx_dead, rx_dead) = sync::channel::<Arc<[u8]>>("t.dead");
+        let (tx_live, rx_live) = sync::channel::<Arc<[u8]>>("t.live");
+        let (tx_rep, _rx_rep) = sync::channel::<NodeEvent>("t.reports2");
+        let (_tx_self, rx_self) = sync::channel::<Arc<[u8]>>("t.self");
+        drop(rx_dead); // neighbor 0 already exited
+        let mut link = InProcLink::new(vec![tx_dead, tx_live], rx_self, tx_rep, None);
+        assert!(!link.gated());
+        assert_eq!(link.verdict(), Ok(true), "ungated links always answer continue");
+
+        let frame: Arc<[u8]> = Arc::from([0xFFu8].as_slice());
+        // the dead edge makes the broadcast an error — but the live
+        // neighbor must still have received the teardown frame
+        assert_eq!(link.broadcast(&frame), Err(TransportError::Closed));
+        assert_eq!(&rx_live.recv().unwrap()[..], &[0xFF]);
+    }
+
+    #[test]
+    fn transport_error_display_is_informative() {
+        let s = format!("{}", TransportError::ShortRead { need: 11, got: 4 });
+        assert!(s.contains("4") && s.contains("11"), "{s}");
+        let s = format!("{}", TransportError::Rejected(Reject::ConfigFingerprint));
+        assert!(s.contains("fingerprint"), "{s}");
+        let s = format!("{}", TransportError::HandshakeTimeout { missing: 3 });
+        assert!(s.contains('3'), "{s}");
+    }
+}

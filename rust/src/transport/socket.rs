@@ -1,0 +1,651 @@
+//! The socket transports: TCP and Unix-domain byte streams carrying the
+//! length-delimited frames of [`super::framing`].
+//!
+//! # Topology
+//!
+//! Node processes dial the **leader** only (hub and spoke). The leader
+//! accepts one stream per node, runs the [`Hello`] handshake, and then
+//! relays each node's data frames to its gossip neighbors along the
+//! mixing graph's edges — so the per-edge channel abstraction the node
+//! loop is written against survives even though only `n` sockets exist.
+//! Per node the leader runs one uplink reader thread ([`run_uplink`]);
+//! writes to a node's socket are serialized through a per-node mutex
+//! (reader threads relay into their peers' write halves).
+//!
+//! # Liveness under failure
+//!
+//! Every socket read/write carries a per-op timeout, dials retry with
+//! bounded exponential backoff up to a deadline, and a peer that dies
+//! mid-run surfaces as a synthesized
+//! [`WireError::Transport`] fault plus an ABORT wave to its neighbors —
+//! the same teardown protocol a corrupt frame triggers, so a dead
+//! process yields a typed [`crate::runner::StopReason`] rather than a
+//! hang. An EOF *after* the node announced completion (BYE), aborted
+//! (ABORT), or reported a fault is a clean close and synthesizes
+//! nothing — otherwise every normal teardown would race a spurious
+//! fault into the leader's resolution.
+
+use super::framing::{
+    decode_fault, decode_hello, decode_reject, decode_report, decode_verdict, encode_fault,
+    encode_hello, encode_reject, encode_report, encode_verdict, encode_welcome, read_frame_into,
+    write_frame, Hello,
+};
+use super::{map_io, NodeLink, Reject, TransportError, REJECT_TAG, VERDICT_TAG, WELCOME_TAG};
+use super::{FAULT_TAG, REPORT_TAG};
+use crate::coordinator::wire::{frame_begin, frame_end, ABORT_TAG, BYE_TAG};
+use crate::coordinator::{FrameRef, NodeEvent, WireError, WireFault};
+use std::collections::VecDeque;
+use std::io::{self, ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Steady-state per-op socket deadline. Generous — rounds are
+/// millisecond-scale even with stragglers — but finite, so a wedged peer
+/// becomes a typed `TimedOut` instead of an unbounded block. Also bounds
+/// the theoretical relay-vs-node write deadlock when both directions'
+/// kernel buffers fill (see DESIGN.md §4e).
+const IO_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Dial retry backoff: start, cap.
+const BACKOFF_START: Duration = Duration::from_millis(10);
+const BACKOFF_CAP: Duration = Duration::from_millis(200);
+
+/// Accept-poll interval while waiting for node processes to dial in.
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+
+/// One connected byte stream, TCP or Unix — the rest of the module is
+/// written against this enum so both transports share every code path.
+pub enum Stream {
+    Tcp(TcpStream),
+    Unix(UnixStream),
+}
+
+impl Stream {
+    fn try_clone(&self) -> io::Result<Stream> {
+        match self {
+            Stream::Tcp(s) => s.try_clone().map(Stream::Tcp),
+            Stream::Unix(s) => s.try_clone().map(Stream::Unix),
+        }
+    }
+
+    fn set_read_timeout(&self, t: Option<Duration>) -> io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_read_timeout(t),
+            Stream::Unix(s) => s.set_read_timeout(t),
+        }
+    }
+
+    fn set_write_timeout(&self, t: Option<Duration>) -> io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_write_timeout(t),
+            Stream::Unix(s) => s.set_write_timeout(t),
+        }
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_nonblocking(nb),
+            Stream::Unix(s) => s.set_nonblocking(nb),
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// The leader's pre-bound listening socket (bound by the caller, so
+/// tests can bind port 0 / a temp path and learn the address).
+pub enum Listener {
+    Tcp(TcpListener),
+    Unix(UnixListener),
+}
+
+impl Listener {
+    fn accept(&self) -> io::Result<Stream> {
+        match self {
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
+            Listener::Unix(l) => l.accept().map(|(s, _)| Stream::Unix(s)),
+        }
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> io::Result<()> {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(nb),
+            Listener::Unix(l) => l.set_nonblocking(nb),
+        }
+    }
+}
+
+/// Where a node process finds its leader.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DialAddr {
+    /// `host:port`, e.g. `127.0.0.1:7911`.
+    Tcp(String),
+    /// Filesystem path of the leader's Unix-domain socket.
+    Unix(std::path::PathBuf),
+}
+
+fn connect(addr: &DialAddr) -> io::Result<Stream> {
+    match addr {
+        DialAddr::Tcp(a) => TcpStream::connect(a.as_str()).map(Stream::Tcp),
+        DialAddr::Unix(p) => UnixStream::connect(p).map(Stream::Unix),
+    }
+}
+
+/// Dial the leader as node `node`, presenting `hello`. Retries refused /
+/// not-yet-bound addresses with bounded exponential backoff until
+/// `timeout` expires (so worker processes may start before the leader),
+/// then runs the handshake: HELLO out, WELCOME or a typed REJECT back.
+pub fn dial(
+    addr: &DialAddr,
+    node: u16,
+    hello: &Hello,
+    timeout: Duration,
+) -> Result<SocketLink, TransportError> {
+    #[allow(clippy::disallowed_methods)] // wall-clock dial deadline (see clippy.toml)
+    let deadline = Instant::now() + timeout;
+    let mut backoff = BACKOFF_START;
+    let stream = loop {
+        match connect(addr) {
+            Ok(s) => break s,
+            Err(e) => {
+                // refused / path-not-bound-yet are the "leader not up yet"
+                // cases worth retrying; anything else is terminal
+                let retryable =
+                    matches!(e.kind(), ErrorKind::ConnectionRefused | ErrorKind::NotFound);
+                if !retryable {
+                    return Err(map_io(&e));
+                }
+                #[allow(clippy::disallowed_methods)] // wall-clock dial deadline
+                let now = Instant::now();
+                if now + backoff >= deadline {
+                    return Err(TransportError::Refused);
+                }
+                thread::sleep(backoff);
+                backoff = (backoff * 2).min(BACKOFF_CAP);
+            }
+        }
+    };
+    if let Stream::Tcp(s) = &stream {
+        let _ = s.set_nodelay(true);
+    }
+    // handshake under the remaining dial budget; steady state after
+    #[allow(clippy::disallowed_methods)] // wall-clock dial deadline
+    let remain = deadline.saturating_duration_since(Instant::now()).max(Duration::from_millis(10));
+    stream.set_read_timeout(Some(remain)).map_err(|e| map_io(&e))?;
+    stream.set_write_timeout(Some(remain)).map_err(|e| map_io(&e))?;
+
+    let mut link = SocketLink::new(stream, hello.gated);
+    encode_hello(&mut link.out, node, hello);
+    write_frame(&mut link.stream, &link.out)?;
+    read_frame_into(&mut link.stream, &mut link.scratch)?;
+    let f = FrameRef::parse(&link.scratch).map_err(|_| TransportError::Protocol)?;
+    match f.tag {
+        WELCOME_TAG => {}
+        REJECT_TAG => {
+            let r = decode_reject(&f)?;
+            return Err(TransportError::Rejected(r));
+        }
+        _ => return Err(TransportError::Protocol),
+    }
+    link.stream.set_read_timeout(Some(IO_TIMEOUT)).map_err(|e| map_io(&e))?;
+    link.stream.set_write_timeout(Some(IO_TIMEOUT)).map_err(|e| map_io(&e))?;
+    Ok(link)
+}
+
+/// A node's connection to the leader: one socket carrying both planes.
+/// Data frames go out once — the leader fans them out per edge — and the
+/// inbound stream interleaves relayed neighbor frames with VERDICT
+/// control frames, which are de-multiplexed into per-plane queues here.
+pub struct SocketLink {
+    stream: Stream,
+    /// Reused receive scratch ([`read_frame_into`]) — the zero-alloc
+    /// receive path; the `Arc<[u8]>` handed to the caller is the same
+    /// one-allocation-per-frame cost the in-process transport pays.
+    scratch: Vec<u8>,
+    /// Reused encode buffer for reports/faults.
+    out: Vec<u8>,
+    /// Neighbor frames that arrived while waiting for a verdict.
+    frames: VecDeque<Arc<[u8]>>,
+    /// Verdicts that arrived while waiting for a neighbor frame.
+    verdicts: VecDeque<bool>,
+    gated: bool,
+}
+
+impl SocketLink {
+    fn new(stream: Stream, gated: bool) -> SocketLink {
+        SocketLink {
+            stream,
+            scratch: Vec::new(),
+            out: Vec::new(),
+            frames: VecDeque::new(),
+            verdicts: VecDeque::new(),
+            gated,
+        }
+    }
+}
+
+impl NodeLink for SocketLink {
+    fn broadcast(&mut self, frame: &Arc<[u8]>) -> Result<(), TransportError> {
+        // one write — the leader relays a copy along each gossip edge
+        write_frame(&mut self.stream, frame)
+    }
+
+    fn recv(&mut self) -> Result<Arc<[u8]>, TransportError> {
+        if let Some(f) = self.frames.pop_front() {
+            return Ok(f);
+        }
+        loop {
+            read_frame_into(&mut self.stream, &mut self.scratch)?;
+            if self.scratch.first() == Some(&VERDICT_TAG) {
+                let f = FrameRef::parse(&self.scratch).map_err(|_| TransportError::Protocol)?;
+                self.verdicts.push_back(decode_verdict(&f)?);
+                continue;
+            }
+            // data / BYE / ABORT / corrupt bytes: hand over verbatim — the
+            // caller's absorb does the judging, exactly like in-process
+            return Ok(Arc::from(self.scratch.as_slice()));
+        }
+    }
+
+    fn report(&mut self, ev: NodeEvent) -> Result<(), TransportError> {
+        match ev {
+            NodeEvent::Report(r) => encode_report(&mut self.out, &r),
+            NodeEvent::Fault(f) => encode_fault(&mut self.out, &f),
+        }
+        write_frame(&mut self.stream, &self.out)
+    }
+
+    fn verdict(&mut self) -> Result<bool, TransportError> {
+        if !self.gated {
+            return Ok(true);
+        }
+        if let Some(v) = self.verdicts.pop_front() {
+            return Ok(v);
+        }
+        loop {
+            read_frame_into(&mut self.stream, &mut self.scratch)?;
+            if self.scratch.first() == Some(&VERDICT_TAG) {
+                let f = FrameRef::parse(&self.scratch).map_err(|_| TransportError::Protocol)?;
+                return decode_verdict(&f);
+            }
+            self.frames.push_back(Arc::from(self.scratch.as_slice()));
+        }
+    }
+
+    fn gated(&self) -> bool {
+        self.gated
+    }
+}
+
+/// Accept and handshake all `expect.n` node processes. Returns the
+/// streams indexed by node id. A connection presenting a bad id, a
+/// duplicate id, a foreign config fingerprint, or drifted run-shape
+/// fields gets a typed REJECT and is dropped — its slot stays open for a
+/// correct dialer until the deadline, after which the lowest missing id
+/// is reported in [`TransportError::HandshakeTimeout`].
+pub fn accept_nodes(
+    listener: &Listener,
+    expect: &Hello,
+    timeout: Duration,
+) -> Result<Vec<Stream>, TransportError> {
+    listener.set_nonblocking(true).map_err(|e| map_io(&e))?;
+    #[allow(clippy::disallowed_methods)] // wall-clock accept deadline (see clippy.toml)
+    let deadline = Instant::now() + timeout;
+    let n = expect.n as usize;
+    let mut slots: Vec<Option<Stream>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    let mut filled = 0usize;
+    let mut scratch = Vec::new();
+    let mut out = Vec::new();
+    while filled < n {
+        match listener.accept() {
+            Ok(mut s) => {
+                let _ = s.set_nonblocking(false);
+                if let Stream::Tcp(t) = &s {
+                    let _ = t.set_nodelay(true);
+                }
+                #[allow(clippy::disallowed_methods)] // wall-clock accept deadline
+                let remain = deadline
+                    .saturating_duration_since(Instant::now())
+                    .max(Duration::from_millis(10));
+                let _ = s.set_read_timeout(Some(remain));
+                let _ = s.set_write_timeout(Some(remain));
+                // a failed handshake drops the stream; the slot stays open
+                if let Ok(id) = handshake(&mut s, expect, &slots, &mut scratch, &mut out) {
+                    let _ = s.set_read_timeout(Some(IO_TIMEOUT));
+                    let _ = s.set_write_timeout(Some(IO_TIMEOUT));
+                    slots[id] = Some(s);
+                    filled += 1;
+                }
+            }
+            Err(ref e) if e.kind() == ErrorKind::WouldBlock => {
+                #[allow(clippy::disallowed_methods)] // wall-clock accept deadline
+                let now = Instant::now();
+                if now >= deadline {
+                    let missing = slots.iter().position(|s| s.is_none()).unwrap_or(0) as u16;
+                    return Err(TransportError::HandshakeTimeout { missing });
+                }
+                thread::sleep(ACCEPT_POLL);
+            }
+            Err(ref e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(map_io(&e)),
+        }
+    }
+    Ok(slots.into_iter().flatten().collect())
+}
+
+/// One connection's handshake: read HELLO, judge it, answer WELCOME or a
+/// typed REJECT. Returns the validated node id.
+fn handshake(
+    s: &mut Stream,
+    expect: &Hello,
+    slots: &[Option<Stream>],
+    scratch: &mut Vec<u8>,
+    out: &mut Vec<u8>,
+) -> Result<usize, TransportError> {
+    read_frame_into(s, scratch)?;
+    let f = FrameRef::parse(scratch).map_err(|_| TransportError::Protocol)?;
+    let (id, h) = decode_hello(&f)?;
+    let shape_ok = h.n == expect.n
+        && h.dim == expect.dim
+        && h.rounds == expect.rounds
+        && h.record_every == expect.record_every
+        && h.gated == expect.gated;
+    let verdict = if (id as usize) >= slots.len() {
+        Some(Reject::NodeIdRange)
+    } else if slots[id as usize].is_some() {
+        Some(Reject::DuplicateNode)
+    } else if h.fingerprint != expect.fingerprint {
+        Some(Reject::ConfigFingerprint)
+    } else if !shape_ok {
+        Some(Reject::SpecShape)
+    } else {
+        None
+    };
+    match verdict {
+        Some(r) => {
+            encode_reject(out, r);
+            let _ = write_frame(s, out);
+            Err(TransportError::Rejected(r))
+        }
+        None => {
+            encode_welcome(out);
+            write_frame(s, out)?;
+            Ok(id as usize)
+        }
+    }
+}
+
+/// A node's mutex-serialized write half: shared by every uplink thread
+/// that relays toward this node and by the leader's verdict fan-out.
+pub type WriteHalf = Arc<Mutex<Stream>>;
+
+/// Split each accepted stream into a read half (moved into that node's
+/// uplink thread) and a [`WriteHalf`].
+pub fn split(streams: Vec<Stream>) -> Result<(Vec<Stream>, Vec<WriteHalf>), TransportError> {
+    let mut readers = Vec::with_capacity(streams.len());
+    let mut writers = Vec::with_capacity(streams.len());
+    for s in streams {
+        let w = s.try_clone().map_err(|e| map_io(&e))?;
+        readers.push(s);
+        writers.push(Arc::new(Mutex::new(w)));
+    }
+    Ok((readers, writers))
+}
+
+fn locked(w: &WriteHalf) -> std::sync::MutexGuard<'_, Stream> {
+    match w.lock() {
+        Ok(g) => g,
+        // a poisoned write half just means some relay thread panicked
+        // mid-write; the stream is still the best teardown channel we have
+        Err(p) => p.into_inner(),
+    }
+}
+
+/// Relay one frame to each of `neighbors`' write halves. Write failures
+/// are ignored — a dead neighbor's own uplink handles its teardown.
+fn relay(frame: &[u8], neighbors: &[usize], writers: &[WriteHalf]) {
+    for &j in neighbors {
+        if let Some(w) = writers.get(j) {
+            let _ = write_frame(&mut *locked(w), frame);
+        }
+    }
+}
+
+/// The leader's per-node uplink reader: routes REPORT/FAULT control
+/// frames to the leader loop and relays everything else (data, BYE,
+/// ABORT, tampered bytes — verbatim) along the node's gossip edges.
+///
+/// If the stream dies *without* the node having announced completion
+/// (BYE), aborted (ABORT), or reported a fault, the death is the event:
+/// a [`WireError::Transport`] fault is synthesized at the node's last
+/// observed round and an ABORT wave is written to its neighbors, so the
+/// survivors tear down through the ordinary protocol.
+pub fn run_uplink(
+    node: u16,
+    mut reader: Stream,
+    neighbors: &[usize],
+    writers: &[WriteHalf],
+    events: &mpsc::Sender<NodeEvent>,
+) {
+    let mut scratch = Vec::new();
+    let mut last_seen: u32 = 0;
+    let mut closing = false;
+    loop {
+        match read_frame_into(&mut reader, &mut scratch) {
+            Ok(()) => match scratch.first() {
+                Some(&REPORT_TAG) => {
+                    if let Ok(f) = FrameRef::parse(&scratch) {
+                        if let Ok(r) = decode_report(&f) {
+                            let _ = events.send(NodeEvent::Report(r));
+                        }
+                    }
+                }
+                Some(&FAULT_TAG) => {
+                    if let Ok(f) = FrameRef::parse(&scratch) {
+                        if let Ok(w) = decode_fault(&f) {
+                            let _ = events.send(NodeEvent::Fault(w));
+                        }
+                    }
+                    closing = true;
+                }
+                _ => {
+                    if let Ok(f) = FrameRef::parse(&scratch) {
+                        if f.tag == BYE_TAG || f.tag == ABORT_TAG {
+                            closing = true;
+                        }
+                        last_seen = last_seen.max(f.round);
+                    }
+                    relay(&scratch, neighbors, writers);
+                }
+            },
+            Err(TransportError::Eof) if closing => return,
+            Err(e) => {
+                let fault = WireFault { node, round: last_seen, error: WireError::Transport(e) };
+                let _ = events.send(NodeEvent::Fault(fault));
+                let mut out = Vec::new();
+                frame_begin(&mut out, ABORT_TAG, last_seen, node);
+                frame_end(&mut out);
+                relay(&out, neighbors, writers);
+                return;
+            }
+        }
+    }
+}
+
+/// Fan a checkpoint verdict out to every node's write half (errors
+/// ignored: a node that died mid-checkpoint is its uplink's problem).
+pub fn send_verdicts(writers: &[WriteHalf], go: bool, buf: &mut Vec<u8>) {
+    encode_verdict(buf, go);
+    for w in writers {
+        let _ = write_frame(&mut *locked(w), buf);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hello(fp: u64) -> Hello {
+        Hello { fingerprint: fp, n: 2, dim: 3, rounds: 10, record_every: 5, gated: false }
+    }
+
+    #[test]
+    fn tcp_handshake_accepts_matching_nodes() {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = DialAddr::Tcp(l.local_addr().unwrap().to_string());
+        let listener = Listener::Tcp(l);
+        let h = hello(7);
+        let dialers: Vec<_> = (0..2u16)
+            .map(|i| {
+                let addr = addr.clone();
+                thread::spawn(move || dial(&addr, i, &hello(7), Duration::from_secs(5)))
+            })
+            .collect();
+        let streams = accept_nodes(&listener, &h, Duration::from_secs(5)).unwrap();
+        assert_eq!(streams.len(), 2);
+        for d in dialers {
+            assert!(d.join().unwrap().is_ok());
+        }
+    }
+
+    #[test]
+    fn mismatched_fingerprint_is_rejected_then_correct_dialer_fills_the_slot() {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = DialAddr::Tcp(l.local_addr().unwrap().to_string());
+        let listener = Listener::Tcp(l);
+        let h = hello(7);
+        let bad = {
+            let addr = addr.clone();
+            thread::spawn(move || dial(&addr, 0, &hello(8), Duration::from_secs(5)))
+        };
+        let good: Vec<_> = (0..2u16)
+            .map(|i| {
+                let addr = addr.clone();
+                thread::spawn(move || {
+                    // give the bad dialer a head start at the listener
+                    thread::sleep(Duration::from_millis(50));
+                    dial(&addr, i, &hello(7), Duration::from_secs(5))
+                })
+            })
+            .collect();
+        let streams = accept_nodes(&listener, &h, Duration::from_secs(5)).unwrap();
+        assert_eq!(streams.len(), 2);
+        match bad.join().unwrap() {
+            Err(TransportError::Rejected(Reject::ConfigFingerprint)) => {}
+            other => panic!("expected fingerprint reject, got {:?}", other.err()),
+        }
+        for d in good {
+            assert!(d.join().unwrap().is_ok());
+        }
+    }
+
+    #[test]
+    fn out_of_range_and_duplicate_ids_are_typed_rejects() {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = DialAddr::Tcp(l.local_addr().unwrap().to_string());
+        let listener = Listener::Tcp(l);
+        let h = hello(7);
+        let acceptor = thread::spawn(move || accept_nodes(&listener, &h, Duration::from_secs(5)));
+        let first = dial(&addr, 0, &hello(7), Duration::from_secs(5));
+        assert!(first.is_ok());
+        match dial(&addr, 9, &hello(7), Duration::from_secs(5)) {
+            Err(TransportError::Rejected(Reject::NodeIdRange)) => {}
+            other => panic!("expected NodeIdRange reject, got {:?}", other.err()),
+        }
+        match dial(&addr, 0, &hello(7), Duration::from_secs(5)) {
+            Err(TransportError::Rejected(Reject::DuplicateNode)) => {}
+            other => panic!("expected DuplicateNode reject, got {:?}", other.err()),
+        }
+        let second = dial(&addr, 1, &hello(7), Duration::from_secs(5));
+        assert!(second.is_ok());
+        assert_eq!(acceptor.join().unwrap().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn accept_deadline_reports_lowest_missing_node() {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = DialAddr::Tcp(l.local_addr().unwrap().to_string());
+        let listener = Listener::Tcp(l);
+        let h = hello(7);
+        // only node 1 dials; node 0 never shows up
+        let d = thread::spawn(move || dial(&addr, 1, &hello(7), Duration::from_secs(5)));
+        let got = accept_nodes(&listener, &h, Duration::from_millis(400));
+        assert_eq!(got.err(), Some(TransportError::HandshakeTimeout { missing: 0 }));
+        let _ = d.join();
+    }
+
+    #[test]
+    fn dial_gives_up_refused_past_the_deadline() {
+        // bind-then-drop yields a port nothing listens on
+        let port = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().port()
+        };
+        let addr = DialAddr::Tcp(format!("127.0.0.1:{port}"));
+        let got = dial(&addr, 0, &hello(1), Duration::from_millis(300));
+        assert_eq!(got.err(), Some(TransportError::Refused));
+    }
+
+    #[test]
+    fn unix_socket_round_trips_a_relayed_frame() {
+        let path = std::env::temp_dir()
+            .join(format!("proxlead-test-relay-{}.sock", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let l = UnixListener::bind(&path).unwrap();
+        let addr = DialAddr::Unix(path.clone());
+        let listener = Listener::Unix(l);
+        let h = hello(3);
+        let worker: Vec<_> = (0..2u16)
+            .map(|i| {
+                let addr = addr.clone();
+                thread::spawn(move || dial(&addr, i, &hello(3), Duration::from_secs(5)))
+            })
+            .collect();
+        let streams = accept_nodes(&listener, &h, Duration::from_secs(5)).unwrap();
+        let (mut readers, writers) = split(streams).unwrap();
+        let mut links: Vec<SocketLink> =
+            worker.into_iter().map(|w| w.join().unwrap().unwrap()).collect();
+
+        // node 0 broadcasts one inner frame; leader relays it to node 1
+        let mut inner = Vec::new();
+        frame_begin(&mut inner, 0, 4, 0);
+        inner.extend_from_slice(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        frame_end(&mut inner);
+        let frame: Arc<[u8]> = Arc::from(inner.as_slice());
+        links[0].broadcast(&frame).unwrap();
+
+        let mut scratch = Vec::new();
+        read_frame_into(&mut readers[0], &mut scratch).unwrap();
+        relay(&scratch, &[1], &writers);
+        let got = links[1].recv().unwrap();
+        assert_eq!(&got[..], &frame[..]);
+        let _ = std::fs::remove_file(&path);
+    }
+}

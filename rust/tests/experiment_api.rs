@@ -146,24 +146,50 @@ fn least_squares_sweep_cell_end_to_end() {
     }
 }
 
-/// The sim shares the coordinator's frame format, whose `from` field is a
-/// u16: a config asking the sim backend for more nodes than that must be
-/// rejected with a typed error up front — not silently truncate sender
+/// The sim and the coordinator share one frame format, whose `from` field
+/// is a u16: a config asking either backend for more nodes than that must
+/// be rejected with a typed error up front — not silently truncate sender
 /// ids in `WireFault` reports. Validation stays cheap (no data is
 /// generated), so the rejection costs nothing.
 #[test]
 fn sim_backend_rejects_more_nodes_than_u16_ids() {
+    for backend in ["sim", "coordinator"] {
+        let mut cfg = tiny("logreg", "prox-lead");
+        cfg.backend = backend.into();
+        cfg.nodes = 70_000;
+        let err = proxlead::exp::validate_config(&cfg)
+            .expect_err(&format!("70k-node {backend} must be rejected"));
+        let msg = err.to_string();
+        assert!(msg.contains(backend), "error must name the backend: {msg}");
+        assert!(msg.contains("65535"), "error must name the limit: {msg}");
+        assert!(msg.contains("u16"), "error must explain the wire-format cause: {msg}");
+        assert!(msg.contains("70000"), "error must echo the offending value: {msg}");
+        // the boundary itself is representable and passes the same validation
+        cfg.nodes = 65_535;
+        proxlead::exp::validate_config(&cfg)
+            .unwrap_or_else(|e| panic!("65535 nodes is exactly representable ({backend}): {e}"));
+    }
+}
+
+/// A socket transport only makes sense under the coordinator backend, and
+/// needs an address to bind; both mistakes must be caught by the same
+/// cheap validation pass the sweep runtime uses.
+#[test]
+fn socket_transport_config_is_validated_up_front() {
     let mut cfg = tiny("logreg", "prox-lead");
+    cfg.backend = "coordinator".into();
+    cfg.transport = "tcp".into();
+    let err = proxlead::exp::validate_config(&cfg).expect_err("tcp without bind must be rejected");
+    assert!(err.to_string().contains("bind"), "error must name the missing key: {err}");
+    cfg.bind = "127.0.0.1:7070".into();
+    proxlead::exp::validate_config(&cfg).expect("tcp + bind under coordinator is valid");
     cfg.backend = "sim".into();
-    cfg.nodes = 70_000;
-    let err = proxlead::exp::validate_config(&cfg).expect_err("70k-node sim must be rejected");
-    let msg = err.to_string();
-    assert!(msg.contains("65535"), "error must name the limit: {msg}");
-    assert!(msg.contains("u16"), "error must explain the wire-format cause: {msg}");
-    assert!(msg.contains("70000"), "error must echo the offending value: {msg}");
-    // the boundary itself is representable and passes the same validation
-    cfg.nodes = 65_535;
-    proxlead::exp::validate_config(&cfg).expect("65535 nodes is exactly representable");
+    let err = proxlead::exp::validate_config(&cfg).expect_err("tcp under sim must be rejected");
+    assert!(err.to_string().contains("coordinator"), "error must name the required backend: {err}");
+    cfg.backend = "coordinator".into();
+    cfg.transport = "carrier-pigeon".into();
+    let err = proxlead::exp::validate_config(&cfg).expect_err("unknown transport must be rejected");
+    assert!(err.to_string().contains("carrier-pigeon"), "error must echo the value: {err}");
 }
 
 /// Builder overrides flow into the constructed algorithm (name/oracle) and

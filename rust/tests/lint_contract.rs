@@ -17,7 +17,7 @@ fn src_root() -> &'static Path {
 #[test]
 fn fixture_corpus_triggers_every_rule_exactly_once() {
     let (files, diags) = lint::lint_tree(fixtures_root()).expect("fixture scan");
-    assert_eq!(files, 10, "fixture corpus drifted: {files} files");
+    assert_eq!(files, 11, "fixture corpus drifted: {files} files");
     let got: Vec<(String, usize, &str)> =
         diags.iter().map(|d| (d.file.clone(), d.line, d.rule)).collect();
     let want = [
@@ -28,6 +28,8 @@ fn fixture_corpus_triggers_every_rule_exactly_once() {
         ("runner/mod.rs".to_string(), 6, "atomic-ordering"),
         ("sim/mod.rs".to_string(), 5, "zero-alloc"),
         ("sweep/mod.rs".to_string(), 6, "total-cmp"),
+        ("transport/framing.rs".to_string(), 6, "panic-freedom"),
+        ("transport/framing.rs".to_string(), 10, "zero-alloc"),
         ("util/bad_allow.rs".to_string(), 6, "bad-allow"),
     ];
     assert_eq!(got, want, "fixture diagnostics drifted");
@@ -76,7 +78,12 @@ fn wire_decode_path_has_no_suppressions() {
     // acceptance criterion: panic-freedom in the wire path is enforced by
     // the rule itself, never waived by lint:allow comments
     let marker = concat!("lint:", "allow(");
-    for rel in ["coordinator/wire.rs", "coordinator/node.rs", "compress/bits.rs"] {
+    for rel in [
+        "coordinator/wire.rs",
+        "coordinator/node.rs",
+        "compress/bits.rs",
+        "transport/framing.rs",
+    ] {
         let path = src_root().join(rel);
         let src = std::fs::read_to_string(&path).expect("wire-path source readable");
         assert!(

@@ -1,0 +1,17 @@
+//! Fixture: MUST trigger `panic-freedom` once (bare indexing in a scoped
+//! control-frame decoder) and `zero-alloc` once (allocation in the scoped
+//! socket read path). Never compiled — scanned by lint_contract.rs.
+
+pub fn decode_hello(payload: &[u8]) -> u8 {
+    payload[0]
+}
+
+pub fn read_frame_into(scratch: &mut Vec<u8>) {
+    let tmp = Vec::with_capacity(64);
+    scratch.extend_from_slice(&tmp);
+}
+
+pub fn outside_scope(payload: &[u8]) -> Vec<u8> {
+    // same constructs, unscoped fn: neither rule may fire
+    payload.to_vec()
+}

@@ -1,0 +1,215 @@
+//! Transport acceptance (ISSUE-10): the socket transports are the same
+//! coordinator, only the bytes travel farther.
+//!
+//! 1. **Parity** — a loopback Tcp and a loopback Unix run are
+//!    bit-identical to the in-process transport: final iterate, every
+//!    history row (cumulative wire bits and framed bytes included), and
+//!    the stop reason. Checked for Prox-LEAD under `Dense64`, Prox-LEAD
+//!    under 2-bit quantization, and DGD under `Dense64`.
+//! 2. **Fault** — a node process that dies mid-run (handshake, then
+//!    silence) must surface as a typed
+//!    `WireError::Transport(TransportError::Eof)` stop attributed to the
+//!    dead node, within a bounded wall-clock budget — never a hang.
+//! 3. The handshake fingerprint tracks config semantics, not output
+//!    paths, so leader and workers agree on "same experiment".
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+use proxlead::config::Config;
+use proxlead::coordinator::WireError;
+use proxlead::exp::Experiment;
+use proxlead::runner::{RunResult, StopReason};
+use proxlead::transport::{dial, DialAddr, Hello, Transport, TransportError};
+
+fn ring_exp(algorithm: &str, bits: u32, rounds: usize) -> Experiment {
+    let cfg = Config::parse(&format!(
+        "algorithm = {algorithm}\ntopology = ring\nnodes = 4\nsamples_per_node = 6\n\
+         dim = 3\nclasses = 2\nbatches = 2\nseed = 13\nlambda1 = 0.005\nlambda2 = 0.1\n\
+         bits = {bits}\nrounds = {rounds}\nrecord_every = 2\n"
+    ))
+    .expect("config parses");
+    Experiment::from_config(&cfg).expect("experiment resolves")
+}
+
+/// Run `f` on a worker thread; fail the test if it has not finished
+/// within `secs` (a hung teardown shows up as a timeout, not a CI hang).
+fn with_watchdog<T: Send + 'static>(secs: u64, f: impl FnOnce() -> T + Send + 'static) -> T {
+    let (tx, rx) = mpsc::channel();
+    let h = thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(v) => {
+            h.join().expect("watchdog worker panicked");
+            v
+        }
+        Err(_) => panic!("run did not complete within {secs}s — transport liveness regression"),
+    }
+}
+
+fn assert_bit_identical(base: &RunResult, got: &RunResult, label: &str) {
+    assert_eq!(base.stopped_by, got.stopped_by, "{label}: stop reason diverged");
+    assert_eq!(base.history.len(), got.history.len(), "{label}: history row count diverged");
+    for (b, g) in base.history.iter().zip(&got.history) {
+        let at = format!("{label}: round {}", b.round);
+        assert_eq!(b.round, g.round, "{at}: row order diverged");
+        assert_eq!(b.grad_evals, g.grad_evals, "{at}: grad evals diverged");
+        assert_eq!(b.bits, g.bits, "{at}: cumulative wire bits diverged");
+        assert_eq!(b.wire_bytes, g.wire_bytes, "{at}: cumulative framed bytes diverged");
+        assert_eq!(
+            b.suboptimality.to_bits(),
+            g.suboptimality.to_bits(),
+            "{at}: suboptimality diverged"
+        );
+        assert_eq!(b.consensus.to_bits(), g.consensus.to_bits(), "{at}: consensus diverged");
+    }
+    assert_eq!(
+        (base.final_x.rows, base.final_x.cols),
+        (got.final_x.rows, got.final_x.cols),
+        "{label}: final iterate shape diverged"
+    );
+    for (i, (a, b)) in base.final_x.data.iter().zip(&got.final_x.data).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{label}: final_x entry {i}: {a:?} vs {b:?}");
+    }
+}
+
+/// One algorithm × codec cell: in-process baseline, then loopback Tcp and
+/// loopback Unix, all three compared bit for bit.
+fn parity_case(algorithm: &'static str, bits: u32) {
+    let (base, tcp, unix) = with_watchdog(180, move || {
+        let exp = ring_exp(algorithm, bits, 6);
+        let spec = exp.run_spec();
+        let base = exp.run_coordinator(&spec);
+        let tcp = exp.run_coordinator_loopback(&spec, "tcp");
+        let unix = exp.run_coordinator_loopback(&spec, "unix");
+        (base, tcp, unix)
+    });
+    assert!(base.final_x.norm_sq() > 0.0, "{algorithm}/{bits}: fixture must make progress");
+    assert_bit_identical(&base, &tcp, &format!("{algorithm}/{bits} tcp"));
+    assert_bit_identical(&base, &unix, &format!("{algorithm}/{bits} unix"));
+}
+
+#[test]
+fn prox_lead_dense64_is_bit_identical_across_transports() {
+    parity_case("prox-lead", 64);
+}
+
+#[test]
+fn prox_lead_quantized_is_bit_identical_across_transports() {
+    parity_case("prox-lead", 2);
+}
+
+#[test]
+fn dgd_dense64_is_bit_identical_across_transports() {
+    parity_case("dgd", 64);
+}
+
+/// Handshake as the victim node, then die without sending a byte: the
+/// leader's uplink must synthesize a `Transport(Eof)` fault for the dead
+/// node, tear the survivors down through the ABORT protocol, and return
+/// a typed stop — all inside the watchdog budget.
+fn kill_case(kind: &'static str) {
+    let exp = ring_exp("prox-lead", 64, 6);
+    let victim: u16 = 2;
+    let fp = exp.wire_fingerprint();
+    let accept = Duration::from_secs(10);
+    let (transport, addr) = match kind {
+        "tcp" => {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").expect("bind kill-test tcp");
+            let a = l.local_addr().expect("local addr").to_string();
+            (Transport::tcp(l, fp, accept), DialAddr::Tcp(a))
+        }
+        "unix" => {
+            let path =
+                std::env::temp_dir().join(format!("proxlead-kill-{}.sock", std::process::id()));
+            let _ = std::fs::remove_file(&path);
+            let l = std::os::unix::net::UnixListener::bind(&path).expect("bind kill-test unix");
+            (Transport::unix(l, fp, accept), DialAddr::Unix(path))
+        }
+        t => panic!("kill-test transport must be tcp or unix (got {t})"),
+    };
+    let sock_path = match &addr {
+        DialAddr::Unix(p) => Some(p.clone()),
+        DialAddr::Tcp(_) => None,
+    };
+
+    let res = with_watchdog(60, move || {
+        let spec = exp.run_spec();
+        let hello = Hello {
+            fingerprint: fp,
+            n: 4,
+            dim: exp.problem.dim() as u32,
+            rounds: spec.stop.max_rounds as u32,
+            record_every: spec.record_every as u32,
+            gated: spec.stop.leader_gated(),
+        };
+        thread::scope(|scope| {
+            for i in 0..4usize {
+                if i == victim as usize {
+                    continue;
+                }
+                let addr = addr.clone();
+                let (exp, spec) = (&exp, &spec);
+                scope.spawn(move || {
+                    // survivors run the real worker; they end via the
+                    // leader's ABORT wave, which is not a worker error
+                    let _ = exp.run_node_worker_at(spec, i, &addr);
+                });
+            }
+            let addr = addr.clone();
+            scope.spawn(move || {
+                // the saboteur: a completed handshake, then sudden death
+                let link = dial(&addr, victim, &hello, Duration::from_secs(10))
+                    .expect("saboteur handshake must succeed");
+                drop(link);
+            });
+            exp.run_coordinator_transport(&spec, &mut [], transport)
+        })
+    });
+    if let Some(p) = sock_path {
+        let _ = std::fs::remove_file(p);
+    }
+
+    match res.stopped_by {
+        StopReason::WireFault(f) => {
+            assert_eq!(f.node, victim, "{kind}: fault must name the dead node");
+            assert_eq!(f.round, 0, "{kind}: the victim never spoke — fault is at round 0");
+            assert!(
+                matches!(f.error, WireError::Transport(TransportError::Eof)),
+                "{kind}: expected Transport(Eof), got {:?}",
+                f.error
+            );
+        }
+        other => panic!("{kind}: expected a wire-fault stop, got {other:?}"),
+    }
+    assert_eq!(res.history.len(), 1, "{kind}: no round completes; round 0 is synthesized");
+}
+
+#[test]
+fn killed_node_yields_typed_stop_on_tcp() {
+    kill_case("tcp");
+}
+
+#[test]
+fn killed_node_yields_typed_stop_on_unix() {
+    kill_case("unix");
+}
+
+/// Leader and workers must agree on the handshake fingerprint exactly
+/// when their configs describe the same experiment: where the JSON lands
+/// is not part of "same experiment", but any semantic key is.
+#[test]
+fn wire_fingerprint_tracks_semantics_not_output_paths() {
+    let exp = ring_exp("prox-lead", 64, 6);
+    let mut same_run = exp.config.clone();
+    same_run.out = "elsewhere.json".into();
+    let same = Experiment::from_config(&same_run).expect("config resolves");
+    assert_eq!(exp.wire_fingerprint(), same.wire_fingerprint(), "out path must not matter");
+
+    let mut other_run = exp.config.clone();
+    other_run.lambda1 = 0.1;
+    let other = Experiment::from_config(&other_run).expect("config resolves");
+    assert_ne!(exp.wire_fingerprint(), other.wire_fingerprint(), "semantics must matter");
+}

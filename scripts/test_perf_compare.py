@@ -128,6 +128,48 @@ class PerfCompareCli(unittest.TestCase):
         self.assertEqual(proc.returncode, 1, proc.stdout + proc.stderr)
         self.assertIn("FAIL", proc.stdout)
 
+    # --- one-sided rows warn-and-skip (stale baselines never gate) ---------
+
+    def test_stale_baseline_row_is_skipped_with_warning(self):
+        # a bench retired from the harness leaves its row behind in the
+        # committed baseline; the gate must warn and compare the rest
+        base = self.write("BENCH_x.json", {
+            "schema": "proxlead-perf-v1", "name": "t", "smoke": True,
+            "sets": [{"title": "set", "results": [
+                {"name": "bench-a", "p50_ns": 100.0},
+                {"name": "retired-bench", "p50_ns": 50.0},
+            ]}],
+        })
+        cur = self.write("cur.json", report(p50=100.0))
+        proc = self.run_compare("--baseline", str(base), "--current", str(cur))
+        self.assertEqual(proc.returncode, 0, proc.stdout + proc.stderr)
+        self.assertIn("only in baseline", proc.stdout)
+        self.assertIn("skipped 1 one-sided", proc.stdout)
+        self.assertIn("no regression", proc.stdout)
+
+    def test_new_current_row_is_skipped_until_baseline_lands(self):
+        # the mirror image: a freshly added bench row (e.g. the loopback
+        # transport row) must not fail before its baseline is committed
+        base = self.write("BENCH_x.json", report(p50=100.0))
+        cur = self.write("cur.json", {
+            "schema": "proxlead-perf-v1", "name": "t", "smoke": True,
+            "sets": [{"title": "set", "results": [
+                {"name": "bench-a", "p50_ns": 100.0},
+                {"name": "tcp-loopback", "p50_ns": 900.0},
+            ]}],
+        })
+        proc = self.run_compare("--baseline", str(base), "--current", str(cur))
+        self.assertEqual(proc.returncode, 0, proc.stdout + proc.stderr)
+        self.assertIn("new row (no baseline yet)", proc.stdout)
+        self.assertIn("no regression", proc.stdout)
+
+    def test_fully_disjoint_rows_warn_instead_of_failing(self):
+        base = self.write("BENCH_x.json", report(name="old-bench"))
+        cur = self.write("cur.json", report(name="new-bench"))
+        proc = self.run_compare("--baseline", str(base), "--current", str(cur))
+        self.assertEqual(proc.returncode, 0, proc.stdout + proc.stderr)
+        self.assertIn("share no benchmark rows", proc.stdout)
+
     # --- the --validate mode bench_baseline.sh relies on -------------------
 
     def test_validate_accepts_good_report(self):
